@@ -1,0 +1,107 @@
+//! Path counting in graphs via adjacency-matrix powers — the classic
+//! combinatorial use of matrix exponentiation: `(A^k)[i][j]` counts the
+//! walks of length `k` from `i` to `j`.
+//!
+//! Builds a 64-node ring with chords, counts walks with the PJRT engine,
+//! and cross-checks exact counts against a CPU u64 dynamic program.
+//!
+//! ```bash
+//! cargo run --release --example graph_paths
+//! ```
+
+use matexp::prelude::*;
+
+const N: usize = 64;
+
+/// Ring + two chord families: sparse enough that walk counts of useful
+/// lengths stay well inside f32's 2^24 exact-integer range.
+fn adjacency() -> Matrix {
+    let mut a = Matrix::zeros(N);
+    for i in 0..N {
+        a.set(i, (i + 1) % N, 1.0);
+        a.set((i + 1) % N, i, 1.0);
+        if i % 8 == 0 {
+            let j = (i + 11) % N;
+            a.set(i, j, 1.0);
+            a.set(j, i, 1.0);
+        }
+    }
+    a
+}
+
+/// Exact walk counts by u64 matrix power on the CPU (the oracle).
+fn exact_walks(a: &Matrix, k: u64) -> Vec<u64> {
+    let n = a.n();
+    let to_u = |m: &Matrix| -> Vec<u64> {
+        m.data().iter().map(|&v| v.round() as u64).collect()
+    };
+    let mul = |x: &Vec<u64>, y: &Vec<u64>| -> Vec<u64> {
+        let mut out = vec![0u64; n * n];
+        for i in 0..n {
+            for l in 0..n {
+                let xv = x[i * n + l];
+                if xv == 0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += xv * y[l * n + j];
+                }
+            }
+        }
+        out
+    };
+    let base = to_u(a);
+    let mut acc = base.clone();
+    for _ in 1..k {
+        acc = mul(&acc, &base);
+    }
+    acc
+}
+
+fn main() -> Result<()> {
+    let cfg = MatexpConfig::default();
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    let mut engine = Engine::new(&registry, cfg.variant)?;
+
+    let a = adjacency();
+    println!("graph: {N}-ring + chords, {} edges", a.data().iter().filter(|&&v| v > 0.0).count() / 2);
+    println!("{:<8} {:>12} {:>10} {:>12} {:>10}", "length", "walks(0→0)", "launches", "max count", "exact?");
+
+    for k in [2u64, 4, 8, 12] {
+        let plan = Plan::binary(k, true);
+        let (ak, stats) = engine.expm(&a, &plan)?;
+        let exact = exact_walks(&a, k);
+
+        // every count must round-trip exactly through f32
+        let mut all_exact = true;
+        let mut max_count = 0u64;
+        for (got, want) in ak.data().iter().zip(&exact) {
+            if got.round() as u64 != *want {
+                all_exact = false;
+            }
+            max_count = max_count.max(*want);
+        }
+        assert!(
+            max_count < (1 << 24),
+            "walk counts exceeded f32 exact-integer range"
+        );
+        assert!(all_exact, "k={k}: GPU counts diverged from exact u64 counts");
+        println!(
+            "{:<8} {:>12} {:>10} {:>12} {:>10}",
+            k,
+            ak.get(0, 0).round() as u64,
+            stats.launches,
+            max_count,
+            "yes"
+        );
+    }
+
+    // connectivity: diameter bound — some power with all entries > 0
+    let (a16, _) = engine.expm(&a, &Plan::binary(16, true))?;
+    let reachable = a16.data().iter().filter(|&&v| v > 0.0).count();
+    println!(
+        "\nafter 16 steps {reachable}/{} node pairs are connected by a walk",
+        N * N
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Regenerate every table and figure of the paper's evaluation in one run.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables            # simulated only (fast)
+//! cargo run --release --example paper_tables -- --measure  # + this testbed
+//! ```
+
+use matexp::config::MatexpConfig;
+use matexp::error::Result;
+use matexp::experiments::{report, run_table};
+use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::simulator::device::DeviceSpec;
+
+fn main() -> Result<()> {
+    let measure = std::env::args().any(|a| a == "--measure");
+    let cfg = MatexpConfig::default();
+
+    // Table 1: the device specification, verbatim
+    println!("== paper Table 1: device specification ==");
+    for (k, v) in DeviceSpec::tesla_c2050().table1_rows() {
+        println!("{k:<34} {v}");
+    }
+    println!();
+
+    let registry = if measure {
+        Some(ArtifactRegistry::discover(&cfg.artifacts_dir)?)
+    } else {
+        match ArtifactRegistry::discover(&cfg.artifacts_dir) {
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!("note: {e}");
+                None
+            }
+        }
+    };
+
+    for id in 2..=5u8 {
+        let t = run_table(id, &cfg, registry.as_ref())?;
+        print!("{}", report::render_table(&t));
+        print!("{}", report::render_figures(&t));
+        println!();
+    }
+    if !measure {
+        println!("(simulated columns only — rerun with --measure for this-testbed numbers)");
+    }
+    Ok(())
+}

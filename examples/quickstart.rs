@@ -1,0 +1,62 @@
+//! Quickstart: compute `A^512` for a 64×64 matrix three ways and compare.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use matexp::prelude::*;
+
+fn main() -> Result<()> {
+    let cfg = MatexpConfig::default();
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    let mut engine = Engine::new(&registry, cfg.variant)?;
+    println!("platform: {}", engine.platform());
+
+    // a well-conditioned random input (spectral radius ≈ 1 so high powers
+    // neither explode nor vanish in f32)
+    let n = 64;
+    let power = 512;
+    let a = Matrix::random_spectral(n, 0.999, 42);
+    engine.warmup_exec(n)?; // first execution of each op pays XLA thunk init
+
+    // 1. the paper's approach: binary plan, device-resident buffers
+    let plan = Plan::binary(power, true);
+    let (ours, ours_stats) = engine.expm(&a, &plan)?;
+    println!(
+        "\nours       : {:>3} launches, {:>3} multiplies, {} transfers, {}",
+        ours_stats.launches,
+        ours_stats.multiplies,
+        ours_stats.h2d_transfers + ours_stats.d2h_transfers,
+        matexp::bench::format_secs(ours_stats.wall_s)
+    );
+
+    // 2. the naive GPU baseline: one launch per multiply, round-trip each
+    let (naive, naive_stats) = engine.expm_naive_roundtrip(&a, power)?;
+    println!(
+        "naive-gpu  : {:>3} launches, {:>3} multiplies, {} transfers, {}",
+        naive_stats.launches,
+        naive_stats.multiplies,
+        naive_stats.h2d_transfers + naive_stats.d2h_transfers,
+        matexp::bench::format_secs(naive_stats.wall_s)
+    );
+
+    // 3. the sequential CPU baseline (§4.1)
+    let t0 = std::time::Instant::now();
+    let cpu = matexp::linalg::expm::expm_naive(&a, power, matexp::linalg::CpuAlgo::Naive)?;
+    println!(
+        "seq-cpu    : {:>3} launches, {:>3} multiplies,  0 transfers, {}",
+        0,
+        power - 1,
+        matexp::bench::format_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // all three agree
+    assert!(ours.approx_eq(&naive, 1e-3, 1e-3), "ours vs naive-gpu diverged");
+    assert!(ours.approx_eq(&cpu, 1e-2, 1e-2), "ours vs cpu diverged");
+    println!(
+        "\nresults agree (max |ours - cpu| = {:.3e}); speedup vs naive-gpu: {:.1}x",
+        ours.max_abs_diff(&cpu),
+        naive_stats.wall_s / ours_stats.wall_s
+    );
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving demo: start the full stack in-process (coordinator
+//! + TCP server), drive it with concurrent clients over real sockets, and
+//! report latency/throughput — the paper's "supercomputer at every desk"
+//! as a deployable service.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use matexp::bench::format_secs;
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::error::Result;
+use matexp::linalg::matrix::Matrix;
+use matexp::server::client::MatexpClient;
+use matexp::server::server::serve_background;
+use matexp::util::json::Json;
+
+const CLIENTS: usize = 6;
+const REQS_PER_CLIENT: usize = 24;
+
+fn main() -> Result<()> {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 4;
+    cfg.batcher.max_wait_ms = 1;
+    cfg.warmup_sizes = vec![32, 64]; // workers start at steady-state latency
+
+    println!("starting coordinator ({} workers) + TCP server…", cfg.workers);
+    let service = Arc::new(Service::start(cfg)?);
+    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 16)?;
+    let addr = server.local_addr().to_string();
+    println!("serving on {addr} (sizes {:?})\n", service.sizes());
+
+    // mixed workload: sizes 32/64, powers 64..1024, mostly `ours`;
+    // half the clients use the compact base64 payload encoding
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|cid| {
+                let addr = addr.clone();
+                scope.spawn(move || -> Vec<f64> {
+                    let mut client = MatexpClient::connect(&addr).expect("connect");
+                    if cid % 2 == 0 {
+                        client = client.with_base64();
+                    }
+                    let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
+                    for i in 0..REQS_PER_CLIENT {
+                        let n = if (cid + i) % 3 == 0 { 32 } else { 64 };
+                        let power = [64u64, 128, 256, 512, 1024][(cid + i) % 5];
+                        let method = if i % 8 == 7 { Method::OursPacked } else { Method::Ours };
+                        // 0.85: the power-iteration radius estimate can be
+                        // ~15% off, and anything over 1.087 overflows f32
+                        // at N=1024
+                        let a = Matrix::random_spectral(n, 0.85, (cid * 1000 + i) as u64 + 1);
+                        let t = Instant::now();
+                        let (result, stats) = client.expm(&a, power, method).expect("expm");
+                        lat.push(t.elapsed().as_secs_f64());
+                        assert!(result.is_finite());
+                        assert!(stats.launches <= 14);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = latencies.len();
+    let pct = |q: f64| latencies[((total as f64 * q) as usize).min(total - 1)];
+    println!("== workload: {CLIENTS} clients × {REQS_PER_CLIENT} requests (sizes 32/64, N∈64..1024) ==");
+    println!("throughput : {:.1} req/s ({} requests in {})", total as f64 / wall, total, format_secs(wall));
+    println!("latency    : p50 {}  p90 {}  p99 {}", format_secs(pct(0.50)), format_secs(pct(0.90)), format_secs(pct(0.99)));
+
+    // server-side view over the metrics endpoint
+    let mut client = MatexpClient::connect(&addr)?;
+    let m = client.metrics()?;
+    let get = |k: &str| m.get(k).and_then(Json::as_u64).unwrap_or(0);
+    println!("\n== server metrics ==");
+    println!("responses  : {}", get("responses_total"));
+    println!("batches    : {} ({:.2} req/batch)", get("batches_total"),
+        get("batched_requests_total") as f64 / get("batches_total").max(1) as f64);
+    println!("launches   : {} for {} multiplies", get("launches_total"), get("multiplies_total"));
+    println!(
+        "the log(N) effect: {} multiplies would have cost {}+ launches naively",
+        get("multiplies_total"),
+        get("multiplies_total")
+    );
+    Ok(())
+}

@@ -1,0 +1,189 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO text + write manifest.json.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the rust binary is then fully
+self-contained. Usage:
+
+    cd python && python -m compile.aot --out ../artifacts [--only PREFIX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import matmul as kmm
+
+MANIFEST_VERSION = 2
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+#: Matrix sizes shipped by default. 4..32 exist so rust unit/integration
+#: tests stay fast; 64..512 are the paper's evaluation sizes (Tables 2-5).
+CORE_SIZES = [4, 8, 16, 32, 64, 128, 256, 512]
+
+#: Core ops per size (both variants, f32). The step_*/pack2/unpack0 ops
+#: implement the device-resident packed-state binary exponentiation loop.
+CORE_OPS = [
+    "matmul", "square", "sqmul", "square2", "square4",
+    "pack2", "step_mul", "step_sq", "unpack0",
+]
+
+#: (size, [powers]) combos of Tables 2-5 — fused whole-exponentiation
+#: executables (ablation A3 limiting case; xla variant only to keep the
+#: artifact set lean).
+EXPM_TABLE = [
+    (64, [64, 128, 256, 512, 1024]),
+    (128, [64, 128, 256, 512]),
+    (256, [64, 128, 256, 512]),
+    (512, [64, 128, 256]),
+]
+
+#: Tile-sweep artifacts for ablation A1 (paper §4.3.7).
+TILE_SIZES = [128, 256, 512]
+
+
+@dataclass
+class Entry:
+    name: str
+    op: str
+    n: int
+    dtype: str
+    variant: str
+    num_inputs: int
+    num_outputs: int
+    file: str
+    blocks: Optional[List[int]] = None
+    tile: Optional[str] = None
+    vmem_bytes: Optional[int] = None
+    mxu_utilization: Optional[float] = None
+    sha256: str = ""
+    hlo_chars: int = 0
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: single-output computations keep a bare array root,
+    # so PJRT hands back an array buffer that feeds straight into the next
+    # execute_b call (device-resident chaining). Multi-output ops (sqmul)
+    # still get a tuple root — PJRT returns ONE tuple buffer for those,
+    # which is exactly why the packed-state step_* ops exist (see model.py).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def catalogue() -> List[dict]:
+    """The full artifact build list as kwargs dicts."""
+    jobs: List[dict] = []
+    for n in CORE_SIZES:
+        for op in CORE_OPS:
+            for variant in ("xla", "pallas"):
+                jobs.append(dict(op=op, n=n, dtype="f32", variant=variant))
+    # f64 precision artifacts (A4)
+    for n in (4, 64):
+        for op in ("matmul", "square"):
+            jobs.append(dict(op=op, n=n, dtype="f64", variant="xla"))
+    # fused whole-exponentiation graphs
+    for n, powers in EXPM_TABLE:
+        for p in powers:
+            jobs.append(dict(op=f"expm{p}", n=n, dtype="f32", variant="xla"))
+    # tile-sweep (A1)
+    for n in TILE_SIZES:
+        for tile, blocks in kmm.TILE_CATALOGUE.items():
+            bm, bn, bk = blocks
+            if n % bm or n % bn or n % bk:
+                continue
+            jobs.append(
+                dict(op="matmul", n=n, dtype="f32", variant="pallas",
+                     blocks=list(blocks), tile=tile)
+            )
+    return jobs
+
+
+def entry_name(op: str, n: int, dtype: str, variant: str, tile: Optional[str] = None) -> str:
+    base = f"{op}_n{n}_{dtype}_{variant}"
+    return f"{base}_{tile}" if tile else base
+
+
+def lower_one(job: dict, out_dir: Path) -> Entry:
+    op, n, dtype, variant = job["op"], job["n"], job["dtype"], job["variant"]
+    blocks = tuple(job["blocks"]) if job.get("blocks") else None
+    tile = job.get("tile")
+    fn, specs = model.build_op(op, n, DTYPES[dtype], variant, blocks)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    name = entry_name(op, n, dtype, variant, tile)
+    fname = f"{name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    n_out = 2 if op == "sqmul" else 1
+    eff_blocks = blocks or (kmm.default_blocks(n) if variant == "pallas" else None)
+    itemsize = jnp.dtype(DTYPES[dtype]).itemsize
+    return Entry(
+        name=name, op=op, n=n, dtype=dtype, variant=variant,
+        num_inputs=len(specs), num_outputs=n_out, file=fname,
+        blocks=list(eff_blocks) if eff_blocks else None, tile=tile,
+        vmem_bytes=kmm.vmem_footprint_bytes(*eff_blocks, itemsize) if eff_blocks else None,
+        mxu_utilization=round(kmm.mxu_utilization_estimate(*eff_blocks), 4) if eff_blocks else None,
+        sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+        hlo_chars=len(text),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="only build entries whose name starts with PREFIX")
+    ap.add_argument("--list", action="store_true", help="print the catalogue and exit")
+    args = ap.parse_args(argv)
+
+    jobs = catalogue()
+    if args.only:
+        jobs = [j for j in jobs
+                if entry_name(j["op"], j["n"], j["dtype"], j["variant"], j.get("tile"))
+                .startswith(args.only)]
+    if args.list:
+        for j in jobs:
+            print(entry_name(j["op"], j["n"], j["dtype"], j["variant"], j.get("tile")))
+        return 0
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries: List[Entry] = []
+    t_start = time.time()
+    for i, job in enumerate(jobs):
+        t0 = time.time()
+        entry = lower_one(job, out_dir)
+        entries.append(entry)
+        print(f"[{i + 1:3d}/{len(jobs)}] {entry.name:40s} "
+              f"{entry.hlo_chars:8d} chars  {time.time() - t0:5.2f}s", flush=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "generated_by": "compile.aot",
+        "jax_version": jax.__version__,
+        "entries": [asdict(e) for e in entries],
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} artifacts + manifest.json in {time.time() - t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,148 @@
+"""Layer-1 Pallas tiled matmul kernel — the paper's OpenCL kernel, rethought for TPU.
+
+Paper (§4.3) optimizations and their TPU/Pallas analogues:
+
+* TILED multiplication with 16 KB local memory (tiles 4x4 .. 16x16)
+    -> ``BlockSpec`` tiling: operand blocks ``(bm, bk)`` and ``(bk, bn)`` are
+       DMA'd HBM->VMEM per grid step; VMEM is the software-managed scratchpad.
+* Work-group shaping (32x32 work items, ROW/4 x COL/4 global)
+    -> the 3-D Pallas ``grid`` ``(n/bm, n/bn, n/bk)``; each grid step plays
+       the role of one work-group invocation over a tile.
+* Coalesced global reads/writes (row-major)
+    -> row-major index maps ``(i, k)`` / ``(k, j)`` keep every HBM->VMEM DMA
+       a contiguous row-major slab.
+* float4 vector registers / SIMD
+    -> whole-block ``jnp.dot`` feeds the MXU systolic array (the TPU
+       equivalent of getting off scalar FMAs); elementwise tails use the
+       8x128 VPU lanes automatically.
+* Loop unrolling x4/x8/x16
+    -> the reduction dimension advances ``bk`` elements per grid step; the
+       compiler unrolls inside the block. ``bk`` is the unroll factor.
+* Barriers within a work-group
+    -> grid-step semantics: the ``@pl.when`` guarded zero-init plus ``+=``
+       accumulation into the output block is the Pallas idiom replacing the
+       explicit ``barrier(CLK_LOCAL_MEM_FENCE)`` pairs of the OpenCL kernel.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO that any backend runs.
+Real-TPU efficiency is estimated from the VMEM footprint (see
+``vmem_footprint_bytes``) and recorded in EXPERIMENTS.md, not measured here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM per TPU core (v4/v5 ballpark) used for footprint sanity checks.
+VMEM_BYTES = 16 * 1024 * 1024
+
+# Tile catalogue mirroring the paper's §4.3.7 sweep (4x4 .. 16x16), scaled to
+# TPU-reasonable block edges. Keys are the ablation names used by aot.py.
+TILE_CATALOGUE: dict[str, Tuple[int, int, int]] = {
+    "t16": (16, 16, 16),
+    "t32": (32, 32, 32),
+    "t64": (64, 64, 64),
+    "t128": (128, 128, 128),
+    # rectangular tiles, analogous to the paper's 4x8 / 8x16 / 16x8 variants
+    "t64x128": (64, 128, 64),
+    "t128x64": (128, 64, 128),
+}
+
+
+def default_blocks(n: int) -> Tuple[int, int, int]:
+    """Pick the default (bm, bn, bk) for an ``n x n`` problem.
+
+    Mirrors the paper's finding that the largest tile fitting local memory
+    (16x16 on the C2050) wins: we take the largest square block edge that
+    divides ``n``, capped at 128 (one MXU-friendly slab), floor 8.
+    """
+    for edge in (128, 64, 32, 16, 8):
+        if n % edge == 0:
+            return (edge, edge, edge)
+    if n < 8:
+        return (n, n, n)
+    raise ValueError(f"matrix size {n} not divisible by any supported block edge")
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Working-set bytes per grid step: one x-block, one y-block, one o-block.
+
+    The double-buffered DMA pipeline needs ~2x this to overlap; both numbers
+    are reported by the A1 ablation and must stay under ``VMEM_BYTES``.
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of each 128x128x128 MXU pass doing useful work.
+
+    The MXU is a 128x128 systolic array; blocks smaller than 128 on any edge
+    leave lanes idle in that dimension. This is the structural estimate used
+    for the §Perf roofline discussion (interpret-mode wall-clock is not a
+    TPU proxy).
+    """
+    return min(bm, 128) / 128.0 * min(bn, 128) / 128.0 * min(bk, 128) / 128.0
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One grid step: accumulate x_block @ y_block into the output block."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.named_call, name="pallas_tiled_matmul")
+def _named_identity(x):  # pragma: no cover - trivial
+    return x
+
+
+def tiled_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    blocks: Tuple[int, int, int] | None = None,
+) -> jax.Array:
+    """``x @ y`` via the tiled Pallas kernel.
+
+    Args:
+      x, y: square ``(n, n)`` operands of the same dtype.
+      blocks: ``(bm, bn, bk)`` block shape; defaults to :func:`default_blocks`.
+    """
+    n, n2 = x.shape
+    if x.shape != y.shape or n != n2:
+        raise ValueError(f"tiled_matmul needs equal square operands, got {x.shape} @ {y.shape}")
+    bm, bn, bk = blocks or default_blocks(n)
+    for name, b in (("bm", bm), ("bn", bn), ("bk", bk)):
+        if n % b != 0:
+            raise ValueError(f"{name}={b} does not divide n={n}")
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if vmem_footprint_bytes(bm, bn, bk, itemsize) > VMEM_BYTES:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) overflow VMEM")
+
+    grid = (n // bm, n // bn, n // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def tiled_square(x: jax.Array, *, blocks: Tuple[int, int, int] | None = None) -> jax.Array:
+    """``x @ x`` through the same kernel (one squaring step of the plan)."""
+    return tiled_matmul(x, x, blocks=blocks)

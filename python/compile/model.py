@@ -1,0 +1,200 @@
+"""Layer-2 JAX compute graphs, lowered once by aot.py and run from rust.
+
+Each builder returns ``(fn, input_specs)`` where ``fn`` maps its inputs to a
+*tuple* of outputs (the rust loader unwraps the tuple — see
+/opt/xla-example/load_hlo). Two kernel variants exist for every op:
+
+* ``pallas`` — calls the Layer-1 tiled kernel (kernels/matmul.py), i.e. the
+  paper's optimized OpenCL kernel. interpret=True, so it lowers to plain HLO.
+* ``xla``    — plain ``jnp.dot``; the fast path on this CPU testbed and the
+  oracle the pallas variant must match bit-for-bit in pytest.
+
+Ops (shapes all ``(n, n)``, one dtype per artifact):
+
+* ``matmul``  (x, y) -> (x @ y,)                 — one kernel launch
+* ``square``  (x,)   -> (x @ x,)                 — one squaring step
+* ``sqmul``   (a, b) -> (a @ b, b @ b)           — fused square-and-multiply
+                                                   step as a 2-tuple output;
+                                                   PJRT returns ONE tuple
+                                                   buffer, forcing a host
+                                                   round-trip to split — kept
+                                                   as the ablation-A2 "bad"
+                                                   arm
+* ``pack2``   (x,)   -> ([x, x],)                — packed state init:
+                                                   acc = base = x, shape (2,n,n)
+* ``step_mul`` (s,)  -> ([acc@b2, b2],)          — fused set-bit step over
+                                                   packed state, b2 = base@base:
+                                                   the base advances to the next
+                                                   bit weight, then folds into
+                                                   acc. ONE single-output
+                                                   launch, so the whole chain
+                                                   stays device-resident
+* ``step_sq``  (s,)  -> ([acc, base@base],)      — fused clear-bit step
+* ``unpack0`` (s,)   -> (acc,)                   — extract the result
+* ``square2`` (x,)   -> (x^4,)                   — 2 squarings fused
+* ``square4`` (x,)   -> (x^16,)                  — 4 squarings fused
+* ``expm<N>`` (x,)   -> (x^N,)                   — whole exponentiation in a
+                                                   single graph (paper §4.3.8
+                                                   taken to its limit: ONE
+                                                   offload per request)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as kmm
+from compile.kernels import ref as kref
+
+Variant = str  # "pallas" | "xla"
+
+
+def _mm(variant: Variant, blocks: Tuple[int, int, int] | None = None):
+    """Pick the multiply primitive for a variant."""
+    if variant == "pallas":
+        return lambda x, y: kmm.tiled_matmul(x, y, blocks=blocks)
+    if variant == "xla":
+        return kref.matmul_ref
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def spec(n: int, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((n, n), dtype)
+
+
+def build_matmul(n, dtype, variant, blocks=None):
+    mm = _mm(variant, blocks)
+
+    def fn(x, y):
+        return (mm(x, y),)
+
+    return fn, [spec(n, dtype), spec(n, dtype)]
+
+
+def build_square(n, dtype, variant, blocks=None):
+    mm = _mm(variant, blocks)
+
+    def fn(x):
+        return (mm(x, x),)
+
+    return fn, [spec(n, dtype)]
+
+
+def build_sqmul(n, dtype, variant, blocks=None):
+    """Fused binary-exponentiation step: (acc, base) -> (acc*base, base^2)."""
+    mm = _mm(variant, blocks)
+
+    def fn(acc, base):
+        return (mm(acc, base), mm(base, base))
+
+    return fn, [spec(n, dtype), spec(n, dtype)]
+
+
+def build_square_chain(n, dtype, variant, chain_len, blocks=None):
+    """``chain_len`` squarings fused into one executable: x -> x^(2^chain_len)."""
+    mm = _mm(variant, blocks)
+
+    def fn(x):
+        for _ in range(chain_len):
+            x = mm(x, x)
+        return (x,)
+
+    return fn, [spec(n, dtype)]
+
+
+def build_expm_fixed(n, dtype, variant, power, blocks=None):
+    """Whole A^power as one graph via an unrolled square-and-multiply chain.
+
+    The launch schedule is identical to what the rust planner emits for
+    ``power``; here it is baked into a single HLO so the host offloads the
+    matrix exactly once (the limiting case of the paper's §4.3.8).
+    """
+    if power < 1:
+        raise ValueError("power must be >= 1")
+    mm = _mm(variant, blocks)
+
+    def fn(x):
+        acc = None
+        base = x
+        p = power
+        while p > 0:
+            if p & 1:
+                acc = base if acc is None else mm(acc, base)
+            p >>= 1
+            if p > 0:
+                base = mm(base, base)
+        return (acc,)
+
+    return fn, [spec(n, dtype)]
+
+
+def build_pack2(n, dtype, variant, blocks=None):
+    """Packed-state init: x -> stack([x, x]) (acc = base = x)."""
+
+    def fn(x):
+        return (jnp.stack([x, x]),)
+
+    return fn, [spec(n, dtype)]
+
+
+def build_step_mul(n, dtype, variant, blocks=None):
+    """Set-bit step: base advances one weight, then folds into acc.
+
+    LSB-first square-and-multiply consumes one exponent bit per step; both
+    multiplies happen in one launch and the state never leaves the device.
+    """
+    mm = _mm(variant, blocks)
+
+    def fn(s):
+        acc, base = s[0], s[1]
+        new_base = mm(base, base)
+        new_acc = mm(acc, new_base)
+        return (jnp.stack([new_acc, new_base]),)
+
+    return fn, [jax.ShapeDtypeStruct((2, n, n), dtype)]
+
+
+def build_step_sq(n, dtype, variant, blocks=None):
+    """Clear-bit step: only the base advances."""
+    mm = _mm(variant, blocks)
+
+    def fn(s):
+        acc, base = s[0], s[1]
+        return (jnp.stack([acc, mm(base, base)]),)
+
+    return fn, [jax.ShapeDtypeStruct((2, n, n), dtype)]
+
+
+def build_unpack0(n, dtype, variant, blocks=None):
+    """Extract the accumulator from packed state."""
+
+    def fn(s):
+        return (s[0],)
+
+    return fn, [jax.ShapeDtypeStruct((2, n, n), dtype)]
+
+
+#: op-name -> builder
+OP_BUILDERS: dict[str, Callable] = {
+    "matmul": build_matmul,
+    "square": build_square,
+    "sqmul": build_sqmul,
+    "pack2": build_pack2,
+    "step_mul": build_step_mul,
+    "step_sq": build_step_sq,
+    "unpack0": build_unpack0,
+}
+
+
+def build_op(op: str, n: int, dtype, variant: Variant, blocks=None):
+    """Dispatch by op name, including parametric ``square{k}`` / ``expm{N}``."""
+    if op in OP_BUILDERS:
+        return OP_BUILDERS[op](n, dtype, variant, blocks)
+    if op.startswith("square") and op[6:].isdigit():
+        return build_square_chain(n, dtype, variant, int(op[6:]), blocks)
+    if op.startswith("expm") and op[4:].isdigit():
+        return build_expm_fixed(n, dtype, variant, int(op[4:]), blocks)
+    raise ValueError(f"unknown op {op!r}")

@@ -1,0 +1,88 @@
+"""AOT pipeline tests: catalogue, lowering, manifest integrity."""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import matmul as kmm
+
+
+def test_catalogue_covers_paper_tables():
+    jobs = aot.catalogue()
+    names = {aot.entry_name(j["op"], j["n"], j["dtype"], j["variant"], j.get("tile"))
+             for j in jobs}
+    # every table size needs matmul/square/sqmul in both variants
+    for n in (64, 128, 256, 512):
+        for op in ("matmul", "square", "sqmul"):
+            assert f"{op}_n{n}_f32_xla" in names
+            assert f"{op}_n{n}_f32_pallas" in names
+    # fused expm graphs for the exact table powers
+    for n, powers in aot.EXPM_TABLE:
+        for p in powers:
+            assert f"expm{p}_n{n}_f32_xla" in names
+
+
+def test_catalogue_no_duplicate_names():
+    jobs = aot.catalogue()
+    names = [aot.entry_name(j["op"], j["n"], j["dtype"], j["variant"], j.get("tile"))
+             for j in jobs]
+    assert len(names) == len(set(names))
+
+
+def test_tile_jobs_divide():
+    for j in aot.catalogue():
+        if j.get("blocks"):
+            assert all(j["n"] % b == 0 for b in j["blocks"])
+
+
+def test_lower_one_writes_valid_entry(tmp_path):
+    entry = aot.lower_one(dict(op="matmul", n=8, dtype="f32", variant="xla"), tmp_path)
+    assert entry.num_inputs == 2 and entry.num_outputs == 1
+    text = (tmp_path / entry.file).read_text()
+    assert "HloModule" in text
+    assert entry.hlo_chars == len(text)
+
+
+def test_lower_sqmul_has_two_outputs(tmp_path):
+    entry = aot.lower_one(dict(op="sqmul", n=8, dtype="f32", variant="xla"), tmp_path)
+    assert entry.num_outputs == 2
+    text = (tmp_path / entry.file).read_text()
+    assert "HloModule" in text
+
+
+def test_lower_pallas_records_blocks(tmp_path):
+    entry = aot.lower_one(dict(op="matmul", n=64, dtype="f32", variant="pallas"), tmp_path)
+    assert entry.blocks == [64, 64, 64]
+    assert entry.vmem_bytes == kmm.vmem_footprint_bytes(64, 64, 64)
+    assert entry.mxu_utilization == pytest.approx(0.125, abs=1e-4)
+
+
+def test_entry_name_format():
+    assert aot.entry_name("matmul", 64, "f32", "xla") == "matmul_n64_f32_xla"
+    assert aot.entry_name("matmul", 64, "f32", "pallas", "t16") == "matmul_n64_f32_pallas_t16"
+
+
+def test_shipped_manifest_is_consistent():
+    """If `make artifacts` has run, validate the shipped manifest."""
+    mpath = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads(mpath.read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    entries = manifest["entries"]
+    assert len(entries) == len(aot.catalogue())
+    for e in entries:
+        f = mpath.parent / e["file"]
+        assert f.exists(), e["name"]
+        assert e["num_inputs"] in (1, 2)
+        assert e["num_outputs"] in (1, 2)
+
+
+def test_hlo_text_has_no_serialized_proto_markers(tmp_path):
+    """Interchange must be text (xla_extension 0.5.1 rejects 64-bit-id protos)."""
+    entry = aot.lower_one(dict(op="square", n=8, dtype="f32", variant="xla"), tmp_path)
+    text = (tmp_path / entry.file).read_text()
+    assert text.lstrip().startswith("HloModule")

@@ -1,0 +1,118 @@
+"""L2 correctness: every compute graph in model.py vs the oracles in ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref as kref
+
+
+def rand(n, dtype=jnp.float32, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, n), dtype)
+
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["xla", "pallas"])
+def test_matmul_graph(variant):
+    fn, specs = model.build_matmul(16, jnp.float32, variant)
+    assert [s.shape for s in specs] == [(16, 16), (16, 16)]
+    x, y = rand(16, seed=1), rand(16, seed=2)
+    (out,) = jax.jit(fn)(x, y)
+    np.testing.assert_allclose(out, kref.matmul_ref(x, y), **TOL)
+
+
+@pytest.mark.parametrize("variant", ["xla", "pallas"])
+def test_square_graph(variant):
+    fn, _ = model.build_square(16, jnp.float32, variant)
+    x = rand(16, seed=3)
+    (out,) = jax.jit(fn)(x)
+    np.testing.assert_allclose(out, kref.matmul_ref(x, x), **TOL)
+
+
+@pytest.mark.parametrize("variant", ["xla", "pallas"])
+def test_sqmul_graph_two_outputs(variant):
+    fn, specs = model.build_sqmul(16, jnp.float32, variant)
+    assert len(specs) == 2
+    acc, base = rand(16, seed=4), rand(16, seed=5)
+    out_acc, out_base = jax.jit(fn)(acc, base)
+    np.testing.assert_allclose(out_acc, kref.matmul_ref(acc, base), **TOL)
+    np.testing.assert_allclose(out_base, kref.matmul_ref(base, base), **TOL)
+
+
+@pytest.mark.parametrize("chain_len,power", [(1, 2), (2, 4), (3, 8), (4, 16)])
+def test_square_chain(chain_len, power):
+    fn, _ = model.build_square_chain(8, jnp.float32, "xla", chain_len)
+    x = kref.spectral_scale(np.asarray(rand(8, seed=6)))
+    (out,) = jax.jit(fn)(jnp.asarray(x))
+    np.testing.assert_allclose(out, kref.expm_binary_ref(jnp.asarray(x), power),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("power", [1, 2, 3, 5, 7, 8, 13, 16, 64, 100])
+def test_expm_fixed_matches_naive(power):
+    fn, _ = model.build_expm_fixed(8, jnp.float32, "xla", power)
+    x = jnp.asarray(kref.spectral_scale(np.asarray(rand(8, seed=7))))
+    (out,) = jax.jit(fn)(x)
+    want = kref.expm_naive_ref(x, power)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)
+
+
+def test_expm_power_one_is_identity_map():
+    fn, _ = model.build_expm_fixed(8, jnp.float32, "xla", 1)
+    x = rand(8, seed=8)
+    (out,) = jax.jit(fn)(x)
+    np.testing.assert_allclose(out, x)
+
+
+def test_expm_rejects_power_zero():
+    with pytest.raises(ValueError):
+        model.build_expm_fixed(8, jnp.float32, "xla", 0)
+
+
+def test_build_op_dispatch():
+    for op, n_in in [("matmul", 2), ("square", 1), ("sqmul", 2),
+                     ("square2", 1), ("square4", 1), ("expm64", 1)]:
+        fn, specs = model.build_op(op, 8, jnp.float32, "xla")
+        assert len(specs) == n_in, op
+
+
+def test_build_op_unknown():
+    with pytest.raises(ValueError):
+        model.build_op("cholesky", 8, jnp.float32, "xla")
+    with pytest.raises(ValueError):
+        model.build_op("matmul", 8, jnp.float32, "cuda")
+
+
+def test_binary_ref_equals_naive_ref():
+    x = jnp.asarray(kref.spectral_scale(np.asarray(rand(6, seed=9))))
+    for p in [1, 2, 3, 4, 5, 9, 16, 31, 33]:
+        np.testing.assert_allclose(
+            kref.expm_binary_ref(x, p), kref.expm_naive_ref(x, p),
+            rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(power=st.integers(min_value=1, max_value=200),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_hypothesis_binary_vs_f64(power, seed):
+    """Binary square-and-multiply matches float64 matrix_power."""
+    x = kref.spectral_scale(np.asarray(rand(5, seed=seed)), target=0.9)
+    got = kref.expm_binary_ref(jnp.asarray(x), power)
+    want = kref.expm_numpy_f64(x, power)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-3)
+
+
+def test_pallas_variant_bitwise_matches_xla_variant_small():
+    """Same graph, two variants: numerics must agree tightly (A4)."""
+    for n in (8, 16, 32):
+        fx, _ = model.build_matmul(n, jnp.float32, "xla")
+        fp, _ = model.build_matmul(n, jnp.float32, "pallas")
+        x, y = rand(n, seed=11), rand(n, seed=12)
+        (a,) = jax.jit(fx)(x, y)
+        (b,) = jax.jit(fp)(x, y)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

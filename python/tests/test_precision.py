@@ -1,0 +1,53 @@
+"""A4 — precision experiment (paper §6: 'tested ... for the precision problem').
+
+The binary method performs ~log2(N) multiplies instead of N, so rounding
+error accumulates *less*; these tests document that our approach is at
+least as precise as the naive chain it replaces.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref as kref
+
+
+def stochastic(n, seed):
+    """Row-stochastic matrix: powers stay bounded (Markov-chain workload)."""
+    rng = np.random.default_rng(seed)
+    m = rng.random((n, n)).astype(np.float32)
+    return m / m.sum(axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("power", [64, 128, 256, 512, 1024])
+def test_binary_f32_close_to_f64_truth(power):
+    x = stochastic(16, seed=power)
+    truth = kref.expm_numpy_f64(x, power)
+    got = np.asarray(kref.expm_binary_ref(jnp.asarray(x), power))
+    np.testing.assert_allclose(got, truth, rtol=5e-4, atol=5e-5)
+
+
+@pytest.mark.parametrize("power", [16, 64, 256])
+def test_binary_no_less_precise_than_naive(power):
+    x = stochastic(12, seed=power + 1)
+    truth = kref.expm_numpy_f64(x, power)
+    err_binary = np.abs(np.asarray(kref.expm_binary_ref(jnp.asarray(x), power)) - truth).max()
+    err_naive = np.abs(np.asarray(kref.expm_naive_ref(jnp.asarray(x), power)) - truth).max()
+    # binary accumulates over ~log2 N rounds vs N rounds; allow 4x slack for
+    # the lucky cases where naive cancels.
+    assert err_binary <= max(err_naive * 4.0, 1e-6), (err_binary, err_naive)
+
+
+def test_spectral_scale_controls_radius():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((24, 24)).astype(np.float32)
+    y = kref.spectral_scale(x, target=1.0)
+    radius = np.max(np.abs(np.linalg.eigvals(y.astype(np.float64))))
+    assert radius == pytest.approx(1.0, rel=1e-3)
+
+
+def test_powers_of_scaled_matrix_bounded():
+    rng = np.random.default_rng(1)
+    x = kref.spectral_scale(rng.standard_normal((16, 16)).astype(np.float32), 0.99)
+    out = np.asarray(kref.expm_binary_ref(jnp.asarray(x), 1024))
+    assert np.isfinite(out).all()

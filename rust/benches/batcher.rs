@@ -1,0 +1,119 @@
+//! `cargo bench --bench batcher` — serving-layer benches: pure batcher
+//! admission throughput (no engine), then end-to-end service throughput
+//! with real PJRT workers on small matrices.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use matexp::bench::{black_box, format_secs, BenchConfig, Runner};
+use matexp::config::{BatcherConfig, MatexpConfig};
+use matexp::coordinator::batcher::Batcher;
+use matexp::coordinator::request::{ExpmRequest, Method};
+use matexp::coordinator::service::Service;
+use matexp::linalg::matrix::Matrix;
+
+fn main() {
+    pure_batcher_throughput();
+    service_throughput();
+}
+
+/// Batcher policy cost per request, no engine involved.
+fn pure_batcher_throughput() {
+    let mut runner = Runner::with_config(
+        "batcher (pure, no engine)",
+        BenchConfig {
+            warmup_iters: 2,
+            min_samples: 10,
+            max_samples: 50,
+            time_budget: Duration::from_secs(3),
+        },
+    );
+    const REQS: usize = 10_000;
+    for sizes in [1usize, 4] {
+        let cfg = BatcherConfig { max_batch: 16, max_wait_ms: 1000, max_queue: usize::MAX };
+        // consecutive tiny sizes: measures the batcher, not matrix clones
+        let matrices: Vec<Matrix> = (0..sizes).map(|i| Matrix::zeros(8 + i)).collect();
+        runner.bench(&format!("push10k/{sizes}sizes"), || {
+            let mut b = Batcher::new(cfg.clone());
+            let now = Instant::now();
+            let mut shipped = 0usize;
+            for i in 0..REQS {
+                let req = ExpmRequest {
+                    id: i as u64,
+                    matrix: matrices[i % sizes].clone(),
+                    power: 64,
+                    method: Method::Ours,
+                };
+                if let Some(batch) = b.push(req, now) {
+                    shipped += batch.requests.len();
+                }
+            }
+            shipped += b.flush_all().iter().map(|x| x.requests.len()).sum::<usize>();
+            assert_eq!(shipped, REQS);
+            black_box(shipped);
+        });
+    }
+    runner.report();
+    println!(
+        "note: 10k admissions per sample; divide the median by 10k for per-request cost\n"
+    );
+}
+
+/// End-to-end service: mixed small-matrix workload through the full
+/// collector → batcher → worker → reply path.
+fn service_throughput() {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 4;
+    cfg.batcher.max_wait_ms = 1;
+    cfg.warmup_sizes = vec![16]; // workers start warm for the benched size
+    if !cfg.artifacts_dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; skipping service throughput bench");
+        return;
+    }
+    let service = match Service::start(cfg) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("service failed to start: {e}");
+            return;
+        }
+    };
+    // warm all worker engines
+    for _ in 0..8 {
+        let a = Matrix::random_spectral(16, 0.9, 7);
+        service.submit(a, 64, Method::Ours).expect("warm");
+    }
+
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 50;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let service = Arc::clone(&service);
+            scope.spawn(move || {
+                let a = Matrix::random_spectral(16, 0.9, c as u64);
+                for i in 0..PER_CLIENT {
+                    let power = [64u64, 128, 256][(c + i) % 3];
+                    let resp = service.submit(a.clone(), power, Method::Ours).expect("submit");
+                    black_box(resp.stats.launches);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (CLIENTS * PER_CLIENT) as f64;
+    let m = service.metrics();
+    println!("== service end-to-end (n=16, {CLIENTS} clients x {PER_CLIENT} reqs) ==");
+    println!("throughput: {:.0} req/s  wall {}", total / wall, format_secs(wall));
+    println!(
+        "latency: mean {} p50 {} p99 {}",
+        format_secs(m.latency_mean_us as f64 / 1e6),
+        format_secs(m.latency_p50_us as f64 / 1e6),
+        format_secs(m.latency_p99_us as f64 / 1e6),
+    );
+    println!(
+        "batching: {} batches for {} requests ({:.2} req/batch)",
+        m.batches_total,
+        m.batched_requests_total,
+        m.batched_requests_total as f64 / m.batches_total.max(1) as f64
+    );
+}

@@ -1,0 +1,56 @@
+//! `cargo bench --bench kernel_tiles` — ablation A1 (paper §4.3.7):
+//! the tiled Pallas matmul kernel across TILE/block sizes, plus the
+//! untiled XLA variant as the reference point.
+//!
+//! Pallas artifacts run in interpret mode on the CPU PJRT plugin, so the
+//! wall numbers quantify *structure* (launch count, transfer discipline,
+//! block bookkeeping), not TPU performance; the manifest's VMEM/MXU
+//! estimates printed alongside are the TPU-side story (DESIGN.md §3).
+
+use matexp::bench::{BenchConfig, Runner};
+use matexp::config::MatexpConfig;
+use matexp::experiments::{ablations, report};
+use matexp::linalg::matrix::Matrix;
+use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::runtime::engine::Engine;
+use matexp::runtime::Variant;
+use std::time::Duration;
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let Ok(registry) = ArtifactRegistry::discover(&cfg.artifacts_dir) else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let mut engine = Engine::new(&registry, Variant::Xla).expect("engine");
+
+    // tile sweep at the sizes the manifest carries tiles for
+    for n in [128usize, 256] {
+        if registry.tiles("matmul", n).is_empty() {
+            continue;
+        }
+        let arms = ablations::tile_sweep(&mut engine, &registry, n, cfg.seed)
+            .expect("tile sweep");
+        print!("{}", report::render_ablation(&format!("A1 TILE sweep (n={n})"), &arms));
+    }
+
+    // reference: the untiled xla matmul at the same sizes, properly sampled
+    let mut runner = Runner::with_config(
+        "untiled xla matmul reference",
+        BenchConfig {
+            warmup_iters: 1,
+            min_samples: 5,
+            max_samples: 20,
+            time_budget: Duration::from_secs(10),
+        },
+    );
+    for n in [128usize, 256, 512] {
+        let a = Matrix::random_spectral(n, 0.99, cfg.seed);
+        let b = Matrix::random_spectral(n, 0.99, cfg.seed ^ 1);
+        runner.bench(&format!("matmul/xla/n{n}"), || {
+            let (m, _) = engine.matmul(&a, &b).expect("matmul");
+            matexp::bench::black_box(&m);
+        });
+    }
+    runner.report();
+}

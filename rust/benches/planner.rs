@@ -1,0 +1,91 @@
+//! `cargo bench --bench planner` — the L3 hot-path microbenches: plan
+//! construction, plan replay bookkeeping, and the CPU matmul variants
+//! (ablation A4). None of these touch PJRT, so this target pinpoints
+//! coordinator-side overhead in isolation.
+
+use matexp::bench::{black_box, BenchConfig, Runner};
+use matexp::experiments::{ablations, report};
+use matexp::plan::Plan;
+use std::time::Duration;
+
+fn main() {
+    let mut runner = Runner::with_config(
+        "planner microbenches",
+        BenchConfig {
+            warmup_iters: 10,
+            min_samples: 30,
+            max_samples: 200,
+            time_budget: Duration::from_secs(3),
+        },
+    );
+
+    // plan construction across the paper's exponent range and beyond
+    for power in [64u64, 1024, 1 << 20] {
+        runner.bench(&format!("binary/N{power}"), || {
+            black_box(Plan::binary(black_box(power), false));
+        });
+        runner.bench(&format!("binary-fused/N{power}"), || {
+            black_box(Plan::binary(black_box(power), true));
+        });
+        runner.bench(&format!("chained/N{power}"), || {
+            black_box(Plan::chained(black_box(power), &[4, 2]));
+        });
+        runner.bench(&format!("addition-chain/N{power}"), || {
+            black_box(Plan::addition_chain(black_box(power)));
+        });
+    }
+
+    // plan replay bookkeeping (modular scalars: pure schedule cost)
+    let plan = Plan::binary(1 << 20, false);
+    runner.bench("eval_mod/N2^20", || {
+        black_box(plan.eval_mod(black_box(3), 1_000_003).unwrap());
+    });
+
+    // validation (runs in every engine call — must stay negligible)
+    let big = Plan::addition_chain(4095);
+    runner.bench("validate/addition-chain-4095", || {
+        big.validate().unwrap();
+    });
+
+    // wire-protocol encode of a 512x512 matrix response (the serving
+    // hot path for large matrices)
+    let m512 = matexp::linalg::matrix::Matrix::random(512, 3);
+    let resp = matexp::server::proto::WireResponse::Ok {
+        result: Some(m512.data().to_vec()),
+        stats: None,
+        metrics: None,
+        payload: matexp::server::proto::Payload::Json,
+    };
+    runner.bench("wire-encode/512x512/json", || {
+        black_box(resp.encode());
+    });
+    let line = resp.encode();
+    runner.bench("wire-decode/512x512/json", || {
+        black_box(matexp::server::proto::WireResponse::decode(black_box(&line)).unwrap());
+    });
+    let resp_b64 = matexp::server::proto::WireResponse::Ok {
+        result: Some(m512.data().to_vec()),
+        stats: None,
+        metrics: None,
+        payload: matexp::server::proto::Payload::Base64,
+    };
+    runner.bench("wire-encode/512x512/b64", || {
+        black_box(resp_b64.encode());
+    });
+    let line_b64 = resp_b64.encode();
+    runner.bench("wire-decode/512x512/b64", || {
+        black_box(matexp::server::proto::WireResponse::decode(black_box(&line_b64)).unwrap());
+    });
+
+    runner.report();
+
+    // A4: CPU matmul variants (the "fair CPU" ablation)
+    for n in [128usize, 256] {
+        let arms = ablations::cpu_variants(n, 42);
+        print!(
+            "{}",
+            report::render_ablation(&format!("A4 CPU matmul variants (n={n})"), &arms)
+        );
+        println!();
+    }
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench table4` — regenerates paper Table 4
+//! (n=256) and Figures 9 and 10: paper vs simulated vs measured.
+//!
+//! Requires `make artifacts`; without them the bench still prints the
+//! paper + simulated columns (measured shows "-").
+
+use matexp::bench::Runner;
+use matexp::config::MatexpConfig;
+use matexp::experiments::{report, run_table};
+use matexp::runtime::artifacts::ArtifactRegistry;
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir).ok();
+    if registry.is_none() {
+        eprintln!("note: artifacts missing; printing paper+simulated columns only");
+    }
+    let t = run_table(4, &cfg, registry.as_ref()).expect("table 4");
+    print!("{}", report::render_table(&t));
+    print!("{}", report::render_figures(&t));
+
+    // classic bench table over the measured cells
+    let mut runner = Runner::new("table4 (n=256) measured cells");
+    for c in &t.cells {
+        if let Some(m) = c.measured {
+            runner.record(&format!("n{}/N{}/naive-gpu", c.n, c.power), m.naive_gpu_s);
+            runner.record(&format!("n{}/N{}/seq-cpu(extrap)", c.n, c.power), m.seq_cpu_s);
+            runner.record(&format!("n{}/N{}/ours", c.n, c.power), m.ours_s);
+        }
+    }
+    runner.report();
+}

@@ -1,0 +1,32 @@
+//! `cargo bench --bench table5` — regenerates paper Table 5
+//! (n=512) and Figures 11 and 12: paper vs simulated vs measured.
+//!
+//! Requires `make artifacts`; without them the bench still prints the
+//! paper + simulated columns (measured shows "-").
+
+use matexp::bench::Runner;
+use matexp::config::MatexpConfig;
+use matexp::experiments::{report, run_table};
+use matexp::runtime::artifacts::ArtifactRegistry;
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir).ok();
+    if registry.is_none() {
+        eprintln!("note: artifacts missing; printing paper+simulated columns only");
+    }
+    let t = run_table(5, &cfg, registry.as_ref()).expect("table 5");
+    print!("{}", report::render_table(&t));
+    print!("{}", report::render_figures(&t));
+
+    // classic bench table over the measured cells
+    let mut runner = Runner::new("table5 (n=512) measured cells");
+    for c in &t.cells {
+        if let Some(m) = c.measured {
+            runner.record(&format!("n{}/N{}/naive-gpu", c.n, c.power), m.naive_gpu_s);
+            runner.record(&format!("n{}/N{}/seq-cpu(extrap)", c.n, c.power), m.seq_cpu_s);
+            runner.record(&format!("n{}/N{}/ours", c.n, c.power), m.ours_s);
+        }
+    }
+    runner.report();
+}

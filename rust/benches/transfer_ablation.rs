@@ -1,0 +1,46 @@
+//! `cargo bench --bench transfer_ablation` — ablation A2 (paper §4.3.8,
+//! "the data is offloaded only log(N) times"): the SAME binary plan under
+//! two residency disciplines — device-resident registers vs a full host
+//! round-trip per launch — across sizes, plus the fusion ablation A3.
+
+use matexp::config::MatexpConfig;
+use matexp::experiments::{ablations, report};
+use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::runtime::engine::Engine;
+use matexp::runtime::Variant;
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let Ok(registry) = ArtifactRegistry::discover(&cfg.artifacts_dir) else {
+        eprintln!("artifacts missing; run `make artifacts`");
+        return;
+    };
+    let mut engine = Engine::new(&registry, Variant::Xla).expect("engine");
+
+    for (n, power) in [(64usize, 256u64), (128, 256), (256, 256), (512, 64)] {
+        let arms = ablations::transfer_ablation(&mut engine, n, power, cfg.seed)
+            .expect("transfer ablation");
+        print!(
+            "{}",
+            report::render_ablation(&format!("A2 transfers (n={n}, N={power})"), &arms)
+        );
+        let resident = arms[0].wall_s;
+        let roundtrip = arms[1].wall_s;
+        println!(
+            "residency speedup at n={n}: {:.2}x (transfers {} -> {})\n",
+            roundtrip / resident,
+            arms[1].transfers,
+            arms[0].transfers
+        );
+    }
+
+    for (n, power) in [(64usize, 256u64), (128, 512)] {
+        let arms = ablations::fusion_ablation(&mut engine, n, power, cfg.seed)
+            .expect("fusion ablation");
+        print!(
+            "{}",
+            report::render_ablation(&format!("A3 launch fusion (n={n}, N={power})"), &arms)
+        );
+        println!();
+    }
+}

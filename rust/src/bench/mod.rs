@@ -1,0 +1,198 @@
+//! In-tree micro/macro benchmark harness (criterion replacement for the
+//! offline build).
+//!
+//! `cargo bench` targets are plain `harness = false` binaries; each builds
+//! a [`Runner`], registers measurements, and the runner handles warmup,
+//! adaptive sample counts, robust statistics, and table rendering. The
+//! experiment benches additionally print paper-vs-simulated-vs-measured
+//! rows (see [`crate::experiments`]).
+
+pub mod stats;
+
+use std::time::{Duration, Instant};
+
+pub use stats::Summary;
+
+/// One measured quantity.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+    pub samples: usize,
+}
+
+/// Bench configuration (tweak per target; defaults favor the slow
+/// end-to-end PJRT paths).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations before sampling.
+    pub warmup_iters: usize,
+    /// Minimum timed samples.
+    pub min_samples: usize,
+    /// Maximum timed samples.
+    pub max_samples: usize,
+    /// Stop early when total sampling time exceeds this.
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_samples: 5,
+            max_samples: 50,
+            time_budget: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Collects measurements and renders them.
+pub struct Runner {
+    pub cfg: BenchConfig,
+    title: String,
+    results: Vec<Measurement>,
+}
+
+impl Runner {
+    pub fn new(title: &str) -> Runner {
+        Runner { cfg: BenchConfig::default(), title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn with_config(title: &str, cfg: BenchConfig) -> Runner {
+        Runner { cfg, title: title.to_string(), results: Vec::new() }
+    }
+
+    /// Time `f` under the adaptive sampling policy and record it.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.cfg.min_samples);
+        let started = Instant::now();
+        while samples.len() < self.cfg.max_samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= self.cfg.min_samples && started.elapsed() > self.cfg.time_budget {
+                break;
+            }
+        }
+        let summary = Summary::from_samples(&samples);
+        self.results.push(Measurement {
+            name: name.to_string(),
+            summary,
+            samples: samples.len(),
+        });
+        summary
+    }
+
+    /// Record an externally-measured value (e.g. a whole-table experiment
+    /// row measured by the experiments module).
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        self.results.push(Measurement {
+            name: name.to_string(),
+            summary: Summary::from_samples(&[seconds]),
+            samples: 1,
+        });
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render the classic bench table to stdout.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8}",
+            "benchmark", "median", "mean", "±stddev", "samples"
+        );
+        for m in &self.results {
+            println!(
+                "{:<48} {:>12} {:>12} {:>12} {:>8}",
+                m.name,
+                format_secs(m.summary.median),
+                format_secs(m.summary.mean),
+                format_secs(m.summary.stddev),
+                m.samples
+            );
+        }
+    }
+}
+
+/// Human-scaled seconds: ns/µs/ms/s.
+pub fn format_secs(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", format_secs(-s));
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (`std::hint::black_box` wrapper, so benches read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut r = Runner::with_config(
+            "t",
+            BenchConfig {
+                warmup_iters: 1,
+                min_samples: 3,
+                max_samples: 5,
+                time_budget: Duration::from_millis(200),
+            },
+        );
+        let mut count = 0usize;
+        let s = r.bench("noop", || {
+            count += 1;
+        });
+        assert!(count >= 4, "warmup + min samples, got {count}");
+        assert!(s.mean >= 0.0);
+        assert_eq!(r.results().len(), 1);
+    }
+
+    #[test]
+    fn time_budget_stops_early() {
+        let mut r = Runner::with_config(
+            "t",
+            BenchConfig {
+                warmup_iters: 0,
+                min_samples: 2,
+                max_samples: 1000,
+                time_budget: Duration::from_millis(50),
+            },
+        );
+        r.bench("sleepy", || std::thread::sleep(Duration::from_millis(30)));
+        assert!(r.results()[0].samples < 10);
+    }
+
+    #[test]
+    fn format_secs_scales() {
+        assert_eq!(format_secs(2.5e-9), "2.5ns");
+        assert_eq!(format_secs(2.5e-6), "2.5µs");
+        assert_eq!(format_secs(2.5e-3), "2.50ms");
+        assert_eq!(format_secs(2.5), "2.500s");
+    }
+
+    #[test]
+    fn report_does_not_panic() {
+        let mut r = Runner::new("demo");
+        r.record("manual", 0.001);
+        r.report();
+    }
+}

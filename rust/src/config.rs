@@ -1,0 +1,283 @@
+//! Configuration system: JSON config file + env + CLI overrides.
+//!
+//! Precedence (lowest to highest): defaults → config file → environment
+//! (`MATEXP_ARTIFACTS`) → CLI flags (applied by `main.rs`).
+
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+use crate::error::{MatexpError, Result};
+use crate::json_obj;
+use crate::runtime::Variant;
+use crate::util::json::Json;
+
+/// Dynamic batcher knobs (coordinator layer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatcherConfig {
+    /// Max requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Max time a request may wait for batch-mates, milliseconds.
+    pub max_wait_ms: u64,
+    /// Max queued requests before admission control rejects (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait_ms: 2, max_queue: 4096 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatexpConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt` (from `make artifacts`).
+    pub artifacts_dir: PathBuf,
+    /// Which kernel variant the engine executes.
+    pub variant: Variant,
+    /// Worker threads in the serving coordinator.
+    pub workers: usize,
+    /// TCP bind address for `matexp serve`.
+    pub server_addr: String,
+    pub batcher: BatcherConfig,
+    /// Use the fused `sqmul` executable in binary plans.
+    pub fused_sqmul: bool,
+    /// Fold squaring runs into `square2`/`square4` launches.
+    pub use_square_chains: bool,
+    /// Matrix sizes every worker pre-compiles AND pre-executes at startup
+    /// (XLA CPU pays ~4 ms thunk-init on an executable's first run; warm
+    /// workers serve their first real request at steady-state latency).
+    pub warmup_sizes: Vec<usize>,
+    /// Workload seed for experiments.
+    pub seed: u64,
+    /// For the sequential-CPU experiment arm: measure at most this many
+    /// multiplies and extrapolate linearly (naive CPU at n=512, N=512
+    /// would run for minutes; per-multiply cost is constant in N).
+    pub cpu_measure_cap: usize,
+}
+
+impl Default for MatexpConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: default_artifacts_dir(),
+            variant: Variant::Xla,
+            workers: 4,
+            server_addr: "127.0.0.1:7070".into(),
+            batcher: BatcherConfig::default(),
+            fused_sqmul: true,
+            use_square_chains: true,
+            warmup_sizes: Vec::new(),
+            seed: 42,
+            cpu_measure_cap: 8,
+        }
+    }
+}
+
+/// `$MATEXP_ARTIFACTS`, else `./artifacts` relative to the current dir,
+/// else the repo-root artifacts dir next to the executable's manifest.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MATEXP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    // fall back to the crate root (useful under `cargo test` / `cargo bench`)
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn bad(field: &str) -> MatexpError {
+    MatexpError::Config(format!("config field {field:?} has the wrong type"))
+}
+
+impl MatexpConfig {
+    /// Build from parsed JSON; missing fields take their defaults,
+    /// mistyped fields error.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = MatexpConfig::default();
+        let obj = v.as_obj().ok_or_else(|| bad("<root>"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir =
+                        PathBuf::from(val.as_str().ok_or_else(|| bad("artifacts_dir"))?);
+                }
+                "variant" => {
+                    cfg.variant =
+                        Variant::from_str(val.as_str().ok_or_else(|| bad("variant"))?)?;
+                }
+                "workers" => cfg.workers = val.as_usize().ok_or_else(|| bad("workers"))?,
+                "server_addr" => {
+                    cfg.server_addr =
+                        val.as_str().ok_or_else(|| bad("server_addr"))?.to_string();
+                }
+                "batcher" => {
+                    let b = val.as_obj().ok_or_else(|| bad("batcher"))?;
+                    for (bk, bv) in b {
+                        match bk.as_str() {
+                            "max_batch" => {
+                                cfg.batcher.max_batch =
+                                    bv.as_usize().ok_or_else(|| bad("batcher.max_batch"))?
+                            }
+                            "max_wait_ms" => {
+                                cfg.batcher.max_wait_ms =
+                                    bv.as_u64().ok_or_else(|| bad("batcher.max_wait_ms"))?
+                            }
+                            "max_queue" => {
+                                cfg.batcher.max_queue =
+                                    bv.as_usize().ok_or_else(|| bad("batcher.max_queue"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field batcher.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
+                "fused_sqmul" => {
+                    cfg.fused_sqmul = val.as_bool().ok_or_else(|| bad("fused_sqmul"))?
+                }
+                "use_square_chains" => {
+                    cfg.use_square_chains =
+                        val.as_bool().ok_or_else(|| bad("use_square_chains"))?
+                }
+                "warmup_sizes" => {
+                    cfg.warmup_sizes =
+                        val.as_usize_vec().ok_or_else(|| bad("warmup_sizes"))?;
+                }
+                "seed" => cfg.seed = val.as_u64().ok_or_else(|| bad("seed"))?,
+                "cpu_measure_cap" => {
+                    cfg.cpu_measure_cap =
+                        val.as_usize().ok_or_else(|| bad("cpu_measure_cap"))?
+                }
+                other => {
+                    return Err(MatexpError::Config(format!("unknown config field {other:?}")))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize (for `matexp info --config` and config-file scaffolding).
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("artifacts_dir", self.artifacts_dir.display().to_string()),
+            ("variant", self.variant.as_str()),
+            ("workers", self.workers),
+            ("server_addr", self.server_addr.as_str()),
+            (
+                "batcher",
+                json_obj![
+                    ("max_batch", self.batcher.max_batch),
+                    ("max_wait_ms", self.batcher.max_wait_ms),
+                    ("max_queue", self.batcher.max_queue),
+                ]
+            ),
+            (
+                "warmup_sizes",
+                Json::Arr(self.warmup_sizes.iter().map(|&n| Json::from(n)).collect())
+            ),
+            ("fused_sqmul", self.fused_sqmul),
+            ("use_square_chains", self.use_square_chains),
+            ("seed", self.seed),
+            ("cpu_measure_cap", self.cpu_measure_cap),
+        ]
+    }
+
+    /// Load from a JSON file; missing fields take their defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| MatexpError::Config(format!("{}: {e}", path.display())))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Validate invariants; call after all overrides are applied.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(MatexpError::Config("workers must be >= 1".into()));
+        }
+        if self.batcher.max_batch == 0 {
+            return Err(MatexpError::Config("batcher.max_batch must be >= 1".into()));
+        }
+        if self.cpu_measure_cap == 0 {
+            return Err(MatexpError::Config("cpu_measure_cap must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        MatexpConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let cfg =
+            MatexpConfig::from_json(&Json::parse(r#"{"workers": 8}"#).unwrap()).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
+        assert_eq!(cfg.variant, Variant::Xla);
+    }
+
+    #[test]
+    fn nested_batcher_overrides() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"batcher": {"max_wait_ms": 9}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.batcher.max_wait_ms, 9);
+        assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
+    }
+
+    #[test]
+    fn unknown_and_mistyped_fields_rejected() {
+        assert!(MatexpConfig::from_json(&Json::parse(r#"{"wrkers": 8}"#).unwrap()).is_err());
+        assert!(
+            MatexpConfig::from_json(&Json::parse(r#"{"workers": "8"}"#).unwrap()).is_err()
+        );
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"variant": "cuda"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut cfg = MatexpConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.batcher.max_batch = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let cfg = MatexpConfig::default();
+        let s = cfg.to_json().to_string_pretty();
+        assert_eq!(MatexpConfig::from_json(&Json::parse(&s).unwrap()).unwrap(), cfg);
+    }
+
+    #[test]
+    fn from_file_missing_is_error() {
+        assert!(MatexpConfig::from_file(Path::new("/nonexistent/cfg.json")).is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.file("cfg.json");
+        let mut cfg = MatexpConfig::default();
+        cfg.workers = 2;
+        cfg.variant = Variant::Pallas;
+        std::fs::write(&path, cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(MatexpConfig::from_file(&path).unwrap(), cfg);
+    }
+}

@@ -1,0 +1,211 @@
+//! Dynamic batcher: coalesce requests by matrix size.
+//!
+//! Requests for the same `n` share compiled executables and warm device
+//! state, so dispatching them together to one worker amortizes dispatch
+//! overhead and maximizes executable-cache hits. Classic
+//! size-or-deadline policy (vLLM-router style): a batch ships when it
+//! reaches `max_batch` or when its oldest request has waited `max_wait`.
+//!
+//! The batcher is pure (no threads, injected clock) so every policy edge
+//! is unit-testable; the service wraps it in a collector thread.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::config::BatcherConfig;
+use crate::coordinator::request::ExpmRequest;
+
+/// A group of same-size requests dispatched to one worker.
+#[derive(Debug)]
+pub struct Batch {
+    /// Matrix size shared by all requests in the batch.
+    pub n: usize,
+    pub requests: Vec<ExpmRequest>,
+    /// When the oldest member was enqueued.
+    pub opened_at: Instant,
+}
+
+struct Pending {
+    n: usize,
+    requests: Vec<ExpmRequest>,
+    opened_at: Instant,
+}
+
+/// Size-or-deadline dynamic batcher, one pending batch per matrix size.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Vec<Pending>,
+    /// FIFO of sizes, so flushes preserve arrival order across sizes.
+    order: VecDeque<usize>,
+    queued: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, pending: Vec::new(), order: VecDeque::new(), queued: 0 }
+    }
+
+    /// Total queued (not yet shipped) requests.
+    pub fn len(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Would one more request exceed the backpressure bound?
+    pub fn is_full(&self) -> bool {
+        self.queued >= self.cfg.max_queue
+    }
+
+    /// Enqueue a request; returns a batch if it just became full.
+    pub fn push(&mut self, req: ExpmRequest, now: Instant) -> Option<Batch> {
+        let n = req.n();
+        self.queued += 1;
+        match self.pending.iter_mut().find(|p| p.n == n) {
+            Some(p) => p.requests.push(req),
+            None => {
+                self.pending.push(Pending { n, requests: vec![req], opened_at: now });
+                self.order.push_back(n);
+            }
+        }
+        let p = self.pending.iter().find(|p| p.n == n).expect("just inserted");
+        if p.requests.len() >= self.cfg.max_batch {
+            return self.take(n);
+        }
+        None
+    }
+
+    /// Ship every pending batch whose oldest request exceeded `max_wait`.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<Batch> {
+        let max_wait = Duration::from_millis(self.cfg.max_wait_ms);
+        let due: Vec<usize> = self
+            .pending
+            .iter()
+            .filter(|p| now.duration_since(p.opened_at) >= max_wait)
+            .map(|p| p.n)
+            .collect();
+        due.into_iter().filter_map(|n| self.take(n)).collect()
+    }
+
+    /// Ship everything immediately (shutdown / test drain).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let sizes: Vec<usize> = self.order.iter().copied().collect();
+        sizes.into_iter().filter_map(|n| self.take(n)).collect()
+    }
+
+    /// Earliest deadline among pending batches (collector sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let max_wait = Duration::from_millis(self.cfg.max_wait_ms);
+        self.pending.iter().map(|p| p.opened_at + max_wait).min()
+    }
+
+    fn take(&mut self, n: usize) -> Option<Batch> {
+        let idx = self.pending.iter().position(|p| p.n == n)?;
+        let p = self.pending.remove(idx);
+        self.order.retain(|&o| o != n);
+        self.queued -= p.requests.len();
+        Some(Batch { n: p.n, requests: p.requests, opened_at: p.opened_at })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+    use crate::linalg::matrix::Matrix;
+
+    fn req(id: u64, n: usize) -> ExpmRequest {
+        ExpmRequest { id, matrix: Matrix::zeros(n), power: 8, method: Method::Ours }
+    }
+
+    fn cfg(max_batch: usize, max_wait_ms: u64, max_queue: usize) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait_ms, max_queue }
+    }
+
+    #[test]
+    fn ships_when_full() {
+        let mut b = Batcher::new(cfg(3, 1000, 100));
+        let now = Instant::now();
+        assert!(b.push(req(1, 8), now).is_none());
+        assert!(b.push(req(2, 8), now).is_none());
+        let batch = b.push(req(3, 8), now).expect("full batch ships");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.n, 8);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn sizes_do_not_mix() {
+        let mut b = Batcher::new(cfg(2, 1000, 100));
+        let now = Instant::now();
+        assert!(b.push(req(1, 8), now).is_none());
+        assert!(b.push(req(2, 16), now).is_none());
+        // still no batch: each size has only one member
+        assert_eq!(b.len(), 2);
+        let batch = b.push(req(3, 8), now).unwrap();
+        assert!(batch.requests.iter().all(|r| r.n() == 8));
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(cfg(10, 5, 100));
+        let t0 = Instant::now();
+        b.push(req(1, 8), t0);
+        b.push(req(2, 16), t0 + Duration::from_millis(3));
+        // at t0+5ms only the size-8 batch is due
+        let due = b.flush_due(t0 + Duration::from_millis(5));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].n, 8);
+        // at t0+8ms the size-16 batch is due too
+        let due = b.flush_due(t0 + Duration::from_millis(8));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].n, 16);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn next_deadline_is_earliest() {
+        let mut b = Batcher::new(cfg(10, 5, 100));
+        let t0 = Instant::now();
+        b.push(req(1, 8), t0);
+        b.push(req(2, 16), t0 + Duration::from_millis(2));
+        assert_eq!(b.next_deadline().unwrap(), t0 + Duration::from_millis(5));
+    }
+
+    #[test]
+    fn flush_all_preserves_arrival_order() {
+        let mut b = Batcher::new(cfg(10, 1000, 100));
+        let now = Instant::now();
+        b.push(req(1, 32), now);
+        b.push(req(2, 8), now);
+        b.push(req(3, 32), now);
+        let all = b.flush_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].n, 32, "first-arrived size ships first");
+        assert_eq!(all[1].n, 8);
+        assert_eq!(all[0].requests.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_bound() {
+        let mut b = Batcher::new(cfg(100, 1000, 2));
+        let now = Instant::now();
+        b.push(req(1, 8), now);
+        assert!(!b.is_full());
+        b.push(req(2, 8), now);
+        assert!(b.is_full());
+    }
+
+    #[test]
+    fn ids_survive_batching() {
+        let mut b = Batcher::new(cfg(2, 1000, 100));
+        let now = Instant::now();
+        b.push(req(7, 8), now);
+        let batch = b.push(req(9, 8), now).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7, 9]);
+    }
+}

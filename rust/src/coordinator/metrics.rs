@@ -1,0 +1,167 @@
+//! Lock-free service metrics: counters + a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json_obj;
+use crate::util::json::Json;
+
+/// Histogram bucket upper bounds, microseconds (log-spaced, last = +inf).
+pub const LATENCY_BUCKETS_US: [u64; 12] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 100_000, 500_000, 2_000_000, u64::MAX,
+];
+
+/// Shared, atomically-updated service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub responses_total: AtomicU64,
+    pub rejected_total: AtomicU64,
+    pub errors_total: AtomicU64,
+    pub batches_total: AtomicU64,
+    pub batched_requests_total: AtomicU64,
+    pub launches_total: AtomicU64,
+    pub multiplies_total: AtomicU64,
+    latency_buckets: [AtomicU64; 12],
+    latency_sum_us: AtomicU64,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests_total: u64,
+    pub responses_total: u64,
+    pub rejected_total: u64,
+    pub errors_total: u64,
+    pub batches_total: u64,
+    pub batched_requests_total: u64,
+    pub launches_total: u64,
+    pub multiplies_total: u64,
+    pub latency_buckets: Vec<(u64, u64)>,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one served response's latency.
+    pub fn observe_latency_us(&self, us: u64) {
+        let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    fn percentile(buckets: &[(u64, u64)], total: u64, q: f64) -> u64 {
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for &(bound, count) in buckets {
+            seen += count;
+            if seen >= target {
+                return bound;
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let buckets: Vec<(u64, u64)> = LATENCY_BUCKETS_US
+            .iter()
+            .zip(&self.latency_buckets)
+            .map(|(&b, c)| (b, c.load(Ordering::Relaxed)))
+            .collect();
+        let observed: u64 = buckets.iter().map(|&(_, c)| c).sum();
+        let sum = self.latency_sum_us.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests_total: self.requests_total.load(Ordering::Relaxed),
+            responses_total: self.responses_total.load(Ordering::Relaxed),
+            rejected_total: self.rejected_total.load(Ordering::Relaxed),
+            errors_total: self.errors_total.load(Ordering::Relaxed),
+            batches_total: self.batches_total.load(Ordering::Relaxed),
+            batched_requests_total: self.batched_requests_total.load(Ordering::Relaxed),
+            launches_total: self.launches_total.load(Ordering::Relaxed),
+            multiplies_total: self.multiplies_total.load(Ordering::Relaxed),
+            latency_mean_us: if observed == 0 { 0.0 } else { sum as f64 / observed as f64 },
+            latency_p50_us: Self::percentile(&buckets, observed, 0.50),
+            latency_p99_us: Self::percentile(&buckets, observed, 0.99),
+            latency_buckets: buckets,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Serialize for the TCP `metrics` endpoint / `matexp serve` logs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .latency_buckets
+            .iter()
+            .map(|&(bound, count)| {
+                Json::Arr(vec![Json::Num(bound as f64), Json::Num(count as f64)])
+            })
+            .collect();
+        json_obj![
+            ("requests_total", self.requests_total),
+            ("responses_total", self.responses_total),
+            ("rejected_total", self.rejected_total),
+            ("errors_total", self.errors_total),
+            ("batches_total", self.batches_total),
+            ("batched_requests_total", self.batched_requests_total),
+            ("launches_total", self.launches_total),
+            ("multiplies_total", self.multiplies_total),
+            ("latency_buckets", Json::Arr(buckets)),
+            ("latency_mean_us", self.latency_mean_us),
+            ("latency_p50_us", self.latency_p50_us),
+            ("latency_p99_us", self.latency_p99_us),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(3, Ordering::Relaxed);
+        m.launches_total.fetch_add(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests_total, 3);
+        assert_eq!(s.launches_total, 10);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.observe_latency_us(90); // bucket 100
+        }
+        m.observe_latency_us(1_500_000); // bucket 2_000_000
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 100);
+        assert_eq!(s.latency_p99_us, 100);
+        assert!(s.latency_mean_us > 90.0);
+        let total: u64 = s.latency_buckets.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency_p50_us, 0);
+        assert_eq!(s.latency_mean_us, 0.0);
+    }
+
+    #[test]
+    fn huge_latency_lands_in_last_bucket() {
+        let m = Metrics::new();
+        m.observe_latency_us(u64::MAX - 1);
+        let s = m.snapshot();
+        assert_eq!(s.latency_buckets.last().unwrap().1, 1);
+    }
+}

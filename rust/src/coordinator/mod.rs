@@ -1,0 +1,29 @@
+//! Serving coordinator — Layer 3 proper.
+//!
+//! The paper frames GPU matrix exponentiation as commodity supercomputing
+//! ("the vision of super computer at every desk"); this module is the
+//! deployment shape that vision implies: a multi-worker service that
+//! admits `A^N` requests, groups them by matrix size in a dynamic batcher,
+//! plans each one (binary / packed / fused / naive), and executes plans on
+//! per-worker PJRT engines with device-resident buffers.
+//!
+//! Data flow:
+//!
+//! ```text
+//! submit() ──admission──▶ collector thread ──Batcher──▶ batch queue
+//!                                                        │ (mpsc)
+//!                                 worker 0..W (own Engine)┤
+//!                                 reply channel ◀─────────┘
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod service;
+pub mod worker;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{ExecStats, ExpmRequest, ExpmResponse, Method};
+pub use service::{Service, ServiceHandle};

@@ -1,0 +1,114 @@
+//! Request/response types of the serving layer.
+
+use crate::linalg::matrix::Matrix;
+use crate::plan::PlanKind;
+
+pub use crate::runtime::engine::ExecStats;
+
+/// How the coordinator should compute `A^N`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Paper §4.3 with device-resident registers (binary plan).
+    Ours,
+    /// §4.3.8 limit: packed `[acc, base]` state, one launch per bit.
+    OursPacked,
+    /// Binary plan with `square2`/`square4` chain launches.
+    OursChained,
+    /// Extension: addition-chain plan.
+    AdditionChain,
+    /// Whole exponentiation in one launch (needs an `expm{N}` artifact).
+    FusedArtifact,
+    /// Paper §4.2 baseline: one launch per multiply, host round-trip each.
+    NaiveGpu,
+    /// Paper §4.1 baseline: sequential i-j-k on the CPU.
+    CpuSeq,
+}
+
+impl Method {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Ours => "ours",
+            Method::OursPacked => "ours-packed",
+            Method::OursChained => "ours-chained",
+            Method::AdditionChain => "addition-chain",
+            Method::FusedArtifact => "fused-artifact",
+            Method::NaiveGpu => "naive-gpu",
+            Method::CpuSeq => "cpu-seq",
+        }
+    }
+
+    pub fn all() -> [Method; 7] {
+        [
+            Method::Ours,
+            Method::OursPacked,
+            Method::OursChained,
+            Method::AdditionChain,
+            Method::FusedArtifact,
+            Method::NaiveGpu,
+            Method::CpuSeq,
+        ]
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = crate::error::MatexpError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Method::all()
+            .into_iter()
+            .find(|m| m.as_str() == s.to_ascii_lowercase())
+            .ok_or_else(|| crate::error::MatexpError::Config(format!("unknown method {s:?}")))
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One exponentiation request.
+#[derive(Clone, Debug)]
+pub struct ExpmRequest {
+    pub id: u64,
+    pub matrix: Matrix,
+    pub power: u64,
+    pub method: Method,
+}
+
+impl ExpmRequest {
+    pub fn n(&self) -> usize {
+        self.matrix.n()
+    }
+}
+
+/// The served answer.
+#[derive(Clone, Debug)]
+pub struct ExpmResponse {
+    pub id: u64,
+    pub result: Matrix,
+    pub stats: ExecStats,
+    pub method: Method,
+    /// Which planner ran (None for fused/packed/CPU paths).
+    pub plan_kind: Option<PlanKind>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn method_string_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::from_str(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::from_str("gpu-magic").is_err());
+    }
+
+    #[test]
+    fn request_reports_size() {
+        let r = ExpmRequest { id: 1, matrix: Matrix::zeros(8), power: 4, method: Method::Ours };
+        assert_eq!(r.n(), 8);
+    }
+}

@@ -1,0 +1,137 @@
+//! Request scheduling: admission control + method → execution strategy.
+//!
+//! The scheduler is where the paper's algorithm choice becomes policy: it
+//! turns a [`Method`] and power into the concrete thing a worker engine
+//! runs (a register [`Plan`], the packed bit-loop, the fused artifact, a
+//! naive round-trip loop, or the CPU baseline).
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmRequest, Method};
+use crate::error::{MatexpError, Result};
+use crate::plan::Plan;
+
+/// Largest exponent the service accepts. Plans stay tiny (O(log N)) but
+/// f32 dynamic range makes larger powers numerically meaningless.
+pub const MAX_POWER: u64 = 1 << 30;
+
+/// What a worker should actually execute.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Strategy {
+    /// Replay a register plan with device-resident buffers.
+    DeviceResident(Plan),
+    /// Packed-state bit loop (`pack2`/`step_*`/`unpack0`).
+    Packed,
+    /// Single-launch `expm{N}` artifact.
+    Fused,
+    /// Naive per-launch round-trip loop (§4.2).
+    NaiveRoundtrip,
+    /// Sequential CPU (§4.1).
+    CpuSequential,
+}
+
+/// Validate a request against the config and known artifact sizes.
+pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<()> {
+    if req.power == 0 {
+        return Err(MatexpError::Service("power must be >= 1".into()));
+    }
+    if req.power > MAX_POWER {
+        return Err(MatexpError::Service(format!(
+            "power {} exceeds MAX_POWER {MAX_POWER}",
+            req.power
+        )));
+    }
+    if !req.matrix.is_finite() {
+        return Err(MatexpError::Service("matrix contains non-finite values".into()));
+    }
+    match req.method {
+        Method::CpuSeq => Ok(()), // CPU path accepts any size
+        _ if sizes.contains(&req.n()) => Ok(()),
+        _ => Err(MatexpError::Service(format!(
+            "no artifacts for n={} (have {:?}); method {} needs them",
+            req.n(),
+            sizes,
+            req.method
+        ))),
+    }
+    // FusedArtifact availability for a specific power is checked by the
+    // worker (it has the registry); admission only validates what it can.
+}
+
+/// Pick the execution strategy for an admitted request.
+pub fn strategy_for(req: &ExpmRequest, cfg: &MatexpConfig) -> Strategy {
+    match req.method {
+        Method::Ours => Strategy::DeviceResident(if cfg.use_square_chains {
+            Plan::chained(req.power, &[4, 2])
+        } else {
+            Plan::binary(req.power, false)
+        }),
+        Method::OursChained => Strategy::DeviceResident(Plan::chained(req.power, &[4, 2])),
+        Method::OursPacked => Strategy::Packed,
+        Method::AdditionChain => Strategy::DeviceResident(Plan::addition_chain(req.power)),
+        Method::FusedArtifact => Strategy::Fused,
+        Method::NaiveGpu => Strategy::NaiveRoundtrip,
+        Method::CpuSeq => Strategy::CpuSequential,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+
+    fn req(n: usize, power: u64, method: Method) -> ExpmRequest {
+        ExpmRequest { id: 0, matrix: Matrix::identity(n), power, method }
+    }
+
+    fn cfg() -> MatexpConfig {
+        MatexpConfig::default()
+    }
+
+    #[test]
+    fn admits_known_size() {
+        admit(&req(64, 512, Method::Ours), &[8, 64, 128], &cfg()).unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_size_for_gpu_methods() {
+        assert!(admit(&req(100, 512, Method::Ours), &[8, 64], &cfg()).is_err());
+        // but the CPU path takes anything
+        admit(&req(100, 512, Method::CpuSeq), &[8, 64], &cfg()).unwrap();
+    }
+
+    #[test]
+    fn rejects_power_zero_and_huge() {
+        assert!(admit(&req(64, 0, Method::Ours), &[64], &cfg()).is_err());
+        assert!(admit(&req(64, MAX_POWER + 1, Method::Ours), &[64], &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_matrix() {
+        let mut m = Matrix::identity(8);
+        m.set(0, 0, f32::NAN);
+        let r = ExpmRequest { id: 0, matrix: m, power: 2, method: Method::Ours };
+        assert!(admit(&r, &[8], &cfg()).is_err());
+    }
+
+    #[test]
+    fn strategy_respects_config_chains() {
+        let mut c = cfg();
+        c.use_square_chains = false;
+        match strategy_for(&req(64, 512, Method::Ours), &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Binary),
+            s => panic!("{s:?}"),
+        }
+        c.use_square_chains = true;
+        match strategy_for(&req(64, 512, Method::Ours), &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Chained),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn strategy_covers_every_method() {
+        for m in Method::all() {
+            let _ = strategy_for(&req(64, 100, m), &cfg());
+        }
+    }
+}

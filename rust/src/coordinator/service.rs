@@ -1,0 +1,271 @@
+//! The serving loop: submit → admission → collector/batcher → workers.
+//!
+//! Threads:
+//! * N worker threads, each with its own PJRT [`Engine`] (engines are
+//!   `!Send`), pulling batches from a shared queue;
+//! * one collector thread running the [`Batcher`] (size-or-deadline);
+//! * callers block on a per-request reply channel (the TCP front-end wraps
+//!   `submit` in `spawn_blocking`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::MatexpConfig;
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ExpmRequest, ExpmResponse, Method};
+use crate::coordinator::{scheduler, worker};
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::runtime::artifacts::ArtifactRegistry;
+
+type Reply = std::result::Result<ExpmResponse, String>;
+type ReplyMap = Arc<Mutex<HashMap<u64, SyncSender<Reply>>>>;
+
+/// Namespace for [`Service::start`].
+pub struct Service;
+
+/// Live handle to a running coordinator.
+pub struct ServiceHandle {
+    cfg: MatexpConfig,
+    sizes: Vec<usize>,
+    submit_tx: Option<SyncSender<ExpmRequest>>,
+    replies: ReplyMap,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    collector: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Discover artifacts, spawn workers + collector, return the handle.
+    pub fn start(cfg: MatexpConfig) -> Result<ServiceHandle> {
+        cfg.validate()?;
+        let registry = Arc::new(ArtifactRegistry::discover(&cfg.artifacts_dir)?);
+        let sizes = registry.sizes(cfg.variant);
+        if sizes.is_empty() {
+            return Err(MatexpError::Artifact(format!(
+                "no {} artifacts found under {}",
+                cfg.variant,
+                cfg.artifacts_dir.display()
+            )));
+        }
+        let metrics = Arc::new(Metrics::new());
+        let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
+
+        let (submit_tx, submit_rx) = sync_channel::<ExpmRequest>(cfg.batcher.max_queue);
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.workers * 2);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // readiness barrier: workers signal once their engine is built
+        // (and warmed per cfg.warmup_sizes), so `start` returning means
+        // the first real request is served at steady-state latency.
+        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for widx in 0..cfg.workers {
+            let registry = Arc::clone(&registry);
+            let cfg_w = cfg.clone();
+            let batch_rx = Arc::clone(&batch_rx);
+            let replies = Arc::clone(&replies);
+            let metrics = Arc::clone(&metrics);
+            let ready_tx = ready_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("matexp-worker-{widx}"))
+                    .spawn(move || {
+                        worker_loop(&registry, &cfg_w, &batch_rx, &replies, &metrics, &ready_tx)
+                    })
+                    .map_err(MatexpError::Io)?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    return Err(MatexpError::Service(format!("worker failed to start: {msg}")))
+                }
+                Err(_) => return Err(MatexpError::Service("worker died during startup".into())),
+            }
+        }
+
+        let collector = {
+            let batcher_cfg = cfg.batcher.clone();
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("matexp-collector".into())
+                .spawn(move || collector_loop(batcher_cfg, submit_rx, batch_tx, &metrics))
+                .map_err(MatexpError::Io)?
+        };
+
+        Ok(ServiceHandle {
+            cfg,
+            sizes,
+            submit_tx: Some(submit_tx),
+            replies,
+            metrics,
+            next_id: AtomicU64::new(1),
+            collector: Some(collector),
+            workers,
+        })
+    }
+}
+
+fn collector_loop(
+    batcher_cfg: crate::config::BatcherConfig,
+    submit_rx: Receiver<ExpmRequest>,
+    batch_tx: SyncSender<Batch>,
+    metrics: &Metrics,
+) {
+    let mut batcher = Batcher::new(batcher_cfg);
+    let ship = |batch: Batch, metrics: &Metrics| {
+        metrics.batches_total.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_requests_total
+            .fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        // if workers are gone we silently drop; submit() callers observe a
+        // closed reply channel
+        let _ = batch_tx.send(batch);
+    };
+    loop {
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match submit_rx.recv_timeout(timeout) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    ship(batch, metrics);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                for batch in batcher.flush_all() {
+                    ship(batch, metrics);
+                }
+                return;
+            }
+        }
+        for batch in batcher.flush_due(Instant::now()) {
+            ship(batch, metrics);
+        }
+    }
+}
+
+fn worker_loop(
+    registry: &ArtifactRegistry,
+    cfg: &MatexpConfig,
+    batch_rx: &Mutex<Receiver<Batch>>,
+    replies: &ReplyMap,
+    metrics: &Metrics,
+    ready_tx: &SyncSender<std::result::Result<(), String>>,
+) {
+    let mut engine = match worker::build_engine(registry, cfg) {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e.to_string()));
+            return;
+        }
+    };
+    loop {
+        let batch = {
+            let guard = batch_rx.lock().expect("batch queue poisoned");
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // collector gone: shutdown
+            }
+        };
+        for req in batch.requests {
+            let started = Instant::now();
+            let id = req.id;
+            let outcome = worker::execute_request(&mut engine, cfg, &req);
+            let reply_tx = replies.lock().expect("reply map poisoned").remove(&id);
+            match (&outcome, reply_tx) {
+                (Ok(resp), Some(tx)) => {
+                    metrics.responses_total.fetch_add(1, Ordering::Relaxed);
+                    metrics.launches_total.fetch_add(resp.stats.launches as u64, Ordering::Relaxed);
+                    metrics
+                        .multiplies_total
+                        .fetch_add(resp.stats.multiplies as u64, Ordering::Relaxed);
+                    metrics.observe_latency_us(started.elapsed().as_micros() as u64);
+                    let _ = tx.send(outcome.map_err(|e| e.to_string()));
+                }
+                (Err(_), Some(tx)) => {
+                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(outcome.map_err(|e| e.to_string()));
+                }
+                (_, None) => {
+                    // caller gave up (channel dropped); count the work anyway
+                    metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+impl ServiceHandle {
+    /// Matrix sizes this service can serve on the GPU-path methods.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    pub fn metrics(&self) -> crate::coordinator::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Blocking request: admit, enqueue, wait for the worker's reply.
+    pub fn submit(&self, matrix: Matrix, power: u64, method: Method) -> Result<ExpmResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = ExpmRequest { id, matrix, power, method };
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = scheduler::admit(&req, &self.sizes, &self.cfg) {
+            self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        let (tx, rx) = sync_channel::<Reply>(1);
+        self.replies.lock().expect("reply map poisoned").insert(id, tx);
+        let submit_tx = self
+            .submit_tx
+            .as_ref()
+            .ok_or_else(|| MatexpError::Service("service shut down".into()))?;
+        submit_tx
+            .send(req)
+            .map_err(|_| MatexpError::Service("collector gone".into()))?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(MatexpError::Service(msg)),
+            Err(_) => Err(MatexpError::Service("worker dropped the request".into())),
+        }
+    }
+
+    /// Graceful shutdown: drain the queue, join all threads.
+    pub fn shutdown(mut self) {
+        self.submit_tx.take(); // closes the collector's input
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        // collector drop closed batch_tx; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        self.submit_tx.take();
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

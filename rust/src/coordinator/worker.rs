@@ -1,0 +1,133 @@
+//! Worker: owns a PJRT [`Engine`] (engines are `!Send`, so each worker
+//! thread builds its own) and executes scheduled requests.
+
+use std::time::Instant;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse};
+use crate::coordinator::scheduler::{strategy_for, Strategy};
+use crate::error::Result;
+use crate::linalg::{self, CpuAlgo};
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::engine::Engine;
+
+/// Execute one request on this worker's engine.
+pub fn execute_request(
+    engine: &mut Engine,
+    cfg: &MatexpConfig,
+    req: &ExpmRequest,
+) -> Result<ExpmResponse> {
+    let strategy = strategy_for(req, cfg);
+    let (result, stats, plan_kind) = match strategy {
+        Strategy::DeviceResident(plan) => {
+            let kind = plan.kind;
+            let (m, s) = engine.expm(&req.matrix, &plan)?;
+            (m, s, Some(kind))
+        }
+        Strategy::Packed => {
+            let (m, s) = engine.expm_packed(&req.matrix, req.power)?;
+            (m, s, None)
+        }
+        Strategy::Fused => {
+            let (m, s) = engine.expm_fused_artifact(&req.matrix, req.power)?;
+            (m, s, None)
+        }
+        Strategy::NaiveRoundtrip => {
+            let (m, s) = engine.expm_naive_roundtrip(&req.matrix, req.power)?;
+            (m, s, None)
+        }
+        Strategy::CpuSequential => {
+            let t0 = Instant::now();
+            let m = linalg::expm::expm_naive(&req.matrix, req.power, CpuAlgo::Naive)?;
+            let stats = ExecStats {
+                launches: 0,
+                multiplies: (req.power - 1) as usize,
+                h2d_transfers: 0,
+                d2h_transfers: 0,
+                wall_s: t0.elapsed().as_secs_f64(),
+            };
+            (m, stats, None)
+        }
+    };
+    Ok(ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind })
+}
+
+/// Build the engine a worker thread uses (one per thread; compiled
+/// executables are cached inside for the worker's lifetime). Sizes listed
+/// in `cfg.warmup_sizes` are compiled AND executed once so the worker's
+/// first real request is served at steady-state latency.
+pub fn build_engine(registry: &ArtifactRegistry, cfg: &MatexpConfig) -> Result<Engine> {
+    let mut engine = Engine::new(registry, cfg.variant)?;
+    for &n in &cfg.warmup_sizes {
+        // a size without artifacts is a config mistake worth surfacing
+        engine.warmup_exec(n)?;
+    }
+    Ok(engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+    use crate::config::default_artifacts_dir;
+    use crate::linalg::matrix::Matrix;
+
+    fn setup() -> Option<(Engine, MatexpConfig)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built
+        }
+        let registry = ArtifactRegistry::discover(&dir).unwrap();
+        let cfg = MatexpConfig::default();
+        Some((build_engine(&registry, &cfg).unwrap(), cfg))
+    }
+
+    fn req(method: Method, power: u64) -> ExpmRequest {
+        ExpmRequest { id: 1, matrix: Matrix::random_spectral(8, 0.9, 5), power, method }
+    }
+
+    #[test]
+    fn all_gpu_methods_agree_with_cpu() {
+        let Some((mut engine, cfg)) = setup() else { return };
+        let r_cpu = execute_request(&mut engine, &cfg, &req(Method::CpuSeq, 13)).unwrap();
+        for method in [
+            Method::Ours,
+            Method::OursPacked,
+            Method::OursChained,
+            Method::AdditionChain,
+            Method::NaiveGpu,
+        ] {
+            let r = execute_request(&mut engine, &cfg, &req(method, 13)).unwrap();
+            assert!(
+                r.result.approx_eq(&r_cpu.result, 1e-3, 1e-3),
+                "{method} diverges from CPU, max diff {}",
+                r.result.max_abs_diff(&r_cpu.result)
+            );
+        }
+    }
+
+    #[test]
+    fn stats_reflect_method_costs() {
+        let Some((mut engine, cfg)) = setup() else { return };
+        let naive = execute_request(&mut engine, &cfg, &req(Method::NaiveGpu, 64)).unwrap();
+        assert_eq!(naive.stats.launches, 63);
+        assert_eq!(naive.stats.h2d_transfers, 2 * 63);
+        let ours = execute_request(&mut engine, &cfg, &req(Method::OursPacked, 64)).unwrap();
+        assert!(ours.stats.launches <= 9, "{:?}", ours.stats); // 6 squarings + pack + unpack
+        assert_eq!(ours.stats.h2d_transfers, 1);
+        assert_eq!(ours.stats.d2h_transfers, 1);
+        assert_eq!(ours.stats.multiplies, 6);
+    }
+
+    #[test]
+    fn fused_artifact_runs_for_shipped_powers() {
+        let Some((mut engine, cfg)) = setup() else { return };
+        let m = Matrix::random_spectral(64, 0.9, 6);
+        let r = ExpmRequest { id: 2, matrix: m, power: 64, method: Method::FusedArtifact };
+        let resp = execute_request(&mut engine, &cfg, &r).unwrap();
+        assert_eq!(resp.stats.launches, 1);
+        // and errors cleanly for an absent power
+        let r = ExpmRequest { id: 3, matrix: Matrix::identity(64), power: 65, method: Method::FusedArtifact };
+        assert!(execute_request(&mut engine, &cfg, &r).is_err());
+    }
+}

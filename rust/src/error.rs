@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Everything that can go wrong across the coordinator, runtime and
+/// substrates. The `From` impls let `?` flow through all layers.
+#[derive(Error, Debug)]
+pub enum MatexpError {
+    /// Artifact directory / manifest problems (missing `make artifacts`?).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failures.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Invalid plan or plan/executable mismatch.
+    #[error("plan error: {0}")]
+    Plan(String),
+
+    /// Shape/dimension mismatches in the CPU substrate.
+    #[error("linalg error: {0}")]
+    Linalg(String),
+
+    /// Bad configuration.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Serving-layer failures (queue closed, worker died, protocol).
+    #[error("service error: {0}")]
+    Service(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+impl From<xla::Error> for MatexpError {
+    fn from(e: xla::Error) -> Self {
+        MatexpError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, MatexpError>;

@@ -1,0 +1,222 @@
+//! Ablations quantifying the individual design choices the paper lists in
+//! §4.3 (and the fairness questions the paper leaves open).
+//!
+//! * **A1 tiles** — §4.3.7: the tiled Pallas kernel across block sizes.
+//! * **A2 transfers** — §4.3.8: the same binary plan, device-resident vs
+//!   per-launch host round-trips.
+//! * **A3 fusion** — §4.3.5/our extension: plain binary vs fused `sqmul`
+//!   vs `square2`/`square4` chains vs the packed single-buffer loop.
+//! * **A4 cpu** — the "fair CPU" question: naive vs cache-aware vs
+//!   multi-threaded CPU baselines.
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::linalg::{self, matrix::Matrix};
+use crate::plan::Plan;
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::engine::{Engine, ExecStats};
+
+/// One ablation arm's outcome.
+#[derive(Clone, Debug)]
+pub struct ArmResult {
+    pub name: String,
+    pub wall_s: f64,
+    pub launches: usize,
+    pub multiplies: usize,
+    pub transfers: usize,
+    /// Structural metadata (tile shape, vmem estimate) where applicable.
+    pub detail: String,
+}
+
+impl ArmResult {
+    fn from_stats(name: impl Into<String>, stats: &ExecStats, detail: impl Into<String>) -> Self {
+        ArmResult {
+            name: name.into(),
+            wall_s: stats.wall_s,
+            launches: stats.launches,
+            multiplies: stats.multiplies,
+            transfers: stats.h2d_transfers + stats.d2h_transfers,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// A1 — §4.3.7 TILE sweep: run every tiled matmul artifact at size `n`,
+/// reporting wall time + the manifest's VMEM/MXU estimates.
+pub fn tile_sweep(
+    engine: &mut Engine,
+    registry: &ArtifactRegistry,
+    n: usize,
+    seed: u64,
+) -> Result<Vec<ArmResult>> {
+    let a = Matrix::random_spectral(n, 0.99, seed);
+    let b = Matrix::random_spectral(n, 0.99, seed ^ 1);
+    let mut out = Vec::new();
+    let mut tiles = registry.tiles("matmul", n);
+    tiles.sort_by_key(|e| e.blocks.clone());
+    for entry in tiles {
+        // warm: compile outside the timed region
+        engine.run_matmul_entry(registry, &entry.name, &a, &b)?;
+        let t0 = Instant::now();
+        let (_, stats) = engine.run_matmul_entry(registry, &entry.name, &a, &b)?;
+        let wall = t0.elapsed().as_secs_f64().min(stats.wall_s.max(f64::MIN_POSITIVE));
+        let detail = format!(
+            "blocks={:?} vmem={} mxu={:.2}",
+            entry.blocks.clone().unwrap_or_default(),
+            entry.vmem_bytes.map(|b| format!("{}KiB", b / 1024)).unwrap_or_else(|| "?".into()),
+            entry.mxu_utilization.unwrap_or(0.0),
+        );
+        out.push(ArmResult {
+            name: entry.name.clone(),
+            wall_s: wall,
+            launches: stats.launches,
+            multiplies: stats.multiplies,
+            transfers: stats.h2d_transfers + stats.d2h_transfers,
+            detail,
+        });
+    }
+    Ok(out)
+}
+
+/// A2 — §4.3.8 transfer ablation: identical binary plan, two residency
+/// disciplines. The gap is purely host↔device traffic + launch path.
+pub fn transfer_ablation(
+    engine: &mut Engine,
+    n: usize,
+    power: u64,
+    seed: u64,
+) -> Result<Vec<ArmResult>> {
+    let a = Matrix::random_spectral(n, 0.999, seed);
+    let plan = Plan::binary(power, false);
+    engine.warmup_exec(n)?; // steady-state: XLA first-execution init is ~4 ms/op
+    let (_, resident) = engine.expm(&a, &plan)?;
+    let (_, roundtrip) = engine.expm_plan_roundtrip(&a, &plan)?;
+    Ok(vec![
+        ArmResult::from_stats("device-resident", &resident, format!("plan=binary N={power}")),
+        ArmResult::from_stats("per-launch-roundtrip", &roundtrip, format!("plan=binary N={power}")),
+    ])
+}
+
+/// A3 — launch-fusion ablation: every "ours" execution discipline at the
+/// same (n, power).
+pub fn fusion_ablation(
+    engine: &mut Engine,
+    n: usize,
+    power: u64,
+    seed: u64,
+) -> Result<Vec<ArmResult>> {
+    let a = Matrix::random_spectral(n, 0.999, seed);
+    engine.warmup_exec(n)?; // steady-state: XLA first-execution init is ~4 ms/op
+    let mut out = Vec::new();
+    for (name, plan) in [
+        ("binary", Plan::binary(power, false)),
+        ("binary-fused-sqmul", Plan::binary(power, true)),
+        ("chained-square4", Plan::chained(power, &[4, 2])),
+        ("addition-chain", Plan::addition_chain(power)),
+    ] {
+        let (_, stats) = engine.expm(&a, &plan)?;
+        out.push(ArmResult::from_stats(name, &stats, format!("kind={}", plan.kind)));
+    }
+    let (_, packed) = engine.expm_packed(&a, power)?;
+    out.push(ArmResult::from_stats("packed-state", &packed, "pack2/step_mul/step_sq"));
+    if engine_supports_fused(engine, &a, power) {
+        let (_, fused) = engine.expm_fused_artifact(&a, power)?;
+        out.push(ArmResult::from_stats("fused-artifact", &fused, format!("expm{power} single launch")));
+    }
+    Ok(out)
+}
+
+fn engine_supports_fused(engine: &mut Engine, a: &Matrix, power: u64) -> bool {
+    engine.expm_fused_artifact(a, power).is_ok()
+}
+
+/// A4 — CPU-baseline fairness sweep: one multiply per variant at size `n`.
+pub fn cpu_variants(n: usize, seed: u64) -> Vec<ArmResult> {
+    let a = Matrix::random_spectral(n, 0.99, seed);
+    let b = Matrix::random_spectral(n, 0.99, seed ^ 7);
+    linalg::matmul_variants()
+        .into_iter()
+        .map(|(name, mm)| {
+            let t0 = Instant::now();
+            let c = mm(&a, &b);
+            let wall = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&c);
+            ArmResult {
+                name: name.to_string(),
+                wall_s: wall,
+                launches: 0,
+                multiplies: 1,
+                transfers: 0,
+                detail: format!("{:.2} GFLOP/s", 2.0 * (n as f64).powi(3) / wall / 1e9),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+    use crate::runtime::Variant;
+
+    fn engine() -> Option<(Engine, ArtifactRegistry)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let reg = ArtifactRegistry::discover(&dir).unwrap();
+        let e = Engine::new(&reg, Variant::Xla).unwrap();
+        Some((e, reg))
+    }
+
+    #[test]
+    fn cpu_variants_all_report() {
+        let arms = cpu_variants(48, 1);
+        assert_eq!(arms.len(), 5);
+        assert!(arms.iter().all(|a| a.wall_s > 0.0));
+    }
+
+    #[test]
+    fn transfer_ablation_shows_transfer_gap() {
+        let Some((mut e, _)) = engine() else { return };
+        let arms = transfer_ablation(&mut e, 64, 256, 9).unwrap();
+        assert_eq!(arms.len(), 2);
+        let resident = &arms[0];
+        let roundtrip = &arms[1];
+        // identical work…
+        assert_eq!(resident.multiplies, roundtrip.multiplies);
+        // …but O(1) vs O(launches) transfers
+        assert_eq!(resident.transfers, 2);
+        assert!(roundtrip.transfers >= 2 * roundtrip.launches);
+    }
+
+    #[test]
+    fn fusion_ablation_orders_launch_counts() {
+        let Some((mut e, _)) = engine() else { return };
+        let arms = fusion_ablation(&mut e, 64, 256, 9).unwrap();
+        let get = |name: &str| {
+            arms.iter().find(|a| a.name == name).unwrap_or_else(|| panic!("{name} missing"))
+        };
+        // 256 = 2^8: binary 8 launches, chained 2 (square4×2), packed 8+pack+unpack
+        assert_eq!(get("binary").launches, 8);
+        assert!(get("chained-square4").launches < get("binary").launches);
+        if let Some(fused) = arms.iter().find(|a| a.name == "fused-artifact") {
+            assert_eq!(fused.launches, 1);
+        }
+    }
+
+    #[test]
+    fn tile_sweep_runs_when_tiles_exist() {
+        let Some((mut e, reg)) = engine() else { return };
+        let n = reg
+            .tiles("matmul", 128)
+            .first()
+            .map(|_| 128)
+            .or_else(|| reg.tiles("matmul", 256).first().map(|_| 256));
+        let Some(n) = n else { return };
+        let arms = tile_sweep(&mut e, &reg, n, 3).unwrap();
+        assert!(!arms.is_empty());
+        assert!(arms.iter().all(|a| a.launches == 1));
+    }
+}

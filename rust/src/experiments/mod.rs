@@ -1,0 +1,24 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5) plus the design-choice ablations DESIGN.md calls out.
+//!
+//! | id        | paper artifact              | entrypoint                      |
+//! |-----------|-----------------------------|---------------------------------|
+//! | T1        | Table 1 (C2050 spec)        | `DeviceSpec::tesla_c2050()`     |
+//! | T2/F5/F6  | Table 2, Figs 5–6 (n=64)    | [`tables::run_table`] (id 2)    |
+//! | T3/F7/F8  | Table 3, Figs 7–8 (n=128)   | id 3                            |
+//! | T4/F9/F10 | Table 4, Figs 9–10 (n=256)  | id 4                            |
+//! | T5/F11/F12| Table 5, Figs 11–12 (n=512) | id 5                            |
+//! | A1        | §4.3.7 TILE sweep           | [`ablations::tile_sweep`]       |
+//! | A2        | §4.3.8 transfer discipline  | [`ablations::transfer_ablation`]|
+//! | A3        | launch fusion               | [`ablations::fusion_ablation`]  |
+//! | A4        | CPU-baseline fairness       | [`ablations::cpu_variants`]     |
+
+pub mod ablations;
+pub mod paper;
+pub mod report;
+pub mod tables;
+
+pub use ablations::ArmResult;
+pub use paper::{paper_cell, paper_table, paper_tables, PaperCell, PaperTable};
+pub use report::{render_ablation, render_figures, render_table};
+pub use tables::{run_table, CellResult, MethodTimes, TableResult};

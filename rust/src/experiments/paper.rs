@@ -1,0 +1,189 @@
+//! The paper's published evaluation numbers, as data.
+//!
+//! Tables 2–5 of IJDPS 3(2) 2012 (the paper numbers its result tables
+//! 2, 1, 2, 3 — a typesetting accident; we index them 2..5 in n-order
+//! 64/128/256/512). Every bench prints these next to the simulated and
+//! measured columns so the reproduction is checkable cell by cell.
+
+/// One published cell: wall-clock seconds for (method, n, power).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PaperCell {
+    pub power: u64,
+    pub naive_gpu_s: f64,
+    pub seq_cpu_s: f64,
+    pub ours_s: f64,
+}
+
+impl PaperCell {
+    /// "Naïve Speed UP" row: sequential CPU / naive GPU.
+    pub fn naive_speedup(&self) -> f64 {
+        self.seq_cpu_s / self.naive_gpu_s
+    }
+
+    /// "Our Approach vs Naïve GPU" row.
+    pub fn ours_vs_naive(&self) -> f64 {
+        self.naive_gpu_s / self.ours_s
+    }
+
+    /// Our approach vs sequential CPU (Figs 6/8/10/12 tall bars).
+    pub fn ours_speedup(&self) -> f64 {
+        self.seq_cpu_s / self.ours_s
+    }
+}
+
+/// One published table: matrix size + its cells.
+#[derive(Clone, Debug)]
+pub struct PaperTable {
+    /// Our table id (2..=5).
+    pub id: u8,
+    /// Matrix size n (n×n).
+    pub n: usize,
+    pub cells: &'static [PaperCell],
+}
+
+const T2: &[PaperCell] = &[
+    PaperCell { power: 64, naive_gpu_s: 0.05, seq_cpu_s: 0.23, ours_s: 0.01 },
+    PaperCell { power: 128, naive_gpu_s: 0.14, seq_cpu_s: 0.68, ours_s: 0.01 },
+    PaperCell { power: 256, naive_gpu_s: 0.43, seq_cpu_s: 1.74, ours_s: 0.02 },
+    PaperCell { power: 512, naive_gpu_s: 0.99, seq_cpu_s: 4.31, ours_s: 0.02 },
+    PaperCell { power: 1024, naive_gpu_s: 2.69, seq_cpu_s: 10.83, ours_s: 0.03 },
+];
+
+const T3: &[PaperCell] = &[
+    PaperCell { power: 64, naive_gpu_s: 0.10, seq_cpu_s: 1.83, ours_s: 0.02 },
+    PaperCell { power: 128, naive_gpu_s: 0.25, seq_cpu_s: 5.72, ours_s: 0.02 },
+    PaperCell { power: 256, naive_gpu_s: 0.62, seq_cpu_s: 13.18, ours_s: 0.02 },
+    PaperCell { power: 512, naive_gpu_s: 1.38, seq_cpu_s: 27.53, ours_s: 0.02 },
+];
+
+const T4: &[PaperCell] = &[
+    PaperCell { power: 64, naive_gpu_s: 0.21, seq_cpu_s: 16.0, ours_s: 0.03 },
+    PaperCell { power: 128, naive_gpu_s: 0.43, seq_cpu_s: 32.19, ours_s: 0.03 },
+    PaperCell { power: 256, naive_gpu_s: 0.87, seq_cpu_s: 64.61, ours_s: 0.04 },
+    PaperCell { power: 512, naive_gpu_s: 1.76, seq_cpu_s: 129.38, ours_s: 0.04 },
+];
+
+const T5: &[PaperCell] = &[
+    PaperCell { power: 64, naive_gpu_s: 0.26, seq_cpu_s: 78.49, ours_s: 0.12 },
+    PaperCell { power: 128, naive_gpu_s: 0.43, seq_cpu_s: 157.62, ours_s: 0.13 },
+    PaperCell { power: 256, naive_gpu_s: 0.87, seq_cpu_s: 315.74, ours_s: 0.14 },
+];
+
+/// All four result tables in n-order.
+pub fn paper_tables() -> [PaperTable; 4] {
+    [
+        PaperTable { id: 2, n: 64, cells: T2 },
+        PaperTable { id: 3, n: 128, cells: T3 },
+        PaperTable { id: 4, n: 256, cells: T4 },
+        PaperTable { id: 5, n: 512, cells: T5 },
+    ]
+}
+
+/// Look up a table by our id (2..=5).
+pub fn paper_table(id: u8) -> Option<PaperTable> {
+    paper_tables().into_iter().find(|t| t.id == id)
+}
+
+/// The published cell for (n, power), if the paper reports it.
+pub fn paper_cell(n: usize, power: u64) -> Option<PaperCell> {
+    paper_tables()
+        .into_iter()
+        .find(|t| t.n == n)
+        .and_then(|t| t.cells.iter().copied().find(|c| c.power == power))
+}
+
+/// Observations for calibration: every published (n, power, naive_gpu_s).
+pub fn naive_gpu_observations() -> Vec<crate::simulator::calibrate::Observation> {
+    paper_tables()
+        .iter()
+        .flat_map(|t| {
+            t.cells.iter().map(|c| crate::simulator::calibrate::Observation {
+                n: t.n,
+                power: c.power,
+                seconds: c.naive_gpu_s,
+            })
+        })
+        .collect()
+}
+
+/// Observations for session-overhead calibration: every published
+/// "Our Approach" cell.
+pub fn ours_observations() -> Vec<crate::simulator::calibrate::Observation> {
+    paper_tables()
+        .iter()
+        .flat_map(|t| {
+            t.cells.iter().map(|c| crate::simulator::calibrate::Observation {
+                n: t.n,
+                power: c.power,
+                seconds: c.ours_s,
+            })
+        })
+        .collect()
+}
+
+/// Observations for CPU calibration: every published sequential-CPU cell.
+pub fn seq_cpu_observations() -> Vec<crate::simulator::calibrate::Observation> {
+    paper_tables()
+        .iter()
+        .flat_map(|t| {
+            t.cells.iter().map(|c| crate::simulator::calibrate::Observation {
+                n: t.n,
+                power: c.power,
+                seconds: c.seq_cpu_s,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_tables_cover_paper_sizes() {
+        let ids: Vec<u8> = paper_tables().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5]);
+        let ns: Vec<usize> = paper_tables().iter().map(|t| t.n).collect();
+        assert_eq!(ns, vec![64, 128, 256, 512]);
+    }
+
+    #[test]
+    fn headline_cells_match_abstract() {
+        // "44 fold speedup with the naive GPU Kernel" — Table 4, N=512
+        let c = paper_cell(256, 512).unwrap();
+        assert!((c.ours_vs_naive() - 44.0).abs() < 0.1, "{}", c.ours_vs_naive());
+        // "1000X speedup" — ours vs sequential CPU at n=256/512
+        assert!(paper_cell(256, 512).unwrap().ours_speedup() > 1000.0);
+        assert!(paper_cell(512, 256).unwrap().ours_speedup() > 1000.0);
+    }
+
+    #[test]
+    fn published_speedup_rows_reproduce() {
+        // Table 2's printed "Naïve Speed UP" row: 4.6, 4.86, 4.05, 4.35, 4.03
+        let t = paper_table(2).unwrap();
+        let printed = [4.6, 4.86, 4.05, 4.35, 4.03];
+        for (c, want) in t.cells.iter().zip(printed) {
+            assert!((c.naive_speedup() - want).abs() < 0.05, "{} vs {want}", c.naive_speedup());
+        }
+        // Table 4's "Our Approach vs Naïve GPU": 7, 14.33, 21.75, 44
+        let t = paper_table(4).unwrap();
+        let printed = [7.0, 14.33, 21.75, 44.0];
+        for (c, want) in t.cells.iter().zip(printed) {
+            assert!((c.ours_vs_naive() - want).abs() < 0.05, "{} vs {want}", c.ours_vs_naive());
+        }
+    }
+
+    #[test]
+    fn lookup_misses_are_none() {
+        assert!(paper_cell(100, 64).is_none());
+        assert!(paper_cell(64, 100).is_none());
+        assert!(paper_table(1).is_none());
+        assert!(paper_table(6).is_none());
+    }
+
+    #[test]
+    fn observation_counts() {
+        assert_eq!(naive_gpu_observations().len(), 5 + 4 + 4 + 3);
+        assert_eq!(seq_cpu_observations().len(), 16);
+    }
+}

@@ -1,0 +1,292 @@
+//! Rendering: paper-style tables, figure series (ASCII chart + CSV), and
+//! ablation tables. The same renderer backs `matexp experiment`, the
+//! criterion-style bench targets, and EXPERIMENTS.md regeneration.
+
+use std::fmt::Write as _;
+
+use crate::experiments::ablations::ArmResult;
+use crate::experiments::tables::{CellResult, TableResult};
+
+fn fmt_s(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v < 0.01 {
+        format!("{v:.4}")
+    } else if v < 10.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn fmt_x(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Render one regenerated table in the paper's row layout, one block per
+/// source (paper / simulated / measured).
+pub fn render_table(t: &TableResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "== Table {} — exponentiation of a {}x{} matrix ==",
+        t.id, t.n, t.n
+    );
+    let powers: Vec<String> = t.cells.iter().map(|c| c.power.to_string()).collect();
+    let _ = writeln!(s, "{:<34} {}", "power N", cols(&powers));
+
+    let block = |s: &mut String, label: &str, pick: &dyn Fn(&CellResult) -> Option<[f64; 5]>| {
+        let mut rows: Vec<Vec<String>> = vec![Vec::new(); 5];
+        for c in &t.cells {
+            match pick(c) {
+                Some(vals) => {
+                    rows[0].push(fmt_s(vals[0]));
+                    rows[1].push(fmt_s(vals[1]));
+                    rows[2].push(fmt_x(vals[2]));
+                    rows[3].push(fmt_s(vals[3]));
+                    rows[4].push(fmt_x(vals[4]));
+                }
+                None => {
+                    for r in rows.iter_mut() {
+                        r.push("-".into());
+                    }
+                }
+            }
+        }
+        let names = [
+            "Naive GPU (s)",
+            "Sequential CPU (s)",
+            "Naive Speed UP",
+            "Our Approach (s)",
+            "Ours vs Naive GPU",
+        ];
+        let _ = writeln!(s, "-- {label} --");
+        for (name, row) in names.iter().zip(rows) {
+            let _ = writeln!(s, "{name:<34} {}", cols(&row));
+        }
+    };
+
+    block(&mut s, "paper (Tesla C2050, 2012)", &|c| {
+        c.paper.map(|p| {
+            [p.naive_gpu_s, p.seq_cpu_s, p.naive_speedup(), p.ours_s, p.ours_vs_naive()]
+        })
+    });
+    block(&mut s, "simulated (calibrated C2050 model)", &|c| {
+        let m = c.simulated;
+        Some([m.naive_gpu_s, m.seq_cpu_s, m.naive_speedup(), m.ours_s, m.ours_vs_naive()])
+    });
+    block(&mut s, "measured (this testbed, CPU PJRT)", &|c| {
+        c.measured.map(|m| {
+            [m.naive_gpu_s, m.seq_cpu_s, m.naive_speedup(), m.ours_s, m.ours_vs_naive()]
+        })
+    });
+
+    let launch_ratio: Vec<String> = t
+        .cells
+        .iter()
+        .map(|c| format!("{}/{}", c.launches.0, c.launches.1))
+        .collect();
+    let _ = writeln!(s, "{:<34} {}", "launches naive/ours", cols(&launch_ratio));
+    s
+}
+
+fn cols(cells: &[String]) -> String {
+    cells.iter().map(|c| format!("{c:>10}")).collect::<Vec<_>>().join(" ")
+}
+
+/// The figure ids belonging to a table (times figure, speedup figure).
+pub fn figure_ids(table_id: u8) -> (u8, u8) {
+    // Table 2→Figs 5/6, 3→7/8, 4→9/10, 5→11/12
+    let base = 5 + (table_id - 2) * 2;
+    (base, base + 1)
+}
+
+/// Render the two figures of a table: the times chart (Fig 5/7/9/11) and
+/// the speedup bars (Fig 6/8/10/12), as ASCII + CSV series.
+pub fn render_figures(t: &TableResult) -> String {
+    let (fig_t, fig_s) = figure_ids(t.id);
+    let mut s = String::new();
+
+    let _ = writeln!(s, "== Figure {fig_t} — times vs power (n={}) ==", t.n);
+    let _ = writeln!(s, "csv: power,source,naive_gpu_s,seq_cpu_s,ours_s");
+    for c in &t.cells {
+        if let Some(p) = c.paper {
+            let _ = writeln!(
+                s,
+                "csv: {},paper,{},{},{}",
+                c.power,
+                fmt_s(p.naive_gpu_s),
+                fmt_s(p.seq_cpu_s),
+                fmt_s(p.ours_s)
+            );
+        }
+        let m = c.simulated;
+        let _ = writeln!(
+            s,
+            "csv: {},simulated,{},{},{}",
+            c.power,
+            fmt_s(m.naive_gpu_s),
+            fmt_s(m.seq_cpu_s),
+            fmt_s(m.ours_s)
+        );
+        if let Some(m) = c.measured {
+            let _ = writeln!(
+                s,
+                "csv: {},measured,{},{},{}",
+                c.power,
+                fmt_s(m.naive_gpu_s),
+                fmt_s(m.seq_cpu_s),
+                fmt_s(m.ours_s)
+            );
+        }
+    }
+    // ASCII log-scale chart of the simulated series (the paper's figure)
+    let _ = writeln!(s, "{}", ascii_chart(t));
+
+    let _ = writeln!(s, "== Figure {fig_s} — speedup vs sequential CPU (n={}) ==", t.n);
+    let _ = writeln!(s, "csv: power,source,naive_speedup,ours_speedup");
+    for c in &t.cells {
+        if let Some(p) = c.paper {
+            let _ = writeln!(
+                s,
+                "csv: {},paper,{},{}",
+                c.power,
+                fmt_x(p.naive_speedup()),
+                fmt_x(p.ours_speedup())
+            );
+        }
+        let _ = writeln!(
+            s,
+            "csv: {},simulated,{},{}",
+            c.power,
+            fmt_x(c.simulated.naive_speedup()),
+            fmt_x(c.simulated.ours_speedup())
+        );
+        if let Some(m) = c.measured {
+            let _ = writeln!(
+                s,
+                "csv: {},measured,{},{}",
+                c.power,
+                fmt_x(m.naive_speedup()),
+                fmt_x(m.ours_speedup())
+            );
+        }
+    }
+    for c in &t.cells {
+        let naive = c.simulated.naive_speedup();
+        let ours = c.simulated.ours_speedup();
+        let _ = writeln!(s, "N={:<5} naive |{}", c.power, bar(naive, ours));
+        let _ = writeln!(s, "        ours |{}", bar(ours, ours.max(naive)));
+    }
+    s
+}
+
+/// Log-scale ASCII chart of the three simulated time series.
+fn ascii_chart(t: &TableResult) -> String {
+    let mut s = String::new();
+    let series: [(&str, Box<dyn Fn(&CellResult) -> f64>); 3] = [
+        ("seq-cpu  ", Box::new(|c: &CellResult| c.simulated.seq_cpu_s)),
+        ("naive-gpu", Box::new(|c: &CellResult| c.simulated.naive_gpu_s)),
+        ("ours     ", Box::new(|c: &CellResult| c.simulated.ours_s)),
+    ];
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, f)| t.cells.iter().map(f))
+        .filter(|v| *v > 0.0)
+        .collect();
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min).ln();
+    let hi = all.iter().cloned().fold(0.0f64, f64::max).ln();
+    let span = (hi - lo).max(1e-9);
+    for (name, f) in &series {
+        let _ = write!(s, "{name} ");
+        for c in &t.cells {
+            let v = f(c);
+            let w = (((v.ln() - lo) / span) * 40.0).round() as usize;
+            let _ = write!(s, "{:<6}", format!("N={}", c.power));
+            let _ = writeln!(s, "{}* {}", " ".repeat(w), fmt_s(v));
+            let _ = write!(s, "{:width$} ", "", width = name.len() - 1);
+        }
+        s.truncate(s.trim_end_matches(' ').len());
+    }
+    s
+}
+
+fn bar(v: f64, max: f64) -> String {
+    let width = ((v / max.max(1e-9)) * 50.0).round() as usize;
+    format!("{} {:.1}x", "#".repeat(width.max(1)), v)
+}
+
+/// Render an ablation arm table.
+pub fn render_ablation(title: &str, arms: &[ArmResult]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "== Ablation: {title} ==");
+    let _ = writeln!(
+        s,
+        "{:<28} {:>10} {:>9} {:>10} {:>10}  {}",
+        "arm", "wall", "launches", "multiplies", "transfers", "detail"
+    );
+    for a in arms {
+        let _ = writeln!(
+            s,
+            "{:<28} {:>10} {:>9} {:>10} {:>10}  {}",
+            a.name,
+            crate::bench::format_secs(a.wall_s),
+            a.launches,
+            a.multiplies,
+            a.transfers,
+            a.detail
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MatexpConfig;
+    use crate::experiments::tables::run_table;
+
+    #[test]
+    fn figure_id_mapping_matches_paper() {
+        assert_eq!(figure_ids(2), (5, 6));
+        assert_eq!(figure_ids(3), (7, 8));
+        assert_eq!(figure_ids(4), (9, 10));
+        assert_eq!(figure_ids(5), (11, 12));
+    }
+
+    #[test]
+    fn table_render_contains_all_blocks() {
+        let t = run_table(2, &MatexpConfig::default(), None).unwrap();
+        let s = render_table(&t);
+        for needle in ["Table 2", "paper", "simulated", "measured", "Naive Speed UP", "launches naive/ours"] {
+            assert!(s.contains(needle), "missing {needle:?}:\n{s}");
+        }
+    }
+
+    #[test]
+    fn figures_render_csv_series() {
+        let t = run_table(5, &MatexpConfig::default(), None).unwrap();
+        let s = render_figures(&t);
+        assert!(s.contains("Figure 11"), "{s}");
+        assert!(s.contains("Figure 12"), "{s}");
+        assert!(s.lines().filter(|l| l.starts_with("csv:")).count() > 10);
+    }
+
+    #[test]
+    fn ablation_render() {
+        let arms = vec![ArmResult {
+            name: "x".into(),
+            wall_s: 0.5,
+            launches: 3,
+            multiplies: 4,
+            transfers: 2,
+            detail: "d".into(),
+        }];
+        let s = render_ablation("demo", &arms);
+        assert!(s.contains("demo") && s.contains("x"), "{s}");
+    }
+}

@@ -1,0 +1,293 @@
+//! Regeneration of the paper's Tables 2–5 (and Figures 5–12, which are
+//! the same numbers re-plotted).
+//!
+//! Every cell is produced three ways:
+//! * **paper** — the published number ([`super::paper`]);
+//! * **simulated** — the calibrated Tesla C2050 analytic model
+//!   ([`crate::simulator`]) predicting the cell;
+//! * **measured** — this testbed: the PJRT engine for both GPU arms and
+//!   the naive i-j-k loop for the CPU arm (capped + extrapolated, see
+//!   [`crate::config::MatexpConfig::cpu_measure_cap`]).
+
+use std::time::Instant;
+
+use crate::config::MatexpConfig;
+use crate::error::Result;
+use crate::experiments::paper::{self, PaperCell};
+use crate::linalg::{self, matrix::Matrix};
+use crate::plan::Plan;
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::engine::Engine;
+use crate::simulator::calibrate;
+use crate::simulator::device::DeviceSpec;
+use crate::simulator::timing::GpuTimingModel;
+
+/// The three methods of every paper table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MethodTimes {
+    pub naive_gpu_s: f64,
+    pub seq_cpu_s: f64,
+    pub ours_s: f64,
+}
+
+impl MethodTimes {
+    pub fn naive_speedup(&self) -> f64 {
+        self.seq_cpu_s / self.naive_gpu_s
+    }
+    pub fn ours_vs_naive(&self) -> f64 {
+        self.naive_gpu_s / self.ours_s
+    }
+    pub fn ours_speedup(&self) -> f64 {
+        self.seq_cpu_s / self.ours_s
+    }
+}
+
+/// One regenerated cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub n: usize,
+    pub power: u64,
+    pub paper: Option<PaperCell>,
+    pub simulated: MethodTimes,
+    /// Present when run with a live engine (`measure = true`).
+    pub measured: Option<MethodTimes>,
+    /// Launch counts (naive, ours) — the mechanism behind the ratios.
+    pub launches: (usize, usize),
+}
+
+/// One regenerated table.
+#[derive(Clone, Debug)]
+pub struct TableResult {
+    pub id: u8,
+    pub n: usize,
+    pub cells: Vec<CellResult>,
+}
+
+/// Calibrated (GPU model, CPU effective flops) from the paper's own
+/// published columns — the simulator's anchor.
+pub fn calibrated_models() -> (GpuTimingModel, f64) {
+    // spec-sheet analytic components (transfer, roofline kernel) +
+    // per-size calibrated launch costs + fitted session overhead —
+    // see simulator::calibrate for why not a single 3-parameter fit.
+    let mut gpu = GpuTimingModel::from_spec(DeviceSpec::tesla_c2050());
+    gpu.per_size_launch_s = calibrate::fit_per_size(&paper::naive_gpu_observations());
+    gpu.session_overhead_s =
+        calibrate::fit_session_overhead(&paper::ours_observations(), &gpu);
+    let cpu_flops = calibrate::fit_cpu_flops(&paper::seq_cpu_observations());
+    (gpu, cpu_flops)
+}
+
+/// Plan "ours" the way the config says the service plans it.
+pub fn ours_plan(cfg: &MatexpConfig, power: u64) -> Plan {
+    if cfg.use_square_chains {
+        Plan::chained(power, &[4, 2])
+    } else {
+        Plan::binary(power, cfg.fused_sqmul)
+    }
+}
+
+/// Simulate one cell on the calibrated models.
+///
+/// The simulated "ours" column always uses the plain binary plan — that is
+/// the algorithm the paper ran on the C2050; our fused/chained variants
+/// are extensions and would make the simulated column incomparable to the
+/// published one. (The *measured* column uses [`ours_plan`], i.e. whatever
+/// the config says the service really does.)
+pub fn simulate_cell(
+    gpu: &GpuTimingModel,
+    cpu_flops: f64,
+    _cfg: &MatexpConfig,
+    n: usize,
+    power: u64,
+) -> MethodTimes {
+    let naive = gpu.simulate_roundtrip(&Plan::naive(power), n);
+    let ours = gpu.simulate_device_resident(&Plan::binary(power, false), n);
+    let cpu_s = 2.0 * (n as f64).powi(3) * (power - 1) as f64 / cpu_flops;
+    MethodTimes { naive_gpu_s: naive.total_s, seq_cpu_s: cpu_s, ours_s: ours.total_s }
+}
+
+/// Measure the sequential-CPU arm: run `min(cap, power-1)` multiplies of
+/// the naive i-j-k loop and extrapolate linearly (per-multiply cost does
+/// not depend on the exponent).
+pub fn measure_cpu_extrapolated(a: &Matrix, power: u64, cap: usize) -> f64 {
+    let multiplies = (power - 1) as usize;
+    if multiplies == 0 {
+        return 0.0;
+    }
+    let sample = multiplies.min(cap.max(1));
+    let t0 = Instant::now();
+    let mut acc = a.clone();
+    for _ in 0..sample {
+        acc = linalg::naive::matmul_naive(&acc, a);
+    }
+    let measured = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&acc);
+    measured * multiplies as f64 / sample as f64
+}
+
+/// Measure one cell end-to-end on the live engine.
+pub fn measure_cell(
+    engine: &mut Engine,
+    cfg: &MatexpConfig,
+    a: &Matrix,
+    power: u64,
+) -> Result<MethodTimes> {
+    engine.warmup_exec(a.n())?; // steady-state numbers, not first-touch
+    let (_, naive_stats) = engine.expm_naive_roundtrip(a, power)?;
+    let (_, ours_stats) = engine.expm(a, &ours_plan(cfg, power))?;
+    let cpu_s = measure_cpu_extrapolated(a, power, cfg.cpu_measure_cap);
+    Ok(MethodTimes {
+        naive_gpu_s: naive_stats.wall_s,
+        seq_cpu_s: cpu_s,
+        ours_s: ours_stats.wall_s,
+    })
+}
+
+/// Regenerate one paper table (2..=5). `registry`/`measure` control
+/// whether the measured column is produced (simulation always is).
+pub fn run_table(
+    id: u8,
+    cfg: &MatexpConfig,
+    registry: Option<&ArtifactRegistry>,
+) -> Result<TableResult> {
+    let spec = paper::paper_table(id).ok_or_else(|| {
+        crate::error::MatexpError::Config(format!("no paper table {id} (have 2..=5)"))
+    })?;
+    let (gpu, cpu_flops) = calibrated_models();
+    let mut engine = match registry {
+        Some(reg) => Some(Engine::new(reg, cfg.variant)?),
+        None => None,
+    };
+    let a = Matrix::random_spectral(spec.n, 0.999, cfg.seed);
+    let mut cells = Vec::new();
+    for cell in spec.cells {
+        let power = cell.power;
+        let simulated = simulate_cell(&gpu, cpu_flops, cfg, spec.n, power);
+        let measured = match engine.as_mut() {
+            Some(e) => Some(measure_cell(e, cfg, &a, power)?),
+            None => None,
+        };
+        cells.push(CellResult {
+            n: spec.n,
+            power,
+            paper: Some(*cell),
+            simulated,
+            measured,
+            launches: (
+                Plan::naive(power).launches(),
+                ours_plan(cfg, power).launches(),
+            ),
+        });
+    }
+    Ok(TableResult { id, n: spec.n, cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MatexpConfig {
+        MatexpConfig::default()
+    }
+
+    #[test]
+    fn calibration_reproduces_paper_naive_column() {
+        // A 3-parameter per-launch model fitting 16 published cells.
+        // The paper's own n=64 column is NOT linear in N−1 (its per-launch
+        // cost grows 3.3x from N=64 to N=1024), so no constant-per-launch
+        // model can match every cell tightly; we require every cell within
+        // 2.2x and a geometric-mean error under 35% (EXPERIMENTS.md §T2).
+        let (gpu, _) = calibrated_models();
+        let mut log_sum = 0.0;
+        let mut count = 0;
+        for t in paper::paper_tables() {
+            for c in t.cells {
+                let sim = gpu.simulate_roundtrip(&Plan::naive(c.power), t.n).total_s;
+                let ratio = (sim / c.naive_gpu_s).max(c.naive_gpu_s / sim);
+                assert!(
+                    ratio < 2.2,
+                    "n={} N={}: sim {sim:.3} vs paper {} ({ratio:.2}x)",
+                    t.n,
+                    c.power,
+                    c.naive_gpu_s
+                );
+                log_sum += ratio.ln();
+                count += 1;
+            }
+        }
+        let geomean = (log_sum / count as f64).exp();
+        assert!(geomean < 1.35, "geomean misfit {geomean:.3}x");
+    }
+
+    #[test]
+    fn simulated_tables_preserve_the_paper_claims() {
+        let cfg = cfg();
+        let (gpu, cpu_flops) = calibrated_models();
+        for t in paper::paper_tables() {
+            for c in t.cells {
+                let sim = simulate_cell(&gpu, cpu_flops, &cfg, t.n, c.power);
+                // who wins
+                assert!(sim.ours_s < sim.naive_gpu_s, "ours wins (n={} N={})", t.n, c.power);
+                assert!(sim.naive_gpu_s < sim.seq_cpu_s, "naive GPU beats CPU (n={} N={})", t.n, c.power);
+                // by roughly what factor: within 4x of the published ratio.
+                // (3x holds everywhere except n=512, where the paper's own
+                // data is internally inconsistent: its "ours" spends 20 ms
+                // per multiply while its naive loop spends 4 ms per launch
+                // on identical kernels — see EXPERIMENTS.md §T5.)
+                let ratio = sim.ours_vs_naive() / c.ours_vs_naive();
+                assert!(
+                    (0.25..4.0).contains(&ratio),
+                    "n={} N={}: sim ours-vs-naive {:.1} vs paper {:.1}",
+                    t.n,
+                    c.power,
+                    sim.ours_vs_naive(),
+                    c.ours_vs_naive()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_power_as_in_figures() {
+        // Figures 6/8/10/12: ours-vs-naive grows with the exponent
+        let cfg = cfg();
+        let (gpu, cpu_flops) = calibrated_models();
+        for n in [64usize, 128, 256, 512] {
+            let mut last = 0.0;
+            for power in [64u64, 128, 256, 512] {
+                let sim = simulate_cell(&gpu, cpu_flops, &cfg, n, power);
+                assert!(sim.ours_vs_naive() > last, "n={n} N={power}");
+                last = sim.ours_vs_naive();
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_extrapolation_is_linear() {
+        let a = Matrix::random_spectral(24, 0.9, 3);
+        let full = measure_cpu_extrapolated(&a, 17, usize::MAX);
+        let capped = measure_cpu_extrapolated(&a, 17, 4);
+        // both estimate the same quantity; they must agree within noise
+        let rel = (full - capped).abs() / full.max(1e-12);
+        assert!(rel < 0.9, "full {full} vs capped {capped}");
+        assert_eq!(measure_cpu_extrapolated(&a, 1, 4), 0.0);
+    }
+
+    #[test]
+    fn unknown_table_id_rejected() {
+        assert!(run_table(7, &cfg(), None).is_err());
+    }
+
+    #[test]
+    fn simulation_only_table_runs_fast() {
+        let t = run_table(2, &cfg(), None).unwrap();
+        assert_eq!(t.n, 64);
+        assert_eq!(t.cells.len(), 5);
+        assert!(t.cells.iter().all(|c| c.measured.is_none()));
+        assert!(t.cells.iter().all(|c| c.paper.is_some()));
+        // launch counts: naive N-1 vs ours ~log
+        let last = t.cells.last().unwrap();
+        assert_eq!(last.launches.0, 1023);
+        assert!(last.launches.1 <= 10);
+    }
+}

@@ -1,0 +1,57 @@
+//! # matexp — heterogeneous highly parallel matrix exponentiation
+//!
+//! Reproduction of *"Heterogeneous Highly Parallel Implementation of Matrix
+//! Exponentiation Using GPU"* (IJDPS vol. 3 no. 2, 2012) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   square-and-multiply launch scheduler ([`plan`]), the device-resident
+//!   buffer engine ([`runtime::engine`]), a serving coordinator with a
+//!   dynamic batcher ([`coordinator`]) and a TCP front-end ([`server`]).
+//! * **Layer 2/1 (python/compile)** — JAX compute graphs calling the tiled
+//!   Pallas matmul kernel, AOT-lowered to HLO text in `artifacts/`.
+//! * **Substrates** — a sequential/blocked/threaded CPU linear-algebra
+//!   library ([`linalg`], the paper's CPU baseline) and an analytic Tesla
+//!   C2050 timing model ([`simulator`], the substitute for the 2012
+//!   testbed).
+//!
+//! Quick start (artifacts built by `make artifacts`):
+//!
+//! ```no_run
+//! use matexp::prelude::*;
+//!
+//! let cfg = MatexpConfig::default();
+//! let registry = ArtifactRegistry::discover(&cfg.artifacts_dir).unwrap();
+//! let mut engine = Engine::new(&registry, cfg.variant).unwrap();
+//! let a = Matrix::random_spectral(64, 0.99, 42);
+//! let plan = Plan::binary(512, true);
+//! let (pow, stats) = engine.expm(&a, &plan).unwrap();
+//! println!("A^512 in {} launches ({} multiplies)", stats.launches, stats.multiplies);
+//! # let _ = pow;
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod linalg;
+pub mod plan;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod util;
+
+/// One-stop imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::MatexpConfig;
+    pub use crate::coordinator::{
+        request::{ExecStats, ExpmRequest, ExpmResponse, Method},
+        service::Service,
+    };
+    pub use crate::error::{MatexpError, Result};
+    pub use crate::linalg::matrix::Matrix;
+    pub use crate::plan::{Plan, PlanKind, Step};
+    pub use crate::runtime::{artifacts::ArtifactRegistry, engine::Engine, Variant};
+    pub use crate::simulator::device::DeviceSpec;
+}

@@ -1,0 +1,141 @@
+//! CPU matrix exponentiation: the baselines of §4.1 (naive chain) plus a
+//! CPU execution of the binary plan — used both as an experiment arm and
+//! as the oracle the PJRT engine results are checked against.
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::{blocked, naive, threaded, transposed, MatmulFn};
+use crate::plan::Plan;
+
+/// Which CPU matmul backs the exponentiation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpuAlgo {
+    /// Paper §4.1: sequential i-j-k (the official baseline).
+    Naive,
+    /// B-transposed dot-product form.
+    Transposed,
+    /// i-k-j streaming form.
+    Ikj,
+    /// Cache-blocked tiles.
+    Blocked,
+    /// Rayon row-parallel (the "fair CPU" ablation).
+    Threaded,
+}
+
+impl CpuAlgo {
+    pub fn matmul(self) -> MatmulFn {
+        match self {
+            CpuAlgo::Naive => naive::matmul_naive,
+            CpuAlgo::Transposed => transposed::matmul_transposed,
+            CpuAlgo::Ikj => transposed::matmul_ikj,
+            CpuAlgo::Blocked => blocked::matmul_blocked_default,
+            CpuAlgo::Threaded => threaded::matmul_threaded,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CpuAlgo::Naive => "naive",
+            CpuAlgo::Transposed => "transposed",
+            CpuAlgo::Ikj => "ikj",
+            CpuAlgo::Blocked => "blocked",
+            CpuAlgo::Threaded => "threaded",
+        }
+    }
+}
+
+/// `a^power` by `power - 1` successive multiplies (the paper's CPU loop).
+pub fn expm_naive(a: &Matrix, power: u64, algo: CpuAlgo) -> Result<Matrix> {
+    if power == 0 {
+        return Err(MatexpError::Plan("power must be >= 1".into()));
+    }
+    let mm = algo.matmul();
+    let mut acc = a.clone();
+    for _ in 1..power {
+        acc = mm(&acc, a);
+    }
+    Ok(acc)
+}
+
+/// Execute an arbitrary [`Plan`] on the CPU. This is the reference
+/// evaluator for every plan kind (proptests replay plans through here and
+/// through modular-scalar arithmetic — see `plan::eval`).
+pub fn expm_plan(a: &Matrix, plan: &Plan, algo: CpuAlgo) -> Result<Matrix> {
+    let mm = algo.matmul();
+    let out = plan.eval(a.clone(), |x, y| mm(x, y))?;
+    Ok(out)
+}
+
+/// `a^power` via the binary square-and-multiply plan.
+pub fn expm(a: &Matrix, power: u64, algo: CpuAlgo) -> Result<Matrix> {
+    if power == 0 {
+        return Err(MatexpError::Plan("power must be >= 1".into()));
+    }
+    expm_plan(a, &Plan::binary(power, false), algo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Matrix {
+        Matrix::random_spectral(12, 0.95, 77)
+    }
+
+    #[test]
+    fn power_one_is_identity_op() {
+        let a = base();
+        assert_eq!(expm_naive(&a, 1, CpuAlgo::Naive).unwrap(), a);
+        assert_eq!(expm(&a, 1, CpuAlgo::Naive).unwrap(), a);
+    }
+
+    #[test]
+    fn power_zero_rejected() {
+        assert!(expm_naive(&base(), 0, CpuAlgo::Naive).is_err());
+        assert!(expm(&base(), 0, CpuAlgo::Naive).is_err());
+    }
+
+    #[test]
+    fn binary_matches_naive_small_powers() {
+        let a = base();
+        for p in [1u64, 2, 3, 4, 5, 7, 8, 13, 16, 31, 32, 33] {
+            let want = expm_naive(&a, p, CpuAlgo::Naive).unwrap();
+            let got = expm(&a, p, CpuAlgo::Naive).unwrap();
+            assert!(got.approx_eq(&want, 1e-3, 1e-3), "p={p}");
+        }
+    }
+
+    #[test]
+    fn all_algos_agree() {
+        let a = base();
+        let want = expm(&a, 9, CpuAlgo::Naive).unwrap();
+        for algo in [
+            CpuAlgo::Transposed,
+            CpuAlgo::Ikj,
+            CpuAlgo::Blocked,
+            CpuAlgo::Threaded,
+        ] {
+            let got = expm(&a, 9, algo).unwrap();
+            assert!(got.approx_eq(&want, 1e-3, 1e-3), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn identity_powers_stay_identity() {
+        let e = Matrix::identity(8);
+        let got = expm(&e, 1024, CpuAlgo::Blocked).unwrap();
+        assert!(got.approx_eq(&e, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn stochastic_high_power_stays_finite() {
+        let a = Matrix::random_stochastic(16, 3);
+        let got = expm(&a, 1024, CpuAlgo::Ikj).unwrap();
+        assert!(got.is_finite());
+        // rows of a stochastic matrix power still sum to ~1
+        for i in 0..16 {
+            let s: f32 = got.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-3, "row {i}: {s}");
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Dense square row-major `f32` matrix — the data type of the whole system.
+//!
+//! Row-major is deliberate: it is the layout the paper's coalesced
+//! reads/writes assume (§4.3.3) and the layout the AOT artifacts expect.
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::rand::XorShift64;
+
+/// Dense square `n x n` matrix of `f32`, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major buffer; `data.len()` must be `n * n`.
+    pub fn from_vec(n: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != n * n {
+            return Err(MatexpError::Linalg(format!(
+                "from_vec: expected {} elements for n={}, got {}",
+                n * n,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Self { n, data })
+    }
+
+    /// Deterministic uniform `[-1, 1)` matrix.
+    pub fn random(n: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let data = (0..n * n).map(|_| rng.next_signed_f32()).collect();
+        Self { n, data }
+    }
+
+    /// Random matrix rescaled so its spectral radius is ~`target`.
+    ///
+    /// High powers of an unscaled random matrix overflow f32 almost
+    /// immediately; every experiment workload goes through this (the paper
+    /// is silent on how its inputs avoided overflow — DESIGN.md §8).
+    pub fn random_spectral(n: usize, target: f32, seed: u64) -> Self {
+        let m = Self::random(n, seed);
+        let radius = m.spectral_radius_estimate(400, seed ^ 0xDEAD);
+        if radius == 0.0 {
+            return m;
+        }
+        m.scaled(target / radius)
+    }
+
+    /// Deterministic row-stochastic matrix (rows sum to 1): the
+    /// Markov-chain workload; its powers stay bounded by construction.
+    pub fn random_stochastic(n: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let mut data = vec![0.0f32; n * n];
+        for i in 0..n {
+            let row = &mut data[i * n..(i + 1) * n];
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = rng.next_f32() + 1e-3;
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Self { n, data }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Row slice (row-major makes this free).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.data[j * n + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn scaled(&self, s: f32) -> Matrix {
+        Matrix {
+            n: self.n,
+            data: self.data.iter().map(|v| v * s).collect(),
+        }
+    }
+
+    /// Largest absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.n, other.n, "max_abs_diff: size mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|v| v.abs()).fold(0.0, f32::max)
+    }
+
+    /// Approximate equality with mixed absolute/relative tolerance.
+    pub fn approx_eq(&self, other: &Matrix, atol: f32, rtol: f32) -> bool {
+        if self.n != other.n {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs().max(a.abs()))
+    }
+
+    /// Power-iteration estimate of the spectral radius (dominant |λ|).
+    pub fn spectral_radius_estimate(&self, iters: usize, seed: u64) -> f32 {
+        let n = self.n;
+        let mut rng = XorShift64::new(seed);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_signed_f32() as f64).collect();
+        let mut lambda = 0.0f64;
+        for _ in 0..iters {
+            let mut w = vec![0.0f64; n];
+            for i in 0..n {
+                let row = self.row(i);
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    acc += row[j] as f64 * v[j];
+                }
+                w[i] = acc;
+            }
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return 0.0;
+            }
+            lambda = norm;
+            for x in w.iter_mut() {
+                *x /= norm;
+            }
+            v = w;
+        }
+        lambda as f32
+    }
+
+    /// Is every element finite?
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+impl std::fmt::Display for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.n, self.n)?;
+        let show = self.n.min(6);
+        for i in 0..show {
+            write!(f, "  ")?;
+            for j in 0..show {
+                write!(f, "{:10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.n > show { "..." } else { "" })?;
+        }
+        if self.n > show {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_diagonal() {
+        let m = Matrix::identity(4);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m.get(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(3, vec![0.0; 8]).is_err());
+        assert!(Matrix::from_vec(3, vec![0.0; 9]).is_ok());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::random(8, 1);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Matrix::random(16, 9), Matrix::random(16, 9));
+        assert_ne!(Matrix::random(16, 9), Matrix::random(16, 10));
+    }
+
+    #[test]
+    fn stochastic_rows_sum_to_one() {
+        let m = Matrix::random_stochastic(32, 5);
+        for i in 0..32 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn spectral_radius_of_identity_is_one() {
+        let e = Matrix::identity(16).spectral_radius_estimate(50, 3);
+        assert!((e - 1.0).abs() < 1e-3, "{e}");
+    }
+
+    #[test]
+    fn spectral_radius_of_diagonal() {
+        let mut m = Matrix::zeros(4);
+        for (i, v) in [0.5, -3.0, 2.0, 0.1].iter().enumerate() {
+            m.set(i, i, *v);
+        }
+        let e = m.spectral_radius_estimate(200, 4);
+        assert!((e - 3.0).abs() < 1e-2, "{e}");
+    }
+
+    #[test]
+    fn random_spectral_hits_target() {
+        // power iteration on a random matrix converges slowly when the top
+        // eigenvalues are close or complex — 15% is all this guarantees,
+        // and all the workload needs (no f32 overflow at high powers).
+        let m = Matrix::random_spectral(32, 0.5, 11);
+        let r = m.spectral_radius_estimate(1000, 99);
+        assert!((r - 0.5).abs() < 0.075, "{r}");
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        let a = Matrix::from_vec(2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut b = a.clone();
+        b.set(0, 0, 1.0 + 1e-6);
+        assert!(a.approx_eq(&b, 1e-5, 0.0));
+        b.set(0, 0, 1.1);
+        assert!(!a.approx_eq(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn display_does_not_panic() {
+        let _ = format!("{}", Matrix::random(10, 1));
+        let _ = format!("{}", Matrix::random(3, 1));
+    }
+}

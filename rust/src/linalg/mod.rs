@@ -1,0 +1,32 @@
+//! CPU linear-algebra substrate.
+//!
+//! The paper's "Sequential CPU" baseline (§4.1) is [`naive::matmul_naive`]
+//! — the classic `i-j-k` triple loop, executed `N - 1` times for `A^N`.
+//! The stronger CPU variants ([`transposed`], [`blocked`], [`threaded`])
+//! exist as ablations: they quantify how much of the paper's reported GPU
+//! speedup is really "GPU vs *unoptimized* CPU" (DESIGN.md §6).
+
+pub mod blocked;
+pub mod expm;
+pub mod matrix;
+pub mod naive;
+pub mod rand;
+pub mod threaded;
+pub mod transposed;
+
+pub use expm::{expm, CpuAlgo};
+pub use matrix::Matrix;
+
+/// A CPU matmul implementation: `c = a * b` for square matrices.
+pub type MatmulFn = fn(&Matrix, &Matrix) -> Matrix;
+
+/// All CPU matmul variants, for sweeps and dispatch by name.
+pub fn matmul_variants() -> Vec<(&'static str, MatmulFn)> {
+    vec![
+        ("naive", naive::matmul_naive as MatmulFn),
+        ("transposed", transposed::matmul_transposed as MatmulFn),
+        ("ikj", transposed::matmul_ikj as MatmulFn),
+        ("blocked", blocked::matmul_blocked_default as MatmulFn),
+        ("threaded", threaded::matmul_threaded as MatmulFn),
+    ]
+}

@@ -1,0 +1,59 @@
+//! The paper's §4.1 "Sequential CPU" baseline: the textbook `i-j-k`
+//! triple loop, single-threaded, no blocking, no vectorization hints.
+//!
+//! This is intentionally *not* optimized — it is the yardstick every GPU
+//! speedup in Tables 2–5 is measured against. Faster CPU variants live in
+//! the sibling modules as ablations.
+
+use crate::linalg::matrix::Matrix;
+
+/// `c = a * b` via the classic i-j-k loop (paper §4.1, verbatim structure).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let n = a.n();
+    assert_eq!(n, b.n(), "matmul_naive: size mismatch");
+    let mut c = Matrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += a.get(i, k) * b.get(k, j);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Matrix::random(16, 1);
+        let e = Matrix::identity(16);
+        assert_eq!(matmul_naive(&a, &e), a);
+        assert_eq!(matmul_naive(&e, &a), a);
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Matrix::from_vec(2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = matmul_naive(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn zero_annihilates() {
+        let a = Matrix::random(8, 2);
+        let z = Matrix::zeros(8);
+        assert_eq!(matmul_naive(&a, &z), z);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        matmul_naive(&Matrix::zeros(4), &Matrix::zeros(8));
+    }
+}

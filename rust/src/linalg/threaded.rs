@@ -1,0 +1,67 @@
+//! Multi-threaded CPU matmul (row-parallel over the in-tree fork-join
+//! substrate, `util::threadpool::parallel_rows`).
+//!
+//! The paper's host was a 16-core Xeon yet its CPU baseline is
+//! single-threaded; this variant is the "fair CPU" ablation quantifying
+//! what those idle 15 cores were worth (EXPERIMENTS.md §Ablations).
+
+use crate::linalg::matrix::Matrix;
+use crate::util::threadpool::{default_threads, parallel_rows};
+
+/// `c = a * b`, rows of `c` computed in parallel, i-k-j inside each row.
+pub fn matmul_threaded(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_threaded_with(a, b, default_threads())
+}
+
+/// [`matmul_threaded`] with an explicit thread count (thread-scaling bench).
+pub fn matmul_threaded_with(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    let n = a.n();
+    assert_eq!(n, b.n(), "matmul_threaded: size mismatch");
+    let mut out = vec![0.0f32; n * n];
+    parallel_rows(&mut out, n, threads, |i, crow| {
+        for k in 0..n {
+            let aik = a.get(i, k);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    });
+    Matrix::from_vec(n, out).expect("threaded: internal size error")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::naive::matmul_naive;
+
+    #[test]
+    fn threaded_matches_naive() {
+        let a = Matrix::random(64, 12);
+        let b = Matrix::random(64, 13);
+        let want = matmul_naive(&a, &b);
+        assert!(matmul_threaded(&a, &b).approx_eq(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        let a = Matrix::random(32, 20);
+        let b = Matrix::random(32, 21);
+        let want = matmul_naive(&a, &b);
+        for threads in [1, 2, 3, 7, 64] {
+            let got = matmul_threaded_with(&a, &b, threads);
+            assert!(got.approx_eq(&want, 1e-4, 1e-5), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiny_matrices_work() {
+        let a = Matrix::random(1, 14);
+        let b = Matrix::random(1, 15);
+        let got = matmul_threaded(&a, &b);
+        assert!((got.get(0, 0) - a.get(0, 0) * b.get(0, 0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,81 @@
+//! Cache-friendly CPU matmul variants (ablation vs the naive baseline).
+//!
+//! The paper's GPU kernel wins partly because its memory accesses are
+//! coalesced (§4.3.3). The CPU analogue of coalescing is stride-1 inner
+//! loops; these variants quantify that effect on the host side.
+
+use crate::linalg::matrix::Matrix;
+
+/// `c = a * b` after transposing `b`, so the inner loop walks two
+/// contiguous rows (stride-1 on both operands).
+pub fn matmul_transposed(a: &Matrix, b: &Matrix) -> Matrix {
+    let n = a.n();
+    assert_eq!(n, b.n(), "matmul_transposed: size mismatch");
+    let bt = b.transpose();
+    let mut c = Matrix::zeros(n);
+    for i in 0..n {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = bt.row(j);
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += arow[k] * brow[k];
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+/// `i-k-j` loop order: the inner loop streams a row of `b` and a row of
+/// `c` with stride 1; no transpose needed.
+pub fn matmul_ikj(a: &Matrix, b: &Matrix) -> Matrix {
+    let n = a.n();
+    assert_eq!(n, b.n(), "matmul_ikj: size mismatch");
+    let mut c = Matrix::zeros(n);
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a.get(i, k);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let crow = &mut c.data_mut()[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::naive::matmul_naive;
+
+    #[test]
+    fn transposed_matches_naive() {
+        let a = Matrix::random(32, 3);
+        let b = Matrix::random(32, 4);
+        let want = matmul_naive(&a, &b);
+        assert!(matmul_transposed(&a, &b).approx_eq(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn ikj_matches_naive() {
+        let a = Matrix::random(32, 5);
+        let b = Matrix::random(32, 6);
+        let want = matmul_naive(&a, &b);
+        assert!(matmul_ikj(&a, &b).approx_eq(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn ikj_handles_sparse_rows() {
+        let mut a = Matrix::zeros(8);
+        a.set(0, 3, 2.0);
+        let b = Matrix::random(8, 7);
+        let want = matmul_naive(&a, &b);
+        assert!(matmul_ikj(&a, &b).approx_eq(&want, 1e-5, 1e-6));
+    }
+}

@@ -1,0 +1,291 @@
+//! `matexp` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//! * `info`       — platform, artifact inventory, device table (paper Table 1)
+//! * `plan`       — show the launch schedule for a power (all planners)
+//! * `expm`       — compute `A^N` once, printing stats (any method)
+//! * `experiment` — regenerate a paper table+figures or an ablation
+//! * `serve`      — run the TCP serving front-end
+//! * `bench-report` — run every table in simulation and print the summary
+
+use std::str::FromStr;
+use std::sync::Arc;
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::error::{MatexpError, Result};
+use matexp::experiments::{self, ablations, report};
+use matexp::linalg::matrix::Matrix;
+use matexp::plan::{Plan, PlanCost};
+use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::runtime::engine::Engine;
+use matexp::runtime::Variant;
+use matexp::simulator::device::DeviceSpec;
+use matexp::util::cli::Args;
+
+const USAGE: &str = "\
+matexp — heterogeneous highly parallel matrix exponentiation (IJDPS 2012 repro)
+
+USAGE: matexp <command> [flags]
+
+COMMANDS:
+  info         platform + artifact inventory [--device c2050|xeon]
+  plan         show launch schedules   --power N [--all]
+  expm         compute A^N             --n SIZE --power N [--method M] [--seed S]
+  experiment   regenerate paper results --table 2..5 [--measure] [--figures]
+               or an ablation          --ablation tiles|transfers|fusion|cpu
+                                       [--n SIZE] [--power N]
+  serve        TCP front-end           [--addr HOST:PORT] [--workers W]
+  bench-report all tables, simulation-only summary
+
+GLOBAL FLAGS:
+  --artifacts DIR   artifact directory (default ./artifacts or $MATEXP_ARTIFACTS)
+  --variant xla|pallas
+  --config FILE     JSON config file
+  --help
+
+METHODS: ours | ours-packed | ours-chained | addition-chain | fused-artifact
+         | naive-gpu | cpu-seq
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.command.is_none() {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Build the config from defaults → --config file → flags.
+fn load_config(args: &Args) -> Result<MatexpConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => MatexpConfig::from_file(std::path::Path::new(path))?,
+        None => MatexpConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = Variant::from_str(v)?;
+    }
+    if let Some(w) = args.get_parsed::<usize>("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(addr) = args.get("addr") {
+        cfg.server_addr = addr.to_string();
+    }
+    if let Some(seed) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    match args.command.as_deref().unwrap_or("") {
+        "info" => cmd_info(args, &cfg),
+        "plan" => cmd_plan(args),
+        "expm" => cmd_expm(args, &cfg),
+        "experiment" => cmd_experiment(args, &cfg),
+        "serve" => cmd_serve(args, cfg),
+        "bench-report" => cmd_bench_report(args, &cfg),
+        other => Err(MatexpError::Config(format!(
+            "unknown command {other:?}; see --help"
+        ))),
+    }
+}
+
+fn cmd_info(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    let device = args.get_or("device", "c2050");
+    args.reject_unknown()?;
+    let spec = match device.as_str() {
+        "c2050" => DeviceSpec::tesla_c2050(),
+        "xeon" => DeviceSpec::xeon_2012_single_core(),
+        other => return Err(MatexpError::Config(format!("unknown device {other:?}"))),
+    };
+    println!("== paper Table 1: device specification ==");
+    for (k, v) in spec.table1_rows() {
+        println!("{k:<34} {v}");
+    }
+    match ArtifactRegistry::discover(&cfg.artifacts_dir) {
+        Ok(reg) => {
+            println!("\n== artifacts ({}) ==", cfg.artifacts_dir.display());
+            println!("entries: {}", reg.entries().len());
+            for variant in [Variant::Xla, Variant::Pallas] {
+                println!("sizes[{variant}]: {:?}", reg.sizes(variant));
+            }
+            println!("fused expm powers @64: {:?}", reg.fused_expm_powers(64));
+            let mut engine = Engine::new(&reg, cfg.variant)?;
+            println!("\nplatform: {}", engine.platform());
+            let _ = &mut engine; // engine built = PJRT client verified
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let power: u64 = args
+        .get_parsed("power")?
+        .ok_or_else(|| MatexpError::Config("plan needs --power".into()))?;
+    let all = args.has("all");
+    let n: usize = args.get_parsed_or("n", 256)?;
+    args.reject_unknown()?;
+    let plans = if all {
+        vec![
+            Plan::naive(power),
+            Plan::binary(power, false),
+            Plan::binary(power, true),
+            Plan::chained(power, &[4, 2]),
+            Plan::addition_chain(power),
+        ]
+    } else {
+        vec![Plan::binary(power, false)]
+    };
+    println!(
+        "{:<16} {:>9} {:>11} {:>14} {:>16}",
+        "plan", "launches", "multiplies", "transfers", "transfer bytes"
+    );
+    for plan in &plans {
+        let cost = if plan.kind == matexp::plan::PlanKind::Naive {
+            PlanCost::per_launch_roundtrip(plan, n)
+        } else {
+            PlanCost::device_resident(plan, n)
+        };
+        println!(
+            "{:<16} {:>9} {:>11} {:>14} {:>16.0}",
+            plan.kind.to_string(),
+            cost.launches,
+            cost.multiplies,
+            cost.h2d_transfers + cost.d2h_transfers,
+            cost.transfer_bytes,
+        );
+    }
+    if !all {
+        println!("\nsteps:");
+        for (i, step) in plans[0].steps.iter().enumerate() {
+            println!("  {i:>3}: {step:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    let n: usize = args
+        .get_parsed("n")?
+        .ok_or_else(|| MatexpError::Config("expm needs --n".into()))?;
+    let power: u64 = args
+        .get_parsed("power")?
+        .ok_or_else(|| MatexpError::Config("expm needs --power".into()))?;
+    let method = Method::from_str(&args.get_or("method", "ours"))?;
+    args.reject_unknown()?;
+
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    let mut engine = Engine::new(&registry, cfg.variant)?;
+    let a = Matrix::random_spectral(n, 0.999, cfg.seed);
+    let req = matexp::coordinator::request::ExpmRequest {
+        id: 0,
+        matrix: a,
+        power,
+        method,
+    };
+    let resp = matexp::coordinator::worker::execute_request(&mut engine, cfg, &req)?;
+    println!("method: {} (plan: {:?})", resp.method, resp.plan_kind);
+    println!(
+        "launches: {}  multiplies: {}  transfers: {}h2d/{}d2h  wall: {}",
+        resp.stats.launches,
+        resp.stats.multiplies,
+        resp.stats.h2d_transfers,
+        resp.stats.d2h_transfers,
+        matexp::bench::format_secs(resp.stats.wall_s),
+    );
+    println!("result fro-norm: {:.4e}", resp.result.frobenius());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    if let Some(table) = args.get_parsed::<u8>("table")? {
+        let measure = args.has("measure");
+        let figures = args.has("figures");
+        args.reject_unknown()?;
+        let registry = if measure {
+            Some(ArtifactRegistry::discover(&cfg.artifacts_dir)?)
+        } else {
+            None
+        };
+        let t = experiments::run_table(table, cfg, registry.as_ref())?;
+        print!("{}", report::render_table(&t));
+        if figures {
+            print!("{}", report::render_figures(&t));
+        }
+        return Ok(());
+    }
+    if let Some(which) = args.get("ablation") {
+        let which = which.to_string();
+        let n: usize = args.get_parsed_or("n", 128)?;
+        let power: u64 = args.get_parsed_or("power", 256)?;
+        args.reject_unknown()?;
+        if which == "cpu" {
+            let arms = ablations::cpu_variants(n, cfg.seed);
+            print!("{}", report::render_ablation(&format!("CPU matmul variants (n={n})"), &arms));
+            return Ok(());
+        }
+        let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+        let mut engine = Engine::new(&registry, cfg.variant)?;
+        let arms = match which.as_str() {
+            "tiles" => ablations::tile_sweep(&mut engine, &registry, n, cfg.seed)?,
+            "transfers" => ablations::transfer_ablation(&mut engine, n, power, cfg.seed)?,
+            "fusion" => ablations::fusion_ablation(&mut engine, n, power, cfg.seed)?,
+            other => {
+                return Err(MatexpError::Config(format!(
+                    "unknown ablation {other:?} (tiles|transfers|fusion|cpu)"
+                )))
+            }
+        };
+        print!(
+            "{}",
+            report::render_ablation(&format!("{which} (n={n}, N={power})"), &arms)
+        );
+        return Ok(());
+    }
+    Err(MatexpError::Config(
+        "experiment needs --table 2..5 or --ablation NAME".into(),
+    ))
+}
+
+fn cmd_serve(args: &Args, cfg: MatexpConfig) -> Result<()> {
+    let conn_threads: usize = args.get_parsed_or("conn-threads", 16)?;
+    args.reject_unknown()?;
+    let addr = cfg.server_addr.clone();
+    println!(
+        "starting coordinator: {} workers, variant {}, artifacts {}",
+        cfg.workers,
+        cfg.variant,
+        cfg.artifacts_dir.display()
+    );
+    let service = Arc::new(Service::start(cfg)?);
+    println!("serving sizes {:?}", service.sizes());
+    matexp::server::server::serve(service, &addr, conn_threads)
+}
+
+fn cmd_bench_report(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    args.reject_unknown()?;
+    for id in 2..=5u8 {
+        let t = experiments::run_table(id, cfg, None)?;
+        print!("{}", report::render_table(&t));
+        println!();
+    }
+    Ok(())
+}

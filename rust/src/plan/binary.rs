@@ -1,0 +1,190 @@
+//! Paper §4.3 "Our Approach": square-and-multiply (binary exponentiation).
+//!
+//! LSB-first walk of the exponent bits: maintain `base = A^(2^i)` in
+//! register 0 and fold it into the accumulator (register 1) on set bits.
+//! Multiplies = `⌊log₂N⌋ + popcount(N) − 1` — the `log(N)` the paper's
+//! abstract claims, vs `N − 1` for the naive schedule.
+
+use crate::plan::{Plan, PlanKind, Step};
+
+const BASE: usize = 0;
+const ACC: usize = 1;
+
+/// Abstract op stream before register assignment / fusion.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Op {
+    /// acc = base (first set bit)
+    Init,
+    /// acc *= base
+    MulAcc,
+    /// base *= base
+    Square,
+}
+
+fn op_stream(power: u64) -> Vec<Op> {
+    assert!(power >= 1, "power must be >= 1");
+    let mut ops = Vec::new();
+    let mut p = power;
+    let mut first = true;
+    while p > 0 {
+        if p & 1 == 1 {
+            ops.push(if first { Op::Init } else { Op::MulAcc });
+            first = false;
+        }
+        p >>= 1;
+        if p > 0 {
+            ops.push(Op::Square);
+        }
+    }
+    ops
+}
+
+/// Square-and-multiply plan. With `fused = true`, adjacent
+/// (`MulAcc`, `Square`) pairs become one [`Step::SqMul`] launch against
+/// the fused `sqmul` artifact — same multiply count, fewer launches.
+pub fn binary_plan(power: u64, fused: bool) -> Plan {
+    let ops = op_stream(power);
+    let mut steps = Vec::with_capacity(ops.len());
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            Op::Init => steps.push(Step::Copy { dst: ACC, src: BASE }),
+            Op::MulAcc if fused && i + 1 < ops.len() && ops[i + 1] == Op::Square => {
+                steps.push(Step::SqMul { acc: ACC, base: BASE });
+                i += 2;
+                continue;
+            }
+            Op::MulAcc => steps.push(Step::Mul { dst: ACC, lhs: ACC, rhs: BASE }),
+            Op::Square => steps.push(Step::Mul { dst: BASE, lhs: BASE, rhs: BASE }),
+        }
+        i += 1;
+    }
+    Plan {
+        power,
+        kind: if fused { PlanKind::BinaryFused } else { PlanKind::Binary },
+        steps,
+        n_regs: 2,
+        result: if power == 1 { BASE } else { ACC },
+    }
+}
+
+/// Binary plan with *runs of squarings* folded into fused
+/// `square{k}` launches. `chains` lists the available fused chain lengths
+/// (e.g. `[4, 2]` for the shipped `square4`/`square2` artifacts), tried
+/// longest-first; leftovers fall back to single squarings.
+pub fn chained_plan(power: u64, chains: &[u32]) -> Plan {
+    let mut chains: Vec<u32> = chains.iter().copied().filter(|&k| k >= 2).collect();
+    chains.sort_unstable_by(|a, b| b.cmp(a));
+    let ops = op_stream(power);
+    let mut steps = Vec::new();
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            Op::Init => {
+                steps.push(Step::Copy { dst: ACC, src: BASE });
+                i += 1;
+            }
+            Op::MulAcc => {
+                steps.push(Step::Mul { dst: ACC, lhs: ACC, rhs: BASE });
+                i += 1;
+            }
+            Op::Square => {
+                // measure the run of consecutive squarings
+                let mut run = 0;
+                while i + run < ops.len() && ops[i + run] == Op::Square {
+                    run += 1;
+                }
+                let mut remaining = run as u32;
+                for &k in &chains {
+                    while remaining >= k {
+                        steps.push(Step::SquareChain { reg: BASE, k });
+                        remaining -= k;
+                    }
+                }
+                for _ in 0..remaining {
+                    steps.push(Step::Mul { dst: BASE, lhs: BASE, rhs: BASE });
+                }
+                i += run;
+            }
+        }
+    }
+    Plan {
+        power,
+        kind: PlanKind::Chained,
+        steps,
+        n_regs: 2,
+        result: if power == 1 { BASE } else { ACC },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::mod_pow;
+
+    const M: u64 = 1_000_003;
+
+    #[test]
+    fn power_one_is_zero_launches() {
+        for plan in [binary_plan(1, false), binary_plan(1, true), chained_plan(1, &[2])] {
+            assert_eq!(plan.launches(), 0, "{:?}", plan.kind);
+            assert_eq!(plan.eval_mod(9, M).unwrap(), 9);
+        }
+    }
+
+    #[test]
+    fn exhaustive_correctness_to_2048() {
+        for p in 1..=2048u64 {
+            let want = mod_pow(2, p, M);
+            assert_eq!(binary_plan(p, false).eval_mod(2, M).unwrap(), want, "p={p}");
+            assert_eq!(binary_plan(p, true).eval_mod(2, M).unwrap(), want, "fused p={p}");
+            assert_eq!(chained_plan(p, &[4, 2]).eval_mod(2, M).unwrap(), want, "chained p={p}");
+        }
+    }
+
+    #[test]
+    fn fused_launch_count() {
+        // p = 0b1010101: squarings 6, mulaccs 3 (+init). Non-fused: 9
+        // launches. Fused: the two mid-exponent MulAccs are each followed
+        // by a Square and fuse; the final MulAcc (MSB) has no trailing
+        // Square, so 9 − 2 = 7 launches.
+        let p = 0b1010101;
+        assert_eq!(binary_plan(p, false).launches(), 9);
+        assert_eq!(binary_plan(p, true).launches(), 7);
+        // multiply count identical
+        assert_eq!(binary_plan(p, true).multiplies(), binary_plan(p, false).multiplies());
+    }
+
+    #[test]
+    fn chained_pow2_uses_long_chains() {
+        // 1024 = 2^10: runs of 10 squarings -> two square4 + one square2
+        let plan = chained_plan(1024, &[4, 2]);
+        assert_eq!(plan.launches(), 3);
+        assert_eq!(plan.multiplies(), 10);
+    }
+
+    #[test]
+    fn chained_without_chains_equals_binary() {
+        for p in [3u64, 64, 100, 511] {
+            assert_eq!(
+                chained_plan(p, &[]).launches(),
+                binary_plan(p, false).launches(),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_powers_multiply_counts() {
+        // the paper's log(N) claim, exact: floor(log2) + popcount - 1
+        for (p, want) in [(64u64, 6), (128, 7), (256, 8), (512, 9), (1024, 10)] {
+            assert_eq!(binary_plan(p, false).multiplies(), want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn chain_lengths_shorter_than_two_ignored() {
+        let plan = chained_plan(16, &[1, 0]);
+        assert_eq!(plan.launches(), binary_plan(16, false).launches());
+    }
+}

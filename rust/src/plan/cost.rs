@@ -1,0 +1,93 @@
+//! Plan cost model: launches, multiplies, transfers — the quantities the
+//! paper's §4.3.8 argues about ("the data is offloaded only log(N) times").
+
+use crate::plan::Plan;
+
+/// Cost of executing a plan for an `n x n` matrix under a given execution
+/// discipline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCost {
+    /// Kernel launches (host → device dispatches).
+    pub launches: usize,
+    /// Matrix multiplies (2·n³ flops each).
+    pub multiplies: usize,
+    /// Host→device matrix transfers.
+    pub h2d_transfers: usize,
+    /// Device→host matrix transfers.
+    pub d2h_transfers: usize,
+    /// Total floating-point operations.
+    pub flops: f64,
+    /// Total bytes moved over the host↔device link.
+    pub transfer_bytes: f64,
+}
+
+impl PlanCost {
+    /// Cost with device-resident buffers (the paper's "Our Approach"):
+    /// upload the input once, download the result once.
+    pub fn device_resident(plan: &Plan, n: usize) -> PlanCost {
+        Self::build(plan, n, 1, 1)
+    }
+
+    /// Cost with a host round-trip per launch (the naive §4.2 discipline:
+    /// every launch uploads its operands and downloads its result).
+    pub fn per_launch_roundtrip(plan: &Plan, n: usize) -> PlanCost {
+        // each launch moves 2 operands in, 1 result out
+        Self::build(plan, n, 2 * plan.launches(), plan.launches())
+    }
+
+    fn build(plan: &Plan, n: usize, h2d: usize, d2h: usize) -> PlanCost {
+        let multiplies = plan.multiplies();
+        let bytes_per_matrix = (n * n * std::mem::size_of::<f32>()) as f64;
+        PlanCost {
+            launches: plan.launches(),
+            multiplies,
+            h2d_transfers: h2d,
+            d2h_transfers: d2h,
+            flops: 2.0 * (n as f64).powi(3) * multiplies as f64,
+            transfer_bytes: bytes_per_matrix * (h2d + d2h) as f64,
+        }
+    }
+
+    /// The paper's headline ratio: naive launches / our launches.
+    pub fn launch_ratio(naive: &PlanCost, ours: &PlanCost) -> f64 {
+        naive.launches as f64 / ours.launches.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+
+    #[test]
+    fn naive_1024_vs_binary_1024() {
+        let naive = Plan::naive(1024);
+        let ours = Plan::binary(1024, false);
+        let cn = PlanCost::per_launch_roundtrip(&naive, 64);
+        let co = PlanCost::device_resident(&ours, 64);
+        assert_eq!(cn.launches, 1023);
+        assert_eq!(co.launches, 10);
+        assert_eq!(co.h2d_transfers, 1);
+        assert_eq!(co.d2h_transfers, 1);
+        // the paper's ~100x regime at n=64, N=1024 (Table 2: 89.58x)
+        let ratio = PlanCost::launch_ratio(&cn, &co);
+        assert!(ratio > 100.0, "{ratio}");
+    }
+
+    #[test]
+    fn flops_scale_with_n_cubed() {
+        let plan = Plan::binary(256, false);
+        let c64 = PlanCost::device_resident(&plan, 64);
+        let c128 = PlanCost::device_resident(&plan, 128);
+        assert!((c128.flops / c64.flops - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn roundtrip_transfers_scale_with_launches() {
+        let plan = Plan::naive(100);
+        let c = PlanCost::per_launch_roundtrip(&plan, 32);
+        assert_eq!(c.h2d_transfers, 2 * 99);
+        assert_eq!(c.d2h_transfers, 99);
+        assert_eq!(c.transfer_bytes, (32.0 * 32.0 * 4.0) * (3 * 99) as f64);
+    }
+}

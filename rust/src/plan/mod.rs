@@ -1,0 +1,331 @@
+//! Exponentiation *launch plans* — the paper's contribution, reified.
+//!
+//! A [`Plan`] is the exact sequence of kernel launches the coordinator will
+//! replay against the AOT matmul executables, expressed over a small
+//! register file of device-resident buffers (register 0 always holds the
+//! input `A`). The three planners mirror the paper:
+//!
+//! * [`Plan::naive`]    — §4.2: `N - 1` launches, one multiply each.
+//! * [`Plan::binary`]   — §4.3: square-and-multiply, `⌊log₂N⌋ +
+//!   popcount(N) − 1` multiplies; optionally with the fused `sqmul`
+//!   executable so a square+multiply pair costs one launch.
+//! * [`Plan::chained`]  — binary with runs of squarings folded into the
+//!   fused `square2`/`square4` executables (§4.3.8 pushed further).
+//! * [`chain::addition_chain`] — extension: shorter-than-binary plans from
+//!   power-tree addition chains.
+//!
+//! Plans are *data*: they can be costed ([`cost`]), replayed on the CPU,
+//! on PJRT buffers, on the timing simulator, or on modular scalars (the
+//! proptest oracle).
+
+pub mod binary;
+pub mod chain;
+pub mod cost;
+pub mod naive;
+pub mod step;
+
+pub use cost::PlanCost;
+pub use step::Step;
+
+use crate::error::{MatexpError, Result};
+
+/// Which planner produced a plan (for logs/metrics/benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanKind {
+    Naive,
+    Binary,
+    BinaryFused,
+    Chained,
+    AdditionChain,
+}
+
+impl std::fmt::Display for PlanKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PlanKind::Naive => "naive",
+            PlanKind::Binary => "binary",
+            PlanKind::BinaryFused => "binary-fused",
+            PlanKind::Chained => "chained",
+            PlanKind::AdditionChain => "addition-chain",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A launch schedule computing `A^power`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub power: u64,
+    pub kind: PlanKind,
+    pub steps: Vec<Step>,
+    /// Number of registers (device buffers) the plan needs; register 0 is
+    /// the input.
+    pub n_regs: usize,
+    /// Register holding `A^power` after the last step.
+    pub result: usize,
+}
+
+impl Plan {
+    /// Paper §4.2: multiply by `A` exactly `power - 1` times.
+    pub fn naive(power: u64) -> Plan {
+        naive::naive_plan(power)
+    }
+
+    /// Paper §4.3: square-and-multiply. With `fused`, a square+multiply
+    /// pair becomes one `SqMul` launch.
+    pub fn binary(power: u64, fused: bool) -> Plan {
+        binary::binary_plan(power, fused)
+    }
+
+    /// Binary plan with squaring runs folded into `square2`/`square4`
+    /// launches (`chains` = available fused chain lengths, e.g. `[4, 2]`).
+    pub fn chained(power: u64, chains: &[u32]) -> Plan {
+        binary::chained_plan(power, chains)
+    }
+
+    /// Extension: power-tree addition chain (≤ binary multiply count).
+    pub fn addition_chain(power: u64) -> Plan {
+        chain::addition_chain_plan(power)
+    }
+
+    /// Number of kernel launches (the paper's headline cost).
+    pub fn launches(&self) -> usize {
+        self.steps.iter().filter(|s| s.is_launch()).count()
+    }
+
+    /// Number of matrix multiplies across all launches.
+    pub fn multiplies(&self) -> usize {
+        self.steps.iter().map(|s| s.multiplies()).sum()
+    }
+
+    /// Validate internal consistency (register bounds, result written).
+    pub fn validate(&self) -> Result<()> {
+        if self.power == 0 {
+            return Err(MatexpError::Plan("power must be >= 1".into()));
+        }
+        if self.result >= self.n_regs {
+            return Err(MatexpError::Plan(format!(
+                "result register {} out of bounds ({} regs)",
+                self.result, self.n_regs
+            )));
+        }
+        let mut written = vec![false; self.n_regs];
+        written[0] = true; // input
+        for (idx, step) in self.steps.iter().enumerate() {
+            for r in step.reads() {
+                if r >= self.n_regs {
+                    return Err(MatexpError::Plan(format!("step {idx}: read of bad reg {r}")));
+                }
+                if !written[r] {
+                    return Err(MatexpError::Plan(format!(
+                        "step {idx}: {step:?} reads uninitialized reg {r}"
+                    )));
+                }
+            }
+            for w in step.writes() {
+                if w >= self.n_regs {
+                    return Err(MatexpError::Plan(format!("step {idx}: write to bad reg {w}")));
+                }
+                written[w] = true;
+            }
+        }
+        if !written[self.result] {
+            return Err(MatexpError::Plan("result register never written".into()));
+        }
+        Ok(())
+    }
+
+    /// Replay the plan over any multiplicative type: `mul(x, y) = x·y`.
+    ///
+    /// This single evaluator serves the CPU substrate (`T = Matrix`), the
+    /// proptest oracle (`T = u64` modular scalars) and the simulator.
+    pub fn eval<T: Clone, F: FnMut(&T, &T) -> T>(&self, input: T, mut mul: F) -> Result<T> {
+        self.validate()?;
+        let mut regs: Vec<Option<T>> = vec![None; self.n_regs];
+        regs[0] = Some(input);
+        for step in &self.steps {
+            match *step {
+                Step::Copy { dst, src } => {
+                    let v = regs[src].clone();
+                    regs[dst] = v;
+                }
+                Step::Mul { dst, lhs, rhs } => {
+                    let v = mul(
+                        regs[lhs].as_ref().expect("validated"),
+                        regs[rhs].as_ref().expect("validated"),
+                    );
+                    regs[dst] = Some(v);
+                }
+                Step::SqMul { acc, base } => {
+                    let new_acc = mul(
+                        regs[acc].as_ref().expect("validated"),
+                        regs[base].as_ref().expect("validated"),
+                    );
+                    let new_base = {
+                        let b = regs[base].as_ref().expect("validated");
+                        mul(b, b)
+                    };
+                    regs[acc] = Some(new_acc);
+                    regs[base] = Some(new_base);
+                }
+                Step::SquareChain { reg, k } => {
+                    for _ in 0..k {
+                        let b = regs[reg].as_ref().expect("validated");
+                        let sq = mul(b, b);
+                        regs[reg] = Some(sq);
+                    }
+                }
+            }
+        }
+        regs[self.result]
+            .take()
+            .ok_or_else(|| MatexpError::Plan("result register empty".into()))
+    }
+
+    /// Replay over modular scalars — cheap ground truth for any power.
+    pub fn eval_mod(&self, base: u64, modulus: u64) -> Result<u64> {
+        self.eval(base % modulus, |x, y| (x * y) % modulus)
+    }
+}
+
+/// `base^power mod modulus` by an independent method (binary on scalars) —
+/// the oracle plans are checked against.
+pub fn mod_pow(mut base: u64, mut power: u64, modulus: u64) -> u64 {
+    let mut acc = 1u64 % modulus;
+    base %= modulus;
+    while power > 0 {
+        if power & 1 == 1 {
+            acc = acc * base % modulus;
+        }
+        base = base * base % modulus;
+        power >>= 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: u64 = 1_000_003; // prime, small enough that products fit u64
+
+    fn check_all_kinds(power: u64) {
+        let want = mod_pow(3, power, M);
+        for plan in [
+            Plan::naive(power),
+            Plan::binary(power, false),
+            Plan::binary(power, true),
+            Plan::chained(power, &[4, 2]),
+            Plan::addition_chain(power),
+        ] {
+            plan.validate().unwrap();
+            assert_eq!(
+                plan.eval_mod(3, M).unwrap(),
+                want,
+                "kind={:?} power={power}",
+                plan.kind
+            );
+        }
+    }
+
+    #[test]
+    fn all_planners_correct_small() {
+        for p in 1..=64 {
+            check_all_kinds(p);
+        }
+    }
+
+    #[test]
+    fn all_planners_correct_paper_powers() {
+        for p in [64, 100, 127, 128, 255, 256, 511, 512, 777, 1023, 1024] {
+            check_all_kinds(p);
+        }
+    }
+
+    #[test]
+    fn binary_multiplies_formula() {
+        for p in 1u64..=1024 {
+            let plan = Plan::binary(p, false);
+            let expected = (63 - p.leading_zeros()) as usize + p.count_ones() as usize - 1;
+            assert_eq!(plan.multiplies(), expected, "p={p}");
+        }
+    }
+
+    #[test]
+    fn naive_multiplies_is_power_minus_one() {
+        for p in [1u64, 2, 5, 64, 513] {
+            assert_eq!(Plan::naive(p).multiplies(), (p - 1) as usize);
+        }
+    }
+
+    #[test]
+    fn fused_binary_never_more_launches() {
+        for p in 1u64..=1024 {
+            assert!(
+                Plan::binary(p, true).launches() <= Plan::binary(p, false).launches(),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn chained_never_more_launches_than_binary() {
+        for p in 1u64..=1024 {
+            assert!(
+                Plan::chained(p, &[4, 2]).launches() <= Plan::binary(p, false).launches(),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn addition_chain_never_more_multiplies_than_binary() {
+        for p in 1u64..=1024 {
+            assert!(
+                Plan::addition_chain(p).multiplies() <= Plan::binary(p, false).multiplies(),
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn power_of_two_binary_is_pure_squarings() {
+        for k in 0..=10 {
+            let p = 1u64 << k;
+            let plan = Plan::binary(p, false);
+            assert_eq!(plan.multiplies(), k as usize, "p={p}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_register() {
+        let plan = Plan {
+            power: 2,
+            kind: PlanKind::Binary,
+            steps: vec![Step::Mul { dst: 1, lhs: 0, rhs: 5 }],
+            n_regs: 2,
+            result: 1,
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_uninitialized_read() {
+        let plan = Plan {
+            power: 2,
+            kind: PlanKind::Binary,
+            steps: vec![Step::Mul { dst: 1, lhs: 2, rhs: 0 }],
+            n_regs: 3,
+            result: 1,
+        };
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn mod_pow_matches_u128_naive() {
+        for p in 0..50u64 {
+            let want = (0..p).fold(1u128, |acc, _| acc * 7 % M as u128) as u64;
+            assert_eq!(mod_pow(7, p, M), want);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Paper §4.2: the naive GPU schedule — "Call the GPU kernel N times from
+//! the host code". `N - 1` launches, each multiplying the accumulator by
+//! the original matrix.
+
+use crate::plan::{Plan, PlanKind, Step};
+
+/// Registers: 0 = input `A` (never overwritten), 1 = accumulator.
+pub fn naive_plan(power: u64) -> Plan {
+    assert!(power >= 1, "power must be >= 1");
+    let mut steps = Vec::with_capacity(power as usize);
+    steps.push(Step::Copy { dst: 1, src: 0 });
+    for _ in 1..power {
+        steps.push(Step::Mul { dst: 1, lhs: 1, rhs: 0 });
+    }
+    Plan {
+        power,
+        kind: PlanKind::Naive,
+        steps,
+        n_regs: 2,
+        result: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::mod_pow;
+
+    #[test]
+    fn launches_equal_power_minus_one() {
+        for p in [1u64, 2, 10, 64, 1024] {
+            let plan = naive_plan(p);
+            assert_eq!(plan.launches(), (p - 1) as usize);
+            assert_eq!(plan.multiplies(), (p - 1) as usize);
+        }
+    }
+
+    #[test]
+    fn evaluates_correctly() {
+        let m = 999_983u64;
+        for p in 1..200u64 {
+            assert_eq!(naive_plan(p).eval_mod(5, m).unwrap(), mod_pow(5, p, m));
+        }
+    }
+
+    #[test]
+    fn input_register_preserved() {
+        // every Mul reads reg 0 as rhs, so reg 0 must never be written
+        let plan = naive_plan(50);
+        for s in &plan.steps {
+            assert!(!s.writes().contains(&0), "{s:?} clobbers the input");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn power_zero_panics() {
+        naive_plan(0);
+    }
+}

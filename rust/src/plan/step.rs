@@ -1,0 +1,102 @@
+//! Plan steps: the launch vocabulary the runtime engine understands.
+//!
+//! Each launch-step maps 1:1 onto an AOT executable (`matmul`, `sqmul`,
+//! `square2`, `square4`); `Copy` is host-side buffer aliasing and costs
+//! nothing on the device.
+
+/// One step of a [`crate::plan::Plan`], over register indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// `regs[dst] = regs[src]` — host-side aliasing, zero launches.
+    Copy { dst: usize, src: usize },
+    /// `regs[dst] = regs[lhs] · regs[rhs]` — one `matmul` (or `square`
+    /// when `lhs == rhs`) launch.
+    Mul { dst: usize, lhs: usize, rhs: usize },
+    /// Fused binary-exponentiation step: `regs[acc] · regs[base]` and
+    /// `regs[base]²` in ONE `sqmul` launch (two multiplies).
+    SqMul { acc: usize, base: usize },
+    /// `regs[reg] = regs[reg]^(2^k)` in one `square{k}` launch
+    /// (`k` multiplies); the engine requires a matching artifact.
+    SquareChain { reg: usize, k: u32 },
+}
+
+impl Step {
+    /// Does this step cost a kernel launch?
+    pub fn is_launch(&self) -> bool {
+        !matches!(self, Step::Copy { .. })
+    }
+
+    /// Matrix multiplies performed by this step.
+    pub fn multiplies(&self) -> usize {
+        match self {
+            Step::Copy { .. } => 0,
+            Step::Mul { .. } => 1,
+            Step::SqMul { .. } => 2,
+            Step::SquareChain { k, .. } => *k as usize,
+        }
+    }
+
+    /// Registers read by this step.
+    pub fn reads(&self) -> Vec<usize> {
+        match *self {
+            Step::Copy { src, .. } => vec![src],
+            Step::Mul { lhs, rhs, .. } => vec![lhs, rhs],
+            Step::SqMul { acc, base } => vec![acc, base],
+            Step::SquareChain { reg, .. } => vec![reg],
+        }
+    }
+
+    /// Registers written by this step.
+    pub fn writes(&self) -> Vec<usize> {
+        match *self {
+            Step::Copy { dst, .. } => vec![dst],
+            Step::Mul { dst, .. } => vec![dst],
+            Step::SqMul { acc, base } => vec![acc, base],
+            Step::SquareChain { reg, .. } => vec![reg],
+        }
+    }
+
+    /// Artifact op name this step needs (`None` for host-side steps).
+    pub fn op_name(&self) -> Option<String> {
+        match self {
+            Step::Copy { .. } => None,
+            Step::Mul { lhs, rhs, .. } if lhs == rhs => Some("square".into()),
+            Step::Mul { .. } => Some("matmul".into()),
+            Step::SqMul { .. } => Some("sqmul".into()),
+            Step::SquareChain { k, .. } => Some(format!("square{k}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_and_multiply_accounting() {
+        assert!(!Step::Copy { dst: 1, src: 0 }.is_launch());
+        assert_eq!(Step::Copy { dst: 1, src: 0 }.multiplies(), 0);
+        assert_eq!(Step::Mul { dst: 1, lhs: 0, rhs: 0 }.multiplies(), 1);
+        assert_eq!(Step::SqMul { acc: 1, base: 0 }.multiplies(), 2);
+        assert_eq!(Step::SquareChain { reg: 0, k: 4 }.multiplies(), 4);
+    }
+
+    #[test]
+    fn op_names() {
+        assert_eq!(Step::Mul { dst: 1, lhs: 0, rhs: 0 }.op_name().unwrap(), "square");
+        assert_eq!(Step::Mul { dst: 1, lhs: 1, rhs: 0 }.op_name().unwrap(), "matmul");
+        assert_eq!(Step::SqMul { acc: 1, base: 0 }.op_name().unwrap(), "sqmul");
+        assert_eq!(Step::SquareChain { reg: 0, k: 2 }.op_name().unwrap(), "square2");
+        assert!(Step::Copy { dst: 1, src: 0 }.op_name().is_none());
+    }
+
+    #[test]
+    fn reads_writes_cover_all_variants() {
+        let s = Step::SqMul { acc: 3, base: 5 };
+        assert_eq!(s.reads(), vec![3, 5]);
+        assert_eq!(s.writes(), vec![3, 5]);
+        let c = Step::Copy { dst: 2, src: 0 };
+        assert_eq!(c.reads(), vec![0]);
+        assert_eq!(c.writes(), vec![2]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Artifact manifest: discovery and lookup of the AOT-compiled executables.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! `*.hlo.txt` it lowered; this module is the rust-side reader and index.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{MatexpError, Result};
+use crate::runtime::Variant;
+use crate::util::json::Json;
+
+/// Manifest schema version this build understands.
+pub const SUPPORTED_MANIFEST_VERSION: u64 = 2;
+
+/// One artifact as recorded by aot.py.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub op: String,
+    pub n: usize,
+    pub dtype: String,
+    pub variant: String,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    pub file: String,
+    pub blocks: Option<Vec<usize>>,
+    pub tile: Option<String>,
+    pub vmem_bytes: Option<u64>,
+    pub mxu_utilization: Option<f64>,
+    pub sha256: String,
+    pub hlo_chars: u64,
+}
+
+fn field<'a>(v: &'a Json, name: &str) -> Result<&'a Json> {
+    v.get(name).ok_or_else(|| {
+        MatexpError::Artifact(format!("manifest entry missing field {name:?}"))
+    })
+}
+
+fn str_field(v: &Json, name: &str) -> Result<String> {
+    field(v, name)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| MatexpError::Artifact(format!("manifest field {name:?} not a string")))
+}
+
+fn usize_field(v: &Json, name: &str) -> Result<usize> {
+    field(v, name)?
+        .as_usize()
+        .ok_or_else(|| MatexpError::Artifact(format!("manifest field {name:?} not an integer")))
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<ArtifactEntry> {
+        Ok(ArtifactEntry {
+            name: str_field(v, "name")?,
+            op: str_field(v, "op")?,
+            n: usize_field(v, "n")?,
+            dtype: str_field(v, "dtype")?,
+            variant: str_field(v, "variant")?,
+            num_inputs: usize_field(v, "num_inputs")?,
+            num_outputs: usize_field(v, "num_outputs")?,
+            file: str_field(v, "file")?,
+            blocks: v.get("blocks").and_then(Json::as_usize_vec),
+            tile: v.get("tile").and_then(|t| t.as_str().map(str::to_string)),
+            vmem_bytes: v.get("vmem_bytes").and_then(Json::as_u64),
+            mxu_utilization: v.get("mxu_utilization").and_then(Json::as_f64),
+            sha256: v
+                .get("sha256")
+                .and_then(|s| s.as_str().map(str::to_string))
+                .unwrap_or_default(),
+            hlo_chars: v.get("hlo_chars").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// Indexed view over the artifact directory.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+    /// (op, n, dtype, variant) → index of the *untiled* (default) entry.
+    by_key: HashMap<(String, usize, String, String), usize>,
+}
+
+impl ArtifactRegistry {
+    /// Read and index `dir/manifest.json`.
+    pub fn discover(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            MatexpError::Artifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let version = doc.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != SUPPORTED_MANIFEST_VERSION {
+            return Err(MatexpError::Artifact(format!(
+                "manifest version {version} unsupported (want {SUPPORTED_MANIFEST_VERSION}); re-run `make artifacts`"
+            )));
+        }
+        let entries: Vec<ArtifactEntry> = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<_>>()?;
+        let mut by_key = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if e.tile.is_none() {
+                by_key.insert(
+                    (e.op.clone(), e.n, e.dtype.clone(), e.variant.clone()),
+                    i,
+                );
+            }
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries, by_key })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Default (untiled) artifact for `(op, n, f32, variant)`.
+    pub fn find(&self, op: &str, n: usize, variant: Variant) -> Result<&ArtifactEntry> {
+        self.find_dtype(op, n, "f32", variant)
+    }
+
+    pub fn find_dtype(
+        &self,
+        op: &str,
+        n: usize,
+        dtype: &str,
+        variant: Variant,
+    ) -> Result<&ArtifactEntry> {
+        self.by_key
+            .get(&(op.to_string(), n, dtype.to_string(), variant.as_str().to_string()))
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| {
+                MatexpError::Artifact(format!(
+                    "no artifact for op={op} n={n} dtype={dtype} variant={variant}"
+                ))
+            })
+    }
+
+    /// All tile-sweep entries for `(op, n)` (ablation A1).
+    pub fn tiles(&self, op: &str, n: usize) -> Vec<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.n == n && e.tile.is_some())
+            .collect()
+    }
+
+    /// Matrix sizes with a complete core op set for `variant`.
+    pub fn sizes(&self, variant: Variant) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.op == "matmul" && e.variant == variant.as_str() && e.dtype == "f32" && e.tile.is_none())
+            .map(|e| e.n)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Powers with a fused whole-exponentiation artifact at size `n`.
+    pub fn fused_expm_powers(&self, n: usize) -> Vec<u64> {
+        let mut powers: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|e| e.n == n && e.op.starts_with("expm"))
+            .filter_map(|e| e.op[4..].parse().ok())
+            .collect();
+        powers.sort_unstable();
+        powers
+    }
+
+    /// Absolute path of an entry's HLO text.
+    pub fn path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "entries": [
+        {"name": "matmul_n8_f32_xla", "op": "matmul", "n": 8, "dtype": "f32",
+         "variant": "xla", "num_inputs": 2, "num_outputs": 1,
+         "file": "matmul_n8_f32_xla.hlo.txt"},
+        {"name": "matmul_n8_f32_pallas_t4", "op": "matmul", "n": 8, "dtype": "f32",
+         "variant": "pallas", "num_inputs": 2, "num_outputs": 1,
+         "file": "matmul_n8_f32_pallas_t4.hlo.txt", "tile": "t4", "blocks": [4,4,4]},
+        {"name": "expm64_n8_f32_xla", "op": "expm64", "n": 8, "dtype": "f32",
+         "variant": "xla", "num_inputs": 1, "num_outputs": 1,
+         "file": "expm64_n8_f32_xla.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn discover_and_find() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), SAMPLE);
+        let reg = ArtifactRegistry::discover(dir.path()).unwrap();
+        assert_eq!(reg.entries().len(), 3);
+        let e = reg.find("matmul", 8, Variant::Xla).unwrap();
+        assert_eq!(e.file, "matmul_n8_f32_xla.hlo.txt");
+        assert!(reg.find("matmul", 16, Variant::Xla).is_err());
+        // tiled entries are not returned by `find`
+        assert!(reg.find("matmul", 8, Variant::Pallas).is_err());
+        assert_eq!(reg.tiles("matmul", 8).len(), 1);
+        assert_eq!(reg.tiles("matmul", 8)[0].blocks, Some(vec![4, 4, 4]));
+        assert_eq!(reg.fused_expm_powers(8), vec![64]);
+        assert_eq!(reg.sizes(Variant::Xla), vec![8]);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = TempDir::new().unwrap();
+        let err = ArtifactRegistry::discover(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(dir.path(), r#"{"version": 99, "entries": []}"#);
+        assert!(ArtifactRegistry::discover(dir.path()).is_err());
+    }
+
+    #[test]
+    fn malformed_entry_rejected() {
+        let dir = TempDir::new().unwrap();
+        write_manifest(
+            dir.path(),
+            r#"{"version": 2, "entries": [{"name": "x", "op": "matmul"}]}"#,
+        );
+        let err = ArtifactRegistry::discover(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("missing field"), "{err}");
+    }
+
+    #[test]
+    fn shipped_manifest_loads_if_present() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let reg = ArtifactRegistry::discover(&dir).unwrap();
+        // paper sizes present in both variants
+        for n in [64usize, 128, 256, 512] {
+            for op in ["matmul", "square", "sqmul", "square2", "square4"] {
+                reg.find(op, n, Variant::Xla).unwrap();
+                reg.find(op, n, Variant::Pallas).unwrap();
+            }
+        }
+        assert!(!reg.tiles("matmul", 256).is_empty());
+        assert_eq!(reg.fused_expm_powers(64), vec![64, 128, 256, 512, 1024]);
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT client construction — the "find available target devices" step of
+//! the OpenCL host flow (paper §3.2), reduced to the CPU plugin we have.
+
+use crate::error::Result;
+
+/// Create the PJRT CPU client.
+///
+/// On a real TPU/GPU deployment this is the only line that changes
+/// (`PjRtClient::tpu(..)` / `::gpu(..)`); everything downstream works on
+/// `PjRtBuffer`s and compiled executables and is device-agnostic.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Human-readable platform summary (for `matexp info`).
+pub fn platform_summary(client: &xla::PjRtClient) -> String {
+    format!(
+        "{} ({} devices, version {})",
+        client.platform_name(),
+        client.device_count(),
+        client.platform_version()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let client = cpu_client().unwrap();
+        assert!(client.device_count() >= 1);
+        assert_eq!(client.platform_name(), "cpu");
+        let s = platform_summary(&client);
+        assert!(s.contains("cpu"), "{s}");
+    }
+}

@@ -1,0 +1,467 @@
+//! The execution engine: compiled-executable cache + plan executors.
+//!
+//! Three execution disciplines, mirroring the paper's comparison:
+//!
+//! * [`Engine::expm_naive_roundtrip`] — §4.2 "Naïve GPU": one launch per
+//!   multiply with a full host round-trip per launch.
+//! * [`Engine::expm`] — §4.3 "Our Approach": replay a [`Plan`] keeping all
+//!   intermediates as device-resident `PjRtBuffer`s; the matrix crosses the
+//!   host↔device boundary exactly twice.
+//! * [`Engine::expm_packed`] — our §4.3.8 limit case: the `[acc, base]`
+//!   state is packed into one `(2, n, n)` buffer and every exponent bit is
+//!   ONE single-output launch (`step_mul`/`step_sq`), so even the fused
+//!   square+multiply pair never touches the host.
+//!
+//! Plus [`Engine::expm_fused_artifact`] (whole `A^N` as a single launch via
+//! the `expm{N}` artifacts) and [`Engine::run_matmul_entry`] (tile-sweep
+//! ablation).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::plan::{Plan, Step};
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::literal::{download, literal_to_matrix, matrix_to_literal, upload};
+use crate::runtime::{client, Variant};
+
+/// Execution statistics — the quantities Tables 2–5 are about.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExecStats {
+    /// Kernel launches (device dispatches).
+    pub launches: usize,
+    /// Matrix multiplies performed.
+    pub multiplies: usize,
+    /// Host→device matrix transfers.
+    pub h2d_transfers: usize,
+    /// Device→host matrix transfers.
+    pub d2h_transfers: usize,
+    /// Wall-clock seconds for the whole operation.
+    pub wall_s: f64,
+}
+
+impl ExecStats {
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.launches += other.launches;
+        self.multiplies += other.multiplies;
+        self.h2d_transfers += other.h2d_transfers;
+        self.d2h_transfers += other.d2h_transfers;
+        self.wall_s += other.wall_s;
+    }
+}
+
+struct ArtifactInfo {
+    path: std::path::PathBuf,
+    /// Recorded for diagnostics; PJRT output unwrapping is shape-driven.
+    #[allow(dead_code)]
+    num_outputs: usize,
+}
+
+/// Executable cache + plan executors over one PJRT client.
+///
+/// `Engine` is deliberately `!Send`: PJRT objects live on the thread that
+/// created them. The coordinator gives each worker thread its own engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    variant: Variant,
+    /// (op, n) → artifact info for this engine's variant (xla fallback for
+    /// ops only lowered in the xla variant, e.g. `expm{N}`).
+    info: HashMap<(String, usize), ArtifactInfo>,
+    /// Lazily compiled executables.
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Build an engine from a discovered registry. Executables compile
+    /// lazily on first use and are cached for the engine's lifetime.
+    pub fn new(registry: &ArtifactRegistry, variant: Variant) -> Result<Engine> {
+        let client = client::cpu_client()?;
+        let mut info = HashMap::new();
+        // xla entries first (fallback), then requested variant overrides
+        for pass_variant in ["xla", variant.as_str()] {
+            for e in registry.entries() {
+                if e.variant == pass_variant && e.dtype == "f32" && e.tile.is_none() {
+                    info.insert(
+                        (e.op.clone(), e.n),
+                        ArtifactInfo { path: registry.path(e), num_outputs: e.num_outputs },
+                    );
+                }
+            }
+        }
+        Ok(Engine { client, variant, info, exes: HashMap::new() })
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn platform(&self) -> String {
+        client::platform_summary(&self.client)
+    }
+
+    /// Compile (or fetch from cache) the executable for `(op, n)`.
+    fn exe(&mut self, op: &str, n: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (op.to_string(), n);
+        if !self.exes.contains_key(&key) {
+            let info = self.info.get(&key).ok_or_else(|| {
+                MatexpError::Artifact(format!(
+                    "no artifact for op={op} n={n} (variant {}); run `make artifacts`",
+                    self.variant
+                ))
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(
+                info.path.to_str().ok_or_else(|| MatexpError::Artifact("non-utf8 path".into()))?,
+            )?;
+            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(&self.exes[&key])
+    }
+
+    /// Pre-compile every op the binary/packed/naive paths need at size `n`
+    /// (keeps compile time out of benchmarked regions).
+    pub fn warmup(&mut self, n: usize) -> Result<()> {
+        for op in ["matmul", "square", "pack2", "step_mul", "step_sq", "unpack0"] {
+            self.exe(op, n)?;
+        }
+        // optional ops — ignore if the artifact set lacks them
+        for op in ["sqmul", "square2", "square4"] {
+            let _ = self.exe(op, n);
+        }
+        Ok(())
+    }
+
+    /// Compile AND execute every core op once at size `n`. XLA's CPU
+    /// runtime finishes thunk initialization on the first execution, which
+    /// costs ~4 ms per executable — two orders of magnitude above a warm
+    /// n=64 launch. Call this before any timed region (the experiment
+    /// harness and ablations do).
+    pub fn warmup_exec(&mut self, n: usize) -> Result<()> {
+        self.warmup(n)?;
+        let id = Matrix::identity(n);
+        // binary fused 11 = Init, SqMul, Sq, MulAcc → square/sqmul/matmul
+        self.expm(&id, &Plan::binary(11, true))?;
+        // chained 64 = square4 + square2
+        let _ = self.expm(&id, &Plan::chained(64, &[4, 2]));
+        // packed 5 = pack2, step_sq, step_mul, unpack0
+        self.expm_packed(&id, 5)?;
+        Ok(())
+    }
+
+    /// One launch over device buffers returning the single output buffer.
+    fn launch_b(
+        &mut self,
+        op: &str,
+        n: usize,
+        inputs: &[Rc<xla::PjRtBuffer>],
+        stats: &mut ExecStats,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.exe(op, n)?;
+        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(inputs)?;
+        stats.launches += 1;
+        let mut row = out.pop().ok_or_else(|| MatexpError::Xla("no output".into()))?;
+        row.pop().ok_or_else(|| MatexpError::Xla("empty output row".into()))
+    }
+
+    /// `a · b` through the AOT matmul executable (one launch).
+    pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> Result<(Matrix, ExecStats)> {
+        let n = a.n();
+        if b.n() != n {
+            return Err(MatexpError::Linalg("matmul size mismatch".into()));
+        }
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let ba = Rc::new(upload(&self.client, a)?);
+        let bb = Rc::new(upload(&self.client, b)?);
+        stats.h2d_transfers += 2;
+        let out = self.launch_b("matmul", n, &[ba, bb], &mut stats)?;
+        stats.multiplies += 1;
+        let m = download(&out, n)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((m, stats))
+    }
+
+    /// §4.2 Naïve GPU: `power − 1` launches, full host round-trip each
+    /// (upload both operands, download the product, every single time).
+    pub fn expm_naive_roundtrip(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        if power == 0 {
+            return Err(MatexpError::Plan("power must be >= 1".into()));
+        }
+        let n = a.n();
+        self.exe("matmul", n)?; // compile outside the timed region
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let mut acc = a.clone();
+        for _ in 1..power {
+            let lit_acc = matrix_to_literal(&acc)?;
+            let lit_a = matrix_to_literal(a)?;
+            let exe = self.exe("matmul", n)?;
+            let mut out = exe.execute::<xla::Literal>(&[lit_acc, lit_a])?;
+            stats.launches += 1;
+            stats.multiplies += 1;
+            stats.h2d_transfers += 2;
+            let buf = out
+                .pop()
+                .and_then(|mut row| row.pop())
+                .ok_or_else(|| MatexpError::Xla("no output".into()))?;
+            acc = literal_to_matrix(&buf.to_literal_sync()?, n)?;
+            stats.d2h_transfers += 1;
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((acc, stats))
+    }
+
+    /// §4.3 Our Approach: replay `plan` with device-resident buffers.
+    /// The input crosses host→device once; the result device→host once.
+    pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        plan.validate()?;
+        let n = a.n();
+        // compile everything the plan needs before the timed region
+        for step in &plan.steps {
+            if let Some(op) = step.op_name() {
+                self.exe(&op, n)?;
+            }
+        }
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let mut regs: Vec<Option<Rc<xla::PjRtBuffer>>> = vec![None; plan.n_regs];
+        regs[0] = Some(Rc::new(upload(&self.client, a)?));
+        stats.h2d_transfers += 1;
+        for step in &plan.steps {
+            match *step {
+                Step::Copy { dst, src } => {
+                    regs[dst] = regs[src].clone();
+                }
+                Step::Mul { dst, lhs, rhs } => {
+                    let out = if lhs == rhs {
+                        let x = regs[lhs].clone().expect("validated");
+                        self.launch_b("square", n, &[x], &mut stats)?
+                    } else {
+                        let x = regs[lhs].clone().expect("validated");
+                        let y = regs[rhs].clone().expect("validated");
+                        self.launch_b("matmul", n, &[x, y], &mut stats)?
+                    };
+                    stats.multiplies += 1;
+                    regs[dst] = Some(Rc::new(out));
+                }
+                Step::SquareChain { reg, k } => {
+                    let x = regs[reg].clone().expect("validated");
+                    let out = self.launch_b(&format!("square{k}"), n, &[x], &mut stats)?;
+                    stats.multiplies += k as usize;
+                    regs[reg] = Some(Rc::new(out));
+                }
+                Step::SqMul { acc, base } => {
+                    // the 2-tuple sqmul artifact: PJRT hands back ONE
+                    // tuple buffer, so splitting costs a host round-trip —
+                    // measured honestly (this is ablation A2's "bad" arm;
+                    // the packed path below is the good one).
+                    let x = regs[acc].clone().expect("validated");
+                    let y = regs[base].clone().expect("validated");
+                    let tuple_buf = self.launch_b("sqmul", n, &[x, y], &mut stats)?;
+                    stats.multiplies += 2;
+                    let parts = tuple_buf.to_literal_sync()?.to_tuple()?;
+                    stats.d2h_transfers += 2;
+                    if parts.len() != 2 {
+                        return Err(MatexpError::Xla(format!(
+                            "sqmul returned {}-tuple",
+                            parts.len()
+                        )));
+                    }
+                    let mut it = parts.into_iter();
+                    let new_acc = literal_to_matrix(&it.next().unwrap(), n)?;
+                    let new_base = literal_to_matrix(&it.next().unwrap(), n)?;
+                    regs[acc] = Some(Rc::new(upload(&self.client, &new_acc)?));
+                    regs[base] = Some(Rc::new(upload(&self.client, &new_base)?));
+                    stats.h2d_transfers += 2;
+                }
+            }
+        }
+        let out_buf = regs[plan.result].clone().expect("validated: result written");
+        let result = download(&out_buf, n)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((result, stats))
+    }
+
+    /// Ablation A2's counterfactual: replay `plan` (same launch schedule as
+    /// [`Engine::expm`]) but with a FULL host round-trip per launch — every
+    /// operand re-uploaded, every result downloaded. Isolates the paper's
+    /// §4.3.8 claim ("data is offloaded only log(N) times") from the
+    /// log-vs-linear launch-count effect.
+    pub fn expm_plan_roundtrip(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        plan.validate()?;
+        let n = a.n();
+        for step in &plan.steps {
+            if let Some(op) = step.op_name() {
+                if op.starts_with("square") && op != "square" {
+                    // square{k} chains: execute as k singles on this path
+                    self.exe("square", n)?;
+                } else if op == "sqmul" {
+                    self.exe("matmul", n)?;
+                    self.exe("square", n)?;
+                } else {
+                    self.exe(&op, n)?;
+                }
+            }
+        }
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let mut regs: Vec<Option<Matrix>> = vec![None; plan.n_regs];
+        regs[0] = Some(a.clone());
+        // one launch with per-launch transfers; `ops` follow Step semantics
+        let launch = |engine: &mut Engine,
+                          op: &str,
+                          inputs: &[&Matrix],
+                          stats: &mut ExecStats|
+         -> Result<Matrix> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|m| matrix_to_literal(m))
+                .collect::<Result<_>>()?;
+            stats.h2d_transfers += inputs.len();
+            let exe = engine.exe(op, n)?;
+            let mut out = exe.execute::<xla::Literal>(&lits)?;
+            stats.launches += 1;
+            stats.multiplies += 1;
+            let buf = out
+                .pop()
+                .and_then(|mut row| row.pop())
+                .ok_or_else(|| MatexpError::Xla("no output".into()))?;
+            let m = literal_to_matrix(&buf.to_literal_sync()?, n)?;
+            stats.d2h_transfers += 1;
+            Ok(m)
+        };
+        for step in &plan.steps {
+            match *step {
+                Step::Copy { dst, src } => regs[dst] = regs[src].clone(),
+                Step::Mul { dst, lhs, rhs } => {
+                    let out = if lhs == rhs {
+                        let x = regs[lhs].clone().expect("validated");
+                        launch(self, "square", &[&x], &mut stats)?
+                    } else {
+                        let x = regs[lhs].clone().expect("validated");
+                        let y = regs[rhs].clone().expect("validated");
+                        launch(self, "matmul", &[&x, &y], &mut stats)?
+                    };
+                    regs[dst] = Some(out);
+                }
+                Step::SqMul { acc, base } => {
+                    let a0 = regs[acc].clone().expect("validated");
+                    let b0 = regs[base].clone().expect("validated");
+                    regs[acc] = Some(launch(self, "matmul", &[&a0, &b0], &mut stats)?);
+                    regs[base] = Some(launch(self, "square", &[&b0], &mut stats)?);
+                }
+                Step::SquareChain { reg, k } => {
+                    for _ in 0..k {
+                        let b = regs[reg].clone().expect("validated");
+                        regs[reg] = Some(launch(self, "square", &[&b], &mut stats)?);
+                    }
+                }
+            }
+        }
+        let result = regs[plan.result].take().expect("validated: result written");
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((result, stats))
+    }
+
+    /// Packed-state binary exponentiation: the `[acc, base]` pair lives in
+    /// one `(2, n, n)` device buffer; every exponent bit is one launch and
+    /// NOTHING round-trips until the final download.
+    pub fn expm_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        if power == 0 {
+            return Err(MatexpError::Plan("power must be >= 1".into()));
+        }
+        let n = a.n();
+        self.warmup(n)?;
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        if power == 1 {
+            stats.wall_s = t0.elapsed().as_secs_f64();
+            return Ok((a.clone(), stats));
+        }
+        let tz = power.trailing_zeros();
+        let mut base = Rc::new(upload(&self.client, a)?);
+        stats.h2d_transfers += 1;
+        for _ in 0..tz {
+            base = Rc::new(self.launch_b("square", n, &[base], &mut stats)?);
+            stats.multiplies += 1;
+        }
+        // pack consumes the lowest set bit: acc = base = A^(2^tz)
+        let mut state = Rc::new(self.launch_b("pack2", n, &[base], &mut stats)?);
+        let mut q = (power >> tz) >> 1;
+        while q > 0 {
+            let op = if q & 1 == 1 { "step_mul" } else { "step_sq" };
+            state = Rc::new(self.launch_b(op, n, &[state], &mut stats)?);
+            stats.multiplies += if q & 1 == 1 { 2 } else { 1 };
+            q >>= 1;
+        }
+        let acc = Rc::new(self.launch_b("unpack0", n, &[state], &mut stats)?);
+        let result = download(&acc, n)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((result, stats))
+    }
+
+    /// Whole `A^power` as one launch, if an `expm{power}` artifact exists.
+    pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        let n = a.n();
+        let op = format!("expm{power}");
+        self.exe(&op, n)?;
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let buf = Rc::new(upload(&self.client, a)?);
+        stats.h2d_transfers += 1;
+        let out = self.launch_b(&op, n, &[buf], &mut stats)?;
+        stats.multiplies += Plan::binary(power, false).multiplies();
+        let result = download(&out, n)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((result, stats))
+    }
+
+    /// Run an arbitrary 2-input matmul artifact by manifest name (the
+    /// tile-sweep ablation needs the tiled entries `find` hides).
+    pub fn run_matmul_entry(
+        &mut self,
+        registry: &ArtifactRegistry,
+        name: &str,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> Result<(Matrix, ExecStats)> {
+        let entry = registry
+            .entries()
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| MatexpError::Artifact(format!("no artifact named {name}")))?;
+        let key = (format!("entry:{name}"), entry.n);
+        if !self.exes.contains_key(&key) {
+            let path = registry.path(entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| MatexpError::Artifact("non-utf8 path".into()))?,
+            )?;
+            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            self.exes.insert(key.clone(), exe);
+        }
+        let n = entry.n;
+        let mut stats = ExecStats::default();
+        let t0 = Instant::now();
+        let ba = Rc::new(upload(&self.client, a)?);
+        let bb = Rc::new(upload(&self.client, b)?);
+        stats.h2d_transfers += 2;
+        let exe = &self.exes[&key];
+        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(&[ba, bb])?;
+        stats.launches += 1;
+        stats.multiplies += 1;
+        let buf = out
+            .pop()
+            .and_then(|mut row| row.pop())
+            .ok_or_else(|| MatexpError::Xla("no output".into()))?;
+        let m = download(&buf, n)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((m, stats))
+    }
+}

@@ -1,0 +1,66 @@
+//! `Matrix` ⇄ XLA `Literal` / `PjRtBuffer` conversions — the explicit
+//! host↔device memory management of the paper's §3.2.1, in rust.
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+
+/// Host matrix → host literal of shape `[n, n]`.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let n = m.n() as i64;
+    Ok(xla::Literal::vec1(m.data()).reshape(&[n, n])?)
+}
+
+/// Host literal of shape `[n, n]` → matrix.
+pub fn literal_to_matrix(lit: &xla::Literal, n: usize) -> Result<Matrix> {
+    let data = lit.to_vec::<f32>()?;
+    Matrix::from_vec(n, data).map_err(|_| {
+        MatexpError::Xla(format!(
+            "literal has {} elements, expected {}x{}",
+            lit.element_count(),
+            n,
+            n
+        ))
+    })
+}
+
+/// Host matrix → device buffer (one H2D transfer).
+pub fn upload(client: &xla::PjRtClient, m: &Matrix) -> Result<xla::PjRtBuffer> {
+    let n = m.n();
+    Ok(client.buffer_from_host_buffer(m.data(), &[n, n], None)?)
+}
+
+/// Device buffer → host matrix (one D2H transfer).
+pub fn download(buffer: &xla::PjRtBuffer, n: usize) -> Result<Matrix> {
+    let lit = buffer.to_literal_sync()?;
+    literal_to_matrix(&lit, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::client::cpu_client;
+
+    #[test]
+    fn literal_roundtrip() {
+        let m = Matrix::random(16, 5);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit, 16).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn literal_size_mismatch_rejected() {
+        let m = Matrix::random(4, 6);
+        let lit = matrix_to_literal(&m).unwrap();
+        assert!(literal_to_matrix(&lit, 8).is_err());
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        let client = cpu_client().unwrap();
+        let m = Matrix::random(32, 7);
+        let buf = upload(&client, &m).unwrap();
+        let back = download(&buf, 32).unwrap();
+        assert_eq!(m, back);
+    }
+}

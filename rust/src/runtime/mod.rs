@@ -1,0 +1,69 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once, execute
+//! them from the coordinator hot path with device-resident buffers.
+//!
+//! This is the rust mirror of the OpenCL host API the paper describes in
+//! §3.2 (find device → context → memory → compile → launch → query), with
+//! the compile step moved to build time (`make artifacts`).
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+pub mod literal;
+
+pub use artifacts::{ArtifactEntry, ArtifactRegistry};
+pub use engine::Engine;
+
+use crate::error::{MatexpError, Result};
+
+/// Which AOT kernel variant the engine executes (both are numerically
+/// pytest-verified against the same oracle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Plain `jnp.dot` lowering — the fast path on the CPU testbed.
+    Xla,
+    /// The Layer-1 tiled Pallas kernel (interpret-mode) — structural
+    /// fidelity to the paper's §4.3 OpenCL kernel.
+    Pallas,
+}
+
+impl Variant {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Variant::Xla => "xla",
+            Variant::Pallas => "pallas",
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "xla" => Ok(Variant::Xla),
+            "pallas" => Ok(Variant::Pallas),
+            other => Err(MatexpError::Config(format!("unknown variant {other:?}"))),
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in [Variant::Xla, Variant::Pallas] {
+            assert_eq!(Variant::from_str(v.as_str()).unwrap(), v);
+        }
+        assert!(Variant::from_str("cuda").is_err());
+        assert_eq!(Variant::from_str("XLA").unwrap(), Variant::Xla);
+    }
+}

@@ -1,0 +1,13 @@
+//! TCP front-end: newline-delimited JSON over a socket.
+//!
+//! The deployment face of the coordinator — what turns the paper's kernel
+//! study into a service ("supercomputer at every desk", §1). Wire format
+//! is deliberately simple: one JSON object per line, both directions.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::MatexpClient;
+pub use proto::{WireRequest, WireResponse, WireStats};
+pub use server::serve;

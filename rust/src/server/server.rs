@@ -1,0 +1,118 @@
+//! TCP server on std::net: a connection-handler thread pool in front of
+//! the coordinator. PJRT work happens on the coordinator's worker threads;
+//! connection threads only parse lines and block on `submit`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::service::ServiceHandle;
+use crate::error::Result;
+use crate::server::proto::{Payload, WireRequest, WireResponse};
+use crate::util::threadpool::ThreadPool;
+
+/// A running server: bound address + accept-loop thread.
+pub struct Server {
+    local_addr: SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until the accept loop exits (it runs until the process dies,
+    /// so this is effectively "serve forever").
+    pub fn join(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind `addr` and serve connections in the background; returns
+/// immediately with the bound address (tests bind port 0).
+///
+/// `conn_threads` bounds concurrent connections; requests beyond that
+/// queue at accept. Each connection is handled synchronously —
+/// line in, line out.
+pub fn serve_background(
+    service: Arc<ServiceHandle>,
+    addr: &str,
+    conn_threads: usize,
+) -> Result<Server> {
+    let listener = TcpListener::bind(addr)?;
+    let local_addr = listener.local_addr()?;
+    let pool = ThreadPool::new(conn_threads, "matexp-conn");
+    let accept_thread = std::thread::Builder::new()
+        .name("matexp-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { return };
+                let service = Arc::clone(&service);
+                pool.execute(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "<unknown>".into());
+                    if let Err(e) = handle_connection(&service, stream) {
+                        eprintln!("connection {peer}: {e}");
+                    }
+                });
+            }
+        })?;
+    Ok(Server { local_addr, accept_thread: Some(accept_thread) })
+}
+
+/// Serve until the process is killed. Binds `addr`, prints the bound
+/// address, then blocks.
+pub fn serve(service: Arc<ServiceHandle>, addr: &str, conn_threads: usize) -> Result<()> {
+    let server = serve_background(service, addr, conn_threads)?;
+    println!("matexp serving on {}", server.local_addr());
+    server.join();
+    Ok(())
+}
+
+fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?; // line-oriented RPC: don't let Nagle batch replies
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match WireRequest::decode(&line) {
+            Ok(req) => dispatch(service, req),
+            Err(e) => WireResponse::error(format!("bad request: {e}")),
+        };
+        let mut out = response.encode().into_bytes();
+        out.push(b'\n');
+        writer.write_all(&out)?;
+    }
+    Ok(())
+}
+
+fn dispatch(service: &ServiceHandle, req: WireRequest) -> WireResponse {
+    match req {
+        WireRequest::Ping => WireResponse::pong(),
+        WireRequest::Metrics => WireResponse::Ok {
+            result: None,
+            stats: None,
+            metrics: Some(service.metrics().to_json()),
+            payload: Payload::Json,
+        },
+        WireRequest::Expm { power, method, payload, .. } => {
+            let matrix = match req.matrix() {
+                Ok(m) => m,
+                Err(e) => return WireResponse::error(e.to_string()),
+            };
+            match service.submit(matrix, power, method) {
+                // reply in the encoding the request used
+                Ok(resp) => WireResponse::from_expm(&resp, payload),
+                Err(e) => WireResponse::error(e.to_string()),
+            }
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Device specifications — Table 1 of the paper, as data.
+
+/// Static description of a compute device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Streaming multiprocessors ("Number of Processors" in Table 1).
+    pub processors: u32,
+    /// Total cores.
+    pub cores: u32,
+    pub cores_per_processor: u32,
+    /// Shader clock, MHz.
+    pub clock_mhz: u32,
+    /// Core (graphics) clock, MHz.
+    pub core_clock_mhz: u32,
+    /// Device memory bandwidth, GB/s.
+    pub bandwidth_gbs: f64,
+    pub bus_type: String,
+    /// Peak single-precision GFLOP/s as reported by the vendor/paper.
+    pub peak_gflops: f64,
+    /// Host↔device interconnect bandwidth, GB/s (PCIe 2.0 x16 for 2012).
+    pub pcie_gbs: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA Tesla C2050 — Table 1 verbatim (plus the PCIe 2.0 x16 link
+    /// the card shipped on, which Table 1 omits).
+    pub fn tesla_c2050() -> DeviceSpec {
+        DeviceSpec {
+            name: "NVIDIA Tesla C2050".into(),
+            processors: 14,
+            cores: 448,
+            cores_per_processor: 32,
+            clock_mhz: 1150,
+            core_clock_mhz: 575,
+            bandwidth_gbs: 144.0,
+            bus_type: "GDDR5".into(),
+            peak_gflops: 1288.0,
+            pcie_gbs: 8.0,
+        }
+    }
+
+    /// The paper's host: 16-core Intel Xeon @ 2.40 GHz, 8 GB RAM.
+    /// `peak_gflops` is a *single core's* scalar-ish throughput, because
+    /// the paper's CPU baseline is sequential (§4.1).
+    pub fn xeon_2012_single_core() -> DeviceSpec {
+        DeviceSpec {
+            name: "Intel Xeon 2.40GHz (1 core, sequential baseline)".into(),
+            processors: 1,
+            cores: 1,
+            cores_per_processor: 1,
+            clock_mhz: 2400,
+            core_clock_mhz: 2400,
+            bandwidth_gbs: 25.6,
+            bus_type: "DDR3".into(),
+            // ~1 flop/cycle sustained for an unblocked triple loop
+            peak_gflops: 2.4,
+            pcie_gbs: f64::INFINITY,
+        }
+    }
+
+    /// Render the spec as the paper's Table 1 rows.
+    pub fn table1_rows(&self) -> Vec<(String, String)> {
+        vec![
+            ("Model of GPU".into(), self.name.clone()),
+            ("Number of Processors".into(), self.processors.to_string()),
+            ("Number of cores".into(), self.cores.to_string()),
+            ("Number of cores per Processor".into(), self.cores_per_processor.to_string()),
+            ("Clock Frequency".into(), format!("{} (in MHz)", self.clock_mhz)),
+            ("Core clock Frequency".into(), format!("{} (in MHz)", self.core_clock_mhz)),
+            ("Bandwidth".into(), format!("{} (GBs/Sec)", self.bandwidth_gbs)),
+            ("Bus Type".into(), self.bus_type.clone()),
+            ("Processing Power max in GFLOPs".into(), format!("{}", self.peak_gflops)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c2050_matches_paper_table1() {
+        let d = DeviceSpec::tesla_c2050();
+        assert_eq!(d.processors, 14);
+        assert_eq!(d.cores, 448);
+        assert_eq!(d.cores_per_processor, 32);
+        assert_eq!(d.clock_mhz, 1150);
+        assert_eq!(d.core_clock_mhz, 575);
+        assert_eq!(d.bandwidth_gbs, 144.0);
+        assert_eq!(d.peak_gflops, 1288.0);
+        // internal consistency: cores = processors * cores_per_processor
+        assert_eq!(d.cores, d.processors * d.cores_per_processor);
+    }
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let rows = DeviceSpec::tesla_c2050().table1_rows();
+        assert_eq!(rows.len(), 9);
+        assert!(rows.iter().any(|(k, v)| k == "Bus Type" && v == "GDDR5"));
+    }
+
+    #[test]
+    fn xeon_baseline_is_single_core() {
+        let d = DeviceSpec::xeon_2012_single_core();
+        assert_eq!(d.cores, 1);
+        assert!(d.peak_gflops < 10.0, "sequential baseline, not the whole socket");
+    }
+}

@@ -1,0 +1,222 @@
+//! Per-launch GPU cost model and whole-plan time prediction.
+//!
+//! One kernel launch multiplying `n x n` matrices costs
+//!
+//! ```text
+//! t = overhead + transfer_bytes / pcie_bw + max(flops/eff_flops, bytes/mem_bw)
+//! ```
+//!
+//! The three free parameters (`overhead_s`, effective PCIe bandwidth,
+//! effective GFLOP/s) are calibrated against the paper's naive-GPU columns
+//! (see [`crate::simulator::calibrate`]); the roofline `max` keeps small
+//! matrices bandwidth/overhead bound and large ones compute bound, which
+//! is exactly the transition visible between Table 2 (n=64,
+//! overhead-dominated) and Table 5 (n=512, compute-dominated).
+
+use crate::plan::{Plan, PlanCost, Step};
+use crate::simulator::device::DeviceSpec;
+
+/// Calibrated analytic model for one device.
+#[derive(Clone, Debug)]
+pub struct GpuTimingModel {
+    pub device: DeviceSpec,
+    /// Fixed cost per kernel launch, seconds (driver + dispatch).
+    pub launch_overhead_s: f64,
+    /// Effective host↔device bandwidth, bytes/s.
+    pub eff_pcie_bytes_per_s: f64,
+    /// Effective sustained compute, FLOP/s.
+    pub eff_flops: f64,
+    /// Effective device-memory bandwidth, bytes/s.
+    pub eff_mem_bytes_per_s: f64,
+    /// Fixed cost per device-resident *invocation* (not per launch):
+    /// context/queue setup + final sync. The paper's "Our Approach" column
+    /// has a visible 10–20 ms floor (at n=64 it reports 10 ms for SIX
+    /// launches, twice its own naive per-launch cost) — a constant the
+    /// naive loop amortizes over N launches but a log(N)-launch run does
+    /// not. Calibrated by [`crate::simulator::calibrate::fit_session_overhead`].
+    pub session_overhead_s: f64,
+    /// Per-size calibrated naive per-launch cost `(n, seconds)`, from the
+    /// paper's own naive columns ([`crate::simulator::calibrate::fit_per_size`]).
+    /// The paper's per-launch costs are NOT monotone in the analytic
+    /// features (n=64 at N=1024 costs 2.6 ms/launch vs n=512's 3.4 ms), so
+    /// no 3-parameter physical model fits all sizes; where the paper
+    /// published a size we use its own numbers, and the analytic model
+    /// interpolates everywhere else.
+    pub per_size_launch_s: Vec<(usize, f64)>,
+}
+
+/// Predicted timing breakdown for executing a plan.
+#[derive(Clone, Copy, Debug)]
+pub struct SimReport {
+    pub total_s: f64,
+    pub overhead_s: f64,
+    pub transfer_s: f64,
+    pub kernel_s: f64,
+    pub launches: usize,
+    pub multiplies: usize,
+}
+
+impl GpuTimingModel {
+    /// A reasonable uncalibrated model straight from the spec sheet:
+    /// 35% of peak flops, 60% of peak PCIe/memory bandwidth, 2012-era
+    /// OpenCL launch+sync overhead.
+    pub fn from_spec(device: DeviceSpec) -> GpuTimingModel {
+        GpuTimingModel {
+            launch_overhead_s: 2.0e-3,
+            eff_pcie_bytes_per_s: device.pcie_gbs * 1e9 * 0.6,
+            eff_flops: device.peak_gflops * 1e9 * 0.35,
+            eff_mem_bytes_per_s: device.bandwidth_gbs * 1e9 * 0.6,
+            session_overhead_s: 0.0,
+            per_size_launch_s: Vec::new(),
+            device,
+        }
+    }
+
+    /// Calibrated whole-launch cost for size `n`, if the paper reported it.
+    pub fn calibrated_per_launch(&self, n: usize) -> Option<f64> {
+        self.per_size_launch_s
+            .iter()
+            .find(|&&(size, _)| size == n)
+            .map(|&(_, s)| s)
+    }
+
+    /// Effective dispatch overhead for one launch at size `n`: the
+    /// calibrated whole-launch cost minus the analytic transfer+compute
+    /// components (so a calibrated round-trip launch totals exactly the
+    /// paper's own per-launch cost), else the analytic constant.
+    pub fn eff_launch_overhead(&self, n: usize) -> f64 {
+        match self.calibrated_per_launch(n) {
+            Some(r) => (r - self.transfer_time(n, 3) - self.kernel_time(n, 1)).max(1e-5),
+            None => self.launch_overhead_s,
+        }
+    }
+
+    /// Time for the compute portion of one `n x n` matmul launch.
+    pub fn kernel_time(&self, n: usize, multiplies: usize) -> f64 {
+        let flops = 2.0 * (n as f64).powi(3) * multiplies as f64;
+        // each multiply streams 3 matrices through device memory at least once
+        let bytes = 3.0 * (n * n * 4) as f64 * multiplies as f64;
+        (flops / self.eff_flops).max(bytes / self.eff_mem_bytes_per_s)
+    }
+
+    /// Time to move `count` matrices across the host↔device link.
+    pub fn transfer_time(&self, n: usize, count: usize) -> f64 {
+        (n * n * 4) as f64 * count as f64 / self.eff_pcie_bytes_per_s
+    }
+
+    /// Predict a device-resident plan execution (upload once, download
+    /// once, plus the per-invocation session overhead).
+    pub fn simulate_device_resident(&self, plan: &Plan, n: usize) -> SimReport {
+        let cost = PlanCost::device_resident(plan, n);
+        let mut r = self.report(plan, n, cost.h2d_transfers + cost.d2h_transfers);
+        r.overhead_s += self.session_overhead_s;
+        r.total_s += self.session_overhead_s;
+        r
+    }
+
+    /// Predict a per-launch-roundtrip execution (naive §4.2 discipline).
+    pub fn simulate_roundtrip(&self, plan: &Plan, n: usize) -> SimReport {
+        let cost = PlanCost::per_launch_roundtrip(plan, n);
+        self.report(plan, n, cost.h2d_transfers + cost.d2h_transfers)
+    }
+
+    fn report(&self, plan: &Plan, n: usize, transfers: usize) -> SimReport {
+        let launches = plan.launches();
+        let mut kernel_s = 0.0;
+        for step in &plan.steps {
+            if let Step::Copy { .. } = step {
+                continue;
+            }
+            kernel_s += self.kernel_time(n, step.multiplies());
+        }
+        let overhead_s = self.eff_launch_overhead(n) * launches as f64;
+        let transfer_s = self.transfer_time(n, transfers);
+        SimReport {
+            total_s: overhead_s + transfer_s + kernel_s,
+            overhead_s,
+            transfer_s,
+            kernel_s,
+            launches,
+            multiplies: plan.multiplies(),
+        }
+    }
+
+    /// Sequential-CPU prediction: `multiplies` naive triple-loop matmuls on
+    /// one core of `cpu`.
+    pub fn simulate_cpu(cpu: &DeviceSpec, n: usize, multiplies: usize) -> f64 {
+        2.0 * (n as f64).powi(3) * multiplies as f64 / (cpu.peak_gflops * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::Plan;
+
+    fn model() -> GpuTimingModel {
+        GpuTimingModel::from_spec(DeviceSpec::tesla_c2050())
+    }
+
+    #[test]
+    fn ours_beats_naive_for_all_table_cells() {
+        let m = model();
+        for n in [64usize, 128, 256, 512] {
+            for power in [64u64, 128, 256, 512, 1024] {
+                let naive = m.simulate_roundtrip(&Plan::naive(power), n);
+                let ours = m.simulate_device_resident(&Plan::binary(power, false), n);
+                assert!(
+                    ours.total_s < naive.total_s,
+                    "n={n} N={power}: ours {} vs naive {}",
+                    ours.total_s,
+                    naive.total_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_power_at_fixed_size() {
+        // the paper's key observation (Figs 5/7/9/11): ours-vs-naive gap
+        // widens as the power grows
+        let m = model();
+        let n = 64;
+        let mut last = 0.0;
+        for power in [64u64, 128, 256, 512, 1024] {
+            let naive = m.simulate_roundtrip(&Plan::naive(power), n).total_s;
+            let ours = m.simulate_device_resident(&Plan::binary(power, false), n).total_s;
+            let speedup = naive / ours;
+            assert!(speedup > last, "power={power}: {speedup} <= {last}");
+            last = speedup;
+        }
+    }
+
+    #[test]
+    fn small_matrices_overhead_bound_large_compute_bound() {
+        let m = model();
+        let small = m.simulate_roundtrip(&Plan::naive(256), 64);
+        assert!(small.overhead_s > small.kernel_s, "n=64 should be overhead-bound");
+        let large = m.simulate_roundtrip(&Plan::naive(256), 512);
+        assert!(large.kernel_s > large.overhead_s * 0.1, "n=512 kernel time should matter");
+    }
+
+    #[test]
+    fn kernel_time_is_roofline() {
+        let m = model();
+        // tiny matmul: bandwidth bound => time == bytes / mem_bw
+        let t = m.kernel_time(8, 1);
+        let bytes = 3.0 * (8.0 * 8.0 * 4.0);
+        assert!((t - bytes / m.eff_mem_bytes_per_s).abs() / t < 1e-9);
+        // big matmul: compute bound
+        let t = m.kernel_time(2048, 1);
+        let flops = 2.0 * 2048f64.powi(3);
+        assert!((t - flops / m.eff_flops).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn cpu_time_matches_paper_order_of_magnitude() {
+        // Table 4: n=256, N=64 sequential CPU = 16 s
+        let cpu = DeviceSpec::xeon_2012_single_core();
+        let t = GpuTimingModel::simulate_cpu(&cpu, 256, 63);
+        assert!(t > 0.4 && t < 40.0, "{t}");
+    }
+}

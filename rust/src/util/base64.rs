@@ -1,0 +1,146 @@
+//! Standard base64 (RFC 4648, with padding) — in-tree substrate for the
+//! wire protocol's binary matrix encoding.
+
+const ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes to standard base64 with `=` padding.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(triple >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(triple >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[(triple >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[triple as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+/// Decode standard base64 (padding required, no whitespace).
+pub fn decode(text: &str) -> Option<Vec<u8>> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    // inverse table
+    let mut inv = [255u8; 256];
+    for (i, &c) in ALPHABET.iter().enumerate() {
+        inv[c as usize] = i as u8;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for chunk in bytes.chunks(4) {
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && chunk[3] != b'=') || (pad == 2 && chunk[2] != b'=') {
+            return None;
+        }
+        let mut triple = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            let v = if c == b'=' {
+                if i < 2 {
+                    return None; // '=' only in the last two positions
+                }
+                0
+            } else {
+                let v = inv[c as usize];
+                if v == 255 {
+                    return None;
+                }
+                v as u32
+            };
+            triple = (triple << 6) | v;
+        }
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Some(out)
+}
+
+/// `f32` slice → base64 of its little-endian bytes.
+pub fn encode_f32(data: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    encode(&bytes)
+}
+
+/// base64 of little-endian `f32` bytes → values.
+pub fn decode_f32(text: &str) -> Option<Vec<f32>> {
+    let bytes = decode(text)?;
+    if bytes.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["A", "AB=C", "====", "A?==", "Zg==Zg==X"] {
+            assert!(decode(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let data = vec![0.1f32, -3.25, f32::MIN_POSITIVE, 1e30, 0.0, -0.0];
+        let enc = encode_f32(&data);
+        let back = decode_f32(&enc).unwrap();
+        assert_eq!(data.len(), back.len());
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact roundtrip");
+        }
+    }
+
+    #[test]
+    fn f32_decode_rejects_ragged() {
+        assert!(decode_f32("Zg==").is_none()); // 1 byte, not a multiple of 4
+    }
+}

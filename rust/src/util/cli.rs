@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser (in-tree replacement for `clap`).
+//!
+//! Supports the subcommand + flags shape `matexp` uses:
+//! `matexp <command> [--flag value] [--switch] [positional…]`.
+//! Flags accept both `--flag value` and `--flag=value`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{MatexpError, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` pairs, and `--switch` as `"true"`.
+    flags: BTreeMap<String, String>,
+    /// Non-flag tokens after the command.
+    pub positional: Vec<String>,
+    /// Flag names that were consumed via accessors (for unknown-flag checks).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style tokens.
+    ///
+    /// Every `--name` token is a flag. If the *next* token exists and does
+    /// not start with `--`, it is that flag's value; otherwise the flag is
+    /// a boolean switch. This is unambiguous for our CLI because no
+    /// positional argument follows a switch.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(MatexpError::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, name: &str) {
+        self.seen.borrow_mut().push(name.to_string());
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Boolean switch (present without value, or `--flag true/false`).
+    pub fn has(&self, name: &str) -> bool {
+        self.mark(name);
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a flag value with a typed error message.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+                MatexpError::Config(format!("--{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Typed flag with default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    /// Error on any flag never consumed by an accessor — catches typos.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(MatexpError::Config(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positionals() {
+        let a = parse("experiment --table 2 --variant xla extra");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.get("table"), Some("2"));
+        assert_eq!(a.get("variant"), Some("xla"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("plan --power=512 --fused");
+        assert_eq!(a.get_parsed::<u64>("power").unwrap(), Some(512));
+        assert!(a.has("fused"));
+    }
+
+    #[test]
+    fn switch_at_end_and_before_flag() {
+        let a = parse("serve --quiet --addr 0.0.0.0:7070");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("addr"), Some("0.0.0.0:7070"));
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get_parsed::<usize>("n").is_err());
+        assert_eq!(a.get_parsed_or("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("typo");
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse("--help");
+        assert_eq!(a.command, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates replacing external crates the offline vendor set
+//! lacks: JSON (`serde_json`), CLI parsing (`clap`), thread pool /
+//! fork-join (`rayon`/`tokio`), property testing (`proptest`), and temp
+//! dirs (`tempfile`).
+
+pub mod base64;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod tempdir;
+pub mod threadpool;

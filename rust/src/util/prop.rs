@@ -1,0 +1,229 @@
+//! Miniature property-based testing harness (in-tree `proptest`
+//! replacement for the offline build).
+//!
+//! A property is a closure over a [`Gen`]; the runner executes it for a
+//! configurable number of deterministic cases. On failure it *shrinks*:
+//! every generated integer is re-tried at smaller values (halving toward
+//! the generator's minimum) while the rest of the case is replayed
+//! verbatim, and the smallest still-failing case is reported.
+//!
+//! ```no_run
+//! use matexp::util::prop::{property, Gen};
+//! property("addition commutes", 256, |g| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! (`no_run` because doctest binaries lack the libxla rpath; the same
+//! property runs compiled in this module's unit tests.)
+
+use crate::linalg::rand::XorShift64;
+
+/// Per-case value source. Records every draw so the runner can replay and
+/// shrink a failing case.
+pub struct Gen {
+    rng: XorShift64,
+    /// (min, drawn) for every integer draw, in draw order.
+    trace: Vec<(u64, u64)>,
+    /// When replaying/shrinking: overrides for the first `k` draws.
+    replay: Vec<u64>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, replay: Vec<u64>) -> Gen {
+        Gen { rng: XorShift64::new(seed), trace: Vec::new(), replay, cursor: 0 }
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "empty range");
+        let fresh = lo + self.rng.next_below(hi - lo + 1);
+        let v = match self.replay.get(self.cursor) {
+            Some(&forced) => forced.clamp(lo, hi),
+            None => fresh,
+        };
+        self.cursor += 1;
+        self.trace.push((lo, v));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f32 in `[-scale, scale)`, derived from an integer draw so
+    /// it shrinks toward 0.
+    pub fn f32(&mut self, scale: f32) -> f32 {
+        let raw = self.u64(0, 1 << 24);
+        (raw as f32 / (1u64 << 23) as f32 - 1.0) * scale
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.usize(0, items.len() - 1)]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64(0, 1) == 1
+    }
+}
+
+/// Run `cases` deterministic cases of `prop`; panic with the smallest
+/// shrunk counterexample on failure.
+pub fn property<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 ^ (case.wrapping_mul(0x9E37_79B9));
+        let outcome = run_one(&prop, seed, Vec::new());
+        if let Err((msg, trace)) = outcome {
+            let (shrunk_trace, shrunk_msg) = shrink(&prop, seed, trace, msg);
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x})\n\
+                 shrunk draws: {shrunk_trace:?}\npanic: {shrunk_msg}"
+            );
+        }
+    }
+}
+
+type Failure = (String, Vec<(u64, u64)>);
+
+fn run_one<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    replay: Vec<u64>,
+) -> std::result::Result<(), Failure> {
+    let mut g = Gen::new(seed, replay);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+    match result {
+        Ok(()) => Ok(()),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            Err((msg, g.trace))
+        }
+    }
+}
+
+/// Shrink each drawn integer to the smallest value that still fails,
+/// by per-draw binary search (with the other draws replayed verbatim).
+/// Bounded passes, so always terminates.
+fn shrink<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    prop: &F,
+    seed: u64,
+    mut trace: Vec<(u64, u64)>,
+    mut msg: String,
+) -> (Vec<u64>, String) {
+    // suppress the panic spew from shrink probes
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    for _pass in 0..4 {
+        let mut improved = false;
+        for i in 0..trace.len() {
+            let (lo, cur) = trace[i];
+            if cur == lo {
+                continue;
+            }
+            let probe = |cand: u64, trace: &[(u64, u64)]| -> Option<Failure> {
+                let mut replay: Vec<u64> = trace.iter().map(|&(_, v)| v).collect();
+                replay[i] = cand;
+                run_one(prop, seed, replay).err()
+            };
+            // fast path: the minimum itself still fails
+            if let Some((new_msg, new_trace)) = probe(lo, &trace) {
+                trace = new_trace;
+                msg = new_msg;
+                improved = true;
+                continue;
+            }
+            // binary search the boundary: `ok` passes, `fail` fails
+            let mut ok = lo;
+            let mut fail = cur;
+            let mut best: Option<Failure> = None;
+            while fail - ok > 1 {
+                let mid = ok + (fail - ok) / 2;
+                match probe(mid, &trace) {
+                    Some(f) => {
+                        fail = mid;
+                        best = Some(f);
+                    }
+                    None => ok = mid,
+                }
+            }
+            if let Some((new_msg, new_trace)) = best {
+                if fail < cur {
+                    trace = new_trace;
+                    msg = new_msg;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    std::panic::set_hook(prev_hook);
+    (trace.iter().map(|&(_, v)| v).collect(), msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property("sum symmetric", 64, |g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_and_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            property("find big", 256, |g| {
+                let x = g.u64(0, 1000);
+                assert!(x < 500, "x too big: {x}");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // shrinker should walk x down to exactly the boundary 500
+        assert!(msg.contains("[500]"), "unshrunk: {msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        property("ranges", 64, |g| {
+            let v = g.u64(10, 20);
+            assert!((10..=20).contains(&v));
+            let f = g.f32(2.0);
+            assert!((-2.0..2.0).contains(&f), "{f}");
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        let mut g = Gen::new(7, Vec::new());
+        for _ in 0..10 {
+            first.push(g.u64(0, 1_000_000));
+        }
+        let mut g = Gen::new(7, Vec::new());
+        for v in &first {
+            assert_eq!(g.u64(0, 1_000_000), *v);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Self-cleaning temporary directories for tests (in-tree replacement for
+//! the `tempfile` crate, which the offline vendor set lacks).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely-named directory under the system temp dir, removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `$TMPDIR/matexp-<pid>-<seq>`.
+    pub fn new() -> std::io::Result<TempDir> {
+        let seq = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "matexp-{}-{}",
+            std::process::id(),
+            seq
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Path of a file inside the directory (not created).
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let kept_path;
+        {
+            let d = TempDir::new().unwrap();
+            kept_path = d.path().to_path_buf();
+            assert!(kept_path.is_dir());
+            std::fs::write(d.file("x.txt"), b"hello").unwrap();
+            assert!(d.file("x.txt").exists());
+        }
+        assert!(!kept_path.exists(), "dropped dir should be removed");
+    }
+
+    #[test]
+    fn two_dirs_are_distinct() {
+        let a = TempDir::new().unwrap();
+        let b = TempDir::new().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

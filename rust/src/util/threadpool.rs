@@ -1,0 +1,178 @@
+//! Fixed-size thread pool (in-tree `rayon`/tokio-executor replacement).
+//!
+//! Two services on top of one primitive:
+//! * [`ThreadPool`] — long-lived pool executing boxed jobs (the TCP
+//!   server's per-connection handler).
+//! * [`parallel_rows`] — scoped fork-join over row chunks (the threaded
+//!   CPU matmul), using `std::thread::scope` so borrows need no `'static`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers (≥ 1 enforced).
+    pub fn new(threads: usize, name: &str) -> ThreadPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Enqueue a job; runs on some worker thread.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("pool workers alive");
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().expect("pool queue poisoned");
+            guard.recv()
+        };
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // sender dropped: shutdown
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped fork-join: split `out` into contiguous row chunks of `row_len`
+/// and run `f(first_row_index, chunk)` on up to `threads` OS threads.
+///
+/// Chunks are disjoint `&mut` slices, so no synchronization is needed —
+/// the same shape as rayon's `par_chunks_mut().enumerate()`.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0, "row_len must be positive");
+    assert_eq!(out.len() % row_len, 0, "out must be whole rows");
+    let n_rows = out.len() / row_len;
+    let threads = threads.max(1).min(n_rows.max(1));
+    let rows_per = n_rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0;
+        let f = &f;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            let first = row0;
+            scope.spawn(move || {
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    f(first + i, row);
+                }
+            });
+            row0 += take / row_len;
+            rest = tail;
+        }
+    });
+}
+
+/// Default parallelism: available CPUs (min 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let counter = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2, "drop-test");
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&flag);
+        pool.execute(move || {
+            f2.fetch_add(1, Ordering::Relaxed);
+        });
+        drop(pool); // must not hang, must run the queued job first
+        assert_eq!(flag.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_rows_covers_every_row() {
+        let n = 37; // deliberately not divisible by thread count
+        let mut data = vec![0.0f32; n * 8];
+        parallel_rows(&mut data, 8, 4, |row, chunk| {
+            for v in chunk.iter_mut() {
+                *v = row as f32;
+            }
+        });
+        for (i, row) in data.chunks(8).enumerate() {
+            assert!(row.iter().all(|&v| v == i as f32), "row {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_rows_single_thread_and_empty() {
+        let mut data = vec![0.0f32; 4];
+        parallel_rows(&mut data, 4, 1, |_, chunk| chunk[0] = 1.0);
+        assert_eq!(data[0], 1.0);
+        let mut empty: Vec<f32> = Vec::new();
+        parallel_rows(&mut empty, 4, 4, |_, _| panic!("no rows"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_rejected() {
+        let mut data = vec![0.0f32; 10];
+        parallel_rows(&mut data, 4, 2, |_, _| {});
+    }
+}

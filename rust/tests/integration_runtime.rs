@@ -1,0 +1,155 @@
+//! Integration: the PJRT runtime end-to-end against the CPU oracle —
+//! every execution discipline, both kernel variants, across sizes and
+//! powers. Skips (passes trivially) when `make artifacts` hasn't run.
+
+use matexp::config::default_artifacts_dir;
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+use matexp::plan::Plan;
+use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::runtime::engine::Engine;
+use matexp::runtime::Variant;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(ArtifactRegistry::discover(&dir).expect("manifest parses"))
+}
+
+fn cpu_oracle(a: &Matrix, power: u64) -> Matrix {
+    linalg::expm::expm(a, power, CpuAlgo::Ikj).expect("cpu oracle")
+}
+
+#[test]
+fn device_resident_binary_matches_cpu_across_sizes() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    for n in [4usize, 16, 64] {
+        let a = Matrix::random_spectral(n, 0.95, n as u64);
+        for power in [1u64, 2, 3, 13, 64, 100] {
+            let want = cpu_oracle(&a, power);
+            let (got, stats) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
+            assert!(
+                got.approx_eq(&want, 1e-3, 1e-3),
+                "n={n} N={power}: max diff {}",
+                got.max_abs_diff(&want)
+            );
+            if power > 1 {
+                assert_eq!(stats.h2d_transfers, 1, "device-resident uploads once");
+                assert_eq!(stats.d2h_transfers, 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_disciplines_agree_on_one_workload() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let n = 32;
+    let power = 100;
+    let a = Matrix::random_spectral(n, 0.97, 5);
+    let want = cpu_oracle(&a, power);
+    let check = |name: &str, got: &Matrix| {
+        assert!(
+            got.approx_eq(&want, 1e-3, 1e-3),
+            "{name}: max diff {}",
+            got.max_abs_diff(&want)
+        );
+    };
+    check("binary", &engine.expm(&a, &Plan::binary(power, false)).unwrap().0);
+    check("fused", &engine.expm(&a, &Plan::binary(power, true)).unwrap().0);
+    check("chained", &engine.expm(&a, &Plan::chained(power, &[4, 2])).unwrap().0);
+    check("addition-chain", &engine.expm(&a, &Plan::addition_chain(power)).unwrap().0);
+    check("packed", &engine.expm_packed(&a, power).unwrap().0);
+    check("naive-roundtrip", &engine.expm_naive_roundtrip(&a, power).unwrap().0);
+    check("plan-roundtrip", &engine.expm_plan_roundtrip(&a, &Plan::binary(power, false)).unwrap().0);
+}
+
+#[test]
+fn pallas_variant_matches_xla_variant() {
+    let Some(reg) = registry() else { return };
+    let mut xla_e = Engine::new(&reg, Variant::Xla).unwrap();
+    let mut pal_e = Engine::new(&reg, Variant::Pallas).unwrap();
+    let n = 64;
+    let a = Matrix::random_spectral(n, 0.95, 11);
+    let b = Matrix::random_spectral(n, 0.95, 12);
+    let (mx, _) = xla_e.matmul(&a, &b).unwrap();
+    let (mp, _) = pal_e.matmul(&a, &b).unwrap();
+    assert!(
+        mx.approx_eq(&mp, 1e-4, 1e-4),
+        "variants diverge: {}",
+        mx.max_abs_diff(&mp)
+    );
+}
+
+#[test]
+fn fused_expm_artifacts_match_plans() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let n = 64;
+    let a = Matrix::random_spectral(n, 0.98, 21);
+    for power in reg.fused_expm_powers(n) {
+        let (fused, stats) = engine.expm_fused_artifact(&a, power).unwrap();
+        assert_eq!(stats.launches, 1, "fused = single launch");
+        let (planned, _) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
+        assert!(
+            fused.approx_eq(&planned, 1e-2, 1e-2),
+            "N={power}: max diff {}",
+            fused.max_abs_diff(&planned)
+        );
+    }
+}
+
+#[test]
+fn naive_roundtrip_transfer_accounting() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let a = Matrix::random_spectral(16, 0.9, 31);
+    let (_, stats) = engine.expm_naive_roundtrip(&a, 64).unwrap();
+    assert_eq!(stats.launches, 63);
+    assert_eq!(stats.multiplies, 63);
+    assert_eq!(stats.h2d_transfers, 2 * 63, "both operands re-uploaded per launch");
+    assert_eq!(stats.d2h_transfers, 63, "result downloaded per launch");
+}
+
+#[test]
+fn launch_counts_match_plan_costs() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let a = Matrix::random_spectral(16, 0.9, 41);
+    for power in [64u64, 100, 511, 1024] {
+        let plan = Plan::binary(power, false);
+        let (_, stats) = engine.expm(&a, &plan).unwrap();
+        assert_eq!(stats.launches, plan.launches(), "N={power}");
+        assert_eq!(stats.multiplies, plan.multiplies(), "N={power}");
+    }
+}
+
+#[test]
+fn identity_and_stochastic_invariants_hold_through_pjrt() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    // identity stays identity at any power
+    let e = Matrix::identity(32);
+    let (p, _) = engine.expm(&e, &Plan::binary(1024, false)).unwrap();
+    assert!(p.approx_eq(&e, 1e-5, 0.0));
+    // stochastic rows keep summing to 1
+    let s = Matrix::random_stochastic(32, 9);
+    let (p, _) = engine.expm_packed(&s, 512).unwrap();
+    for i in 0..32 {
+        let sum: f32 = p.row(i).iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "row {i}: {sum}");
+    }
+}
+
+#[test]
+fn power_zero_rejected_everywhere() {
+    let Some(reg) = registry() else { return };
+    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let a = Matrix::identity(8);
+    assert!(engine.expm_naive_roundtrip(&a, 0).is_err());
+    assert!(engine.expm_packed(&a, 0).is_err());
+}

@@ -1,0 +1,109 @@
+//! Integration: the TCP front-end — wire protocol over a real socket,
+//! concurrent clients, malformed input, metrics endpoint.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+use matexp::server::client::MatexpClient;
+use matexp::server::server::serve_background;
+use matexp::util::json::Json;
+
+fn start_server() -> Option<(Arc<matexp::coordinator::service::ServiceHandle>, String)> {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    if !cfg.artifacts_dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8).expect("binds");
+    Some((service, server.local_addr().to_string()))
+}
+
+#[test]
+fn expm_roundtrip_over_tcp() {
+    let Some((_service, addr)) = start_server() else { return };
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+    let a = Matrix::random_spectral(16, 0.95, 77);
+    let want = linalg::expm::expm(&a, 100, CpuAlgo::Ikj).unwrap();
+    let (got, stats) = client.expm(&a, 100, Method::Ours).expect("expm");
+    assert!(
+        got.approx_eq(&want, 1e-3, 1e-3),
+        "diff {}",
+        got.max_abs_diff(&want)
+    );
+    assert!(stats.launches > 0 && stats.launches <= 12, "{stats:?}");
+    assert_eq!(stats.multiplies, 8); // 100 = 0b1100100: 6 squarings + 2 mults
+}
+
+#[test]
+fn concurrent_tcp_clients() {
+    let Some((_service, addr)) = start_server() else { return };
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut client = MatexpClient::connect(&addr).expect("connect");
+                let a = Matrix::random_spectral(16, 0.9, c);
+                for power in [8u64, 64, 200] {
+                    let want = linalg::expm::expm(&a, power, CpuAlgo::Ikj).unwrap();
+                    let (got, _) = client.expm(&a, power, Method::Ours).expect("expm");
+                    assert!(got.approx_eq(&want, 1e-3, 1e-3), "client {c} N={power}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn metrics_endpoint_reports_counts() {
+    let Some((_service, addr)) = start_server() else { return };
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let a = Matrix::random_spectral(16, 0.9, 5);
+    client.expm(&a, 16, Method::Ours).unwrap();
+    client.expm(&a, 16, Method::NaiveGpu).unwrap();
+    let m = client.metrics().expect("metrics");
+    assert_eq!(m.get("responses_total").and_then(Json::as_u64), Some(2));
+    // naive N=16 = 15 launches; ours N=16 under the default chained
+    // planner = ONE square4-chain launch (2^4)
+    assert!(m.get("launches_total").and_then(Json::as_u64).unwrap() >= 15 + 1);
+    assert!(m.get("latency_p50_us").is_some());
+}
+
+#[test]
+fn malformed_lines_get_error_responses_and_connection_survives() {
+    let Some((_service, addr)) = start_server() else { return };
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut send_recv = |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut buf = String::new();
+        reader.read_line(&mut buf).unwrap();
+        buf
+    };
+    for bad in ["not json", r#"{"op":"nope"}"#, r#"{"op":"expm","n":4,"power":2,"method":"ours","matrix":[1,2]}"#] {
+        let resp = send_recv(bad);
+        assert!(resp.contains("\"status\":\"error\""), "{bad} -> {resp}");
+    }
+    // connection still usable after errors
+    let resp = send_recv(r#"{"op":"ping"}"#);
+    assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+}
+
+#[test]
+fn server_rejects_oversized_power_via_admission() {
+    let Some((_service, addr)) = start_server() else { return };
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let a = Matrix::identity(16);
+    let err = client.expm(&a, 1 << 40, Method::Ours).unwrap_err().to_string();
+    assert!(err.contains("MAX_POWER"), "{err}");
+}

@@ -1,0 +1,136 @@
+//! Integration: the serving coordinator — concurrent submission, batching
+//! behaviour, admission control, metrics, graceful shutdown.
+
+use std::sync::Arc;
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+
+fn start(workers: usize) -> Option<Arc<matexp::coordinator::service::ServiceHandle>> {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = workers;
+    cfg.batcher.max_wait_ms = 1;
+    if !cfg.artifacts_dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Arc::new(Service::start(cfg).expect("service starts")))
+}
+
+#[test]
+fn serves_correct_results_concurrently() {
+    let Some(service) = start(2) else { return };
+    let n = 16;
+    std::thread::scope(|scope| {
+        for c in 0..6u64 {
+            let service = Arc::clone(&service);
+            scope.spawn(move || {
+                let a = Matrix::random_spectral(n, 0.95, c);
+                let power = 32 + c;
+                let want = linalg::expm::expm(&a, power, CpuAlgo::Ikj).unwrap();
+                let resp = service.submit(a, power, Method::Ours).expect("submit");
+                assert!(
+                    resp.result.approx_eq(&want, 1e-3, 1e-3),
+                    "client {c}: diff {}",
+                    resp.result.max_abs_diff(&want)
+                );
+            });
+        }
+    });
+    let m = service.metrics();
+    assert_eq!(m.requests_total, 6);
+    assert_eq!(m.responses_total, 6);
+    assert_eq!(m.errors_total, 0);
+}
+
+#[test]
+fn all_methods_servable() {
+    let Some(service) = start(1) else { return };
+    let a = Matrix::random_spectral(64, 0.95, 3);
+    let want = linalg::expm::expm(&a, 64, CpuAlgo::Ikj).unwrap();
+    for method in [
+        Method::Ours,
+        Method::OursPacked,
+        Method::OursChained,
+        Method::AdditionChain,
+        Method::FusedArtifact, // 64 is a shipped fused power at n=64
+        Method::NaiveGpu,
+        Method::CpuSeq,
+    ] {
+        let resp = service.submit(a.clone(), 64, method).expect("submit");
+        assert!(
+            resp.result.approx_eq(&want, 1e-2, 1e-2),
+            "{method}: diff {}",
+            resp.result.max_abs_diff(&want)
+        );
+        assert_eq!(resp.method, method);
+    }
+}
+
+#[test]
+fn admission_rejects_bad_requests() {
+    let Some(service) = start(1) else { return };
+    // unknown size for GPU methods
+    assert!(service.submit(Matrix::identity(100), 8, Method::Ours).is_err());
+    // ...but CPU path takes any size
+    service.submit(Matrix::identity(10), 8, Method::CpuSeq).unwrap();
+    // power 0
+    assert!(service.submit(Matrix::identity(16), 0, Method::Ours).is_err());
+    // non-finite input
+    let mut bad = Matrix::identity(16);
+    bad.set(0, 0, f32::INFINITY);
+    assert!(service.submit(bad, 8, Method::Ours).is_err());
+    let m = service.metrics();
+    assert_eq!(m.rejected_total, 3);
+}
+
+#[test]
+fn missing_fused_artifact_is_clean_error_not_crash() {
+    let Some(service) = start(1) else { return };
+    // power 65 has no expm65 artifact
+    let err = service
+        .submit(Matrix::identity(64), 65, Method::FusedArtifact)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no artifact"), "{err}");
+    // service still healthy afterwards
+    service.submit(Matrix::identity(64), 64, Method::Ours).unwrap();
+}
+
+#[test]
+fn batching_coalesces_same_size_requests() {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 1;
+    cfg.batcher.max_batch = 4;
+    cfg.batcher.max_wait_ms = 200; // long deadline: size triggers shipping
+    if !cfg.artifacts_dir.join("manifest.json").exists() {
+        return;
+    }
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    std::thread::scope(|scope| {
+        for c in 0..8u64 {
+            let service = Arc::clone(&service);
+            scope.spawn(move || {
+                let a = Matrix::random_spectral(16, 0.9, c);
+                service.submit(a, 16, Method::Ours).expect("submit");
+            });
+        }
+    });
+    let m = service.metrics();
+    assert_eq!(m.batched_requests_total, 8);
+    assert!(
+        m.batches_total < 8,
+        "some coalescing expected: {} batches for 8 requests",
+        m.batches_total
+    );
+}
+
+#[test]
+fn shutdown_then_submit_fails_cleanly() {
+    let Some(service) = start(1) else { return };
+    let service = Arc::try_unwrap(service).ok().expect("sole owner");
+    service.submit(Matrix::identity(16), 4, Method::Ours).unwrap();
+    service.shutdown();
+}

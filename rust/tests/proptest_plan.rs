@@ -1,0 +1,181 @@
+//! Property-based tests over the planner and coordinator invariants
+//! (in-tree `util::prop` harness; see DESIGN.md §8).
+
+use std::time::Instant;
+
+use matexp::config::BatcherConfig;
+use matexp::coordinator::batcher::Batcher;
+use matexp::coordinator::request::{ExpmRequest, Method};
+use matexp::linalg::matrix::Matrix;
+use matexp::plan::{mod_pow, Plan};
+use matexp::util::json::Json;
+use matexp::util::prop::property;
+
+const M: u64 = 1_000_003;
+
+#[test]
+fn every_planner_evaluates_to_pow_mod() {
+    property("planners == mod_pow", 300, |g| {
+        let power = g.u64(1, 1 << 14);
+        let base = g.u64(2, 1000);
+        let want = mod_pow(base, power, M);
+        for plan in [
+            Plan::naive(power.min(2048)), // naive plans are O(N); bound them
+            Plan::binary(power, false),
+            Plan::binary(power, true),
+            Plan::chained(power, &[4, 2]),
+            Plan::addition_chain(power),
+        ] {
+            plan.validate().expect("plan validates");
+            if plan.power == power {
+                assert_eq!(plan.eval_mod(base, M).unwrap(), want, "{:?}", plan.kind);
+            }
+        }
+    });
+}
+
+#[test]
+fn binary_multiply_count_formula() {
+    property("binary multiplies = floor(log2)+popcount-1", 500, |g| {
+        let power = g.u64(1, 1 << 30);
+        let plan = Plan::binary(power, false);
+        let expected = (63 - power.leading_zeros()) as usize + power.count_ones() as usize - 1;
+        assert_eq!(plan.multiplies(), expected);
+        // fusion never changes multiplies, never increases launches
+        let fused = Plan::binary(power, true);
+        assert_eq!(fused.multiplies(), expected);
+        assert!(fused.launches() <= plan.launches());
+    });
+}
+
+#[test]
+fn addition_chain_never_worse_than_binary() {
+    property("chain <= binary multiplies", 150, |g| {
+        let power = g.u64(1, 4096);
+        let chain = Plan::addition_chain(power);
+        let binary = Plan::binary(power, false);
+        chain.validate().unwrap();
+        assert!(
+            chain.multiplies() <= binary.multiplies(),
+            "N={power}: chain {} > binary {}",
+            chain.multiplies(),
+            binary.multiplies()
+        );
+    });
+}
+
+#[test]
+fn chained_plan_multiplies_invariant_under_chain_set() {
+    property("chained multiplies == binary multiplies", 200, |g| {
+        let power = g.u64(1, 1 << 20);
+        let with = Plan::chained(power, &[4, 2]);
+        let without = Plan::binary(power, false);
+        assert_eq!(with.multiplies(), without.multiplies());
+        assert!(with.launches() <= without.launches());
+    });
+}
+
+#[test]
+fn plan_eval_matches_matrix_exponentiation_small() {
+    property("plan eval on 2x2 matrices", 60, |g| {
+        let power = g.u64(1, 64);
+        // a 2x2 contraction keeps f32 powers finite
+        let a = Matrix::from_vec(
+            2,
+            vec![g.f32(0.7), g.f32(0.7), g.f32(0.7), g.f32(0.7)],
+        )
+        .unwrap();
+        let naive = matexp::linalg::expm::expm_naive(&a, power, matexp::linalg::CpuAlgo::Naive)
+            .unwrap();
+        for plan in [Plan::binary(power, true), Plan::addition_chain(power)] {
+            let got =
+                matexp::linalg::expm::expm_plan(&a, &plan, matexp::linalg::CpuAlgo::Naive)
+                    .unwrap();
+            assert!(
+                got.approx_eq(&naive, 1e-3, 1e-3),
+                "{:?} N={power}: diff {}",
+                plan.kind,
+                got.max_abs_diff(&naive)
+            );
+        }
+    });
+}
+
+#[test]
+fn batcher_conserves_and_orders_requests() {
+    property("batcher conservation", 120, |g| {
+        let max_batch = g.usize(1, 8);
+        let cfg = BatcherConfig { max_batch, max_wait_ms: 1000, max_queue: usize::MAX };
+        let mut b = Batcher::new(cfg);
+        let now = Instant::now();
+        let n_reqs = g.usize(0, 40);
+        let mut shipped = Vec::new();
+        for id in 0..n_reqs as u64 {
+            let n = 8usize << g.usize(0, 2); // sizes 8/16/32
+            let req = ExpmRequest { id, matrix: Matrix::zeros(n), power: 4, method: Method::Ours };
+            if let Some(batch) = b.push(req, now) {
+                assert_eq!(batch.requests.len(), max_batch, "ships exactly at max_batch");
+                assert!(batch.requests.iter().all(|r| r.n() == batch.n));
+                shipped.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in b.flush_all() {
+            assert!(batch.requests.len() <= max_batch);
+            shipped.extend(batch.requests.iter().map(|r| r.id));
+        }
+        // conservation: every id exactly once
+        shipped.sort_unstable();
+        let want: Vec<u64> = (0..n_reqs as u64).collect();
+        assert_eq!(shipped, want);
+        assert!(b.is_empty());
+    });
+}
+
+#[test]
+fn json_roundtrip_of_random_values() {
+    property("json value roundtrip", 200, |g| {
+        // build a random JSON tree from the draws
+        fn build(g: &mut matexp::util::prop::Gen, depth: usize) -> Json {
+            match if depth >= 3 { g.usize(0, 3) } else { g.usize(0, 5) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.u64(0, 1 << 50) as f64) / 8.0),
+                3 => Json::Str(format!("s{}\n\"{}\"", g.u64(0, 999), g.u64(0, 9))),
+                4 => Json::Arr((0..g.usize(0, 4)).map(|_| build(g, depth + 1)).collect()),
+                _ => {
+                    let mut m = std::collections::BTreeMap::new();
+                    for i in 0..g.usize(0, 4) {
+                        m.insert(format!("k{i}"), build(g, depth + 1));
+                    }
+                    Json::Obj(m)
+                }
+            }
+        }
+        let v = build(g, 0);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn matrix_algebra_properties() {
+    property("matrix algebra", 80, |g| {
+        let n = g.usize(1, 12);
+        let seed = g.u64(0, 1 << 32);
+        let a = Matrix::random(n, seed.max(1));
+        let b = Matrix::random(n, seed.wrapping_add(1).max(1));
+        let e = Matrix::identity(n);
+        let mm = matexp::linalg::naive::matmul_naive;
+        // identity
+        assert_eq!(mm(&a, &e), a);
+        // transpose anti-homomorphism: (ab)^T == b^T a^T
+        let ab_t = mm(&a, &b).transpose();
+        let bt_at = mm(&b.transpose(), &a.transpose());
+        assert!(ab_t.approx_eq(&bt_at, 1e-3, 1e-3));
+        // associativity (within f32 tolerance)
+        let c = Matrix::random(n, seed.wrapping_add(2).max(1));
+        let left = mm(&mm(&a, &b), &c);
+        let right = mm(&a, &mm(&b, &c));
+        assert!(left.approx_eq(&right, 1e-2, 1e-2));
+    });
+}
