@@ -1,42 +1,32 @@
 //! `cargo bench --bench kernel_tiles` — ablation A1 (paper §4.3.7):
-//! the tiled Pallas matmul kernel across TILE/block sizes, plus the
-//! untiled XLA variant as the reference point.
+//! kernel-level matmul comparison.
 //!
-//! Pallas artifacts run in interpret mode on the CPU PJRT plugin, so the
-//! wall numbers quantify *structure* (launch count, transfer discipline,
-//! block bookkeeping), not TPU performance; the manifest's VMEM/MXU
-//! estimates printed alongside are the TPU-side story (DESIGN.md §3).
+//! Default build: the engine matmul launch on the configured backend
+//! across sizes, next to the raw CPU matmul variants (ablation A4's
+//! substrate, measured here per-launch).
+//!
+//! With `--features xla` + `make artifacts`: additionally sweeps the
+//! tiled Pallas matmul artifacts across TILE/block sizes. Pallas
+//! artifacts run in interpret mode on the CPU PJRT plugin, so those wall
+//! numbers quantify *structure* (launch count, transfer discipline, block
+//! bookkeeping), not TPU performance (DESIGN.md §3).
 
 use matexp::bench::{BenchConfig, Runner};
 use matexp::config::MatexpConfig;
-use matexp::experiments::{ablations, report};
 use matexp::linalg::matrix::Matrix;
-use matexp::runtime::artifacts::ArtifactRegistry;
-use matexp::runtime::engine::Engine;
-use matexp::runtime::Variant;
+use matexp::runtime::AnyEngine;
 use std::time::Duration;
 
 fn main() {
     let cfg = MatexpConfig::default();
-    let Ok(registry) = ArtifactRegistry::discover(&cfg.artifacts_dir) else {
-        eprintln!("artifacts missing; run `make artifacts`");
-        return;
-    };
-    let mut engine = Engine::new(&registry, Variant::Xla).expect("engine");
+    let mut engine = AnyEngine::from_config(&cfg).expect("backend");
 
-    // tile sweep at the sizes the manifest carries tiles for
-    for n in [128usize, 256] {
-        if registry.tiles("matmul", n).is_empty() {
-            continue;
-        }
-        let arms = ablations::tile_sweep(&mut engine, &registry, n, cfg.seed)
-            .expect("tile sweep");
-        print!("{}", report::render_ablation(&format!("A1 TILE sweep (n={n})"), &arms));
-    }
+    #[cfg(feature = "xla")]
+    tile_sweep(&cfg);
 
-    // reference: the untiled xla matmul at the same sizes, properly sampled
+    // engine matmul launch at the paper's sizes, properly sampled
     let mut runner = Runner::with_config(
-        "untiled xla matmul reference",
+        "engine matmul launch",
         BenchConfig {
             warmup_iters: 1,
             min_samples: 5,
@@ -44,13 +34,47 @@ fn main() {
             time_budget: Duration::from_secs(10),
         },
     );
-    for n in [128usize, 256, 512] {
+    for n in [64usize, 128, 256] {
         let a = Matrix::random_spectral(n, 0.99, cfg.seed);
         let b = Matrix::random_spectral(n, 0.99, cfg.seed ^ 1);
-        runner.bench(&format!("matmul/xla/n{n}"), || {
+        runner.bench(&format!("matmul/engine/n{n}"), || {
             let (m, _) = engine.matmul(&a, &b).expect("matmul");
             matexp::bench::black_box(&m);
         });
     }
     runner.report();
+
+    // raw CPU matmul variants (the substrate behind the cpu backend)
+    for n in [128usize, 256] {
+        let arms = matexp::experiments::ablations::cpu_variants(n, cfg.seed);
+        print!(
+            "{}",
+            matexp::experiments::report::render_ablation(
+                &format!("A4 CPU matmul variants (n={n})"),
+                &arms
+            )
+        );
+        println!();
+    }
+}
+
+#[cfg(feature = "xla")]
+fn tile_sweep(cfg: &MatexpConfig) {
+    use matexp::experiments::{ablations, report};
+    use matexp::runtime::artifacts::ArtifactRegistry;
+    use matexp::runtime::Engine;
+
+    let Ok(registry) = ArtifactRegistry::discover(&cfg.artifacts_dir) else {
+        eprintln!("artifacts missing; skipping the PJRT tile sweep");
+        return;
+    };
+    let mut engine = Engine::pjrt(&registry, cfg.variant).expect("pjrt engine");
+    for n in [128usize, 256] {
+        if registry.tiles("matmul", n).is_empty() {
+            continue;
+        }
+        let arms =
+            ablations::tile_sweep(&mut engine, &registry, n, cfg.seed).expect("tile sweep");
+        print!("{}", report::render_ablation(&format!("A1 TILE sweep (n={n})"), &arms));
+    }
 }

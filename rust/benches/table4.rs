@@ -1,21 +1,22 @@
 //! `cargo bench --bench table4` — regenerates paper Table 4
-//! (n=256) and Figures 9 and 10: paper vs simulated vs measured.
-//!
-//! Requires `make artifacts`; without them the bench still prints the
-//! paper + simulated columns (measured shows "-").
+//! (n=256) and its figures: paper vs simulated vs measured, with the
+//! measured column produced on the config-selected backend (pure-Rust
+//! CPU by default — no artifacts needed).
 
 use matexp::bench::Runner;
 use matexp::config::MatexpConfig;
 use matexp::experiments::{report, run_table};
-use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::runtime::AnyEngine;
 
 fn main() {
-    let cfg = MatexpConfig::default();
-    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir).ok();
-    if registry.is_none() {
-        eprintln!("note: artifacts missing; printing paper+simulated columns only");
-    }
-    let t = run_table(4, &cfg, registry.as_ref()).expect("table 4");
+    let mut cfg = MatexpConfig::default();
+    // caps only the sequential-CPU arm (extrapolated from 4 multiplies);
+    // the naive-GPU arm still performs its full power-1 multiply chain on
+    // the configured backend, so the large-n tables take a while on the
+    // default pure-Rust CpuBackend
+    cfg.cpu_measure_cap = 4;
+    let mut engine = AnyEngine::from_config(&cfg).expect("backend");
+    let t = run_table(4, &cfg, Some(&mut engine)).expect("table 4");
     print!("{}", report::render_table(&t));
     print!("{}", report::render_figures(&t));
 

@@ -2,22 +2,18 @@
 //! "the data is offloaded only log(N) times"): the SAME binary plan under
 //! two residency disciplines — device-resident registers vs a full host
 //! round-trip per launch — across sizes, plus the fusion ablation A3.
+//!
+//! Runs on the config-selected backend (pure-Rust CPU by default).
 
 use matexp::config::MatexpConfig;
 use matexp::experiments::{ablations, report};
-use matexp::runtime::artifacts::ArtifactRegistry;
-use matexp::runtime::engine::Engine;
-use matexp::runtime::Variant;
+use matexp::runtime::AnyEngine;
 
 fn main() {
     let cfg = MatexpConfig::default();
-    let Ok(registry) = ArtifactRegistry::discover(&cfg.artifacts_dir) else {
-        eprintln!("artifacts missing; run `make artifacts`");
-        return;
-    };
-    let mut engine = Engine::new(&registry, Variant::Xla).expect("engine");
+    let mut engine = AnyEngine::from_config(&cfg).expect("backend");
 
-    for (n, power) in [(64usize, 256u64), (128, 256), (256, 256), (512, 64)] {
+    for (n, power) in [(64usize, 256u64), (128, 256), (256, 64)] {
         let arms = ablations::transfer_ablation(&mut engine, n, power, cfg.seed)
             .expect("transfer ablation");
         print!(

@@ -2,8 +2,9 @@
 //! combinatorial use of matrix exponentiation: `(A^k)[i][j]` counts the
 //! walks of length `k` from `i` to `j`.
 //!
-//! Builds a 64-node ring with chords, counts walks with the PJRT engine,
-//! and cross-checks exact counts against a CPU u64 dynamic program.
+//! Builds a 64-node ring with chords, counts walks with the configured
+//! backend engine, and cross-checks exact counts against a CPU u64
+//! dynamic program.
 //!
 //! ```bash
 //! cargo run --release --example graph_paths
@@ -60,8 +61,7 @@ fn exact_walks(a: &Matrix, k: u64) -> Vec<u64> {
 
 fn main() -> Result<()> {
     let cfg = MatexpConfig::default();
-    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
-    let mut engine = Engine::new(&registry, cfg.variant)?;
+    let mut engine = AnyEngine::from_config(&cfg)?;
 
     let a = adjacency();
     println!("graph: {N}-ring + chords, {} edges", a.data().iter().filter(|&&v| v > 0.0).count() / 2);

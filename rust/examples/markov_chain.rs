@@ -13,8 +13,7 @@ use matexp::prelude::*;
 
 fn main() -> Result<()> {
     let cfg = MatexpConfig::default();
-    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
-    let mut engine = Engine::new(&registry, cfg.variant)?;
+    let mut engine = AnyEngine::from_config(&cfg)?;
 
     let n = 64;
     let p = Matrix::random_stochastic(n, 7);

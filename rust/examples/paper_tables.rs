@@ -7,8 +7,8 @@
 
 use matexp::config::MatexpConfig;
 use matexp::error::Result;
-use matexp::experiments::{report, run_table};
-use matexp::runtime::artifacts::ArtifactRegistry;
+use matexp::experiments::{report, run_table, run_table_sim};
+use matexp::runtime::AnyEngine;
 use matexp::simulator::device::DeviceSpec;
 
 fn main() -> Result<()> {
@@ -22,20 +22,17 @@ fn main() -> Result<()> {
     }
     println!();
 
-    let registry = if measure {
-        Some(ArtifactRegistry::discover(&cfg.artifacts_dir)?)
+    let mut engine: Option<AnyEngine> = if measure {
+        Some(AnyEngine::from_config(&cfg)?)
     } else {
-        match ArtifactRegistry::discover(&cfg.artifacts_dir) {
-            Ok(_) => None,
-            Err(e) => {
-                eprintln!("note: {e}");
-                None
-            }
-        }
+        None
     };
 
     for id in 2..=5u8 {
-        let t = run_table(id, &cfg, registry.as_ref())?;
+        let t = match engine.as_mut() {
+            Some(e) => run_table(id, &cfg, Some(e))?,
+            None => run_table_sim(id, &cfg)?,
+        };
         print!("{}", report::render_table(&t));
         print!("{}", report::render_figures(&t));
         println!();

@@ -1,15 +1,17 @@
 //! Quickstart: compute `A^512` for a 64×64 matrix three ways and compare.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! Runs on the config-selected backend (pure-Rust CPU by default; no
+//! artifacts needed).
 
 use matexp::prelude::*;
 
 fn main() -> Result<()> {
     let cfg = MatexpConfig::default();
-    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
-    let mut engine = Engine::new(&registry, cfg.variant)?;
+    let mut engine = AnyEngine::from_config(&cfg)?;
     println!("platform: {}", engine.platform());
 
     // a well-conditioned random input (spectral radius ≈ 1 so high powers

@@ -8,7 +8,8 @@ use std::str::FromStr;
 
 use crate::error::{MatexpError, Result};
 use crate::json_obj;
-use crate::runtime::Variant;
+use crate::linalg::expm::CpuAlgo;
+use crate::runtime::{BackendKind, Variant};
 use crate::util::json::Json;
 
 /// Dynamic batcher knobs (coordinator layer).
@@ -31,9 +32,15 @@ impl Default for BatcherConfig {
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
+    /// Which execution backend engines run on (`cpu` is the default and
+    /// needs nothing beyond this crate; `pjrt` needs the `xla` feature +
+    /// artifacts; `sim` is the calibrated C2050 timing model).
+    pub backend: BackendKind,
+    /// CPU matmul variant the `cpu` backend executes launches with.
+    pub cpu_algo: CpuAlgo,
     /// Directory holding `manifest.json` + `*.hlo.txt` (from `make artifacts`).
     pub artifacts_dir: PathBuf,
-    /// Which kernel variant the engine executes.
+    /// Which kernel variant the PJRT backend executes.
     pub variant: Variant,
     /// Worker threads in the serving coordinator.
     pub workers: usize,
@@ -59,6 +66,8 @@ pub struct MatexpConfig {
 impl Default for MatexpConfig {
     fn default() -> Self {
         Self {
+            backend: BackendKind::Cpu,
+            cpu_algo: CpuAlgo::Blocked,
             artifacts_dir: default_artifacts_dir(),
             variant: Variant::Xla,
             workers: 4,
@@ -99,6 +108,14 @@ impl MatexpConfig {
         let obj = v.as_obj().ok_or_else(|| bad("<root>"))?;
         for (key, val) in obj {
             match key.as_str() {
+                "backend" => {
+                    cfg.backend =
+                        BackendKind::from_str(val.as_str().ok_or_else(|| bad("backend"))?)?;
+                }
+                "cpu_algo" => {
+                    cfg.cpu_algo =
+                        CpuAlgo::from_str(val.as_str().ok_or_else(|| bad("cpu_algo"))?)?;
+                }
                 "artifacts_dir" => {
                     cfg.artifacts_dir =
                         PathBuf::from(val.as_str().ok_or_else(|| bad("artifacts_dir"))?);
@@ -163,6 +180,8 @@ impl MatexpConfig {
     /// Serialize (for `matexp info --config` and config-file scaffolding).
     pub fn to_json(&self) -> Json {
         json_obj![
+            ("backend", self.backend.as_str()),
+            ("cpu_algo", self.cpu_algo.name()),
             ("artifacts_dir", self.artifacts_dir.display().to_string()),
             ("variant", self.variant.as_str()),
             ("workers", self.workers),
@@ -224,6 +243,26 @@ mod tests {
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
         assert_eq!(cfg.variant, Variant::Xla);
+        assert_eq!(cfg.backend, BackendKind::Cpu);
+        assert_eq!(cfg.cpu_algo, CpuAlgo::Blocked);
+    }
+
+    #[test]
+    fn backend_and_cpu_algo_parse() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"backend": "sim", "cpu_algo": "threaded"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::Sim);
+        assert_eq!(cfg.cpu_algo, CpuAlgo::Threaded);
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"backend": "tpu"}"#).unwrap()
+        )
+        .is_err());
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"cpu_algo": "gpu"}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! deployment shape that vision implies: a multi-worker service that
 //! admits `A^N` requests, groups them by matrix size in a dynamic batcher,
 //! plans each one (binary / packed / fused / naive), and executes plans on
-//! per-worker PJRT engines with device-resident buffers.
+//! per-worker backend engines ([`crate::runtime::Backend`]) with
+//! device-resident buffers.
 //!
 //! Data flow:
 //!

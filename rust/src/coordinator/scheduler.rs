@@ -29,7 +29,10 @@ pub enum Strategy {
     CpuSequential,
 }
 
-/// Validate a request against the config and known artifact sizes.
+/// Validate a request against the config and the backend's servable
+/// sizes. An empty `sizes` slice means the backend is size-unrestricted
+/// (the pure-Rust backends); a non-empty slice is the artifact inventory
+/// (PJRT).
 pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<()> {
     if req.power == 0 {
         return Err(MatexpError::Service("power must be >= 1".into()));
@@ -45,7 +48,7 @@ pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<
     }
     match req.method {
         Method::CpuSeq => Ok(()), // CPU path accepts any size
-        _ if sizes.contains(&req.n()) => Ok(()),
+        _ if sizes.is_empty() || sizes.contains(&req.n()) => Ok(()),
         _ => Err(MatexpError::Service(format!(
             "no artifacts for n={} (have {:?}); method {} needs them",
             req.n(),
@@ -54,7 +57,7 @@ pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<
         ))),
     }
     // FusedArtifact availability for a specific power is checked by the
-    // worker (it has the registry); admission only validates what it can.
+    // worker (it has the backend); admission only validates what it can.
 }
 
 /// Pick the execution strategy for an admitted request.
@@ -97,6 +100,13 @@ mod tests {
         assert!(admit(&req(100, 512, Method::Ours), &[8, 64], &cfg()).is_err());
         // but the CPU path takes anything
         admit(&req(100, 512, Method::CpuSeq), &[8, 64], &cfg()).unwrap();
+    }
+
+    #[test]
+    fn empty_size_list_admits_any_size() {
+        // size-unrestricted backends (cpu/sim) publish no size inventory
+        admit(&req(100, 512, Method::Ours), &[], &cfg()).unwrap();
+        admit(&req(7, 2, Method::OursPacked), &[], &cfg()).unwrap();
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The serving loop: submit → admission → collector/batcher → workers.
 //!
 //! Threads:
-//! * N worker threads, each with its own PJRT [`Engine`] (engines are
+//! * N worker threads, each with its own backend engine (backends may be
 //!   `!Send`), pulling batches from a shared queue;
 //! * one collector thread running the [`Batcher`] (size-or-deadline);
 //! * callers block on a per-request reply channel (the TCP front-end wraps
@@ -21,7 +21,7 @@ use crate::coordinator::request::{ExpmRequest, ExpmResponse, Method};
 use crate::coordinator::{scheduler, worker};
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
-use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::BackendKind;
 
 type Reply = std::result::Result<ExpmResponse, String>;
 type ReplyMap = Arc<Mutex<HashMap<u64, SyncSender<Reply>>>>;
@@ -42,18 +42,13 @@ pub struct ServiceHandle {
 }
 
 impl Service {
-    /// Discover artifacts, spawn workers + collector, return the handle.
+    /// Spawn workers + collector on the configured backend, return the
+    /// handle. An empty `sizes` inventory means size-unrestricted (the
+    /// pure-Rust backends); the PJRT backend publishes its artifact sizes
+    /// so admission can reject unservable requests up front.
     pub fn start(cfg: MatexpConfig) -> Result<ServiceHandle> {
         cfg.validate()?;
-        let registry = Arc::new(ArtifactRegistry::discover(&cfg.artifacts_dir)?);
-        let sizes = registry.sizes(cfg.variant);
-        if sizes.is_empty() {
-            return Err(MatexpError::Artifact(format!(
-                "no {} artifacts found under {}",
-                cfg.variant,
-                cfg.artifacts_dir.display()
-            )));
-        }
+        let sizes = servable_sizes(&cfg)?;
         let metrics = Arc::new(Metrics::new());
         let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
 
@@ -67,7 +62,6 @@ impl Service {
         let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         for widx in 0..cfg.workers {
-            let registry = Arc::clone(&registry);
             let cfg_w = cfg.clone();
             let batch_rx = Arc::clone(&batch_rx);
             let replies = Arc::clone(&replies);
@@ -77,7 +71,7 @@ impl Service {
                 std::thread::Builder::new()
                     .name(format!("matexp-worker-{widx}"))
                     .spawn(move || {
-                        worker_loop(&registry, &cfg_w, &batch_rx, &replies, &metrics, &ready_tx)
+                        worker_loop(&cfg_w, &batch_rx, &replies, &metrics, &ready_tx)
                     })
                     .map_err(MatexpError::Io)?,
             );
@@ -156,15 +150,44 @@ fn collector_loop(
     }
 }
 
+/// Size inventory for admission control: PJRT is bounded by its compiled
+/// artifacts; the pure-Rust backends serve any size (empty inventory).
+fn servable_sizes(cfg: &MatexpConfig) -> Result<Vec<usize>> {
+    match cfg.backend {
+        BackendKind::Cpu | BackendKind::Sim => Ok(Vec::new()),
+        BackendKind::Pjrt => pjrt_sizes(cfg),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_sizes(cfg: &MatexpConfig) -> Result<Vec<usize>> {
+    let registry = crate::runtime::artifacts::ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    let sizes = registry.sizes(cfg.variant);
+    if sizes.is_empty() {
+        return Err(MatexpError::Artifact(format!(
+            "no {} artifacts found under {}",
+            cfg.variant,
+            cfg.artifacts_dir.display()
+        )));
+    }
+    Ok(sizes)
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_sizes(_cfg: &MatexpConfig) -> Result<Vec<usize>> {
+    Err(MatexpError::Config(
+        "backend \"pjrt\" needs this crate built with `--features xla`".into(),
+    ))
+}
+
 fn worker_loop(
-    registry: &ArtifactRegistry,
     cfg: &MatexpConfig,
     batch_rx: &Mutex<Receiver<Batch>>,
     replies: &ReplyMap,
     metrics: &Metrics,
     ready_tx: &SyncSender<std::result::Result<(), String>>,
 ) {
-    let mut engine = match worker::build_engine(registry, cfg) {
+    let mut engine = match worker::build_engine(cfg) {
         Ok(e) => {
             let _ = ready_tx.send(Ok(()));
             e
@@ -211,7 +234,8 @@ fn worker_loop(
 }
 
 impl ServiceHandle {
-    /// Matrix sizes this service can serve on the GPU-path methods.
+    /// Matrix sizes this service can serve on the device-path methods;
+    /// empty means unrestricted (size-agnostic backend).
     pub fn sizes(&self) -> &[usize] {
         &self.sizes
     }

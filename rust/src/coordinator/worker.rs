@@ -1,5 +1,6 @@
-//! Worker: owns a PJRT [`Engine`] (engines are `!Send`, so each worker
-//! thread builds its own) and executes scheduled requests.
+//! Worker: owns an [`Engine`] over the configured backend (backends may
+//! be `!Send`, so each worker thread builds its own) and executes
+//! scheduled requests.
 
 use std::time::Instant;
 
@@ -8,12 +9,12 @@ use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse};
 use crate::coordinator::scheduler::{strategy_for, Strategy};
 use crate::error::Result;
 use crate::linalg::{self, CpuAlgo};
-use crate::runtime::artifacts::ArtifactRegistry;
-use crate::runtime::engine::Engine;
+use crate::runtime::engine::AnyEngine;
+use crate::runtime::{Backend, Engine};
 
 /// Execute one request on this worker's engine.
-pub fn execute_request(
-    engine: &mut Engine,
+pub fn execute_request<B: Backend>(
+    engine: &mut Engine<B>,
     cfg: &MatexpConfig,
     req: &ExpmRequest,
 ) -> Result<ExpmResponse> {
@@ -52,14 +53,14 @@ pub fn execute_request(
     Ok(ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind })
 }
 
-/// Build the engine a worker thread uses (one per thread; compiled
-/// executables are cached inside for the worker's lifetime). Sizes listed
-/// in `cfg.warmup_sizes` are compiled AND executed once so the worker's
+/// Build the engine a worker thread uses (one per thread; compiled/cached
+/// state lives inside for the worker's lifetime). Sizes listed in
+/// `cfg.warmup_sizes` are prepared AND executed once so the worker's
 /// first real request is served at steady-state latency.
-pub fn build_engine(registry: &ArtifactRegistry, cfg: &MatexpConfig) -> Result<Engine> {
-    let mut engine = Engine::new(registry, cfg.variant)?;
+pub fn build_engine(cfg: &MatexpConfig) -> Result<AnyEngine> {
+    let mut engine = Engine::from_config(cfg)?;
     for &n in &cfg.warmup_sizes {
-        // a size without artifacts is a config mistake worth surfacing
+        // a size the backend cannot serve is a config mistake worth surfacing
         engine.warmup_exec(n)?;
     }
     Ok(engine)
@@ -69,17 +70,12 @@ pub fn build_engine(registry: &ArtifactRegistry, cfg: &MatexpConfig) -> Result<E
 mod tests {
     use super::*;
     use crate::coordinator::request::Method;
-    use crate::config::default_artifacts_dir;
     use crate::linalg::matrix::Matrix;
 
-    fn setup() -> Option<(Engine, MatexpConfig)> {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            return None; // artifacts not built
-        }
-        let registry = ArtifactRegistry::discover(&dir).unwrap();
-        let cfg = MatexpConfig::default();
-        Some((build_engine(&registry, &cfg).unwrap(), cfg))
+    fn setup() -> (AnyEngine, MatexpConfig) {
+        let mut cfg = MatexpConfig::default();
+        cfg.warmup_sizes = vec![8];
+        (build_engine(&cfg).unwrap(), cfg)
     }
 
     fn req(method: Method, power: u64) -> ExpmRequest {
@@ -87,8 +83,8 @@ mod tests {
     }
 
     #[test]
-    fn all_gpu_methods_agree_with_cpu() {
-        let Some((mut engine, cfg)) = setup() else { return };
+    fn all_backend_methods_agree_with_cpu() {
+        let (mut engine, cfg) = setup();
         let r_cpu = execute_request(&mut engine, &cfg, &req(Method::CpuSeq, 13)).unwrap();
         for method in [
             Method::Ours,
@@ -108,7 +104,7 @@ mod tests {
 
     #[test]
     fn stats_reflect_method_costs() {
-        let Some((mut engine, cfg)) = setup() else { return };
+        let (mut engine, cfg) = setup();
         let naive = execute_request(&mut engine, &cfg, &req(Method::NaiveGpu, 64)).unwrap();
         assert_eq!(naive.stats.launches, 63);
         assert_eq!(naive.stats.h2d_transfers, 2 * 63);
@@ -120,14 +116,30 @@ mod tests {
     }
 
     #[test]
-    fn fused_artifact_runs_for_shipped_powers() {
-        let Some((mut engine, cfg)) = setup() else { return };
-        let m = Matrix::random_spectral(64, 0.9, 6);
+    fn fused_runs_for_shipped_powers() {
+        let (mut engine, cfg) = setup();
+        let m = Matrix::random_spectral(8, 0.9, 6);
         let r = ExpmRequest { id: 2, matrix: m, power: 64, method: Method::FusedArtifact };
         let resp = execute_request(&mut engine, &cfg, &r).unwrap();
         assert_eq!(resp.stats.launches, 1);
         // and errors cleanly for an absent power
-        let r = ExpmRequest { id: 3, matrix: Matrix::identity(64), power: 65, method: Method::FusedArtifact };
+        let r = ExpmRequest {
+            id: 3,
+            matrix: Matrix::identity(8),
+            power: 65,
+            method: Method::FusedArtifact,
+        };
         assert!(execute_request(&mut engine, &cfg, &r).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn unbuildable_backend_surfaces_from_build_engine() {
+        // build_engine must propagate backend-construction failures, not
+        // swallow them: pjrt without the xla feature is a clean error
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = crate::runtime::BackendKind::Pjrt;
+        let err = build_engine(&cfg).unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
     }
 }

@@ -1,42 +1,75 @@
-//! Crate-wide error type.
-
-use thiserror::Error;
+//! Crate-wide error type (hand-rolled: the default build has zero
+//! external dependencies).
 
 /// Everything that can go wrong across the coordinator, runtime and
 /// substrates. The `From` impls let `?` flow through all layers.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum MatexpError {
     /// Artifact directory / manifest problems (missing `make artifacts`?).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
+    /// Execution-backend failures (unsupported op, buffer mismatch, PJRT).
+    Backend(String),
+
     /// PJRT / XLA runtime failures.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Invalid plan or plan/executable mismatch.
-    #[error("plan error: {0}")]
     Plan(String),
 
     /// Shape/dimension mismatches in the CPU substrate.
-    #[error("linalg error: {0}")]
     Linalg(String),
 
     /// Bad configuration.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Serving-layer failures (queue closed, worker died, protocol).
-    #[error("service error: {0}")]
     Service(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
 }
 
+impl std::fmt::Display for MatexpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MatexpError::Artifact(m) => write!(f, "artifact error: {m}"),
+            MatexpError::Backend(m) => write!(f, "backend error: {m}"),
+            MatexpError::Xla(m) => write!(f, "xla runtime error: {m}"),
+            MatexpError::Plan(m) => write!(f, "plan error: {m}"),
+            MatexpError::Linalg(m) => write!(f, "linalg error: {m}"),
+            MatexpError::Config(m) => write!(f, "config error: {m}"),
+            MatexpError::Service(m) => write!(f, "service error: {m}"),
+            MatexpError::Io(e) => write!(f, "io error: {e}"),
+            MatexpError::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MatexpError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MatexpError::Io(e) => Some(e),
+            MatexpError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MatexpError {
+    fn from(e: std::io::Error) -> Self {
+        MatexpError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for MatexpError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        MatexpError::Json(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for MatexpError {
     fn from(e: xla::Error) -> Self {
         MatexpError::Xla(e.to_string())
@@ -44,3 +77,16 @@ impl From<xla::Error> for MatexpError {
 }
 
 pub type Result<T> = std::result::Result<T, MatexpError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_layer() {
+        assert!(MatexpError::Backend("x".into()).to_string().starts_with("backend error"));
+        assert!(MatexpError::Config("x".into()).to_string().starts_with("config error"));
+        let io: MatexpError = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+}

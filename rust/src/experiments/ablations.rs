@@ -14,8 +14,10 @@ use std::time::Instant;
 use crate::error::Result;
 use crate::linalg::{self, matrix::Matrix};
 use crate::plan::Plan;
-use crate::runtime::artifacts::ArtifactRegistry;
-use crate::runtime::engine::{Engine, ExecStats};
+use crate::runtime::{Backend, Engine, ExecStats};
+
+#[cfg(feature = "xla")]
+use crate::runtime::{artifacts::ArtifactRegistry, PjrtBackend};
 
 /// One ablation arm's outcome.
 #[derive(Clone, Debug)]
@@ -43,9 +45,12 @@ impl ArmResult {
 }
 
 /// A1 — §4.3.7 TILE sweep: run every tiled matmul artifact at size `n`,
-/// reporting wall time + the manifest's VMEM/MXU estimates.
+/// reporting wall time + the manifest's VMEM/MXU estimates. Tiled
+/// artifacts only exist on the PJRT backend, so this ablation needs the
+/// `xla` feature.
+#[cfg(feature = "xla")]
 pub fn tile_sweep(
-    engine: &mut Engine,
+    engine: &mut Engine<PjrtBackend>,
     registry: &ArtifactRegistry,
     n: usize,
     seed: u64,
@@ -81,8 +86,8 @@ pub fn tile_sweep(
 
 /// A2 — §4.3.8 transfer ablation: identical binary plan, two residency
 /// disciplines. The gap is purely host↔device traffic + launch path.
-pub fn transfer_ablation(
-    engine: &mut Engine,
+pub fn transfer_ablation<B: Backend>(
+    engine: &mut Engine<B>,
     n: usize,
     power: u64,
     seed: u64,
@@ -100,8 +105,8 @@ pub fn transfer_ablation(
 
 /// A3 — launch-fusion ablation: every "ours" execution discipline at the
 /// same (n, power).
-pub fn fusion_ablation(
-    engine: &mut Engine,
+pub fn fusion_ablation<B: Backend>(
+    engine: &mut Engine<B>,
     n: usize,
     power: u64,
     seed: u64,
@@ -127,7 +132,7 @@ pub fn fusion_ablation(
     Ok(out)
 }
 
-fn engine_supports_fused(engine: &mut Engine, a: &Matrix, power: u64) -> bool {
+fn engine_supports_fused<B: Backend>(engine: &mut Engine<B>, a: &Matrix, power: u64) -> bool {
     engine.expm_fused_artifact(a, power).is_ok()
 }
 
@@ -157,17 +162,11 @@ pub fn cpu_variants(n: usize, seed: u64) -> Vec<ArmResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::default_artifacts_dir;
-    use crate::runtime::Variant;
+    use crate::linalg::CpuAlgo;
+    use crate::runtime::CpuEngine;
 
-    fn engine() -> Option<(Engine, ArtifactRegistry)> {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        let reg = ArtifactRegistry::discover(&dir).unwrap();
-        let e = Engine::new(&reg, Variant::Xla).unwrap();
-        Some((e, reg))
+    fn engine() -> CpuEngine {
+        Engine::cpu(CpuAlgo::Blocked)
     }
 
     #[test]
@@ -179,8 +178,8 @@ mod tests {
 
     #[test]
     fn transfer_ablation_shows_transfer_gap() {
-        let Some((mut e, _)) = engine() else { return };
-        let arms = transfer_ablation(&mut e, 64, 256, 9).unwrap();
+        let mut e = engine();
+        let arms = transfer_ablation(&mut e, 32, 256, 9).unwrap();
         assert_eq!(arms.len(), 2);
         let resident = &arms[0];
         let roundtrip = &arms[1];
@@ -193,30 +192,23 @@ mod tests {
 
     #[test]
     fn fusion_ablation_orders_launch_counts() {
-        let Some((mut e, _)) = engine() else { return };
-        let arms = fusion_ablation(&mut e, 64, 256, 9).unwrap();
+        let mut e = engine();
+        let arms = fusion_ablation(&mut e, 32, 256, 9).unwrap();
         let get = |name: &str| {
             arms.iter().find(|a| a.name == name).unwrap_or_else(|| panic!("{name} missing"))
         };
         // 256 = 2^8: binary 8 launches, chained 2 (square4×2), packed 8+pack+unpack
         assert_eq!(get("binary").launches, 8);
         assert!(get("chained-square4").launches < get("binary").launches);
-        if let Some(fused) = arms.iter().find(|a| a.name == "fused-artifact") {
-            assert_eq!(fused.launches, 1);
-        }
+        let fused = arms.iter().find(|a| a.name == "fused-artifact");
+        assert_eq!(fused.expect("256 is a shipped fused power").launches, 1);
     }
 
     #[test]
-    fn tile_sweep_runs_when_tiles_exist() {
-        let Some((mut e, reg)) = engine() else { return };
-        let n = reg
-            .tiles("matmul", 128)
-            .first()
-            .map(|_| 128)
-            .or_else(|| reg.tiles("matmul", 256).first().map(|_| 256));
-        let Some(n) = n else { return };
-        let arms = tile_sweep(&mut e, &reg, n, 3).unwrap();
-        assert!(!arms.is_empty());
-        assert!(arms.iter().all(|a| a.launches == 1));
+    fn fusion_ablation_skips_fused_for_unshipped_power() {
+        let mut e = engine();
+        let arms = fusion_ablation(&mut e, 16, 100, 3).unwrap();
+        assert!(arms.iter().all(|a| a.name != "fused-artifact"));
+        assert!(arms.len() >= 5);
     }
 }

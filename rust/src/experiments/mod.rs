@@ -21,4 +21,4 @@ pub mod tables;
 pub use ablations::ArmResult;
 pub use paper::{paper_cell, paper_table, paper_tables, PaperCell, PaperTable};
 pub use report::{render_ablation, render_figures, render_table};
-pub use tables::{run_table, CellResult, MethodTimes, TableResult};
+pub use tables::{run_table, run_table_sim, CellResult, MethodTimes, TableResult};

@@ -248,7 +248,7 @@ pub fn render_ablation(title: &str, arms: &[ArmResult]) -> String {
 mod tests {
     use super::*;
     use crate::config::MatexpConfig;
-    use crate::experiments::tables::run_table;
+    use crate::experiments::tables::run_table_sim;
 
     #[test]
     fn figure_id_mapping_matches_paper() {
@@ -260,7 +260,7 @@ mod tests {
 
     #[test]
     fn table_render_contains_all_blocks() {
-        let t = run_table(2, &MatexpConfig::default(), None).unwrap();
+        let t = run_table_sim(2, &MatexpConfig::default()).unwrap();
         let s = render_table(&t);
         for needle in ["Table 2", "paper", "simulated", "measured", "Naive Speed UP", "launches naive/ours"] {
             assert!(s.contains(needle), "missing {needle:?}:\n{s}");
@@ -269,7 +269,7 @@ mod tests {
 
     #[test]
     fn figures_render_csv_series() {
-        let t = run_table(5, &MatexpConfig::default(), None).unwrap();
+        let t = run_table_sim(5, &MatexpConfig::default()).unwrap();
         let s = render_figures(&t);
         assert!(s.contains("Figure 11"), "{s}");
         assert!(s.contains("Figure 12"), "{s}");

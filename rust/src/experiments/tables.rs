@@ -5,9 +5,9 @@
 //! * **paper** — the published number ([`super::paper`]);
 //! * **simulated** — the calibrated Tesla C2050 analytic model
 //!   ([`crate::simulator`]) predicting the cell;
-//! * **measured** — this testbed: the PJRT engine for both GPU arms and
-//!   the naive i-j-k loop for the CPU arm (capped + extrapolated, see
-//!   [`crate::config::MatexpConfig::cpu_measure_cap`]).
+//! * **measured** — this testbed: an [`Engine`] over any backend for both
+//!   GPU-discipline arms and the naive i-j-k loop for the CPU arm (capped
+//!   + extrapolated, see [`crate::config::MatexpConfig::cpu_measure_cap`]).
 
 use std::time::Instant;
 
@@ -16,8 +16,7 @@ use crate::error::Result;
 use crate::experiments::paper::{self, PaperCell};
 use crate::linalg::{self, matrix::Matrix};
 use crate::plan::Plan;
-use crate::runtime::artifacts::ArtifactRegistry;
-use crate::runtime::engine::Engine;
+use crate::runtime::{Backend, CpuBackend, Engine};
 use crate::simulator::calibrate;
 use crate::simulator::device::DeviceSpec;
 use crate::simulator::timing::GpuTimingModel;
@@ -125,17 +124,28 @@ pub fn measure_cpu_extrapolated(a: &Matrix, power: u64, cap: usize) -> f64 {
     measured * multiplies as f64 / sample as f64
 }
 
-/// Measure one cell end-to-end on the live engine.
-pub fn measure_cell(
-    engine: &mut Engine,
+/// Measure one cell end-to-end on a live engine (any backend).
+///
+/// Call [`Engine::warmup_exec`] once beforehand for steady-state numbers
+/// ([`run_table`] does). On a time-modeling backend ([`Backend::models_time`],
+/// the simulator) the GPU arms report *modeled* seconds, so the
+/// sequential-CPU arm is modeled from the same calibration rather than
+/// measured on this host — otherwise the column would divide real 2020s
+/// host seconds by simulated 2012 device seconds.
+pub fn measure_cell<B: Backend>(
+    engine: &mut Engine<B>,
     cfg: &MatexpConfig,
     a: &Matrix,
     power: u64,
 ) -> Result<MethodTimes> {
-    engine.warmup_exec(a.n())?; // steady-state numbers, not first-touch
     let (_, naive_stats) = engine.expm_naive_roundtrip(a, power)?;
     let (_, ours_stats) = engine.expm(a, &ours_plan(cfg, power))?;
-    let cpu_s = measure_cpu_extrapolated(a, power, cfg.cpu_measure_cap);
+    let cpu_s = if engine.backend().models_time() {
+        let (_, cpu_flops) = calibrated_models();
+        2.0 * (a.n() as f64).powi(3) * (power - 1) as f64 / cpu_flops
+    } else {
+        measure_cpu_extrapolated(a, power, cfg.cpu_measure_cap)
+    };
     Ok(MethodTimes {
         naive_gpu_s: naive_stats.wall_s,
         seq_cpu_s: cpu_s,
@@ -143,28 +153,28 @@ pub fn measure_cell(
     })
 }
 
-/// Regenerate one paper table (2..=5). `registry`/`measure` control
-/// whether the measured column is produced (simulation always is).
-pub fn run_table(
+/// Regenerate one paper table (2..=5). Pass a live engine to produce the
+/// measured column (simulation always is produced); see [`run_table_sim`]
+/// for the engine-less form.
+pub fn run_table<B: Backend>(
     id: u8,
     cfg: &MatexpConfig,
-    registry: Option<&ArtifactRegistry>,
+    mut engine: Option<&mut Engine<B>>,
 ) -> Result<TableResult> {
     let spec = paper::paper_table(id).ok_or_else(|| {
         crate::error::MatexpError::Config(format!("no paper table {id} (have 2..=5)"))
     })?;
     let (gpu, cpu_flops) = calibrated_models();
-    let mut engine = match registry {
-        Some(reg) => Some(Engine::new(reg, cfg.variant)?),
-        None => None,
-    };
     let a = Matrix::random_spectral(spec.n, 0.999, cfg.seed);
+    if let Some(e) = engine.as_mut() {
+        e.warmup_exec(spec.n)?; // once per table: steady-state, not first-touch
+    }
     let mut cells = Vec::new();
     for cell in spec.cells {
         let power = cell.power;
         let simulated = simulate_cell(&gpu, cpu_flops, cfg, spec.n, power);
         let measured = match engine.as_mut() {
-            Some(e) => Some(measure_cell(e, cfg, &a, power)?),
+            Some(e) => Some(measure_cell(&mut **e, cfg, &a, power)?),
             None => None,
         };
         cells.push(CellResult {
@@ -180,6 +190,11 @@ pub fn run_table(
         });
     }
     Ok(TableResult { id, n: spec.n, cells })
+}
+
+/// [`run_table`] without a measured column: paper + simulated only.
+pub fn run_table_sim(id: u8, cfg: &MatexpConfig) -> Result<TableResult> {
+    run_table::<CpuBackend>(id, cfg, None)
 }
 
 #[cfg(test)]
@@ -275,12 +290,23 @@ mod tests {
 
     #[test]
     fn unknown_table_id_rejected() {
-        assert!(run_table(7, &cfg(), None).is_err());
+        assert!(run_table_sim(7, &cfg()).is_err());
+    }
+
+    #[test]
+    fn measured_column_produced_with_live_engine() {
+        let mut cfg = cfg();
+        cfg.cpu_measure_cap = 1;
+        let mut engine = Engine::cpu(crate::linalg::CpuAlgo::Blocked);
+        let t = run_table(2, &cfg, Some(&mut engine)).unwrap();
+        assert!(t.cells.iter().all(|c| c.measured.is_some()));
+        let m = t.cells[0].measured.unwrap();
+        assert!(m.naive_gpu_s > 0.0 && m.ours_s > 0.0 && m.seq_cpu_s > 0.0);
     }
 
     #[test]
     fn simulation_only_table_runs_fast() {
-        let t = run_table(2, &cfg(), None).unwrap();
+        let t = run_table_sim(2, &cfg()).unwrap();
         assert_eq!(t.n, 64);
         assert_eq!(t.cells.len(), 5);
         assert!(t.cells.iter().all(|c| c.measured.is_none()));

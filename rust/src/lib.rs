@@ -5,9 +5,10 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
-//!   square-and-multiply launch scheduler ([`plan`]), the device-resident
-//!   buffer engine ([`runtime::engine`]), a serving coordinator with a
-//!   dynamic batcher ([`coordinator`]) and a TCP front-end ([`server`]).
+//!   square-and-multiply launch scheduler ([`plan`]), a pluggable execution
+//!   layer ([`runtime::Backend`]) replayed by a generic engine
+//!   ([`runtime::Engine`]), a serving coordinator with a dynamic batcher
+//!   ([`coordinator`]) and a TCP front-end ([`server`]).
 //! * **Layer 2/1 (python/compile)** — JAX compute graphs calling the tiled
 //!   Pallas matmul kernel, AOT-lowered to HLO text in `artifacts/`.
 //! * **Substrates** — a sequential/blocked/threaded CPU linear-algebra
@@ -15,20 +16,35 @@
 //!   C2050 timing model ([`simulator`], the substitute for the 2012
 //!   testbed).
 //!
-//! Quick start (artifacts built by `make artifacts`):
+//! Three execution backends ship:
 //!
-//! ```no_run
+//! * [`runtime::CpuBackend`] — pure Rust; the **default**, needs no
+//!   artifacts, no GPU, no external crates. `cargo test` runs the full
+//!   suite against it on any machine.
+//! * [`runtime::SimBackend`] — the calibrated C2050 timing model, so the
+//!   paper's Tables 2–5 reproduce without hardware.
+//! * [`runtime::PjrtBackend`] *(cargo feature `xla`)* — AOT HLO artifacts
+//!   (`make artifacts`) executed on PJRT with device-resident buffers.
+//!
+//! Quick start (pure Rust, runs as-is):
+//!
+//! ```
 //! use matexp::prelude::*;
 //!
-//! let cfg = MatexpConfig::default();
-//! let registry = ArtifactRegistry::discover(&cfg.artifacts_dir).unwrap();
-//! let mut engine = Engine::new(&registry, cfg.variant).unwrap();
+//! let mut engine = Engine::cpu(CpuAlgo::Blocked);
 //! let a = Matrix::random_spectral(64, 0.99, 42);
 //! let plan = Plan::binary(512, true);
 //! let (pow, stats) = engine.expm(&a, &plan).unwrap();
+//! // device-resident discipline: log(N) launches, TWO host crossings
+//! assert_eq!(stats.launches, plan.launches());
+//! assert_eq!((stats.h2d_transfers, stats.d2h_transfers), (1, 1));
+//! assert!(pow.is_finite());
 //! println!("A^512 in {} launches ({} multiplies)", stats.launches, stats.multiplies);
-//! # let _ = pow;
 //! ```
+//!
+//! The same code runs on any backend — swap `Engine::cpu(..)` for
+//! `Engine::sim()` (predicted 2012 wall-clock in `stats.wall_s`) or, with
+//! `--features xla` and artifacts built, `Engine::pjrt(&registry, variant)`.
 
 pub mod bench;
 pub mod config;
@@ -50,8 +66,12 @@ pub mod prelude {
         service::Service,
     };
     pub use crate::error::{MatexpError, Result};
+    pub use crate::linalg::expm::CpuAlgo;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::plan::{Plan, PlanKind, Step};
-    pub use crate::runtime::{artifacts::ArtifactRegistry, engine::Engine, Variant};
+    pub use crate::runtime::{
+        artifacts::ArtifactRegistry, AnyBackend, AnyEngine, Backend, BackendKind, CpuBackend,
+        CpuEngine, Engine, SimBackend, SimEngine, Variant,
+    };
     pub use crate::simulator::device::DeviceSpec;
 }

@@ -42,6 +42,37 @@ impl CpuAlgo {
             CpuAlgo::Threaded => "threaded",
         }
     }
+
+    pub fn all() -> [CpuAlgo; 5] {
+        [
+            CpuAlgo::Naive,
+            CpuAlgo::Transposed,
+            CpuAlgo::Ikj,
+            CpuAlgo::Blocked,
+            CpuAlgo::Threaded,
+        ]
+    }
+}
+
+impl std::str::FromStr for CpuAlgo {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        CpuAlgo::all()
+            .into_iter()
+            .find(|a| a.name() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                MatexpError::Config(format!(
+                    "unknown cpu algo {s:?} (naive|transposed|ikj|blocked|threaded)"
+                ))
+            })
+    }
+}
+
+impl std::fmt::Display for CpuAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// `a^power` by `power - 1` successive multiplies (the paper's CPU loop).
@@ -80,6 +111,16 @@ mod tests {
 
     fn base() -> Matrix {
         Matrix::random_spectral(12, 0.95, 77)
+    }
+
+    #[test]
+    fn cpu_algo_string_roundtrip() {
+        use std::str::FromStr;
+        for a in CpuAlgo::all() {
+            assert_eq!(CpuAlgo::from_str(a.name()).unwrap(), a);
+        }
+        assert!(CpuAlgo::from_str("gpu").is_err());
+        assert_eq!(CpuAlgo::from_str("Blocked").unwrap(), CpuAlgo::Blocked);
     }
 
     #[test]

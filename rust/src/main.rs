@@ -17,10 +17,11 @@ use matexp::coordinator::service::Service;
 use matexp::error::{MatexpError, Result};
 use matexp::experiments::{self, ablations, report};
 use matexp::linalg::matrix::Matrix;
+use matexp::linalg::CpuAlgo;
 use matexp::plan::{Plan, PlanCost};
 use matexp::runtime::artifacts::ArtifactRegistry;
-use matexp::runtime::engine::Engine;
-use matexp::runtime::Variant;
+use matexp::runtime::engine::AnyEngine;
+use matexp::runtime::{BackendKind, Variant};
 use matexp::simulator::device::DeviceSpec;
 use matexp::util::cli::Args;
 
@@ -40,6 +41,9 @@ COMMANDS:
   bench-report all tables, simulation-only summary
 
 GLOBAL FLAGS:
+  --backend cpu|sim|pjrt   execution backend (default cpu; pjrt needs the
+                           `xla` cargo feature + `make artifacts`)
+  --cpu-algo naive|transposed|ikj|blocked|threaded
   --artifacts DIR   artifact directory (default ./artifacts or $MATEXP_ARTIFACTS)
   --variant xla|pallas
   --config FILE     JSON config file
@@ -73,6 +77,12 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
         Some(path) => MatexpConfig::from_file(std::path::Path::new(path))?,
         None => MatexpConfig::default(),
     };
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendKind::from_str(b)?;
+    }
+    if let Some(a) = args.get("cpu-algo") {
+        cfg.cpu_algo = CpuAlgo::from_str(a)?;
+    }
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
@@ -119,6 +129,13 @@ fn cmd_info(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     for (k, v) in spec.table1_rows() {
         println!("{k:<34} {v}");
     }
+    // `info` is the diagnostic command: report an unbuildable backend,
+    // don't die on it
+    println!("\nbackend : {}", cfg.backend);
+    match AnyEngine::from_config(cfg) {
+        Ok(engine) => println!("platform: {}", engine.platform()),
+        Err(e) => println!("platform: unavailable ({e})"),
+    }
     match ArtifactRegistry::discover(&cfg.artifacts_dir) {
         Ok(reg) => {
             println!("\n== artifacts ({}) ==", cfg.artifacts_dir.display());
@@ -127,11 +144,8 @@ fn cmd_info(args: &Args, cfg: &MatexpConfig) -> Result<()> {
                 println!("sizes[{variant}]: {:?}", reg.sizes(variant));
             }
             println!("fused expm powers @64: {:?}", reg.fused_expm_powers(64));
-            let mut engine = Engine::new(&reg, cfg.variant)?;
-            println!("\nplatform: {}", engine.platform());
-            let _ = &mut engine; // engine built = PJRT client verified
         }
-        Err(e) => println!("\nartifacts: unavailable ({e})"),
+        Err(e) => println!("\nartifacts: unavailable ({e}) — cpu/sim backends need none"),
     }
     Ok(())
 }
@@ -192,8 +206,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     let method = Method::from_str(&args.get_or("method", "ours"))?;
     args.reject_unknown()?;
 
-    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
-    let mut engine = Engine::new(&registry, cfg.variant)?;
+    let mut engine = AnyEngine::from_config(cfg)?;
     let a = Matrix::random_spectral(n, 0.999, cfg.seed);
     let req = matexp::coordinator::request::ExpmRequest {
         id: 0,
@@ -202,6 +215,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         method,
     };
     let resp = matexp::coordinator::worker::execute_request(&mut engine, cfg, &req)?;
+    println!("backend: {} ({})", cfg.backend, engine.platform());
     println!("method: {} (plan: {:?})", resp.method, resp.plan_kind);
     println!(
         "launches: {}  multiplies: {}  transfers: {}h2d/{}d2h  wall: {}",
@@ -220,12 +234,12 @@ fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         let measure = args.has("measure");
         let figures = args.has("figures");
         args.reject_unknown()?;
-        let registry = if measure {
-            Some(ArtifactRegistry::discover(&cfg.artifacts_dir)?)
+        let mut engine: Option<AnyEngine> = if measure {
+            Some(AnyEngine::from_config(cfg)?)
         } else {
             None
         };
-        let t = experiments::run_table(table, cfg, registry.as_ref())?;
+        let t = experiments::run_table(table, cfg, engine.as_mut())?;
         print!("{}", report::render_table(&t));
         if figures {
             print!("{}", report::render_figures(&t));
@@ -242,10 +256,11 @@ fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
             print!("{}", report::render_ablation(&format!("CPU matmul variants (n={n})"), &arms));
             return Ok(());
         }
-        let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
-        let mut engine = Engine::new(&registry, cfg.variant)?;
+        if which == "tiles" {
+            return cmd_ablation_tiles(cfg, n);
+        }
+        let mut engine = AnyEngine::from_config(cfg)?;
         let arms = match which.as_str() {
-            "tiles" => ablations::tile_sweep(&mut engine, &registry, n, cfg.seed)?,
             "transfers" => ablations::transfer_ablation(&mut engine, n, power, cfg.seed)?,
             "fusion" => ablations::fusion_ablation(&mut engine, n, power, cfg.seed)?,
             other => {
@@ -265,25 +280,43 @@ fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     ))
 }
 
+#[cfg(feature = "xla")]
+fn cmd_ablation_tiles(cfg: &MatexpConfig, n: usize) -> Result<()> {
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    let mut engine = matexp::runtime::Engine::pjrt(&registry, cfg.variant)?;
+    let arms = ablations::tile_sweep(&mut engine, &registry, n, cfg.seed)?;
+    print!("{}", report::render_ablation(&format!("tiles (n={n})"), &arms));
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_ablation_tiles(_cfg: &MatexpConfig, _n: usize) -> Result<()> {
+    Err(MatexpError::Config(
+        "the tiles ablation sweeps PJRT artifacts; rebuild with `--features xla`".into(),
+    ))
+}
+
 fn cmd_serve(args: &Args, cfg: MatexpConfig) -> Result<()> {
     let conn_threads: usize = args.get_parsed_or("conn-threads", 16)?;
     args.reject_unknown()?;
     let addr = cfg.server_addr.clone();
     println!(
-        "starting coordinator: {} workers, variant {}, artifacts {}",
-        cfg.workers,
-        cfg.variant,
-        cfg.artifacts_dir.display()
+        "starting coordinator: {} workers, backend {}",
+        cfg.workers, cfg.backend,
     );
     let service = Arc::new(Service::start(cfg)?);
-    println!("serving sizes {:?}", service.sizes());
+    if service.sizes().is_empty() {
+        println!("serving any matrix size (size-agnostic backend)");
+    } else {
+        println!("serving sizes {:?}", service.sizes());
+    }
     matexp::server::server::serve(service, &addr, conn_threads)
 }
 
 fn cmd_bench_report(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     args.reject_unknown()?;
     for id in 2..=5u8 {
-        let t = experiments::run_table(id, cfg, None)?;
+        let t = experiments::run_table_sim(id, cfg)?;
         print!("{}", report::render_table(&t));
         println!();
     }

@@ -1,0 +1,233 @@
+//! [`AnyBackend`] — runtime backend selection.
+//!
+//! The engine is generic over [`Backend`] (static dispatch, no boxing on
+//! the hot path); the coordinator and CLI pick the backend from config at
+//! runtime, so they run on this enum, which dispatches each trait call to
+//! the selected implementation.
+
+use crate::config::MatexpConfig;
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::runtime::backend::{Backend, SplitPair};
+use crate::runtime::cpu::{CpuBackend, CpuBuffer};
+use crate::runtime::sim::SimBackend;
+use crate::runtime::BackendKind;
+
+#[cfg(feature = "xla")]
+use crate::runtime::artifacts::ArtifactRegistry;
+#[cfg(feature = "xla")]
+use crate::runtime::pjrt::PjrtBackend;
+
+/// One of the shipped backends, chosen at runtime.
+pub enum AnyBackend {
+    Cpu(CpuBackend),
+    Sim(SimBackend),
+    #[cfg(feature = "xla")]
+    Pjrt(PjrtBackend),
+}
+
+/// Buffer handle for [`AnyBackend`].
+#[derive(Clone)]
+pub enum AnyBuffer {
+    /// CPU and simulator backends share the host buffer representation.
+    Host(CpuBuffer),
+    #[cfg(feature = "xla")]
+    Pjrt(std::rc::Rc<xla::PjRtBuffer>),
+}
+
+impl AnyBuffer {
+    fn host(&self) -> Result<&CpuBuffer> {
+        // without the xla feature the Host arm is exhaustive
+        #[allow(unreachable_patterns, clippy::match_single_binding)]
+        match self {
+            AnyBuffer::Host(b) => Ok(b),
+            _ => Err(MatexpError::Backend("buffer belongs to a different backend".into())),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    fn pjrt(&self) -> Result<&std::rc::Rc<xla::PjRtBuffer>> {
+        match self {
+            AnyBuffer::Pjrt(b) => Ok(b),
+            _ => Err(MatexpError::Backend("buffer belongs to a different backend".into())),
+        }
+    }
+}
+
+impl AnyBackend {
+    /// Build the backend the config asks for. `pjrt` requires the `xla`
+    /// cargo feature AND a discovered artifact directory.
+    pub fn from_config(cfg: &MatexpConfig) -> Result<AnyBackend> {
+        match cfg.backend {
+            BackendKind::Cpu => Ok(AnyBackend::Cpu(CpuBackend::new(cfg.cpu_algo))),
+            BackendKind::Sim => {
+                // the paper-calibrated C2050 model, so sim-backed stats
+                // line up with the experiment harness's simulated columns
+                let (model, _) = crate::experiments::tables::calibrated_models();
+                Ok(AnyBackend::Sim(SimBackend::new(model)))
+            }
+            BackendKind::Pjrt => pjrt_from_config(cfg),
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            AnyBackend::Cpu(_) => BackendKind::Cpu,
+            AnyBackend::Sim(_) => BackendKind::Sim,
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(_) => BackendKind::Pjrt,
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_from_config(cfg: &MatexpConfig) -> Result<AnyBackend> {
+    let registry = ArtifactRegistry::discover(&cfg.artifacts_dir)?;
+    Ok(AnyBackend::Pjrt(PjrtBackend::new(&registry, cfg.variant)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_from_config(_cfg: &MatexpConfig) -> Result<AnyBackend> {
+    Err(MatexpError::Config(
+        "backend \"pjrt\" needs this crate built with `--features xla`".into(),
+    ))
+}
+
+fn host_inputs(inputs: &[AnyBuffer]) -> Result<Vec<CpuBuffer>> {
+    inputs.iter().map(|b| b.host().map(Clone::clone)).collect()
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_inputs(inputs: &[AnyBuffer]) -> Result<Vec<std::rc::Rc<xla::PjRtBuffer>>> {
+    inputs.iter().map(|b| b.pjrt().map(Clone::clone)).collect()
+}
+
+impl Backend for AnyBackend {
+    type Buffer = AnyBuffer;
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBackend::Cpu(b) => b.name(),
+            AnyBackend::Sim(b) => b.name(),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.name(),
+        }
+    }
+
+    fn platform(&self) -> String {
+        match self {
+            AnyBackend::Cpu(b) => b.platform(),
+            AnyBackend::Sim(b) => b.platform(),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.platform(),
+        }
+    }
+
+    fn prepare(&mut self, op: &str, n: usize) -> Result<()> {
+        match self {
+            AnyBackend::Cpu(b) => b.prepare(op, n),
+            AnyBackend::Sim(b) => b.prepare(op, n),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.prepare(op, n),
+        }
+    }
+
+    fn upload(&mut self, m: &Matrix) -> Result<AnyBuffer> {
+        match self {
+            AnyBackend::Cpu(b) => Ok(AnyBuffer::Host(b.upload(m)?)),
+            AnyBackend::Sim(b) => Ok(AnyBuffer::Host(b.upload(m)?)),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => Ok(AnyBuffer::Pjrt(b.upload(m)?)),
+        }
+    }
+
+    fn download(&mut self, buf: &AnyBuffer, n: usize) -> Result<Matrix> {
+        match self {
+            AnyBackend::Cpu(b) => b.download(buf.host()?, n),
+            AnyBackend::Sim(b) => b.download(buf.host()?, n),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.download(buf.pjrt()?, n),
+        }
+    }
+
+    fn launch(&mut self, op: &str, n: usize, inputs: &[AnyBuffer]) -> Result<AnyBuffer> {
+        match self {
+            AnyBackend::Cpu(b) => Ok(AnyBuffer::Host(b.launch(op, n, &host_inputs(inputs)?)?)),
+            AnyBackend::Sim(b) => Ok(AnyBuffer::Host(b.launch(op, n, &host_inputs(inputs)?)?)),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => Ok(AnyBuffer::Pjrt(b.launch(op, n, &pjrt_inputs(inputs)?)?)),
+        }
+    }
+
+    fn split_pair(&mut self, buf: &AnyBuffer, n: usize) -> Result<SplitPair<AnyBuffer>> {
+        fn wrap<B, F: Fn(B) -> AnyBuffer>(s: SplitPair<B>, f: F) -> SplitPair<AnyBuffer> {
+            SplitPair {
+                first: f(s.first),
+                second: f(s.second),
+                h2d_transfers: s.h2d_transfers,
+                d2h_transfers: s.d2h_transfers,
+            }
+        }
+        match self {
+            AnyBackend::Cpu(b) => Ok(wrap(b.split_pair(buf.host()?, n)?, AnyBuffer::Host)),
+            AnyBackend::Sim(b) => Ok(wrap(b.split_pair(buf.host()?, n)?, AnyBuffer::Host)),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => Ok(wrap(b.split_pair(buf.pjrt()?, n)?, AnyBuffer::Pjrt)),
+        }
+    }
+
+    fn take_sim_time(&mut self) -> Option<f64> {
+        match self {
+            AnyBackend::Cpu(b) => b.take_sim_time(),
+            AnyBackend::Sim(b) => b.take_sim_time(),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.take_sim_time(),
+        }
+    }
+
+    fn models_time(&self) -> bool {
+        match self {
+            AnyBackend::Cpu(b) => b.models_time(),
+            AnyBackend::Sim(b) => b.models_time(),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.models_time(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_builds_the_selected_backend() {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Cpu;
+        assert_eq!(AnyBackend::from_config(&cfg).unwrap().kind(), BackendKind::Cpu);
+        cfg.backend = BackendKind::Sim;
+        let sim = AnyBackend::from_config(&cfg).unwrap();
+        assert_eq!(sim.kind(), BackendKind::Sim);
+        assert!(sim.platform().contains("C2050"), "{}", sim.platform());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn pjrt_without_feature_is_clean_config_error() {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Pjrt;
+        let err = AnyBackend::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn dispatch_roundtrip_through_cpu() {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Cpu;
+        let mut b = AnyBackend::from_config(&cfg).unwrap();
+        let m = Matrix::random(8, 5);
+        let buf = b.upload(&m).unwrap();
+        let sq = b.launch("square", 8, &[buf]).unwrap();
+        let want = crate::linalg::naive::matmul_naive(&m, &m);
+        assert!(b.download(&sq, 8).unwrap().approx_eq(&want, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,143 @@
+//! The pluggable execution layer: a [`Backend`] owns device buffers and
+//! executes the fixed launch vocabulary the planner emits; the generic
+//! [`crate::runtime::Engine`] replays plans on top of it.
+//!
+//! The paper's contribution is the *coordination* of launches (device
+//! residency, fused square-and-multiply), not any one GPU substrate, so
+//! the launch vocabulary is the trait boundary:
+//!
+//! | op         | inputs        | output      | multiplies |
+//! |------------|---------------|-------------|------------|
+//! | `matmul`   | A, B          | A·B         | 1          |
+//! | `square`   | A             | A²          | 1          |
+//! | `square{k}`| A             | A^(2^k)     | k          |
+//! | `sqmul`    | acc, base     | (acc·base, base²) pair | 2 |
+//! | `pack2`    | B             | (B, B) pair | 0          |
+//! | `step_sq`  | (acc, base)   | (acc, base²)| 1          |
+//! | `step_mul` | (acc, base)   | (acc·base², base²) | 2   |
+//! | `unpack0`  | (acc, base)   | acc         | 0          |
+//! | `expm{N}`  | A             | A^N         | binary(N)  |
+//!
+//! Three implementations ship: [`crate::runtime::CpuBackend`] (pure Rust,
+//! runs everywhere — the default), [`crate::runtime::SimBackend`] (the
+//! calibratable Tesla C2050 timing model; numerics via the CPU substrate,
+//! wall-clock simulated), and, behind the `xla` cargo feature,
+//! [`crate::runtime::PjrtBackend`] (AOT HLO artifacts on PJRT).
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::plan::Plan;
+
+/// Exponents the fused single-launch `expm{N}` op is available for — the
+/// same set `make artifacts` AOT-lowers, mirrored by every backend so
+/// "fused artifact for N" availability is backend-independent.
+pub const FUSED_EXPM_POWERS: [u64; 5] = [64, 128, 256, 512, 1024];
+
+/// Result of splitting a packed `[acc, base]` pair buffer, with the
+/// host↔device transfers the split cost on this backend: PJRT must
+/// round-trip the 2-tuple through the host (2 D2H + 2 H2D — ablation A2's
+/// "bad arm"); the pure-Rust backends split in place for free.
+pub struct SplitPair<B> {
+    pub first: B,
+    pub second: B,
+    pub h2d_transfers: usize,
+    pub d2h_transfers: usize,
+}
+
+/// A device-like execution substrate: opaque buffers plus the launch
+/// vocabulary above. Launch/transfer *accounting* lives in the engine —
+/// backends only move data and compute.
+///
+/// Backends may be `!Send` (PJRT objects live on their creating thread);
+/// the coordinator gives each worker thread its own backend.
+pub trait Backend {
+    /// Opaque device buffer handle; clones alias the same device data.
+    type Buffer: Clone;
+
+    /// Short machine name (`cpu` / `sim` / `pjrt`) for logs and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform summary (for `matexp info`).
+    fn platform(&self) -> String;
+
+    /// Compile/cache `op` at size `n`, erroring if this backend cannot
+    /// execute it (unknown op, missing artifact). Engines call this
+    /// outside timed regions so launches measure steady state.
+    fn prepare(&mut self, op: &str, n: usize) -> Result<()>;
+
+    /// Host matrix → device buffer (one H2D transfer).
+    fn upload(&mut self, m: &Matrix) -> Result<Self::Buffer>;
+
+    /// Device buffer → host matrix (one D2H transfer). Errors on a packed
+    /// pair buffer — unpack first.
+    fn download(&mut self, buf: &Self::Buffer, n: usize) -> Result<Matrix>;
+
+    /// One kernel launch of `op` at size `n` over device buffers.
+    fn launch(&mut self, op: &str, n: usize, inputs: &[Self::Buffer]) -> Result<Self::Buffer>;
+
+    /// Split a packed pair buffer into its two matrices, reporting what
+    /// the split cost in transfers on this backend.
+    fn split_pair(&mut self, buf: &Self::Buffer, n: usize) -> Result<SplitPair<Self::Buffer>>;
+
+    /// Simulated seconds accumulated since the last call, for backends
+    /// whose wall-clock is modeled rather than measured ([`super::SimBackend`]).
+    /// Engines call this when a timed region starts (to reset) and ends
+    /// (to use the simulated duration instead of real elapsed time).
+    fn take_sim_time(&mut self) -> Option<f64> {
+        None
+    }
+
+    /// Whether this backend's reported times are modeled rather than
+    /// measured. Callers comparing against host-side baselines (the
+    /// experiment harness's sequential-CPU arm) must model that baseline
+    /// too, or the comparison mixes 2012-simulated and real seconds.
+    fn models_time(&self) -> bool {
+        false
+    }
+}
+
+/// Matrix multiplies one launch of `op` performs (the quantity behind the
+/// paper's tables). Errors on an op outside the vocabulary.
+pub fn op_multiplies(op: &str) -> Result<usize> {
+    match op {
+        "matmul" | "square" | "step_sq" => Ok(1),
+        "sqmul" | "step_mul" => Ok(2),
+        "pack2" | "unpack0" => Ok(0),
+        _ => {
+            if let Some(k) = op.strip_prefix("square") {
+                return k
+                    .parse::<usize>()
+                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")));
+            }
+            if let Some(power) = op.strip_prefix("expm") {
+                let power: u64 = power
+                    .parse()
+                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")))?;
+                return Ok(Plan::binary(power.max(1), false).multiplies());
+            }
+            Err(MatexpError::Backend(format!("unknown op {op:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplies_per_op() {
+        assert_eq!(op_multiplies("matmul").unwrap(), 1);
+        assert_eq!(op_multiplies("square").unwrap(), 1);
+        assert_eq!(op_multiplies("square4").unwrap(), 4);
+        assert_eq!(op_multiplies("sqmul").unwrap(), 2);
+        assert_eq!(op_multiplies("step_mul").unwrap(), 2);
+        assert_eq!(op_multiplies("step_sq").unwrap(), 1);
+        assert_eq!(op_multiplies("pack2").unwrap(), 0);
+        assert_eq!(op_multiplies("unpack0").unwrap(), 0);
+        // expm{N} = the binary plan's multiply count
+        assert_eq!(op_multiplies("expm64").unwrap(), 6);
+        assert_eq!(op_multiplies("expm100").unwrap(), 8);
+        assert!(op_multiplies("conv2d").is_err());
+        assert!(op_multiplies("squareX").is_err());
+    }
+}

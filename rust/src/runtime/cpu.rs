@@ -1,0 +1,312 @@
+//! [`CpuBackend`] — the pure-Rust execution backend.
+//!
+//! Executes the launch vocabulary directly on the [`crate::linalg`]
+//! substrate with a selectable matmul variant ([`CpuAlgo`]). This is the
+//! default backend: it runs on any machine with no artifacts, no PJRT and
+//! no GPU, which is what makes the test suite unconditional.
+//!
+//! "Device" buffers are host matrices behind `Rc`, so `Copy` steps and
+//! register aliasing are pointer clones — the same cost shape as real
+//! device-buffer aliasing — and the split of a packed pair is free
+//! (reported as zero transfers, unlike PJRT's tuple round-trip).
+
+use std::rc::Rc;
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::expm::CpuAlgo;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::MatmulFn;
+use crate::plan::Plan;
+use crate::runtime::backend::{Backend, SplitPair, FUSED_EXPM_POWERS};
+
+/// A CPU "device" buffer: a single matrix or a packed `[acc, base]` pair.
+#[derive(Clone, Debug)]
+pub enum CpuBuffer {
+    Mat(Rc<Matrix>),
+    Pair(Rc<(Matrix, Matrix)>),
+}
+
+impl CpuBuffer {
+    fn mat(&self) -> Result<&Matrix> {
+        match self {
+            CpuBuffer::Mat(m) => Ok(m.as_ref()),
+            CpuBuffer::Pair(_) => {
+                Err(MatexpError::Backend("expected a matrix buffer, got a packed pair".into()))
+            }
+        }
+    }
+
+    fn pair(&self) -> Result<&(Matrix, Matrix)> {
+        match self {
+            CpuBuffer::Pair(p) => Ok(p.as_ref()),
+            CpuBuffer::Mat(_) => {
+                Err(MatexpError::Backend("expected a packed pair buffer, got a matrix".into()))
+            }
+        }
+    }
+}
+
+/// Pure-Rust backend over the `linalg` substrate.
+pub struct CpuBackend {
+    algo: CpuAlgo,
+    matmul: MatmulFn,
+}
+
+impl CpuBackend {
+    pub fn new(algo: CpuAlgo) -> CpuBackend {
+        CpuBackend { algo, matmul: algo.matmul() }
+    }
+
+    pub fn algo(&self) -> CpuAlgo {
+        self.algo
+    }
+
+    fn mm(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        (self.matmul)(a, b)
+    }
+
+    fn squares(&self, m: &Matrix, k: usize) -> Matrix {
+        let mut acc = self.mm(m, m);
+        for _ in 1..k {
+            acc = self.mm(&acc, &acc);
+        }
+        acc
+    }
+
+    /// Validate an op name. Fused `expm{N}` availability mirrors the AOT
+    /// artifact set ([`FUSED_EXPM_POWERS`]) so "is there a fused kernel
+    /// for N?" answers the same on every backend.
+    fn check_op(&self, op: &str) -> Result<()> {
+        match op {
+            "matmul" | "square" | "sqmul" | "pack2" | "step_sq" | "step_mul" | "unpack0" => Ok(()),
+            _ => {
+                if let Some(k) = op.strip_prefix("square") {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")))?;
+                    if k < 2 {
+                        return Err(MatexpError::Backend(format!("bad square chain {op:?}")));
+                    }
+                    return Ok(());
+                }
+                if let Some(power) = op.strip_prefix("expm") {
+                    let power: u64 = power
+                        .parse()
+                        .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")))?;
+                    if !FUSED_EXPM_POWERS.contains(&power) {
+                        return Err(MatexpError::Artifact(format!(
+                            "no artifact for op={op}: fused powers are {FUSED_EXPM_POWERS:?}"
+                        )));
+                    }
+                    return Ok(());
+                }
+                Err(MatexpError::Backend(format!("unknown op {op:?}")))
+            }
+        }
+    }
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        CpuBackend::new(CpuAlgo::Blocked)
+    }
+}
+
+fn arity_error(op: &str, want: usize, got: usize) -> MatexpError {
+    MatexpError::Backend(format!("op {op:?} takes {want} inputs, got {got}"))
+}
+
+impl Backend for CpuBackend {
+    type Buffer = CpuBuffer;
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn platform(&self) -> String {
+        format!("cpu backend (pure rust, matmul={})", self.algo.name())
+    }
+
+    fn prepare(&mut self, op: &str, _n: usize) -> Result<()> {
+        self.check_op(op)
+    }
+
+    fn upload(&mut self, m: &Matrix) -> Result<CpuBuffer> {
+        Ok(CpuBuffer::Mat(Rc::new(m.clone())))
+    }
+
+    fn download(&mut self, buf: &CpuBuffer, n: usize) -> Result<Matrix> {
+        let m = buf.mat()?;
+        if m.n() != n {
+            return Err(MatexpError::Backend(format!(
+                "buffer is {}x{}, expected {n}x{n}",
+                m.n(),
+                m.n()
+            )));
+        }
+        Ok(m.clone())
+    }
+
+    fn launch(&mut self, op: &str, _n: usize, inputs: &[CpuBuffer]) -> Result<CpuBuffer> {
+        let need = |want: usize| -> Result<()> {
+            if inputs.len() != want {
+                return Err(arity_error(op, want, inputs.len()));
+            }
+            Ok(())
+        };
+        match op {
+            "matmul" => {
+                need(2)?;
+                let (a, b) = (inputs[0].mat()?, inputs[1].mat()?);
+                if a.n() != b.n() {
+                    return Err(MatexpError::Linalg("matmul size mismatch".into()));
+                }
+                Ok(CpuBuffer::Mat(Rc::new(self.mm(a, b))))
+            }
+            "square" => {
+                need(1)?;
+                let a = inputs[0].mat()?;
+                Ok(CpuBuffer::Mat(Rc::new(self.mm(a, a))))
+            }
+            "sqmul" => {
+                need(2)?;
+                let (acc, base) = (inputs[0].mat()?, inputs[1].mat()?);
+                Ok(CpuBuffer::Pair(Rc::new((self.mm(acc, base), self.mm(base, base)))))
+            }
+            "pack2" => {
+                need(1)?;
+                let b = inputs[0].mat()?;
+                Ok(CpuBuffer::Pair(Rc::new((b.clone(), b.clone()))))
+            }
+            "step_sq" => {
+                need(1)?;
+                let (acc, base) = &*inputs[0].pair()?;
+                Ok(CpuBuffer::Pair(Rc::new((acc.clone(), self.mm(base, base)))))
+            }
+            "step_mul" => {
+                need(1)?;
+                let (acc, base) = &*inputs[0].pair()?;
+                let base2 = self.mm(base, base);
+                let acc2 = self.mm(acc, &base2);
+                Ok(CpuBuffer::Pair(Rc::new((acc2, base2))))
+            }
+            "unpack0" => {
+                need(1)?;
+                let (acc, _) = &*inputs[0].pair()?;
+                Ok(CpuBuffer::Mat(Rc::new(acc.clone())))
+            }
+            _ => {
+                self.check_op(op)?;
+                if let Some(k) = op.strip_prefix("square") {
+                    need(1)?;
+                    let k: usize = k.parse().expect("checked by check_op");
+                    return Ok(CpuBuffer::Mat(Rc::new(self.squares(inputs[0].mat()?, k))));
+                }
+                // check_op leaves only expm{N} with a shipped power
+                let power: u64 =
+                    op.strip_prefix("expm").expect("checked").parse().expect("checked");
+                need(1)?;
+                let a = inputs[0].mat()?.clone();
+                let out = Plan::binary(power, false).eval(a, |x, y| self.mm(x, y))?;
+                Ok(CpuBuffer::Mat(Rc::new(out)))
+            }
+        }
+    }
+
+    fn split_pair(&mut self, buf: &CpuBuffer, _n: usize) -> Result<SplitPair<CpuBuffer>> {
+        let (first, second) = &*buf.pair()?;
+        Ok(SplitPair {
+            first: CpuBuffer::Mat(Rc::new(first.clone())),
+            second: CpuBuffer::Mat(Rc::new(second.clone())),
+            h2d_transfers: 0,
+            d2h_transfers: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::naive::matmul_naive;
+
+    fn backend() -> CpuBackend {
+        CpuBackend::new(CpuAlgo::Naive)
+    }
+
+    fn up(b: &mut CpuBackend, m: &Matrix) -> CpuBuffer {
+        b.upload(m).unwrap()
+    }
+
+    #[test]
+    fn matmul_and_square_match_substrate() {
+        let mut b = backend();
+        let x = Matrix::random(8, 3);
+        let y = Matrix::random(8, 4);
+        let (bx, by) = (up(&mut b, &x), up(&mut b, &y));
+        let got = b.launch("matmul", 8, &[bx.clone(), by]).unwrap();
+        assert_eq!(b.download(&got, 8).unwrap(), matmul_naive(&x, &y));
+        let sq = b.launch("square", 8, &[bx]).unwrap();
+        assert_eq!(b.download(&sq, 8).unwrap(), matmul_naive(&x, &x));
+    }
+
+    #[test]
+    fn packed_state_ops_implement_square_and_multiply() {
+        let mut b = backend();
+        let a = Matrix::random_spectral(6, 0.9, 9);
+        // power 5 = 0b101: pack (acc=base=A), step_sq, step_mul, unpack
+        let base = up(&mut b, &a);
+        let mut state = b.launch("pack2", 6, &[base]).unwrap();
+        state = b.launch("step_sq", 6, &[state]).unwrap();
+        state = b.launch("step_mul", 6, &[state]).unwrap();
+        let acc = b.launch("unpack0", 6, &[state]).unwrap();
+        let got = b.download(&acc, 6).unwrap();
+        let want = crate::linalg::expm::expm_naive(&a, 5, CpuAlgo::Naive).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn sqmul_returns_product_and_square() {
+        let mut b = backend();
+        let acc = Matrix::random(5, 1);
+        let base = Matrix::random(5, 2);
+        let out = b
+            .launch("sqmul", 5, &[up(&mut b, &acc), up(&mut b, &base)])
+            .unwrap();
+        let split = b.split_pair(&out, 5).unwrap();
+        assert_eq!(split.h2d_transfers + split.d2h_transfers, 0, "cpu split is free");
+        assert_eq!(b.download(&split.first, 5).unwrap(), matmul_naive(&acc, &base));
+        assert_eq!(b.download(&split.second, 5).unwrap(), matmul_naive(&base, &base));
+    }
+
+    #[test]
+    fn square_chain_is_repeated_squaring() {
+        let mut b = backend();
+        let a = Matrix::random_spectral(4, 0.9, 7);
+        let out = b.launch("square4", 4, &[up(&mut b, &a)]).unwrap();
+        let want = crate::linalg::expm::expm_naive(&a, 16, CpuAlgo::Naive).unwrap();
+        assert!(b.download(&out, 4).unwrap().approx_eq(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn fused_expm_mirrors_artifact_powers() {
+        let mut b = backend();
+        let a = Matrix::random_spectral(4, 0.9, 8);
+        let buf = up(&mut b, &a);
+        assert!(b.prepare("expm64", 4).is_ok());
+        assert!(b.prepare("expm65", 4).is_err(), "non-shipped power must error");
+        let out = b.launch("expm64", 4, &[buf]).unwrap();
+        let want = crate::linalg::expm::expm(&a, 64, CpuAlgo::Naive).unwrap();
+        assert!(b.download(&out, 4).unwrap().approx_eq(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn unknown_ops_and_bad_buffers_rejected() {
+        let mut b = backend();
+        assert!(b.prepare("conv2d", 8).is_err());
+        let a = up(&mut b, &Matrix::identity(4));
+        assert!(b.launch("unpack0", 4, &[a.clone()]).is_err(), "matrix is not a pair");
+        assert!(b.launch("matmul", 4, &[a.clone()]).is_err(), "arity");
+        assert!(b.split_pair(&a, 4).is_err());
+        assert!(b.download(&a, 8).is_err(), "size mismatch surfaces");
+    }
+}

@@ -1,31 +1,34 @@
-//! The execution engine: compiled-executable cache + plan executors.
+//! The execution engine: replays [`Plan`]s on any [`Backend`], with the
+//! launch/transfer accounting the paper's tables are about.
 //!
 //! Three execution disciplines, mirroring the paper's comparison:
 //!
 //! * [`Engine::expm_naive_roundtrip`] — §4.2 "Naïve GPU": one launch per
 //!   multiply with a full host round-trip per launch.
 //! * [`Engine::expm`] — §4.3 "Our Approach": replay a [`Plan`] keeping all
-//!   intermediates as device-resident `PjRtBuffer`s; the matrix crosses the
+//!   intermediates as device-resident buffers; the matrix crosses the
 //!   host↔device boundary exactly twice.
 //! * [`Engine::expm_packed`] — our §4.3.8 limit case: the `[acc, base]`
-//!   state is packed into one `(2, n, n)` buffer and every exponent bit is
-//!   ONE single-output launch (`step_mul`/`step_sq`), so even the fused
+//!   state is packed into one pair buffer and every exponent bit is ONE
+//!   single-output launch (`step_mul`/`step_sq`), so even the fused
 //!   square+multiply pair never touches the host.
 //!
-//! Plus [`Engine::expm_fused_artifact`] (whole `A^N` as a single launch via
-//! the `expm{N}` artifacts) and [`Engine::run_matmul_entry`] (tile-sweep
-//! ablation).
+//! Plus [`Engine::expm_fused_artifact`] (whole `A^N` as a single launch)
+//! and [`Engine::expm_plan_roundtrip`] (ablation A2's counterfactual).
+//!
+//! The engine is generic over the backend (static dispatch); use
+//! [`Engine::cpu`] / [`Engine::sim`] / [`Engine::from_config`] — or, with
+//! the `xla` feature, [`Engine::pjrt`] — to construct one.
 
-use std::collections::HashMap;
-use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::{MatexpError, Result};
+use crate::linalg::expm::CpuAlgo;
 use crate::linalg::matrix::Matrix;
 use crate::plan::{Plan, Step};
-use crate::runtime::artifacts::ArtifactRegistry;
-use crate::runtime::literal::{download, literal_to_matrix, matrix_to_literal, upload};
-use crate::runtime::{client, Variant};
+use crate::runtime::backend::Backend;
+use crate::runtime::cpu::CpuBackend;
+use crate::runtime::sim::SimBackend;
 
 /// Execution statistics — the quantities Tables 2–5 are about.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -38,7 +41,8 @@ pub struct ExecStats {
     pub h2d_transfers: usize,
     /// Device→host matrix transfers.
     pub d2h_transfers: usize,
-    /// Wall-clock seconds for the whole operation.
+    /// Wall-clock seconds for the whole operation (simulated seconds on
+    /// a timing-model backend).
     pub wall_s: f64,
 }
 
@@ -52,92 +56,113 @@ impl ExecStats {
     }
 }
 
-struct ArtifactInfo {
-    path: std::path::PathBuf,
-    /// Recorded for diagnostics; PJRT output unwrapping is shape-driven.
-    #[allow(dead_code)]
-    num_outputs: usize,
+/// Plan executor over one execution backend.
+pub struct Engine<B: Backend> {
+    backend: B,
 }
 
-/// Executable cache + plan executors over one PJRT client.
-///
-/// `Engine` is deliberately `!Send`: PJRT objects live on the thread that
-/// created them. The coordinator gives each worker thread its own engine.
-pub struct Engine {
-    client: xla::PjRtClient,
-    variant: Variant,
-    /// (op, n) → artifact info for this engine's variant (xla fallback for
-    /// ops only lowered in the xla variant, e.g. `expm{N}`).
-    info: HashMap<(String, usize), ArtifactInfo>,
-    /// Lazily compiled executables.
-    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+/// Engine on the default pure-Rust backend.
+pub type CpuEngine = Engine<CpuBackend>;
+/// Engine on the Tesla C2050 timing model.
+pub type SimEngine = Engine<SimBackend>;
+/// Engine on the runtime-selected backend (coordinator / CLI).
+pub type AnyEngine = Engine<crate::runtime::any::AnyBackend>;
+
+impl Engine<CpuBackend> {
+    /// Pure-Rust engine with the given matmul variant.
+    pub fn cpu(algo: CpuAlgo) -> CpuEngine {
+        Engine::new(CpuBackend::new(algo))
+    }
 }
 
-impl Engine {
-    /// Build an engine from a discovered registry. Executables compile
-    /// lazily on first use and are cached for the engine's lifetime.
-    pub fn new(registry: &ArtifactRegistry, variant: Variant) -> Result<Engine> {
-        let client = client::cpu_client()?;
-        let mut info = HashMap::new();
-        // xla entries first (fallback), then requested variant overrides
-        for pass_variant in ["xla", variant.as_str()] {
-            for e in registry.entries() {
-                if e.variant == pass_variant && e.dtype == "f32" && e.tile.is_none() {
-                    info.insert(
-                        (e.op.clone(), e.n),
-                        ArtifactInfo { path: registry.path(e), num_outputs: e.num_outputs },
-                    );
-                }
-            }
-        }
-        Ok(Engine { client, variant, info, exes: HashMap::new() })
+impl Engine<SimBackend> {
+    /// Timing-model engine (spec-sheet Tesla C2050).
+    pub fn sim() -> SimEngine {
+        Engine::new(SimBackend::tesla_c2050())
+    }
+}
+
+impl Engine<crate::runtime::any::AnyBackend> {
+    /// Engine on whatever backend the config selects.
+    pub fn from_config(cfg: &crate::config::MatexpConfig) -> Result<AnyEngine> {
+        Ok(Engine::new(crate::runtime::any::AnyBackend::from_config(cfg)?))
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Engine<crate::runtime::pjrt::PjrtBackend> {
+    /// PJRT engine over a discovered artifact registry.
+    pub fn pjrt(
+        registry: &crate::runtime::artifacts::ArtifactRegistry,
+        variant: crate::runtime::Variant,
+    ) -> Result<Engine<crate::runtime::pjrt::PjrtBackend>> {
+        Ok(Engine::new(crate::runtime::pjrt::PjrtBackend::new(registry, variant)?))
+    }
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B) -> Engine<B> {
+        Engine { backend }
     }
 
-    pub fn variant(&self) -> Variant {
-        self.variant
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
     }
 
     pub fn platform(&self) -> String {
-        client::platform_summary(&self.client)
+        self.backend.platform()
     }
 
-    /// Compile (or fetch from cache) the executable for `(op, n)`.
-    fn exe(&mut self, op: &str, n: usize) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = (op.to_string(), n);
-        if !self.exes.contains_key(&key) {
-            let info = self.info.get(&key).ok_or_else(|| {
-                MatexpError::Artifact(format!(
-                    "no artifact for op={op} n={n} (variant {}); run `make artifacts`",
-                    self.variant
-                ))
-            })?;
-            let proto = xla::HloModuleProto::from_text_file(
-                info.path.to_str().ok_or_else(|| MatexpError::Artifact("non-utf8 path".into()))?,
-            )?;
-            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
-            self.exes.insert(key.clone(), exe);
-        }
-        Ok(&self.exes[&key])
+    /// Start a timed region: reset any simulated clock so warmup/compile
+    /// work is not billed to the measurement.
+    fn begin_timed(&mut self) -> Instant {
+        let _ = self.backend.take_sim_time();
+        Instant::now()
     }
 
-    /// Pre-compile every op the binary/packed/naive paths need at size `n`
-    /// (keeps compile time out of benchmarked regions).
+    /// End a timed region: simulated seconds if the backend models time,
+    /// real elapsed seconds otherwise.
+    fn end_timed(&mut self, t0: Instant) -> f64 {
+        self.backend
+            .take_sim_time()
+            .unwrap_or_else(|| t0.elapsed().as_secs_f64())
+    }
+
+    /// One launch over device buffers, with launch accounting.
+    fn launch_b(
+        &mut self,
+        op: &str,
+        n: usize,
+        inputs: &[B::Buffer],
+        stats: &mut ExecStats,
+    ) -> Result<B::Buffer> {
+        let out = self.backend.launch(op, n, inputs)?;
+        stats.launches += 1;
+        Ok(out)
+    }
+
+    /// Prepare (compile/cache) every op the binary/packed/naive paths
+    /// need at size `n` (keeps compile time out of benchmarked regions).
     pub fn warmup(&mut self, n: usize) -> Result<()> {
         for op in ["matmul", "square", "pack2", "step_mul", "step_sq", "unpack0"] {
-            self.exe(op, n)?;
+            self.backend.prepare(op, n)?;
         }
-        // optional ops — ignore if the artifact set lacks them
+        // optional ops — ignore if the backend/artifact set lacks them
         for op in ["sqmul", "square2", "square4"] {
-            let _ = self.exe(op, n);
+            let _ = self.backend.prepare(op, n);
         }
         Ok(())
     }
 
-    /// Compile AND execute every core op once at size `n`. XLA's CPU
-    /// runtime finishes thunk initialization on the first execution, which
-    /// costs ~4 ms per executable — two orders of magnitude above a warm
-    /// n=64 launch. Call this before any timed region (the experiment
-    /// harness and ablations do).
+    /// Prepare AND execute every core op once at size `n`. XLA's CPU
+    /// runtime finishes thunk initialization on the first execution
+    /// (~4 ms per executable — two orders of magnitude above a warm n=64
+    /// launch); pure-Rust backends warm caches/branch predictors. Call
+    /// this before any timed region (the experiment harness does).
     pub fn warmup_exec(&mut self, n: usize) -> Result<()> {
         self.warmup(n)?;
         let id = Matrix::identity(n);
@@ -150,37 +175,23 @@ impl Engine {
         Ok(())
     }
 
-    /// One launch over device buffers returning the single output buffer.
-    fn launch_b(
-        &mut self,
-        op: &str,
-        n: usize,
-        inputs: &[Rc<xla::PjRtBuffer>],
-        stats: &mut ExecStats,
-    ) -> Result<xla::PjRtBuffer> {
-        let exe = self.exe(op, n)?;
-        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(inputs)?;
-        stats.launches += 1;
-        let mut row = out.pop().ok_or_else(|| MatexpError::Xla("no output".into()))?;
-        row.pop().ok_or_else(|| MatexpError::Xla("empty output row".into()))
-    }
-
-    /// `a · b` through the AOT matmul executable (one launch).
+    /// `a · b` through the backend's matmul op (one launch).
     pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
         if b.n() != n {
             return Err(MatexpError::Linalg("matmul size mismatch".into()));
         }
+        self.backend.prepare("matmul", n)?;
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
-        let ba = Rc::new(upload(&self.client, a)?);
-        let bb = Rc::new(upload(&self.client, b)?);
+        let t0 = self.begin_timed();
+        let ba = self.backend.upload(a)?;
+        let bb = self.backend.upload(b)?;
         stats.h2d_transfers += 2;
         let out = self.launch_b("matmul", n, &[ba, bb], &mut stats)?;
         stats.multiplies += 1;
-        let m = download(&out, n)?;
+        let m = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((m, stats))
     }
 
@@ -191,44 +202,39 @@ impl Engine {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
         let n = a.n();
-        self.exe("matmul", n)?; // compile outside the timed region
+        self.backend.prepare("matmul", n)?; // compile outside the timed region
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
+        let t0 = self.begin_timed();
         let mut acc = a.clone();
         for _ in 1..power {
-            let lit_acc = matrix_to_literal(&acc)?;
-            let lit_a = matrix_to_literal(a)?;
-            let exe = self.exe("matmul", n)?;
-            let mut out = exe.execute::<xla::Literal>(&[lit_acc, lit_a])?;
-            stats.launches += 1;
-            stats.multiplies += 1;
+            let b_acc = self.backend.upload(&acc)?;
+            let b_a = self.backend.upload(a)?;
             stats.h2d_transfers += 2;
-            let buf = out
-                .pop()
-                .and_then(|mut row| row.pop())
-                .ok_or_else(|| MatexpError::Xla("no output".into()))?;
-            acc = literal_to_matrix(&buf.to_literal_sync()?, n)?;
+            let out = self.launch_b("matmul", n, &[b_acc, b_a], &mut stats)?;
+            stats.multiplies += 1;
+            acc = self.backend.download(&out, n)?;
             stats.d2h_transfers += 1;
         }
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((acc, stats))
     }
 
     /// §4.3 Our Approach: replay `plan` with device-resident buffers.
-    /// The input crosses host→device once; the result device→host once.
+    /// The input crosses host→device once; the result device→host once
+    /// (plus whatever a `SqMul` tuple split costs on this backend).
     pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
-        // compile everything the plan needs before the timed region
+        // prepare everything the plan needs before the timed region
         for step in &plan.steps {
             if let Some(op) = step.op_name() {
-                self.exe(&op, n)?;
+                self.backend.prepare(&op, n)?;
             }
         }
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
-        let mut regs: Vec<Option<Rc<xla::PjRtBuffer>>> = vec![None; plan.n_regs];
-        regs[0] = Some(Rc::new(upload(&self.client, a)?));
+        let t0 = self.begin_timed();
+        let mut regs: Vec<Option<B::Buffer>> = vec![None; plan.n_regs];
+        regs[0] = Some(self.backend.upload(a)?);
         stats.h2d_transfers += 1;
         for step in &plan.steps {
             match *step {
@@ -245,44 +251,31 @@ impl Engine {
                         self.launch_b("matmul", n, &[x, y], &mut stats)?
                     };
                     stats.multiplies += 1;
-                    regs[dst] = Some(Rc::new(out));
+                    regs[dst] = Some(out);
                 }
                 Step::SquareChain { reg, k } => {
                     let x = regs[reg].clone().expect("validated");
                     let out = self.launch_b(&format!("square{k}"), n, &[x], &mut stats)?;
                     stats.multiplies += k as usize;
-                    regs[reg] = Some(Rc::new(out));
+                    regs[reg] = Some(out);
                 }
                 Step::SqMul { acc, base } => {
-                    // the 2-tuple sqmul artifact: PJRT hands back ONE
-                    // tuple buffer, so splitting costs a host round-trip —
-                    // measured honestly (this is ablation A2's "bad" arm;
-                    // the packed path below is the good one).
                     let x = regs[acc].clone().expect("validated");
                     let y = regs[base].clone().expect("validated");
-                    let tuple_buf = self.launch_b("sqmul", n, &[x, y], &mut stats)?;
+                    let pair = self.launch_b("sqmul", n, &[x, y], &mut stats)?;
                     stats.multiplies += 2;
-                    let parts = tuple_buf.to_literal_sync()?.to_tuple()?;
-                    stats.d2h_transfers += 2;
-                    if parts.len() != 2 {
-                        return Err(MatexpError::Xla(format!(
-                            "sqmul returned {}-tuple",
-                            parts.len()
-                        )));
-                    }
-                    let mut it = parts.into_iter();
-                    let new_acc = literal_to_matrix(&it.next().unwrap(), n)?;
-                    let new_base = literal_to_matrix(&it.next().unwrap(), n)?;
-                    regs[acc] = Some(Rc::new(upload(&self.client, &new_acc)?));
-                    regs[base] = Some(Rc::new(upload(&self.client, &new_base)?));
-                    stats.h2d_transfers += 2;
+                    let split = self.backend.split_pair(&pair, n)?;
+                    stats.h2d_transfers += split.h2d_transfers;
+                    stats.d2h_transfers += split.d2h_transfers;
+                    regs[acc] = Some(split.first);
+                    regs[base] = Some(split.second);
                 }
             }
         }
         let out_buf = regs[plan.result].clone().expect("validated: result written");
-        let result = download(&out_buf, n)?;
+        let result = self.backend.download(&out_buf, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((result, stats))
     }
 
@@ -294,81 +287,69 @@ impl Engine {
     pub fn expm_plan_roundtrip(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
-        for step in &plan.steps {
-            if let Some(op) = step.op_name() {
-                if op.starts_with("square") && op != "square" {
-                    // square{k} chains: execute as k singles on this path
-                    self.exe("square", n)?;
-                } else if op == "sqmul" {
-                    self.exe("matmul", n)?;
-                    self.exe("square", n)?;
-                } else {
-                    self.exe(&op, n)?;
-                }
-            }
-        }
+        // square{k} chains run as k singles and sqmul as matmul+square on
+        // this path, so only the two base ops are needed
+        self.backend.prepare("matmul", n)?;
+        self.backend.prepare("square", n)?;
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
+        let t0 = self.begin_timed();
         let mut regs: Vec<Option<Matrix>> = vec![None; plan.n_regs];
         regs[0] = Some(a.clone());
-        // one launch with per-launch transfers; `ops` follow Step semantics
-        let launch = |engine: &mut Engine,
-                          op: &str,
-                          inputs: &[&Matrix],
-                          stats: &mut ExecStats|
-         -> Result<Matrix> {
-            let lits: Vec<xla::Literal> = inputs
-                .iter()
-                .map(|m| matrix_to_literal(m))
-                .collect::<Result<_>>()?;
-            stats.h2d_transfers += inputs.len();
-            let exe = engine.exe(op, n)?;
-            let mut out = exe.execute::<xla::Literal>(&lits)?;
-            stats.launches += 1;
-            stats.multiplies += 1;
-            let buf = out
-                .pop()
-                .and_then(|mut row| row.pop())
-                .ok_or_else(|| MatexpError::Xla("no output".into()))?;
-            let m = literal_to_matrix(&buf.to_literal_sync()?, n)?;
-            stats.d2h_transfers += 1;
-            Ok(m)
-        };
         for step in &plan.steps {
             match *step {
                 Step::Copy { dst, src } => regs[dst] = regs[src].clone(),
                 Step::Mul { dst, lhs, rhs } => {
                     let out = if lhs == rhs {
                         let x = regs[lhs].clone().expect("validated");
-                        launch(self, "square", &[&x], &mut stats)?
+                        self.roundtrip_launch("square", n, &[&x], &mut stats)?
                     } else {
                         let x = regs[lhs].clone().expect("validated");
                         let y = regs[rhs].clone().expect("validated");
-                        launch(self, "matmul", &[&x, &y], &mut stats)?
+                        self.roundtrip_launch("matmul", n, &[&x, &y], &mut stats)?
                     };
                     regs[dst] = Some(out);
                 }
                 Step::SqMul { acc, base } => {
                     let a0 = regs[acc].clone().expect("validated");
                     let b0 = regs[base].clone().expect("validated");
-                    regs[acc] = Some(launch(self, "matmul", &[&a0, &b0], &mut stats)?);
-                    regs[base] = Some(launch(self, "square", &[&b0], &mut stats)?);
+                    regs[acc] = Some(self.roundtrip_launch("matmul", n, &[&a0, &b0], &mut stats)?);
+                    regs[base] = Some(self.roundtrip_launch("square", n, &[&b0], &mut stats)?);
                 }
                 Step::SquareChain { reg, k } => {
                     for _ in 0..k {
                         let b = regs[reg].clone().expect("validated");
-                        regs[reg] = Some(launch(self, "square", &[&b], &mut stats)?);
+                        regs[reg] = Some(self.roundtrip_launch("square", n, &[&b], &mut stats)?);
                     }
                 }
             }
         }
         let result = regs[plan.result].take().expect("validated: result written");
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((result, stats))
     }
 
+    /// One launch with per-launch transfers (the roundtrip discipline).
+    fn roundtrip_launch(
+        &mut self,
+        op: &str,
+        n: usize,
+        inputs: &[&Matrix],
+        stats: &mut ExecStats,
+    ) -> Result<Matrix> {
+        let bufs: Vec<B::Buffer> = inputs
+            .iter()
+            .map(|m| self.backend.upload(m))
+            .collect::<Result<_>>()?;
+        stats.h2d_transfers += inputs.len();
+        let out = self.launch_b(op, n, &bufs, stats)?;
+        stats.multiplies += 1;
+        let m = self.backend.download(&out, n)?;
+        stats.d2h_transfers += 1;
+        Ok(m)
+    }
+
     /// Packed-state binary exponentiation: the `[acc, base]` pair lives in
-    /// one `(2, n, n)` device buffer; every exponent bit is one launch and
+    /// one packed device buffer; every exponent bit is one launch and
     /// NOTHING round-trips until the final download.
     pub fn expm_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         if power == 0 {
@@ -377,91 +358,159 @@ impl Engine {
         let n = a.n();
         self.warmup(n)?;
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
+        let t0 = self.begin_timed();
         if power == 1 {
-            stats.wall_s = t0.elapsed().as_secs_f64();
+            stats.wall_s = self.end_timed(t0);
             return Ok((a.clone(), stats));
         }
         let tz = power.trailing_zeros();
-        let mut base = Rc::new(upload(&self.client, a)?);
+        let mut base = self.backend.upload(a)?;
         stats.h2d_transfers += 1;
         for _ in 0..tz {
-            base = Rc::new(self.launch_b("square", n, &[base], &mut stats)?);
+            base = self.launch_b("square", n, &[base], &mut stats)?;
             stats.multiplies += 1;
         }
         // pack consumes the lowest set bit: acc = base = A^(2^tz)
-        let mut state = Rc::new(self.launch_b("pack2", n, &[base], &mut stats)?);
+        let mut state = self.launch_b("pack2", n, &[base], &mut stats)?;
         let mut q = (power >> tz) >> 1;
         while q > 0 {
             let op = if q & 1 == 1 { "step_mul" } else { "step_sq" };
-            state = Rc::new(self.launch_b(op, n, &[state], &mut stats)?);
+            state = self.launch_b(op, n, &[state], &mut stats)?;
             stats.multiplies += if q & 1 == 1 { 2 } else { 1 };
             q >>= 1;
         }
-        let acc = Rc::new(self.launch_b("unpack0", n, &[state], &mut stats)?);
-        let result = download(&acc, n)?;
+        let acc = self.launch_b("unpack0", n, &[state], &mut stats)?;
+        let result = self.backend.download(&acc, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((result, stats))
     }
 
-    /// Whole `A^power` as one launch, if an `expm{power}` artifact exists.
+    /// Whole `A^power` as one launch, if the backend ships a fused
+    /// `expm{power}` kernel (see [`crate::runtime::FUSED_EXPM_POWERS`]).
     pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
         let op = format!("expm{power}");
-        self.exe(&op, n)?;
+        self.backend.prepare(&op, n)?;
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
-        let buf = Rc::new(upload(&self.client, a)?);
+        let t0 = self.begin_timed();
+        let buf = self.backend.upload(a)?;
         stats.h2d_transfers += 1;
         let out = self.launch_b(&op, n, &[buf], &mut stats)?;
         stats.multiplies += Plan::binary(power, false).multiplies();
-        let result = download(&out, n)?;
+        let result = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((result, stats))
     }
+}
 
+#[cfg(feature = "xla")]
+impl Engine<crate::runtime::pjrt::PjrtBackend> {
     /// Run an arbitrary 2-input matmul artifact by manifest name (the
     /// tile-sweep ablation needs the tiled entries `find` hides).
     pub fn run_matmul_entry(
         &mut self,
-        registry: &ArtifactRegistry,
+        registry: &crate::runtime::artifacts::ArtifactRegistry,
         name: &str,
         a: &Matrix,
         b: &Matrix,
     ) -> Result<(Matrix, ExecStats)> {
-        let entry = registry
-            .entries()
-            .iter()
-            .find(|e| e.name == name)
-            .ok_or_else(|| MatexpError::Artifact(format!("no artifact named {name}")))?;
-        let key = (format!("entry:{name}"), entry.n);
-        if !self.exes.contains_key(&key) {
-            let path = registry.path(entry);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| MatexpError::Artifact("non-utf8 path".into()))?,
-            )?;
-            let exe = self.client.compile(&xla::XlaComputation::from_proto(&proto))?;
-            self.exes.insert(key.clone(), exe);
-        }
-        let n = entry.n;
+        let n = self.backend.prepare_entry(registry, name)?;
         let mut stats = ExecStats::default();
-        let t0 = Instant::now();
-        let ba = Rc::new(upload(&self.client, a)?);
-        let bb = Rc::new(upload(&self.client, b)?);
+        let t0 = self.begin_timed();
+        let ba = self.backend.upload(a)?;
+        let bb = self.backend.upload(b)?;
         stats.h2d_transfers += 2;
-        let exe = &self.exes[&key];
-        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(&[ba, bb])?;
+        let out = self.backend.launch_entry(name, n, &[ba, bb])?;
         stats.launches += 1;
         stats.multiplies += 1;
-        let buf = out
-            .pop()
-            .and_then(|mut row| row.pop())
-            .ok_or_else(|| MatexpError::Xla("no output".into()))?;
-        let m = download(&buf, n)?;
+        let m = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.wall_s = self.end_timed(t0);
         Ok((m, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    fn oracle(a: &Matrix, power: u64) -> Matrix {
+        linalg::expm::expm(a, power, CpuAlgo::Ikj).unwrap()
+    }
+
+    #[test]
+    fn cpu_engine_replays_all_plan_kinds() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(12, 0.95, 3);
+        for power in [1u64, 2, 13, 100] {
+            let want = oracle(&a, power);
+            for plan in [
+                Plan::naive(power),
+                Plan::binary(power, false),
+                Plan::binary(power, true),
+                Plan::chained(power, &[4, 2]),
+                Plan::addition_chain(power),
+            ] {
+                let (got, stats) = e.expm(&a, &plan).unwrap();
+                assert!(
+                    got.approx_eq(&want, 1e-4, 1e-4),
+                    "{:?} N={power}: diff {}",
+                    plan.kind,
+                    got.max_abs_diff(&want)
+                );
+                assert_eq!(stats.launches, plan.launches(), "{:?} N={power}", plan.kind);
+                assert_eq!(stats.multiplies, plan.multiplies(), "{:?} N={power}", plan.kind);
+                assert_eq!(stats.h2d_transfers, 1, "{:?} N={power}", plan.kind);
+                assert_eq!(stats.d2h_transfers, 1, "{:?} N={power}", plan.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn naive_roundtrip_accounting_on_cpu() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(8, 0.9, 5);
+        let (got, stats) = e.expm_naive_roundtrip(&a, 16).unwrap();
+        assert!(got.approx_eq(&oracle(&a, 16), 1e-4, 1e-4));
+        assert_eq!(stats.launches, 15);
+        assert_eq!(stats.multiplies, 15);
+        assert_eq!(stats.h2d_transfers, 30);
+        assert_eq!(stats.d2h_transfers, 15);
+    }
+
+    #[test]
+    fn packed_touches_host_exactly_twice() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(8, 0.9, 6);
+        let (got, stats) = e.expm_packed(&a, 100).unwrap();
+        assert!(got.approx_eq(&oracle(&a, 100), 1e-4, 1e-4));
+        assert_eq!(stats.h2d_transfers, 1);
+        assert_eq!(stats.d2h_transfers, 1);
+        assert_eq!(stats.multiplies, Plan::binary(100, false).multiplies());
+    }
+
+    #[test]
+    fn sim_engine_reports_simulated_time() {
+        let mut e = Engine::sim();
+        let a = Matrix::random_spectral(64, 0.9, 7);
+        let (_, ours) = e.expm(&a, &Plan::binary(512, false)).unwrap();
+        let (_, naive) = e.expm_naive_roundtrip(&a, 512).unwrap();
+        // simulated seconds, not wall: the 2012 C2050 model puts the naive
+        // discipline far behind the device-resident one
+        assert!(ours.wall_s > 0.0);
+        assert!(naive.wall_s > ours.wall_s * 5.0, "naive {} vs ours {}", naive.wall_s, ours.wall_s);
+    }
+
+    #[test]
+    fn fused_artifact_availability_mirrors_shipped_powers() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(8, 0.9, 8);
+        let (got, stats) = e.expm_fused_artifact(&a, 64).unwrap();
+        assert_eq!(stats.launches, 1);
+        assert!(got.approx_eq(&oracle(&a, 64), 1e-4, 1e-4));
+        assert!(e.expm_fused_artifact(&a, 65).is_err());
     }
 }

@@ -1,22 +1,91 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile them once, execute
-//! them from the coordinator hot path with device-resident buffers.
+//! Execution runtime: the pluggable [`Backend`] layer plus the generic
+//! plan-replaying [`Engine`].
 //!
-//! This is the rust mirror of the OpenCL host API the paper describes in
-//! §3.2 (find device → context → memory → compile → launch → query), with
-//! the compile step moved to build time (`make artifacts`).
+//! The paper's §3.2 host flow (find device → context → memory → compile →
+//! launch → query) maps onto the [`Backend`] trait; three implementations
+//! ship:
+//!
+//! * [`CpuBackend`] — pure Rust over [`crate::linalg`]; the default, runs
+//!   everywhere with no artifacts.
+//! * [`SimBackend`] — the analytic Tesla C2050 timing model; Tables 2–5
+//!   reproduce without hardware.
+//! * [`PjrtBackend`] *(cargo feature `xla`)* — AOT HLO-text artifacts
+//!   (`make artifacts`) compiled once and executed via PJRT with
+//!   device-resident buffers.
 
+pub mod any;
 pub mod artifacts;
-pub mod client;
+pub mod backend;
+pub mod cpu;
 pub mod engine;
-pub mod literal;
+pub mod sim;
 
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(feature = "xla")]
+pub mod literal;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use any::{AnyBackend, AnyBuffer};
 pub use artifacts::{ArtifactEntry, ArtifactRegistry};
-pub use engine::Engine;
+pub use backend::{op_multiplies, Backend, SplitPair, FUSED_EXPM_POWERS};
+pub use cpu::{CpuBackend, CpuBuffer};
+pub use engine::{AnyEngine, CpuEngine, Engine, ExecStats, SimEngine};
+pub use sim::SimBackend;
+
+#[cfg(feature = "xla")]
+pub use pjrt::PjrtBackend;
 
 use crate::error::{MatexpError, Result};
 
-/// Which AOT kernel variant the engine executes (both are numerically
-/// pytest-verified against the same oracle).
+/// Which execution backend to run on (config/CLI selectable).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Pure-Rust CPU execution — the default; runs everywhere.
+    #[default]
+    Cpu,
+    /// Tesla C2050 analytic timing model (CPU numerics, simulated clock).
+    Sim,
+    /// AOT artifacts on PJRT (needs the `xla` cargo feature + artifacts).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Cpu, BackendKind::Sim, BackendKind::Pjrt]
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        BackendKind::all()
+            .into_iter()
+            .find(|k| k.as_str() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                MatexpError::Config(format!("unknown backend {s:?} (cpu|sim|pjrt)"))
+            })
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Which AOT kernel variant the PJRT backend executes (both are
+/// numerically pytest-verified against the same oracle).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     /// Plain `jnp.dot` lowering — the fast path on the CPU testbed.
@@ -65,5 +134,15 @@ mod tests {
         }
         assert!(Variant::from_str("cuda").is_err());
         assert_eq!(Variant::from_str("XLA").unwrap(), Variant::Xla);
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for k in BackendKind::all() {
+            assert_eq!(BackendKind::from_str(k.as_str()).unwrap(), k);
+        }
+        assert!(BackendKind::from_str("tpu").is_err());
+        assert_eq!(BackendKind::from_str("SIM").unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::default(), BackendKind::Cpu);
     }
 }

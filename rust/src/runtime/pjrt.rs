@@ -1,0 +1,163 @@
+//! [`PjrtBackend`] — AOT HLO-text artifacts executed on a PJRT client
+//! (the original runtime path, now behind the `xla` cargo feature).
+//!
+//! This is the rust mirror of the OpenCL host API the paper describes in
+//! §3.2 (find device → context → memory → compile → launch → query), with
+//! the compile step moved to build time (`make artifacts`). Executables
+//! compile lazily on first use and are cached for the backend's lifetime.
+//!
+//! `PjrtBackend` is deliberately `!Send`: PJRT objects live on the thread
+//! that created them. The coordinator gives each worker its own backend.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::runtime::artifacts::ArtifactRegistry;
+use crate::runtime::backend::{Backend, SplitPair};
+use crate::runtime::client;
+use crate::runtime::literal::{download, literal_to_matrix, upload};
+use crate::runtime::Variant;
+
+/// PJRT-executed backend over the artifact registry.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    variant: Variant,
+    /// (op, n) → HLO path for this backend's variant (xla fallback for
+    /// ops only lowered in the xla variant, e.g. `expm{N}`).
+    info: HashMap<(String, usize), PathBuf>,
+    /// Lazily compiled executables ((op, n) or ("entry:{name}", n)).
+    exes: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Build from a discovered registry.
+    pub fn new(registry: &ArtifactRegistry, variant: Variant) -> Result<PjrtBackend> {
+        let client = client::cpu_client()?;
+        let mut info = HashMap::new();
+        // xla entries first (fallback), then requested variant overrides
+        for pass_variant in ["xla", variant.as_str()] {
+            for e in registry.entries() {
+                if e.variant == pass_variant && e.dtype == "f32" && e.tile.is_none() {
+                    info.insert((e.op.clone(), e.n), registry.path(e));
+                }
+            }
+        }
+        Ok(PjrtBackend { client, variant, info, exes: HashMap::new() })
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    fn compile_path(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| MatexpError::Artifact("non-utf8 path".into()))?,
+        )?;
+        Ok(client.compile(&xla::XlaComputation::from_proto(&proto))?)
+    }
+
+    /// Compile (or fetch from cache) the executable for `(op, n)`.
+    fn exe(&mut self, op: &str, n: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (op.to_string(), n);
+        if !self.exes.contains_key(&key) {
+            let path = self.info.get(&key).ok_or_else(|| {
+                MatexpError::Artifact(format!(
+                    "no artifact for op={op} n={n} (variant {}); run `make artifacts`",
+                    self.variant
+                ))
+            })?;
+            let exe = Self::compile_path(&self.client, path)?;
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(&self.exes[&key])
+    }
+
+    /// Compile an arbitrary manifest entry by name (the tile-sweep
+    /// ablation needs the tiled entries `find` hides). Returns the
+    /// entry's matrix size.
+    pub fn prepare_entry(&mut self, registry: &ArtifactRegistry, name: &str) -> Result<usize> {
+        let entry = registry
+            .entries()
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| MatexpError::Artifact(format!("no artifact named {name}")))?;
+        let key = (format!("entry:{name}"), entry.n);
+        if !self.exes.contains_key(&key) {
+            let exe = Self::compile_path(&self.client, &registry.path(entry))?;
+            self.exes.insert(key, exe);
+        }
+        Ok(entry.n)
+    }
+
+    /// One launch of a previously prepared manifest entry.
+    pub fn launch_entry(
+        &mut self,
+        name: &str,
+        n: usize,
+        inputs: &[Rc<xla::PjRtBuffer>],
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        let key = (format!("entry:{name}"), n);
+        let exe = self
+            .exes
+            .get(&key)
+            .ok_or_else(|| MatexpError::Artifact(format!("entry {name} not prepared")))?;
+        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(inputs)?;
+        let mut row = out.pop().ok_or_else(|| MatexpError::Xla("no output".into()))?;
+        let buf = row.pop().ok_or_else(|| MatexpError::Xla("empty output row".into()))?;
+        Ok(Rc::new(buf))
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Buffer = Rc<xla::PjRtBuffer>;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        client::platform_summary(&self.client)
+    }
+
+    fn prepare(&mut self, op: &str, n: usize) -> Result<()> {
+        self.exe(op, n).map(|_| ())
+    }
+
+    fn upload(&mut self, m: &Matrix) -> Result<Self::Buffer> {
+        Ok(Rc::new(upload(&self.client, m)?))
+    }
+
+    fn download(&mut self, buf: &Self::Buffer, n: usize) -> Result<Matrix> {
+        download(buf.as_ref(), n)
+    }
+
+    fn launch(&mut self, op: &str, n: usize, inputs: &[Self::Buffer]) -> Result<Self::Buffer> {
+        let exe = self.exe(op, n)?;
+        let mut out = exe.execute_b::<Rc<xla::PjRtBuffer>>(inputs)?;
+        let mut row = out.pop().ok_or_else(|| MatexpError::Xla("no output".into()))?;
+        let buf = row.pop().ok_or_else(|| MatexpError::Xla("empty output row".into()))?;
+        Ok(Rc::new(buf))
+    }
+
+    /// PJRT hands back ONE tuple buffer for the 2-tuple `sqmul` artifact,
+    /// so splitting costs a host round-trip — measured honestly (this is
+    /// ablation A2's "bad" arm; the packed path avoids it).
+    fn split_pair(&mut self, buf: &Self::Buffer, n: usize) -> Result<SplitPair<Self::Buffer>> {
+        let parts = buf.to_literal_sync()?.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(MatexpError::Xla(format!("expected a 2-tuple, got {}-tuple", parts.len())));
+        }
+        let mut it = parts.into_iter();
+        let first = literal_to_matrix(&it.next().unwrap(), n)?;
+        let second = literal_to_matrix(&it.next().unwrap(), n)?;
+        Ok(SplitPair {
+            first: Rc::new(upload(&self.client, &first)?),
+            second: Rc::new(upload(&self.client, &second)?),
+            h2d_transfers: 2,
+            d2h_transfers: 2,
+        })
+    }
+}

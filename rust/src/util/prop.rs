@@ -16,8 +16,8 @@
 //! });
 //! ```
 //!
-//! (`no_run` because doctest binaries lack the libxla rpath; the same
-//! property runs compiled in this module's unit tests.)
+//! (`no_run` to keep doctest time down; the same property runs compiled
+//! in this module's unit tests.)
 
 use crate::linalg::rand::XorShift64;
 

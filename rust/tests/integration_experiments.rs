@@ -1,11 +1,11 @@
 //! Integration: the experiment harness — measured tables reproduce the
 //! paper's claim structure on this testbed; ablations run end-to-end.
+//! Runs unconditionally on the pure-Rust backends (no artifacts).
 
 use matexp::config::MatexpConfig;
-use matexp::experiments::{ablations, report, run_table};
-use matexp::runtime::artifacts::ArtifactRegistry;
-use matexp::runtime::engine::Engine;
-use matexp::runtime::Variant;
+use matexp::experiments::{ablations, report, run_table, run_table_sim};
+use matexp::linalg::CpuAlgo;
+use matexp::runtime::Engine;
 
 fn cfg() -> MatexpConfig {
     let mut c = MatexpConfig::default();
@@ -13,19 +13,11 @@ fn cfg() -> MatexpConfig {
     c
 }
 
-fn registry(cfg: &MatexpConfig) -> Option<ArtifactRegistry> {
-    if !cfg.artifacts_dir.join("manifest.json").exists() {
-        eprintln!("artifacts not built; skipping");
-        return None;
-    }
-    Some(ArtifactRegistry::discover(&cfg.artifacts_dir).unwrap())
-}
-
 #[test]
 fn all_four_tables_simulate_with_paper_columns() {
     let cfg = cfg();
     for id in 2..=5u8 {
-        let t = run_table(id, &cfg, None).unwrap();
+        let t = run_table_sim(id, &cfg).unwrap();
         assert!(!t.cells.is_empty());
         assert!(t.cells.iter().all(|c| c.paper.is_some()));
         let rendered = report::render_table(&t);
@@ -38,12 +30,12 @@ fn all_four_tables_simulate_with_paper_columns() {
 #[test]
 fn measured_table2_preserves_the_claim_structure() {
     let cfg = cfg();
-    let Some(reg) = registry(&cfg) else { return };
-    let t = run_table(2, &cfg, Some(&reg)).unwrap();
+    let mut engine = Engine::cpu(CpuAlgo::Blocked);
+    let t = run_table(2, &cfg, Some(&mut engine)).unwrap();
     for c in &t.cells {
         let m = c.measured.expect("measured column present");
-        // the paper's two core claims, on OUR testbed:
-        // 1. ours beats the naive GPU discipline
+        // the paper's core claim, on OUR testbed: ours (log N launches,
+        // two host crossings) beats the naive per-launch discipline
         assert!(
             m.ours_s < m.naive_gpu_s,
             "N={}: ours {} vs naive {}",
@@ -51,8 +43,8 @@ fn measured_table2_preserves_the_claim_structure() {
             m.ours_s,
             m.naive_gpu_s
         );
-        // 2. the gap grows with the exponent (launch counts: N-1 vs ~log N)
     }
+    // and the gap grows with the exponent (launch counts: N-1 vs ~log N)
     let first = t.cells.first().unwrap().measured.unwrap();
     let last = t.cells.last().unwrap().measured.unwrap();
     assert!(
@@ -64,18 +56,41 @@ fn measured_table2_preserves_the_claim_structure() {
 }
 
 #[test]
-fn measured_naive_gpu_beats_measured_seq_cpu_at_large_n() {
-    // the paper's other claim — GPU beats CPU — needs a big enough matrix
-    // on this CPU-PJRT testbed (XLA's matmul is multithreaded+vectorized,
-    // the baseline is a scalar triple loop)
+fn measured_cell_on_sim_backend_reproduces_paper_ordering() {
     let cfg = cfg();
-    let Some(reg) = registry(&cfg) else { return };
-    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let mut engine = Engine::sim();
+    let a = matexp::linalg::matrix::Matrix::random_spectral(64, 0.99, 1);
+    let m = matexp::experiments::tables::measure_cell(&mut engine, &cfg, &a, 256).unwrap();
+    // simulated 2012 testbed: the full paper ordering — ours beats naive
+    // GPU beats sequential CPU — and the CPU arm is MODELED (same
+    // calibration), never this host's wall-clock
+    assert!(
+        m.ours_s < m.naive_gpu_s,
+        "sim ours {} should beat sim naive {}",
+        m.ours_s,
+        m.naive_gpu_s
+    );
+    assert!(
+        m.naive_gpu_s < m.seq_cpu_s,
+        "sim naive GPU {} should beat modeled seq CPU {}",
+        m.naive_gpu_s,
+        m.seq_cpu_s
+    );
+}
+
+#[test]
+fn measured_threaded_backend_beats_measured_seq_cpu() {
+    // the paper's other claim — the parallel device beats the sequential
+    // CPU — holds on this testbed once the backend actually uses the
+    // cores: the threaded-matmul backend vs the scalar i-j-k loop
+    let cfg = cfg();
+    let mut engine = Engine::cpu(CpuAlgo::Threaded);
     let a = matexp::linalg::matrix::Matrix::random_spectral(256, 0.99, 1);
+    engine.warmup_exec(256).unwrap(); // measure_cell expects a warm engine
     let m = matexp::experiments::tables::measure_cell(&mut engine, &cfg, &a, 64).unwrap();
     assert!(
         m.naive_gpu_s < m.seq_cpu_s,
-        "XLA-backed naive GPU arm {} should beat the scalar CPU loop {}",
+        "threaded-backend naive arm {} should beat the scalar CPU loop {}",
         m.naive_gpu_s,
         m.seq_cpu_s
     );
@@ -84,8 +99,7 @@ fn measured_naive_gpu_beats_measured_seq_cpu_at_large_n() {
 #[test]
 fn ablation_suite_runs() {
     let cfg = cfg();
-    let Some(reg) = registry(&cfg) else { return };
-    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
+    let mut engine = Engine::cpu(CpuAlgo::Blocked);
 
     let arms = ablations::transfer_ablation(&mut engine, 32, 64, cfg.seed).unwrap();
     assert_eq!(arms.len(), 2);
@@ -108,16 +122,27 @@ fn ablation_suite_runs() {
     assert!(best <= naive.wall_s, "some variant at least ties naive");
 }
 
-#[test]
-fn tile_sweep_covers_manifest_tiles() {
-    let cfg = cfg();
-    let Some(reg) = registry(&cfg) else { return };
-    let mut engine = Engine::new(&reg, Variant::Xla).unwrap();
-    let tiles = reg.tiles("matmul", 128);
-    if tiles.is_empty() {
-        return;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use matexp::runtime::artifacts::ArtifactRegistry;
+    use matexp::runtime::Variant;
+
+    #[test]
+    fn tile_sweep_covers_manifest_tiles() {
+        let cfg = cfg();
+        if !cfg.artifacts_dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let reg = ArtifactRegistry::discover(&cfg.artifacts_dir).unwrap();
+        let mut engine = Engine::pjrt(&reg, Variant::Xla).unwrap();
+        let tiles = reg.tiles("matmul", 128);
+        if tiles.is_empty() {
+            return;
+        }
+        let arms = ablations::tile_sweep(&mut engine, &reg, 128, cfg.seed).unwrap();
+        assert_eq!(arms.len(), tiles.len());
+        print!("{}", report::render_ablation("tiles n=128", &arms));
     }
-    let arms = ablations::tile_sweep(&mut engine, &reg, 128, cfg.seed).unwrap();
-    assert_eq!(arms.len(), tiles.len());
-    print!("{}", report::render_ablation("tiles n=128", &arms));
 }

@@ -1,13 +1,14 @@
-//! Property-based tests over the planner and coordinator invariants
-//! (in-tree `util::prop` harness; see DESIGN.md §8).
+//! Property-based tests over the planner, engine-replay and coordinator
+//! invariants (in-tree `util::prop` harness; see DESIGN.md §8).
 
 use std::time::Instant;
 
 use matexp::config::BatcherConfig;
 use matexp::coordinator::batcher::Batcher;
 use matexp::coordinator::request::{ExpmRequest, Method};
-use matexp::linalg::matrix::Matrix;
-use matexp::plan::{mod_pow, Plan};
+use matexp::linalg::{matrix::Matrix, CpuAlgo};
+use matexp::plan::{mod_pow, Plan, PlanKind, Step};
+use matexp::runtime::Engine;
 use matexp::util::json::Json;
 use matexp::util::prop::property;
 
@@ -98,6 +99,132 @@ fn plan_eval_matches_matrix_exponentiation_small() {
                 got.max_abs_diff(&naive)
             );
         }
+    });
+}
+
+#[test]
+fn sqmul_register_aliasing_squares() {
+    // `SqMul { acc, base }` with acc == base: eval computes
+    // new_acc = acc·base = b², then new_base = b², and both writes land on
+    // the same register — the aliased step degenerates to one squaring.
+    let plan = Plan {
+        power: 2,
+        kind: PlanKind::Binary,
+        steps: vec![Step::SqMul { acc: 0, base: 0 }],
+        n_regs: 1,
+        result: 0,
+    };
+    plan.validate().unwrap();
+    for base in [2u64, 3, 97] {
+        assert_eq!(plan.eval_mod(base, M).unwrap(), base * base % M);
+    }
+    // two aliased steps: ((b²)²)² is NOT what you get — each SqMul squares
+    // once under aliasing, so two steps give b⁴
+    let plan2 = Plan {
+        power: 4,
+        kind: PlanKind::Binary,
+        steps: vec![Step::SqMul { acc: 0, base: 0 }, Step::SqMul { acc: 0, base: 0 }],
+        n_regs: 1,
+        result: 0,
+    };
+    assert_eq!(plan2.eval_mod(3, M).unwrap(), mod_pow(3, 4, M));
+}
+
+#[test]
+fn random_plans_with_aliasing_track_exponent_model() {
+    // Build random (valid-by-construction) plans over 3 registers,
+    // including aliased SqMul steps, while tracking the exponent each
+    // register holds; eval_mod must agree with mod_pow of the model.
+    property("random plans == exponent model", 200, |g| {
+        let n_regs = 3usize;
+        let mut exp: Vec<Option<u64>> = vec![None; n_regs];
+        exp[0] = Some(1);
+        let mut steps = Vec::new();
+        let limit: u64 = 1 << 40;
+        for _ in 0..g.usize(1, 14) {
+            let written: Vec<usize> =
+                (0..n_regs).filter(|&r| exp[r].is_some()).collect();
+            match g.usize(0, 3) {
+                0 => {
+                    let src = *g.choose(&written);
+                    let dst = g.usize(0, n_regs - 1);
+                    steps.push(Step::Copy { dst, src });
+                    exp[dst] = exp[src];
+                }
+                1 => {
+                    let lhs = *g.choose(&written);
+                    let rhs = *g.choose(&written);
+                    let dst = g.usize(0, n_regs - 1);
+                    let e = exp[lhs].unwrap() + exp[rhs].unwrap();
+                    if e > limit {
+                        continue;
+                    }
+                    steps.push(Step::Mul { dst, lhs, rhs });
+                    exp[dst] = Some(e);
+                }
+                2 => {
+                    let acc = *g.choose(&written);
+                    let base = *g.choose(&written); // may alias acc
+                    let (ea, eb) = (exp[acc].unwrap(), exp[base].unwrap());
+                    if ea + eb > limit || eb * 2 > limit {
+                        continue;
+                    }
+                    steps.push(Step::SqMul { acc, base });
+                    // eval order: acc = old_acc + old_base, then
+                    // base = 2·old_base; an aliased pair ends at 2·old_base
+                    exp[acc] = Some(ea + eb);
+                    exp[base] = Some(eb * 2);
+                }
+                _ => {
+                    let reg = *g.choose(&written);
+                    let k = g.usize(1, 4) as u32;
+                    let e = exp[reg].unwrap();
+                    if e << k > limit {
+                        continue;
+                    }
+                    steps.push(Step::SquareChain { reg, k });
+                    exp[reg] = Some(e << k);
+                }
+            }
+        }
+        let result = *g.choose(
+            &(0..n_regs).filter(|&r| exp[r].is_some()).collect::<Vec<_>>(),
+        );
+        let power = exp[result].unwrap();
+        let plan = Plan { power, kind: PlanKind::Binary, steps, n_regs, result };
+        plan.validate().expect("constructed valid");
+        let base = g.u64(2, 1000);
+        assert_eq!(
+            plan.eval_mod(base, M).unwrap(),
+            mod_pow(base, power, M),
+            "plan {plan:?}"
+        );
+    });
+}
+
+#[test]
+fn cpu_engine_replay_matches_plan_cost_model() {
+    // ExecStats invariants on CpuBackend: replaying ANY valid plan yields
+    // launches == plan.launches(), multiplies == plan.multiplies(), and
+    // exactly one host crossing each way (the cpu pair-split is free, so
+    // this holds for fused/SqMul plans too).
+    property("engine replay == plan cost model", 120, |g| {
+        let mut engine = Engine::cpu(CpuAlgo::Naive); // construction is free
+        let power = g.u64(1, 1 << 12);
+        let plan = match g.usize(0, 4) {
+            0 => Plan::naive(power.min(64)), // naive plans are O(N); bound them
+            1 => Plan::binary(power, false),
+            2 => Plan::binary(power, true),
+            3 => Plan::chained(power, &[4, 2]),
+            _ => Plan::addition_chain(power),
+        };
+        let a = Matrix::identity(4);
+        let (out, stats) = engine.expm(&a, &plan).expect("replay");
+        assert!(out.approx_eq(&a, 1e-6, 0.0), "identity stays identity");
+        assert_eq!(stats.launches, plan.launches(), "{:?}", plan.kind);
+        assert_eq!(stats.multiplies, plan.multiplies(), "{:?}", plan.kind);
+        assert_eq!(stats.h2d_transfers, 1, "{:?}", plan.kind);
+        assert_eq!(stats.d2h_transfers, 1, "{:?}", plan.kind);
     });
 }
 

@@ -1,0 +1,157 @@
+//! API-surface stub of the `xla` crate (xla-rs / PJRT bindings).
+//!
+//! This exists so `cargo build --features xla` type-checks and links
+//! without network access or a PJRT plugin: it mirrors exactly the slice
+//! of the xla-rs API that `matexp::runtime::pjrt` uses, and every runtime
+//! entry point returns [`Error::Stub`]. To run on real PJRT, point the
+//! `xla` path dependency in `rust/Cargo.toml` at an xla-rs checkout — the
+//! `matexp` code is written against the real API and needs no changes.
+
+use std::rc::Rc;
+
+/// The single error the stub produces (plus a message slot so call sites
+/// that construct errors still work against the real crate's `Display`).
+#[derive(Debug)]
+pub enum Error {
+    Stub,
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(
+            "xla stub: built against rust/xla-stub; point the `xla` dependency at a real xla-rs checkout to use PJRT",
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::Stub)
+}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Device buffer (stub: uninhabitable at runtime).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation ready to compile.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Things `execute`/`execute_b` accept as arguments.
+pub trait ExecuteArg {}
+impl ExecuteArg for Literal {}
+impl ExecuteArg for Rc<PjRtBuffer> {}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A: ExecuteArg>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+
+    pub fn execute_b<A: ExecuteArg>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn platform_version(&self) -> String {
+        "0".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_entry_errors() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1, 1]).is_err());
+        let msg = Error::Stub.to_string();
+        assert!(msg.contains("xla-rs"), "{msg}");
+    }
+}
