@@ -1,0 +1,27 @@
+//! `cargo bench --bench pool_scaling` — the full pool scaling experiment:
+//! the Table-4 workload at n=1024 on 1/2/4/8 simulated C2050s plus the
+//! heterogeneous CPU+sim arm, predicted AND measured (sim clocks are
+//! simulated; numerics are real, so this wants a release build).
+
+use matexp::bench::Runner;
+use matexp::config::MatexpConfig;
+use matexp::experiments::{render_scaling, run_pool_scaling, scaling};
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let arms = scaling::default_scaling_arms();
+    let t = run_pool_scaling(&cfg, 1024, &arms, true).expect("pool scaling");
+    print!("{}", render_scaling(&t));
+
+    let mut runner = Runner::new("pool scaling (n=1024, Table-4 workload)");
+    runner.record("single-sim/workload", t.baseline_measured_s.unwrap_or(0.0));
+    for arm in &t.arms {
+        if let Some(m) = arm.measured_s {
+            runner.record(&format!("{}/workload", arm.name), m);
+        }
+        if let Some(m) = arm.shard_measured_s {
+            runner.record(&format!("{}/shard-N512", arm.name), m);
+        }
+    }
+    runner.report();
+}

@@ -1,0 +1,116 @@
+//! Multi-device pool demo: the same `A^N` on one device, a homogeneous
+//! sim pool, and a heterogeneous cpu+sim pool — with the cost-model
+//! splitter's choices and the per-device breakdown printed.
+//!
+//! ```bash
+//! cargo run --release --example multi_device
+//! ```
+//!
+//! Pure Rust + the calibrated C2050 timing model: no GPU needed.
+
+use matexp::prelude::*;
+use matexp::pool::ShardDecision;
+
+fn pool_cfg(devices: Vec<PoolDeviceKind>) -> MatexpConfig {
+    let mut cfg = MatexpConfig::default();
+    cfg.backend = BackendKind::Pool;
+    cfg.pool.devices = devices;
+    cfg
+}
+
+fn show(stats: &matexp::runtime::ExecStats) {
+    println!(
+        "  total: {:>3} launches, {:>4} tile-multiplies, {} transfers, wall {}",
+        stats.launches,
+        stats.multiplies,
+        stats.h2d_transfers + stats.d2h_transfers,
+        matexp::bench::format_secs(stats.wall_s)
+    );
+    for d in &stats.per_device {
+        println!(
+            "    {:<7} {:>3} launches, {:>4} multiplies, busy {}",
+            d.device,
+            d.launches,
+            d.multiplies,
+            matexp::bench::format_secs(d.wall_s)
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let n = 1024;
+    let power = 512;
+    let a = Matrix::random_spectral(n, 0.999, 42);
+    let plan = Plan::binary(power, false);
+
+    // 1. one simulated C2050 (the paper's whole testbed)
+    let mut cfg = MatexpConfig::default();
+    cfg.backend = BackendKind::Sim;
+    let mut single = AnyEngine::from_config(&cfg)?;
+    let (want, single_stats) = single.expm(&a, &plan)?;
+    println!("single sim device ({}):", single.platform());
+    show(&single_stats);
+
+    // 2. four simulated C2050s: the splitter tile-shards each multiply
+    let cfg4 = pool_cfg(vec![PoolDeviceKind::Sim; 4]);
+    let pool4 = PoolEngine::from_config(&cfg4)?;
+    match pool4.pool().shard_decision(n) {
+        ShardDecision::Shard(sp) => println!(
+            "\n4x sim pool shards on a {g}x{g} grid (predicted {pred}/multiply):",
+            g = sp.grid,
+            pred = matexp::bench::format_secs(sp.predicted_step_s)
+        ),
+        ShardDecision::Single { .. } => println!("\n4x sim pool declined to shard:"),
+    }
+    let (got, pool_stats) = pool4.expm(&a, &plan)?;
+    assert!(got.approx_eq(&want, 1e-3, 1e-3), "pool result diverged");
+    show(&pool_stats);
+    println!(
+        "  sharded speedup vs single device: {:.2}x",
+        single_stats.wall_s / pool_stats.wall_s
+    );
+
+    // 3. heterogeneous cpu+sim pool on a batch of small requests:
+    //    request-parallel dispatch, cost-model queues, work stealing
+    let small_n = 48;
+    let cfg_h = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Sim]);
+    let hetero = PoolEngine::from_config(&cfg_h)?;
+    let reqs: Vec<ExpmRequest> = (0..16)
+        .map(|i| ExpmRequest {
+            id: i + 1,
+            matrix: Matrix::random_spectral(small_n, 0.95, i + 1),
+            power: 64,
+            method: Method::Ours,
+        })
+        .collect();
+    let oracles: Vec<Matrix> = (0..16)
+        .map(|i| {
+            let a = Matrix::random_spectral(small_n, 0.95, i + 1);
+            matexp::linalg::expm::expm(&a, 64, CpuAlgo::Ikj).expect("oracle")
+        })
+        .collect();
+    let mut replies = hetero.execute_batch(reqs);
+    replies.sort_by_key(|(id, _)| *id);
+    for (id, outcome) in &replies {
+        let resp = outcome.as_ref().expect("request served");
+        let want = &oracles[(*id - 1) as usize];
+        assert!(
+            resp.result.approx_eq(want, 1e-3, 1e-3),
+            "request {id} diverged from the oracle by {}",
+            resp.result.max_abs_diff(want)
+        );
+    }
+    println!("\ncpu+sim pool served {}/16 small requests (n={small_n}):", replies.len());
+    let metrics = hetero.pool().metrics();
+    for d in &metrics.devices {
+        println!(
+            "    {:<7} jobs {:>2}, steals {:>2}, busy {}",
+            d.name,
+            d.jobs,
+            d.steals,
+            matexp::bench::format_secs(d.busy_s)
+        );
+    }
+    println!("\nall results agree with the single-device oracle.");
+    Ok(())
+}

@@ -9,6 +9,7 @@ use std::str::FromStr;
 use crate::error::{MatexpError, Result};
 use crate::json_obj;
 use crate::linalg::expm::CpuAlgo;
+use crate::pool::PoolDeviceKind;
 use crate::runtime::{BackendKind, Variant};
 use crate::util::json::Json;
 
@@ -29,6 +30,33 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Device-pool knobs (the `pool` backend; see [`crate::pool`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolConfig {
+    /// The devices the pool owns, in order (`cpu` and/or `sim` entries).
+    pub devices: Vec<PoolDeviceKind>,
+    /// Below this matrix size a request runs whole on one device
+    /// (request-parallel dispatch); at/above it, single large requests are
+    /// tile-sharded across the pool.
+    pub shard_min_n: usize,
+    /// Force the tile grid to `g`×`g` instead of letting the cost model
+    /// pick (tests and ablations; `None` = cost model decides).
+    pub grid: Option<usize>,
+    /// Largest grid dimension the cost model may consider.
+    pub max_grid: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            devices: vec![PoolDeviceKind::Sim, PoolDeviceKind::Sim],
+            shard_min_n: 512,
+            grid: None,
+            max_grid: 4,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
@@ -44,9 +72,14 @@ pub struct MatexpConfig {
     pub variant: Variant,
     /// Worker threads in the serving coordinator.
     pub workers: usize,
+    /// Largest matrix size admission control accepts (per side); requests
+    /// above it are rejected with a typed [`MatexpError::Admission`].
+    pub max_n: usize,
     /// TCP bind address for `matexp serve`.
     pub server_addr: String,
     pub batcher: BatcherConfig,
+    /// Multi-device pool layout (used when `backend` is `pool`).
+    pub pool: PoolConfig,
     /// Use the fused `sqmul` executable in binary plans.
     pub fused_sqmul: bool,
     /// Fold squaring runs into `square2`/`square4` launches.
@@ -71,8 +104,10 @@ impl Default for MatexpConfig {
             artifacts_dir: default_artifacts_dir(),
             variant: Variant::Xla,
             workers: 4,
+            max_n: 4096,
             server_addr: "127.0.0.1:7070".into(),
             batcher: BatcherConfig::default(),
+            pool: PoolConfig::default(),
             fused_sqmul: true,
             use_square_chains: true,
             warmup_sizes: Vec::new(),
@@ -125,6 +160,46 @@ impl MatexpConfig {
                         Variant::from_str(val.as_str().ok_or_else(|| bad("variant"))?)?;
                 }
                 "workers" => cfg.workers = val.as_usize().ok_or_else(|| bad("workers"))?,
+                "max_n" => cfg.max_n = val.as_usize().ok_or_else(|| bad("max_n"))?,
+                "pool" => {
+                    let p = val.as_obj().ok_or_else(|| bad("pool"))?;
+                    for (pk, pv) in p {
+                        match pk.as_str() {
+                            "devices" => {
+                                let arr =
+                                    pv.as_arr().ok_or_else(|| bad("pool.devices"))?;
+                                let mut devices = Vec::with_capacity(arr.len());
+                                for d in arr {
+                                    let s = d
+                                        .as_str()
+                                        .ok_or_else(|| bad("pool.devices"))?;
+                                    devices.push(PoolDeviceKind::from_str(s)?);
+                                }
+                                cfg.pool.devices = devices;
+                            }
+                            "shard_min_n" => {
+                                cfg.pool.shard_min_n =
+                                    pv.as_usize().ok_or_else(|| bad("pool.shard_min_n"))?
+                            }
+                            "grid" => {
+                                cfg.pool.grid = if pv.is_null() {
+                                    None
+                                } else {
+                                    Some(pv.as_usize().ok_or_else(|| bad("pool.grid"))?)
+                                };
+                            }
+                            "max_grid" => {
+                                cfg.pool.max_grid =
+                                    pv.as_usize().ok_or_else(|| bad("pool.max_grid"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field pool.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
                 "server_addr" => {
                     cfg.server_addr =
                         val.as_str().ok_or_else(|| bad("server_addr"))?.to_string();
@@ -185,6 +260,7 @@ impl MatexpConfig {
             ("artifacts_dir", self.artifacts_dir.display().to_string()),
             ("variant", self.variant.as_str()),
             ("workers", self.workers),
+            ("max_n", self.max_n),
             ("server_addr", self.server_addr.as_str()),
             (
                 "batcher",
@@ -192,6 +268,30 @@ impl MatexpConfig {
                     ("max_batch", self.batcher.max_batch),
                     ("max_wait_ms", self.batcher.max_wait_ms),
                     ("max_queue", self.batcher.max_queue),
+                ]
+            ),
+            (
+                "pool",
+                json_obj![
+                    (
+                        "devices",
+                        Json::Arr(
+                            self.pool
+                                .devices
+                                .iter()
+                                .map(|d| Json::Str(d.as_str().to_string()))
+                                .collect()
+                        )
+                    ),
+                    ("shard_min_n", self.pool.shard_min_n),
+                    (
+                        "grid",
+                        match self.pool.grid {
+                            Some(g) => Json::from(g),
+                            None => Json::Null,
+                        }
+                    ),
+                    ("max_grid", self.pool.max_grid),
                 ]
             ),
             (
@@ -222,6 +322,20 @@ impl MatexpConfig {
         }
         if self.cpu_measure_cap == 0 {
             return Err(MatexpError::Config("cpu_measure_cap must be >= 1".into()));
+        }
+        if self.max_n == 0 {
+            return Err(MatexpError::Config("max_n must be >= 1".into()));
+        }
+        if self.pool.max_grid == 0 {
+            return Err(MatexpError::Config("pool.max_grid must be >= 1".into()));
+        }
+        if self.pool.grid == Some(0) {
+            return Err(MatexpError::Config("pool.grid must be >= 1".into()));
+        }
+        if self.backend == BackendKind::Pool && self.pool.devices.is_empty() {
+            return Err(MatexpError::Config(
+                "backend \"pool\" needs at least one device in pool.devices".into(),
+            ));
         }
         Ok(())
     }
@@ -294,6 +408,41 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = MatexpConfig::default();
         cfg.batcher.max_batch = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pool_config_parses() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(
+                r#"{"backend":"pool","pool":{"devices":["cpu","sim"],"shard_min_n":128,"grid":2}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pool);
+        assert_eq!(cfg.pool.devices, vec![PoolDeviceKind::Cpu, PoolDeviceKind::Sim]);
+        assert_eq!(cfg.pool.shard_min_n, 128);
+        assert_eq!(cfg.pool.grid, Some(2));
+        cfg.validate().unwrap();
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"pool":{"devices":["tpu"]}}"#).unwrap()
+        )
+        .is_err());
+        assert!(MatexpConfig::from_json(&Json::parse(r#"{"pool":{"wat":1}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn max_n_and_pool_validate() {
+        let mut cfg = MatexpConfig::default();
+        cfg.max_n = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Pool;
+        cfg.pool.devices.clear();
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.pool.grid = Some(0);
         assert!(cfg.validate().is_err());
     }
 

@@ -1,8 +1,11 @@
-//! Lock-free service metrics: counters + a fixed-bucket latency histogram.
+//! Lock-free service metrics: counters + a fixed-bucket latency histogram,
+//! plus batcher queue depth and (for the pool backend) per-device
+//! utilization and steal counts.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::json_obj;
+use crate::pool::DeviceUtil;
 use crate::util::json::Json;
 
 /// Histogram bucket upper bounds, microseconds (log-spaced, last = +inf).
@@ -21,6 +24,9 @@ pub struct Metrics {
     pub batched_requests_total: AtomicU64,
     pub launches_total: AtomicU64,
     pub multiplies_total: AtomicU64,
+    /// Gauge: requests waiting in the batcher right now (set by the
+    /// collector each loop).
+    pub queue_depth: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
 }
@@ -36,6 +42,13 @@ pub struct MetricsSnapshot {
     pub batched_requests_total: u64,
     pub launches_total: u64,
     pub multiplies_total: u64,
+    /// Requests waiting in the batcher at snapshot time.
+    pub queue_depth: u64,
+    /// Total cross-queue steals in the device pool (0 off the pool backend).
+    pub steals_total: u64,
+    /// Per-device utilization (empty off the pool backend); filled by
+    /// [`crate::coordinator::service::ServiceHandle::metrics`].
+    pub devices: Vec<DeviceUtil>,
     pub latency_buckets: Vec<(u64, u64)>,
     pub latency_mean_us: f64,
     pub latency_p50_us: u64,
@@ -86,6 +99,9 @@ impl Metrics {
             batched_requests_total: self.batched_requests_total.load(Ordering::Relaxed),
             launches_total: self.launches_total.load(Ordering::Relaxed),
             multiplies_total: self.multiplies_total.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            steals_total: 0,
+            devices: Vec::new(),
             latency_mean_us: if observed == 0 { 0.0 } else { sum as f64 / observed as f64 },
             latency_p50_us: Self::percentile(&buckets, observed, 0.50),
             latency_p99_us: Self::percentile(&buckets, observed, 0.99),
@@ -104,6 +120,21 @@ impl MetricsSnapshot {
                 Json::Arr(vec![Json::Num(bound as f64), Json::Num(count as f64)])
             })
             .collect();
+        let devices: Vec<Json> = self
+            .devices
+            .iter()
+            .map(|d| {
+                json_obj![
+                    ("name", d.name.as_str()),
+                    ("kind", d.kind.as_str()),
+                    ("jobs", d.jobs),
+                    ("steals", d.steals),
+                    ("launches", d.launches),
+                    ("busy_s", d.busy_s),
+                    ("queue_depth", d.queue_depth),
+                ]
+            })
+            .collect();
         json_obj![
             ("requests_total", self.requests_total),
             ("responses_total", self.responses_total),
@@ -113,6 +144,9 @@ impl MetricsSnapshot {
             ("batched_requests_total", self.batched_requests_total),
             ("launches_total", self.launches_total),
             ("multiplies_total", self.multiplies_total),
+            ("queue_depth", self.queue_depth),
+            ("steals_total", self.steals_total),
+            ("devices", Json::Arr(devices)),
             ("latency_buckets", Json::Arr(buckets)),
             ("latency_mean_us", self.latency_mean_us),
             ("latency_p50_us", self.latency_p50_us),
@@ -155,6 +189,28 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.latency_p50_us, 0);
         assert_eq!(s.latency_mean_us, 0.0);
+    }
+
+    #[test]
+    fn pool_fields_serialize() {
+        let m = Metrics::new();
+        m.queue_depth.store(3, Ordering::Relaxed);
+        let mut s = m.snapshot();
+        assert_eq!(s.queue_depth, 3);
+        s.steals_total = 2;
+        s.devices.push(DeviceUtil {
+            name: "sim#0".into(),
+            kind: crate::pool::PoolDeviceKind::Sim,
+            jobs: 5,
+            steals: 2,
+            launches: 9,
+            busy_s: 0.5,
+            queue_depth: 1,
+        });
+        let j = s.to_json().to_string();
+        assert!(j.contains("steals_total"), "{j}");
+        assert!(j.contains("sim#0"), "{j}");
+        assert!(j.contains("queue_depth"), "{j}");
     }
 
     #[test]

@@ -32,8 +32,10 @@ pub enum Strategy {
 /// Validate a request against the config and the backend's servable
 /// sizes. An empty `sizes` slice means the backend is size-unrestricted
 /// (the pure-Rust backends); a non-empty slice is the artifact inventory
-/// (PJRT).
-pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<()> {
+/// (PJRT). Size-limit violations surface as the typed
+/// [`MatexpError::Admission`] so clients can tell "fix your request"
+/// apart from service failures.
+pub fn admit(req: &ExpmRequest, sizes: &[usize], cfg: &MatexpConfig) -> Result<()> {
     if req.power == 0 {
         return Err(MatexpError::Service("power must be >= 1".into()));
     }
@@ -41,6 +43,16 @@ pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<
         return Err(MatexpError::Service(format!(
             "power {} exceeds MAX_POWER {MAX_POWER}",
             req.power
+        )));
+    }
+    if req.n() == 0 {
+        return Err(MatexpError::Admission("matrix is empty (n=0)".into()));
+    }
+    if req.n() > cfg.max_n {
+        return Err(MatexpError::Admission(format!(
+            "matrix size {} exceeds the configured max_n {}",
+            req.n(),
+            cfg.max_n
         )));
     }
     if !req.matrix.is_finite() {
@@ -58,6 +70,29 @@ pub fn admit(req: &ExpmRequest, sizes: &[usize], _cfg: &MatexpConfig) -> Result<
     }
     // FusedArtifact availability for a specific power is checked by the
     // worker (it has the backend); admission only validates what it can.
+}
+
+/// How a device pool should run a batch ([`crate::pool`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolDispatch {
+    /// Shard every multiply across the devices (one large matrix: the
+    /// per-multiply work is big enough to amortize the extra launches).
+    TileShard,
+    /// Run whole requests on per-device queues with work stealing
+    /// (batches, or matrices too small to shard profitably).
+    RequestParallel,
+}
+
+/// Pool dispatch policy: tile-shard a *single* large request; batches and
+/// small matrices go request-parallel. A forced grid (`cfg.pool.grid`,
+/// `--pool-grid`) pins single requests of ANY size to the sharded path so
+/// ablations measure what they asked for.
+pub fn pool_dispatch(n: usize, requests: usize, cfg: &MatexpConfig) -> PoolDispatch {
+    if requests <= 1 && (n >= cfg.pool.shard_min_n || cfg.pool.grid.is_some()) {
+        PoolDispatch::TileShard
+    } else {
+        PoolDispatch::RequestParallel
+    }
 }
 
 /// Pick the execution strategy for an admitted request.
@@ -107,6 +142,37 @@ mod tests {
         // size-unrestricted backends (cpu/sim) publish no size inventory
         admit(&req(100, 512, Method::Ours), &[], &cfg()).unwrap();
         admit(&req(7, 2, Method::OursPacked), &[], &cfg()).unwrap();
+    }
+
+    #[test]
+    fn enforces_configured_max_n_with_typed_error() {
+        let mut c = cfg();
+        c.max_n = 64;
+        admit(&req(64, 8, Method::Ours), &[], &c).unwrap();
+        let err = admit(&req(65, 8, Method::Ours), &[], &c).unwrap_err();
+        assert!(
+            matches!(err, MatexpError::Admission(_)),
+            "want typed admission error, got {err:?}"
+        );
+        assert!(err.to_string().contains("max_n"), "{err}");
+        // the CPU path is not exempt from the size cap
+        assert!(admit(&req(65, 8, Method::CpuSeq), &[], &c).is_err());
+        // empty matrices are rejected, typed too
+        let err = admit(&req(0, 8, Method::Ours), &[], &c).unwrap_err();
+        assert!(matches!(err, MatexpError::Admission(_)), "{err:?}");
+    }
+
+    #[test]
+    fn pool_dispatch_by_size_and_batch() {
+        let mut c = cfg();
+        c.pool.shard_min_n = 256;
+        assert_eq!(pool_dispatch(512, 1, &c), PoolDispatch::TileShard);
+        assert_eq!(pool_dispatch(255, 1, &c), PoolDispatch::RequestParallel);
+        assert_eq!(pool_dispatch(512, 4, &c), PoolDispatch::RequestParallel);
+        // a forced grid pins single requests of any size to the shard path
+        c.pool.grid = Some(2);
+        assert_eq!(pool_dispatch(16, 1, &c), PoolDispatch::TileShard);
+        assert_eq!(pool_dispatch(16, 4, &c), PoolDispatch::RequestParallel);
     }
 
     #[test]

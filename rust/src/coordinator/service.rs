@@ -21,6 +21,7 @@ use crate::coordinator::request::{ExpmRequest, ExpmResponse, Method};
 use crate::coordinator::{scheduler, worker};
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
+use crate::pool::DevicePool;
 use crate::runtime::BackendKind;
 
 type Reply = std::result::Result<ExpmResponse, String>;
@@ -36,6 +37,9 @@ pub struct ServiceHandle {
     submit_tx: Option<SyncSender<ExpmRequest>>,
     replies: ReplyMap,
     metrics: Arc<Metrics>,
+    /// The shared device pool when `cfg.backend` is `pool` (workers hold
+    /// clones; kept here for observability and lifetime).
+    pool: Option<Arc<DevicePool>>,
     next_id: AtomicU64,
     collector: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -52,6 +56,14 @@ impl Service {
         let metrics = Arc::new(Metrics::new());
         let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
 
+        // one shared device pool for all workers (the pool serializes
+        // per-device work on its own threads)
+        let pool = if cfg.backend == BackendKind::Pool {
+            Some(Arc::new(DevicePool::new(&cfg)?))
+        } else {
+            None
+        };
+
         let (submit_tx, submit_rx) = sync_channel::<ExpmRequest>(cfg.batcher.max_queue);
         let (batch_tx, batch_rx) = sync_channel::<Batch>(cfg.workers * 2);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -67,11 +79,12 @@ impl Service {
             let replies = Arc::clone(&replies);
             let metrics = Arc::clone(&metrics);
             let ready_tx = ready_tx.clone();
+            let pool_w = pool.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("matexp-worker-{widx}"))
                     .spawn(move || {
-                        worker_loop(&cfg_w, &batch_rx, &replies, &metrics, &ready_tx)
+                        worker_loop(&cfg_w, pool_w, &batch_rx, &replies, &metrics, &ready_tx)
                     })
                     .map_err(MatexpError::Io)?,
             );
@@ -102,6 +115,7 @@ impl Service {
             submit_tx: Some(submit_tx),
             replies,
             metrics,
+            pool,
             next_id: AtomicU64::new(1),
             collector: Some(collector),
             workers,
@@ -147,6 +161,7 @@ fn collector_loop(
         for batch in batcher.flush_due(Instant::now()) {
             ship(batch, metrics);
         }
+        metrics.queue_depth.store(batcher.len() as u64, Ordering::Relaxed);
     }
 }
 
@@ -154,7 +169,8 @@ fn collector_loop(
 /// artifacts; the pure-Rust backends serve any size (empty inventory).
 fn servable_sizes(cfg: &MatexpConfig) -> Result<Vec<usize>> {
     match cfg.backend {
-        BackendKind::Cpu | BackendKind::Sim => Ok(Vec::new()),
+        // pool devices are cpu/sim, so the pool is size-unrestricted too
+        BackendKind::Cpu | BackendKind::Sim | BackendKind::Pool => Ok(Vec::new()),
         BackendKind::Pjrt => pjrt_sizes(cfg),
     }
 }
@@ -182,12 +198,13 @@ fn pjrt_sizes(_cfg: &MatexpConfig) -> Result<Vec<usize>> {
 
 fn worker_loop(
     cfg: &MatexpConfig,
+    pool: Option<Arc<DevicePool>>,
     batch_rx: &Mutex<Receiver<Batch>>,
     replies: &ReplyMap,
     metrics: &Metrics,
     ready_tx: &SyncSender<std::result::Result<(), String>>,
 ) {
-    let mut engine = match worker::build_engine(cfg) {
+    let mut engine = match worker::build_worker_engine(cfg, pool) {
         Ok(e) => {
             let _ = ready_tx.send(Ok(()));
             e
@@ -205,10 +222,33 @@ fn worker_loop(
                 Err(_) => return, // collector gone: shutdown
             }
         };
-        for req in batch.requests {
-            let started = Instant::now();
-            let id = req.id;
-            let outcome = worker::execute_request(&mut engine, cfg, &req);
+        let started = Instant::now();
+        // the pool dispatches whole batches request-parallel (per-device
+        // queues + stealing); everything else executes serially here with
+        // per-request latency (a parallel batch's requests all share the
+        // batch wall — they really did complete together)
+        let parallel = matches!(&engine, worker::WorkerEngine::Pool(_))
+            && scheduler::pool_dispatch(batch.n, batch.requests.len(), cfg)
+                == scheduler::PoolDispatch::RequestParallel;
+        let outcomes: Vec<(u64, Result<ExpmResponse>, Option<Duration>)> = if parallel {
+            let worker::WorkerEngine::Pool(pe) = &engine else { unreachable!() };
+            pe.execute_batch(batch.requests)
+                .into_iter()
+                .map(|(id, outcome)| (id, outcome, None))
+                .collect()
+        } else {
+            batch
+                .requests
+                .into_iter()
+                .map(|req| {
+                    let t0 = Instant::now();
+                    let id = req.id;
+                    let outcome = worker::execute(&mut engine, cfg, req);
+                    (id, outcome, Some(t0.elapsed()))
+                })
+                .collect()
+        };
+        for (id, outcome, elapsed) in outcomes {
             let reply_tx = replies.lock().expect("reply map poisoned").remove(&id);
             match (&outcome, reply_tx) {
                 (Ok(resp), Some(tx)) => {
@@ -217,7 +257,8 @@ fn worker_loop(
                     metrics
                         .multiplies_total
                         .fetch_add(resp.stats.multiplies as u64, Ordering::Relaxed);
-                    metrics.observe_latency_us(started.elapsed().as_micros() as u64);
+                    let latency = elapsed.unwrap_or_else(|| started.elapsed());
+                    metrics.observe_latency_us(latency.as_micros() as u64);
                     let _ = tx.send(outcome.map_err(|e| e.to_string()));
                 }
                 (Err(_), Some(tx)) => {
@@ -240,8 +281,16 @@ impl ServiceHandle {
         &self.sizes
     }
 
+    /// Metrics snapshot; on the pool backend it carries the live
+    /// per-device utilization and steal counts too.
     pub fn metrics(&self) -> crate::coordinator::metrics::MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        if let Some(pool) = &self.pool {
+            let pm = pool.metrics();
+            snap.steals_total = pm.devices.iter().map(|d| d.steals).sum();
+            snap.devices = pm.devices;
+        }
+        snap
     }
 
     /// Blocking request: admit, enqueue, wait for the worker's reply.

@@ -1,7 +1,9 @@
 //! Worker: owns an [`Engine`] over the configured backend (backends may
-//! be `!Send`, so each worker thread builds its own) and executes
-//! scheduled requests.
+//! be `!Send`, so each worker thread builds its own) — or, for the `pool`
+//! backend, a [`PoolEngine`] handle onto the shared device pool — and
+//! executes scheduled requests.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::MatexpConfig;
@@ -9,8 +11,9 @@ use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse};
 use crate::coordinator::scheduler::{strategy_for, Strategy};
 use crate::error::Result;
 use crate::linalg::{self, CpuAlgo};
+use crate::pool::{DevicePool, PoolEngine};
 use crate::runtime::engine::AnyEngine;
-use crate::runtime::{Backend, Engine};
+use crate::runtime::{Backend, BackendKind, Engine};
 
 /// Execute one request on this worker's engine.
 pub fn execute_request<B: Backend>(
@@ -41,11 +44,9 @@ pub fn execute_request<B: Backend>(
             let t0 = Instant::now();
             let m = linalg::expm::expm_naive(&req.matrix, req.power, CpuAlgo::Naive)?;
             let stats = ExecStats {
-                launches: 0,
                 multiplies: (req.power - 1) as usize,
-                h2d_transfers: 0,
-                d2h_transfers: 0,
                 wall_s: t0.elapsed().as_secs_f64(),
+                ..ExecStats::default()
             };
             (m, stats, None)
         }
@@ -64,6 +65,53 @@ pub fn build_engine(cfg: &MatexpConfig) -> Result<AnyEngine> {
         engine.warmup_exec(n)?;
     }
     Ok(engine)
+}
+
+/// What a coordinator worker actually drives: its own single-backend
+/// engine, or a handle onto the shared multi-device pool.
+pub enum WorkerEngine {
+    Single(Box<AnyEngine>),
+    Pool(PoolEngine),
+}
+
+impl WorkerEngine {
+    pub fn platform(&self) -> String {
+        match self {
+            WorkerEngine::Single(e) => e.platform(),
+            WorkerEngine::Pool(pe) => pe.platform(),
+        }
+    }
+}
+
+/// Build a worker's engine. For the `pool` backend, `shared_pool` (built
+/// once by the service) is wrapped; without one, a fresh pool is spawned —
+/// the CLI's single-shot path.
+pub fn build_worker_engine(
+    cfg: &MatexpConfig,
+    shared_pool: Option<Arc<DevicePool>>,
+) -> Result<WorkerEngine> {
+    if cfg.backend == BackendKind::Pool {
+        let pool = match shared_pool {
+            Some(p) => p,
+            None => Arc::new(DevicePool::new(cfg)?),
+        };
+        return Ok(WorkerEngine::Pool(PoolEngine::with_pool(pool)));
+    }
+    Ok(WorkerEngine::Single(Box::new(build_engine(cfg)?)))
+}
+
+/// Execute one request on whatever engine the worker holds. By value:
+/// the pool path ships the matrix to a device thread, so an owned request
+/// avoids a deep copy there (the single-backend path just borrows it).
+pub fn execute(
+    engine: &mut WorkerEngine,
+    cfg: &MatexpConfig,
+    req: ExpmRequest,
+) -> Result<ExpmResponse> {
+    match engine {
+        WorkerEngine::Single(e) => execute_request(e, cfg, &req),
+        WorkerEngine::Pool(pe) => pe.execute_request(req),
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +178,20 @@ mod tests {
             method: Method::FusedArtifact,
         };
         assert!(execute_request(&mut engine, &cfg, &r).is_err());
+    }
+
+    #[test]
+    fn pool_worker_engine_serves_requests() {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Pool;
+        cfg.pool.devices =
+            vec![crate::pool::PoolDeviceKind::Cpu, crate::pool::PoolDeviceKind::Cpu];
+        let mut engine = build_worker_engine(&cfg, None).unwrap();
+        assert!(engine.platform().contains("pool"), "{}", engine.platform());
+        let r = execute(&mut engine, &cfg, req(Method::Ours, 13)).unwrap();
+        let want = execute(&mut engine, &cfg, req(Method::CpuSeq, 13)).unwrap();
+        assert!(r.result.approx_eq(&want.result, 1e-3, 1e-3));
+        assert_eq!(r.stats.per_device.len(), 1, "{:?}", r.stats.per_device);
     }
 
     #[cfg(not(feature = "xla"))]

@@ -26,6 +26,11 @@ pub enum MatexpError {
     /// Serving-layer failures (queue closed, worker died, protocol).
     Service(String),
 
+    /// Admission-control rejections: the request is well-formed but
+    /// violates a configured limit (max matrix size, max power), so the
+    /// caller can distinguish "fix your request" from "the service broke".
+    Admission(String),
+
     Io(std::io::Error),
 
     Json(crate::util::json::JsonError),
@@ -41,6 +46,7 @@ impl std::fmt::Display for MatexpError {
             MatexpError::Linalg(m) => write!(f, "linalg error: {m}"),
             MatexpError::Config(m) => write!(f, "config error: {m}"),
             MatexpError::Service(m) => write!(f, "service error: {m}"),
+            MatexpError::Admission(m) => write!(f, "admission rejected: {m}"),
             MatexpError::Io(e) => write!(f, "io error: {e}"),
             MatexpError::Json(e) => write!(f, "json error: {e}"),
         }

@@ -12,13 +12,16 @@
 //! | A2        | §4.3.8 transfer discipline  | [`ablations::transfer_ablation`]|
 //! | A3        | launch fusion               | [`ablations::fusion_ablation`]  |
 //! | A4        | CPU-baseline fairness       | [`ablations::cpu_variants`]     |
+//! | S1        | pool scaling (extension)    | [`scaling::run_pool_scaling`]   |
 
 pub mod ablations;
 pub mod paper;
 pub mod report;
+pub mod scaling;
 pub mod tables;
 
 pub use ablations::ArmResult;
 pub use paper::{paper_cell, paper_table, paper_tables, PaperCell, PaperTable};
 pub use report::{render_ablation, render_figures, render_table};
+pub use scaling::{render_scaling, run_pool_scaling, ScalingArm, ScalingTable};
 pub use tables::{run_table, run_table_sim, CellResult, MethodTimes, TableResult};

@@ -1,0 +1,410 @@
+//! Pool scaling experiment: the Table-4-style workload (one request per
+//! paper power) run on device pools of growing size, against a single
+//! calibrated SimBackend.
+//!
+//! Two numbers per pool arm:
+//!
+//! * **workload** — the four requests dispatched request-parallel across
+//!   the pool (per-device queues + stealing); wall is the busiest
+//!   device's share, exactly what the pool's critical path is.
+//! * **shard** — the largest power as ONE tile-sharded request (the
+//!   latency story); `None` when the cost-model splitter refuses to shard
+//!   at this size because the split would lose to its fastest member.
+//!
+//! Predicted columns come from the same cost models the splitter runs on
+//! (analytic C2050 model; measured CPU probe), so prediction vs measured
+//! is itself a check of the splitter's inputs.
+
+use std::fmt::Write as _;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmRequest, Method};
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::plan::{Plan, Step};
+use crate::pool::cost::DeviceCost;
+use crate::pool::{PoolDeviceKind, PoolEngine, ShardDecision};
+use crate::runtime::engine::AnyEngine;
+use crate::runtime::BackendKind;
+use crate::simulator::timing::GpuTimingModel;
+
+/// The paper's Table-4 power column (N = 64..512).
+pub const TABLE4_POWERS: [u64; 4] = [64, 128, 256, 512];
+
+/// One pool configuration's outcome.
+#[derive(Clone, Debug)]
+pub struct ScalingArm {
+    pub name: String,
+    pub devices: Vec<PoolDeviceKind>,
+    /// Predicted workload wall (request-parallel makespan), seconds.
+    pub predicted_s: f64,
+    /// Measured workload wall (busiest device's share), seconds.
+    pub measured_s: Option<f64>,
+    /// Predicted wall for the largest power tile-sharded, if the splitter
+    /// shards at this size.
+    pub shard_predicted_s: Option<f64>,
+    /// Measured wall for that sharded request.
+    pub shard_measured_s: Option<f64>,
+    /// Cross-queue steals observed during the measured run.
+    pub steals: u64,
+}
+
+/// The whole experiment: baseline + arms.
+#[derive(Clone, Debug)]
+pub struct ScalingTable {
+    pub n: usize,
+    pub powers: Vec<u64>,
+    /// Single calibrated SimBackend running the workload serially.
+    pub baseline_predicted_s: f64,
+    pub baseline_measured_s: Option<f64>,
+    /// Single-device wall for the largest power (the shard comparator).
+    pub baseline_shard_predicted_s: f64,
+    pub baseline_shard_measured_s: Option<f64>,
+    pub arms: Vec<ScalingArm>,
+}
+
+impl ScalingTable {
+    /// Predicted workload speedup of arm `i` over the single sim device.
+    pub fn speedup_pred(&self, i: usize) -> f64 {
+        self.baseline_predicted_s / self.arms[i].predicted_s.max(1e-12)
+    }
+
+    /// Measured workload speedup of arm `i`, if measured.
+    pub fn speedup_meas(&self, i: usize) -> Option<f64> {
+        match (self.baseline_measured_s, self.arms[i].measured_s) {
+            (Some(base), Some(arm)) => Some(base / arm.max(1e-12)),
+            _ => None,
+        }
+    }
+}
+
+/// The ISSUE's arm ladder: 1/2/4/8 simulated C2050s, plus CPU+4×sim.
+pub fn default_scaling_arms() -> Vec<Vec<PoolDeviceKind>> {
+    let mut arms: Vec<Vec<PoolDeviceKind>> =
+        [1usize, 2, 4, 8].iter().map(|&k| vec![PoolDeviceKind::Sim; k]).collect();
+    let mut hetero = vec![PoolDeviceKind::Cpu];
+    hetero.extend(std::iter::repeat(PoolDeviceKind::Sim).take(4));
+    arms.push(hetero);
+    arms
+}
+
+fn arm_name(devices: &[PoolDeviceKind]) -> String {
+    let cpus = devices.iter().filter(|d| **d == PoolDeviceKind::Cpu).count();
+    let sims = devices.len() - cpus;
+    match (cpus, sims) {
+        (0, s) => format!("pool {s}x sim"),
+        (c, 0) => format!("pool {c}x cpu"),
+        (c, s) => format!("pool {c}x cpu + {s}x sim"),
+    }
+}
+
+/// Predicted wall for one device-resident plan replay on the sim model:
+/// per-launch overhead + roofline kernel time per step + the two host
+/// crossings (and the pair-split round-trips of fused SqMul steps).
+pub fn predict_plan_resident(model: &GpuTimingModel, n: usize, plan: &Plan) -> f64 {
+    let mut s = model.transfer_time(n, 2);
+    for step in &plan.steps {
+        let mult = step.multiplies();
+        if mult == 0 {
+            continue;
+        }
+        s += model.eff_launch_overhead(n) + model.kernel_time(n, mult);
+        if matches!(step, Step::SqMul { .. }) {
+            s += model.transfer_time(n, 4);
+        }
+    }
+    s
+}
+
+/// Predicted wall for one whole request on one device.
+fn predict_request(cost: &DeviceCost, n: usize, plan: &Plan) -> f64 {
+    match cost {
+        DeviceCost::Model(m) => predict_plan_resident(m, n, plan),
+        DeviceCost::Measured { fixed_s, per_flop_s } => {
+            plan.multiplies() as f64 * (fixed_s + 2.0 * (n as f64).powi(3) * per_flop_s)
+        }
+    }
+}
+
+/// LPT makespan of the request set across the given device cost models
+/// (same scheduling discipline as the pool, via
+/// [`crate::pool::cost::lpt_assign`], just with full-plan request costs).
+pub fn predict_workload(costs: &[DeviceCost], n: usize, plans: &[Plan]) -> f64 {
+    crate::pool::cost::lpt_assign(costs.len(), plans.len(), |d, j| {
+        predict_request(&costs[d], n, &plans[j])
+    })
+    .1
+}
+
+/// The workload's plans, exactly as the service plans `Method::Ours`.
+fn workload_plans(cfg: &MatexpConfig, powers: &[u64]) -> Vec<Plan> {
+    powers.iter().map(|&p| super::tables::ours_plan(cfg, p)).collect()
+}
+
+/// Run the scaling experiment at matrix size `n`. `measure` executes
+/// every arm on live pools (real sim clocks / CPU time); prediction-only
+/// is instant and what the tests assert on.
+pub fn run_pool_scaling(
+    base_cfg: &MatexpConfig,
+    n: usize,
+    arm_devices: &[Vec<PoolDeviceKind>],
+    measure: bool,
+) -> Result<ScalingTable> {
+    let powers: Vec<u64> = TABLE4_POWERS.to_vec();
+    let plans = workload_plans(base_cfg, &powers);
+    let (model, _) = super::tables::calibrated_models();
+    let sim_cost = DeviceCost::Model(model.clone());
+
+    let baseline_predicted_s: f64 =
+        plans.iter().map(|p| predict_plan_resident(&model, n, p)).sum();
+    let largest = *powers.last().expect("non-empty workload");
+    let largest_plan = plans.last().expect("non-empty workload").clone();
+    let baseline_shard_predicted_s = predict_plan_resident(&model, n, &largest_plan);
+
+    let (baseline_measured_s, baseline_shard_measured_s) = if measure {
+        let mut cfg = base_cfg.clone();
+        cfg.backend = BackendKind::Sim;
+        let mut engine = AnyEngine::from_config(&cfg)?;
+        let a = Matrix::random_spectral(n, 0.999, cfg.seed);
+        let mut total = 0.0;
+        let mut shard_base = 0.0;
+        for (plan, &power) in plans.iter().zip(&powers) {
+            let (_, stats) = engine.expm(&a, plan)?;
+            total += stats.wall_s;
+            if power == largest {
+                shard_base = stats.wall_s;
+            }
+        }
+        (Some(total), Some(shard_base))
+    } else {
+        (None, None)
+    };
+
+    let mut arms = Vec::with_capacity(arm_devices.len());
+    for devices in arm_devices {
+        if devices.is_empty() {
+            return Err(MatexpError::Config("scaling arm with no devices".into()));
+        }
+        let mut cfg = base_cfg.clone();
+        cfg.backend = BackendKind::Pool;
+        cfg.pool.devices = devices.clone();
+
+        // predicted columns need the same cost models the pool will build;
+        // CPU probes require a live device, so predict those only when
+        // measuring (sim-only arms predict without any pool)
+        let needs_pool = measure || devices.contains(&PoolDeviceKind::Cpu);
+        let engine = if needs_pool { Some(PoolEngine::from_config(&cfg)?) } else { None };
+        let costs: Vec<DeviceCost> = match &engine {
+            Some(e) => e.pool().costs().to_vec(),
+            None => devices.iter().map(|_| sim_cost.clone()).collect(),
+        };
+
+        let predicted_s = predict_workload(&costs, n, &plans);
+        let shard_plan = match crate::pool::cost::plan_shard(
+            &costs,
+            n,
+            cfg.pool.max_grid,
+            cfg.pool.grid,
+        ) {
+            ShardDecision::Shard(sp) => Some(sp),
+            ShardDecision::Single { .. } => None,
+        };
+        let shard_predicted_s = shard_plan
+            .as_ref()
+            .map(|sp| sp.predicted_step_s * largest_plan.multiplies() as f64);
+
+        let (measured_s, shard_measured_s, steals) = match (&engine, measure) {
+            (Some(e), true) => {
+                let reqs: Vec<ExpmRequest> = powers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &power)| ExpmRequest {
+                        id: i as u64 + 1,
+                        matrix: Matrix::random_spectral(n, 0.999, cfg.seed + i as u64),
+                        power,
+                        method: Method::Ours,
+                    })
+                    .collect();
+                let replies = e.execute_batch(reqs);
+                let mut per_device: std::collections::BTreeMap<String, f64> =
+                    std::collections::BTreeMap::new();
+                for (_, outcome) in replies {
+                    let resp = outcome?;
+                    for d in &resp.stats.per_device {
+                        *per_device.entry(d.device.clone()).or_insert(0.0) += d.wall_s;
+                    }
+                }
+                let busiest = per_device.values().cloned().fold(0.0, f64::max);
+                let shard_measured = match &shard_plan {
+                    Some(sp) => {
+                        let a = Matrix::random_spectral(n, 0.999, cfg.seed);
+                        let (_, stats) = e.expm_sharded(&a, &largest_plan, sp)?;
+                        Some(stats.wall_s)
+                    }
+                    None => None,
+                };
+                let steals: u64 =
+                    e.pool().metrics().devices.iter().map(|d| d.steals).sum();
+                (Some(busiest), shard_measured, steals)
+            }
+            _ => (None, None, 0),
+        };
+
+        arms.push(ScalingArm {
+            name: arm_name(devices),
+            devices: devices.clone(),
+            predicted_s,
+            measured_s,
+            shard_predicted_s,
+            shard_measured_s,
+            steals,
+        });
+    }
+
+    Ok(ScalingTable {
+        n,
+        powers,
+        baseline_predicted_s,
+        baseline_measured_s,
+        baseline_shard_predicted_s,
+        baseline_shard_measured_s,
+        arms,
+    })
+}
+
+/// Render the scaling table (the `experiment --pool-scaling` output).
+pub fn render_scaling(t: &ScalingTable) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "== Pool scaling — Table-4 workload (N in {:?}) at n={} ==",
+        t.powers, t.n
+    );
+    let fmt_opt = |v: Option<f64>| match v {
+        Some(v) => crate::bench::format_secs(v),
+        None => "-".into(),
+    };
+    let _ = writeln!(
+        s,
+        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+        "arm",
+        "pred wall",
+        "pred x",
+        "meas wall",
+        "meas x",
+        "shard pred",
+        "shard meas",
+        "steals"
+    );
+    let _ = writeln!(
+        s,
+        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+        "single sim (baseline)",
+        crate::bench::format_secs(t.baseline_predicted_s),
+        "1.00",
+        fmt_opt(t.baseline_measured_s),
+        if t.baseline_measured_s.is_some() { "1.00" } else { "-" },
+        crate::bench::format_secs(t.baseline_shard_predicted_s),
+        fmt_opt(t.baseline_shard_measured_s),
+        "-"
+    );
+    for (i, arm) in t.arms.iter().enumerate() {
+        let meas_x = match t.speedup_meas(i) {
+            Some(x) => format!("{x:.2}"),
+            None => "-".into(),
+        };
+        let _ = writeln!(
+            s,
+            "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+            arm.name,
+            crate::bench::format_secs(arm.predicted_s),
+            format!("{:.2}", t.speedup_pred(i)),
+            fmt_opt(arm.measured_s),
+            meas_x,
+            fmt_opt(arm.shard_predicted_s),
+            fmt_opt(arm.shard_measured_s),
+            arm.steals
+        );
+    }
+    let _ = writeln!(
+        s,
+        "(workload = request-parallel makespan; shard = largest power tile-sharded, \
+         \"-\" = splitter falls back to its fastest member)"
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MatexpConfig {
+        MatexpConfig::default()
+    }
+
+    #[test]
+    fn four_sim_pool_hits_the_issue_speedup_on_table4_at_1024() {
+        // Acceptance: >= 1.7x for a 4-sim-device pool over a single
+        // SimBackend on the 1024x1024 Table-4 workload.
+        let arms = vec![vec![PoolDeviceKind::Sim; 4]];
+        let t = run_pool_scaling(&cfg(), 1024, &arms, false).unwrap();
+        let speedup = t.speedup_pred(0);
+        assert!(speedup >= 1.7, "4x sim pool only {speedup:.2}x");
+        // and the tile-sharded single request helps too at this size
+        let shard = t.arms[0].shard_predicted_s.expect("shards at n=1024");
+        assert!(
+            shard < t.baseline_shard_predicted_s,
+            "shard {shard} vs single {}",
+            t.baseline_shard_predicted_s
+        );
+    }
+
+    #[test]
+    fn scaling_is_monotone_in_device_count() {
+        let arms: Vec<Vec<PoolDeviceKind>> =
+            [1usize, 2, 4, 8].iter().map(|&k| vec![PoolDeviceKind::Sim; k]).collect();
+        let t = run_pool_scaling(&cfg(), 1024, &arms, false).unwrap();
+        let mut last = 0.0;
+        for i in 0..t.arms.len() {
+            let x = t.speedup_pred(i);
+            assert!(x >= last * 0.999, "arm {i}: {x} < {last}");
+            last = x;
+        }
+        // 1-device pool is the baseline itself (same device-resident path)
+        assert!((t.speedup_pred(0) - 1.0).abs() < 0.05, "{}", t.speedup_pred(0));
+    }
+
+    #[test]
+    fn measured_small_run_matches_predictions_and_criteria() {
+        // measured at n=128 so debug-mode numerics stay cheap; the
+        // request-parallel speedup is size-independent enough to assert
+        // the >= 1.7x criterion on the measured column too
+        let arms = vec![vec![PoolDeviceKind::Sim; 4]];
+        let t = run_pool_scaling(&cfg(), 128, &arms, true).unwrap();
+        let meas = t.speedup_meas(0).expect("measured");
+        assert!(meas >= 1.7, "measured 4x sim pool only {meas:.2}x");
+        // prediction and sim-clock measurement run on the same model:
+        // they must agree tightly for sim-only pools
+        let pred = t.arms[0].predicted_s;
+        let got = t.arms[0].measured_s.unwrap();
+        let ratio = (pred / got).max(got / pred);
+        assert!(ratio < 1.2, "pred {pred} vs meas {got}");
+    }
+
+    #[test]
+    fn heterogeneous_split_never_hurts_the_faster_member() {
+        // cpu + sim at n=128: the cost model must sideline whichever
+        // member loses, so the pool wall stays within 10% of the faster
+        // member alone
+        let arms = vec![vec![PoolDeviceKind::Cpu, PoolDeviceKind::Sim]];
+        let t = run_pool_scaling(&cfg(), 128, &arms, true).unwrap();
+        let pool_wall = t.arms[0].measured_s.unwrap();
+        let sim_alone = t.baseline_measured_s.unwrap();
+        // the faster member is whichever of {sim alone, cpu alone} wins;
+        // sim alone is an upper bound for it, so this is the strict check
+        assert!(
+            pool_wall <= sim_alone * 1.10,
+            "hetero pool {pool_wall} vs sim alone {sim_alone}"
+        );
+    }
+}

@@ -26,6 +26,22 @@
 //! * [`runtime::PjrtBackend`] *(cargo feature `xla`)* — AOT HLO artifacts
 //!   (`make artifacts`) executed on PJRT with device-resident buffers.
 //!
+//! …and above them the **heterogeneous device pool** ([`pool`]), the
+//! paper's title promise made real: N cpu/sim devices on their own worker
+//! threads, a 2D tile partitioner that shards one multiply across all of
+//! them (fused `mma{g}` tile launches, host reassembly), and a cost-model
+//! splitter that sizes each device's share — falling back to the fastest
+//! single device whenever a split would lose.
+//!
+//! ```text
+//!                    ┌──────────── coordinator (batcher, scheduler) ───────────┐
+//!                    │                                                         │
+//!    Engine<B>  ◀────┤ single-backend path          pool path ├────▶ PoolEngine │
+//!        │           └─────────────────────────────────────────────────┬───────┘
+//!   CpuBackend │ SimBackend │ PjrtBackend              DevicePool: [cpu#0] [sim#1] [sim#2] …
+//!   (one device, device-resident plans)                 tile shards + request stealing
+//! ```
+//!
 //! Quick start (pure Rust, runs as-is):
 //!
 //! ```
@@ -42,6 +58,25 @@
 //! println!("A^512 in {} launches ({} multiplies)", stats.launches, stats.multiplies);
 //! ```
 //!
+//! The same computation on a multi-device pool ([`pool::PoolEngine`] has
+//! the same `expm` surface; `stats.per_device` breaks the work down):
+//!
+//! ```
+//! use matexp::prelude::*;
+//!
+//! let mut cfg = MatexpConfig::default();
+//! cfg.backend = BackendKind::Pool;
+//! cfg.pool.devices = vec![PoolDeviceKind::Sim, PoolDeviceKind::Sim];
+//!
+//! let a = Matrix::random_spectral(32, 0.99, 42);
+//! let plan = Plan::binary(512, true);
+//! let (single, _) = Engine::cpu(CpuAlgo::Blocked).expm(&a, &plan).unwrap();
+//! let pool = PoolEngine::from_config(&cfg).unwrap();
+//! let (pooled, stats) = pool.expm(&a, &plan).unwrap();
+//! assert!(pooled.approx_eq(&single, 1e-3, 1e-3));
+//! assert!(!stats.per_device.is_empty()); // who did the work
+//! ```
+//!
 //! The same code runs on any backend — swap `Engine::cpu(..)` for
 //! `Engine::sim()` (predicted 2012 wall-clock in `stats.wall_s`) or, with
 //! `--features xla` and artifacts built, `Engine::pjrt(&registry, variant)`.
@@ -53,6 +88,7 @@ pub mod error;
 pub mod experiments;
 pub mod linalg;
 pub mod plan;
+pub mod pool;
 pub mod runtime;
 pub mod server;
 pub mod simulator;
@@ -69,9 +105,10 @@ pub mod prelude {
     pub use crate::linalg::expm::CpuAlgo;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::plan::{Plan, PlanKind, Step};
+    pub use crate::pool::{DevicePool, PoolDeviceKind, PoolEngine, TileGrid};
     pub use crate::runtime::{
         artifacts::ArtifactRegistry, AnyBackend, AnyEngine, Backend, BackendKind, CpuBackend,
-        CpuEngine, Engine, SimBackend, SimEngine, Variant,
+        CpuEngine, DeviceStats, Engine, SimBackend, SimEngine, Variant,
     };
     pub use crate::simulator::device::DeviceSpec;
 }

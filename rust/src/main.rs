@@ -37,13 +37,20 @@ COMMANDS:
   experiment   regenerate paper results --table 2..5 [--measure] [--figures]
                or an ablation          --ablation tiles|transfers|fusion|cpu
                                        [--n SIZE] [--power N]
+               or the pool scaling run --pool-scaling [--n SIZE] [--measure]
+                                       [--max-devices K]
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
   bench-report all tables, simulation-only summary
 
 GLOBAL FLAGS:
-  --backend cpu|sim|pjrt   execution backend (default cpu; pjrt needs the
-                           `xla` cargo feature + `make artifacts`)
+  --backend cpu|sim|pjrt|pool   execution backend (default cpu; pjrt needs
+                           the `xla` cargo feature + `make artifacts`;
+                           pool = heterogeneous multi-device)
   --cpu-algo naive|transposed|ikj|blocked|threaded
+  --pool-devices LIST   pool members, e.g. cpu,sim,sim (backend pool)
+  --pool-grid G     force the pool tile grid to GxG (default: cost model)
+  --shard-min-n N   smallest matrix the pool tile-shards (default 512)
+  --max-n N         admission limit on matrix size (default 4096)
   --artifacts DIR   artifact directory (default ./artifacts or $MATEXP_ARTIFACTS)
   --variant xla|pallas
   --config FILE     JSON config file
@@ -98,6 +105,18 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
     if let Some(seed) = args.get_parsed::<u64>("seed")? {
         cfg.seed = seed;
     }
+    if let Some(list) = args.get("pool-devices") {
+        cfg.pool.devices = matexp::pool::parse_device_list(list)?;
+    }
+    if let Some(g) = args.get_parsed::<usize>("pool-grid")? {
+        cfg.pool.grid = Some(g);
+    }
+    if let Some(n) = args.get_parsed::<usize>("shard-min-n")? {
+        cfg.pool.shard_min_n = n;
+    }
+    if let Some(n) = args.get_parsed::<usize>("max-n")? {
+        cfg.max_n = n;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -132,7 +151,7 @@ fn cmd_info(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     // `info` is the diagnostic command: report an unbuildable backend,
     // don't die on it
     println!("\nbackend : {}", cfg.backend);
-    match AnyEngine::from_config(cfg) {
+    match matexp::coordinator::worker::build_worker_engine(cfg, None) {
         Ok(engine) => println!("platform: {}", engine.platform()),
         Err(e) => println!("platform: unavailable ({e})"),
     }
@@ -206,7 +225,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     let method = Method::from_str(&args.get_or("method", "ours"))?;
     args.reject_unknown()?;
 
-    let mut engine = AnyEngine::from_config(cfg)?;
+    let mut engine = matexp::coordinator::worker::build_worker_engine(cfg, None)?;
     let a = Matrix::random_spectral(n, 0.999, cfg.seed);
     let req = matexp::coordinator::request::ExpmRequest {
         id: 0,
@@ -214,7 +233,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         power,
         method,
     };
-    let resp = matexp::coordinator::worker::execute_request(&mut engine, cfg, &req)?;
+    let resp = matexp::coordinator::worker::execute(&mut engine, cfg, req)?;
     println!("backend: {} ({})", cfg.backend, engine.platform());
     println!("method: {} (plan: {:?})", resp.method, resp.plan_kind);
     println!(
@@ -225,11 +244,33 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         resp.stats.d2h_transfers,
         matexp::bench::format_secs(resp.stats.wall_s),
     );
+    for d in &resp.stats.per_device {
+        println!(
+            "  {:<8} launches: {}  multiplies: {}  transfers: {}h2d/{}d2h  busy: {}",
+            d.device,
+            d.launches,
+            d.multiplies,
+            d.h2d_transfers,
+            d.d2h_transfers,
+            matexp::bench::format_secs(d.wall_s),
+        );
+    }
     println!("result fro-norm: {:.4e}", resp.result.frobenius());
     Ok(())
 }
 
 fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    if args.has("pool-scaling") {
+        let n: usize = args.get_parsed_or("n", 1024)?;
+        let measure = args.has("measure");
+        let max_devices: usize = args.get_parsed_or("max-devices", usize::MAX)?;
+        args.reject_unknown()?;
+        let mut arms = experiments::scaling::default_scaling_arms();
+        arms.retain(|a| a.len() <= max_devices);
+        let t = experiments::run_pool_scaling(cfg, n, &arms, measure)?;
+        print!("{}", experiments::render_scaling(&t));
+        return Ok(());
+    }
     if let Some(table) = args.get_parsed::<u8>("table")? {
         let measure = args.has("measure");
         let figures = args.has("figures");
@@ -276,7 +317,7 @@ fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         return Ok(());
     }
     Err(MatexpError::Config(
-        "experiment needs --table 2..5 or --ablation NAME".into(),
+        "experiment needs --table 2..5, --ablation NAME, or --pool-scaling".into(),
     ))
 }
 

@@ -1,0 +1,299 @@
+//! Cost-model work splitter: predict per-device throughput, assign shares
+//! proportionally, and fall back to the fastest single device whenever a
+//! split is predicted to lose.
+//!
+//! Simulated devices are predicted with their own analytic
+//! [`GpuTimingModel`] (launch overhead + roofline kernel + PCIe
+//! transfers — the model the [`crate::runtime::SimBackend`] clock runs
+//! on, so predictions match execution exactly). CPU devices are
+//! micro-calibrated at pool startup: one timed matmul yields an effective
+//! seconds-per-FLOP, the D'Alberto (arXiv:1205.2927) recipe for static
+//! heterogeneous splits.
+
+use crate::pool::partition::TileGrid;
+use crate::simulator::timing::GpuTimingModel;
+
+/// Smallest tile side the auto splitter will consider: below this, launch
+/// overhead dwarfs tile compute on every modeled device.
+pub const MIN_AUTO_TILE: usize = 16;
+
+/// Per-device execution-time predictor.
+#[derive(Clone, Debug)]
+pub enum DeviceCost {
+    /// Analytic timing model (sim devices) — predictions match the
+    /// device's simulated clock exactly.
+    Model(GpuTimingModel),
+    /// Micro-calibrated device (CPU): `fixed + 2·n³ · per_flop` seconds
+    /// per multiply.
+    Measured { fixed_s: f64, per_flop_s: f64 },
+}
+
+impl DeviceCost {
+    /// Predicted seconds for one `mma{g}` tile job at tile side `t`:
+    /// upload `2g` operand tiles, one launch of `g` multiplies, download
+    /// the product tile. (Device-resident tile caching makes the real
+    /// upload count a little lower; the prediction is an upper bound.)
+    pub fn tile_job_s(&self, t: usize, g: usize) -> f64 {
+        match self {
+            DeviceCost::Model(m) => {
+                m.eff_launch_overhead(t) + m.kernel_time(t, g) + m.transfer_time(t, 2 * g + 1)
+            }
+            DeviceCost::Measured { fixed_s, per_flop_s } => {
+                fixed_s + 2.0 * (t as f64).powi(3) * g as f64 * per_flop_s
+            }
+        }
+    }
+
+    /// Predicted seconds for one device-resident multiply at size `n`
+    /// (no per-step transfers — buffers stay on the device).
+    pub fn resident_multiply_s(&self, n: usize) -> f64 {
+        match self {
+            DeviceCost::Model(m) => m.eff_launch_overhead(n) + m.kernel_time(n, 1),
+            DeviceCost::Measured { fixed_s, per_flop_s } => {
+                fixed_s + 2.0 * (n as f64).powi(3) * per_flop_s
+            }
+        }
+    }
+
+    /// Predicted seconds for one whole `A^N` request executed
+    /// device-resident (`multiplies` multiplies, one upload + download).
+    pub fn request_s(&self, n: usize, multiplies: usize) -> f64 {
+        let transfers = match self {
+            DeviceCost::Model(m) => m.transfer_time(n, 2),
+            DeviceCost::Measured { .. } => 0.0,
+        };
+        self.resident_multiply_s(n) * multiplies as f64 + transfers
+    }
+}
+
+/// A concrete sharding of one multiply across the pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    /// Effective grid dimension (tiles per side).
+    pub grid: usize,
+    /// `assignment[bi * grid + bj]` = device index computing tile
+    /// `(bi, bj)`.
+    pub assignment: Vec<usize>,
+    /// Predicted critical-path seconds for one sharded multiply.
+    pub predicted_step_s: f64,
+}
+
+/// What the splitter decided for multiplies at one matrix size.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardDecision {
+    /// Tile-shard every multiply across the pool.
+    Shard(ShardPlan),
+    /// Sharding is predicted to lose (launch-overhead-bound): run the
+    /// whole plan device-resident on the fastest member.
+    Single { device: usize, predicted_step_s: f64 },
+}
+
+/// Pick the grid + tile assignment minimizing the predicted makespan of
+/// one multiply, or fall back to the fastest single device. A forced
+/// grid (`cfg.pool.grid`) skips the fallback — tests and ablations use it
+/// to pin the sharded path.
+pub fn plan_shard(
+    costs: &[DeviceCost],
+    n: usize,
+    max_grid: usize,
+    forced_grid: Option<usize>,
+) -> ShardDecision {
+    assert!(!costs.is_empty(), "pool has no devices");
+    let best_dev = fastest_device(costs, n);
+    let single_s = costs[best_dev].resident_multiply_s(n);
+
+    // an empty candidate list (max_grid < 2, nothing forced) means the
+    // splitter may never shard — the configured cap is honored
+    let grids: Vec<usize> = match forced_grid {
+        Some(g) => vec![g.max(1)],
+        None => (2..=max_grid).collect(),
+    };
+    let mut best: Option<ShardPlan> = None;
+    for want_g in grids {
+        let Ok(grid) = TileGrid::new(n, want_g) else { continue };
+        let (g, t) = (grid.g(), grid.t());
+        if forced_grid.is_none() && t < MIN_AUTO_TILE {
+            continue;
+        }
+        let per_dev: Vec<f64> = costs.iter().map(|c| c.tile_job_s(t, g)).collect();
+        let (assignment, makespan) =
+            lpt_assign(costs.len(), grid.tiles(), |d, _| per_dev[d]);
+        if best.as_ref().is_none_or(|b| makespan < b.predicted_step_s) {
+            best = Some(ShardPlan { grid: g, assignment, predicted_step_s: makespan });
+        }
+    }
+    match best {
+        Some(p) if forced_grid.is_some() || p.predicted_step_s < single_s => {
+            ShardDecision::Shard(p)
+        }
+        _ => ShardDecision::Single { device: best_dev, predicted_step_s: single_s },
+    }
+}
+
+/// Greedy LPT scheduling over an arbitrary `(device, job) -> seconds`
+/// cost function: jobs sorted by mean cost descending, each assigned to
+/// the device minimizing its finish time. Returns
+/// `(assignment[job] = device, makespan)`. Both the runtime splitter and
+/// the scaling experiment's predictions go through this single
+/// implementation so they cannot diverge.
+pub fn lpt_assign<F>(devices: usize, jobs: usize, cost: F) -> (Vec<usize>, f64)
+where
+    F: Fn(usize, usize) -> f64,
+{
+    assert!(devices > 0, "pool has no devices");
+    let mean: Vec<f64> = (0..jobs)
+        .map(|j| (0..devices).map(|d| cost(d, j)).sum::<f64>() / devices as f64)
+        .collect();
+    let mut order: Vec<usize> = (0..jobs).collect();
+    // longest-processing-time first, so big jobs don't straggle
+    order.sort_by(|&x, &y| mean[y].partial_cmp(&mean[x]).expect("finite costs"));
+    let mut load = vec![0.0f64; devices];
+    let mut out = vec![0usize; jobs];
+    for j in order {
+        let mut best = 0;
+        let mut best_finish = f64::INFINITY;
+        for (d, l) in load.iter().enumerate() {
+            let finish = l + cost(d, j);
+            if finish < best_finish {
+                best = d;
+                best_finish = finish;
+            }
+        }
+        out[j] = best;
+        load[best] = best_finish;
+    }
+    (out, load.iter().cloned().fold(0.0, f64::max))
+}
+
+/// LPT assignment of whole requests to devices: returns
+/// `assignment[request] = device`. `jobs` are `(n, multiplies)` pairs.
+pub fn assign_requests(costs: &[DeviceCost], jobs: &[(usize, usize)]) -> Vec<usize> {
+    lpt_assign(costs.len(), jobs.len(), |d, j| {
+        let (n, m) = jobs[j];
+        costs[d].request_s(n, m)
+    })
+    .0
+}
+
+/// Predicted makespan of a request assignment (experiments report this
+/// next to the measured number).
+pub fn request_makespan(
+    costs: &[DeviceCost],
+    jobs: &[(usize, usize)],
+    assignment: &[usize],
+) -> f64 {
+    let mut load = vec![0.0f64; costs.len()];
+    for (&(n, m), &d) in jobs.iter().zip(assignment) {
+        load[d] += costs[d].request_s(n, m);
+    }
+    load.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Device with the cheapest predicted device-resident multiply at size
+/// `n` — the single source of the "fastest member" policy (the splitter's
+/// fallback target and [`crate::pool::DevicePool::fastest_device`]).
+pub fn fastest_device(costs: &[DeviceCost], n: usize) -> usize {
+    let single: Vec<f64> = costs.iter().map(|c| c.resident_multiply_s(n)).collect();
+    argmin(&single)
+}
+
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::tables::calibrated_models;
+
+    fn sim() -> DeviceCost {
+        DeviceCost::Model(calibrated_models().0)
+    }
+
+    fn cpu(per_flop_s: f64) -> DeviceCost {
+        DeviceCost::Measured { fixed_s: 0.0, per_flop_s }
+    }
+
+    #[test]
+    fn lpt_splits_proportional_to_throughput() {
+        // device 0 is 3x faster than device 1: of 16 equal requests it
+        // should take ~12
+        let costs = [cpu(1e-9), cpu(3e-9)];
+        let jobs: Vec<(usize, usize)> = (0..16).map(|_| (64, 8)).collect();
+        let assignment = assign_requests(&costs, &jobs);
+        let fast = assignment.iter().filter(|&&d| d == 0).count();
+        assert!((11..=13).contains(&fast), "fast device got {fast}/16");
+        // makespan beats any single device
+        let makespan = request_makespan(&costs, &jobs, &assignment);
+        let solo: f64 = jobs.iter().map(|&(n, m)| costs[0].request_s(n, m)).sum();
+        assert!(makespan < solo);
+    }
+
+    #[test]
+    fn small_matrices_fall_back_to_single_device() {
+        let costs = [sim(), sim(), sim(), sim()];
+        // n=64 is launch-overhead-bound: sharding must lose
+        match plan_shard(&costs, 64, 4, None) {
+            ShardDecision::Single { predicted_step_s, .. } => {
+                assert!(predicted_step_s > 0.0)
+            }
+            other => panic!("expected fallback, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn forced_grid_always_shards() {
+        let costs = [sim(), sim()];
+        match plan_shard(&costs, 64, 4, Some(2)) {
+            ShardDecision::Shard(p) => {
+                assert_eq!(p.grid, 2);
+                assert_eq!(p.assignment.len(), 4);
+                assert!(p.assignment.iter().all(|&d| d < 2));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn large_matrices_shard_across_sim_devices() {
+        let costs = [sim(), sim(), sim(), sim()];
+        match plan_shard(&costs, 1024, 4, None) {
+            ShardDecision::Shard(p) => {
+                // every device gets work and the step beats a single device
+                let mut used: Vec<usize> = p.assignment.clone();
+                used.sort_unstable();
+                used.dedup();
+                assert_eq!(used.len(), 4, "{:?}", p.assignment);
+                let single = costs[0].resident_multiply_s(1024);
+                assert!(
+                    p.predicted_step_s < single,
+                    "shard {} vs single {single}",
+                    p.predicted_step_s
+                );
+            }
+            other => panic!("expected shard at n=1024, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slow_cpu_is_sidelined_not_harmful() {
+        // a CPU orders of magnitude slower than the sim device must not
+        // drag the split below the fast member (D'Alberto's criterion)
+        let costs = [sim(), cpu(1e-8)];
+        let single_sim = costs[0].resident_multiply_s(1024);
+        match plan_shard(&costs, 1024, 4, None) {
+            ShardDecision::Shard(p) => {
+                assert!(p.predicted_step_s <= single_sim * 1.10, "{}", p.predicted_step_s)
+            }
+            ShardDecision::Single { predicted_step_s, .. } => {
+                assert!(predicted_step_s <= single_sim * 1.10)
+            }
+        }
+    }
+}

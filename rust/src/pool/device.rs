@@ -1,0 +1,437 @@
+//! Pool device workers: one OS thread per device, each owning its own
+//! backend engine (backends may be `!Send`, so engines are built *inside*
+//! the worker thread), pulling jobs from per-device queues with work
+//! stealing.
+//!
+//! Jobs are plain data (host matrices + a reply channel), never closures,
+//! so nothing `!Send` crosses a thread boundary. Tile jobs keep a small
+//! device-resident cache of the tiles this device produced last step —
+//! the next squaring reuses them without re-uploading, which is the
+//! paper's residency discipline applied across devices.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::SyncSender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmRequest, ExpmResponse};
+use crate::error::Result;
+use crate::linalg::matrix::Matrix;
+use crate::plan::Plan;
+use crate::pool::PoolDeviceKind;
+use crate::runtime::backend::op_multiplies;
+use crate::runtime::engine::DeviceStats;
+use crate::runtime::{AnyBackend, AnyBuffer, Backend, CpuBackend, Engine, ExecStats, SimBackend};
+
+/// Device-resident tiles a worker keeps between steps (1 MiB per tile at
+/// t=512; the cap bounds memory while covering a device's share of one
+/// sharded step).
+const TILE_CACHE_CAP: usize = 32;
+
+/// Identifies one tile of one intermediate matrix: `(matrix id, bi, bj)`.
+/// Matrix ids are allocated by the pool, unique per produced value.
+pub(crate) type TileKey = (u64, usize, usize);
+
+pub(crate) struct TileJob {
+    /// `mma{g}` (or `matmul`/`square` for a 1-tile grid).
+    pub op: String,
+    /// Tile side.
+    pub t: usize,
+    /// Operand tiles in launch order, each with its cache key.
+    pub inputs: Vec<(TileKey, Matrix)>,
+    /// Cache key of the produced tile.
+    pub out_key: TileKey,
+    /// Grid position of the produced tile.
+    pub tile: (usize, usize),
+    pub reply: SyncSender<TileDone>,
+}
+
+pub(crate) struct TileDone {
+    pub device: usize,
+    pub tile: (usize, usize),
+    pub result: Result<Matrix>,
+    pub stats: DeviceStats,
+}
+
+pub(crate) struct PlanJob {
+    pub a: Matrix,
+    pub plan: Plan,
+    pub reply: SyncSender<ExecDone>,
+}
+
+pub(crate) struct PackedJob {
+    pub a: Matrix,
+    pub power: u64,
+    pub reply: SyncSender<ExecDone>,
+}
+
+pub(crate) struct ExecDone {
+    pub device: usize,
+    pub result: Result<(Matrix, ExecStats)>,
+}
+
+pub(crate) struct RequestJob {
+    pub req: ExpmRequest,
+    pub reply: SyncSender<RequestDone>,
+}
+
+pub(crate) struct RequestDone {
+    pub device: usize,
+    pub id: u64,
+    pub result: Result<ExpmResponse>,
+}
+
+pub(crate) struct CalibrateJob {
+    /// Probe tile side.
+    pub t: usize,
+    /// Seconds for one warm matmul launch + result download at side `t`
+    /// (simulated seconds on a timing-model device).
+    pub reply: SyncSender<Result<f64>>,
+}
+
+pub(crate) enum JobPayload {
+    Tile(TileJob),
+    PlanExec(PlanJob),
+    PackedExec(PackedJob),
+    Request(RequestJob),
+    Calibrate(CalibrateJob),
+}
+
+pub(crate) struct Job {
+    pub payload: JobPayload,
+    /// Whether an idle device may steal this job (whole requests yes;
+    /// tile shards are pinned — their placement is the cost model's call).
+    pub stealable: bool,
+}
+
+/// Per-device running totals (pool observability).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceAccum {
+    pub jobs: u64,
+    pub steals: u64,
+    pub launches: u64,
+    pub busy_s: f64,
+}
+
+/// The shared per-device queues + shutdown flag.
+pub(crate) struct Shared {
+    lanes: Mutex<Lanes>,
+    cv: Condvar,
+}
+
+struct Lanes {
+    queues: Vec<VecDeque<Job>>,
+    shutdown: bool,
+}
+
+impl Shared {
+    pub fn new(devices: usize) -> Shared {
+        Shared {
+            lanes: Mutex::new(Lanes {
+                queues: (0..devices).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn push(&self, lane: usize, job: Job) {
+        let mut l = self.lanes.lock().expect("pool queues poisoned");
+        l.queues[lane].push_back(job);
+        drop(l);
+        self.cv.notify_all();
+    }
+
+    pub fn depths(&self) -> Vec<usize> {
+        let l = self.lanes.lock().expect("pool queues poisoned");
+        l.queues.iter().map(VecDeque::len).collect()
+    }
+
+    pub fn shutdown(&self) {
+        let mut l = self.lanes.lock().expect("pool queues poisoned");
+        l.shutdown = true;
+        drop(l);
+        self.cv.notify_all();
+    }
+
+    /// Next job for device `lane`: its own queue first, else steal the
+    /// rearmost stealable job from the longest other queue (pinned tile
+    /// jobs are never stolen, but they don't shield stealable work queued
+    /// ahead of them), else block. Returns `(job, stolen)`; `None` means
+    /// shutdown and drained.
+    fn next(&self, lane: usize) -> Option<(Job, bool)> {
+        let mut l = self.lanes.lock().expect("pool queues poisoned");
+        loop {
+            if let Some(job) = l.queues[lane].pop_front() {
+                return Some((job, false));
+            }
+            // (lane, queue length, index of its rearmost stealable job)
+            let mut victim: Option<(usize, usize, usize)> = None;
+            for (i, q) in l.queues.iter().enumerate() {
+                if i == lane {
+                    continue;
+                }
+                let Some(idx) = q.iter().rposition(|j| j.stealable) else { continue };
+                if victim.is_none_or(|(_, best, _)| q.len() > best) {
+                    victim = Some((i, q.len(), idx));
+                }
+            }
+            if let Some((i, _, idx)) = victim {
+                let job = l.queues[i].remove(idx).expect("rposition is in range");
+                return Some((job, true));
+            }
+            if l.shutdown {
+                return None;
+            }
+            l = self.cv.wait(l).expect("pool queues poisoned");
+        }
+    }
+}
+
+/// FIFO-bounded map of device-resident tiles this worker produced.
+struct TileCache {
+    cap: usize,
+    order: VecDeque<TileKey>,
+    map: HashMap<TileKey, AnyBuffer>,
+}
+
+impl TileCache {
+    fn new(cap: usize) -> TileCache {
+        TileCache { cap, order: VecDeque::new(), map: HashMap::new() }
+    }
+
+    fn get(&self, key: &TileKey) -> Option<&AnyBuffer> {
+        self.map.get(key)
+    }
+
+    fn insert(&mut self, key: TileKey, buf: AnyBuffer) {
+        if self.map.insert(key, buf).is_none() {
+            self.order.push_back(key);
+        }
+        while self.order.len() > self.cap {
+            let old = self.order.pop_front().expect("len checked");
+            self.map.remove(&old);
+        }
+    }
+}
+
+/// Build the engine a pool device runs on.
+fn build_device_engine(kind: PoolDeviceKind, cfg: &MatexpConfig) -> Engine<AnyBackend> {
+    match kind {
+        PoolDeviceKind::Cpu => Engine::new(AnyBackend::Cpu(CpuBackend::new(cfg.cpu_algo))),
+        PoolDeviceKind::Sim => {
+            // the paper-calibrated C2050 model, same as `--backend sim`,
+            // so pool stats are comparable to single-device sim stats
+            let (model, _) = crate::experiments::tables::calibrated_models();
+            Engine::new(AnyBackend::Sim(SimBackend::new(model)))
+        }
+    }
+}
+
+/// The worker loop: build the engine in-thread, signal readiness, then
+/// serve jobs until shutdown.
+pub(crate) fn device_loop(
+    idx: usize,
+    kind: PoolDeviceKind,
+    cfg: MatexpConfig,
+    shared: Arc<Shared>,
+    accum: Arc<Vec<Mutex<DeviceAccum>>>,
+    ready: SyncSender<std::result::Result<(), String>>,
+) {
+    let mut engine = build_device_engine(kind, &cfg);
+    let name = format!("{}#{idx}", kind.as_str());
+    let _ = ready.send(Ok(()));
+    // release the startup channel NOW: if a sibling worker dies before
+    // sending, the pool's readiness recv must see a disconnect instead of
+    // blocking on senders parked in long-lived worker loops
+    drop(ready);
+    let mut cache = TileCache::new(TILE_CACHE_CAP);
+    // accounting happens BEFORE the reply is sent, so a caller that
+    // collected every reply reads consistent pool metrics
+    let update = |launches: u64, busy_s: f64, stolen: bool| {
+        let mut acc = accum[idx].lock().expect("pool accum poisoned");
+        acc.jobs += 1;
+        acc.launches += launches;
+        acc.busy_s += busy_s;
+        if stolen {
+            acc.steals += 1;
+        }
+    };
+    while let Some((job, stolen)) = shared.next(idx) {
+        match job.payload {
+            JobPayload::Tile(tj) => {
+                let reply = tj.reply.clone();
+                let done = run_tile(&mut engine, &mut cache, idx, &name, tj);
+                update(done.stats.launches as u64, done.stats.wall_s, stolen);
+                let _ = reply.send(done);
+            }
+            JobPayload::PlanExec(pj) => {
+                let result = engine.expm(&pj.a, &pj.plan);
+                let (launches, busy) = exec_cost(&result);
+                update(launches, busy, stolen);
+                let _ = pj.reply.send(ExecDone { device: idx, result });
+            }
+            JobPayload::PackedExec(pj) => {
+                let result = engine.expm_packed(&pj.a, pj.power);
+                let (launches, busy) = exec_cost(&result);
+                update(launches, busy, stolen);
+                let _ = pj.reply.send(ExecDone { device: idx, result });
+            }
+            JobPayload::Request(rj) => {
+                let result =
+                    crate::coordinator::worker::execute_request(&mut engine, &cfg, &rj.req);
+                let (launches, busy) = match &result {
+                    Ok(resp) => (resp.stats.launches as u64, resp.stats.wall_s),
+                    Err(_) => (0, 0.0),
+                };
+                update(launches, busy, stolen);
+                let _ = rj.reply.send(RequestDone { device: idx, id: rj.req.id, result });
+            }
+            JobPayload::Calibrate(cj) => {
+                let result = run_calibration(&mut engine, cj.t);
+                update(1, 0.0, stolen);
+                let _ = cj.reply.send(result);
+            }
+        }
+    }
+}
+
+fn exec_cost(result: &Result<(Matrix, ExecStats)>) -> (u64, f64) {
+    match result {
+        Ok((_, stats)) => (stats.launches as u64, stats.wall_s),
+        Err(_) => (0, 0.0),
+    }
+}
+
+/// One tile job: upload operands not already resident, one fused launch,
+/// download the product tile, cache its buffer for the next step.
+/// Returns the completed reply; the caller sends it after accounting.
+fn run_tile(
+    engine: &mut Engine<AnyBackend>,
+    cache: &mut TileCache,
+    idx: usize,
+    name: &str,
+    job: TileJob,
+) -> TileDone {
+    let TileJob { op, t, inputs, out_key, tile, reply: _reply } = job;
+    let mut stats = DeviceStats { device: name.to_string(), ..DeviceStats::default() };
+    let result = (|| -> Result<Matrix> {
+        let be = engine.backend_mut();
+        be.prepare(&op, t)?;
+        let _ = be.take_sim_time();
+        let t0 = Instant::now();
+        let mut fresh: HashMap<TileKey, AnyBuffer> = HashMap::new();
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (key, data) in &inputs {
+            let buf = if let Some(b) = cache.get(key) {
+                b.clone() // device-resident from the previous step: no upload
+            } else if let Some(b) = fresh.get(key) {
+                b.clone() // duplicate operand within this launch
+            } else {
+                let b = be.upload(data)?;
+                stats.h2d_transfers += 1;
+                fresh.insert(*key, b.clone());
+                b
+            };
+            bufs.push(buf);
+        }
+        let out = be.launch(&op, t, &bufs)?;
+        stats.launches += 1;
+        stats.multiplies += op_multiplies(&op)?;
+        let m = be.download(&out, t)?;
+        stats.d2h_transfers += 1;
+        stats.wall_s = be.take_sim_time().unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        cache.insert(out_key, out);
+        Ok(m)
+    })();
+    TileDone { device: idx, tile, result, stats }
+}
+
+/// Micro-calibration probe: seconds for one warm matmul launch (+ result
+/// download) at tile side `t` on this device.
+fn run_calibration(engine: &mut Engine<AnyBackend>, t: usize) -> Result<f64> {
+    let be = engine.backend_mut();
+    be.prepare("matmul", t)?;
+    let a = Matrix::random(t, 0xCA11B8A7E);
+    let b = Matrix::random(t, 0xCA11B8A7F);
+    let ba = be.upload(&a)?;
+    let bb = be.upload(&b)?;
+    let _ = be.launch("matmul", t, &[ba.clone(), bb.clone()])?; // warm
+    let _ = be.take_sim_time();
+    let t0 = Instant::now();
+    let out = be.launch("matmul", t, &[ba, bb])?;
+    let _ = be.download(&out, t)?;
+    let secs = be.take_sim_time().unwrap_or_else(|| t0.elapsed().as_secs_f64());
+    Ok(secs.max(1e-9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_cache_evicts_fifo() {
+        let mut c = TileCache::new(2);
+        let buf = || AnyBuffer::Host(crate::runtime::CpuBuffer::Mat(std::rc::Rc::new(Matrix::zeros(2))));
+        c.insert((1, 0, 0), buf());
+        c.insert((2, 0, 0), buf());
+        assert!(c.get(&(1, 0, 0)).is_some());
+        c.insert((3, 0, 0), buf());
+        assert!(c.get(&(1, 0, 0)).is_none(), "oldest evicted");
+        assert!(c.get(&(2, 0, 0)).is_some());
+        assert!(c.get(&(3, 0, 0)).is_some());
+        // re-inserting an existing key must not grow the order queue
+        c.insert((3, 0, 0), buf());
+        assert_eq!(c.order.len(), 2);
+    }
+
+    #[test]
+    fn shared_queue_steals_from_longest_stealable() {
+        let s = Shared::new(3);
+        let dummy = |stealable: bool| Job {
+            payload: JobPayload::Calibrate(CalibrateJob {
+                t: 4,
+                reply: std::sync::mpsc::sync_channel(1).0,
+            }),
+            stealable,
+        };
+        s.push(0, dummy(true));
+        s.push(0, dummy(true));
+        s.push(1, dummy(false));
+        // device 2 owns nothing: it must steal from lane 0 (lane 1's job
+        // is pinned)
+        let (_, stolen) = s.next(2).expect("steals");
+        assert!(stolen);
+        assert_eq!(s.depths(), vec![1, 1, 0]);
+        // device 1 takes its own job even though it is pinned
+        let (_, stolen) = s.next(1).expect("own job");
+        assert!(!stolen);
+        s.shutdown();
+        // drain: lane 0 still hands out its own queued job after shutdown
+        let (_, stolen) = s.next(0).expect("drains after shutdown");
+        assert!(!stolen);
+        assert!(s.next(2).is_none(), "nothing stealable left");
+    }
+
+    #[test]
+    fn steal_reaches_jobs_behind_pinned_work() {
+        let s = Shared::new(2);
+        let dummy = |stealable: bool| Job {
+            payload: JobPayload::Calibrate(CalibrateJob {
+                t: 4,
+                reply: std::sync::mpsc::sync_channel(1).0,
+            }),
+            stealable,
+        };
+        s.push(0, dummy(true));
+        s.push(0, dummy(false)); // pinned at the back must not shield it
+        let (_, stolen) = s.next(1).expect("steals the shielded job");
+        assert!(stolen);
+        assert_eq!(s.depths(), vec![1, 0]);
+        s.shutdown();
+        assert!(s.next(1).is_none(), "only pinned work remains");
+        let (_, stolen) = s.next(0).expect("owner still drains its pinned job");
+        assert!(!stolen);
+    }
+}

@@ -1,0 +1,306 @@
+//! [`PoolEngine`] — the multi-device counterpart of
+//! [`crate::runtime::Engine`]: same `expm`/`expm_packed` surface, executed
+//! by a [`DevicePool`].
+//!
+//! Dispatch per call:
+//! * small matrices (`n < pool.shard_min_n`) run whole on the fastest
+//!   device (request-parallel territory — sharding tiny multiplies only
+//!   buys launch overhead);
+//! * large matrices consult the cost-model splitter: tile-shard every
+//!   multiply of the plan, or fall back to the fastest single device when
+//!   the split is predicted to lose.
+
+use std::sync::Arc;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmRequest, ExpmResponse};
+use crate::coordinator::scheduler::{self, PoolDispatch, Strategy};
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::plan::{Plan, Step};
+use crate::pool::cost::{ShardDecision, ShardPlan};
+use crate::pool::pool::DevicePool;
+use crate::runtime::ExecStats;
+
+/// Plan executor over a heterogeneous device pool. Cheap to clone-share:
+/// the pool lives behind an `Arc` and all methods take `&self` (the pool
+/// serializes per-device work on its own threads), so one pool can back
+/// many coordinator workers.
+pub struct PoolEngine {
+    pool: Arc<DevicePool>,
+}
+
+impl PoolEngine {
+    /// Build a pool from the config (`cfg.pool.devices` et al.).
+    pub fn from_config(cfg: &MatexpConfig) -> Result<PoolEngine> {
+        Ok(PoolEngine { pool: Arc::new(DevicePool::new(cfg)?) })
+    }
+
+    /// Wrap an existing (possibly shared) pool.
+    pub fn with_pool(pool: Arc<DevicePool>) -> PoolEngine {
+        PoolEngine { pool }
+    }
+
+    pub fn pool(&self) -> &Arc<DevicePool> {
+        &self.pool
+    }
+
+    pub fn platform(&self) -> String {
+        self.pool.platform()
+    }
+
+    /// Replay `plan` across the pool (see module docs for dispatch).
+    pub fn expm(&self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        plan.validate()?;
+        let n = a.n();
+        if n == 0 {
+            return Err(MatexpError::Linalg("cannot exponentiate an empty matrix".into()));
+        }
+        let cfg = self.pool.config();
+        if cfg.pool.grid.is_none() && n < cfg.pool.shard_min_n {
+            let device = self.pool.fastest_device(n);
+            return self.pool.run_plan_on(device, a, plan);
+        }
+        match self.pool.shard_decision(n) {
+            ShardDecision::Single { device, .. } => self.pool.run_plan_on(device, a, plan),
+            ShardDecision::Shard(sp) => self.expm_sharded(a, plan, &sp),
+        }
+    }
+
+    /// Packed-state exponentiation. On the sharded path the packed pair
+    /// buffer cannot span devices, so the pool replays the equivalent
+    /// binary plan with sharded multiplies instead; the single-device
+    /// fallback keeps the true packed discipline.
+    pub fn expm_packed(&self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        if power == 0 {
+            return Err(MatexpError::Plan("power must be >= 1".into()));
+        }
+        let n = a.n();
+        let cfg = self.pool.config();
+        if cfg.pool.grid.is_none() && n < cfg.pool.shard_min_n {
+            let device = self.pool.fastest_device(n);
+            return self.pool.run_packed_on(device, a, power);
+        }
+        match self.pool.shard_decision(n) {
+            ShardDecision::Single { device, .. } => self.pool.run_packed_on(device, a, power),
+            ShardDecision::Shard(sp) => {
+                self.expm_sharded(a, &Plan::binary(power, false), &sp)
+            }
+        }
+    }
+
+    /// Replay `plan` with every multiply sharded across the pool per `sp`.
+    /// Registers live on the host between steps; each step's wall time is
+    /// the slowest device's share (a reassembly barrier), and steps add.
+    /// Crate-visible so the scaling experiment can measure the sharded
+    /// path explicitly, bypassing the dispatch policy.
+    pub(crate) fn expm_sharded(
+        &self,
+        a: &Matrix,
+        plan: &Plan,
+        sp: &ShardPlan,
+    ) -> Result<(Matrix, ExecStats)> {
+        let mut stats = ExecStats::default();
+        let mut regs: Vec<Option<(Matrix, u64)>> = vec![None; plan.n_regs];
+        regs[0] = Some((a.clone(), self.pool.next_key()));
+        for step in &plan.steps {
+            match *step {
+                Step::Copy { dst, src } => regs[dst] = regs[src].clone(),
+                Step::Mul { dst, lhs, rhs } => {
+                    let x = regs[lhs].clone().expect("validated");
+                    let y = regs[rhs].clone().expect("validated");
+                    regs[dst] = Some(self.sharded_mul(&x, &y, sp, &mut stats)?);
+                }
+                Step::SqMul { acc, base } => {
+                    let x = regs[acc].clone().expect("validated");
+                    let y = regs[base].clone().expect("validated");
+                    // acc first, against the OLD base, exactly like the
+                    // single-device engine (aliasing-safe)
+                    regs[acc] = Some(self.sharded_mul(&x, &y, sp, &mut stats)?);
+                    regs[base] = Some(self.sharded_mul(&y, &y, sp, &mut stats)?);
+                }
+                Step::SquareChain { reg, k } => {
+                    for _ in 0..k {
+                        let x = regs[reg].clone().expect("validated");
+                        regs[reg] = Some(self.sharded_mul(&x, &x, sp, &mut stats)?);
+                    }
+                }
+            }
+        }
+        let (result, _) = regs[plan.result].take().expect("validated: result written");
+        Ok((result, stats))
+    }
+
+    fn sharded_mul(
+        &self,
+        lhs: &(Matrix, u64),
+        rhs: &(Matrix, u64),
+        sp: &ShardPlan,
+        stats: &mut ExecStats,
+    ) -> Result<(Matrix, u64)> {
+        let out_key = self.pool.next_key();
+        let (m, step) =
+            self.pool.sharded_matmul(&lhs.0, &rhs.0, lhs.1, rhs.1, out_key, sp)?;
+        stats.merge(&step);
+        Ok((m, out_key))
+    }
+
+    /// Execute one admitted request (the coordinator worker's pool path):
+    /// large single requests tile-shard, everything else runs whole on one
+    /// device. By value — the matrix is shipped to a device thread either
+    /// way, so borrowing would only force an extra deep copy.
+    pub fn execute_request(&self, req: ExpmRequest) -> Result<ExpmResponse> {
+        let cfg = self.pool.config();
+        match scheduler::pool_dispatch(req.n(), 1, cfg) {
+            PoolDispatch::TileShard => match scheduler::strategy_for(&req, cfg) {
+                Strategy::DeviceResident(plan) => {
+                    let kind = plan.kind;
+                    let (result, stats) = self.expm(&req.matrix, &plan)?;
+                    Ok(ExpmResponse {
+                        id: req.id,
+                        result,
+                        stats,
+                        method: req.method,
+                        plan_kind: Some(kind),
+                    })
+                }
+                Strategy::Packed => {
+                    let (result, stats) = self.expm_packed(&req.matrix, req.power)?;
+                    Ok(ExpmResponse {
+                        id: req.id,
+                        result,
+                        stats,
+                        method: req.method,
+                        plan_kind: None,
+                    })
+                }
+                // fused / naive-roundtrip / cpu-seq disciplines are
+                // single-device by definition: run the request whole
+                _ => self.run_whole_request(req),
+            },
+            PoolDispatch::RequestParallel => self.run_whole_request(req),
+        }
+    }
+
+    /// A batch of admitted requests, request-parallel with work stealing.
+    pub fn execute_batch(
+        &self,
+        reqs: Vec<ExpmRequest>,
+    ) -> Vec<(u64, Result<ExpmResponse>)> {
+        self.pool.execute_requests(reqs)
+    }
+
+    fn run_whole_request(&self, req: ExpmRequest) -> Result<ExpmResponse> {
+        let mut replies = self.pool.execute_requests(vec![req]);
+        match replies.pop() {
+            Some((_, outcome)) => outcome,
+            None => Err(MatexpError::Service("pool returned no reply".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, CpuAlgo};
+    use crate::pool::PoolDeviceKind;
+    use crate::runtime::BackendKind;
+
+    fn pool_cfg(devices: Vec<PoolDeviceKind>) -> MatexpConfig {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Pool;
+        cfg.pool.devices = devices;
+        cfg
+    }
+
+    fn oracle(a: &Matrix, power: u64) -> Matrix {
+        linalg::expm::expm(a, power, CpuAlgo::Ikj).unwrap()
+    }
+
+    #[test]
+    fn small_requests_run_whole_on_one_device() {
+        let cfg = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu]);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let a = Matrix::random_spectral(12, 0.95, 3);
+        let plan = Plan::binary(100, true);
+        let (got, stats) = engine.expm(&a, &plan).unwrap();
+        assert!(got.approx_eq(&oracle(&a, 100), 1e-4, 1e-4));
+        // whole plan on one device: the engine invariants carry over
+        assert_eq!(stats.launches, plan.launches());
+        assert_eq!(stats.per_device.len(), 1);
+        assert_eq!(stats.per_device[0].launches, stats.launches);
+    }
+
+    #[test]
+    fn forced_grid_shards_every_plan_kind() {
+        let mut cfg = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu]);
+        cfg.pool.grid = Some(2);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let a = Matrix::random_spectral(20, 0.95, 7);
+        for power in [1u64, 2, 13, 100] {
+            let want = oracle(&a, power);
+            for plan in [
+                Plan::binary(power, false),
+                Plan::binary(power, true),
+                Plan::chained(power, &[4, 2]),
+                Plan::addition_chain(power),
+            ] {
+                let (got, stats) = engine.expm(&a, &plan).unwrap();
+                assert!(
+                    got.approx_eq(&want, 1e-3, 1e-3),
+                    "{:?} N={power}: diff {}",
+                    plan.kind,
+                    got.max_abs_diff(&want)
+                );
+                // every logical multiply became 4 tile launches (2x2 grid)
+                assert_eq!(stats.launches, 4 * plan.multiplies(), "{:?}", plan.kind);
+                let launch_sum: usize = stats.per_device.iter().map(|d| d.launches).sum();
+                assert_eq!(launch_sum, stats.launches, "{:?}", plan.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_packed_falls_back_to_binary_plan() {
+        let mut cfg = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu]);
+        cfg.pool.grid = Some(2);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let a = Matrix::random_spectral(16, 0.9, 9);
+        let (got, stats) = engine.expm_packed(&a, 100).unwrap();
+        assert!(got.approx_eq(&oracle(&a, 100), 1e-3, 1e-3));
+        assert_eq!(stats.launches, 4 * Plan::binary(100, false).multiplies());
+    }
+
+    #[test]
+    fn execute_request_covers_all_methods() {
+        use crate::coordinator::request::Method;
+        let cfg = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu]);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let a = Matrix::random_spectral(8, 0.9, 5);
+        let want = oracle(&a, 13);
+        for method in [
+            Method::Ours,
+            Method::OursPacked,
+            Method::OursChained,
+            Method::AdditionChain,
+            Method::NaiveGpu,
+            Method::CpuSeq,
+        ] {
+            let req = ExpmRequest { id: 1, matrix: a.clone(), power: 13, method };
+            let resp = engine.execute_request(req).unwrap();
+            assert!(
+                resp.result.approx_eq(&want, 1e-3, 1e-3),
+                "{method} diverges, diff {}",
+                resp.result.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_empty_matrix_and_power_zero() {
+        let cfg = pool_cfg(vec![PoolDeviceKind::Cpu]);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        assert!(engine.expm(&Matrix::zeros(0), &Plan::binary(4, false)).is_err());
+        assert!(engine.expm_packed(&Matrix::identity(4), 0).is_err());
+    }
+}

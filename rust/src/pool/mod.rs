@@ -1,0 +1,126 @@
+//! Heterogeneous device pool — sharded multi-device execution.
+//!
+//! The paper's title promises *heterogeneous* highly parallel execution;
+//! a single [`crate::runtime::Engine`] over one backend never delivers
+//! that. This layer does: a [`DevicePool`] owns N backend instances (any
+//! mix of CPU and simulated-C2050 devices, each on its own worker thread
+//! because backends may be `!Send`), and a [`PoolEngine`] runs the same
+//! `expm`/`expm_packed` surface across all of them.
+//!
+//! Two dispatch disciplines, chosen by the scheduler
+//! ([`crate::coordinator::scheduler::pool_dispatch`]):
+//!
+//! * **Tile-shard** (large single requests): every multiply of the plan is
+//!   partitioned on a 2D block grid ([`TileGrid`]); each device computes
+//!   whole output tiles with one fused `mma{g}` launch per tile (the
+//!   block-row × block-column inner product in a single dispatch), the
+//!   host reassembles, and the next step redistributes. This is the
+//!   static-split design of D'Alberto's APU+GPU fast matmul
+//!   (arXiv:1205.2927) and the multi-GPU tiling of Clark's QCD solvers
+//!   (arXiv:0912.2268).
+//! * **Request-parallel** (batches of small matrices): whole requests land
+//!   on per-device queues sized by the cost model; idle devices steal from
+//!   the longest queue.
+//!
+//! The **cost-model splitter** ([`cost`]) predicts per-device throughput —
+//! reusing [`crate::simulator::timing::GpuTimingModel`] for sim devices
+//! and a startup micro-calibration for CPU devices — assigns shares
+//! proportionally (LPT), and falls back to the fastest single device
+//! whenever sharding is predicted to lose (small matrices are launch-
+//! overhead-bound, so the fallback is common and correct: a split must
+//! never underperform its fastest member).
+//!
+//! [`crate::runtime::ExecStats::per_device`] carries the per-device
+//! launch/transfer/wall breakdown of every pooled execution.
+
+pub mod cost;
+pub mod device;
+pub mod engine;
+pub mod partition;
+#[allow(clippy::module_inception)]
+pub mod pool;
+
+pub use cost::{DeviceCost, ShardDecision, ShardPlan};
+pub use engine::PoolEngine;
+pub use partition::TileGrid;
+pub use pool::{DevicePool, DeviceUtil, PoolMetrics};
+
+use crate::error::{MatexpError, Result};
+
+/// What kind of device a pool slot holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolDeviceKind {
+    /// Pure-Rust CPU device ([`crate::runtime::CpuBackend`]).
+    Cpu,
+    /// Calibrated Tesla C2050 timing model ([`crate::runtime::SimBackend`]).
+    Sim,
+}
+
+impl PoolDeviceKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PoolDeviceKind::Cpu => "cpu",
+            PoolDeviceKind::Sim => "sim",
+        }
+    }
+}
+
+impl std::str::FromStr for PoolDeviceKind {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Ok(PoolDeviceKind::Cpu),
+            "sim" => Ok(PoolDeviceKind::Sim),
+            other => Err(MatexpError::Config(format!(
+                "unknown pool device {other:?} (cpu|sim)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for PoolDeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Parse a comma-separated device list (`"sim,sim,cpu"` — CLI flag form).
+pub fn parse_device_list(s: &str) -> Result<Vec<PoolDeviceKind>> {
+    use std::str::FromStr;
+    let devices = s
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(PoolDeviceKind::from_str)
+        .collect::<Result<Vec<_>>>()?;
+    if devices.is_empty() {
+        return Err(MatexpError::Config("empty pool device list".into()));
+    }
+    Ok(devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn device_kind_roundtrip() {
+        for k in [PoolDeviceKind::Cpu, PoolDeviceKind::Sim] {
+            assert_eq!(PoolDeviceKind::from_str(k.as_str()).unwrap(), k);
+        }
+        assert!(PoolDeviceKind::from_str("tpu").is_err());
+        assert_eq!(PoolDeviceKind::from_str("SIM").unwrap(), PoolDeviceKind::Sim);
+    }
+
+    #[test]
+    fn device_list_parses() {
+        assert_eq!(
+            parse_device_list("sim, sim,cpu").unwrap(),
+            vec![PoolDeviceKind::Sim, PoolDeviceKind::Sim, PoolDeviceKind::Cpu]
+        );
+        assert!(parse_device_list("").is_err());
+        assert!(parse_device_list("sim,gpu").is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! 2D block-row/column tile partitioner.
+//!
+//! A sharded multiply `C = A·B` is cut on a `g`×`g` grid of square tiles
+//! of side `t = ceil(n/g)`; output tile `(i, j)` is the inner product
+//! `Σ_k A(i,k)·B(k,j)`, which one device computes with a single `mma{g}`
+//! launch. Edge tiles are zero-padded to keep every launch square —
+//! zero rows/columns are inert under multiplication and addition, so the
+//! padded product crops back to the exact result for *any* `n` and `g`.
+
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+
+/// A `g`×`g` block partition of an `n`×`n` matrix into `t`×`t` tiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    n: usize,
+    g: usize,
+    t: usize,
+}
+
+impl TileGrid {
+    /// Partition size `n` on a `g`×`g` grid. `g` is clamped to `n` so no
+    /// tile is entirely padding.
+    pub fn new(n: usize, g: usize) -> Result<TileGrid> {
+        if n == 0 {
+            return Err(MatexpError::Plan("cannot tile an empty matrix".into()));
+        }
+        if g == 0 {
+            return Err(MatexpError::Plan("tile grid must be >= 1".into()));
+        }
+        let g = g.min(n);
+        let t = n.div_ceil(g);
+        // re-derive g from the tile side so no band is pure padding
+        // (n=5, g=4 → t=2 covers n in 3 bands, not 4)
+        let g = n.div_ceil(t);
+        Ok(TileGrid { n, g, t })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Grid dimension (tiles per side).
+    pub fn g(&self) -> usize {
+        self.g
+    }
+
+    /// Tile side (padded).
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Number of output tiles (`g²`).
+    pub fn tiles(&self) -> usize {
+        self.g * self.g
+    }
+
+    /// Rows (or columns) of real data in band `b` (the last band may be
+    /// partly padding).
+    fn band_len(&self, b: usize) -> usize {
+        ((b + 1) * self.t).min(self.n) - (b * self.t).min(self.n)
+    }
+
+    /// Extract tile `(bi, bj)` as a zero-padded `t`×`t` matrix.
+    pub fn extract(&self, m: &Matrix, bi: usize, bj: usize) -> Result<Matrix> {
+        if m.n() != self.n {
+            return Err(MatexpError::Plan(format!(
+                "matrix is {}x{}, grid expects {}x{}",
+                m.n(),
+                m.n(),
+                self.n,
+                self.n
+            )));
+        }
+        if bi >= self.g || bj >= self.g {
+            return Err(MatexpError::Plan(format!(
+                "tile ({bi},{bj}) out of a {}x{} grid",
+                self.g, self.g
+            )));
+        }
+        let rows = self.band_len(bi);
+        let cols = self.band_len(bj);
+        let mut out = Matrix::zeros(self.t);
+        for r in 0..rows {
+            let src_row = bi * self.t + r;
+            let src = &m.data()[src_row * self.n + bj * self.t..][..cols];
+            out.data_mut()[r * self.t..r * self.t + cols].copy_from_slice(src);
+        }
+        Ok(out)
+    }
+
+    /// Reassemble the `n`×`n` product from its `g²` tiles, cropping the
+    /// padding. Every tile must be present exactly once.
+    pub fn assemble(&self, tiles: &[((usize, usize), Matrix)]) -> Result<Matrix> {
+        if tiles.len() != self.tiles() {
+            return Err(MatexpError::Plan(format!(
+                "assemble: got {} tiles, grid has {}",
+                tiles.len(),
+                self.tiles()
+            )));
+        }
+        let mut out = Matrix::zeros(self.n);
+        let mut seen = vec![false; self.tiles()];
+        for ((bi, bj), tile) in tiles {
+            let (bi, bj) = (*bi, *bj);
+            if bi >= self.g || bj >= self.g {
+                return Err(MatexpError::Plan(format!("assemble: bad tile ({bi},{bj})")));
+            }
+            if tile.n() != self.t {
+                return Err(MatexpError::Plan(format!(
+                    "assemble: tile ({bi},{bj}) is {}x{}, expected {}x{}",
+                    tile.n(),
+                    tile.n(),
+                    self.t,
+                    self.t
+                )));
+            }
+            if std::mem::replace(&mut seen[bi * self.g + bj], true) {
+                return Err(MatexpError::Plan(format!(
+                    "assemble: duplicate tile ({bi},{bj})"
+                )));
+            }
+            let rows = self.band_len(bi);
+            let cols = self.band_len(bj);
+            for r in 0..rows {
+                let dst_row = bi * self.t + r;
+                let src = &tile.data()[r * self.t..][..cols];
+                out.data_mut()[dst_row * self.n + bj * self.t..][..cols]
+                    .copy_from_slice(src);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The `mma{g}` operand tiles for output tile `(bi, bj)` of `A·B`:
+    /// `[A(bi,0)..A(bi,g-1), B(0,bj)..B(g-1,bj)]`, with the grid position
+    /// of each operand so callers can key device-resident tile caches.
+    pub fn mma_operands(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        bi: usize,
+        bj: usize,
+    ) -> Result<Vec<((usize, usize), Matrix)>> {
+        let mut out = Vec::with_capacity(2 * self.g);
+        for k in 0..self.g {
+            out.push(((bi, k), self.extract(a, bi, k)?));
+        }
+        for k in 0..self.g {
+            out.push(((k, bj), self.extract(b, k, bj)?));
+        }
+        Ok(out)
+    }
+
+    /// Host-side oracle for one output tile (tests and debugging): the
+    /// padded `Σ_k A(bi,k)·B(k,bj)` computed with the naive matmul.
+    pub fn tile_product(&self, a: &Matrix, b: &Matrix, bi: usize, bj: usize) -> Result<Matrix> {
+        let mut acc = Matrix::zeros(self.t);
+        for k in 0..self.g {
+            let at = self.extract(a, bi, k)?;
+            let bt = self.extract(b, k, bj)?;
+            let prod = crate::linalg::naive::matmul_naive(&at, &bt);
+            for (dst, src) in acc.data_mut().iter_mut().zip(prod.data()) {
+                *dst += *src;
+            }
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::naive::matmul_naive;
+
+    #[test]
+    fn extract_assemble_roundtrip() {
+        for (n, g) in [(8usize, 2usize), (9, 2), (7, 3), (16, 4), (5, 8), (6, 1)] {
+            let grid = TileGrid::new(n, g).unwrap();
+            let m = Matrix::random(n, (n * 10 + g) as u64);
+            let tiles: Vec<((usize, usize), Matrix)> = (0..grid.g())
+                .flat_map(|i| (0..grid.g()).map(move |j| (i, j)))
+                .map(|(i, j)| ((i, j), grid.extract(&m, i, j).unwrap()))
+                .collect();
+            assert_eq!(grid.assemble(&tiles).unwrap(), m, "n={n} g={g}");
+        }
+    }
+
+    #[test]
+    fn tile_products_assemble_to_the_full_product() {
+        for (n, g) in [(12usize, 2usize), (10, 3), (9, 4)] {
+            let grid = TileGrid::new(n, g).unwrap();
+            let a = Matrix::random(n, 3);
+            let b = Matrix::random(n, 4);
+            let want = matmul_naive(&a, &b);
+            let tiles: Vec<((usize, usize), Matrix)> = (0..grid.g())
+                .flat_map(|i| (0..grid.g()).map(move |j| (i, j)))
+                .map(|(i, j)| ((i, j), grid.tile_product(&a, &b, i, j).unwrap()))
+                .collect();
+            let got = grid.assemble(&tiles).unwrap();
+            assert!(
+                got.approx_eq(&want, 1e-4, 1e-4),
+                "n={n} g={g}: diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn grid_clamps_and_rejects_degenerates() {
+        assert!(TileGrid::new(0, 2).is_err());
+        assert!(TileGrid::new(8, 0).is_err());
+        let g = TileGrid::new(3, 9).unwrap();
+        assert_eq!(g.g(), 3, "grid clamped to n");
+        assert_eq!(g.t(), 1);
+    }
+
+    #[test]
+    fn assemble_rejects_missing_and_duplicate_tiles() {
+        let grid = TileGrid::new(8, 2).unwrap();
+        let m = Matrix::random(8, 1);
+        let t00 = grid.extract(&m, 0, 0).unwrap();
+        assert!(grid.assemble(&[((0, 0), t00.clone())]).is_err(), "missing tiles");
+        let dup: Vec<_> = (0..4).map(|_| ((0usize, 0usize), t00.clone())).collect();
+        assert!(grid.assemble(&dup).is_err(), "duplicates");
+    }
+
+    #[test]
+    fn operand_list_shape() {
+        let grid = TileGrid::new(10, 3).unwrap();
+        let a = Matrix::random(10, 5);
+        let b = Matrix::random(10, 6);
+        let ops = grid.mma_operands(&a, &b, 1, 2).unwrap();
+        assert_eq!(ops.len(), 6);
+        // first g operands walk A's block-row, last g walk B's block-column
+        assert_eq!(ops[0].0, (1, 0));
+        assert_eq!(ops[2].0, (1, 2));
+        assert_eq!(ops[3].0, (0, 2));
+        assert_eq!(ops[5].0, (2, 2));
+    }
+}

@@ -1,0 +1,586 @@
+//! [`DevicePool`] — N heterogeneous backends behind per-device queues.
+//!
+//! The pool spawns one worker thread per configured device
+//! ([`super::device`]), calibrates a cost model for each
+//! ([`super::cost`]), and offers two entry points: sharded multiplies
+//! (tile jobs fanned across devices, product reassembled on the host) and
+//! whole-request execution (per-device queues with work stealing).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmRequest, ExpmResponse};
+use crate::error::{MatexpError, Result};
+use crate::linalg::matrix::Matrix;
+use crate::plan::Plan;
+use crate::pool::cost::{self, DeviceCost, ShardDecision, ShardPlan};
+use crate::pool::device::{
+    CalibrateJob, DeviceAccum, ExecDone, Job, JobPayload, PackedJob, PlanJob, RequestJob,
+    Shared, TileDone, TileJob, TileKey,
+};
+use crate::pool::partition::TileGrid;
+use crate::pool::PoolDeviceKind;
+use crate::runtime::engine::{DeviceStats, ExecStats};
+
+/// Tile side of the CPU micro-calibration probe (small enough to be
+/// instant even in debug builds, big enough to measure the cubic term).
+const CALIBRATION_TILE: usize = 48;
+
+/// How long to wait on a device reply before declaring it dead.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Per-device utilization snapshot (pool observability).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceUtil {
+    pub name: String,
+    pub kind: PoolDeviceKind,
+    /// Jobs this device completed.
+    pub jobs: u64,
+    /// Jobs it stole from other devices' queues.
+    pub steals: u64,
+    /// Kernel launches it performed.
+    pub launches: u64,
+    /// Seconds it was busy (simulated on timing-model devices).
+    pub busy_s: f64,
+    /// Jobs currently waiting in its queue.
+    pub queue_depth: usize,
+}
+
+/// Point-in-time pool metrics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolMetrics {
+    pub devices: Vec<DeviceUtil>,
+}
+
+/// A pool of heterogeneous devices, each on its own worker thread.
+pub struct DevicePool {
+    shared: Arc<Shared>,
+    names: Vec<String>,
+    kinds: Vec<PoolDeviceKind>,
+    costs: Vec<DeviceCost>,
+    accum: Arc<Vec<Mutex<DeviceAccum>>>,
+    cfg: MatexpConfig,
+    next_key: AtomicU64,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Spawn the configured devices (`cfg.pool.devices`), wait until every
+    /// worker built its backend, and micro-calibrate the CPU members.
+    pub fn new(cfg: &MatexpConfig) -> Result<DevicePool> {
+        let kinds = cfg.pool.devices.clone();
+        if kinds.is_empty() {
+            return Err(MatexpError::Config(
+                "pool.devices must name at least one device".into(),
+            ));
+        }
+        let shared = Arc::new(Shared::new(kinds.len()));
+        let accum: Arc<Vec<Mutex<DeviceAccum>>> =
+            Arc::new((0..kinds.len()).map(|_| Mutex::new(DeviceAccum::default())).collect());
+        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), String>>(kinds.len());
+        let mut workers = Vec::with_capacity(kinds.len());
+        // collect spawn errors instead of `?`-ing out: the pool struct must
+        // be constructed before any early return so its Drop can shut down
+        // and join whatever already spawned (no thread leak)
+        let mut failure: Option<String> = None;
+        for (idx, kind) in kinds.iter().enumerate() {
+            let kind = *kind;
+            let cfg_w = cfg.clone();
+            let shared_w = Arc::clone(&shared);
+            let accum_w = Arc::clone(&accum);
+            let ready_w = ready_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("matexp-pool-{}{idx}", kind.as_str()))
+                .spawn(move || {
+                    crate::pool::device::device_loop(idx, kind, cfg_w, shared_w, accum_w, ready_w)
+                });
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    failure = Some(format!("could not spawn device thread: {e}"));
+                    break;
+                }
+            }
+        }
+        drop(ready_tx);
+        for _ in 0..workers.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => failure = Some(msg),
+                Err(_) => failure = Some("pool device died during startup".into()),
+            }
+        }
+        let names: Vec<String> =
+            kinds.iter().enumerate().map(|(i, k)| format!("{}#{i}", k.as_str())).collect();
+        let mut pool = DevicePool {
+            shared,
+            names,
+            kinds: kinds.clone(),
+            costs: Vec::new(),
+            accum,
+            cfg: cfg.clone(),
+            next_key: AtomicU64::new(1),
+            workers,
+        };
+        if let Some(msg) = failure {
+            // pool drops below: shutdown + join, no thread leak
+            return Err(MatexpError::Service(format!("pool device failed to start: {msg}")));
+        }
+        pool.costs = pool.calibrate(&kinds)?;
+        Ok(pool)
+    }
+
+    /// One cost model per device: the analytic C2050 model for sim
+    /// devices, a measured probe for CPU devices.
+    fn calibrate(&self, kinds: &[PoolDeviceKind]) -> Result<Vec<DeviceCost>> {
+        let mut costs = Vec::with_capacity(kinds.len());
+        for (idx, kind) in kinds.iter().enumerate() {
+            match kind {
+                PoolDeviceKind::Sim => {
+                    let (model, _) = crate::experiments::tables::calibrated_models();
+                    costs.push(DeviceCost::Model(model));
+                }
+                PoolDeviceKind::Cpu => {
+                    let (tx, rx) = sync_channel(1);
+                    self.shared.push(
+                        idx,
+                        Job {
+                            payload: JobPayload::Calibrate(CalibrateJob {
+                                t: CALIBRATION_TILE,
+                                reply: tx,
+                            }),
+                            stealable: false,
+                        },
+                    );
+                    let secs = rx
+                        .recv_timeout(REPLY_TIMEOUT)
+                        .map_err(|_| {
+                            MatexpError::Service(format!(
+                                "pool device {} never answered calibration",
+                                self.names[idx]
+                            ))
+                        })??;
+                    let flops = 2.0 * (CALIBRATION_TILE as f64).powi(3);
+                    costs.push(DeviceCost::Measured {
+                        fixed_s: 0.0,
+                        per_flop_s: secs / flops,
+                    });
+                }
+            }
+        }
+        Ok(costs)
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn kinds(&self) -> &[PoolDeviceKind] {
+        &self.kinds
+    }
+
+    /// Per-device cost models (the splitter's inputs).
+    pub fn costs(&self) -> &[DeviceCost] {
+        &self.costs
+    }
+
+    pub fn config(&self) -> &MatexpConfig {
+        &self.cfg
+    }
+
+    pub fn platform(&self) -> String {
+        let list: Vec<&str> = self.kinds.iter().map(|k| k.as_str()).collect();
+        format!("device pool [{}] (cost-model splitter + work stealing)", list.join(", "))
+    }
+
+    /// Fresh matrix id for tile-cache keying.
+    pub(crate) fn next_key(&self) -> u64 {
+        self.next_key.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Splitter decision for multiplies at size `n` (honors the forced
+    /// grid in `cfg.pool.grid`).
+    pub fn shard_decision(&self, n: usize) -> ShardDecision {
+        cost::plan_shard(&self.costs, n, self.cfg.pool.max_grid, self.cfg.pool.grid)
+    }
+
+    /// Device with the cheapest predicted resident multiply at size `n`.
+    pub fn fastest_device(&self, n: usize) -> usize {
+        cost::fastest_device(&self.costs, n)
+    }
+
+    /// One multiply `A·B`, sharded across the pool per `plan`: each output
+    /// tile is one pinned `mma{g}` job on its assigned device; the host
+    /// reassembles. `a_key`/`b_key`/`out_key` identify the matrices for
+    /// device-resident tile caching (allocate with [`Self::next_key`]).
+    ///
+    /// Wall time is the critical path: max over devices of their summed
+    /// tile-job time for this step.
+    pub fn sharded_matmul(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        a_key: u64,
+        b_key: u64,
+        out_key: u64,
+        plan: &ShardPlan,
+    ) -> Result<(Matrix, ExecStats)> {
+        let n = a.n();
+        if b.n() != n {
+            return Err(MatexpError::Linalg("sharded_matmul size mismatch".into()));
+        }
+        let grid = TileGrid::new(n, plan.grid)?;
+        let g = grid.g();
+        if plan.assignment.len() != grid.tiles() {
+            return Err(MatexpError::Plan(format!(
+                "shard plan has {} assignments for a {}-tile grid",
+                plan.assignment.len(),
+                grid.tiles()
+            )));
+        }
+        if let Some(&bad) = plan.assignment.iter().find(|&&d| d >= self.device_count()) {
+            return Err(MatexpError::Plan(format!(
+                "shard plan names device {bad}, pool has {}",
+                self.device_count()
+            )));
+        }
+        let op = format!("mma{g}");
+        let (tx, rx) = sync_channel::<TileDone>(grid.tiles());
+        for bi in 0..g {
+            for bj in 0..g {
+                let device = plan.assignment[bi * g + bj];
+                let operands = grid.mma_operands(a, b, bi, bj)?;
+                let inputs: Vec<(TileKey, Matrix)> = operands
+                    .into_iter()
+                    .enumerate()
+                    .map(|(pos, ((ti, tj), m))| {
+                        let src = if pos < g { a_key } else { b_key };
+                        ((src, ti, tj), m)
+                    })
+                    .collect();
+                self.shared.push(
+                    device,
+                    Job {
+                        payload: JobPayload::Tile(TileJob {
+                            op: op.clone(),
+                            t: grid.t(),
+                            inputs,
+                            out_key: (out_key, bi, bj),
+                            tile: (bi, bj),
+                            reply: tx.clone(),
+                        }),
+                        stealable: false,
+                    },
+                );
+            }
+        }
+        drop(tx);
+        let mut tiles: Vec<((usize, usize), Matrix)> = Vec::with_capacity(grid.tiles());
+        let mut stats = ExecStats::default();
+        let mut device_wall = vec![0.0f64; self.device_count()];
+        let mut first_err: Option<MatexpError> = None;
+        for _ in 0..grid.tiles() {
+            let done = rx.recv_timeout(REPLY_TIMEOUT).map_err(|_| {
+                MatexpError::Service("pool device dropped a tile job".into())
+            })?;
+            stats.launches += done.stats.launches;
+            stats.multiplies += done.stats.multiplies;
+            stats.h2d_transfers += done.stats.h2d_transfers;
+            stats.d2h_transfers += done.stats.d2h_transfers;
+            device_wall[done.device] += done.stats.wall_s;
+            stats.merge_device(&done.stats);
+            match done.result {
+                Ok(m) => tiles.push((done.tile, m)),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        stats.wall_s = device_wall.iter().cloned().fold(0.0, f64::max);
+        Ok((grid.assemble(&tiles)?, stats))
+    }
+
+    /// Run whole requests across the pool: per-device queues sized by the
+    /// cost model (LPT), stealable by idle devices. Returns
+    /// `(request id, outcome)` in completion order; every response's
+    /// `stats.per_device` names the device that served it.
+    pub fn execute_requests(
+        &self,
+        reqs: Vec<ExpmRequest>,
+    ) -> Vec<(u64, Result<ExpmResponse>)> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let jobs: Vec<(usize, usize)> = reqs
+            .iter()
+            .map(|r| (r.n(), Plan::binary(r.power.max(1), false).multiplies().max(1)))
+            .collect();
+        let assignment = cost::assign_requests(&self.costs, &jobs);
+        let count = reqs.len();
+        // outstanding ids, so a dead device's requests error under their
+        // OWN ids (the coordinator's reply map is keyed by id — a made-up
+        // id would leave the real caller waiting forever)
+        let mut pending: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        let (tx, rx) = sync_channel(count);
+        for (req, &device) in reqs.into_iter().zip(&assignment) {
+            self.shared.push(
+                device,
+                Job {
+                    payload: JobPayload::Request(RequestJob { req, reply: tx.clone() }),
+                    stealable: true,
+                },
+            );
+        }
+        drop(tx);
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            match rx.recv_timeout(REPLY_TIMEOUT) {
+                Ok(done) => {
+                    pending.retain(|&id| id != done.id);
+                    let device = done.device;
+                    let result = done.result.map(|mut resp| {
+                        resp.stats =
+                            self.tag_single(device, std::mem::take(&mut resp.stats));
+                        resp
+                    });
+                    out.push((done.id, result));
+                }
+                Err(_) => break, // device gone: fail whatever is left, by id
+            }
+        }
+        for id in pending {
+            out.push((
+                id,
+                Err(MatexpError::Service("pool device dropped a request".into())),
+            ));
+        }
+        out
+    }
+
+    /// Replay a whole plan device-resident on one device.
+    pub(crate) fn run_plan_on(
+        &self,
+        device: usize,
+        a: &Matrix,
+        plan: &Plan,
+    ) -> Result<(Matrix, ExecStats)> {
+        let (tx, rx) = sync_channel(1);
+        self.shared.push(
+            device,
+            Job {
+                payload: JobPayload::PlanExec(PlanJob {
+                    a: a.clone(),
+                    plan: plan.clone(),
+                    reply: tx,
+                }),
+                stealable: false,
+            },
+        );
+        let done: ExecDone = rx.recv_timeout(REPLY_TIMEOUT).map_err(|_| {
+            MatexpError::Service("pool device dropped a plan execution".into())
+        })?;
+        done.result.map(|(m, stats)| (m, self.tag_single(device, stats)))
+    }
+
+    /// Packed-state exponentiation on one device.
+    pub(crate) fn run_packed_on(
+        &self,
+        device: usize,
+        a: &Matrix,
+        power: u64,
+    ) -> Result<(Matrix, ExecStats)> {
+        let (tx, rx) = sync_channel(1);
+        self.shared.push(
+            device,
+            Job {
+                payload: JobPayload::PackedExec(PackedJob { a: a.clone(), power, reply: tx }),
+                stealable: false,
+            },
+        );
+        let done: ExecDone = rx.recv_timeout(REPLY_TIMEOUT).map_err(|_| {
+            MatexpError::Service("pool device dropped a packed execution".into())
+        })?;
+        done.result.map(|(m, stats)| (m, self.tag_single(device, stats)))
+    }
+
+    /// Attach the single-device breakdown to a whole-run's stats.
+    fn tag_single(&self, device: usize, mut stats: ExecStats) -> ExecStats {
+        stats.per_device = vec![DeviceStats {
+            device: self.names[device].clone(),
+            launches: stats.launches,
+            multiplies: stats.multiplies,
+            h2d_transfers: stats.h2d_transfers,
+            d2h_transfers: stats.d2h_transfers,
+            wall_s: stats.wall_s,
+        }];
+        stats
+    }
+
+    /// Live utilization: per-device job/steal/launch/busy totals plus
+    /// current queue depths.
+    pub fn metrics(&self) -> PoolMetrics {
+        let depths = self.shared.depths();
+        let devices = self
+            .names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let acc = self.accum[i].lock().expect("pool accum poisoned").clone();
+                DeviceUtil {
+                    name: name.clone(),
+                    kind: self.kinds[i],
+                    jobs: acc.jobs,
+                    steals: acc.steals,
+                    launches: acc.launches,
+                    busy_s: acc.busy_s,
+                    queue_depth: depths.get(i).copied().unwrap_or(0),
+                }
+            })
+            .collect();
+        PoolMetrics { devices }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        self.shared.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+    use crate::linalg::naive::matmul_naive;
+
+    fn cpu_pool(devices: usize) -> DevicePool {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = crate::runtime::BackendKind::Pool;
+        cfg.pool.devices = vec![PoolDeviceKind::Cpu; devices];
+        DevicePool::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn sharded_matmul_matches_oracle_and_counts_devices() {
+        let pool = cpu_pool(2);
+        let a = Matrix::random(24, 11);
+        let b = Matrix::random(24, 12);
+        let plan = ShardPlan {
+            grid: 2,
+            assignment: vec![0, 1, 0, 1],
+            predicted_step_s: 0.0,
+        };
+        let (got, stats) = pool
+            .sharded_matmul(&a, &b, pool.next_key(), pool.next_key(), pool.next_key(), &plan)
+            .unwrap();
+        let want = matmul_naive(&a, &b);
+        assert!(got.approx_eq(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // 4 tiles, one mma2 launch each, split across both devices
+        assert_eq!(stats.launches, 4);
+        assert_eq!(stats.multiplies, 8);
+        assert_eq!(stats.per_device.len(), 2);
+        let launch_sum: usize = stats.per_device.iter().map(|d| d.launches).sum();
+        assert_eq!(launch_sum, stats.launches);
+        assert!(stats.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn bad_shard_plans_are_rejected() {
+        let pool = cpu_pool(1);
+        let a = Matrix::random(8, 1);
+        let plan = ShardPlan { grid: 2, assignment: vec![0, 0, 0, 5], predicted_step_s: 0.0 };
+        assert!(pool.sharded_matmul(&a, &a, 1, 1, 2, &plan).is_err(), "unknown device");
+        let plan = ShardPlan { grid: 2, assignment: vec![0], predicted_step_s: 0.0 };
+        assert!(pool.sharded_matmul(&a, &a, 1, 1, 2, &plan).is_err(), "short assignment");
+    }
+
+    #[test]
+    fn request_batch_runs_and_tags_devices() {
+        let pool = cpu_pool(2);
+        let reqs: Vec<ExpmRequest> = (0..6)
+            .map(|i| ExpmRequest {
+                id: i + 1,
+                matrix: Matrix::random_spectral(16, 0.9, i + 1),
+                power: 13,
+                method: Method::Ours,
+            })
+            .collect();
+        let oracle: Vec<Matrix> = reqs
+            .iter()
+            .map(|r| crate::linalg::expm::expm(&r.matrix, 13, crate::linalg::CpuAlgo::Naive).unwrap())
+            .collect();
+        let mut replies = pool.execute_requests(reqs);
+        assert_eq!(replies.len(), 6);
+        replies.sort_by_key(|(id, _)| *id);
+        for (i, (id, outcome)) in replies.iter().enumerate() {
+            assert_eq!(*id, i as u64 + 1);
+            let resp = outcome.as_ref().expect("request served");
+            assert!(resp.result.approx_eq(&oracle[i], 1e-3, 1e-3));
+            assert_eq!(resp.stats.per_device.len(), 1);
+            assert_eq!(resp.stats.per_device[0].launches, resp.stats.launches);
+        }
+        let metrics = pool.metrics();
+        let jobs: u64 = metrics.devices.iter().map(|d| d.jobs).sum();
+        // 6 requests + 2 calibration probes
+        assert_eq!(jobs, 8);
+    }
+
+    #[test]
+    fn idle_device_steals_queued_requests() {
+        let pool = cpu_pool(2);
+        // bypass the splitter: pile every request onto device 0 so device
+        // 1 can only get work by stealing
+        let (tx, rx) = sync_channel(8);
+        for i in 0..8u64 {
+            pool.shared.push(
+                0,
+                Job {
+                    payload: JobPayload::Request(RequestJob {
+                        req: ExpmRequest {
+                            id: i,
+                            matrix: Matrix::random_spectral(48, 0.9, i + 1),
+                            power: 64,
+                            method: Method::Ours,
+                        },
+                        reply: tx.clone(),
+                    }),
+                    stealable: true,
+                },
+            );
+        }
+        drop(tx);
+        let mut served = 0;
+        while let Ok(done) = rx.recv_timeout(REPLY_TIMEOUT) {
+            assert!(done.result.is_ok());
+            served += 1;
+        }
+        assert_eq!(served, 8);
+        let metrics = pool.metrics();
+        let steals: u64 = metrics.devices.iter().map(|d| d.steals).sum();
+        assert!(steals > 0, "device 1 never stole: {metrics:?}");
+        assert!(metrics.devices[1].jobs > 1, "{metrics:?}");
+    }
+
+    #[test]
+    fn empty_pool_rejected() {
+        let mut cfg = MatexpConfig::default();
+        cfg.pool.devices.clear();
+        assert!(DevicePool::new(&cfg).is_err());
+    }
+}

@@ -67,6 +67,13 @@ impl AnyBackend {
                 Ok(AnyBackend::Sim(SimBackend::new(model)))
             }
             BackendKind::Pjrt => pjrt_from_config(cfg),
+            // the pool is a layer above single backends: it owns several
+            // AnyBackend instances on worker threads (crate::pool)
+            BackendKind::Pool => Err(MatexpError::Config(
+                "backend \"pool\" is multi-device; drive it through \
+                 pool::PoolEngine (the coordinator and CLI do)"
+                    .into(),
+            )),
         }
     }
 
@@ -217,6 +224,14 @@ mod tests {
         cfg.backend = BackendKind::Pjrt;
         let err = AnyBackend::from_config(&cfg).unwrap_err().to_string();
         assert!(err.contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn pool_backend_is_not_a_single_backend() {
+        let mut cfg = MatexpConfig::default();
+        cfg.backend = BackendKind::Pool;
+        let err = AnyBackend::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("pool"), "{err}");
     }
 
     #[test]

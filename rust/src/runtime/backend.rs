@@ -17,6 +17,12 @@
 //! | `step_mul` | (acc, base)   | (acc·base², base²) | 2   |
 //! | `unpack0`  | (acc, base)   | acc         | 0          |
 //! | `expm{N}`  | A             | A^N         | binary(N)  |
+//! | `mma{g}`   | A1..Ag, B1..Bg | sum Ak·Bk  | g          |
+//!
+//! `mma{g}` is the tile kernel of the multi-device layer
+//! ([`crate::pool`]): one launch accumulates a whole block-row×block-column
+//! inner product, so a device computes its output tile of a sharded
+//! multiply in a single dispatch instead of `g` launches plus host adds.
 //!
 //! Three implementations ship: [`crate::runtime::CpuBackend`] (pure Rust,
 //! runs everywhere — the default), [`crate::runtime::SimBackend`] (the
@@ -104,6 +110,11 @@ pub fn op_multiplies(op: &str) -> Result<usize> {
         "sqmul" | "step_mul" => Ok(2),
         "pack2" | "unpack0" => Ok(0),
         _ => {
+            if let Some(g) = op.strip_prefix("mma") {
+                return g
+                    .parse::<usize>()
+                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")));
+            }
             if let Some(k) = op.strip_prefix("square") {
                 return k
                     .parse::<usize>()
@@ -137,7 +148,11 @@ mod tests {
         // expm{N} = the binary plan's multiply count
         assert_eq!(op_multiplies("expm64").unwrap(), 6);
         assert_eq!(op_multiplies("expm100").unwrap(), 8);
+        // mma{g} = g tile multiplies in one launch
+        assert_eq!(op_multiplies("mma1").unwrap(), 1);
+        assert_eq!(op_multiplies("mma4").unwrap(), 4);
         assert!(op_multiplies("conv2d").is_err());
         assert!(op_multiplies("squareX").is_err());
+        assert!(op_multiplies("mmaX").is_err());
     }
 }

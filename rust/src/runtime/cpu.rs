@@ -80,6 +80,15 @@ impl CpuBackend {
         match op {
             "matmul" | "square" | "sqmul" | "pack2" | "step_sq" | "step_mul" | "unpack0" => Ok(()),
             _ => {
+                if let Some(g) = op.strip_prefix("mma") {
+                    let g: usize = g
+                        .parse()
+                        .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")))?;
+                    if g < 1 {
+                        return Err(MatexpError::Backend(format!("bad mma width {op:?}")));
+                    }
+                    return Ok(());
+                }
                 if let Some(k) = op.strip_prefix("square") {
                     let k: usize = k
                         .parse()
@@ -197,6 +206,24 @@ impl Backend for CpuBackend {
             }
             _ => {
                 self.check_op(op)?;
+                if let Some(g) = op.strip_prefix("mma") {
+                    let g: usize = g.parse().expect("checked by check_op");
+                    need(2 * g)?;
+                    let n = inputs[0].mat()?.n();
+                    let mut acc = Matrix::zeros(n);
+                    for k in 0..g {
+                        let a = inputs[k].mat()?;
+                        let b = inputs[g + k].mat()?;
+                        if a.n() != n || b.n() != n {
+                            return Err(MatexpError::Linalg("mma tile size mismatch".into()));
+                        }
+                        let prod = self.mm(a, b);
+                        for (dst, src) in acc.data_mut().iter_mut().zip(prod.data()) {
+                            *dst += *src;
+                        }
+                    }
+                    return Ok(CpuBuffer::Mat(Rc::new(acc)));
+                }
                 if let Some(k) = op.strip_prefix("square") {
                     need(1)?;
                     let k: usize = k.parse().expect("checked by check_op");
@@ -297,6 +324,32 @@ mod tests {
         let out = b.launch("expm64", 4, &[buf]).unwrap();
         let want = crate::linalg::expm::expm(&a, 64, CpuAlgo::Naive).unwrap();
         assert!(b.download(&out, 4).unwrap().approx_eq(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn mma_accumulates_tile_products() {
+        let mut b = backend();
+        let a1 = Matrix::random(6, 1);
+        let a2 = Matrix::random(6, 2);
+        let b1 = Matrix::random(6, 3);
+        let b2 = Matrix::random(6, 4);
+        let inputs = [up(&mut b, &a1), up(&mut b, &a2), up(&mut b, &b1), up(&mut b, &b2)];
+        let out = b.launch("mma2", 6, &inputs).unwrap();
+        let p1 = matmul_naive(&a1, &b1);
+        let p2 = matmul_naive(&a2, &b2);
+        let mut want = p1.clone();
+        for (dst, src) in want.data_mut().iter_mut().zip(p2.data()) {
+            *dst += *src;
+        }
+        let got = b.download(&out, 6).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // mma1 degenerates to a plain matmul
+        let one = b.launch("mma1", 6, &[up(&mut b, &a1), up(&mut b, &b1)]).unwrap();
+        assert!(b.download(&one, 6).unwrap().approx_eq(&p1, 1e-4, 1e-4));
+        // bad widths and arities rejected
+        assert!(b.prepare("mma0", 6).is_err());
+        assert!(b.prepare("mmaX", 6).is_err());
+        assert!(b.launch("mma2", 6, &inputs[..3]).is_err(), "arity");
     }
 
     #[test]

@@ -30,8 +30,35 @@ use crate::runtime::backend::Backend;
 use crate::runtime::cpu::CpuBackend;
 use crate::runtime::sim::SimBackend;
 
+/// One device's share of an execution (filled by the multi-device
+/// [`crate::pool`] layer; empty for single-backend engines).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeviceStats {
+    /// Device name, e.g. `sim#1` or `cpu#0`.
+    pub device: String,
+    /// Kernel launches this device performed.
+    pub launches: usize,
+    /// Matrix multiplies this device performed (tile-level multiplies in
+    /// sharded mode, so they can exceed the plan's logical count).
+    pub multiplies: usize,
+    pub h2d_transfers: usize,
+    pub d2h_transfers: usize,
+    /// Seconds this device was busy (simulated on timing-model devices).
+    pub wall_s: f64,
+}
+
+impl DeviceStats {
+    fn absorb(&mut self, other: &DeviceStats) {
+        self.launches += other.launches;
+        self.multiplies += other.multiplies;
+        self.h2d_transfers += other.h2d_transfers;
+        self.d2h_transfers += other.d2h_transfers;
+        self.wall_s += other.wall_s;
+    }
+}
+
 /// Execution statistics — the quantities Tables 2–5 are about.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ExecStats {
     /// Kernel launches (device dispatches).
     pub launches: usize,
@@ -42,8 +69,14 @@ pub struct ExecStats {
     /// Device→host matrix transfers.
     pub d2h_transfers: usize,
     /// Wall-clock seconds for the whole operation (simulated seconds on
-    /// a timing-model backend).
+    /// a timing-model backend). On a device pool this is the *critical
+    /// path* (max over devices per step), so it can be smaller than the
+    /// sum of the per-device walls.
     pub wall_s: f64,
+    /// Per-device breakdown when executed by a [`crate::pool::DevicePool`];
+    /// empty on single-backend engines. Launch/transfer counts across the
+    /// entries sum to the totals above.
+    pub per_device: Vec<DeviceStats>,
 }
 
 impl ExecStats {
@@ -53,6 +86,18 @@ impl ExecStats {
         self.h2d_transfers += other.h2d_transfers;
         self.d2h_transfers += other.d2h_transfers;
         self.wall_s += other.wall_s;
+        for d in &other.per_device {
+            self.merge_device(d);
+        }
+    }
+
+    /// Fold one device's share into the per-device breakdown (keyed by
+    /// device name).
+    pub fn merge_device(&mut self, d: &DeviceStats) {
+        match self.per_device.iter_mut().find(|mine| mine.device == d.device) {
+            Some(mine) => mine.absorb(d),
+            None => self.per_device.push(d.clone()),
+        }
     }
 }
 

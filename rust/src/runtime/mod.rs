@@ -31,7 +31,7 @@ pub use any::{AnyBackend, AnyBuffer};
 pub use artifacts::{ArtifactEntry, ArtifactRegistry};
 pub use backend::{op_multiplies, Backend, SplitPair, FUSED_EXPM_POWERS};
 pub use cpu::{CpuBackend, CpuBuffer};
-pub use engine::{AnyEngine, CpuEngine, Engine, ExecStats, SimEngine};
+pub use engine::{AnyEngine, CpuEngine, DeviceStats, Engine, ExecStats, SimEngine};
 pub use sim::SimBackend;
 
 #[cfg(feature = "xla")]
@@ -49,6 +49,9 @@ pub enum BackendKind {
     Sim,
     /// AOT artifacts on PJRT (needs the `xla` cargo feature + artifacts).
     Pjrt,
+    /// Heterogeneous multi-device pool ([`crate::pool`]): N cpu/sim
+    /// devices behind a cost-model work splitter.
+    Pool,
 }
 
 impl BackendKind {
@@ -57,11 +60,12 @@ impl BackendKind {
             BackendKind::Cpu => "cpu",
             BackendKind::Sim => "sim",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Pool => "pool",
         }
     }
 
-    pub fn all() -> [BackendKind; 3] {
-        [BackendKind::Cpu, BackendKind::Sim, BackendKind::Pjrt]
+    pub fn all() -> [BackendKind; 4] {
+        [BackendKind::Cpu, BackendKind::Sim, BackendKind::Pjrt, BackendKind::Pool]
     }
 }
 
@@ -73,7 +77,7 @@ impl std::str::FromStr for BackendKind {
             .into_iter()
             .find(|k| k.as_str() == s.to_ascii_lowercase())
             .ok_or_else(|| {
-                MatexpError::Config(format!("unknown backend {s:?} (cpu|sim|pjrt)"))
+                MatexpError::Config(format!("unknown backend {s:?} (cpu|sim|pjrt|pool)"))
             })
     }
 }

@@ -58,7 +58,9 @@ impl MatexpClient {
                 Ok((Matrix::from_vec(matrix.n(), data)?, stats))
             }
             WireResponse::Ok { .. } => Err(MatexpError::Service("malformed ok response".into())),
-            WireResponse::Error { message } => Err(MatexpError::Service(message)),
+            WireResponse::Error { message, kind } => {
+                Err(WireResponse::to_typed_error(&kind, message))
+            }
         }
     }
 
@@ -66,7 +68,9 @@ impl MatexpClient {
     pub fn ping(&mut self) -> Result<()> {
         match self.roundtrip(&WireRequest::Ping)? {
             WireResponse::Ok { .. } => Ok(()),
-            WireResponse::Error { message } => Err(MatexpError::Service(message)),
+            WireResponse::Error { message, kind } => {
+                Err(WireResponse::to_typed_error(&kind, message))
+            }
         }
     }
 
@@ -75,7 +79,9 @@ impl MatexpClient {
         match self.roundtrip(&WireRequest::Metrics)? {
             WireResponse::Ok { metrics: Some(v), .. } => Ok(v),
             WireResponse::Ok { .. } => Err(MatexpError::Service("no metrics in response".into())),
-            WireResponse::Error { message } => Err(MatexpError::Service(message)),
+            WireResponse::Error { message, kind } => {
+                Err(WireResponse::to_typed_error(&kind, message))
+            }
         }
     }
 }

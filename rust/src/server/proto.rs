@@ -37,14 +37,27 @@ pub enum WireRequest {
     Ping,
 }
 
+/// One device's share of a pooled execution, on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireDeviceStats {
+    pub device: String,
+    pub launches: usize,
+    pub multiplies: usize,
+    pub h2d_transfers: usize,
+    pub d2h_transfers: usize,
+    pub wall_s: f64,
+}
+
 /// Stats subset that crosses the wire.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WireStats {
     pub launches: usize,
     pub multiplies: usize,
     pub h2d_transfers: usize,
     pub d2h_transfers: usize,
     pub wall_s: f64,
+    /// Per-device breakdown (empty off the pool backend).
+    pub per_device: Vec<WireDeviceStats>,
 }
 
 impl From<ExecStats> for WireStats {
@@ -55,18 +68,45 @@ impl From<ExecStats> for WireStats {
             h2d_transfers: s.h2d_transfers,
             d2h_transfers: s.d2h_transfers,
             wall_s: s.wall_s,
+            per_device: s
+                .per_device
+                .iter()
+                .map(|d| WireDeviceStats {
+                    device: d.device.clone(),
+                    launches: d.launches,
+                    multiplies: d.multiplies,
+                    h2d_transfers: d.h2d_transfers,
+                    d2h_transfers: d.d2h_transfers,
+                    wall_s: d.wall_s,
+                })
+                .collect(),
         }
     }
 }
 
 impl WireStats {
     pub fn to_json(&self) -> Json {
+        let per_device: Vec<Json> = self
+            .per_device
+            .iter()
+            .map(|d| {
+                json_obj![
+                    ("device", d.device.as_str()),
+                    ("launches", d.launches),
+                    ("multiplies", d.multiplies),
+                    ("h2d_transfers", d.h2d_transfers),
+                    ("d2h_transfers", d.d2h_transfers),
+                    ("wall_s", d.wall_s),
+                ]
+            })
+            .collect();
         json_obj![
             ("launches", self.launches),
             ("multiplies", self.multiplies),
             ("h2d_transfers", self.h2d_transfers),
             ("d2h_transfers", self.d2h_transfers),
             ("wall_s", self.wall_s),
+            ("per_device", Json::Arr(per_device)),
         ]
     }
 
@@ -75,12 +115,37 @@ impl WireStats {
             v.get(name)
                 .ok_or_else(|| MatexpError::Service(format!("stats missing {name:?}")))
         };
+        let per_device = match v.get("per_device").and_then(Json::as_arr) {
+            Some(items) => items
+                .iter()
+                .map(|d| WireDeviceStats {
+                    device: d
+                        .get("device")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    launches: d.get("launches").and_then(Json::as_usize).unwrap_or(0),
+                    multiplies: d.get("multiplies").and_then(Json::as_usize).unwrap_or(0),
+                    h2d_transfers: d
+                        .get("h2d_transfers")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    d2h_transfers: d
+                        .get("d2h_transfers")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    wall_s: d.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         Ok(WireStats {
             launches: want("launches")?.as_usize().unwrap_or(0),
             multiplies: want("multiplies")?.as_usize().unwrap_or(0),
             h2d_transfers: want("h2d_transfers")?.as_usize().unwrap_or(0),
             d2h_transfers: want("d2h_transfers")?.as_usize().unwrap_or(0),
             wall_s: want("wall_s")?.as_f64().unwrap_or(0.0),
+            per_device,
         })
     }
 }
@@ -95,7 +160,13 @@ pub enum WireResponse {
         /// How `result` is encoded on the wire (mirrors the request).
         payload: Payload,
     },
-    Error { message: String },
+    Error {
+        message: String,
+        /// Machine-readable error class (`admission` = fix your request,
+        /// `config`, `service` = the service's problem), so remote
+        /// clients keep the typed distinction [`MatexpError`] draws.
+        kind: String,
+    },
 }
 
 impl WireRequest {
@@ -184,14 +255,33 @@ impl WireResponse {
     pub fn from_expm(resp: &ExpmResponse, payload: Payload) -> WireResponse {
         WireResponse::Ok {
             result: Some(resp.result.data().to_vec()),
-            stats: Some(resp.stats.into()),
+            stats: Some(resp.stats.clone().into()),
             metrics: None,
             payload,
         }
     }
 
     pub fn error(msg: impl Into<String>) -> WireResponse {
-        WireResponse::Error { message: msg.into() }
+        WireResponse::Error { message: msg.into(), kind: "service".into() }
+    }
+
+    /// Typed error → wire error, preserving the error class.
+    pub fn from_error(e: &MatexpError) -> WireResponse {
+        let kind = match e {
+            MatexpError::Admission(_) => "admission",
+            MatexpError::Config(_) => "config",
+            _ => "service",
+        };
+        WireResponse::Error { message: e.to_string(), kind: kind.into() }
+    }
+
+    /// Wire error → typed error (the client side of [`Self::from_error`]).
+    pub fn to_typed_error(kind: &str, message: String) -> MatexpError {
+        match kind {
+            "admission" => MatexpError::Admission(message),
+            "config" => MatexpError::Config(message),
+            _ => MatexpError::Service(message),
+        }
     }
 
     pub fn pong() -> WireResponse {
@@ -201,8 +291,13 @@ impl WireResponse {
     /// Encode as one JSON line (no trailing newline).
     pub fn encode(&self) -> String {
         match self {
-            WireResponse::Error { message } => {
-                json_obj![("status", "error"), ("message", message.as_str())].to_string()
+            WireResponse::Error { message, kind } => {
+                json_obj![
+                    ("status", "error"),
+                    ("kind", kind.as_str()),
+                    ("message", message.as_str())
+                ]
+                .to_string()
             }
             WireResponse::Ok { result, stats, metrics, payload } => {
                 let mut s = String::from(r#"{"status":"ok""#);
@@ -264,6 +359,11 @@ impl WireResponse {
                     .get("message")
                     .and_then(Json::as_str)
                     .unwrap_or("<no message>")
+                    .to_string(),
+                kind: v
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("service")
                     .to_string(),
             }),
             _ => Err(MatexpError::Service("response missing \"status\"".into())),
@@ -329,11 +429,54 @@ mod tests {
                 h2d_transfers: 1,
                 d2h_transfers: 1,
                 wall_s: 0.5,
+                per_device: Vec::new(),
             }),
             metrics: None,
             payload: Payload::Json,
         };
         assert_eq!(WireResponse::decode(&resp.encode()).unwrap(), resp);
+    }
+
+    #[test]
+    fn per_device_stats_roundtrip() {
+        let resp = WireResponse::Ok {
+            result: None,
+            stats: Some(WireStats {
+                launches: 8,
+                multiplies: 16,
+                h2d_transfers: 12,
+                d2h_transfers: 4,
+                wall_s: 0.25,
+                per_device: vec![
+                    WireDeviceStats {
+                        device: "sim#0".into(),
+                        launches: 5,
+                        multiplies: 10,
+                        h2d_transfers: 7,
+                        d2h_transfers: 2,
+                        wall_s: 0.25,
+                    },
+                    WireDeviceStats {
+                        device: "cpu#1".into(),
+                        launches: 3,
+                        multiplies: 6,
+                        h2d_transfers: 5,
+                        d2h_transfers: 2,
+                        wall_s: 0.1,
+                    },
+                ],
+            }),
+            metrics: None,
+            payload: Payload::Json,
+        };
+        let line = resp.encode();
+        assert!(line.contains("per_device"), "{line}");
+        assert!(line.contains("sim#0"), "{line}");
+        assert_eq!(WireResponse::decode(&line).unwrap(), resp);
+        // stats blocks without the field decode to an empty breakdown
+        let legacy = r#"{"launches":1,"multiplies":1,"h2d_transfers":1,"d2h_transfers":1,"wall_s":0.1}"#;
+        let stats = WireStats::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert!(stats.per_device.is_empty());
     }
 
     #[test]
@@ -353,7 +496,29 @@ mod tests {
         let s = WireResponse::error("nope").encode();
         assert!(s.contains("\"status\":\"error\""), "{s}");
         match WireResponse::decode(&s).unwrap() {
-            WireResponse::Error { message } => assert_eq!(message, "nope"),
+            WireResponse::Error { message, kind } => {
+                assert_eq!(message, "nope");
+                assert_eq!(kind, "service");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_errors_keep_their_kind_across_the_wire() {
+        let e = MatexpError::Admission("matrix too big".into());
+        let s = WireResponse::from_error(&e).encode();
+        assert!(s.contains("\"kind\":\"admission\""), "{s}");
+        match WireResponse::decode(&s).unwrap() {
+            WireResponse::Error { message, kind } => {
+                let typed = WireResponse::to_typed_error(&kind, message);
+                assert!(matches!(typed, MatexpError::Admission(_)), "{typed:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // legacy error lines without a kind stay service errors
+        match WireResponse::decode(r#"{"status":"error","message":"x"}"#).unwrap() {
+            WireResponse::Error { kind, .. } => assert_eq!(kind, "service"),
             other => panic!("{other:?}"),
         }
     }

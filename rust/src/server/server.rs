@@ -106,12 +106,13 @@ fn dispatch(service: &ServiceHandle, req: WireRequest) -> WireResponse {
         WireRequest::Expm { power, method, payload, .. } => {
             let matrix = match req.matrix() {
                 Ok(m) => m,
-                Err(e) => return WireResponse::error(e.to_string()),
+                Err(e) => return WireResponse::from_error(&e),
             };
             match service.submit(matrix, power, method) {
-                // reply in the encoding the request used
+                // reply in the encoding the request used; typed errors
+                // (admission vs service) keep their kind on the wire
                 Ok(resp) => WireResponse::from_expm(&resp, payload),
-                Err(e) => WireResponse::error(e.to_string()),
+                Err(e) => WireResponse::from_error(&e),
             }
         }
     }

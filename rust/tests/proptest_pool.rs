@@ -1,0 +1,114 @@
+//! Property tests for the device pool: the tile partitioner against the
+//! single-device `linalg` oracle (random sizes, device counts 1..4,
+//! uneven heterogeneous splits) and the per-device `ExecStats`
+//! invariants.
+
+use matexp::config::MatexpConfig;
+use matexp::linalg::matrix::Matrix;
+use matexp::linalg::naive::matmul_naive;
+use matexp::plan::Plan;
+use matexp::pool::{DevicePool, PoolDeviceKind, PoolEngine, ShardPlan, TileGrid};
+use matexp::runtime::BackendKind;
+use matexp::util::prop::property;
+
+fn pool_cfg(devices: Vec<PoolDeviceKind>) -> MatexpConfig {
+    let mut cfg = MatexpConfig::default();
+    cfg.backend = BackendKind::Pool;
+    cfg.pool.devices = devices;
+    cfg
+}
+
+#[test]
+fn sharded_product_matches_single_device_oracle() {
+    // the satellite property: reassembled sharded products == the
+    // single-device linalg oracle at 1e-5, across random sizes, device
+    // counts {1,2,3,4}, and arbitrary (typically uneven) tile->device
+    // assignments
+    property("sharded matmul == linalg oracle", 30, |g| {
+        let devices = g.usize(1, 4);
+        let pool = DevicePool::new(&pool_cfg(vec![PoolDeviceKind::Cpu; devices])).unwrap();
+        let n = g.usize(2, 40);
+        let grid = TileGrid::new(n, g.usize(1, 4)).unwrap();
+        let assignment: Vec<usize> =
+            (0..grid.tiles()).map(|_| g.usize(0, devices - 1)).collect();
+        let plan = ShardPlan {
+            grid: grid.g(),
+            assignment: assignment.clone(),
+            predicted_step_s: 0.0,
+        };
+        let a = Matrix::random(n, g.u64(1, 1 << 20));
+        let b = Matrix::random(n, g.u64(1, 1 << 20));
+        let (got, stats) = pool
+            .sharded_matmul(&a, &b, 1, 2, 3, &plan)
+            .expect("sharded multiply runs");
+        let want = matmul_naive(&a, &b);
+        assert!(
+            got.approx_eq(&want, 1e-5, 1e-5),
+            "n={n} g={} devices={devices}: diff {}",
+            grid.g(),
+            got.max_abs_diff(&want)
+        );
+        // one fused launch per tile, and the per-device breakdown is
+        // conserved against the totals
+        assert_eq!(stats.launches, grid.tiles());
+        assert_eq!(stats.multiplies, grid.tiles() * grid.g());
+        let launches: usize = stats.per_device.iter().map(|d| d.launches).sum();
+        assert_eq!(launches, stats.launches);
+        let h2d: usize = stats.per_device.iter().map(|d| d.h2d_transfers).sum();
+        assert_eq!(h2d, stats.h2d_transfers);
+    });
+}
+
+#[test]
+fn per_device_launches_sum_to_plan_launches() {
+    // whole-request dispatch: the response's per-device launches must sum
+    // to exactly the plan's launch count
+    property("pool per-device launches == plan launches", 20, |g| {
+        let devices = g.usize(1, 3);
+        let engine =
+            PoolEngine::from_config(&pool_cfg(vec![PoolDeviceKind::Cpu; devices])).unwrap();
+        let power = g.u64(1, 512);
+        let plan = match g.usize(0, 2) {
+            0 => Plan::binary(power, false),
+            1 => Plan::binary(power, true),
+            _ => Plan::chained(power, &[4, 2]),
+        };
+        let a = Matrix::random_spectral(g.usize(4, 16), 0.9, g.u64(1, 1 << 20));
+        let (got, stats) = engine.expm(&a, &plan).unwrap();
+        assert!(got.is_finite());
+        assert_eq!(stats.launches, plan.launches(), "{:?}", plan.kind);
+        let sum: usize = stats.per_device.iter().map(|d| d.launches).sum();
+        assert_eq!(sum, plan.launches(), "{:?}", plan.kind);
+    });
+}
+
+#[test]
+fn sharded_replay_breakdown_is_conserved() {
+    // forced-grid sharded replay: per-device launch/transfer sums equal
+    // the totals, and launches = tiles x logical multiplies
+    property("sharded replay stats conserved", 12, |g| {
+        let devices = g.usize(1, 3);
+        let mut cfg = pool_cfg(vec![PoolDeviceKind::Cpu; devices]);
+        let grid_dim = g.usize(1, 3);
+        cfg.pool.grid = Some(grid_dim);
+        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let n = g.usize(6, 24);
+        let power = g.u64(1, 64);
+        let plan = Plan::binary(power, false);
+        let a = Matrix::random_spectral(n, 0.9, g.u64(1, 1 << 20));
+        let (got, stats) = engine.expm(&a, &plan).unwrap();
+        let want = matexp::linalg::expm::expm(&a, power, matexp::linalg::CpuAlgo::Naive)
+            .unwrap();
+        assert!(
+            got.approx_eq(&want, 1e-4, 1e-4),
+            "n={n} N={power}: diff {}",
+            got.max_abs_diff(&want)
+        );
+        let tiles = TileGrid::new(n, grid_dim).unwrap().tiles();
+        assert_eq!(stats.launches, tiles * plan.multiplies());
+        let launches: usize = stats.per_device.iter().map(|d| d.launches).sum();
+        assert_eq!(launches, stats.launches);
+        let d2h: usize = stats.per_device.iter().map(|d| d.d2h_transfers).sum();
+        assert_eq!(d2h, stats.d2h_transfers);
+    });
+}
