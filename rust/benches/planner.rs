@@ -57,9 +57,9 @@ fn main() {
         payload: matexp::server::proto::Payload::Json,
     };
     runner.bench("wire-encode/512x512/json", || {
-        black_box(resp.encode());
+        black_box(resp.encode().unwrap());
     });
-    let line = resp.encode();
+    let line = resp.encode().unwrap();
     runner.bench("wire-decode/512x512/json", || {
         black_box(matexp::server::proto::WireResponse::decode(black_box(&line)).unwrap());
     });
@@ -70,9 +70,9 @@ fn main() {
         payload: matexp::server::proto::Payload::Base64,
     };
     runner.bench("wire-encode/512x512/b64", || {
-        black_box(resp_b64.encode());
+        black_box(resp_b64.encode().unwrap());
     });
-    let line_b64 = resp_b64.encode();
+    let line_b64 = resp_b64.encode().unwrap();
     runner.bench("wire-decode/512x512/b64", || {
         black_box(matexp::server::proto::WireResponse::decode(black_box(&line_b64)).unwrap());
     });

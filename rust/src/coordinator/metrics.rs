@@ -24,6 +24,11 @@ pub struct Metrics {
     pub batched_requests_total: AtomicU64,
     pub launches_total: AtomicU64,
     pub multiplies_total: AtomicU64,
+    /// Host-edge bytes copied across all served responses (the residency
+    /// layer's live counterpart of `ExecStats.bytes_copied`).
+    pub bytes_copied_total: AtomicU64,
+    /// Launch outputs served from recycled arena buffers, all responses.
+    pub buffers_recycled_total: AtomicU64,
     /// Gauge: requests waiting in the batcher right now (set by the
     /// collector each loop).
     pub queue_depth: AtomicU64,
@@ -42,6 +47,10 @@ pub struct MetricsSnapshot {
     pub batched_requests_total: u64,
     pub launches_total: u64,
     pub multiplies_total: u64,
+    /// Host-edge bytes copied across all served responses.
+    pub bytes_copied_total: u64,
+    /// Recycled-buffer launch outputs across all served responses.
+    pub buffers_recycled_total: u64,
     /// Requests waiting in the batcher at snapshot time.
     pub queue_depth: u64,
     /// Total cross-queue steals in the device pool (0 off the pool backend).
@@ -99,6 +108,8 @@ impl Metrics {
             batched_requests_total: self.batched_requests_total.load(Ordering::Relaxed),
             launches_total: self.launches_total.load(Ordering::Relaxed),
             multiplies_total: self.multiplies_total.load(Ordering::Relaxed),
+            bytes_copied_total: self.bytes_copied_total.load(Ordering::Relaxed),
+            buffers_recycled_total: self.buffers_recycled_total.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             steals_total: 0,
             devices: Vec::new(),
@@ -131,6 +142,8 @@ impl MetricsSnapshot {
                     ("steals", d.steals),
                     ("launches", d.launches),
                     ("busy_s", d.busy_s),
+                    ("bytes_copied", d.bytes_copied),
+                    ("buffers_recycled", d.buffers_recycled),
                     ("queue_depth", d.queue_depth),
                 ]
             })
@@ -144,6 +157,8 @@ impl MetricsSnapshot {
             ("batched_requests_total", self.batched_requests_total),
             ("launches_total", self.launches_total),
             ("multiplies_total", self.multiplies_total),
+            ("bytes_copied_total", self.bytes_copied_total),
+            ("buffers_recycled_total", self.buffers_recycled_total),
             ("queue_depth", self.queue_depth),
             ("steals_total", self.steals_total),
             ("devices", Json::Arr(devices)),
@@ -205,12 +220,28 @@ mod tests {
             steals: 2,
             launches: 9,
             busy_s: 0.5,
+            bytes_copied: 4096,
+            buffers_recycled: 3,
             queue_depth: 1,
         });
         let j = s.to_json().to_string();
         assert!(j.contains("steals_total"), "{j}");
         assert!(j.contains("sim#0"), "{j}");
         assert!(j.contains("queue_depth"), "{j}");
+        assert!(j.contains("buffers_recycled"), "{j}");
+    }
+
+    #[test]
+    fn residency_totals_serialize() {
+        let m = Metrics::new();
+        m.bytes_copied_total.fetch_add(8192, Ordering::Relaxed);
+        m.buffers_recycled_total.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.bytes_copied_total, 8192);
+        assert_eq!(s.buffers_recycled_total, 5);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"bytes_copied_total\":8192"), "{j}");
+        assert!(j.contains("\"buffers_recycled_total\":5"), "{j}");
     }
 
     #[test]

@@ -257,6 +257,12 @@ fn worker_loop(
                     metrics
                         .multiplies_total
                         .fetch_add(resp.stats.multiplies as u64, Ordering::Relaxed);
+                    metrics
+                        .bytes_copied_total
+                        .fetch_add(resp.stats.bytes_copied, Ordering::Relaxed);
+                    metrics
+                        .buffers_recycled_total
+                        .fetch_add(resp.stats.buffers_recycled, Ordering::Relaxed);
                     let latency = elapsed.unwrap_or_else(|| started.elapsed());
                     metrics.observe_latency_us(latency.as_micros() as u64);
                     let _ = tx.send(outcome.map_err(|e| e.to_string()));

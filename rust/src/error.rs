@@ -8,8 +8,14 @@ pub enum MatexpError {
     /// Artifact directory / manifest problems (missing `make artifacts`?).
     Artifact(String),
 
-    /// Execution-backend failures (unsupported op, buffer mismatch, PJRT).
+    /// Execution-backend failures (degenerate op parameters, buffer
+    /// mismatch, PJRT).
     Backend(String),
+
+    /// The backend (or its artifact set) genuinely does not ship this op
+    /// at this size — the one `prepare` failure warmup may skip for
+    /// optional ops. Anything else propagates.
+    UnsupportedOp(String),
 
     /// PJRT / XLA runtime failures.
     Xla(String),
@@ -41,6 +47,7 @@ impl std::fmt::Display for MatexpError {
         match self {
             MatexpError::Artifact(m) => write!(f, "artifact error: {m}"),
             MatexpError::Backend(m) => write!(f, "backend error: {m}"),
+            MatexpError::UnsupportedOp(m) => write!(f, "unsupported op: {m}"),
             MatexpError::Xla(m) => write!(f, "xla runtime error: {m}"),
             MatexpError::Plan(m) => write!(f, "plan error: {m}"),
             MatexpError::Linalg(m) => write!(f, "linalg error: {m}"),
@@ -92,6 +99,7 @@ mod tests {
     fn display_prefixes_by_layer() {
         assert!(MatexpError::Backend("x".into()).to_string().starts_with("backend error"));
         assert!(MatexpError::Config("x".into()).to_string().starts_with("config error"));
+        assert!(MatexpError::UnsupportedOp("x".into()).to_string().starts_with("unsupported op"));
         let io: MatexpError = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().contains("gone"));
     }

@@ -8,13 +8,19 @@
 //!   vs `square2`/`square4` chains vs the packed single-buffer loop.
 //! * **A4 cpu** — the "fair CPU" question: naive vs cache-aware vs
 //!   multi-threaded CPU baselines.
+//! * **A5 residency** — the buffer-residency ablation behind
+//!   `--ablate-residency`: clone-per-launch vs pooled resident execution,
+//!   both as a pure data-path replay (the multiply elided, so the gap is
+//!   exactly the memory traffic) and as full engine runs whose
+//!   `ExecStats.bytes_copied` quantify each discipline's host traffic.
 
+use std::rc::Rc;
 use std::time::Instant;
 
 use crate::error::Result;
 use crate::linalg::{self, matrix::Matrix};
 use crate::plan::Plan;
-use crate::runtime::{Backend, Engine, ExecStats};
+use crate::runtime::{Backend, BufferArena, Engine, ExecStats};
 
 #[cfg(feature = "xla")]
 use crate::runtime::{artifacts::ArtifactRegistry, PjrtBackend};
@@ -136,6 +142,127 @@ fn engine_supports_fused<B: Backend>(engine: &mut Engine<B>, a: &Matrix, power: 
     engine.expm_fused_artifact(a, power).is_ok()
 }
 
+/// One arm of the residency data-path ablation.
+#[derive(Clone, Debug)]
+pub struct ResidencyArm {
+    pub name: &'static str,
+    /// Seconds spent purely on the data path (uploads, output
+    /// allocation, downloads) for the whole chain.
+    pub data_path_s: f64,
+    /// Host-edge bytes this discipline copied.
+    pub bytes_copied: u64,
+    /// Outputs served from recycled arena buffers (0 for the cloning arm).
+    pub buffers_recycled: u64,
+}
+
+/// A5 (data path) — replay the *buffer traffic* of a `steps`-step
+/// squaring chain under both disciplines, with the multiply itself
+/// elided (it is identical in both arms and would drown the signal in
+/// O(n³) compute): the measured gap is exactly the O(k·n²) clone traffic
+/// the paper's §4.3.8 residency discipline eliminates.
+///
+/// * **clone-per-launch** — the seed data path: every launch re-uploads
+///   its operand (deep clone), allocates a fresh `n×n` output, and
+///   downloads the result (deep clone).
+/// * **resident** — the arena data path: the input is adopted once, each
+///   launch writes into a recycled buffer, and only the final result
+///   crosses back to the host.
+///
+/// Returns `[clone_per_launch, resident]`.
+pub fn residency_data_path(n: usize, steps: usize, seed: u64) -> [ResidencyArm; 2] {
+    let host = Matrix::random(n, seed);
+    let sz = (n * n * std::mem::size_of::<f32>()) as u64;
+
+    // -- clone-per-launch (the pre-residency data path) --
+    let t0 = Instant::now();
+    let mut bytes = 0u64;
+    let mut host_reg = host.clone();
+    for _ in 0..steps {
+        let operand = host_reg.clone(); // H2D: upload deep-cloned
+        bytes += sz;
+        let mut dev_out = Matrix::zeros(n); // fresh n×n output per launch
+        std::hint::black_box((&operand, &mut dev_out)); // kernel elided
+        host_reg = dev_out.clone(); // D2H: result deep-cloned back
+        bytes += sz;
+    }
+    std::hint::black_box(&host_reg);
+    let clone_arm = ResidencyArm {
+        name: "clone-per-launch",
+        data_path_s: t0.elapsed().as_secs_f64(),
+        bytes_copied: bytes,
+        buffers_recycled: 0,
+    };
+
+    // -- resident (the arena data path) --
+    let arena = BufferArena::new();
+    let t0 = Instant::now();
+    arena.count_copied(sz); // the ONE host→device edge
+    let mut dev = Rc::new(arena.adopt(host.clone()));
+    for _ in 0..steps {
+        let mut out = arena.alloc(n); // recycled from the second step on
+        std::hint::black_box((&dev, out.matrix_mut())); // kernel elided
+        dev = Rc::new(out); // previous buffer returns to the arena
+    }
+    arena.count_copied(sz); // the ONE device→host edge
+    let result = dev.matrix().clone();
+    std::hint::black_box(&result);
+    let stats = arena.take();
+    let resident_arm = ResidencyArm {
+        name: "resident",
+        data_path_s: t0.elapsed().as_secs_f64(),
+        bytes_copied: stats.bytes_copied,
+        buffers_recycled: stats.buffers_recycled,
+    };
+
+    [clone_arm, resident_arm]
+}
+
+/// [`residency_data_path`] rendered as ablation arms (`transfers` column
+/// counts host-edge copies).
+pub fn residency_data_path_arms(n: usize, steps: usize, seed: u64) -> Vec<ArmResult> {
+    residency_data_path(n, steps, seed)
+        .into_iter()
+        .map(|arm| ArmResult {
+            name: arm.name.to_string(),
+            wall_s: arm.data_path_s,
+            launches: steps,
+            multiplies: 0,
+            transfers: (arm.bytes_copied / (n * n * 4).max(1) as u64) as usize,
+            detail: format!(
+                "bytes_copied={} recycled={} (kernel elided: data path only)",
+                arm.bytes_copied, arm.buffers_recycled
+            ),
+        })
+        .collect()
+}
+
+/// A5 (full engine) — the same comparison as real executions: resident
+/// [`Engine::expm`] vs the clone-per-launch counterfactual
+/// [`Engine::expm_plan_roundtrip`], with each arm's `bytes_copied` /
+/// `buffers_recycled` / `peak_resident_bytes` in the detail column.
+pub fn residency_engine_arms<B: Backend>(
+    engine: &mut Engine<B>,
+    n: usize,
+    power: u64,
+    seed: u64,
+) -> Result<Vec<ArmResult>> {
+    let a = Matrix::random_spectral(n, 0.999, seed);
+    let plan = Plan::binary(power, false);
+    engine.warmup_exec(n)?;
+    let (_, resident) = engine.expm(&a, &plan)?;
+    let (_, roundtrip) = engine.expm_plan_roundtrip(&a, &plan)?;
+    let describe = |s: &ExecStats| {
+        format!(
+            "bytes_copied={} recycled={} peak_resident={}B",
+            s.bytes_copied, s.buffers_recycled, s.peak_resident_bytes
+        )
+    };
+    Ok(vec![
+        ArmResult::from_stats("resident", &resident, describe(&resident)),
+        ArmResult::from_stats("clone-per-launch", &roundtrip, describe(&roundtrip)),
+    ])
+}
+
 /// A4 — CPU-baseline fairness sweep: one multiply per variant at size `n`.
 pub fn cpu_variants(n: usize, seed: u64) -> Vec<ArmResult> {
     let a = Matrix::random_spectral(n, 0.99, seed);
@@ -210,5 +337,25 @@ mod tests {
         let arms = fusion_ablation(&mut e, 16, 100, 3).unwrap();
         assert!(arms.iter().all(|a| a.name != "fused-artifact"));
         assert!(arms.len() >= 5);
+    }
+
+    #[test]
+    fn residency_data_path_copies_two_edges_vs_two_per_step() {
+        let [clone_arm, resident] = residency_data_path(64, 10, 7);
+        assert_eq!(clone_arm.bytes_copied, 2 * 10 * 64 * 64 * 4);
+        assert_eq!(resident.bytes_copied, 2 * 64 * 64 * 4);
+        assert_eq!(resident.buffers_recycled, 9, "ping-pong recycles all but the warm-up allocs");
+        assert_eq!(clone_arm.buffers_recycled, 0);
+    }
+
+    #[test]
+    fn residency_engine_arms_report_the_copy_gap() {
+        let mut e = engine();
+        let arms = residency_engine_arms(&mut e, 32, 256, 5).unwrap();
+        let resident = &arms[0];
+        let roundtrip = &arms[1];
+        assert_eq!(resident.multiplies, roundtrip.multiplies, "identical logical work");
+        assert!(resident.detail.contains("bytes_copied=8192"), "{}", resident.detail);
+        assert!(roundtrip.transfers > resident.transfers);
     }
 }

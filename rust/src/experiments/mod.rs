@@ -12,6 +12,7 @@
 //! | A2        | §4.3.8 transfer discipline  | [`ablations::transfer_ablation`]|
 //! | A3        | launch fusion               | [`ablations::fusion_ablation`]  |
 //! | A4        | CPU-baseline fairness       | [`ablations::cpu_variants`]     |
+//! | A5        | buffer residency            | [`ablations::residency_data_path`] |
 //! | S1        | pool scaling (extension)    | [`scaling::run_pool_scaling`]   |
 
 pub mod ablations;
@@ -20,7 +21,7 @@ pub mod report;
 pub mod scaling;
 pub mod tables;
 
-pub use ablations::ArmResult;
+pub use ablations::{ArmResult, ResidencyArm};
 pub use paper::{paper_cell, paper_table, paper_tables, PaperCell, PaperTable};
 pub use report::{render_ablation, render_figures, render_table};
 pub use scaling::{render_scaling, run_pool_scaling, ScalingArm, ScalingTable};

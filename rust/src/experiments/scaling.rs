@@ -47,6 +47,12 @@ pub struct ScalingArm {
     pub shard_measured_s: Option<f64>,
     /// Cross-queue steals observed during the measured run.
     pub steals: u64,
+    /// Host-edge bytes the measured workload copied (summed across the
+    /// pool's devices) — the residency layer's live counter, so the
+    /// clone-vs-resident ablation is visible from the scaling run too.
+    pub bytes_copied: Option<u64>,
+    /// Recycled-buffer launch outputs during the measured workload.
+    pub buffers_recycled: Option<u64>,
 }
 
 /// The whole experiment: baseline + arms.
@@ -213,42 +219,47 @@ pub fn run_pool_scaling(
             .as_ref()
             .map(|sp| sp.predicted_step_s * largest_plan.multiplies() as f64);
 
-        let (measured_s, shard_measured_s, steals) = match (&engine, measure) {
-            (Some(e), true) => {
-                let reqs: Vec<ExpmRequest> = powers
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &power)| ExpmRequest {
-                        id: i as u64 + 1,
-                        matrix: Matrix::random_spectral(n, 0.999, cfg.seed + i as u64),
-                        power,
-                        method: Method::Ours,
-                    })
-                    .collect();
-                let replies = e.execute_batch(reqs);
-                let mut per_device: std::collections::BTreeMap<String, f64> =
-                    std::collections::BTreeMap::new();
-                for (_, outcome) in replies {
-                    let resp = outcome?;
-                    for d in &resp.stats.per_device {
-                        *per_device.entry(d.device.clone()).or_insert(0.0) += d.wall_s;
+        let (measured_s, shard_measured_s, steals, bytes_copied, buffers_recycled) =
+            match (&engine, measure) {
+                (Some(e), true) => {
+                    let reqs: Vec<ExpmRequest> = powers
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &power)| ExpmRequest {
+                            id: i as u64 + 1,
+                            matrix: Matrix::random_spectral(n, 0.999, cfg.seed + i as u64),
+                            power,
+                            method: Method::Ours,
+                        })
+                        .collect();
+                    let replies = e.execute_batch(reqs);
+                    let mut per_device: std::collections::BTreeMap<String, f64> =
+                        std::collections::BTreeMap::new();
+                    let mut bytes = 0u64;
+                    let mut recycled = 0u64;
+                    for (_, outcome) in replies {
+                        let resp = outcome?;
+                        bytes += resp.stats.bytes_copied;
+                        recycled += resp.stats.buffers_recycled;
+                        for d in &resp.stats.per_device {
+                            *per_device.entry(d.device.clone()).or_insert(0.0) += d.wall_s;
+                        }
                     }
+                    let busiest = per_device.values().cloned().fold(0.0, f64::max);
+                    let shard_measured = match &shard_plan {
+                        Some(sp) => {
+                            let a = Matrix::random_spectral(n, 0.999, cfg.seed);
+                            let (_, stats) = e.expm_sharded(&a, &largest_plan, sp)?;
+                            Some(stats.wall_s)
+                        }
+                        None => None,
+                    };
+                    let steals: u64 =
+                        e.pool().metrics().devices.iter().map(|d| d.steals).sum();
+                    (Some(busiest), shard_measured, steals, Some(bytes), Some(recycled))
                 }
-                let busiest = per_device.values().cloned().fold(0.0, f64::max);
-                let shard_measured = match &shard_plan {
-                    Some(sp) => {
-                        let a = Matrix::random_spectral(n, 0.999, cfg.seed);
-                        let (_, stats) = e.expm_sharded(&a, &largest_plan, sp)?;
-                        Some(stats.wall_s)
-                    }
-                    None => None,
-                };
-                let steals: u64 =
-                    e.pool().metrics().devices.iter().map(|d| d.steals).sum();
-                (Some(busiest), shard_measured, steals)
-            }
-            _ => (None, None, 0),
-        };
+                _ => (None, None, 0, None, None),
+            };
 
         arms.push(ScalingArm {
             name: arm_name(devices),
@@ -258,6 +269,8 @@ pub fn run_pool_scaling(
             shard_predicted_s,
             shard_measured_s,
             steals,
+            bytes_copied,
+            buffers_recycled,
         });
     }
 
@@ -284,9 +297,14 @@ pub fn render_scaling(t: &ScalingTable) -> String {
         Some(v) => crate::bench::format_secs(v),
         None => "-".into(),
     };
+    let fmt_bytes = |v: Option<u64>| match v {
+        Some(b) if b >= 1 << 20 => format!("{:.1}MiB", b as f64 / (1 << 20) as f64),
+        Some(b) => format!("{b}B"),
+        None => "-".into(),
+    };
     let _ = writeln!(
         s,
-        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7} {:>10} {:>9}",
         "arm",
         "pred wall",
         "pred x",
@@ -294,11 +312,13 @@ pub fn render_scaling(t: &ScalingTable) -> String {
         "meas x",
         "shard pred",
         "shard meas",
-        "steals"
+        "steals",
+        "copied",
+        "recycled"
     );
     let _ = writeln!(
         s,
-        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+        "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7} {:>10} {:>9}",
         "single sim (baseline)",
         crate::bench::format_secs(t.baseline_predicted_s),
         "1.00",
@@ -306,6 +326,8 @@ pub fn render_scaling(t: &ScalingTable) -> String {
         if t.baseline_measured_s.is_some() { "1.00" } else { "-" },
         crate::bench::format_secs(t.baseline_shard_predicted_s),
         fmt_opt(t.baseline_shard_measured_s),
+        "-",
+        "-",
         "-"
     );
     for (i, arm) in t.arms.iter().enumerate() {
@@ -315,7 +337,7 @@ pub fn render_scaling(t: &ScalingTable) -> String {
         };
         let _ = writeln!(
             s,
-            "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7}",
+            "{:<22} {:>12} {:>9} {:>12} {:>9} {:>12} {:>12} {:>7} {:>10} {:>9}",
             arm.name,
             crate::bench::format_secs(arm.predicted_s),
             format!("{:.2}", t.speedup_pred(i)),
@@ -323,13 +345,19 @@ pub fn render_scaling(t: &ScalingTable) -> String {
             meas_x,
             fmt_opt(arm.shard_predicted_s),
             fmt_opt(arm.shard_measured_s),
-            arm.steals
+            arm.steals,
+            fmt_bytes(arm.bytes_copied),
+            match arm.buffers_recycled {
+                Some(r) => r.to_string(),
+                None => "-".into(),
+            }
         );
     }
     let _ = writeln!(
         s,
         "(workload = request-parallel makespan; shard = largest power tile-sharded, \
-         \"-\" = splitter falls back to its fastest member)"
+         \"-\" = splitter falls back to its fastest member; copied/recycled = the \
+         residency layer's host-edge bytes and arena hits over the measured workload)"
     );
     s
 }
@@ -389,6 +417,11 @@ mod tests {
         let got = t.arms[0].measured_s.unwrap();
         let ratio = (pred / got).max(got / pred);
         assert!(ratio < 1.2, "pred {pred} vs meas {got}");
+        // the measured run surfaces the residency counters: each of the 4
+        // device-resident requests copies exactly its two host edges
+        let bytes = t.arms[0].bytes_copied.expect("measured run counts bytes");
+        assert_eq!(bytes, 4 * 2 * 128 * 128 * 4);
+        assert!(t.arms[0].buffers_recycled.expect("measured") > 0);
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
-//!   square-and-multiply launch scheduler ([`plan`]), a pluggable execution
-//!   layer ([`runtime::Backend`]) replayed by a generic engine
+//!   square-and-multiply launch scheduler ([`plan`]) emitting the typed
+//!   kernel IR ([`runtime::KernelOp`]), a pluggable execution layer
+//!   ([`runtime::Backend`]) with a buffer-residency arena
+//!   ([`runtime::BufferArena`]: zero-copy uploads, recycled launch
+//!   outputs, residency counters) replayed by a generic engine
 //!   ([`runtime::Engine`]), a serving coordinator with a dynamic batcher
 //!   ([`coordinator`]) and a TCP front-end ([`server`]).
 //! * **Layer 2/1 (python/compile)** — JAX compute graphs calling the tiled
@@ -38,9 +41,21 @@
 //!                    │                                                         │
 //!    Engine<B>  ◀────┤ single-backend path          pool path ├────▶ PoolEngine │
 //!        │           └─────────────────────────────────────────────────┬───────┘
+//!     KernelOp (typed launch IR: Matmul, SqMul, Mma(g), …)              │
+//!        │                                                              │
 //!   CpuBackend │ SimBackend │ PjrtBackend              DevicePool: [cpu#0] [sim#1] [sim#2] …
-//!   (one device, device-resident plans)                 tile shards + request stealing
+//!        │      (one device, device-resident plans)     tile shards + request stealing
+//!   BufferArena (zero-copy upload, recycled outputs,
+//!                bytes_copied / buffers_recycled / peak_resident stats)
 //! ```
+//!
+//! The launch vocabulary is **typed end to end**: every backend, the
+//! engine and the pool dispatch on [`runtime::KernelOp`] — op name
+//! strings exist only at the artifact/wire edge
+//! ([`runtime::KernelOp::name`] / [`runtime::KernelOp::parse`]), so
+//! adding a kernel is one enum variant, checked by the compiler at every
+//! site, instead of string matches scattered across five files. See the
+//! op table in [`runtime::op`].
 //!
 //! Quick start (pure Rust, runs as-is):
 //!
@@ -54,6 +69,8 @@
 //! // device-resident discipline: log(N) launches, TWO host crossings
 //! assert_eq!(stats.launches, plan.launches());
 //! assert_eq!((stats.h2d_transfers, stats.d2h_transfers), (1, 1));
+//! // …whose bytes are ALL the data path copies (buffer-residency layer)
+//! assert_eq!(stats.bytes_copied, 2 * 64 * 64 * 4);
 //! assert!(pow.is_finite());
 //! println!("A^512 in {} launches ({} multiplies)", stats.launches, stats.multiplies);
 //! ```
@@ -107,8 +124,9 @@ pub mod prelude {
     pub use crate::plan::{Plan, PlanKind, Step};
     pub use crate::pool::{DevicePool, PoolDeviceKind, PoolEngine, TileGrid};
     pub use crate::runtime::{
-        artifacts::ArtifactRegistry, AnyBackend, AnyEngine, Backend, BackendKind, CpuBackend,
-        CpuEngine, DeviceStats, Engine, SimBackend, SimEngine, Variant,
+        artifacts::ArtifactRegistry, AnyBackend, AnyEngine, Backend, BackendKind, BufferArena,
+        CpuBackend, CpuEngine, DeviceStats, Engine, KernelOp, ResidencyStats, SimBackend,
+        SimEngine, Variant,
     };
     pub use crate::simulator::device::DeviceSpec;
 }

@@ -10,10 +10,19 @@ pub const DEFAULT_BLOCK: usize = 64;
 
 /// `c = a * b` with `block x block` tiles (i-k-j inside each tile).
 pub fn matmul_blocked(a: &Matrix, b: &Matrix, block: usize) -> Matrix {
+    let mut c = Matrix::zeros(a.n());
+    matmul_blocked_into(a, b, block, &mut c);
+    c
+}
+
+/// In-place form of [`matmul_blocked`]: zeroes then accumulates into `c`
+/// (which must not alias `a` or `b`) without allocating.
+pub fn matmul_blocked_into(a: &Matrix, b: &Matrix, block: usize, c: &mut Matrix) {
     let n = a.n();
     assert_eq!(n, b.n(), "matmul_blocked: size mismatch");
+    assert_eq!(n, c.n(), "matmul_blocked: output size mismatch");
     assert!(block > 0, "block must be positive");
-    let mut c = Matrix::zeros(n);
+    c.data_mut().fill(0.0);
     let bs = block.min(n);
     for ii in (0..n).step_by(bs) {
         let i_end = (ii + bs).min(n);
@@ -34,12 +43,16 @@ pub fn matmul_blocked(a: &Matrix, b: &Matrix, block: usize) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// [`matmul_blocked`] with [`DEFAULT_BLOCK`] (fn-pointer friendly).
 pub fn matmul_blocked_default(a: &Matrix, b: &Matrix) -> Matrix {
     matmul_blocked(a, b, DEFAULT_BLOCK)
+}
+
+/// [`matmul_blocked_into`] with [`DEFAULT_BLOCK`] (fn-pointer friendly).
+pub fn matmul_blocked_default_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_blocked_into(a, b, DEFAULT_BLOCK, c);
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
-use crate::linalg::{blocked, naive, threaded, transposed, MatmulFn};
+use crate::linalg::{blocked, naive, threaded, transposed, MatmulFn, MatmulIntoFn};
 use crate::plan::Plan;
 
 /// Which CPU matmul backs the exponentiation.
@@ -30,6 +30,18 @@ impl CpuAlgo {
             CpuAlgo::Ikj => transposed::matmul_ikj,
             CpuAlgo::Blocked => blocked::matmul_blocked_default,
             CpuAlgo::Threaded => threaded::matmul_threaded,
+        }
+    }
+
+    /// The in-place (output-buffer) form of this variant — what the
+    /// buffer-residency layer launches through.
+    pub fn matmul_into(self) -> MatmulIntoFn {
+        match self {
+            CpuAlgo::Naive => naive::matmul_naive_into,
+            CpuAlgo::Transposed => transposed::matmul_transposed_into,
+            CpuAlgo::Ikj => transposed::matmul_ikj_into,
+            CpuAlgo::Blocked => blocked::matmul_blocked_default_into,
+            CpuAlgo::Threaded => threaded::matmul_threaded_into,
         }
     }
 
@@ -158,6 +170,18 @@ mod tests {
         ] {
             let got = expm(&a, 9, algo).unwrap();
             assert!(got.approx_eq(&want, 1e-3, 1e-3), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn in_place_forms_match_allocating_forms() {
+        let a = Matrix::random(24, 41);
+        let b = Matrix::random(24, 42);
+        for algo in CpuAlgo::all() {
+            let want = (algo.matmul())(&a, &b);
+            let mut c = Matrix::random(24, 43); // stale contents must vanish
+            (algo.matmul_into())(&a, &b, &mut c);
+            assert_eq!(c, want, "{}", algo.name());
         }
     }
 

@@ -20,6 +20,13 @@ pub use matrix::Matrix;
 /// A CPU matmul implementation: `c = a * b` for square matrices.
 pub type MatmulFn = fn(&Matrix, &Matrix) -> Matrix;
 
+/// An in-place CPU matmul: writes `a * b` into a caller-provided output
+/// buffer (fully overwritten; must not alias the operands). This is the
+/// zero-allocation form the buffer-residency layer launches through —
+/// outputs come from a recycling [`crate::runtime::BufferArena`] instead
+/// of a fresh `n×n` allocation per launch.
+pub type MatmulIntoFn = fn(&Matrix, &Matrix, &mut Matrix);
+
 /// All CPU matmul variants, for sweeps and dispatch by name.
 pub fn matmul_variants() -> Vec<(&'static str, MatmulFn)> {
     vec![

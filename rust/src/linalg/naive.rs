@@ -9,9 +9,17 @@ use crate::linalg::matrix::Matrix;
 
 /// `c = a * b` via the classic i-j-k loop (paper §4.1, verbatim structure).
 pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.n());
+    matmul_naive_into(a, b, &mut c);
+    c
+}
+
+/// In-place form of [`matmul_naive`]: fully overwrites `c` (which must be
+/// `n×n` and must not alias `a` or `b`) without allocating.
+pub fn matmul_naive_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let n = a.n();
     assert_eq!(n, b.n(), "matmul_naive: size mismatch");
-    let mut c = Matrix::zeros(n);
+    assert_eq!(n, c.n(), "matmul_naive: output size mismatch");
     for i in 0..n {
         for j in 0..n {
             let mut acc = 0.0f32;
@@ -21,7 +29,6 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
             c.set(i, j, acc);
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -55,5 +62,21 @@ mod tests {
     #[should_panic]
     fn size_mismatch_panics() {
         matmul_naive(&Matrix::zeros(4), &Matrix::zeros(8));
+    }
+
+    #[test]
+    fn into_overwrites_stale_output() {
+        let a = Matrix::random(8, 3);
+        let b = Matrix::random(8, 4);
+        let mut c = Matrix::random(8, 5); // stale garbage must vanish
+        matmul_naive_into(&a, &b, &mut c);
+        assert_eq!(c, matmul_naive(&a, &b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn into_rejects_bad_output_size() {
+        let mut c = Matrix::zeros(5);
+        matmul_naive_into(&Matrix::zeros(4), &Matrix::zeros(4), &mut c);
     }
 }

@@ -15,10 +15,25 @@ pub fn matmul_threaded(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// [`matmul_threaded`] with an explicit thread count (thread-scaling bench).
 pub fn matmul_threaded_with(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    let mut c = Matrix::zeros(a.n());
+    matmul_threaded_with_into(a, b, threads, &mut c);
+    c
+}
+
+/// In-place form of [`matmul_threaded`]: zeroes then accumulates into `c`
+/// (which must not alias `a` or `b`) without allocating.
+pub fn matmul_threaded_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    matmul_threaded_with_into(a, b, default_threads(), c);
+}
+
+/// In-place form of [`matmul_threaded_with`].
+pub fn matmul_threaded_with_into(a: &Matrix, b: &Matrix, threads: usize, c: &mut Matrix) {
     let n = a.n();
     assert_eq!(n, b.n(), "matmul_threaded: size mismatch");
-    let mut out = vec![0.0f32; n * n];
-    parallel_rows(&mut out, n, threads, |i, crow| {
+    assert_eq!(n, c.n(), "matmul_threaded: output size mismatch");
+    let out = c.data_mut();
+    out.fill(0.0);
+    parallel_rows(out, n, threads, |i, crow| {
         for k in 0..n {
             let aik = a.get(i, k);
             if aik == 0.0 {
@@ -30,7 +45,6 @@ pub fn matmul_threaded_with(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
             }
         }
     });
-    Matrix::from_vec(n, out).expect("threaded: internal size error")
 }
 
 #[cfg(test)]

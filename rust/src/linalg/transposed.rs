@@ -9,10 +9,18 @@ use crate::linalg::matrix::Matrix;
 /// `c = a * b` after transposing `b`, so the inner loop walks two
 /// contiguous rows (stride-1 on both operands).
 pub fn matmul_transposed(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.n());
+    matmul_transposed_into(a, b, &mut c);
+    c
+}
+
+/// In-place form of [`matmul_transposed`]: fully overwrites `c` without
+/// allocating the output (the transpose scratch of `b` still allocates).
+pub fn matmul_transposed_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let n = a.n();
     assert_eq!(n, b.n(), "matmul_transposed: size mismatch");
+    assert_eq!(n, c.n(), "matmul_transposed: output size mismatch");
     let bt = b.transpose();
-    let mut c = Matrix::zeros(n);
     for i in 0..n {
         let arow = a.row(i);
         for j in 0..n {
@@ -24,15 +32,23 @@ pub fn matmul_transposed(a: &Matrix, b: &Matrix) -> Matrix {
             c.set(i, j, acc);
         }
     }
-    c
 }
 
 /// `i-k-j` loop order: the inner loop streams a row of `b` and a row of
 /// `c` with stride 1; no transpose needed.
 pub fn matmul_ikj(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.n());
+    matmul_ikj_into(a, b, &mut c);
+    c
+}
+
+/// In-place form of [`matmul_ikj`]: zeroes then accumulates into `c`
+/// (which must not alias `a` or `b`) without allocating.
+pub fn matmul_ikj_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let n = a.n();
     assert_eq!(n, b.n(), "matmul_ikj: size mismatch");
-    let mut c = Matrix::zeros(n);
+    assert_eq!(n, c.n(), "matmul_ikj: output size mismatch");
+    c.data_mut().fill(0.0);
     for i in 0..n {
         for k in 0..n {
             let aik = a.get(i, k);
@@ -46,7 +62,6 @@ pub fn matmul_ikj(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -68,6 +83,19 @@ mod tests {
         let b = Matrix::random(32, 6);
         let want = matmul_naive(&a, &b);
         assert!(matmul_ikj(&a, &b).approx_eq(&want, 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn into_forms_overwrite_stale_output() {
+        let a = Matrix::random(16, 1);
+        let b = Matrix::random(16, 2);
+        let want = matmul_naive(&a, &b);
+        let mut c = Matrix::random(16, 3);
+        matmul_transposed_into(&a, &b, &mut c);
+        assert!(c.approx_eq(&want, 1e-4, 1e-5));
+        let mut c = Matrix::random(16, 4);
+        matmul_ikj_into(&a, &b, &mut c);
+        assert!(c.approx_eq(&want, 1e-4, 1e-5));
     }
 
     #[test]

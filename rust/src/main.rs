@@ -39,6 +39,10 @@ COMMANDS:
                                        [--n SIZE] [--power N]
                or the pool scaling run --pool-scaling [--n SIZE] [--measure]
                                        [--max-devices K]
+               or the residency ablation --ablate-residency [--n SIZE]
+                                       [--steps K] [--power N] [--measure]
+                                       (clone-per-launch vs resident buffers
+                                        at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
   bench-report all tables, simulation-only summary
 
@@ -244,6 +248,10 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         resp.stats.d2h_transfers,
         matexp::bench::format_secs(resp.stats.wall_s),
     );
+    println!(
+        "residency: {} bytes copied, {} buffers recycled, peak {} resident bytes",
+        resp.stats.bytes_copied, resp.stats.buffers_recycled, resp.stats.peak_resident_bytes,
+    );
     for d in &resp.stats.per_device {
         println!(
             "  {:<8} launches: {}  multiplies: {}  transfers: {}h2d/{}d2h  busy: {}",
@@ -260,6 +268,42 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    if args.has("ablate-residency") {
+        let steps: usize = args.get_parsed_or("steps", 10)?;
+        let power: u64 = args.get_parsed_or("power", 1024)?;
+        let measure = args.has("measure");
+        let ns: Vec<usize> = match args.get_parsed::<usize>("n")? {
+            Some(n) => vec![n],
+            None => vec![256, 512, 1024],
+        };
+        args.reject_unknown()?;
+        for &n in &ns {
+            let arms = ablations::residency_data_path_arms(n, steps, cfg.seed);
+            print!(
+                "{}",
+                report::render_ablation(
+                    &format!("A5 residency data path (n={n}, {steps}-step chain)"),
+                    &arms
+                )
+            );
+            let speedup = arms[0].wall_s / arms[1].wall_s.max(f64::MIN_POSITIVE);
+            println!("resident data path is {speedup:.1}x faster than clone-per-launch\n");
+            if measure {
+                let mut engine = AnyEngine::from_config(cfg)?;
+                let engine_arms =
+                    ablations::residency_engine_arms(&mut engine, n, power, cfg.seed)?;
+                print!(
+                    "{}",
+                    report::render_ablation(
+                        &format!("A5 residency, full engine (n={n}, N={power})"),
+                        &engine_arms
+                    )
+                );
+                println!();
+            }
+        }
+        return Ok(());
+    }
     if args.has("pool-scaling") {
         let n: usize = args.get_parsed_or("n", 1024)?;
         let measure = args.has("measure");

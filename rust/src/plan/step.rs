@@ -1,8 +1,11 @@
 //! Plan steps: the launch vocabulary the runtime engine understands.
 //!
-//! Each launch-step maps 1:1 onto an AOT executable (`matmul`, `sqmul`,
-//! `square2`, `square4`); `Copy` is host-side buffer aliasing and costs
-//! nothing on the device.
+//! Each launch-step maps 1:1 onto a typed kernel
+//! ([`crate::runtime::KernelOp`], backed by an AOT executable on the PJRT
+//! backend); `Copy` is host-side buffer aliasing and costs nothing on the
+//! device.
+
+use crate::runtime::op::KernelOp;
 
 /// One step of a [`crate::plan::Plan`], over register indices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,14 +59,14 @@ impl Step {
         }
     }
 
-    /// Artifact op name this step needs (`None` for host-side steps).
-    pub fn op_name(&self) -> Option<String> {
+    /// Kernel this step launches (`None` for host-side steps).
+    pub fn op(&self) -> Option<KernelOp> {
         match self {
             Step::Copy { .. } => None,
-            Step::Mul { lhs, rhs, .. } if lhs == rhs => Some("square".into()),
-            Step::Mul { .. } => Some("matmul".into()),
-            Step::SqMul { .. } => Some("sqmul".into()),
-            Step::SquareChain { k, .. } => Some(format!("square{k}")),
+            Step::Mul { lhs, rhs, .. } if lhs == rhs => Some(KernelOp::Square),
+            Step::Mul { .. } => Some(KernelOp::Matmul),
+            Step::SqMul { .. } => Some(KernelOp::SqMul),
+            Step::SquareChain { k, .. } => Some(KernelOp::SquareChain(*k)),
         }
     }
 }
@@ -82,12 +85,23 @@ mod tests {
     }
 
     #[test]
-    fn op_names() {
-        assert_eq!(Step::Mul { dst: 1, lhs: 0, rhs: 0 }.op_name().unwrap(), "square");
-        assert_eq!(Step::Mul { dst: 1, lhs: 1, rhs: 0 }.op_name().unwrap(), "matmul");
-        assert_eq!(Step::SqMul { acc: 1, base: 0 }.op_name().unwrap(), "sqmul");
-        assert_eq!(Step::SquareChain { reg: 0, k: 2 }.op_name().unwrap(), "square2");
-        assert!(Step::Copy { dst: 1, src: 0 }.op_name().is_none());
+    fn op_per_step() {
+        assert_eq!(Step::Mul { dst: 1, lhs: 0, rhs: 0 }.op().unwrap(), KernelOp::Square);
+        assert_eq!(Step::Mul { dst: 1, lhs: 1, rhs: 0 }.op().unwrap(), KernelOp::Matmul);
+        assert_eq!(Step::SqMul { acc: 1, base: 0 }.op().unwrap(), KernelOp::SqMul);
+        assert_eq!(
+            Step::SquareChain { reg: 0, k: 2 }.op().unwrap(),
+            KernelOp::SquareChain(2)
+        );
+        assert!(Step::Copy { dst: 1, src: 0 }.op().is_none());
+        // step multiplies agree with the kernel's own accounting
+        for step in [
+            Step::Mul { dst: 1, lhs: 0, rhs: 0 },
+            Step::SqMul { acc: 1, base: 0 },
+            Step::SquareChain { reg: 0, k: 4 },
+        ] {
+            assert_eq!(step.multiplies(), step.op().unwrap().multiplies());
+        }
     }
 
     #[test]

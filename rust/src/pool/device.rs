@@ -20,9 +20,10 @@ use crate::error::Result;
 use crate::linalg::matrix::Matrix;
 use crate::plan::Plan;
 use crate::pool::PoolDeviceKind;
-use crate::runtime::backend::op_multiplies;
 use crate::runtime::engine::DeviceStats;
-use crate::runtime::{AnyBackend, AnyBuffer, Backend, CpuBackend, Engine, ExecStats, SimBackend};
+use crate::runtime::{
+    AnyBackend, AnyBuffer, Backend, CpuBackend, Engine, ExecStats, KernelOp, SimBackend,
+};
 
 /// Device-resident tiles a worker keeps between steps (1 MiB per tile at
 /// t=512; the cap bounds memory while covering a device's share of one
@@ -34,8 +35,9 @@ const TILE_CACHE_CAP: usize = 32;
 pub(crate) type TileKey = (u64, usize, usize);
 
 pub(crate) struct TileJob {
-    /// `mma{g}` (or `matmul`/`square` for a 1-tile grid).
-    pub op: String,
+    /// [`KernelOp::Mma`] of the grid width (plain data, like the rest of
+    /// the job — no strings cross the thread boundary).
+    pub op: KernelOp,
     /// Tile side.
     pub t: usize,
     /// Operand tiles in launch order, each with its cache key.
@@ -112,6 +114,10 @@ pub struct DeviceAccum {
     pub steals: u64,
     pub launches: u64,
     pub busy_s: f64,
+    /// Host-edge bytes this device's data path copied.
+    pub bytes_copied: u64,
+    /// Launch outputs this device served from recycled arena buffers.
+    pub buffers_recycled: u64,
 }
 
 /// The shared per-device queues + shutdown flag.
@@ -249,11 +255,13 @@ pub(crate) fn device_loop(
     let mut cache = TileCache::new(TILE_CACHE_CAP);
     // accounting happens BEFORE the reply is sent, so a caller that
     // collected every reply reads consistent pool metrics
-    let update = |launches: u64, busy_s: f64, stolen: bool| {
+    let update = |cost: JobCost, stolen: bool| {
         let mut acc = accum[idx].lock().expect("pool accum poisoned");
         acc.jobs += 1;
-        acc.launches += launches;
-        acc.busy_s += busy_s;
+        acc.launches += cost.launches;
+        acc.busy_s += cost.busy_s;
+        acc.bytes_copied += cost.bytes_copied;
+        acc.buffers_recycled += cost.buffers_recycled;
         if stolen {
             acc.steals += 1;
         }
@@ -263,44 +271,71 @@ pub(crate) fn device_loop(
             JobPayload::Tile(tj) => {
                 let reply = tj.reply.clone();
                 let done = run_tile(&mut engine, &mut cache, idx, &name, tj);
-                update(done.stats.launches as u64, done.stats.wall_s, stolen);
+                update(JobCost::of_device(&done.stats), stolen);
                 let _ = reply.send(done);
             }
             JobPayload::PlanExec(pj) => {
                 let result = engine.expm(&pj.a, &pj.plan);
-                let (launches, busy) = exec_cost(&result);
-                update(launches, busy, stolen);
+                update(JobCost::of_exec(&result), stolen);
                 let _ = pj.reply.send(ExecDone { device: idx, result });
             }
             JobPayload::PackedExec(pj) => {
                 let result = engine.expm_packed(&pj.a, pj.power);
-                let (launches, busy) = exec_cost(&result);
-                update(launches, busy, stolen);
+                update(JobCost::of_exec(&result), stolen);
                 let _ = pj.reply.send(ExecDone { device: idx, result });
             }
             JobPayload::Request(rj) => {
                 let result =
                     crate::coordinator::worker::execute_request(&mut engine, &cfg, &rj.req);
-                let (launches, busy) = match &result {
-                    Ok(resp) => (resp.stats.launches as u64, resp.stats.wall_s),
-                    Err(_) => (0, 0.0),
+                let cost = match &result {
+                    Ok(resp) => JobCost::of_stats(&resp.stats),
+                    Err(_) => JobCost::default(),
                 };
-                update(launches, busy, stolen);
+                update(cost, stolen);
                 let _ = rj.reply.send(RequestDone { device: idx, id: rj.req.id, result });
             }
             JobPayload::Calibrate(cj) => {
                 let result = run_calibration(&mut engine, cj.t);
-                update(1, 0.0, stolen);
+                update(JobCost { launches: 1, ..JobCost::default() }, stolen);
                 let _ = cj.reply.send(result);
             }
         }
     }
 }
 
-fn exec_cost(result: &Result<(Matrix, ExecStats)>) -> (u64, f64) {
-    match result {
-        Ok((_, stats)) => (stats.launches as u64, stats.wall_s),
-        Err(_) => (0, 0.0),
+/// What one job cost this device (for the accumulated pool metrics).
+#[derive(Default)]
+struct JobCost {
+    launches: u64,
+    busy_s: f64,
+    bytes_copied: u64,
+    buffers_recycled: u64,
+}
+
+impl JobCost {
+    fn of_stats(stats: &ExecStats) -> JobCost {
+        JobCost {
+            launches: stats.launches as u64,
+            busy_s: stats.wall_s,
+            bytes_copied: stats.bytes_copied,
+            buffers_recycled: stats.buffers_recycled,
+        }
+    }
+
+    fn of_device(stats: &DeviceStats) -> JobCost {
+        JobCost {
+            launches: stats.launches as u64,
+            busy_s: stats.wall_s,
+            bytes_copied: stats.bytes_copied,
+            buffers_recycled: stats.buffers_recycled,
+        }
+    }
+
+    fn of_exec(result: &Result<(Matrix, ExecStats)>) -> JobCost {
+        match result {
+            Ok((_, stats)) => JobCost::of_stats(stats),
+            Err(_) => JobCost::default(),
+        }
     }
 }
 
@@ -318,30 +353,35 @@ fn run_tile(
     let mut stats = DeviceStats { device: name.to_string(), ..DeviceStats::default() };
     let result = (|| -> Result<Matrix> {
         let be = engine.backend_mut();
-        be.prepare(&op, t)?;
+        be.prepare(op, t)?;
         let _ = be.take_sim_time();
+        let _ = be.take_residency();
         let t0 = Instant::now();
         let mut fresh: HashMap<TileKey, AnyBuffer> = HashMap::new();
         let mut bufs = Vec::with_capacity(inputs.len());
-        for (key, data) in &inputs {
-            let buf = if let Some(b) = cache.get(key) {
+        for (key, data) in inputs {
+            let buf = if let Some(b) = cache.get(&key) {
                 b.clone() // device-resident from the previous step: no upload
-            } else if let Some(b) = fresh.get(key) {
+            } else if let Some(b) = fresh.get(&key) {
                 b.clone() // duplicate operand within this launch
             } else {
                 let b = be.upload(data)?;
                 stats.h2d_transfers += 1;
-                fresh.insert(*key, b.clone());
+                fresh.insert(key, b.clone());
                 b
             };
             bufs.push(buf);
         }
-        let out = be.launch(&op, t, &bufs)?;
+        let out = be.launch(op, t, &bufs)?;
         stats.launches += 1;
-        stats.multiplies += op_multiplies(&op)?;
+        stats.multiplies += op.multiplies();
         let m = be.download(&out, t)?;
         stats.d2h_transfers += 1;
         stats.wall_s = be.take_sim_time().unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let residency = be.take_residency();
+        stats.bytes_copied = residency.bytes_copied;
+        stats.buffers_recycled = residency.buffers_recycled;
+        stats.peak_resident_bytes = residency.peak_resident_bytes;
         cache.insert(out_key, out);
         Ok(m)
     })();
@@ -352,15 +392,15 @@ fn run_tile(
 /// download) at tile side `t` on this device.
 fn run_calibration(engine: &mut Engine<AnyBackend>, t: usize) -> Result<f64> {
     let be = engine.backend_mut();
-    be.prepare("matmul", t)?;
+    be.prepare(KernelOp::Matmul, t)?;
     let a = Matrix::random(t, 0xCA11B8A7E);
     let b = Matrix::random(t, 0xCA11B8A7F);
-    let ba = be.upload(&a)?;
-    let bb = be.upload(&b)?;
-    let _ = be.launch("matmul", t, &[ba.clone(), bb.clone()])?; // warm
+    let ba = be.upload(a)?;
+    let bb = be.upload(b)?;
+    let _ = be.launch(KernelOp::Matmul, t, &[ba.clone(), bb.clone()])?; // warm
     let _ = be.take_sim_time();
     let t0 = Instant::now();
-    let out = be.launch("matmul", t, &[ba, bb])?;
+    let out = be.launch(KernelOp::Matmul, t, &[ba, bb])?;
     let _ = be.download(&out, t)?;
     let secs = be.take_sim_time().unwrap_or_else(|| t0.elapsed().as_secs_f64());
     Ok(secs.max(1e-9))
@@ -373,7 +413,12 @@ mod tests {
     #[test]
     fn tile_cache_evicts_fifo() {
         let mut c = TileCache::new(2);
-        let buf = || AnyBuffer::Host(crate::runtime::CpuBuffer::Mat(std::rc::Rc::new(Matrix::zeros(2))));
+        let arena = crate::runtime::BufferArena::new();
+        let buf = || {
+            AnyBuffer::Host(crate::runtime::CpuBuffer::Mat(std::rc::Rc::new(
+                arena.adopt(Matrix::zeros(2)),
+            )))
+        };
         c.insert((1, 0, 0), buf());
         c.insert((2, 0, 0), buf());
         assert!(c.get(&(1, 0, 0)).is_some());

@@ -25,6 +25,7 @@ use crate::pool::device::{
 use crate::pool::partition::TileGrid;
 use crate::pool::PoolDeviceKind;
 use crate::runtime::engine::{DeviceStats, ExecStats};
+use crate::runtime::KernelOp;
 
 /// Tile side of the CPU micro-calibration probe (small enough to be
 /// instant even in debug builds, big enough to measure the cubic term).
@@ -46,6 +47,10 @@ pub struct DeviceUtil {
     pub launches: u64,
     /// Seconds it was busy (simulated on timing-model devices).
     pub busy_s: f64,
+    /// Host-edge bytes its data path copied.
+    pub bytes_copied: u64,
+    /// Launch outputs it served from recycled arena buffers.
+    pub buffers_recycled: u64,
     /// Jobs currently waiting in its queue.
     pub queue_depth: usize,
 }
@@ -252,7 +257,7 @@ impl DevicePool {
                 self.device_count()
             )));
         }
-        let op = format!("mma{g}");
+        let op = KernelOp::Mma(g as u32);
         let (tx, rx) = sync_channel::<TileDone>(grid.tiles());
         for bi in 0..g {
             for bj in 0..g {
@@ -270,7 +275,7 @@ impl DevicePool {
                     device,
                     Job {
                         payload: JobPayload::Tile(TileJob {
-                            op: op.clone(),
+                            op,
                             t: grid.t(),
                             inputs,
                             out_key: (out_key, bi, bj),
@@ -295,6 +300,8 @@ impl DevicePool {
             stats.multiplies += done.stats.multiplies;
             stats.h2d_transfers += done.stats.h2d_transfers;
             stats.d2h_transfers += done.stats.d2h_transfers;
+            stats.bytes_copied += done.stats.bytes_copied;
+            stats.buffers_recycled += done.stats.buffers_recycled;
             device_wall[done.device] += done.stats.wall_s;
             stats.merge_device(&done.stats);
             match done.result {
@@ -310,6 +317,12 @@ impl DevicePool {
             return Err(e);
         }
         stats.wall_s = device_wall.iter().cloned().fold(0.0, f64::max);
+        // devices hold their tile buffers concurrently, so the pool's
+        // resident high-water mark is the SUM of per-device peaks (each
+        // already the max over that device's jobs), not the busiest
+        // device's peak alone
+        stats.peak_resident_bytes =
+            stats.per_device.iter().map(|d| d.peak_resident_bytes).sum();
         Ok((grid.assemble(&tiles)?, stats))
     }
 
@@ -424,6 +437,9 @@ impl DevicePool {
             multiplies: stats.multiplies,
             h2d_transfers: stats.h2d_transfers,
             d2h_transfers: stats.d2h_transfers,
+            bytes_copied: stats.bytes_copied,
+            buffers_recycled: stats.buffers_recycled,
+            peak_resident_bytes: stats.peak_resident_bytes,
             wall_s: stats.wall_s,
         }];
         stats
@@ -446,6 +462,8 @@ impl DevicePool {
                     steals: acc.steals,
                     launches: acc.launches,
                     busy_s: acc.busy_s,
+                    bytes_copied: acc.bytes_copied,
+                    buffers_recycled: acc.buffers_recycled,
                     queue_depth: depths.get(i).copied().unwrap_or(0),
                 }
             })

@@ -8,8 +8,9 @@
 use crate::config::MatexpConfig;
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
-use crate::runtime::backend::{Backend, SplitPair};
+use crate::runtime::backend::{Backend, ResidencyStats, SplitPair};
 use crate::runtime::cpu::{CpuBackend, CpuBuffer};
+use crate::runtime::op::KernelOp;
 use crate::runtime::sim::SimBackend;
 use crate::runtime::BackendKind;
 
@@ -45,8 +46,24 @@ impl AnyBuffer {
         }
     }
 
+    fn into_host(self) -> Result<CpuBuffer> {
+        #[allow(unreachable_patterns, clippy::match_single_binding)]
+        match self {
+            AnyBuffer::Host(b) => Ok(b),
+            _ => Err(MatexpError::Backend("buffer belongs to a different backend".into())),
+        }
+    }
+
     #[cfg(feature = "xla")]
     fn pjrt(&self) -> Result<&std::rc::Rc<xla::PjRtBuffer>> {
+        match self {
+            AnyBuffer::Pjrt(b) => Ok(b),
+            _ => Err(MatexpError::Backend("buffer belongs to a different backend".into())),
+        }
+    }
+
+    #[cfg(feature = "xla")]
+    fn into_pjrt(self) -> Result<std::rc::Rc<xla::PjRtBuffer>> {
         match self {
             AnyBuffer::Pjrt(b) => Ok(b),
             _ => Err(MatexpError::Backend("buffer belongs to a different backend".into())),
@@ -130,7 +147,7 @@ impl Backend for AnyBackend {
         }
     }
 
-    fn prepare(&mut self, op: &str, n: usize) -> Result<()> {
+    fn prepare(&mut self, op: KernelOp, n: usize) -> Result<()> {
         match self {
             AnyBackend::Cpu(b) => b.prepare(op, n),
             AnyBackend::Sim(b) => b.prepare(op, n),
@@ -139,7 +156,7 @@ impl Backend for AnyBackend {
         }
     }
 
-    fn upload(&mut self, m: &Matrix) -> Result<AnyBuffer> {
+    fn upload(&mut self, m: Matrix) -> Result<AnyBuffer> {
         match self {
             AnyBackend::Cpu(b) => Ok(AnyBuffer::Host(b.upload(m)?)),
             AnyBackend::Sim(b) => Ok(AnyBuffer::Host(b.upload(m)?)),
@@ -157,7 +174,7 @@ impl Backend for AnyBackend {
         }
     }
 
-    fn launch(&mut self, op: &str, n: usize, inputs: &[AnyBuffer]) -> Result<AnyBuffer> {
+    fn launch(&mut self, op: KernelOp, n: usize, inputs: &[AnyBuffer]) -> Result<AnyBuffer> {
         match self {
             AnyBackend::Cpu(b) => Ok(AnyBuffer::Host(b.launch(op, n, &host_inputs(inputs)?)?)),
             AnyBackend::Sim(b) => Ok(AnyBuffer::Host(b.launch(op, n, &host_inputs(inputs)?)?)),
@@ -166,7 +183,7 @@ impl Backend for AnyBackend {
         }
     }
 
-    fn split_pair(&mut self, buf: &AnyBuffer, n: usize) -> Result<SplitPair<AnyBuffer>> {
+    fn split_pair(&mut self, buf: AnyBuffer, n: usize) -> Result<SplitPair<AnyBuffer>> {
         fn wrap<B, F: Fn(B) -> AnyBuffer>(s: SplitPair<B>, f: F) -> SplitPair<AnyBuffer> {
             SplitPair {
                 first: f(s.first),
@@ -176,10 +193,10 @@ impl Backend for AnyBackend {
             }
         }
         match self {
-            AnyBackend::Cpu(b) => Ok(wrap(b.split_pair(buf.host()?, n)?, AnyBuffer::Host)),
-            AnyBackend::Sim(b) => Ok(wrap(b.split_pair(buf.host()?, n)?, AnyBuffer::Host)),
+            AnyBackend::Cpu(b) => Ok(wrap(b.split_pair(buf.into_host()?, n)?, AnyBuffer::Host)),
+            AnyBackend::Sim(b) => Ok(wrap(b.split_pair(buf.into_host()?, n)?, AnyBuffer::Host)),
             #[cfg(feature = "xla")]
-            AnyBackend::Pjrt(b) => Ok(wrap(b.split_pair(buf.pjrt()?, n)?, AnyBuffer::Pjrt)),
+            AnyBackend::Pjrt(b) => Ok(wrap(b.split_pair(buf.into_pjrt()?, n)?, AnyBuffer::Pjrt)),
         }
     }
 
@@ -198,6 +215,15 @@ impl Backend for AnyBackend {
             AnyBackend::Sim(b) => b.models_time(),
             #[cfg(feature = "xla")]
             AnyBackend::Pjrt(b) => b.models_time(),
+        }
+    }
+
+    fn take_residency(&mut self) -> ResidencyStats {
+        match self {
+            AnyBackend::Cpu(b) => b.take_residency(),
+            AnyBackend::Sim(b) => b.take_residency(),
+            #[cfg(feature = "xla")]
+            AnyBackend::Pjrt(b) => b.take_residency(),
         }
     }
 }
@@ -240,8 +266,8 @@ mod tests {
         cfg.backend = BackendKind::Cpu;
         let mut b = AnyBackend::from_config(&cfg).unwrap();
         let m = Matrix::random(8, 5);
-        let buf = b.upload(&m).unwrap();
-        let sq = b.launch("square", 8, &[buf]).unwrap();
+        let buf = b.upload(m.clone()).unwrap();
+        let sq = b.launch(KernelOp::Square, 8, &[buf]).unwrap();
         let want = crate::linalg::naive::matmul_naive(&m, &m);
         assert!(b.download(&sq, 8).unwrap().approx_eq(&want, 1e-4, 1e-4));
     }

@@ -1,0 +1,240 @@
+//! [`BufferArena`] — pooled `n×n` allocations plus the residency
+//! accounting behind [`super::backend::ResidencyStats`].
+//!
+//! The paper's §4.3 speedup is a *data-path* claim: operands stay
+//! device-resident, intermediates never round-trip, and a k-step squaring
+//! chain touches the host exactly twice. The arena is the host-side
+//! realization of that discipline for the pure-Rust backends:
+//!
+//! * [`BufferArena::adopt`] takes ownership of an uploaded matrix without
+//!   copying it;
+//! * [`BufferArena::alloc`] hands out an output buffer, reusing the
+//!   allocation of any same-sized buffer that was dropped earlier — plan
+//!   replay ping-pongs two resident buffers instead of allocating (and
+//!   faulting in) a fresh `n×n` block per step;
+//! * dropping the last [`std::rc::Rc`] clone of an [`ArenaMat`] returns
+//!   its allocation to the free list automatically.
+//!
+//! Every host↔device edge crossing is charged to `bytes_copied`; arena
+//! hits increment `buffers_recycled`; `peak_resident_bytes` tracks the
+//! high-water mark of live (in-use) buffer bytes.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::{Rc, Weak};
+
+use crate::linalg::matrix::Matrix;
+use crate::runtime::backend::ResidencyStats;
+
+/// Free buffers kept per element-count bucket; beyond this, dropped
+/// allocations are released to the OS (bounds arena growth under mixed
+/// sizes).
+const FREE_PER_SIZE_CAP: usize = 8;
+
+#[derive(Default)]
+struct ArenaInner {
+    /// Element count → reusable allocations (contents stale).
+    free: HashMap<usize, Vec<Vec<f32>>>,
+    /// Bytes currently held by live [`ArenaMat`]s.
+    live_bytes: u64,
+    /// High-water mark of `live_bytes` since the last [`BufferArena::take`].
+    peak_bytes: u64,
+    /// Host-edge bytes charged since the last take.
+    bytes_copied: u64,
+    /// Allocation requests served from the free list since the last take.
+    recycled: u64,
+}
+
+/// Recycling allocator for square matrix buffers (one per backend).
+#[derive(Default)]
+pub struct BufferArena {
+    inner: Rc<RefCell<ArenaInner>>,
+}
+
+impl BufferArena {
+    pub fn new() -> BufferArena {
+        BufferArena::default()
+    }
+
+    fn on_live(inner: &mut ArenaInner, bytes: u64) {
+        inner.live_bytes += bytes;
+        inner.peak_bytes = inner.peak_bytes.max(inner.live_bytes);
+    }
+
+    /// Take ownership of an existing matrix with **zero copy** (the
+    /// caller's clone at the host edge — if any — is charged separately
+    /// via [`BufferArena::count_copied`]).
+    pub fn adopt(&self, m: Matrix) -> ArenaMat {
+        let bytes = (m.data().len() * std::mem::size_of::<f32>()) as u64;
+        Self::on_live(&mut self.inner.borrow_mut(), bytes);
+        ArenaMat { mat: Some(m), arena: Rc::downgrade(&self.inner) }
+    }
+
+    /// An `n×n` output buffer with **unspecified contents** — recycled
+    /// from the free list when possible, freshly allocated otherwise.
+    /// Callers must fully overwrite it (every `matmul_*_into` kernel
+    /// does).
+    pub fn alloc(&self, n: usize) -> ArenaMat {
+        let len = n * n;
+        let bytes = (len * std::mem::size_of::<f32>()) as u64;
+        let reused = {
+            let mut inner = self.inner.borrow_mut();
+            let reused = inner.free.get_mut(&len).and_then(Vec::pop);
+            if reused.is_some() {
+                inner.recycled += 1;
+            }
+            Self::on_live(&mut inner, bytes);
+            reused
+        };
+        let data = reused.unwrap_or_else(|| vec![0.0; len]);
+        let mat = Matrix::from_vec(n, data).expect("arena buckets are keyed by exact length");
+        ArenaMat { mat: Some(mat), arena: Rc::downgrade(&self.inner) }
+    }
+
+    /// Charge one host↔device edge crossing of `bytes`.
+    pub fn count_copied(&self, bytes: u64) {
+        self.inner.borrow_mut().bytes_copied += bytes;
+    }
+
+    /// Drain the counters accumulated since the last take; the resident
+    /// high-water mark restarts from the currently live bytes.
+    pub fn take(&self) -> ResidencyStats {
+        let mut inner = self.inner.borrow_mut();
+        let stats = ResidencyStats {
+            bytes_copied: inner.bytes_copied,
+            buffers_recycled: inner.recycled,
+            peak_resident_bytes: inner.peak_bytes,
+        };
+        inner.bytes_copied = 0;
+        inner.recycled = 0;
+        inner.peak_bytes = inner.live_bytes;
+        stats
+    }
+
+    /// Free buffers currently pooled (tests/diagnostics).
+    pub fn free_buffers(&self) -> usize {
+        self.inner.borrow().free.values().map(Vec::len).sum()
+    }
+}
+
+/// A matrix whose allocation returns to its [`BufferArena`] on drop.
+/// Backends share these behind `Rc`; the allocation recycles when the
+/// last clone drops.
+#[derive(Debug)]
+pub struct ArenaMat {
+    mat: Option<Matrix>,
+    arena: Weak<RefCell<ArenaInner>>,
+}
+
+impl ArenaMat {
+    pub fn matrix(&self) -> &Matrix {
+        self.mat.as_ref().expect("present until drop")
+    }
+
+    pub fn matrix_mut(&mut self) -> &mut Matrix {
+        self.mat.as_mut().expect("present until drop")
+    }
+}
+
+impl std::ops::Deref for ArenaMat {
+    type Target = Matrix;
+
+    fn deref(&self) -> &Matrix {
+        self.matrix()
+    }
+}
+
+impl Drop for ArenaMat {
+    fn drop(&mut self) {
+        let Some(m) = self.mat.take() else { return };
+        let Some(inner) = self.arena.upgrade() else { return };
+        let mut inner = inner.borrow_mut();
+        let data = m.into_vec();
+        inner.live_bytes =
+            inner.live_bytes.saturating_sub((data.len() * std::mem::size_of::<f32>()) as u64);
+        let bucket = inner.free.entry(data.len()).or_default();
+        if bucket.len() < FREE_PER_SIZE_CAP {
+            bucket.push(data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropped_buffers_recycle() {
+        let arena = BufferArena::new();
+        let a = arena.alloc(8);
+        drop(a);
+        assert_eq!(arena.free_buffers(), 1);
+        let _b = arena.alloc(8); // served from the free list
+        let stats = arena.take();
+        assert_eq!(stats.buffers_recycled, 1);
+        assert_eq!(arena.free_buffers(), 0);
+    }
+
+    #[test]
+    fn ping_pong_reuses_two_allocations() {
+        let arena = BufferArena::new();
+        let mut cur = Rc::new(arena.alloc(16));
+        for _ in 0..10 {
+            let next = Rc::new(arena.alloc(16));
+            cur = next; // previous buffer drops → recycles next round
+        }
+        drop(cur);
+        let stats = arena.take();
+        // first two allocs are fresh, the other 9 recycle
+        assert_eq!(stats.buffers_recycled, 9);
+        // never more than two 16×16 buffers live at once
+        assert_eq!(stats.peak_resident_bytes, 2 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn adopt_is_zero_copy_and_counts_nothing() {
+        let arena = BufferArena::new();
+        let m = Matrix::random(4, 1);
+        let want = m.clone();
+        let held = arena.adopt(m);
+        assert_eq!(*held.matrix(), want);
+        let stats = arena.take();
+        assert_eq!(stats.bytes_copied, 0);
+        assert_eq!(stats.peak_resident_bytes, 4 * 4 * 4);
+    }
+
+    #[test]
+    fn copied_bytes_accumulate_and_reset() {
+        let arena = BufferArena::new();
+        arena.count_copied(100);
+        arena.count_copied(24);
+        assert_eq!(arena.take().bytes_copied, 124);
+        assert_eq!(arena.take().bytes_copied, 0);
+    }
+
+    #[test]
+    fn free_list_is_bounded() {
+        let arena = BufferArena::new();
+        let held: Vec<ArenaMat> = (0..20).map(|_| arena.alloc(4)).collect();
+        drop(held);
+        assert!(arena.free_buffers() <= FREE_PER_SIZE_CAP);
+    }
+
+    #[test]
+    fn outliving_the_arena_is_safe() {
+        let arena = BufferArena::new();
+        let m = arena.alloc(4);
+        drop(arena);
+        drop(m); // weak upgrade fails; allocation just frees
+    }
+
+    #[test]
+    fn alloc_shapes_are_exact() {
+        let arena = BufferArena::new();
+        drop(arena.alloc(8));
+        // a 64-element free buffer must not serve an n=4 (16-element) ask
+        let m = arena.alloc(4);
+        assert_eq!(m.n(), 4);
+        assert_eq!(arena.take().buffers_recycled, 0);
+    }
+}

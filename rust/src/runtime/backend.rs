@@ -1,28 +1,22 @@
 //! The pluggable execution layer: a [`Backend`] owns device buffers and
-//! executes the fixed launch vocabulary the planner emits; the generic
-//! [`crate::runtime::Engine`] replays plans on top of it.
+//! executes the typed launch vocabulary ([`KernelOp`]) the planner emits;
+//! the generic [`crate::runtime::Engine`] replays plans on top of it.
 //!
 //! The paper's contribution is the *coordination* of launches (device
 //! residency, fused square-and-multiply), not any one GPU substrate, so
-//! the launch vocabulary is the trait boundary:
-//!
-//! | op         | inputs        | output      | multiplies |
-//! |------------|---------------|-------------|------------|
-//! | `matmul`   | A, B          | A·B         | 1          |
-//! | `square`   | A             | A²          | 1          |
-//! | `square{k}`| A             | A^(2^k)     | k          |
-//! | `sqmul`    | acc, base     | (acc·base, base²) pair | 2 |
-//! | `pack2`    | B             | (B, B) pair | 0          |
-//! | `step_sq`  | (acc, base)   | (acc, base²)| 1          |
-//! | `step_mul` | (acc, base)   | (acc·base², base²) | 2   |
-//! | `unpack0`  | (acc, base)   | acc         | 0          |
-//! | `expm{N}`  | A             | A^N         | binary(N)  |
-//! | `mma{g}`   | A1..Ag, B1..Bg | sum Ak·Bk  | g          |
-//!
-//! `mma{g}` is the tile kernel of the multi-device layer
+//! the launch vocabulary is the trait boundary — see [`KernelOp`] for the
+//! full op table. `Mma(g)` is the tile kernel of the multi-device layer
 //! ([`crate::pool`]): one launch accumulates a whole block-row×block-column
 //! inner product, so a device computes its output tile of a sharded
 //! multiply in a single dispatch instead of `g` launches plus host adds.
+//!
+//! Data-path contract: `upload` takes **ownership** (a backend may adopt
+//! the allocation without copying), `launch` may write into a recycled
+//! buffer from its [`super::arena::BufferArena`], and `split_pair`
+//! **consumes** its pair. The [`ResidencyStats`] a backend reports through
+//! [`Backend::take_residency`] quantify what the data path actually cost:
+//! host-edge bytes copied, recycled-buffer hits, and the resident
+//! high-water mark.
 //!
 //! Three implementations ship: [`crate::runtime::CpuBackend`] (pure Rust,
 //! runs everywhere — the default), [`crate::runtime::SimBackend`] (the
@@ -30,13 +24,13 @@
 //! wall-clock simulated), and, behind the `xla` cargo feature,
 //! [`crate::runtime::PjrtBackend`] (AOT HLO artifacts on PJRT).
 
-use crate::error::{MatexpError, Result};
+use crate::error::Result;
 use crate::linalg::matrix::Matrix;
-use crate::plan::Plan;
+use crate::runtime::op::KernelOp;
 
-/// Exponents the fused single-launch `expm{N}` op is available for — the
-/// same set `make artifacts` AOT-lowers, mirrored by every backend so
-/// "fused artifact for N" availability is backend-independent.
+/// Exponents the fused single-launch [`KernelOp::Expm`] op is available
+/// for — the same set `make artifacts` AOT-lowers, mirrored by every
+/// backend so "fused artifact for N" availability is backend-independent.
 pub const FUSED_EXPM_POWERS: [u64; 5] = [64, 128, 256, 512, 1024];
 
 /// Result of splitting a packed `[acc, base]` pair buffer, with the
@@ -50,9 +44,24 @@ pub struct SplitPair<B> {
     pub d2h_transfers: usize,
 }
 
-/// A device-like execution substrate: opaque buffers plus the launch
-/// vocabulary above. Launch/transfer *accounting* lives in the engine —
-/// backends only move data and compute.
+/// What the data path cost since the last [`Backend::take_residency`]:
+/// the counters behind `ExecStats.{bytes_copied, buffers_recycled,
+/// peak_resident_bytes}`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Bytes that crossed the host↔device edge (uploads, downloads, and
+    /// any forced internal round-trips such as a modeled pair split).
+    pub bytes_copied: u64,
+    /// Output allocations served from the backend's buffer arena instead
+    /// of a fresh allocation.
+    pub buffers_recycled: u64,
+    /// High-water mark of live device-buffer bytes.
+    pub peak_resident_bytes: u64,
+}
+
+/// A device-like execution substrate: opaque buffers plus the typed
+/// launch vocabulary. Launch/transfer *accounting* lives in the engine —
+/// backends only move data and compute (and report residency counters).
 ///
 /// Backends may be `!Send` (PJRT objects live on their creating thread);
 /// the coordinator gives each worker thread its own backend.
@@ -66,24 +75,27 @@ pub trait Backend {
     /// Human-readable platform summary (for `matexp info`).
     fn platform(&self) -> String;
 
-    /// Compile/cache `op` at size `n`, erroring if this backend cannot
-    /// execute it (unknown op, missing artifact). Engines call this
-    /// outside timed regions so launches measure steady state.
-    fn prepare(&mut self, op: &str, n: usize) -> Result<()>;
+    /// Compile/cache `op` at size `n`. Engines call this outside timed
+    /// regions so launches measure steady state. An op this backend (or
+    /// artifact set) genuinely does not ship is
+    /// [`crate::error::MatexpError::UnsupportedOp`]; anything else is a
+    /// real failure callers must not swallow.
+    fn prepare(&mut self, op: KernelOp, n: usize) -> Result<()>;
 
-    /// Host matrix → device buffer (one H2D transfer).
-    fn upload(&mut self, m: &Matrix) -> Result<Self::Buffer>;
+    /// Host matrix → device buffer (one H2D transfer). Takes ownership so
+    /// host-resident backends adopt the allocation without copying.
+    fn upload(&mut self, m: Matrix) -> Result<Self::Buffer>;
 
     /// Device buffer → host matrix (one D2H transfer). Errors on a packed
     /// pair buffer — unpack first.
     fn download(&mut self, buf: &Self::Buffer, n: usize) -> Result<Matrix>;
 
     /// One kernel launch of `op` at size `n` over device buffers.
-    fn launch(&mut self, op: &str, n: usize, inputs: &[Self::Buffer]) -> Result<Self::Buffer>;
+    fn launch(&mut self, op: KernelOp, n: usize, inputs: &[Self::Buffer]) -> Result<Self::Buffer>;
 
-    /// Split a packed pair buffer into its two matrices, reporting what
-    /// the split cost in transfers on this backend.
-    fn split_pair(&mut self, buf: &Self::Buffer, n: usize) -> Result<SplitPair<Self::Buffer>>;
+    /// Split a packed pair buffer (consumed) into its two matrices,
+    /// reporting what the split cost in transfers on this backend.
+    fn split_pair(&mut self, buf: Self::Buffer, n: usize) -> Result<SplitPair<Self::Buffer>>;
 
     /// Simulated seconds accumulated since the last call, for backends
     /// whose wall-clock is modeled rather than measured ([`super::SimBackend`]).
@@ -100,59 +112,12 @@ pub trait Backend {
     fn models_time(&self) -> bool {
         false
     }
-}
 
-/// Matrix multiplies one launch of `op` performs (the quantity behind the
-/// paper's tables). Errors on an op outside the vocabulary.
-pub fn op_multiplies(op: &str) -> Result<usize> {
-    match op {
-        "matmul" | "square" | "step_sq" => Ok(1),
-        "sqmul" | "step_mul" => Ok(2),
-        "pack2" | "unpack0" => Ok(0),
-        _ => {
-            if let Some(g) = op.strip_prefix("mma") {
-                return g
-                    .parse::<usize>()
-                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")));
-            }
-            if let Some(k) = op.strip_prefix("square") {
-                return k
-                    .parse::<usize>()
-                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")));
-            }
-            if let Some(power) = op.strip_prefix("expm") {
-                let power: u64 = power
-                    .parse()
-                    .map_err(|_| MatexpError::Backend(format!("unknown op {op:?}")))?;
-                return Ok(Plan::binary(power.max(1), false).multiplies());
-            }
-            Err(MatexpError::Backend(format!("unknown op {op:?}")))
-        }
+    /// Residency counters accumulated since the last call (engines reset
+    /// at the start of a timed region and read at its end). Backends
+    /// without a pooled buffer layer report zeros.
+    fn take_residency(&mut self) -> ResidencyStats {
+        ResidencyStats::default()
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn multiplies_per_op() {
-        assert_eq!(op_multiplies("matmul").unwrap(), 1);
-        assert_eq!(op_multiplies("square").unwrap(), 1);
-        assert_eq!(op_multiplies("square4").unwrap(), 4);
-        assert_eq!(op_multiplies("sqmul").unwrap(), 2);
-        assert_eq!(op_multiplies("step_mul").unwrap(), 2);
-        assert_eq!(op_multiplies("step_sq").unwrap(), 1);
-        assert_eq!(op_multiplies("pack2").unwrap(), 0);
-        assert_eq!(op_multiplies("unpack0").unwrap(), 0);
-        // expm{N} = the binary plan's multiply count
-        assert_eq!(op_multiplies("expm64").unwrap(), 6);
-        assert_eq!(op_multiplies("expm100").unwrap(), 8);
-        // mma{g} = g tile multiplies in one launch
-        assert_eq!(op_multiplies("mma1").unwrap(), 1);
-        assert_eq!(op_multiplies("mma4").unwrap(), 4);
-        assert!(op_multiplies("conv2d").is_err());
-        assert!(op_multiplies("squareX").is_err());
-        assert!(op_multiplies("mmaX").is_err());
-    }
-}

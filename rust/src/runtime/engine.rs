@@ -1,5 +1,5 @@
 //! The execution engine: replays [`Plan`]s on any [`Backend`], with the
-//! launch/transfer accounting the paper's tables are about.
+//! launch/transfer/residency accounting the paper's tables are about.
 //!
 //! Three execution disciplines, mirroring the paper's comparison:
 //!
@@ -7,10 +7,11 @@
 //!   multiply with a full host round-trip per launch.
 //! * [`Engine::expm`] — §4.3 "Our Approach": replay a [`Plan`] keeping all
 //!   intermediates as device-resident buffers; the matrix crosses the
-//!   host↔device boundary exactly twice.
+//!   host↔device boundary exactly twice, and plan replay ping-pongs
+//!   recycled arena buffers instead of allocating per step.
 //! * [`Engine::expm_packed`] — our §4.3.8 limit case: the `[acc, base]`
 //!   state is packed into one pair buffer and every exponent bit is ONE
-//!   single-output launch (`step_mul`/`step_sq`), so even the fused
+//!   single-output launch (`StepMul`/`StepSq`), so even the fused
 //!   square+multiply pair never touches the host.
 //!
 //! Plus [`Engine::expm_fused_artifact`] (whole `A^N` as a single launch)
@@ -28,6 +29,7 @@ use crate::linalg::matrix::Matrix;
 use crate::plan::{Plan, Step};
 use crate::runtime::backend::Backend;
 use crate::runtime::cpu::CpuBackend;
+use crate::runtime::op::KernelOp;
 use crate::runtime::sim::SimBackend;
 
 /// One device's share of an execution (filled by the multi-device
@@ -43,6 +45,12 @@ pub struct DeviceStats {
     pub multiplies: usize,
     pub h2d_transfers: usize,
     pub d2h_transfers: usize,
+    /// Host-edge bytes this device's data path copied.
+    pub bytes_copied: u64,
+    /// Launch outputs this device served from recycled arena buffers.
+    pub buffers_recycled: u64,
+    /// High-water mark of this device's resident buffer bytes.
+    pub peak_resident_bytes: u64,
     /// Seconds this device was busy (simulated on timing-model devices).
     pub wall_s: f64,
 }
@@ -53,6 +61,9 @@ impl DeviceStats {
         self.multiplies += other.multiplies;
         self.h2d_transfers += other.h2d_transfers;
         self.d2h_transfers += other.d2h_transfers;
+        self.bytes_copied += other.bytes_copied;
+        self.buffers_recycled += other.buffers_recycled;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
         self.wall_s += other.wall_s;
     }
 }
@@ -68,6 +79,19 @@ pub struct ExecStats {
     pub h2d_transfers: usize,
     /// Device→host matrix transfers.
     pub d2h_transfers: usize,
+    /// Bytes that crossed the host↔device edge (the residency layer's
+    /// ground truth: a device-resident run copies exactly the input in
+    /// and the result out; the clone-per-launch counterfactual copies
+    /// O(launches·n²)).
+    pub bytes_copied: u64,
+    /// Launch outputs served from recycled arena buffers instead of fresh
+    /// allocations (plan replay ping-pongs two resident buffers).
+    pub buffers_recycled: u64,
+    /// High-water mark of live device-buffer bytes during the run. On a
+    /// device pool this is the sum of the per-device peaks (devices hold
+    /// their buffers concurrently), so it upper-bounds the true
+    /// all-devices-at-once maximum.
+    pub peak_resident_bytes: u64,
     /// Wall-clock seconds for the whole operation (simulated seconds on
     /// a timing-model backend). On a device pool this is the *critical
     /// path* (max over devices per step), so it can be smaller than the
@@ -85,6 +109,9 @@ impl ExecStats {
         self.multiplies += other.multiplies;
         self.h2d_transfers += other.h2d_transfers;
         self.d2h_transfers += other.d2h_transfers;
+        self.bytes_copied += other.bytes_copied;
+        self.buffers_recycled += other.buffers_recycled;
+        self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
         self.wall_s += other.wall_s;
         for d in &other.per_device {
             self.merge_device(d);
@@ -162,25 +189,32 @@ impl<B: Backend> Engine<B> {
         self.backend.platform()
     }
 
-    /// Start a timed region: reset any simulated clock so warmup/compile
-    /// work is not billed to the measurement.
+    /// Start a timed region: reset the simulated clock and residency
+    /// counters so warmup/compile work is not billed to the measurement.
     fn begin_timed(&mut self) -> Instant {
         let _ = self.backend.take_sim_time();
+        let _ = self.backend.take_residency();
         Instant::now()
     }
 
-    /// End a timed region: simulated seconds if the backend models time,
-    /// real elapsed seconds otherwise.
-    fn end_timed(&mut self, t0: Instant) -> f64 {
-        self.backend
+    /// End a timed region: record wall seconds (simulated if the backend
+    /// models time) and drain the backend's residency counters into the
+    /// stats.
+    fn end_timed(&mut self, t0: Instant, stats: &mut ExecStats) {
+        stats.wall_s = self
+            .backend
             .take_sim_time()
-            .unwrap_or_else(|| t0.elapsed().as_secs_f64())
+            .unwrap_or_else(|| t0.elapsed().as_secs_f64());
+        let residency = self.backend.take_residency();
+        stats.bytes_copied = residency.bytes_copied;
+        stats.buffers_recycled = residency.buffers_recycled;
+        stats.peak_resident_bytes = residency.peak_resident_bytes;
     }
 
     /// One launch over device buffers, with launch accounting.
     fn launch_b(
         &mut self,
-        op: &str,
+        op: KernelOp,
         n: usize,
         inputs: &[B::Buffer],
         stats: &mut ExecStats,
@@ -192,13 +226,28 @@ impl<B: Backend> Engine<B> {
 
     /// Prepare (compile/cache) every op the binary/packed/naive paths
     /// need at size `n` (keeps compile time out of benchmarked regions).
+    /// Optional ops a backend genuinely lacks
+    /// ([`MatexpError::UnsupportedOp`]) are skipped; any other prepare
+    /// failure is real and propagates.
     pub fn warmup(&mut self, n: usize) -> Result<()> {
-        for op in ["matmul", "square", "pack2", "step_mul", "step_sq", "unpack0"] {
+        const REQUIRED: [KernelOp; 6] = [
+            KernelOp::Matmul,
+            KernelOp::Square,
+            KernelOp::Pack2,
+            KernelOp::StepMul,
+            KernelOp::StepSq,
+            KernelOp::Unpack0,
+        ];
+        const OPTIONAL: [KernelOp; 3] =
+            [KernelOp::SqMul, KernelOp::SquareChain(2), KernelOp::SquareChain(4)];
+        for op in REQUIRED {
             self.backend.prepare(op, n)?;
         }
-        // optional ops — ignore if the backend/artifact set lacks them
-        for op in ["sqmul", "square2", "square4"] {
-            let _ = self.backend.prepare(op, n);
+        for op in OPTIONAL {
+            match self.backend.prepare(op, n) {
+                Ok(()) | Err(MatexpError::UnsupportedOp(_)) => {}
+                Err(e) => return Err(e),
+            }
         }
         Ok(())
     }
@@ -211,11 +260,20 @@ impl<B: Backend> Engine<B> {
     pub fn warmup_exec(&mut self, n: usize) -> Result<()> {
         self.warmup(n)?;
         let id = Matrix::identity(n);
+        // optional-op replays follow warmup's policy: an op the backend
+        // genuinely lacks is skippable, any other failure is real
+        let optional_exec = |result: Result<(Matrix, ExecStats)>| match result {
+            Ok(_) | Err(MatexpError::UnsupportedOp(_)) => Ok(()),
+            Err(e) => Err(e),
+        };
         // binary fused 11 = Init, SqMul, Sq, MulAcc → square/sqmul/matmul
-        self.expm(&id, &Plan::binary(11, true))?;
-        // chained 64 = square4 + square2
-        let _ = self.expm(&id, &Plan::chained(64, &[4, 2]));
-        // packed 5 = pack2, step_sq, step_mul, unpack0
+        // (sqmul is optional — some artifact sets don't ship it)
+        let fused = self.expm(&id, &Plan::binary(11, true));
+        optional_exec(fused)?;
+        // chained 64 = square4 + square2 (optional chain kernels)
+        let chained = self.expm(&id, &Plan::chained(64, &[4, 2]));
+        optional_exec(chained)?;
+        // packed 5 = pack2, step_sq, step_mul, unpack0 — all required ops
         self.expm_packed(&id, 5)?;
         Ok(())
     }
@@ -226,17 +284,17 @@ impl<B: Backend> Engine<B> {
         if b.n() != n {
             return Err(MatexpError::Linalg("matmul size mismatch".into()));
         }
-        self.backend.prepare("matmul", n)?;
+        self.backend.prepare(KernelOp::Matmul, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
-        let ba = self.backend.upload(a)?;
-        let bb = self.backend.upload(b)?;
+        let ba = self.backend.upload(a.clone())?;
+        let bb = self.backend.upload(b.clone())?;
         stats.h2d_transfers += 2;
-        let out = self.launch_b("matmul", n, &[ba, bb], &mut stats)?;
+        let out = self.launch_b(KernelOp::Matmul, n, &[ba, bb], &mut stats)?;
         stats.multiplies += 1;
         let m = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = self.end_timed(t0);
+        self.end_timed(t0, &mut stats);
         Ok((m, stats))
     }
 
@@ -247,39 +305,41 @@ impl<B: Backend> Engine<B> {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
         let n = a.n();
-        self.backend.prepare("matmul", n)?; // compile outside the timed region
+        self.backend.prepare(KernelOp::Matmul, n)?; // compile outside the timed region
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let mut acc = a.clone();
         for _ in 1..power {
-            let b_acc = self.backend.upload(&acc)?;
-            let b_a = self.backend.upload(a)?;
+            let b_acc = self.backend.upload(acc)?;
+            let b_a = self.backend.upload(a.clone())?;
             stats.h2d_transfers += 2;
-            let out = self.launch_b("matmul", n, &[b_acc, b_a], &mut stats)?;
+            let out = self.launch_b(KernelOp::Matmul, n, &[b_acc, b_a], &mut stats)?;
             stats.multiplies += 1;
             acc = self.backend.download(&out, n)?;
             stats.d2h_transfers += 1;
         }
-        stats.wall_s = self.end_timed(t0);
+        self.end_timed(t0, &mut stats);
         Ok((acc, stats))
     }
 
     /// §4.3 Our Approach: replay `plan` with device-resident buffers.
     /// The input crosses host→device once; the result device→host once
-    /// (plus whatever a `SqMul` tuple split costs on this backend).
+    /// (plus whatever a `SqMul` tuple split costs on this backend). The
+    /// register file drops stale buffers as it overwrites them, so the
+    /// backend's arena ping-pongs recycled allocations instead of growing.
     pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
         // prepare everything the plan needs before the timed region
         for step in &plan.steps {
-            if let Some(op) = step.op_name() {
-                self.backend.prepare(&op, n)?;
+            if let Some(op) = step.op() {
+                self.backend.prepare(op, n)?;
             }
         }
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let mut regs: Vec<Option<B::Buffer>> = vec![None; plan.n_regs];
-        regs[0] = Some(self.backend.upload(a)?);
+        regs[0] = Some(self.backend.upload(a.clone())?);
         stats.h2d_transfers += 1;
         for step in &plan.steps {
             match *step {
@@ -289,27 +349,29 @@ impl<B: Backend> Engine<B> {
                 Step::Mul { dst, lhs, rhs } => {
                     let out = if lhs == rhs {
                         let x = regs[lhs].clone().expect("validated");
-                        self.launch_b("square", n, &[x], &mut stats)?
+                        self.launch_b(KernelOp::Square, n, &[x], &mut stats)?
                     } else {
                         let x = regs[lhs].clone().expect("validated");
                         let y = regs[rhs].clone().expect("validated");
-                        self.launch_b("matmul", n, &[x, y], &mut stats)?
+                        self.launch_b(KernelOp::Matmul, n, &[x, y], &mut stats)?
                     };
                     stats.multiplies += 1;
                     regs[dst] = Some(out);
                 }
                 Step::SquareChain { reg, k } => {
-                    let x = regs[reg].clone().expect("validated");
-                    let out = self.launch_b(&format!("square{k}"), n, &[x], &mut stats)?;
+                    let x = regs[reg].take().expect("validated");
+                    let out = self.launch_b(KernelOp::SquareChain(k), n, &[x], &mut stats)?;
                     stats.multiplies += k as usize;
                     regs[reg] = Some(out);
                 }
                 Step::SqMul { acc, base } => {
+                    // clone, don't take: `acc == base` is a valid aliased
+                    // step (buffer clones are pointer clones anyway)
                     let x = regs[acc].clone().expect("validated");
                     let y = regs[base].clone().expect("validated");
-                    let pair = self.launch_b("sqmul", n, &[x, y], &mut stats)?;
+                    let pair = self.launch_b(KernelOp::SqMul, n, &[x, y], &mut stats)?;
                     stats.multiplies += 2;
-                    let split = self.backend.split_pair(&pair, n)?;
+                    let split = self.backend.split_pair(pair, n)?;
                     stats.h2d_transfers += split.h2d_transfers;
                     stats.d2h_transfers += split.d2h_transfers;
                     regs[acc] = Some(split.first);
@@ -317,10 +379,11 @@ impl<B: Backend> Engine<B> {
                 }
             }
         }
-        let out_buf = regs[plan.result].clone().expect("validated: result written");
+        let out_buf = regs[plan.result].take().expect("validated: result written");
         let result = self.backend.download(&out_buf, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = self.end_timed(t0);
+        drop(out_buf);
+        self.end_timed(t0, &mut stats);
         Ok((result, stats))
     }
 
@@ -334,8 +397,8 @@ impl<B: Backend> Engine<B> {
         let n = a.n();
         // square{k} chains run as k singles and sqmul as matmul+square on
         // this path, so only the two base ops are needed
-        self.backend.prepare("matmul", n)?;
-        self.backend.prepare("square", n)?;
+        self.backend.prepare(KernelOp::Matmul, n)?;
+        self.backend.prepare(KernelOp::Square, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let mut regs: Vec<Option<Matrix>> = vec![None; plan.n_regs];
@@ -346,44 +409,47 @@ impl<B: Backend> Engine<B> {
                 Step::Mul { dst, lhs, rhs } => {
                     let out = if lhs == rhs {
                         let x = regs[lhs].clone().expect("validated");
-                        self.roundtrip_launch("square", n, &[&x], &mut stats)?
+                        self.roundtrip_launch(KernelOp::Square, n, &[&x], &mut stats)?
                     } else {
                         let x = regs[lhs].clone().expect("validated");
                         let y = regs[rhs].clone().expect("validated");
-                        self.roundtrip_launch("matmul", n, &[&x, &y], &mut stats)?
+                        self.roundtrip_launch(KernelOp::Matmul, n, &[&x, &y], &mut stats)?
                     };
                     regs[dst] = Some(out);
                 }
                 Step::SqMul { acc, base } => {
                     let a0 = regs[acc].clone().expect("validated");
                     let b0 = regs[base].clone().expect("validated");
-                    regs[acc] = Some(self.roundtrip_launch("matmul", n, &[&a0, &b0], &mut stats)?);
-                    regs[base] = Some(self.roundtrip_launch("square", n, &[&b0], &mut stats)?);
+                    regs[acc] =
+                        Some(self.roundtrip_launch(KernelOp::Matmul, n, &[&a0, &b0], &mut stats)?);
+                    regs[base] =
+                        Some(self.roundtrip_launch(KernelOp::Square, n, &[&b0], &mut stats)?);
                 }
                 Step::SquareChain { reg, k } => {
                     for _ in 0..k {
                         let b = regs[reg].clone().expect("validated");
-                        regs[reg] = Some(self.roundtrip_launch("square", n, &[&b], &mut stats)?);
+                        regs[reg] =
+                            Some(self.roundtrip_launch(KernelOp::Square, n, &[&b], &mut stats)?);
                     }
                 }
             }
         }
         let result = regs[plan.result].take().expect("validated: result written");
-        stats.wall_s = self.end_timed(t0);
+        self.end_timed(t0, &mut stats);
         Ok((result, stats))
     }
 
     /// One launch with per-launch transfers (the roundtrip discipline).
     fn roundtrip_launch(
         &mut self,
-        op: &str,
+        op: KernelOp,
         n: usize,
         inputs: &[&Matrix],
         stats: &mut ExecStats,
     ) -> Result<Matrix> {
         let bufs: Vec<B::Buffer> = inputs
             .iter()
-            .map(|m| self.backend.upload(m))
+            .map(|m| self.backend.upload((*m).clone()))
             .collect::<Result<_>>()?;
         stats.h2d_transfers += inputs.len();
         let out = self.launch_b(op, n, &bufs, stats)?;
@@ -405,29 +471,30 @@ impl<B: Backend> Engine<B> {
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         if power == 1 {
-            stats.wall_s = self.end_timed(t0);
+            self.end_timed(t0, &mut stats);
             return Ok((a.clone(), stats));
         }
         let tz = power.trailing_zeros();
-        let mut base = self.backend.upload(a)?;
+        let mut base = self.backend.upload(a.clone())?;
         stats.h2d_transfers += 1;
         for _ in 0..tz {
-            base = self.launch_b("square", n, &[base], &mut stats)?;
+            base = self.launch_b(KernelOp::Square, n, &[base], &mut stats)?;
             stats.multiplies += 1;
         }
         // pack consumes the lowest set bit: acc = base = A^(2^tz)
-        let mut state = self.launch_b("pack2", n, &[base], &mut stats)?;
+        let mut state = self.launch_b(KernelOp::Pack2, n, &[base], &mut stats)?;
         let mut q = (power >> tz) >> 1;
         while q > 0 {
-            let op = if q & 1 == 1 { "step_mul" } else { "step_sq" };
+            let op = if q & 1 == 1 { KernelOp::StepMul } else { KernelOp::StepSq };
             state = self.launch_b(op, n, &[state], &mut stats)?;
-            stats.multiplies += if q & 1 == 1 { 2 } else { 1 };
+            stats.multiplies += op.multiplies();
             q >>= 1;
         }
-        let acc = self.launch_b("unpack0", n, &[state], &mut stats)?;
+        let acc = self.launch_b(KernelOp::Unpack0, n, &[state], &mut stats)?;
         let result = self.backend.download(&acc, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = self.end_timed(t0);
+        drop(acc);
+        self.end_timed(t0, &mut stats);
         Ok((result, stats))
     }
 
@@ -435,17 +502,17 @@ impl<B: Backend> Engine<B> {
     /// `expm{power}` kernel (see [`crate::runtime::FUSED_EXPM_POWERS`]).
     pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
-        let op = format!("expm{power}");
-        self.backend.prepare(&op, n)?;
+        let op = KernelOp::Expm(power);
+        self.backend.prepare(op, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
-        let buf = self.backend.upload(a)?;
+        let buf = self.backend.upload(a.clone())?;
         stats.h2d_transfers += 1;
-        let out = self.launch_b(&op, n, &[buf], &mut stats)?;
-        stats.multiplies += Plan::binary(power, false).multiplies();
+        let out = self.launch_b(op, n, &[buf], &mut stats)?;
+        stats.multiplies += op.multiplies();
         let result = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = self.end_timed(t0);
+        self.end_timed(t0, &mut stats);
         Ok((result, stats))
     }
 }
@@ -464,15 +531,15 @@ impl Engine<crate::runtime::pjrt::PjrtBackend> {
         let n = self.backend.prepare_entry(registry, name)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
-        let ba = self.backend.upload(a)?;
-        let bb = self.backend.upload(b)?;
+        let ba = self.backend.upload(a.clone())?;
+        let bb = self.backend.upload(b.clone())?;
         stats.h2d_transfers += 2;
         let out = self.backend.launch_entry(name, n, &[ba, bb])?;
         stats.launches += 1;
         stats.multiplies += 1;
         let m = self.backend.download(&out, n)?;
         stats.d2h_transfers += 1;
-        stats.wall_s = self.end_timed(t0);
+        self.end_timed(t0, &mut stats);
         Ok((m, stats))
     }
 }
@@ -524,6 +591,8 @@ mod tests {
         assert_eq!(stats.multiplies, 15);
         assert_eq!(stats.h2d_transfers, 30);
         assert_eq!(stats.d2h_transfers, 15);
+        // the roundtrip discipline's data path copies every edge crossing
+        assert_eq!(stats.bytes_copied, 45 * 8 * 8 * 4);
     }
 
     #[test]
@@ -535,6 +604,27 @@ mod tests {
         assert_eq!(stats.h2d_transfers, 1);
         assert_eq!(stats.d2h_transfers, 1);
         assert_eq!(stats.multiplies, Plan::binary(100, false).multiplies());
+        // residency ground truth: ONLY the two host-edge transfers copy
+        assert_eq!(stats.bytes_copied, 2 * 8 * 8 * 4);
+        assert!(stats.buffers_recycled > 0, "{stats:?}");
+        assert!(stats.peak_resident_bytes > 0);
+    }
+
+    #[test]
+    fn resident_replay_recycles_buffers() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(16, 0.9, 7);
+        let (_, resident) = e.expm(&a, &Plan::binary(1024, false)).unwrap();
+        assert_eq!(resident.bytes_copied, 2 * 16 * 16 * 4);
+        // 10 squarings ping-pong the arena: most launches recycle
+        assert!(resident.buffers_recycled >= 7, "{resident:?}");
+        // peak residency stays a few buffers, not O(launches)
+        assert!(resident.peak_resident_bytes <= 4 * 16 * 16 * 4, "{resident:?}");
+        let (_, roundtrip) = e.expm_plan_roundtrip(&a, &Plan::binary(1024, false)).unwrap();
+        assert!(
+            roundtrip.bytes_copied >= 10 * resident.bytes_copied,
+            "clone-per-launch {roundtrip:?} vs resident {resident:?}"
+        );
     }
 
     #[test]
@@ -557,5 +647,71 @@ mod tests {
         assert_eq!(stats.launches, 1);
         assert!(got.approx_eq(&oracle(&a, 64), 1e-4, 1e-4));
         assert!(e.expm_fused_artifact(&a, 65).is_err());
+    }
+
+    /// Backend wrapper that fails `prepare` for [`KernelOp::SqMul`] with a
+    /// configurable error kind — exercises warmup's optional-op policy.
+    struct FlakyPrepare {
+        inner: CpuBackend,
+        hard: bool,
+    }
+
+    impl Backend for FlakyPrepare {
+        type Buffer = crate::runtime::cpu::CpuBuffer;
+
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn platform(&self) -> String {
+            "flaky-prepare test backend".into()
+        }
+
+        fn prepare(&mut self, op: KernelOp, n: usize) -> Result<()> {
+            if op == KernelOp::SqMul {
+                return Err(if self.hard {
+                    MatexpError::Backend("compile crashed".into())
+                } else {
+                    MatexpError::UnsupportedOp("sqmul not shipped".into())
+                });
+            }
+            self.inner.prepare(op, n)
+        }
+
+        fn upload(&mut self, m: Matrix) -> Result<Self::Buffer> {
+            self.inner.upload(m)
+        }
+
+        fn download(&mut self, buf: &Self::Buffer, n: usize) -> Result<Matrix> {
+            self.inner.download(buf, n)
+        }
+
+        fn launch(&mut self, op: KernelOp, n: usize, inputs: &[Self::Buffer]) -> Result<Self::Buffer> {
+            self.inner.launch(op, n, inputs)
+        }
+
+        fn split_pair(
+            &mut self,
+            buf: Self::Buffer,
+            n: usize,
+        ) -> Result<crate::runtime::SplitPair<Self::Buffer>> {
+            self.inner.split_pair(buf, n)
+        }
+    }
+
+    #[test]
+    fn warmup_skips_unsupported_but_propagates_real_failures() {
+        let mut soft = Engine::new(FlakyPrepare {
+            inner: CpuBackend::new(CpuAlgo::Naive),
+            hard: false,
+        });
+        soft.warmup(8).expect("a genuinely absent optional op is skippable");
+
+        let mut hard = Engine::new(FlakyPrepare {
+            inner: CpuBackend::new(CpuAlgo::Naive),
+            hard: true,
+        });
+        let err = hard.warmup(8).expect_err("a broken optional op must surface");
+        assert!(matches!(err, MatexpError::Backend(_)), "{err:?}");
     }
 }

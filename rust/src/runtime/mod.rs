@@ -1,5 +1,6 @@
-//! Execution runtime: the pluggable [`Backend`] layer plus the generic
-//! plan-replaying [`Engine`].
+//! Execution runtime: the typed kernel IR ([`KernelOp`]), the pluggable
+//! [`Backend`] layer with its buffer-residency arena
+//! ([`arena::BufferArena`]), and the generic plan-replaying [`Engine`].
 //!
 //! The paper's §3.2 host flow (find device → context → memory → compile →
 //! launch → query) maps onto the [`Backend`] trait; three implementations
@@ -14,10 +15,12 @@
 //!   device-resident buffers.
 
 pub mod any;
+pub mod arena;
 pub mod artifacts;
 pub mod backend;
 pub mod cpu;
 pub mod engine;
+pub mod op;
 pub mod sim;
 
 #[cfg(feature = "xla")]
@@ -28,10 +31,12 @@ pub mod literal;
 pub mod pjrt;
 
 pub use any::{AnyBackend, AnyBuffer};
+pub use arena::{ArenaMat, BufferArena};
 pub use artifacts::{ArtifactEntry, ArtifactRegistry};
-pub use backend::{op_multiplies, Backend, SplitPair, FUSED_EXPM_POWERS};
+pub use backend::{Backend, ResidencyStats, SplitPair, FUSED_EXPM_POWERS};
 pub use cpu::{CpuBackend, CpuBuffer};
 pub use engine::{AnyEngine, CpuEngine, DeviceStats, Engine, ExecStats, SimEngine};
+pub use op::KernelOp;
 pub use sim::SimBackend;
 
 #[cfg(feature = "xla")]

@@ -1,0 +1,235 @@
+//! [`KernelOp`] — the typed kernel IR: every launchable operation as one
+//! enum variant, with its arity and multiply count as methods.
+//!
+//! This replaces the stringly-typed launch vocabulary (`"matmul"`,
+//! `"sqmul"`, `"mma{g}"`, …) that used to be re-parsed independently in
+//! every backend, the engine warmup lists and the pool's fused-tile
+//! launches. Strings survive only at the **artifact/wire edge**:
+//! [`KernelOp::name`] renders the canonical artifact name and
+//! [`KernelOp::parse`] reads one back — nothing else in the launch path
+//! matches on `&str` (a test greps the launch-path sources to keep it
+//! that way).
+//!
+//! | op                  | inputs         | output                 | multiplies |
+//! |---------------------|----------------|------------------------|------------|
+//! | [`Matmul`]          | A, B           | A·B                    | 1          |
+//! | [`Square`]          | A              | A²                     | 1          |
+//! | [`SquareChain`]`(k)`| A              | A^(2^k)                | k          |
+//! | [`SqMul`]           | acc, base      | (acc·base, base²) pair | 2          |
+//! | [`Pack2`]           | B              | (B, B) pair            | 0          |
+//! | [`StepSq`]          | (acc, base)    | (acc, base²) pair      | 1          |
+//! | [`StepMul`]         | (acc, base)    | (acc·base², base²) pair| 2          |
+//! | [`Unpack0`]         | (acc, base)    | acc                    | 0          |
+//! | [`Mma`]`(g)`        | A1..Ag, B1..Bg | Σ Ak·Bk                | g          |
+//! | [`Expm`]`(N)`       | A              | A^N                    | binary(N)  |
+//!
+//! [`Matmul`]: KernelOp::Matmul
+//! [`Square`]: KernelOp::Square
+//! [`SquareChain`]: KernelOp::SquareChain
+//! [`SqMul`]: KernelOp::SqMul
+//! [`Pack2`]: KernelOp::Pack2
+//! [`StepSq`]: KernelOp::StepSq
+//! [`StepMul`]: KernelOp::StepMul
+//! [`Unpack0`]: KernelOp::Unpack0
+//! [`Mma`]: KernelOp::Mma
+//! [`Expm`]: KernelOp::Expm
+
+use crate::error::{MatexpError, Result};
+use crate::plan::Plan;
+
+/// One kernel in the launch vocabulary. `Copy` + `Eq` + `Hash` so ops key
+/// executable caches and appear in plans/jobs as plain data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelOp {
+    /// `A·B` — one multiply, two inputs.
+    Matmul,
+    /// `A²` — one multiply, one input.
+    Square,
+    /// `A^(2^k)` in one launch (`k ≥ 2`; `k = 1` is [`KernelOp::Square`]).
+    SquareChain(u32),
+    /// Fused binary-exponentiation step: `(acc·base, base²)` as one packed
+    /// pair output.
+    SqMul,
+    /// Pack a matrix into an `[acc, base]` pair buffer (`acc = base = B`).
+    Pack2,
+    /// Packed step: `(acc, base²)`.
+    StepSq,
+    /// Packed step: `(acc·base², base²)`.
+    StepMul,
+    /// Extract `acc` from a packed pair.
+    Unpack0,
+    /// Fused tile multiply-accumulate: `Σ_{k<g} Ak·Bk` in one launch
+    /// (`g ≥ 1`; the device pool's sharded-multiply kernel).
+    Mma(u32),
+    /// Whole `A^N` as a single fused launch (AOT artifact; availability
+    /// mirrors [`super::FUSED_EXPM_POWERS`]).
+    Expm(u64),
+}
+
+impl KernelOp {
+    /// Matrix multiplies one launch of this op performs (the quantity
+    /// behind the paper's tables).
+    pub fn multiplies(self) -> usize {
+        match self {
+            KernelOp::Matmul | KernelOp::Square | KernelOp::StepSq => 1,
+            KernelOp::SqMul | KernelOp::StepMul => 2,
+            KernelOp::Pack2 | KernelOp::Unpack0 => 0,
+            KernelOp::SquareChain(k) => k as usize,
+            KernelOp::Mma(g) => g as usize,
+            KernelOp::Expm(power) => Plan::binary(power.max(1), false).multiplies(),
+        }
+    }
+
+    /// Number of input buffers one launch takes.
+    pub fn arity(self) -> usize {
+        match self {
+            KernelOp::Matmul | KernelOp::SqMul => 2,
+            KernelOp::Square
+            | KernelOp::SquareChain(_)
+            | KernelOp::Pack2
+            | KernelOp::StepSq
+            | KernelOp::StepMul
+            | KernelOp::Unpack0
+            | KernelOp::Expm(_) => 1,
+            KernelOp::Mma(g) => 2 * g as usize,
+        }
+    }
+
+    /// Reject parameterized variants outside their domain (`square{k}`
+    /// needs `k ≥ 2`, `mma{g}` needs `g ≥ 1`). Backends call this in
+    /// `prepare` so a hand-constructed degenerate op fails early.
+    pub fn validate(self) -> Result<()> {
+        match self {
+            KernelOp::SquareChain(k) if k < 2 => Err(MatexpError::Backend(format!(
+                "square-chain length must be >= 2, got {k} (use Square for k=1)"
+            ))),
+            KernelOp::Mma(0) => {
+                Err(MatexpError::Backend("mma width must be >= 1".into()))
+            }
+            KernelOp::Expm(0) => {
+                Err(MatexpError::Backend("fused exponent must be >= 1".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Canonical artifact/wire name — the ONLY place op names are
+    /// rendered. Matches the AOT manifest vocabulary.
+    pub fn name(self) -> String {
+        match self {
+            KernelOp::Matmul => "matmul".into(),
+            KernelOp::Square => "square".into(),
+            KernelOp::SquareChain(k) => format!("square{k}"),
+            KernelOp::SqMul => "sqmul".into(),
+            KernelOp::Pack2 => "pack2".into(),
+            KernelOp::StepSq => "step_sq".into(),
+            KernelOp::StepMul => "step_mul".into(),
+            KernelOp::Unpack0 => "unpack0".into(),
+            KernelOp::Mma(g) => format!("mma{g}"),
+            KernelOp::Expm(power) => format!("expm{power}"),
+        }
+    }
+
+    /// Parse a canonical name back into the typed op — the ONLY place op
+    /// names are matched (artifact manifests, wire payloads).
+    pub fn parse(s: &str) -> Result<KernelOp> {
+        let unknown = || MatexpError::Backend(format!("unknown op {s:?}"));
+        let op = match s {
+            "matmul" => KernelOp::Matmul,
+            "square" => KernelOp::Square,
+            "sqmul" => KernelOp::SqMul,
+            "pack2" => KernelOp::Pack2,
+            "step_sq" => KernelOp::StepSq,
+            "step_mul" => KernelOp::StepMul,
+            "unpack0" => KernelOp::Unpack0,
+            _ => {
+                if let Some(rest) = s.strip_prefix("square") {
+                    KernelOp::SquareChain(rest.parse::<u32>().map_err(|_| unknown())?)
+                } else if let Some(rest) = s.strip_prefix("mma") {
+                    KernelOp::Mma(rest.parse::<u32>().map_err(|_| unknown())?)
+                } else if let Some(rest) = s.strip_prefix("expm") {
+                    KernelOp::Expm(rest.parse::<u64>().map_err(|_| unknown())?)
+                } else {
+                    return Err(unknown());
+                }
+            }
+        };
+        op.validate()?;
+        Ok(op)
+    }
+}
+
+impl std::fmt::Display for KernelOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplies_per_op() {
+        assert_eq!(KernelOp::Matmul.multiplies(), 1);
+        assert_eq!(KernelOp::Square.multiplies(), 1);
+        assert_eq!(KernelOp::SquareChain(4).multiplies(), 4);
+        assert_eq!(KernelOp::SqMul.multiplies(), 2);
+        assert_eq!(KernelOp::StepMul.multiplies(), 2);
+        assert_eq!(KernelOp::StepSq.multiplies(), 1);
+        assert_eq!(KernelOp::Pack2.multiplies(), 0);
+        assert_eq!(KernelOp::Unpack0.multiplies(), 0);
+        // expm{N} = the binary plan's multiply count
+        assert_eq!(KernelOp::Expm(64).multiplies(), 6);
+        assert_eq!(KernelOp::Expm(100).multiplies(), 8);
+        // mma{g} = g tile multiplies in one launch
+        assert_eq!(KernelOp::Mma(1).multiplies(), 1);
+        assert_eq!(KernelOp::Mma(4).multiplies(), 4);
+    }
+
+    #[test]
+    fn arity_per_op() {
+        assert_eq!(KernelOp::Matmul.arity(), 2);
+        assert_eq!(KernelOp::SqMul.arity(), 2);
+        assert_eq!(KernelOp::Square.arity(), 1);
+        assert_eq!(KernelOp::SquareChain(3).arity(), 1);
+        assert_eq!(KernelOp::Pack2.arity(), 1);
+        assert_eq!(KernelOp::StepSq.arity(), 1);
+        assert_eq!(KernelOp::StepMul.arity(), 1);
+        assert_eq!(KernelOp::Unpack0.arity(), 1);
+        assert_eq!(KernelOp::Expm(64).arity(), 1);
+        assert_eq!(KernelOp::Mma(3).arity(), 6);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        let ops = [
+            KernelOp::Matmul,
+            KernelOp::Square,
+            KernelOp::SquareChain(2),
+            KernelOp::SquareChain(4),
+            KernelOp::SqMul,
+            KernelOp::Pack2,
+            KernelOp::StepSq,
+            KernelOp::StepMul,
+            KernelOp::Unpack0,
+            KernelOp::Mma(1),
+            KernelOp::Mma(7),
+            KernelOp::Expm(64),
+            KernelOp::Expm(1024),
+        ];
+        for op in ops {
+            assert_eq!(KernelOp::parse(&op.name()).unwrap(), op, "{op}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_degenerates() {
+        for bad in ["conv2d", "squareX", "mmaX", "expmX", "", "square1", "square0", "mma0", "expm0"] {
+            assert!(KernelOp::parse(bad).is_err(), "{bad:?}");
+        }
+        assert!(KernelOp::SquareChain(1).validate().is_err());
+        assert!(KernelOp::Mma(0).validate().is_err());
+        assert!(KernelOp::Matmul.validate().is_ok());
+    }
+}

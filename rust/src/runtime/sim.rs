@@ -12,8 +12,9 @@
 use crate::error::Result;
 use crate::linalg::expm::CpuAlgo;
 use crate::linalg::matrix::Matrix;
-use crate::runtime::backend::{op_multiplies, Backend, SplitPair};
+use crate::runtime::backend::{Backend, ResidencyStats, SplitPair};
 use crate::runtime::cpu::{CpuBackend, CpuBuffer};
+use crate::runtime::op::KernelOp;
 use crate::simulator::device::DeviceSpec;
 use crate::simulator::timing::GpuTimingModel;
 
@@ -22,12 +23,20 @@ pub struct SimBackend {
     inner: CpuBackend,
     model: GpuTimingModel,
     clock_s: f64,
+    /// Edge bytes the *model* charges beyond what the CPU substrate
+    /// physically copies (the pair-split tuple round-trip).
+    modeled_copied: u64,
 }
 
 impl SimBackend {
     /// Simulate `model`; numerics via the blocked CPU matmul.
     pub fn new(model: GpuTimingModel) -> SimBackend {
-        SimBackend { inner: CpuBackend::new(CpuAlgo::Blocked), model, clock_s: 0.0 }
+        SimBackend {
+            inner: CpuBackend::new(CpuAlgo::Blocked),
+            model,
+            clock_s: 0.0,
+            modeled_copied: 0,
+        }
     }
 
     /// Uncalibrated spec-sheet Tesla C2050 (the paper's device). The
@@ -57,12 +66,12 @@ impl Backend for SimBackend {
         format!("simulated {} (analytic timing model, cpu numerics)", self.model.device.name)
     }
 
-    fn prepare(&mut self, op: &str, n: usize) -> Result<()> {
+    fn prepare(&mut self, op: KernelOp, n: usize) -> Result<()> {
         // compilation is build-time on the modeled device: zero sim cost
         self.inner.prepare(op, n)
     }
 
-    fn upload(&mut self, m: &Matrix) -> Result<CpuBuffer> {
+    fn upload(&mut self, m: Matrix) -> Result<CpuBuffer> {
         self.clock_s += self.model.transfer_time(m.n(), 1);
         self.inner.upload(m)
     }
@@ -72,8 +81,8 @@ impl Backend for SimBackend {
         self.inner.download(buf, n)
     }
 
-    fn launch(&mut self, op: &str, n: usize, inputs: &[CpuBuffer]) -> Result<CpuBuffer> {
-        let multiplies = op_multiplies(op)?;
+    fn launch(&mut self, op: KernelOp, n: usize, inputs: &[CpuBuffer]) -> Result<CpuBuffer> {
+        let multiplies = op.multiplies();
         self.clock_s += self.model.eff_launch_overhead(n);
         if multiplies > 0 {
             self.clock_s += self.model.kernel_time(n, multiplies);
@@ -81,10 +90,11 @@ impl Backend for SimBackend {
         self.inner.launch(op, n, inputs)
     }
 
-    fn split_pair(&mut self, buf: &CpuBuffer, n: usize) -> Result<SplitPair<CpuBuffer>> {
+    fn split_pair(&mut self, buf: CpuBuffer, n: usize) -> Result<SplitPair<CpuBuffer>> {
         // the modeled device, like PJRT, splits a 2-tuple through the
         // host: 2 D2H + 2 H2D
         self.clock_s += self.model.transfer_time(n, 4);
+        self.modeled_copied += 4 * (n * n * std::mem::size_of::<f32>()) as u64;
         let mut split = self.inner.split_pair(buf, n)?;
         split.d2h_transfers = 2;
         split.h2d_transfers = 2;
@@ -100,6 +110,12 @@ impl Backend for SimBackend {
     fn models_time(&self) -> bool {
         true
     }
+
+    fn take_residency(&mut self) -> ResidencyStats {
+        let mut stats = self.inner.take_residency();
+        stats.bytes_copied += std::mem::take(&mut self.modeled_copied);
+        stats
+    }
 }
 
 #[cfg(test)]
@@ -110,10 +126,10 @@ mod tests {
     fn clock_advances_on_transfers_and_launches() {
         let mut b = SimBackend::tesla_c2050();
         let a = Matrix::random_spectral(64, 0.9, 1);
-        let buf = b.upload(&a).unwrap();
+        let buf = b.upload(a).unwrap();
         let after_upload = b.clock_s();
         assert!(after_upload > 0.0);
-        let out = b.launch("square", 64, &[buf]).unwrap();
+        let out = b.launch(KernelOp::Square, 64, &[buf]).unwrap();
         assert!(b.clock_s() > after_upload + b.model().launch_overhead_s * 0.9);
         let m = b.download(&out, 64).unwrap();
         assert!(m.is_finite());
@@ -126,8 +142,8 @@ mod tests {
     fn numerics_match_cpu_substrate() {
         let mut b = SimBackend::tesla_c2050();
         let a = Matrix::random_spectral(8, 0.9, 2);
-        let buf = b.upload(&a).unwrap();
-        let out = b.launch("square", 8, &[buf]).unwrap();
+        let buf = b.upload(a.clone()).unwrap();
+        let out = b.launch(KernelOp::Square, 8, &[buf]).unwrap();
         let want = crate::linalg::naive::matmul_naive(&a, &a);
         assert!(b.download(&out, 8).unwrap().approx_eq(&want, 1e-4, 1e-4));
     }
@@ -135,11 +151,15 @@ mod tests {
     #[test]
     fn split_charges_the_tuple_roundtrip() {
         let mut b = SimBackend::tesla_c2050();
-        let a = b.upload(&Matrix::identity(16)).unwrap();
-        let pair = b.launch("pack2", 16, &[a]).unwrap();
+        let a = b.upload(Matrix::identity(16)).unwrap();
+        let pair = b.launch(KernelOp::Pack2, 16, &[a]).unwrap();
         let before = b.clock_s();
-        let split = b.split_pair(&pair, 16).unwrap();
+        let _ = b.take_residency();
+        let split = b.split_pair(pair, 16).unwrap();
         assert_eq!((split.h2d_transfers, split.d2h_transfers), (2, 2));
         assert!(b.clock_s() > before);
+        // the modeled tuple round-trip shows up in bytes_copied even
+        // though the CPU substrate splits by aliasing
+        assert_eq!(b.take_residency().bytes_copied, 4 * 16 * 16 * 4);
     }
 }

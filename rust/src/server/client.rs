@@ -33,7 +33,7 @@ impl MatexpClient {
     }
 
     fn roundtrip(&mut self, req: &WireRequest) -> Result<WireResponse> {
-        let mut line = req.encode().into_bytes();
+        let mut line = req.encode()?.into_bytes();
         line.push(b'\n');
         self.writer.write_all(&line)?;
         let mut buf = String::new();

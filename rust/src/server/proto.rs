@@ -45,6 +45,10 @@ pub struct WireDeviceStats {
     pub multiplies: usize,
     pub h2d_transfers: usize,
     pub d2h_transfers: usize,
+    /// Host-edge bytes this device's data path copied.
+    pub bytes_copied: u64,
+    /// Launch outputs served from recycled arena buffers.
+    pub buffers_recycled: u64,
     pub wall_s: f64,
 }
 
@@ -55,6 +59,13 @@ pub struct WireStats {
     pub multiplies: usize,
     pub h2d_transfers: usize,
     pub d2h_transfers: usize,
+    /// Host-edge bytes the data path copied (two edge transfers on the
+    /// device-resident disciplines; O(launches·n²) on clone-per-launch).
+    pub bytes_copied: u64,
+    /// Launch outputs served from recycled arena buffers.
+    pub buffers_recycled: u64,
+    /// High-water mark of resident device-buffer bytes.
+    pub peak_resident_bytes: u64,
     pub wall_s: f64,
     /// Per-device breakdown (empty off the pool backend).
     pub per_device: Vec<WireDeviceStats>,
@@ -67,6 +78,9 @@ impl From<ExecStats> for WireStats {
             multiplies: s.multiplies,
             h2d_transfers: s.h2d_transfers,
             d2h_transfers: s.d2h_transfers,
+            bytes_copied: s.bytes_copied,
+            buffers_recycled: s.buffers_recycled,
+            peak_resident_bytes: s.peak_resident_bytes,
             wall_s: s.wall_s,
             per_device: s
                 .per_device
@@ -77,6 +91,8 @@ impl From<ExecStats> for WireStats {
                     multiplies: d.multiplies,
                     h2d_transfers: d.h2d_transfers,
                     d2h_transfers: d.d2h_transfers,
+                    bytes_copied: d.bytes_copied,
+                    buffers_recycled: d.buffers_recycled,
                     wall_s: d.wall_s,
                 })
                 .collect(),
@@ -96,6 +112,8 @@ impl WireStats {
                     ("multiplies", d.multiplies),
                     ("h2d_transfers", d.h2d_transfers),
                     ("d2h_transfers", d.d2h_transfers),
+                    ("bytes_copied", d.bytes_copied),
+                    ("buffers_recycled", d.buffers_recycled),
                     ("wall_s", d.wall_s),
                 ]
             })
@@ -105,6 +123,9 @@ impl WireStats {
             ("multiplies", self.multiplies),
             ("h2d_transfers", self.h2d_transfers),
             ("d2h_transfers", self.d2h_transfers),
+            ("bytes_copied", self.bytes_copied),
+            ("buffers_recycled", self.buffers_recycled),
+            ("peak_resident_bytes", self.peak_resident_bytes),
             ("wall_s", self.wall_s),
             ("per_device", Json::Arr(per_device)),
         ]
@@ -134,6 +155,11 @@ impl WireStats {
                         .get("d2h_transfers")
                         .and_then(Json::as_usize)
                         .unwrap_or(0),
+                    bytes_copied: d.get("bytes_copied").and_then(Json::as_u64).unwrap_or(0),
+                    buffers_recycled: d
+                        .get("buffers_recycled")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
                     wall_s: d.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0),
                 })
                 .collect(),
@@ -144,6 +170,13 @@ impl WireStats {
             multiplies: want("multiplies")?.as_usize().unwrap_or(0),
             h2d_transfers: want("h2d_transfers")?.as_usize().unwrap_or(0),
             d2h_transfers: want("d2h_transfers")?.as_usize().unwrap_or(0),
+            // legacy stats blocks without the residency fields decode to 0
+            bytes_copied: v.get("bytes_copied").and_then(Json::as_u64).unwrap_or(0),
+            buffers_recycled: v.get("buffers_recycled").and_then(Json::as_u64).unwrap_or(0),
+            peak_resident_bytes: v
+                .get("peak_resident_bytes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
             wall_s: want("wall_s")?.as_f64().unwrap_or(0.0),
             per_device,
         })
@@ -170,9 +203,11 @@ pub enum WireResponse {
 }
 
 impl WireRequest {
-    /// Encode as one JSON line (no trailing newline).
-    pub fn encode(&self) -> String {
-        match self {
+    /// Encode as one JSON line (no trailing newline). Errors if a JSON
+    /// payload contains NaN/±Inf (not representable in JSON — use the
+    /// base64 payload, which is bit-exact for any value).
+    pub fn encode(&self) -> Result<String> {
+        Ok(match self {
             WireRequest::Ping => r#"{"op":"ping"}"#.to_string(),
             WireRequest::Metrics => r#"{"op":"metrics"}"#.to_string(),
             WireRequest::Expm { n, power, method, matrix, payload } => {
@@ -183,7 +218,7 @@ impl WireRequest {
                 match payload {
                     Payload::Json => {
                         s.push_str("\"matrix\":");
-                        write_f32_array(matrix, &mut s);
+                        write_f32_array(matrix, &mut s)?;
                     }
                     Payload::Base64 => {
                         s.push_str("\"matrix_b64\":\"");
@@ -194,7 +229,7 @@ impl WireRequest {
                 s.push('}');
                 s
             }
-        }
+        })
     }
 
     /// Decode one JSON line.
@@ -288,9 +323,12 @@ impl WireResponse {
         WireResponse::Ok { result: None, stats: None, metrics: None, payload: Payload::Json }
     }
 
-    /// Encode as one JSON line (no trailing newline).
-    pub fn encode(&self) -> String {
-        match self {
+    /// Encode as one JSON line (no trailing newline). Errors if a JSON
+    /// result payload contains NaN/±Inf (e.g. an overflowed power) —
+    /// callers report the typed error instead of emitting a corrupted
+    /// array; the base64 payload carries non-finite values bit-exactly.
+    pub fn encode(&self) -> Result<String> {
+        Ok(match self {
             WireResponse::Error { message, kind } => {
                 json_obj![
                     ("status", "error"),
@@ -305,7 +343,7 @@ impl WireResponse {
                     match payload {
                         Payload::Json => {
                             s.push_str(r#","result":"#);
-                            write_f32_array(data, &mut s);
+                            write_f32_array(data, &mut s)?;
                         }
                         Payload::Base64 => {
                             s.push_str(r#","result_b64":""#);
@@ -325,7 +363,7 @@ impl WireResponse {
                 s.push('}');
                 s
             }
-        }
+        })
     }
 
     /// Decode one JSON line.
@@ -384,7 +422,7 @@ mod tests {
             matrix: vec![1.0; 4],
             payload: Payload::Json,
         };
-        let s = r.encode();
+        let s = r.encode().unwrap();
         assert!(s.contains("\"op\":\"expm\""), "{s}");
         assert_eq!(WireRequest::decode(&s).unwrap(), r);
     }
@@ -398,7 +436,7 @@ mod tests {
             matrix: vec![0.1, -2.5, 3.0, f32::MIN_POSITIVE],
             payload: Payload::Base64,
         };
-        let s = r.encode();
+        let s = r.encode().unwrap();
         assert!(s.contains("matrix_b64"), "{s}");
         assert!(!s.contains("\"matrix\""), "{s}");
         assert_eq!(WireRequest::decode(&s).unwrap(), r);
@@ -409,13 +447,35 @@ mod tests {
             metrics: None,
             payload: Payload::Base64,
         };
-        assert_eq!(WireResponse::decode(&resp.encode()).unwrap(), resp);
+        assert_eq!(WireResponse::decode(&resp.encode().unwrap()).unwrap(), resp);
+    }
+
+    #[test]
+    fn non_finite_json_payload_is_a_typed_error_but_base64_is_exact() {
+        let make = |payload| WireResponse::Ok {
+            result: Some(vec![1.0, f32::NAN, f32::INFINITY]),
+            stats: None,
+            metrics: None,
+            payload,
+        };
+        // JSON has no NaN/Inf: encoding must refuse, not corrupt
+        assert!(make(Payload::Json).encode().is_err());
+        // base64 carries the same values bit-exactly
+        let resp = make(Payload::Base64);
+        match WireResponse::decode(&resp.encode().unwrap()).unwrap() {
+            WireResponse::Ok { result: Some(data), .. } => {
+                assert_eq!(data[0], 1.0);
+                assert!(data[1].is_nan());
+                assert_eq!(data[2], f32::INFINITY);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
     fn ping_metrics_roundtrip() {
         for r in [WireRequest::Ping, WireRequest::Metrics] {
-            assert_eq!(WireRequest::decode(&r.encode()).unwrap(), r);
+            assert_eq!(WireRequest::decode(&r.encode().unwrap()).unwrap(), r);
         }
     }
 
@@ -428,13 +488,19 @@ mod tests {
                 multiplies: 4,
                 h2d_transfers: 1,
                 d2h_transfers: 1,
+                bytes_copied: 2048,
+                buffers_recycled: 7,
+                peak_resident_bytes: 4096,
                 wall_s: 0.5,
                 per_device: Vec::new(),
             }),
             metrics: None,
             payload: Payload::Json,
         };
-        assert_eq!(WireResponse::decode(&resp.encode()).unwrap(), resp);
+        let line = resp.encode().unwrap();
+        assert!(line.contains("bytes_copied"), "{line}");
+        assert!(line.contains("peak_resident_bytes"), "{line}");
+        assert_eq!(WireResponse::decode(&line).unwrap(), resp);
     }
 
     #[test]
@@ -446,6 +512,9 @@ mod tests {
                 multiplies: 16,
                 h2d_transfers: 12,
                 d2h_transfers: 4,
+                bytes_copied: 65536,
+                buffers_recycled: 12,
+                peak_resident_bytes: 1 << 20,
                 wall_s: 0.25,
                 per_device: vec![
                     WireDeviceStats {
@@ -454,6 +523,8 @@ mod tests {
                         multiplies: 10,
                         h2d_transfers: 7,
                         d2h_transfers: 2,
+                        bytes_copied: 40960,
+                        buffers_recycled: 8,
                         wall_s: 0.25,
                     },
                     WireDeviceStats {
@@ -462,6 +533,8 @@ mod tests {
                         multiplies: 6,
                         h2d_transfers: 5,
                         d2h_transfers: 2,
+                        bytes_copied: 24576,
+                        buffers_recycled: 4,
                         wall_s: 0.1,
                     },
                 ],
@@ -469,14 +542,17 @@ mod tests {
             metrics: None,
             payload: Payload::Json,
         };
-        let line = resp.encode();
+        let line = resp.encode().unwrap();
         assert!(line.contains("per_device"), "{line}");
         assert!(line.contains("sim#0"), "{line}");
         assert_eq!(WireResponse::decode(&line).unwrap(), resp);
-        // stats blocks without the field decode to an empty breakdown
+        // stats blocks without the newer fields decode to an empty
+        // breakdown and zeroed residency counters (legacy peers)
         let legacy = r#"{"launches":1,"multiplies":1,"h2d_transfers":1,"d2h_transfers":1,"wall_s":0.1}"#;
         let stats = WireStats::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert!(stats.per_device.is_empty());
+        assert_eq!(stats.bytes_copied, 0);
+        assert_eq!(stats.peak_resident_bytes, 0);
     }
 
     #[test]
@@ -493,7 +569,7 @@ mod tests {
 
     #[test]
     fn error_serializes_with_status_tag() {
-        let s = WireResponse::error("nope").encode();
+        let s = WireResponse::error("nope").encode().unwrap();
         assert!(s.contains("\"status\":\"error\""), "{s}");
         match WireResponse::decode(&s).unwrap() {
             WireResponse::Error { message, kind } => {
@@ -507,7 +583,7 @@ mod tests {
     #[test]
     fn admission_errors_keep_their_kind_across_the_wire() {
         let e = MatexpError::Admission("matrix too big".into());
-        let s = WireResponse::from_error(&e).encode();
+        let s = WireResponse::from_error(&e).encode().unwrap();
         assert!(s.contains("\"kind\":\"admission\""), "{s}");
         match WireResponse::decode(&s).unwrap() {
             WireResponse::Error { message, kind } => {
@@ -544,7 +620,7 @@ mod tests {
             matrix: vec![0.5; 4],
             payload: Payload::Base64,
         };
-        assert!(!r.encode().contains('\n'));
-        assert!(!WireResponse::pong().encode().contains('\n'));
+        assert!(!r.encode().unwrap().contains('\n'));
+        assert!(!WireResponse::pong().encode().unwrap().contains('\n'));
     }
 }

@@ -49,7 +49,17 @@ pub fn serve_background(
         .name("matexp-accept".into())
         .spawn(move || {
             for stream in listener.incoming() {
-                let Ok(stream) = stream else { return };
+                // a transient accept failure (EMFILE, aborted handshake,
+                // ECONNRESET) must not kill the listener: log and keep
+                // serving — one bad connection is that connection's
+                // problem, not the server's
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("accept error (continuing): {e}");
+                        continue;
+                    }
+                };
                 let service = Arc::clone(&service);
                 pool.execute(move || {
                     let peer = stream
@@ -87,7 +97,14 @@ fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
             Ok(req) => dispatch(service, req),
             Err(e) => WireResponse::error(format!("bad request: {e}")),
         };
-        let mut out = response.encode().into_bytes();
+        // an unencodable payload (non-finite result in a JSON payload)
+        // degrades to a wire error; error responses always encode
+        let encoded = response.encode().unwrap_or_else(|e| {
+            WireResponse::error(format!("unencodable response: {e}"))
+                .encode()
+                .expect("error responses contain no payload")
+        });
+        let mut out = encoded.into_bytes();
         out.push(b'\n');
         writer.write_all(&out)?;
     }

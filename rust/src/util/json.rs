@@ -337,8 +337,16 @@ macro_rules! json_obj {
 /// Numbers are formatted as *f32* shortest round-trip — going through f64
 /// emits up to 17 digits for what is exactly representable in 9
 /// (`0.1f32` → `"0.10000000149011612"`), which costs 2.4x the bytes and
-/// most of the encode time.
-pub fn write_f32_array(data: &[f32], out: &mut String) {
+/// most of the encode time. Every finite value (subnormals included)
+/// reparses bit-exactly; a proptest holds this invariant.
+///
+/// JSON has no NaN/±Inf, so a non-finite element is a **typed error**
+/// (`out` is rolled back to its original length) — callers either
+/// guarantee finiteness or surface the error (the wire layer reports it
+/// as a protocol error rather than silently corrupting the payload, which
+/// is what the old `null`-emitting behavior did).
+pub fn write_f32_array(data: &[f32], out: &mut String) -> JsonResult<()> {
+    let rollback = out.len();
     out.reserve(data.len() * 12 + 2);
     out.push('[');
     for (i, v) in data.iter().enumerate() {
@@ -347,7 +355,17 @@ pub fn write_f32_array(data: &[f32], out: &mut String) {
         }
         let v = *v;
         if !v.is_finite() {
-            out.push_str("null");
+            out.truncate(rollback);
+            return Err(JsonError {
+                offset: i,
+                message: format!(
+                    "element {i} is {v}: NaN/Inf are not representable in JSON \
+                     (use the base64 payload for non-finite matrices)"
+                ),
+            });
+        } else if v == 0.0 && v.is_sign_negative() {
+            // `0.0 as i64` would drop the sign; "-0" reparses bit-exactly
+            out.push_str("-0");
         } else if v == v.trunc() && v.abs() < 1e7 {
             let _ = write!(out, "{}", v as i64);
         } else {
@@ -355,6 +373,7 @@ pub fn write_f32_array(data: &[f32], out: &mut String) {
         }
     }
     out.push(']');
+    Ok(())
 }
 
 fn write_num(x: f64, out: &mut String) {
@@ -710,12 +729,75 @@ mod tests {
     #[test]
     fn write_f32_array_fast_path() {
         let mut s = String::new();
-        write_f32_array(&[1.0, -0.5, 3.25], &mut s);
+        write_f32_array(&[1.0, -0.5, 3.25], &mut s).unwrap();
         assert_eq!(s, "[1,-0.5,3.25]");
         assert_eq!(
             Json::parse(&s).unwrap().as_f32_vec().unwrap(),
             vec![1.0, -0.5, 3.25]
         );
+    }
+
+    #[test]
+    fn write_f32_array_rejects_non_finite_and_rolls_back() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut s = String::from("prefix:");
+            let err = write_f32_array(&[1.0, bad], &mut s).unwrap_err();
+            assert!(err.message.contains("not representable"), "{err}");
+            assert_eq!(s, "prefix:", "failed encode must not leave partial output");
+        }
+    }
+
+    fn roundtrip_bits(vals: &[f32]) -> Vec<u32> {
+        let mut s = String::new();
+        write_f32_array(vals, &mut s).unwrap();
+        Json::parse(&s)
+            .unwrap()
+            .as_f32_vec()
+            .unwrap()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect()
+    }
+
+    #[test]
+    fn write_f32_array_subnormals_and_edges_roundtrip_bit_exactly() {
+        let edges = [
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,               // smallest normal
+            f32::MIN_POSITIVE / 2.0,         // subnormal
+            f32::from_bits(1),               // smallest subnormal (1.4e-45)
+            f32::from_bits(0x8000_0001),     // smallest negative subnormal
+            f32::MAX,
+            f32::MIN,
+            1e7,                             // just past the integer fast path
+            9_999_999.0,
+            -9_999_999.0,
+            0.1,
+            std::f32::consts::PI,
+        ];
+        let want: Vec<u32> = edges.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(roundtrip_bits(&edges), want);
+    }
+
+    #[test]
+    fn prop_f32_arrays_reparse_bit_exactly() {
+        use crate::util::prop::property;
+        // arbitrary finite bit patterns — subnormals, -0.0 and extreme
+        // exponents included — must survive the wire bit-for-bit
+        property("write_f32_array roundtrips bit-exactly", 192, |g| {
+            let len = g.usize(0, 12);
+            let vals: Vec<f32> = (0..len)
+                .map(|_| loop {
+                    let v = f32::from_bits(g.u64(0, u32::MAX as u64) as u32);
+                    if v.is_finite() {
+                        break v;
+                    }
+                })
+                .collect();
+            let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(roundtrip_bits(&vals), want, "vals {vals:?}");
+        });
     }
 
     #[test]

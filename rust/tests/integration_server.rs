@@ -72,6 +72,23 @@ fn metrics_endpoint_reports_counts() {
     // planner = ONE square4-chain launch (2^4)
     assert!(m.get("launches_total").and_then(Json::as_u64).unwrap() >= 15 + 1);
     assert!(m.get("latency_p50_us").is_some());
+    // the residency counters are live on the wire: ours copies its two
+    // host edges, naive-gpu round-trips 15 × 3 edges — 47 edges total
+    let bytes = m.get("bytes_copied_total").and_then(Json::as_u64).unwrap();
+    assert_eq!(bytes, 47 * 16 * 16 * 4, "{m}");
+    assert!(m.get("buffers_recycled_total").and_then(Json::as_u64).is_some());
+}
+
+#[test]
+fn expm_response_carries_residency_stats() {
+    let (_service, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let a = Matrix::random_spectral(16, 0.9, 9);
+    let (_, stats) = client.expm(&a, 1024, Method::OursPacked).expect("expm");
+    // device-resident discipline: exactly the two host-edge transfers
+    assert_eq!(stats.bytes_copied, 2 * 16 * 16 * 4, "{stats:?}");
+    assert!(stats.buffers_recycled > 0, "{stats:?}");
+    assert!(stats.peak_resident_bytes > 0, "{stats:?}");
 }
 
 #[test]
@@ -94,6 +111,33 @@ fn malformed_lines_get_error_responses_and_connection_survives() {
     // connection still usable after errors
     let resp = send_recv(r#"{"op":"ping"}"#);
     assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+}
+
+#[test]
+fn listener_survives_bad_connections() {
+    // regression: the accept loop used to exit on the first connection
+    // error, silently killing the server. Slam it with connections that
+    // die mid-handshake/mid-line and verify later clients still get
+    // served.
+    let (_service, addr) = start_server();
+    for i in 0..8 {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        if i % 2 == 0 {
+            // half-written garbage, never terminated by a newline
+            let _ = w.write_all(b"{\"op\":\"expm\",\"n\":4,");
+        }
+        let _ = stream.shutdown(std::net::Shutdown::Both);
+        drop(w);
+        drop(stream); // slam the connection shut
+    }
+    // the listener must still accept and serve
+    let mut client = MatexpClient::connect(&addr).expect("listener still alive");
+    client.ping().expect("server still serves after bad connections");
+    let a = Matrix::random_spectral(8, 0.9, 3);
+    let want = linalg::expm::expm(&a, 8, CpuAlgo::Ikj).unwrap();
+    let (got, _) = client.expm(&a, 8, Method::Ours).expect("expm after bad connections");
+    assert!(got.approx_eq(&want, 1e-3, 1e-3));
 }
 
 #[test]
