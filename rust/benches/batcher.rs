@@ -10,6 +10,7 @@ use matexp::config::{BatcherConfig, MatexpConfig};
 use matexp::coordinator::batcher::Batcher;
 use matexp::coordinator::request::{ExpmRequest, Method};
 use matexp::coordinator::service::Service;
+use matexp::exec::Submission;
 use matexp::linalg::matrix::Matrix;
 
 fn main() {
@@ -38,12 +39,8 @@ fn pure_batcher_throughput() {
             let now = Instant::now();
             let mut shipped = 0usize;
             for i in 0..REQS {
-                let req = ExpmRequest {
-                    id: i as u64,
-                    matrix: matrices[i % sizes].clone(),
-                    power: 64,
-                    method: Method::Ours,
-                };
+                let req =
+                    ExpmRequest::new(i as u64, matrices[i % sizes].clone(), 64, Method::Ours);
                 if let Some(batch) = b.push(req, now) {
                     shipped += batch.requests.len();
                 }
@@ -73,10 +70,11 @@ fn service_throughput() {
             return;
         }
     };
-    // warm all worker engines
+    // warm all worker engines (through the async submission surface)
     for _ in 0..8 {
         let a = Matrix::random_spectral(16, 0.9, 7);
-        service.submit(a, 64, Method::Ours).expect("warm");
+        let mut job = service.submit_job(Submission::expm(a, 64)).expect("warm submit");
+        job.wait().expect("warm");
     }
 
     const CLIENTS: usize = 8;
@@ -89,7 +87,10 @@ fn service_throughput() {
                 let a = Matrix::random_spectral(16, 0.9, c as u64);
                 for i in 0..PER_CLIENT {
                     let power = [64u64, 128, 256][(c + i) % 3];
-                    let resp = service.submit(a.clone(), power, Method::Ours).expect("submit");
+                    let mut job = service
+                        .submit_job(Submission::expm(a.clone(), power))
+                        .expect("submit");
+                    let resp = job.wait().expect("serve");
                     black_box(resp.stats.launches);
                 }
             });

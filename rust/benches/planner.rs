@@ -55,6 +55,7 @@ fn main() {
         stats: None,
         metrics: None,
         payload: matexp::server::proto::Payload::Json,
+        id: None,
     };
     runner.bench("wire-encode/512x512/json", || {
         black_box(resp.encode().unwrap());
@@ -68,6 +69,7 @@ fn main() {
         stats: None,
         metrics: None,
         payload: matexp::server::proto::Payload::Base64,
+        id: None,
     };
     runner.bench("wire-encode/512x512/b64", || {
         black_box(resp_b64.encode().unwrap());

@@ -68,8 +68,8 @@ fn main() -> Result<()> {
     println!("{:<8} {:>12} {:>10} {:>12} {:>10}", "length", "walks(0→0)", "launches", "max count", "exact?");
 
     for k in [2u64, 4, 8, 12] {
-        let plan = Plan::binary(k, true);
-        let (ak, stats) = engine.expm(&a, &plan)?;
+        let resp = engine.run(Submission::expm(a.clone(), k).plan(Plan::binary(k, true)))?;
+        let (ak, stats) = (resp.result, resp.stats);
         let exact = exact_walks(&a, k);
 
         // every count must round-trip exactly through f32
@@ -97,7 +97,7 @@ fn main() -> Result<()> {
     }
 
     // connectivity: diameter bound — some power with all entries > 0
-    let (a16, _) = engine.expm(&a, &Plan::binary(16, true))?;
+    let a16 = engine.run(Submission::expm(a.clone(), 16).plan(Plan::binary(16, true)))?.result;
     let reachable = a16.data().iter().filter(|&&v| v > 0.0).count();
     println!(
         "\nafter 16 steps {reachable}/{} node pairs are connected by a walk",

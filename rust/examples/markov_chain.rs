@@ -24,8 +24,8 @@ fn main() -> Result<()> {
     // as the power doubles the rows collapse onto π; watch the spread
     let mut prev_rows: Option<Matrix> = None;
     for power in [2u64, 8, 64, 512, 1024] {
-        let plan = Plan::binary(power, true);
-        let (pk, stats) = engine.expm(&p, &plan)?;
+        let resp = engine.run(Submission::expm(p.clone(), power).plan(Plan::binary(power, true)))?;
+        let (pk, stats) = (resp.result, resp.stats);
 
         // spread = max over columns of (max - min) across rows; 0 ⇒ all
         // rows identical ⇒ converged to the stationary distribution

@@ -47,13 +47,14 @@ fn main() -> Result<()> {
     let mut cfg = MatexpConfig::default();
     cfg.backend = BackendKind::Sim;
     let mut single = AnyEngine::from_config(&cfg)?;
-    let (want, single_stats) = single.expm(&a, &plan)?;
+    let resp = single.run(Submission::expm(a.clone(), power).plan(plan.clone()))?;
+    let (want, single_stats) = (resp.result, resp.stats);
     println!("single sim device ({}):", single.platform());
     show(&single_stats);
 
     // 2. four simulated C2050s: the splitter tile-shards each multiply
     let cfg4 = pool_cfg(vec![PoolDeviceKind::Sim; 4]);
-    let pool4 = PoolEngine::from_config(&cfg4)?;
+    let mut pool4 = PoolEngine::from_config(&cfg4)?;
     match pool4.pool().shard_decision(n) {
         ShardDecision::Shard(sp) => println!(
             "\n4x sim pool shards on a {g}x{g} grid (predicted {pred}/multiply):",
@@ -62,7 +63,9 @@ fn main() -> Result<()> {
         ),
         ShardDecision::Single { .. } => println!("\n4x sim pool declined to shard:"),
     }
-    let (got, pool_stats) = pool4.expm(&a, &plan)?;
+    // the IDENTICAL submission, now answered by four devices
+    let resp = pool4.run(Submission::expm(a.clone(), power).plan(plan.clone()))?;
+    let (got, pool_stats) = (resp.result, resp.stats);
     assert!(got.approx_eq(&want, 1e-3, 1e-3), "pool result diverged");
     show(&pool_stats);
     println!(
@@ -76,11 +79,8 @@ fn main() -> Result<()> {
     let cfg_h = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Sim]);
     let hetero = PoolEngine::from_config(&cfg_h)?;
     let reqs: Vec<ExpmRequest> = (0..16)
-        .map(|i| ExpmRequest {
-            id: i + 1,
-            matrix: Matrix::random_spectral(small_n, 0.95, i + 1),
-            power: 64,
-            method: Method::Ours,
+        .map(|i| {
+            ExpmRequest::new(i + 1, Matrix::random_spectral(small_n, 0.95, i + 1), 64, Method::Ours)
         })
         .collect();
     let oracles: Vec<Matrix> = (0..16)

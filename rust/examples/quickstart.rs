@@ -21,9 +21,10 @@ fn main() -> Result<()> {
     let a = Matrix::random_spectral(n, 0.999, 42);
     engine.warmup_exec(n)?; // first execution of each op pays XLA thunk init
 
-    // 1. the paper's approach: binary plan, device-resident buffers
-    let plan = Plan::binary(power, true);
-    let (ours, ours_stats) = engine.expm(&a, &plan)?;
+    // 1. the paper's approach: binary plan, device-resident buffers —
+    //    submitted through the one execution surface (exec::Executor)
+    let resp = engine.run(Submission::expm(a.clone(), power).plan(Plan::binary(power, true)))?;
+    let (ours, ours_stats) = (resp.result, resp.stats);
     println!(
         "\nours       : {:>3} launches, {:>3} multiplies, {} transfers, {}",
         ours_stats.launches,
@@ -33,7 +34,8 @@ fn main() -> Result<()> {
     );
 
     // 2. the naive GPU baseline: one launch per multiply, round-trip each
-    let (naive, naive_stats) = engine.expm_naive_roundtrip(&a, power)?;
+    let resp = engine.run(Submission::expm(a.clone(), power).method(Method::NaiveGpu))?;
+    let (naive, naive_stats) = (resp.result, resp.stats);
     println!(
         "naive-gpu  : {:>3} launches, {:>3} multiplies, {} transfers, {}",
         naive_stats.launches,

@@ -77,6 +77,22 @@ fn main() -> Result<()> {
     println!("throughput : {:.1} req/s ({} requests in {})", total as f64 / wall, total, format_secs(wall));
     println!("latency    : p50 {}  p90 {}  p99 {}", format_secs(pct(0.50)), format_secs(pct(0.90)), format_secs(pct(0.99)));
 
+    // pipelining: ONE connection, a burst of id-tagged requests in
+    // flight at once, resolved in reverse submission order
+    let mut pipelined = MatexpClient::connect(&addr)?;
+    let burst: Vec<(Matrix, matexp::server::client::PendingExpm)> = (0..8u64)
+        .map(|i| {
+            let a = Matrix::random_spectral(32, 0.85, 9000 + i);
+            let ticket = pipelined.submit(&a, 64 + i, Method::Ours).expect("submit");
+            (a, ticket)
+        })
+        .collect();
+    for (_, ticket) in burst.iter().rev() {
+        let (result, _) = pipelined.wait(ticket).expect("pipelined wait");
+        assert!(result.is_finite());
+    }
+    println!("\npipelined burst: 8 in-flight requests on one connection, all answered");
+
     // server-side view over the metrics endpoint
     let mut client = MatexpClient::connect(&addr)?;
     let m = client.metrics()?;

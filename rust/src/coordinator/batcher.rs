@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::BatcherConfig;
 use crate::coordinator::request::ExpmRequest;
+use crate::exec::Priority;
 
 /// A group of same-size requests dispatched to one worker.
 #[derive(Debug)]
@@ -25,10 +26,18 @@ pub struct Batch {
     pub opened_at: Instant,
 }
 
+/// How much longer an all-[`Priority::Low`] batch may wait for
+/// batch-mates than the configured `max_wait` (latency-insensitive work
+/// coalesces harder and yields the workers to fresher traffic).
+const LOW_PRIORITY_WAIT_FACTOR: u32 = 4;
+
 struct Pending {
     n: usize,
     requests: Vec<ExpmRequest>,
     opened_at: Instant,
+    /// Every member is `Priority::Low` (a Normal/High arrival restores
+    /// the regular deadline for the whole batch).
+    all_low: bool,
 }
 
 /// Size-or-deadline dynamic batcher, one pending batch per matrix size.
@@ -59,31 +68,55 @@ impl Batcher {
         self.queued >= self.cfg.max_queue
     }
 
-    /// Enqueue a request; returns a batch if it just became full.
+    /// Enqueue a request; returns a batch if it just became full — or
+    /// immediately for a [`Priority::High`] request, which must not wait
+    /// for batch-mates (it ships with whatever same-size requests were
+    /// already pending).
     pub fn push(&mut self, req: ExpmRequest, now: Instant) -> Option<Batch> {
         let n = req.n();
+        let urgent = req.priority == Priority::High;
+        let low = req.priority == Priority::Low;
         self.queued += 1;
         match self.pending.iter_mut().find(|p| p.n == n) {
-            Some(p) => p.requests.push(req),
+            Some(p) => {
+                p.all_low &= low;
+                p.requests.push(req);
+            }
             None => {
-                self.pending.push(Pending { n, requests: vec![req], opened_at: now });
+                self.pending.push(Pending {
+                    n,
+                    requests: vec![req],
+                    opened_at: now,
+                    all_low: low,
+                });
                 self.order.push_back(n);
             }
         }
         let p = self.pending.iter().find(|p| p.n == n).expect("just inserted");
-        if p.requests.len() >= self.cfg.max_batch {
+        if urgent || p.requests.len() >= self.cfg.max_batch {
             return self.take(n);
         }
         None
     }
 
-    /// Ship every pending batch whose oldest request exceeded `max_wait`.
+    /// The wait budget of one pending batch: `max_wait`, stretched by
+    /// [`LOW_PRIORITY_WAIT_FACTOR`] when every member is `Priority::Low`.
+    fn wait_budget(&self, p: &Pending) -> Duration {
+        let base = Duration::from_millis(self.cfg.max_wait_ms);
+        if p.all_low {
+            base * LOW_PRIORITY_WAIT_FACTOR
+        } else {
+            base
+        }
+    }
+
+    /// Ship every pending batch whose oldest request exceeded its wait
+    /// budget.
     pub fn flush_due(&mut self, now: Instant) -> Vec<Batch> {
-        let max_wait = Duration::from_millis(self.cfg.max_wait_ms);
         let due: Vec<usize> = self
             .pending
             .iter()
-            .filter(|p| now.duration_since(p.opened_at) >= max_wait)
+            .filter(|p| now.duration_since(p.opened_at) >= self.wait_budget(p))
             .map(|p| p.n)
             .collect();
         due.into_iter().filter_map(|n| self.take(n)).collect()
@@ -97,8 +130,7 @@ impl Batcher {
 
     /// Earliest deadline among pending batches (collector sleep hint).
     pub fn next_deadline(&self) -> Option<Instant> {
-        let max_wait = Duration::from_millis(self.cfg.max_wait_ms);
-        self.pending.iter().map(|p| p.opened_at + max_wait).min()
+        self.pending.iter().map(|p| p.opened_at + self.wait_budget(p)).min()
     }
 
     fn take(&mut self, n: usize) -> Option<Batch> {
@@ -117,7 +149,7 @@ mod tests {
     use crate::linalg::matrix::Matrix;
 
     fn req(id: u64, n: usize) -> ExpmRequest {
-        ExpmRequest { id, matrix: Matrix::zeros(n), power: 8, method: Method::Ours }
+        ExpmRequest::new(id, Matrix::zeros(n), 8, Method::Ours)
     }
 
     fn cfg(max_batch: usize, max_wait_ms: u64, max_queue: usize) -> BatcherConfig {
@@ -197,6 +229,50 @@ mod tests {
         assert!(!b.is_full());
         b.push(req(2, 8), now);
         assert!(b.is_full());
+    }
+
+    #[test]
+    fn high_priority_ships_immediately_with_pending_batchmates() {
+        let mut b = Batcher::new(cfg(16, 1000, 100));
+        let now = Instant::now();
+        assert!(b.push(req(1, 8), now).is_none(), "normal priority waits");
+        let mut urgent = req(2, 8);
+        urgent.priority = Priority::High;
+        let batch = b.push(urgent, now).expect("high priority must not wait");
+        assert_eq!(batch.requests.len(), 2, "ships with queued same-size mates");
+        assert!(b.is_empty());
+        // a lone high-priority request ships alone
+        let mut solo = req(3, 16);
+        solo.priority = Priority::High;
+        let batch = b.push(solo, now).expect("ships alone");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn low_priority_waits_longer_until_a_normal_joins() {
+        let mut b = Batcher::new(cfg(16, 5, 100));
+        let t0 = Instant::now();
+        let mut lazy = req(1, 8);
+        lazy.priority = Priority::Low;
+        b.push(lazy, t0);
+        // past the normal deadline: an all-low batch keeps waiting…
+        assert!(b.flush_due(t0 + Duration::from_millis(5)).is_empty());
+        assert_eq!(
+            b.next_deadline().unwrap(),
+            t0 + Duration::from_millis(5 * LOW_PRIORITY_WAIT_FACTOR as u64)
+        );
+        // …until its stretched budget expires
+        let due = b.flush_due(t0 + Duration::from_millis(5 * LOW_PRIORITY_WAIT_FACTOR as u64));
+        assert_eq!(due.len(), 1);
+
+        // a Normal arrival restores the regular deadline for the batch
+        let mut lazy = req(2, 8);
+        lazy.priority = Priority::Low;
+        b.push(lazy, t0);
+        b.push(req(3, 8), t0);
+        let due = b.flush_due(t0 + Duration::from_millis(5));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests.len(), 2);
     }
 
     #[test]

@@ -8,13 +8,14 @@
 //! per-worker backend engines ([`crate::runtime::Backend`]) with
 //! device-resident buffers.
 //!
-//! Data flow:
+//! Data flow (submission is async — `submit_job` returns a
+//! [`crate::exec::JobHandle`] immediately; nothing parks per request):
 //!
 //! ```text
-//! submit() ──admission──▶ collector thread ──Batcher──▶ batch queue
-//!                                                        │ (mpsc)
-//!                                 worker 0..W (own Engine)┤
-//!                                 reply channel ◀─────────┘
+//! submit_job() ──admission──▶ collector thread ──Batcher──▶ batch queue
+//!      │ JobHandle                                           │ (mpsc)
+//!      ▼ wait/try_result/cancel    worker 0..W (own Engine) ─┤
+//!      reply registry (id → sender) ◀────────────────────────┘
 //! ```
 
 pub mod batcher;

@@ -1,7 +1,10 @@
 //! Request/response types of the serving layer.
 
+use std::time::Instant;
+
+use crate::exec::Priority;
 use crate::linalg::matrix::Matrix;
-use crate::plan::PlanKind;
+use crate::plan::{Plan, PlanKind};
 
 pub use crate::runtime::engine::ExecStats;
 
@@ -20,6 +23,9 @@ pub enum Method {
     FusedArtifact,
     /// Paper §4.2 baseline: one launch per multiply, host round-trip each.
     NaiveGpu,
+    /// Ablation A2's counterfactual: the same register plan as `Ours`,
+    /// but with a full host round-trip per launch.
+    PlanRoundtrip,
     /// Paper §4.1 baseline: sequential i-j-k on the CPU.
     CpuSeq,
 }
@@ -33,11 +39,12 @@ impl Method {
             Method::AdditionChain => "addition-chain",
             Method::FusedArtifact => "fused-artifact",
             Method::NaiveGpu => "naive-gpu",
+            Method::PlanRoundtrip => "plan-roundtrip",
             Method::CpuSeq => "cpu-seq",
         }
     }
 
-    pub fn all() -> [Method; 7] {
+    pub fn all() -> [Method; 8] {
         [
             Method::Ours,
             Method::OursPacked,
@@ -45,6 +52,7 @@ impl Method {
             Method::AdditionChain,
             Method::FusedArtifact,
             Method::NaiveGpu,
+            Method::PlanRoundtrip,
             Method::CpuSeq,
         ]
     }
@@ -67,16 +75,44 @@ impl std::fmt::Display for Method {
     }
 }
 
-/// One exponentiation request.
+/// One exponentiation request — the scheduled form of a
+/// [`crate::exec::Submission`] (build one with [`ExpmRequest::new`] or
+/// lower a submission via the [`crate::exec::Executor`] surface).
 #[derive(Clone, Debug)]
 pub struct ExpmRequest {
     pub id: u64,
     pub matrix: Matrix,
     pub power: u64,
     pub method: Method,
+    /// Explicit launch-plan override (local submissions only; plans do
+    /// not cross the wire).
+    pub plan: Option<Plan>,
+    /// Absolute completion deadline; expired requests fail with the
+    /// typed [`crate::error::MatexpError::Deadline`].
+    pub deadline: Option<Instant>,
+    /// Scheduling priority (`High` skips batch coalescing).
+    pub priority: Priority,
+    /// Requested accuracy bound (tight bounds pin conservative plans; a
+    /// non-finite result violates any tolerance).
+    pub tolerance: Option<f32>,
 }
 
 impl ExpmRequest {
+    /// A plain request with default qualifiers (no deadline, normal
+    /// priority, no plan override, no tolerance).
+    pub fn new(id: u64, matrix: Matrix, power: u64, method: Method) -> ExpmRequest {
+        ExpmRequest {
+            id,
+            matrix,
+            power,
+            method,
+            plan: None,
+            deadline: None,
+            priority: Priority::default(),
+            tolerance: None,
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.matrix.n()
     }
@@ -104,11 +140,14 @@ mod tests {
             assert_eq!(Method::from_str(m.as_str()).unwrap(), m);
         }
         assert!(Method::from_str("gpu-magic").is_err());
+        assert_eq!(Method::from_str("plan-roundtrip").unwrap(), Method::PlanRoundtrip);
     }
 
     #[test]
-    fn request_reports_size() {
-        let r = ExpmRequest { id: 1, matrix: Matrix::zeros(8), power: 4, method: Method::Ours };
+    fn request_reports_size_and_defaults() {
+        let r = ExpmRequest::new(1, Matrix::zeros(8), 4, Method::Ours);
         assert_eq!(r.n(), 8);
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.plan.is_none() && r.deadline.is_none() && r.tolerance.is_none());
     }
 }

@@ -19,6 +19,9 @@ pub const MAX_POWER: u64 = 1 << 30;
 pub enum Strategy {
     /// Replay a register plan with device-resident buffers.
     DeviceResident(Plan),
+    /// Replay a register plan with a full host round-trip per launch
+    /// (ablation A2's counterfactual).
+    PlanRoundtrip(Plan),
     /// Packed-state bit loop (`pack2`/`step_*`/`unpack0`).
     Packed,
     /// Single-launch `expm{N}` artifact.
@@ -32,15 +35,17 @@ pub enum Strategy {
 /// Validate a request against the config and the backend's servable
 /// sizes. An empty `sizes` slice means the backend is size-unrestricted
 /// (the pure-Rust backends); a non-empty slice is the artifact inventory
-/// (PJRT). Size-limit violations surface as the typed
-/// [`MatexpError::Admission`] so clients can tell "fix your request"
-/// apart from service failures.
+/// (PJRT). Every client-fixable rejection (bad power, non-finite input,
+/// size limits, unmeetable tolerance, bad plan override) surfaces as the
+/// typed [`MatexpError::Admission`] so clients — including remote ones,
+/// via the wire's error `kind` — can tell "fix your request" apart from
+/// service failures.
 pub fn admit(req: &ExpmRequest, sizes: &[usize], cfg: &MatexpConfig) -> Result<()> {
     if req.power == 0 {
-        return Err(MatexpError::Service("power must be >= 1".into()));
+        return Err(MatexpError::Admission("power must be >= 1".into()));
     }
     if req.power > MAX_POWER {
-        return Err(MatexpError::Service(format!(
+        return Err(MatexpError::Admission(format!(
             "power {} exceeds MAX_POWER {MAX_POWER}",
             req.power
         )));
@@ -56,7 +61,38 @@ pub fn admit(req: &ExpmRequest, sizes: &[usize], cfg: &MatexpConfig) -> Result<(
         )));
     }
     if !req.matrix.is_finite() {
-        return Err(MatexpError::Service("matrix contains non-finite values".into()));
+        return Err(MatexpError::Admission("matrix contains non-finite values".into()));
+    }
+    if let Some(tol) = req.tolerance {
+        // NaN is non-finite, so it is rejected here too
+        if !tol.is_finite() || tol <= 0.0 {
+            return Err(MatexpError::Admission(format!(
+                "tolerance {tol} is not a positive finite bound"
+            )));
+        }
+    }
+    // an explicit plan override must compute the power the request names
+    // (a mismatched plan would silently answer a different exponent, and
+    // a huge plan.power would bypass the MAX_POWER guard checked above),
+    // and only the plan-replaying disciplines accept one — on packed/
+    // fused/naive/cpu methods an override would silently switch the
+    // execution discipline while the response still reports the method
+    if let Some(plan) = &req.plan {
+        if plan.power != req.power {
+            return Err(MatexpError::Admission(format!(
+                "plan override computes power {} but the request asks for {}",
+                plan.power, req.power
+            )));
+        }
+        match req.method {
+            Method::Ours | Method::OursChained | Method::AdditionChain
+            | Method::PlanRoundtrip => {}
+            other => {
+                return Err(MatexpError::Admission(format!(
+                    "method {other} does not replay an explicit plan override"
+                )))
+            }
+        }
     }
     match req.method {
         Method::CpuSeq => Ok(()), // CPU path accepts any size
@@ -95,19 +131,36 @@ pub fn pool_dispatch(n: usize, requests: usize, cfg: &MatexpConfig) -> PoolDispa
     }
 }
 
-/// Pick the execution strategy for an admitted request.
+/// Tolerances below this bound pin the conservative binary plan (chained
+/// `square4` launches reassociate more aggressively).
+const CONSERVATIVE_TOL: f32 = 1e-6;
+
+/// Pick the execution strategy for an admitted request. An explicit
+/// plan override ([`ExpmRequest::plan`], set by
+/// [`crate::exec::Submission::plan`]) wins over the method→plan mapping;
+/// a tight tolerance pins the conservative binary plan for `Ours`.
 pub fn strategy_for(req: &ExpmRequest, cfg: &MatexpConfig) -> Strategy {
+    if let Some(plan) = &req.plan {
+        return match req.method {
+            Method::PlanRoundtrip => Strategy::PlanRoundtrip(plan.clone()),
+            _ => Strategy::DeviceResident(plan.clone()),
+        };
+    }
     match req.method {
-        Method::Ours => Strategy::DeviceResident(if cfg.use_square_chains {
-            Plan::chained(req.power, &[4, 2])
-        } else {
-            Plan::binary(req.power, false)
-        }),
+        Method::Ours => {
+            let conservative = req.tolerance.is_some_and(|t| t < CONSERVATIVE_TOL);
+            Strategy::DeviceResident(if cfg.use_square_chains && !conservative {
+                Plan::chained(req.power, &[4, 2])
+            } else {
+                Plan::binary(req.power, false)
+            })
+        }
         Method::OursChained => Strategy::DeviceResident(Plan::chained(req.power, &[4, 2])),
         Method::OursPacked => Strategy::Packed,
         Method::AdditionChain => Strategy::DeviceResident(Plan::addition_chain(req.power)),
         Method::FusedArtifact => Strategy::Fused,
         Method::NaiveGpu => Strategy::NaiveRoundtrip,
+        Method::PlanRoundtrip => Strategy::PlanRoundtrip(Plan::binary(req.power, false)),
         Method::CpuSeq => Strategy::CpuSequential,
     }
 }
@@ -118,7 +171,7 @@ mod tests {
     use crate::linalg::matrix::Matrix;
 
     fn req(n: usize, power: u64, method: Method) -> ExpmRequest {
-        ExpmRequest { id: 0, matrix: Matrix::identity(n), power, method }
+        ExpmRequest::new(0, Matrix::identity(n), power, method)
     }
 
     fn cfg() -> MatexpConfig {
@@ -185,8 +238,59 @@ mod tests {
     fn rejects_non_finite_matrix() {
         let mut m = Matrix::identity(8);
         m.set(0, 0, f32::NAN);
-        let r = ExpmRequest { id: 0, matrix: m, power: 2, method: Method::Ours };
+        let r = ExpmRequest::new(0, m, 2, Method::Ours);
         assert!(admit(&r, &[8], &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_plan_override_power_mismatch() {
+        let mut r = req(8, 512, Method::Ours);
+        r.plan = Some(Plan::binary(512, false));
+        admit(&r, &[], &cfg()).unwrap();
+        // a plan computing a different exponent than the request names
+        r.plan = Some(Plan::binary(256, false));
+        let err = admit(&r, &[], &cfg()).unwrap_err();
+        assert!(matches!(err, MatexpError::Admission(_)), "{err:?}");
+        // …and a huge plan must not smuggle past the MAX_POWER guard
+        let mut r = req(8, 2, Method::Ours);
+        r.plan = Some(Plan::binary(1 << 29, false));
+        assert!(admit(&r, &[], &cfg()).is_err());
+    }
+
+    #[test]
+    fn rejects_plan_override_on_non_plan_disciplines() {
+        // a plan override on packed/fused/naive/cpu methods would
+        // silently switch the discipline behind the reported method
+        for method in [
+            Method::OursPacked,
+            Method::FusedArtifact,
+            Method::NaiveGpu,
+            Method::CpuSeq,
+        ] {
+            let mut r = req(8, 64, method);
+            r.plan = Some(Plan::binary(64, false));
+            let err = admit(&r, &[], &cfg()).unwrap_err();
+            assert!(matches!(err, MatexpError::Admission(_)), "{method}: {err:?}");
+        }
+        // the plan-replaying disciplines accept it
+        for method in [Method::Ours, Method::OursChained, Method::AdditionChain, Method::PlanRoundtrip] {
+            let mut r = req(8, 64, method);
+            r.plan = Some(Plan::binary(64, false));
+            admit(&r, &[], &cfg()).unwrap_or_else(|e| panic!("{method}: {e}"));
+        }
+    }
+
+    #[test]
+    fn rejects_unmeetable_tolerances_typed() {
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            let mut r = req(8, 4, Method::Ours);
+            r.tolerance = Some(bad);
+            let err = admit(&r, &[], &cfg()).unwrap_err();
+            assert!(matches!(err, MatexpError::Admission(_)), "{bad}: {err:?}");
+        }
+        let mut r = req(8, 4, Method::Ours);
+        r.tolerance = Some(1e-4);
+        admit(&r, &[], &cfg()).unwrap();
     }
 
     #[test]
@@ -208,6 +312,42 @@ mod tests {
     fn strategy_covers_every_method() {
         for m in Method::all() {
             let _ = strategy_for(&req(64, 100, m), &cfg());
+        }
+        match strategy_for(&req(64, 100, Method::PlanRoundtrip), &cfg()) {
+            Strategy::PlanRoundtrip(p) => assert_eq!(p.kind, crate::plan::PlanKind::Binary),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_plan_override_wins() {
+        let mut r = req(64, 100, Method::Ours);
+        r.plan = Some(Plan::addition_chain(100));
+        match strategy_for(&r, &cfg()) {
+            Strategy::DeviceResident(p) => {
+                assert_eq!(p.kind, crate::plan::PlanKind::AdditionChain)
+            }
+            s => panic!("{s:?}"),
+        }
+        r.method = Method::PlanRoundtrip;
+        assert!(matches!(strategy_for(&r, &cfg()), Strategy::PlanRoundtrip(_)));
+    }
+
+    #[test]
+    fn tight_tolerance_pins_the_conservative_binary_plan() {
+        let c = cfg(); // default config chains squarings
+        assert!(c.use_square_chains);
+        let mut r = req(64, 512, Method::Ours);
+        r.tolerance = Some(1e-7);
+        match strategy_for(&r, &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Binary),
+            s => panic!("{s:?}"),
+        }
+        // a loose tolerance keeps the configured chained plan
+        r.tolerance = Some(1e-3);
+        match strategy_for(&r, &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Chained),
+            s => panic!("{s:?}"),
         }
     }
 }

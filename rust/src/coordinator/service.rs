@@ -4,8 +4,12 @@
 //! * N worker threads, each with its own backend engine (backends may be
 //!   `!Send`), pulling batches from a shared queue;
 //! * one collector thread running the [`Batcher`] (size-or-deadline);
-//! * callers block on a per-request reply channel (the TCP front-end wraps
-//!   `submit` in `spawn_blocking`).
+//! * submission is **asynchronous**: [`ServiceHandle::submit_job`]
+//!   registers a reply slot and returns a [`JobHandle`] immediately —
+//!   nobody parks a thread per in-flight request. `wait`/`try_result`/
+//!   `cancel`/deadline expiry all operate on the handle; the TCP
+//!   front-end multiplexes many in-flight jobs over one reply channel
+//!   per connection ([`ServiceHandle::submit_with_id`]).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,12 +24,10 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ExpmRequest, ExpmResponse, Method};
 use crate::coordinator::{scheduler, worker};
 use crate::error::{MatexpError, Result};
+use crate::exec::{JobHandle, ReplyRegistry, ReplySender, Submission};
 use crate::linalg::matrix::Matrix;
 use crate::pool::DevicePool;
 use crate::runtime::BackendKind;
-
-type Reply = std::result::Result<ExpmResponse, String>;
-type ReplyMap = Arc<Mutex<HashMap<u64, SyncSender<Reply>>>>;
 
 /// Namespace for [`Service::start`].
 pub struct Service;
@@ -35,7 +37,7 @@ pub struct ServiceHandle {
     cfg: MatexpConfig,
     sizes: Vec<usize>,
     submit_tx: Option<SyncSender<ExpmRequest>>,
-    replies: ReplyMap,
+    replies: ReplyRegistry,
     metrics: Arc<Metrics>,
     /// The shared device pool when `cfg.backend` is `pool` (workers hold
     /// clones; kept here for observability and lifetime).
@@ -54,7 +56,7 @@ impl Service {
         cfg.validate()?;
         let sizes = servable_sizes(&cfg)?;
         let metrics = Arc::new(Metrics::new());
-        let replies: ReplyMap = Arc::new(Mutex::new(HashMap::new()));
+        let replies: ReplyRegistry = Arc::new(Mutex::new(HashMap::new()));
 
         // one shared device pool for all workers (the pool serializes
         // per-device work on its own threads)
@@ -103,9 +105,10 @@ impl Service {
         let collector = {
             let batcher_cfg = cfg.batcher.clone();
             let metrics = Arc::clone(&metrics);
+            let replies = Arc::clone(&replies);
             std::thread::Builder::new()
                 .name("matexp-collector".into())
-                .spawn(move || collector_loop(batcher_cfg, submit_rx, batch_tx, &metrics))
+                .spawn(move || collector_loop(batcher_cfg, submit_rx, batch_tx, &replies, &metrics))
                 .map_err(MatexpError::Io)?
         };
 
@@ -127,6 +130,7 @@ fn collector_loop(
     batcher_cfg: crate::config::BatcherConfig,
     submit_rx: Receiver<ExpmRequest>,
     batch_tx: SyncSender<Batch>,
+    replies: &ReplyRegistry,
     metrics: &Metrics,
 ) {
     let mut batcher = Batcher::new(batcher_cfg);
@@ -135,9 +139,25 @@ fn collector_loop(
         metrics
             .batched_requests_total
             .fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
-        // if workers are gone we silently drop; submit() callers observe a
-        // closed reply channel
-        let _ = batch_tx.send(batch);
+        if let Err(send_err) = batch_tx.send(batch) {
+            // workers are gone: fail every request in the dropped batch
+            // through its reply slot — leaving the slots registered would
+            // park their JobHandles forever (the registry itself keeps
+            // each reply channel alive, so no disconnect ever fires)
+            let dropped = send_err.0;
+            for req in dropped.requests {
+                metrics.errors_total.fetch_add(1, Ordering::Relaxed);
+                let slot = replies.lock().expect("reply map poisoned").remove(&req.id);
+                if let Some(tx) = slot {
+                    let _ = tx.send((
+                        req.id,
+                        Err(MatexpError::Service(
+                            "workers shut down before executing the request".into(),
+                        )),
+                    ));
+                }
+            }
+        }
     };
     loop {
         let timeout = batcher
@@ -200,7 +220,7 @@ fn worker_loop(
     cfg: &MatexpConfig,
     pool: Option<Arc<DevicePool>>,
     batch_rx: &Mutex<Receiver<Batch>>,
-    replies: &ReplyMap,
+    replies: &ReplyRegistry,
     metrics: &Metrics,
     ready_tx: &SyncSender<std::result::Result<(), String>>,
 ) {
@@ -227,11 +247,11 @@ fn worker_loop(
         // queues + stealing); everything else executes serially here with
         // per-request latency (a parallel batch's requests all share the
         // batch wall — they really did complete together)
-        let parallel = matches!(&engine, worker::WorkerEngine::Pool(_))
+        let parallel = engine.pool_engine().is_some()
             && scheduler::pool_dispatch(batch.n, batch.requests.len(), cfg)
                 == scheduler::PoolDispatch::RequestParallel;
         let outcomes: Vec<(u64, Result<ExpmResponse>, Option<Duration>)> = if parallel {
-            let worker::WorkerEngine::Pool(pe) = &engine else { unreachable!() };
+            let pe = engine.pool_engine().expect("checked above");
             pe.execute_batch(batch.requests)
                 .into_iter()
                 .map(|(id, outcome)| (id, outcome, None))
@@ -243,7 +263,7 @@ fn worker_loop(
                 .map(|req| {
                     let t0 = Instant::now();
                     let id = req.id;
-                    let outcome = worker::execute(&mut engine, cfg, req);
+                    let outcome = worker::execute(&mut engine, req);
                     (id, outcome, Some(t0.elapsed()))
                 })
                 .collect()
@@ -265,14 +285,15 @@ fn worker_loop(
                         .fetch_add(resp.stats.buffers_recycled, Ordering::Relaxed);
                     let latency = elapsed.unwrap_or_else(|| started.elapsed());
                     metrics.observe_latency_us(latency.as_micros() as u64);
-                    let _ = tx.send(outcome.map_err(|e| e.to_string()));
+                    let _ = tx.send((id, outcome));
                 }
                 (Err(_), Some(tx)) => {
                     metrics.errors_total.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(outcome.map_err(|e| e.to_string()));
+                    let _ = tx.send((id, outcome));
                 }
                 (_, None) => {
-                    // caller gave up (channel dropped); count the work anyway
+                    // caller gave up (cancelled / deadline expired / handle
+                    // dropped); count the work anyway
                     metrics.errors_total.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -280,11 +301,38 @@ fn worker_loop(
     }
 }
 
+/// Register the reply slot and hand the request to the collector — and,
+/// critically, deregister the slot on EVERY error path: a slot whose
+/// request never reached the queue would otherwise leak forever (no
+/// worker will ever remove it).
+fn enqueue(
+    replies: &ReplyRegistry,
+    submit_tx: &SyncSender<ExpmRequest>,
+    req: ExpmRequest,
+    reply_tx: ReplySender,
+) -> Result<()> {
+    let id = req.id;
+    replies.lock().expect("reply map poisoned").insert(id, reply_tx);
+    if submit_tx.send(req).is_err() {
+        replies.lock().expect("reply map poisoned").remove(&id);
+        return Err(MatexpError::Service("collector gone".into()));
+    }
+    Ok(())
+}
+
 impl ServiceHandle {
     /// Matrix sizes this service can serve on the device-path methods;
     /// empty means unrestricted (size-agnostic backend).
     pub fn sizes(&self) -> &[usize] {
         &self.sizes
+    }
+
+    /// Human-readable description of what this coordinator runs on.
+    pub fn platform(&self) -> String {
+        format!(
+            "matexp coordinator ({} workers on backend {})",
+            self.cfg.workers, self.cfg.backend
+        )
     }
 
     /// Metrics snapshot; on the pool backend it carries the live
@@ -299,29 +347,56 @@ impl ServiceHandle {
         snap
     }
 
-    /// Blocking request: admit, enqueue, wait for the worker's reply.
-    pub fn submit(&self, matrix: Matrix, power: u64, method: Method) -> Result<ExpmResponse> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = ExpmRequest { id, matrix, power, method };
+    /// Reserve a request id (the TCP front-end registers its connection
+    /// bookkeeping under the id *before* submitting, so a fast worker
+    /// reply can never race past it).
+    pub fn reserve_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Asynchronous submission: admit, register the reply slot, enqueue,
+    /// and return a [`JobHandle`] — the caller is NOT parked. Admission
+    /// failures surface here (typed); execution outcomes arrive through
+    /// the handle.
+    pub fn submit_job(&self, submission: Submission) -> Result<JobHandle> {
+        let id = self.reserve_id();
+        let deadline = submission.deadline.map(|d| Instant::now() + d);
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit_request(submission.into_request_at(id, deadline), tx)?;
+        Ok(JobHandle::pending(id, deadline, rx, Arc::clone(&self.replies)))
+    }
+
+    /// Asynchronous submission with a caller-chosen reserved id
+    /// ([`Self::reserve_id`]) and a caller-owned reply channel, so one
+    /// channel can carry many in-flight jobs (the TCP front-end runs a
+    /// whole pipelined connection over one).
+    pub fn submit_with_id(
+        &self,
+        id: u64,
+        submission: Submission,
+        reply_tx: ReplySender,
+    ) -> Result<()> {
+        self.submit_request(submission.into_request(id), reply_tx)
+    }
+
+    fn submit_request(&self, req: ExpmRequest, reply_tx: ReplySender) -> Result<()> {
         self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         if let Err(e) = scheduler::admit(&req, &self.sizes, &self.cfg) {
             self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
-        let (tx, rx) = sync_channel::<Reply>(1);
-        self.replies.lock().expect("reply map poisoned").insert(id, tx);
         let submit_tx = self
             .submit_tx
             .as_ref()
             .ok_or_else(|| MatexpError::Service("service shut down".into()))?;
-        submit_tx
-            .send(req)
-            .map_err(|_| MatexpError::Service("collector gone".into()))?;
-        match rx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(msg)) => Err(MatexpError::Service(msg)),
-            Err(_) => Err(MatexpError::Service("worker dropped the request".into())),
-        }
+        enqueue(&self.replies, submit_tx, req, reply_tx)
+    }
+
+    /// Blocking request — the legacy surface, kept one release.
+    #[deprecated(since = "0.3.0", note = "use `submit_job(Submission)` (the exec::Executor \
+        surface): non-blocking, with deadline/cancel support")]
+    pub fn submit(&self, matrix: Matrix, power: u64, method: Method) -> Result<ExpmResponse> {
+        self.submit_job(Submission::expm(matrix, power).method(method))?.wait()
     }
 
     /// Graceful shutdown: drain the queue, join all threads.
@@ -346,5 +421,91 @@ impl Drop for ServiceHandle {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    /// A handle with a live intake queue but NO collector and NO workers:
+    /// submissions park in `_intake`, so reply-slot lifecycle (cancel,
+    /// deadline, drop) is observable deterministically.
+    fn inert_handle() -> (ServiceHandle, Receiver<ExpmRequest>) {
+        let (tx, rx) = sync_channel(64);
+        let handle = ServiceHandle {
+            cfg: MatexpConfig::default(),
+            sizes: Vec::new(),
+            submit_tx: Some(tx),
+            replies: Arc::new(Mutex::new(HashMap::new())),
+            metrics: Arc::new(Metrics::new()),
+            pool: None,
+            next_id: AtomicU64::new(1),
+            collector: None,
+            workers: Vec::new(),
+        };
+        (handle, rx)
+    }
+
+    fn slots(handle: &ServiceHandle) -> usize {
+        handle.replies.lock().unwrap().len()
+    }
+
+    /// Regression: a failed hand-off to the collector used to leave the
+    /// reply-map entry behind forever. Every error path must deregister.
+    #[test]
+    fn enqueue_deregisters_reply_slot_when_collector_is_gone() {
+        let replies: ReplyRegistry = Arc::new(Mutex::new(HashMap::new()));
+        let (submit_tx, submit_rx) = sync_channel::<ExpmRequest>(1);
+        drop(submit_rx); // collector is gone
+        let (reply_tx, _reply_rx) = channel();
+        let req = ExpmRequest::new(7, Matrix::identity(4), 2, Method::Ours);
+        let err = enqueue(&replies, &submit_tx, req, reply_tx).unwrap_err();
+        assert!(matches!(err, MatexpError::Service(_)), "{err:?}");
+        assert!(replies.lock().unwrap().is_empty(), "reply slot leaked");
+    }
+
+    #[test]
+    fn cancel_deregisters_the_reply_slot() {
+        let (handle, _intake) = inert_handle();
+        let mut job = handle.submit_job(Submission::expm(Matrix::identity(8), 4)).unwrap();
+        assert_eq!(slots(&handle), 1);
+        assert!(job.cancel(), "job was still pending, so cancel wins");
+        assert_eq!(slots(&handle), 0);
+        assert!(matches!(job.wait(), Err(MatexpError::Service(_))));
+    }
+
+    #[test]
+    fn deadline_expiry_deregisters_and_is_typed() {
+        let (handle, _intake) = inert_handle();
+        let mut job = handle
+            .submit_job(
+                Submission::expm(Matrix::identity(8), 4).deadline(Duration::from_millis(5)),
+            )
+            .unwrap();
+        match job.wait() {
+            Err(MatexpError::Deadline(_)) => {}
+            other => panic!("want typed deadline error, got {other:?}"),
+        }
+        assert_eq!(slots(&handle), 0);
+    }
+
+    #[test]
+    fn dropped_handle_deregisters() {
+        let (handle, _intake) = inert_handle();
+        let job = handle.submit_job(Submission::expm(Matrix::identity(8), 4)).unwrap();
+        assert_eq!(slots(&handle), 1);
+        drop(job);
+        assert_eq!(slots(&handle), 0);
+    }
+
+    #[test]
+    fn admission_failure_registers_nothing() {
+        let (handle, _intake) = inert_handle();
+        let err = handle.submit_job(Submission::expm(Matrix::identity(8), 0)).unwrap_err();
+        assert!(err.to_string().contains("power"), "{err}");
+        assert_eq!(slots(&handle), 0);
+        assert_eq!(handle.metrics.snapshot().rejected_total, 1);
     }
 }

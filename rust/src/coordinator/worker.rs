@@ -15,29 +15,38 @@ use crate::pool::{DevicePool, PoolEngine};
 use crate::runtime::engine::AnyEngine;
 use crate::runtime::{Backend, BackendKind, Engine};
 
-/// Execute one request on this worker's engine.
+/// Execute one request on this worker's engine: the strategy dispatch
+/// behind every [`crate::exec::Executor`] — deadline preflight, the
+/// method→discipline mapping, and the shared post-execution contract
+/// checks (late completion, tolerance violations).
 pub fn execute_request<B: Backend>(
     engine: &mut Engine<B>,
     cfg: &MatexpConfig,
     req: &ExpmRequest,
 ) -> Result<ExpmResponse> {
+    crate::exec::check_deadline(req.deadline)?;
     let strategy = strategy_for(req, cfg);
     let (result, stats, plan_kind) = match strategy {
         Strategy::DeviceResident(plan) => {
             let kind = plan.kind;
-            let (m, s) = engine.expm(&req.matrix, &plan)?;
+            let (m, s) = engine.run_plan(&req.matrix, &plan)?;
+            (m, s, Some(kind))
+        }
+        Strategy::PlanRoundtrip(plan) => {
+            let kind = plan.kind;
+            let (m, s) = engine.run_plan_roundtrip(&req.matrix, &plan)?;
             (m, s, Some(kind))
         }
         Strategy::Packed => {
-            let (m, s) = engine.expm_packed(&req.matrix, req.power)?;
+            let (m, s) = engine.run_packed(&req.matrix, req.power)?;
             (m, s, None)
         }
         Strategy::Fused => {
-            let (m, s) = engine.expm_fused_artifact(&req.matrix, req.power)?;
+            let (m, s) = engine.run_fused(&req.matrix, req.power)?;
             (m, s, None)
         }
         Strategy::NaiveRoundtrip => {
-            let (m, s) = engine.expm_naive_roundtrip(&req.matrix, req.power)?;
+            let (m, s) = engine.run_naive_roundtrip(&req.matrix, req.power)?;
             (m, s, None)
         }
         Strategy::CpuSequential => {
@@ -51,7 +60,11 @@ pub fn execute_request<B: Backend>(
             (m, stats, None)
         }
     };
-    Ok(ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind })
+    crate::exec::enforce(
+        req.deadline,
+        req.tolerance,
+        ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind },
+    )
 }
 
 /// Build the engine a worker thread uses (one per thread; compiled/cached
@@ -68,17 +81,39 @@ pub fn build_engine(cfg: &MatexpConfig) -> Result<AnyEngine> {
 }
 
 /// What a coordinator worker actually drives: its own single-backend
-/// engine, or a handle onto the shared multi-device pool.
-pub enum WorkerEngine {
+/// engine, or a handle onto the shared multi-device pool — bound to the
+/// config it was built from, so strategy dispatch
+/// (`use_square_chains`, admission limits, …) follows the caller's
+/// configuration rather than crate defaults.
+pub struct WorkerEngine {
+    cfg: MatexpConfig,
+    kind: WorkerKind,
+}
+
+/// The execution substrate behind a [`WorkerEngine`].
+pub enum WorkerKind {
     Single(Box<AnyEngine>),
     Pool(PoolEngine),
 }
 
 impl WorkerEngine {
     pub fn platform(&self) -> String {
-        match self {
-            WorkerEngine::Single(e) => e.platform(),
-            WorkerEngine::Pool(pe) => pe.platform(),
+        match &self.kind {
+            WorkerKind::Single(e) => e.platform(),
+            WorkerKind::Pool(pe) => pe.platform(),
+        }
+    }
+
+    /// The configuration this worker dispatches with.
+    pub fn config(&self) -> &MatexpConfig {
+        &self.cfg
+    }
+
+    /// The pool engine, when this worker drives the shared device pool.
+    pub fn pool_engine(&self) -> Option<&PoolEngine> {
+        match &self.kind {
+            WorkerKind::Pool(pe) => Some(pe),
+            WorkerKind::Single(_) => None,
         }
     }
 }
@@ -90,27 +125,26 @@ pub fn build_worker_engine(
     cfg: &MatexpConfig,
     shared_pool: Option<Arc<DevicePool>>,
 ) -> Result<WorkerEngine> {
-    if cfg.backend == BackendKind::Pool {
+    let kind = if cfg.backend == BackendKind::Pool {
         let pool = match shared_pool {
             Some(p) => p,
             None => Arc::new(DevicePool::new(cfg)?),
         };
-        return Ok(WorkerEngine::Pool(PoolEngine::with_pool(pool)));
-    }
-    Ok(WorkerEngine::Single(Box::new(build_engine(cfg)?)))
+        WorkerKind::Pool(PoolEngine::with_pool(pool))
+    } else {
+        WorkerKind::Single(Box::new(build_engine(cfg)?))
+    };
+    Ok(WorkerEngine { cfg: cfg.clone(), kind })
 }
 
-/// Execute one request on whatever engine the worker holds. By value:
-/// the pool path ships the matrix to a device thread, so an owned request
-/// avoids a deep copy there (the single-backend path just borrows it).
-pub fn execute(
-    engine: &mut WorkerEngine,
-    cfg: &MatexpConfig,
-    req: ExpmRequest,
-) -> Result<ExpmResponse> {
-    match engine {
-        WorkerEngine::Single(e) => execute_request(e, cfg, &req),
-        WorkerEngine::Pool(pe) => pe.execute_request(req),
+/// Execute one request on whatever engine the worker holds, dispatching
+/// with the config the worker was built from. By value: the pool path
+/// ships the matrix to a device thread, so an owned request avoids a
+/// deep copy there (the single-backend path just borrows it).
+pub fn execute(engine: &mut WorkerEngine, req: ExpmRequest) -> Result<ExpmResponse> {
+    match &mut engine.kind {
+        WorkerKind::Single(e) => execute_request(e, &engine.cfg, &req),
+        WorkerKind::Pool(pe) => pe.execute_request(req),
     }
 }
 
@@ -127,7 +161,7 @@ mod tests {
     }
 
     fn req(method: Method, power: u64) -> ExpmRequest {
-        ExpmRequest { id: 1, matrix: Matrix::random_spectral(8, 0.9, 5), power, method }
+        ExpmRequest::new(1, Matrix::random_spectral(8, 0.9, 5), power, method)
     }
 
     #[test]
@@ -140,6 +174,7 @@ mod tests {
             Method::OursChained,
             Method::AdditionChain,
             Method::NaiveGpu,
+            Method::PlanRoundtrip,
         ] {
             let r = execute_request(&mut engine, &cfg, &req(method, 13)).unwrap();
             assert!(
@@ -167,16 +202,11 @@ mod tests {
     fn fused_runs_for_shipped_powers() {
         let (mut engine, cfg) = setup();
         let m = Matrix::random_spectral(8, 0.9, 6);
-        let r = ExpmRequest { id: 2, matrix: m, power: 64, method: Method::FusedArtifact };
+        let r = ExpmRequest::new(2, m, 64, Method::FusedArtifact);
         let resp = execute_request(&mut engine, &cfg, &r).unwrap();
         assert_eq!(resp.stats.launches, 1);
         // and errors cleanly for an absent power
-        let r = ExpmRequest {
-            id: 3,
-            matrix: Matrix::identity(8),
-            power: 65,
-            method: Method::FusedArtifact,
-        };
+        let r = ExpmRequest::new(3, Matrix::identity(8), 65, Method::FusedArtifact);
         assert!(execute_request(&mut engine, &cfg, &r).is_err());
     }
 
@@ -188,8 +218,8 @@ mod tests {
             vec![crate::pool::PoolDeviceKind::Cpu, crate::pool::PoolDeviceKind::Cpu];
         let mut engine = build_worker_engine(&cfg, None).unwrap();
         assert!(engine.platform().contains("pool"), "{}", engine.platform());
-        let r = execute(&mut engine, &cfg, req(Method::Ours, 13)).unwrap();
-        let want = execute(&mut engine, &cfg, req(Method::CpuSeq, 13)).unwrap();
+        let r = execute(&mut engine, req(Method::Ours, 13)).unwrap();
+        let want = execute(&mut engine, req(Method::CpuSeq, 13)).unwrap();
         assert!(r.result.approx_eq(&want.result, 1e-3, 1e-3));
         assert_eq!(r.stats.per_device.len(), 1, "{:?}", r.stats.per_device);
     }

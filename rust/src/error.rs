@@ -37,6 +37,12 @@ pub enum MatexpError {
     /// caller can distinguish "fix your request" from "the service broke".
     Admission(String),
 
+    /// The job's deadline expired — before execution, while waiting on a
+    /// [`crate::exec::JobHandle`], or (for a result that arrived late)
+    /// after. Typed so callers can retry with a looser deadline instead
+    /// of treating it as a service failure.
+    Deadline(String),
+
     Io(std::io::Error),
 
     Json(crate::util::json::JsonError),
@@ -54,6 +60,7 @@ impl std::fmt::Display for MatexpError {
             MatexpError::Config(m) => write!(f, "config error: {m}"),
             MatexpError::Service(m) => write!(f, "service error: {m}"),
             MatexpError::Admission(m) => write!(f, "admission rejected: {m}"),
+            MatexpError::Deadline(m) => write!(f, "deadline exceeded: {m}"),
             MatexpError::Io(e) => write!(f, "io error: {e}"),
             MatexpError::Json(e) => write!(f, "json error: {e}"),
         }
@@ -100,6 +107,7 @@ mod tests {
         assert!(MatexpError::Backend("x".into()).to_string().starts_with("backend error"));
         assert!(MatexpError::Config("x".into()).to_string().starts_with("config error"));
         assert!(MatexpError::UnsupportedOp("x".into()).to_string().starts_with("unsupported op"));
+        assert!(MatexpError::Deadline("x".into()).to_string().starts_with("deadline exceeded"));
         let io: MatexpError = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().contains("gone"));
     }

@@ -1,0 +1,293 @@
+//! The [`Executor`] trait — the one submission surface — and its
+//! implementations for every execution layer:
+//!
+//! * [`Engine<B>`](crate::runtime::Engine) — synchronous: the submission
+//!   executes eagerly and the returned handle is already complete.
+//! * [`PoolEngine`] — synchronous at the surface; the pool parallelizes
+//!   internally (tile shards / per-device queues).
+//! * [`WorkerEngine`] — whatever a coordinator worker drives (single
+//!   backend or shared pool), so the CLI routes through the same surface.
+//! * [`ServiceHandle`] — genuinely asynchronous: `submit` enqueues and
+//!   returns a pending handle; `wait`/`try_result`/`cancel`/deadlines
+//!   operate on the in-flight job.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExpmResponse, Method};
+use crate::coordinator::scheduler;
+use crate::coordinator::service::ServiceHandle;
+use crate::coordinator::worker::{self, WorkerEngine};
+use crate::error::{MatexpError, Result};
+use crate::exec::handle::JobHandle;
+use crate::exec::submission::Submission;
+use crate::pool::PoolEngine;
+use crate::runtime::{Backend, Engine};
+
+/// What an executor can serve — the machine-readable version of "which
+/// submissions will this surface accept".
+#[derive(Clone, Debug)]
+pub struct Capabilities {
+    /// Human-readable execution substrate description.
+    pub platform: String,
+    /// Methods this executor can run.
+    pub methods: Vec<Method>,
+    /// Servable matrix sizes; empty means size-unrestricted.
+    pub sizes: Vec<usize>,
+    /// Largest admissible exponent.
+    pub max_power: u64,
+    /// `true` when `submit` returns before the job executes (the serving
+    /// coordinator); `false` for eager executors.
+    pub async_submit: bool,
+}
+
+impl Capabilities {
+    /// Capabilities of an eager (synchronous) executor serving every
+    /// method at any size — the one place the shared policy lives, so
+    /// the executors cannot drift apart.
+    fn sync(platform: String) -> Capabilities {
+        Capabilities {
+            platform,
+            methods: Method::all().to_vec(),
+            sizes: Vec::new(),
+            max_power: scheduler::MAX_POWER,
+            async_submit: false,
+        }
+    }
+}
+
+/// One execution surface over engine, pool and service: submit a typed
+/// [`Submission`], get a [`JobHandle`] back.
+pub trait Executor {
+    /// Submit one job. Synchronous executors run it before returning (the
+    /// handle is complete); the service enqueues and returns immediately.
+    fn submit(&mut self, submission: Submission) -> Result<JobHandle>;
+
+    /// What this executor can serve.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Convenience: `submit` + `wait`.
+    fn run(&mut self, submission: Submission) -> Result<ExpmResponse> {
+        self.submit(submission)?.wait()
+    }
+}
+
+/// Config for bare-engine submissions: the crate defaults, resolved
+/// once — EXCEPT the admission size cap, which exists to protect shared
+/// serving capacity and has no business limiting a caller's own engine
+/// (the deprecated `expm_*` entry points never capped size either).
+fn bare_engine_cfg() -> &'static MatexpConfig {
+    static CFG: OnceLock<MatexpConfig> = OnceLock::new();
+    CFG.get_or_init(|| {
+        let mut cfg = MatexpConfig::default();
+        cfg.max_n = usize::MAX;
+        cfg
+    })
+}
+
+/// Ids for handles minted by synchronous executors (distinct per process,
+/// so logs from interleaved engines stay readable).
+fn next_sync_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fail fast when a job's deadline has already passed.
+pub(crate) fn check_deadline(deadline: Option<Instant>) -> Result<()> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(MatexpError::Deadline("deadline expired before execution".into()));
+    }
+    Ok(())
+}
+
+/// Post-execution contract checks shared by every executor: a job that
+/// finished after its deadline expires anyway, and a non-finite result
+/// violates any requested tolerance.
+pub(crate) fn enforce(
+    deadline: Option<Instant>,
+    tolerance: Option<f32>,
+    resp: ExpmResponse,
+) -> Result<ExpmResponse> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(MatexpError::Deadline(format!(
+            "request {} completed after its deadline",
+            resp.id
+        )));
+    }
+    if tolerance.is_some() && !resp.result.is_finite() {
+        return Err(MatexpError::Service(format!(
+            "request {}: result violates the requested tolerance: non-finite \
+             entries (did the power overflow f32?)",
+            resp.id
+        )));
+    }
+    Ok(resp)
+}
+
+/// Every executor admits with [`scheduler::admit`] before executing, so
+/// the one surface rejects the same submissions everywhere (power 0 /
+/// over-limit, empty or non-finite matrices, unmeetable tolerances) with
+/// the same typed errors the service returns.
+///
+/// A bare `Engine<B>` has no caller configuration, so its strategy
+/// dispatch and admission limits resolve against the crate-default
+/// [`MatexpConfig`]. Config-sensitive submissions should either pin an
+/// explicit [`Submission::plan`] (the experiments do) or go through a
+/// config-built [`WorkerEngine`] / the service, which dispatch with the
+/// caller's config.
+impl<B: Backend> Executor for Engine<B> {
+    fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
+        let cfg = bare_engine_cfg();
+        let req = submission.into_request(next_sync_id());
+        scheduler::admit(&req, &[], cfg)?;
+        let outcome = worker::execute_request(self, cfg, &req);
+        Ok(JobHandle::ready(req.id, req.deadline, outcome))
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::sync(self.platform())
+    }
+}
+
+impl Executor for PoolEngine {
+    fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
+        let req = submission.into_request(next_sync_id());
+        let (id, deadline) = (req.id, req.deadline);
+        scheduler::admit(&req, &[], self.pool().config())?;
+        let outcome = self.execute_request(req);
+        Ok(JobHandle::ready(id, deadline, outcome))
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::sync(self.platform())
+    }
+}
+
+impl Executor for WorkerEngine {
+    fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
+        let req = submission.into_request(next_sync_id());
+        let (id, deadline) = (req.id, req.deadline);
+        // admit and dispatch with the config the worker was built from
+        // (the CLI's loaded config), not crate defaults
+        scheduler::admit(&req, &[], self.config())?;
+        let outcome = worker::execute(self, req);
+        Ok(JobHandle::ready(id, deadline, outcome))
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::sync(self.platform())
+    }
+}
+
+impl Executor for ServiceHandle {
+    fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
+        ServiceHandle::submit_job(self, submission)
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            sizes: self.sizes().to_vec(),
+            async_submit: true,
+            ..Capabilities::sync(self.platform())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{self, CpuAlgo, Matrix};
+    use crate::plan::Plan;
+
+    #[test]
+    fn engine_submit_returns_completed_handle() {
+        let mut engine = Engine::cpu(CpuAlgo::Ikj);
+        let a = Matrix::random_spectral(8, 0.9, 2);
+        let want = linalg::expm::expm(&a, 13, CpuAlgo::Ikj).unwrap();
+        let mut handle = engine.submit(Submission::expm(a, 13)).unwrap();
+        let resp = handle.try_result().expect("eager executor completes at submit").unwrap();
+        assert!(resp.result.approx_eq(&want, 1e-4, 1e-4));
+        let caps = engine.capabilities();
+        assert!(!caps.async_submit);
+        assert!(caps.sizes.is_empty());
+        assert!(caps.methods.contains(&Method::PlanRoundtrip));
+    }
+
+    #[test]
+    fn plan_override_drives_the_exact_schedule() {
+        let mut engine = Engine::cpu(CpuAlgo::Ikj);
+        let a = Matrix::random_spectral(8, 0.9, 4);
+        let plan = Plan::binary(100, false);
+        let launches = plan.launches();
+        let resp = engine.run(Submission::expm(a, 100).plan(plan)).unwrap();
+        assert_eq!(resp.stats.launches, launches);
+        assert_eq!(resp.plan_kind, Some(crate::plan::PlanKind::Binary));
+    }
+
+    #[test]
+    fn expired_deadline_fails_typed_even_on_sync_executors() {
+        let mut engine = Engine::cpu(CpuAlgo::Ikj);
+        let a = Matrix::identity(4);
+        let err = engine
+            .run(Submission::expm(a, 2).deadline(std::time::Duration::ZERO))
+            .unwrap_err();
+        assert!(matches!(err, MatexpError::Deadline(_)), "{err:?}");
+    }
+
+    /// Regression: sync executors used to skip admission entirely —
+    /// power 0 panicked in plan construction instead of returning the
+    /// service's typed rejection.
+    #[test]
+    fn sync_executors_admit_like_the_service() {
+        let mut engine = Engine::cpu(CpuAlgo::Ikj);
+        let err = engine.run(Submission::expm(Matrix::identity(4), 0)).unwrap_err();
+        assert!(err.to_string().contains("power"), "{err}");
+        let mut bad = Matrix::identity(4);
+        bad.set(0, 0, f32::NAN);
+        assert!(engine.run(Submission::expm(bad, 4)).is_err(), "non-finite input admitted");
+        let err = engine
+            .run(Submission::expm(Matrix::identity(4), 4).tolerance(f32::NAN))
+            .unwrap_err();
+        assert!(matches!(err, MatexpError::Admission(_)), "{err:?}");
+
+        let mut pool_cfg = MatexpConfig::default();
+        pool_cfg.backend = crate::runtime::BackendKind::Pool;
+        pool_cfg.pool.devices =
+            vec![crate::pool::PoolDeviceKind::Cpu, crate::pool::PoolDeviceKind::Cpu];
+        let mut pool = PoolEngine::from_config(&pool_cfg).unwrap();
+        assert!(pool.run(Submission::expm(Matrix::identity(4), 0)).is_err());
+    }
+
+    /// Regression: the CLI's WorkerEngine used to dispatch against the
+    /// crate-default config, silently ignoring `use_square_chains=false`.
+    #[test]
+    fn worker_engine_dispatches_with_its_own_config() {
+        let mut cfg = MatexpConfig::default();
+        cfg.use_square_chains = false;
+        let mut engine = worker::build_worker_engine(&cfg, None).unwrap();
+        let resp = engine.run(Submission::expm(Matrix::identity(8), 100)).unwrap();
+        assert_eq!(resp.plan_kind, Some(crate::plan::PlanKind::Binary));
+
+        cfg.use_square_chains = true;
+        let mut engine = worker::build_worker_engine(&cfg, None).unwrap();
+        let resp = engine.run(Submission::expm(Matrix::identity(8), 100)).unwrap();
+        assert_eq!(resp.plan_kind, Some(crate::plan::PlanKind::Chained));
+    }
+
+    #[test]
+    fn tolerance_rejects_overflowed_results() {
+        let mut engine = Engine::cpu(CpuAlgo::Ikj);
+        // spectral radius 3: A^64 overflows f32 to +inf
+        let mut a = Matrix::identity(4);
+        for i in 0..4 {
+            a.set(i, i, 3.0);
+        }
+        let err = engine.run(Submission::expm(a.clone(), 512).tolerance(1e-4)).unwrap_err();
+        assert!(matches!(err, MatexpError::Service(_)), "{err:?}");
+        // without a tolerance the (non-finite) result is handed back as-is
+        let resp = engine.run(Submission::expm(a, 512)).unwrap();
+        assert!(!resp.result.is_finite());
+    }
+}

@@ -1,0 +1,280 @@
+//! [`JobHandle`] — the future-like handle every [`crate::exec::Executor`]
+//! returns from `submit`.
+//!
+//! Two shapes behind one API:
+//!
+//! * **Ready** — synchronous executors ([`crate::runtime::Engine`],
+//!   [`crate::pool::PoolEngine`]) execute eagerly at submission; the
+//!   handle already holds the outcome and `wait` just hands it over.
+//! * **Pending** — the serving coordinator returns before execution; the
+//!   handle owns the job's reply channel plus a reference to the
+//!   service's reply registry, so `cancel`/deadline expiry/`Drop` can
+//!   deregister the job instead of leaking its reply slot.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::request::ExpmResponse;
+use crate::error::{MatexpError, Result};
+
+/// What a worker sends back for one job: the response, or the TYPED
+/// error — the kind survives the thread hop, so a `Deadline` rejection
+/// stays a `Deadline` at the handle (and keeps its kind on the wire).
+pub type JobReply = std::result::Result<ExpmResponse, MatexpError>;
+
+/// The sending half a worker uses to complete a job. Unbounded on
+/// purpose: a worker must never block on a slow consumer.
+pub type ReplySender = Sender<(u64, JobReply)>;
+
+/// The coordinator's reply registry: job id → where to send the outcome.
+/// Entries are removed by the worker on completion, and by the handle on
+/// cancel / deadline expiry / drop — whichever comes first.
+pub(crate) type ReplyRegistry = Arc<Mutex<HashMap<u64, ReplySender>>>;
+
+enum State {
+    /// Outcome already computed (synchronous executors). `None` once taken.
+    Ready(Option<Result<ExpmResponse>>),
+    /// In flight on a service.
+    Pending { rx: Receiver<(u64, JobReply)>, replies: ReplyRegistry, done: bool },
+    /// Cancelled by the caller.
+    Cancelled,
+}
+
+/// Handle to one submitted job: `wait`, `try_result`, `cancel`, with
+/// deadline expiry enforced at the waiting edge.
+pub struct JobHandle {
+    id: u64,
+    deadline: Option<Instant>,
+    state: State,
+}
+
+impl JobHandle {
+    /// Handle over an already-computed outcome (synchronous executors).
+    /// `deadline` is carried for the accessor's sake — the outcome is
+    /// already decided, so it no longer gates anything.
+    pub(crate) fn ready(
+        id: u64,
+        deadline: Option<Instant>,
+        outcome: Result<ExpmResponse>,
+    ) -> JobHandle {
+        JobHandle { id, deadline, state: State::Ready(Some(outcome)) }
+    }
+
+    /// Handle over an in-flight service job.
+    pub(crate) fn pending(
+        id: u64,
+        deadline: Option<Instant>,
+        rx: Receiver<(u64, JobReply)>,
+        replies: ReplyRegistry,
+    ) -> JobHandle {
+        JobHandle { id, deadline, state: State::Pending { rx, replies, done: false } }
+    }
+
+    /// The id the executor assigned this job.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Absolute deadline, if the submission carried one.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Block until the job completes, its deadline expires, or the
+    /// service goes away. Consumes the result: a second `wait` errors.
+    pub fn wait(&mut self) -> Result<ExpmResponse> {
+        let id = self.id;
+        let deadline = self.deadline;
+        match &mut self.state {
+            State::Ready(slot) => slot
+                .take()
+                .ok_or_else(|| MatexpError::Service(format!("job {id}: result already taken"))),
+            State::Cancelled => Err(MatexpError::Service(format!("job {id} was cancelled"))),
+            State::Pending { rx, replies, done } => {
+                if *done {
+                    return Err(MatexpError::Service(format!("job {id}: result already taken")));
+                }
+                let received = match deadline {
+                    None => rx.recv().map_err(|_| {
+                        MatexpError::Service(format!("job {id}: service shut down in flight"))
+                    }),
+                    Some(d) => {
+                        let remaining = d.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(remaining) {
+                            Ok(reply) => Ok(reply),
+                            Err(RecvTimeoutError::Timeout) => {
+                                deregister(replies, id);
+                                Err(MatexpError::Deadline(format!(
+                                    "job {id} missed its deadline"
+                                )))
+                            }
+                            Err(RecvTimeoutError::Disconnected) => {
+                                deregister(replies, id);
+                                Err(MatexpError::Service(format!(
+                                    "job {id}: service shut down in flight"
+                                )))
+                            }
+                        }
+                    }
+                };
+                *done = true;
+                received.and_then(|(_, reply)| reply)
+            }
+        }
+    }
+
+    /// Non-blocking poll. `None` means still in flight (or the result was
+    /// already taken / the job was cancelled).
+    pub fn try_result(&mut self) -> Option<Result<ExpmResponse>> {
+        let id = self.id;
+        let deadline = self.deadline;
+        match &mut self.state {
+            State::Ready(slot) => slot.take(),
+            State::Cancelled => None,
+            State::Pending { rx, replies, done } => {
+                if *done {
+                    return None;
+                }
+                match rx.try_recv() {
+                    Ok((_, reply)) => {
+                        *done = true;
+                        Some(reply)
+                    }
+                    Err(TryRecvError::Empty) => {
+                        if deadline.is_some_and(|d| Instant::now() > d) {
+                            *done = true;
+                            deregister(replies, id);
+                            return Some(Err(MatexpError::Deadline(format!(
+                                "job {id} missed its deadline"
+                            ))));
+                        }
+                        None
+                    }
+                    Err(TryRecvError::Disconnected) => {
+                        *done = true;
+                        deregister(replies, id);
+                        Some(Err(MatexpError::Service(format!(
+                            "job {id}: service shut down in flight"
+                        ))))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Withdraw the job. Returns `true` if it was still pending
+    /// server-side (its reply slot was deregistered before a worker
+    /// completed it); `false` if it had already finished, was already
+    /// cancelled, or ran synchronously.
+    pub fn cancel(&mut self) -> bool {
+        let withdrew = match &mut self.state {
+            State::Pending { replies, done, .. } if !*done => {
+                deregister(replies, self.id)
+            }
+            _ => return false,
+        };
+        self.state = State::Cancelled;
+        withdrew
+    }
+}
+
+/// Remove the job's reply slot; `true` if it was still registered.
+fn deregister(replies: &ReplyRegistry, id: u64) -> bool {
+    match replies.lock() {
+        Ok(mut map) => map.remove(&id).is_some(),
+        Err(_) => false,
+    }
+}
+
+impl Drop for JobHandle {
+    /// An abandoned handle deregisters its reply slot — otherwise a job
+    /// whose caller lost interest would leak a registry entry forever if
+    /// the worker side also dropped it.
+    fn drop(&mut self) {
+        if let State::Pending { replies, done, .. } = &mut self.state {
+            if !*done {
+                deregister(replies, self.id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+    use crate::linalg::matrix::Matrix;
+    use crate::runtime::ExecStats;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn resp(id: u64) -> ExpmResponse {
+        ExpmResponse {
+            id,
+            result: Matrix::identity(2),
+            stats: ExecStats::default(),
+            method: Method::Ours,
+            plan_kind: None,
+        }
+    }
+
+    fn registry_with(id: u64, tx: ReplySender) -> ReplyRegistry {
+        let registry: ReplyRegistry = Arc::new(Mutex::new(HashMap::new()));
+        registry.lock().unwrap().insert(id, tx);
+        registry
+    }
+
+    #[test]
+    fn ready_handle_yields_once() {
+        let mut h = JobHandle::ready(1, None, Ok(resp(1)));
+        assert_eq!(h.id(), 1);
+        assert!(h.wait().is_ok());
+        assert!(h.wait().is_err(), "second wait must not fabricate a result");
+        assert!(!h.cancel(), "a completed job cannot be withdrawn");
+    }
+
+    #[test]
+    fn pending_handle_delivers_worker_reply() {
+        let (tx, rx) = channel();
+        let registry = registry_with(7, tx.clone());
+        let mut h = JobHandle::pending(7, None, rx, Arc::clone(&registry));
+        assert!(h.try_result().is_none(), "nothing sent yet");
+        tx.send((7, Ok(resp(7)))).unwrap();
+        let got = h.wait().unwrap();
+        assert_eq!(got.id, 7);
+    }
+
+    #[test]
+    fn deadline_expiry_is_typed_and_deregisters() {
+        let (tx, rx) = channel();
+        let registry = registry_with(3, tx);
+        let deadline = Some(Instant::now() + Duration::from_millis(5));
+        let mut h = JobHandle::pending(3, deadline, rx, Arc::clone(&registry));
+        match h.wait() {
+            Err(MatexpError::Deadline(_)) => {}
+            other => panic!("want deadline error, got {other:?}"),
+        }
+        assert!(registry.lock().unwrap().is_empty(), "expiry must deregister");
+    }
+
+    #[test]
+    fn cancel_deregisters_and_poisons_wait() {
+        let (tx, rx) = channel();
+        let registry = registry_with(9, tx);
+        let mut h = JobHandle::pending(9, None, rx, Arc::clone(&registry));
+        assert!(h.cancel());
+        assert!(registry.lock().unwrap().is_empty());
+        assert!(!h.cancel(), "double cancel is a no-op");
+        assert!(matches!(h.wait(), Err(MatexpError::Service(_))));
+    }
+
+    #[test]
+    fn drop_deregisters_abandoned_jobs() {
+        let (tx, rx) = channel();
+        let registry = registry_with(4, tx);
+        drop(JobHandle::pending(4, None, rx, Arc::clone(&registry)));
+        assert!(registry.lock().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,51 @@
+//! # The execution surface
+//!
+//! One typed submission API in front of every executor in the crate —
+//! the engine, the device pool, and the serving coordinator all accept
+//! the same [`Submission`] and answer with the same [`JobHandle`]:
+//!
+//! ```text
+//!   Submission::expm(A, N).method(..).plan(..).deadline(..).priority(..)
+//!        │                       Executor::submit
+//!        ├────────▶ Engine<B>      (eager: handle is already complete)
+//!        ├────────▶ PoolEngine     (eager surface, parallel inside)
+//!        └────────▶ ServiceHandle  (async: wait / try_result / cancel)
+//! ```
+//!
+//! What used to be seven ad-hoc `expm_*` engine entry points, a
+//! divergent pool subset and a blocking-only `ServiceHandle::submit` is
+//! now one vocabulary: a [`Submission`] names *what* to compute (matrix,
+//! power, [`Method`](crate::coordinator::request::Method), optional
+//! explicit [`Plan`](crate::plan::Plan)) and *how it must be served*
+//! (deadline, [`Priority`], tolerance); the [`Executor`] decides how to
+//! run it. The legacy entry points survive one release as `#[deprecated]`
+//! shims (a source-grep test keeps the crate itself off them).
+//!
+//! ```
+//! use matexp::prelude::*;
+//!
+//! let a = Matrix::random_spectral(32, 0.99, 42);
+//! let want = Engine::cpu(CpuAlgo::Ikj)
+//!     .run(Submission::expm(a.clone(), 512))
+//!     .unwrap();
+//!
+//! // the identical submission through the multi-device pool
+//! let mut cfg = MatexpConfig::default();
+//! cfg.backend = BackendKind::Pool;
+//! cfg.pool.devices = vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu];
+//! let mut pool = PoolEngine::from_config(&cfg).unwrap();
+//! let got = pool.run(Submission::expm(a, 512)).unwrap();
+//! assert!(got.result.approx_eq(&want.result, 1e-3, 1e-3));
+//! assert!(!pool.capabilities().async_submit);
+//! ```
+
+pub mod executor;
+pub mod handle;
+pub mod submission;
+
+pub use executor::{Capabilities, Executor};
+pub use handle::{JobHandle, JobReply, ReplySender};
+pub use submission::{Priority, Submission};
+
+pub(crate) use executor::{check_deadline, enforce};
+pub(crate) use handle::ReplyRegistry;

@@ -1,0 +1,229 @@
+//! [`Submission`] — the one typed description of "compute `A^N` for me".
+//!
+//! A submission subsumes what used to be spread across `ExpmRequest`
+//! construction, `Method` selection and ad-hoc `expm_*` entry points:
+//! the operand, the exponent, the execution method, an optional explicit
+//! launch [`Plan`], and the serving qualifiers (deadline, priority,
+//! tolerance) the coordinator acts on.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{ExpmRequest, Method};
+use crate::error::MatexpError;
+use crate::linalg::matrix::Matrix;
+use crate::plan::Plan;
+
+/// Scheduling priority of a submission.
+///
+/// `High` submissions skip batch coalescing: the batcher ships the batch
+/// they land in immediately instead of waiting for batch-mates. `Low`
+/// submissions coalesce harder: an all-low batch may wait several times
+/// the configured batch deadline, yielding the workers to fresher
+/// traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-insensitive work (bulk experiments, warmup): waits longer
+    /// for batch-mates than the configured batch deadline.
+    Low,
+    /// The default: size-or-deadline batching.
+    #[default]
+    Normal,
+    /// Ship immediately; don't wait for batch-mates.
+    High,
+}
+
+impl Priority {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn all() -> [Priority; 3] {
+        [Priority::Low, Priority::Normal, Priority::High]
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Priority::all()
+            .into_iter()
+            .find(|p| p.as_str() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                MatexpError::Config(format!("unknown priority {s:?} (low|normal|high)"))
+            })
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One typed unit of work for any [`crate::exec::Executor`].
+///
+/// Built with [`Submission::expm`] plus chainable qualifiers:
+///
+/// ```
+/// use matexp::prelude::*;
+///
+/// let a = Matrix::random_spectral(16, 0.95, 7);
+/// let resp = Engine::cpu(CpuAlgo::Ikj)
+///     .run(
+///         Submission::expm(a, 100)
+///             .method(Method::OursPacked)
+///             .deadline(std::time::Duration::from_secs(30))
+///             .priority(Priority::High)
+///             .tolerance(1e-4),
+///     )
+///     .unwrap();
+/// // the packed discipline touches the host exactly twice
+/// assert_eq!((resp.stats.h2d_transfers, resp.stats.d2h_transfers), (1, 1));
+/// ```
+#[derive(Clone, Debug)]
+pub struct Submission {
+    /// The operand matrix.
+    pub matrix: Matrix,
+    /// The exponent `N` in `A^N`.
+    pub power: u64,
+    /// Execution method (defaults to [`Method::Ours`]).
+    pub method: Method,
+    /// Explicit launch plan, overriding the scheduler's choice. Local
+    /// submissions only — the wire protocol does not carry plans.
+    pub plan: Option<Plan>,
+    /// Relative completion deadline. Resolved to an absolute instant at
+    /// submission time; expired jobs fail with
+    /// [`crate::error::MatexpError::Deadline`].
+    pub deadline: Option<Duration>,
+    /// Scheduling priority (see [`Priority`]).
+    pub priority: Priority,
+    /// Requested accuracy bound. Tight tolerances (< 1e-6) pin the
+    /// conservative binary plan instead of chained launches, and a
+    /// non-finite result violates any tolerance (typed error instead of
+    /// silently returning infinities).
+    pub tolerance: Option<f32>,
+}
+
+impl Submission {
+    /// A submission computing `matrix^power` with [`Method::Ours`].
+    pub fn expm(matrix: Matrix, power: u64) -> Submission {
+        Submission {
+            matrix,
+            power,
+            method: Method::Ours,
+            plan: None,
+            deadline: None,
+            priority: Priority::default(),
+            tolerance: None,
+        }
+    }
+
+    /// Matrix side length.
+    pub fn n(&self) -> usize {
+        self.matrix.n()
+    }
+
+    /// Select the execution method.
+    pub fn method(mut self, method: Method) -> Submission {
+        self.method = method;
+        self
+    }
+
+    /// Pin an explicit launch plan (experiments and ablations; overrides
+    /// the scheduler's method→plan mapping).
+    pub fn plan(mut self, plan: Plan) -> Submission {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// Fail the job if it has not completed within `deadline`.
+    pub fn deadline(mut self, deadline: Duration) -> Submission {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Submission {
+        self.priority = priority;
+        self
+    }
+
+    /// Request an accuracy bound (see the field docs for semantics).
+    pub fn tolerance(mut self, tolerance: f32) -> Submission {
+        self.tolerance = Some(tolerance);
+        self
+    }
+
+    /// Lower into the coordinator's request type, resolving the relative
+    /// deadline against the clock now.
+    pub(crate) fn into_request(self, id: u64) -> ExpmRequest {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.into_request_at(id, deadline)
+    }
+
+    /// [`Self::into_request`] with a pre-resolved absolute deadline (so a
+    /// caller that also hands the deadline to a [`crate::exec::JobHandle`]
+    /// uses one consistent instant).
+    pub(crate) fn into_request_at(self, id: u64, deadline: Option<Instant>) -> ExpmRequest {
+        ExpmRequest {
+            id,
+            matrix: self.matrix,
+            power: self.power,
+            method: self.method,
+            plan: self.plan,
+            deadline,
+            priority: self.priority,
+            tolerance: self.tolerance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn builder_sets_every_field() {
+        let sub = Submission::expm(Matrix::identity(8), 64)
+            .method(Method::NaiveGpu)
+            .plan(Plan::binary(64, false))
+            .deadline(Duration::from_millis(250))
+            .priority(Priority::High)
+            .tolerance(1e-3);
+        assert_eq!(sub.n(), 8);
+        assert_eq!(sub.power, 64);
+        assert_eq!(sub.method, Method::NaiveGpu);
+        assert!(sub.plan.is_some());
+        assert_eq!(sub.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(sub.priority, Priority::High);
+        assert_eq!(sub.tolerance, Some(1e-3));
+
+        let req = sub.into_request(9);
+        assert_eq!(req.id, 9);
+        assert_eq!(req.method, Method::NaiveGpu);
+        assert!(req.deadline.is_some());
+        assert_eq!(req.priority, Priority::High);
+    }
+
+    #[test]
+    fn defaults_are_ours_normal_no_deadline() {
+        let sub = Submission::expm(Matrix::identity(4), 2);
+        assert_eq!(sub.method, Method::Ours);
+        assert_eq!(sub.priority, Priority::Normal);
+        assert!(sub.deadline.is_none() && sub.plan.is_none() && sub.tolerance.is_none());
+    }
+
+    #[test]
+    fn priority_parse_roundtrip() {
+        for p in Priority::all() {
+            assert_eq!(Priority::from_str(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::from_str("urgent").is_err());
+        assert_eq!(Priority::from_str("HIGH").unwrap(), Priority::High);
+    }
+}

@@ -17,7 +17,9 @@
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::coordinator::request::Method;
 use crate::error::Result;
+use crate::exec::{Executor, Submission};
 use crate::linalg::{self, matrix::Matrix};
 use crate::plan::Plan;
 use crate::runtime::{Backend, BufferArena, Engine, ExecStats};
@@ -101,8 +103,10 @@ pub fn transfer_ablation<B: Backend>(
     let a = Matrix::random_spectral(n, 0.999, seed);
     let plan = Plan::binary(power, false);
     engine.warmup_exec(n)?; // steady-state: XLA first-execution init is ~4 ms/op
-    let (_, resident) = engine.expm(&a, &plan)?;
-    let (_, roundtrip) = engine.expm_plan_roundtrip(&a, &plan)?;
+    let resident = engine.run(Submission::expm(a.clone(), power).plan(plan.clone()))?.stats;
+    let roundtrip = engine
+        .run(Submission::expm(a, power).method(Method::PlanRoundtrip).plan(plan))?
+        .stats;
     Ok(vec![
         ArmResult::from_stats("device-resident", &resident, format!("plan=binary N={power}")),
         ArmResult::from_stats("per-launch-roundtrip", &roundtrip, format!("plan=binary N={power}")),
@@ -126,20 +130,25 @@ pub fn fusion_ablation<B: Backend>(
         ("chained-square4", Plan::chained(power, &[4, 2])),
         ("addition-chain", Plan::addition_chain(power)),
     ] {
-        let (_, stats) = engine.expm(&a, &plan)?;
-        out.push(ArmResult::from_stats(name, &stats, format!("kind={}", plan.kind)));
+        let kind = plan.kind;
+        let stats = engine.run(Submission::expm(a.clone(), power).plan(plan))?.stats;
+        out.push(ArmResult::from_stats(name, &stats, format!("kind={kind}")));
     }
-    let (_, packed) = engine.expm_packed(&a, power)?;
+    let packed = engine
+        .run(Submission::expm(a.clone(), power).method(Method::OursPacked))?
+        .stats;
     out.push(ArmResult::from_stats("packed-state", &packed, "pack2/step_mul/step_sq"));
     if engine_supports_fused(engine, &a, power) {
-        let (_, fused) = engine.expm_fused_artifact(&a, power)?;
+        let fused = engine
+            .run(Submission::expm(a.clone(), power).method(Method::FusedArtifact))?
+            .stats;
         out.push(ArmResult::from_stats("fused-artifact", &fused, format!("expm{power} single launch")));
     }
     Ok(out)
 }
 
 fn engine_supports_fused<B: Backend>(engine: &mut Engine<B>, a: &Matrix, power: u64) -> bool {
-    engine.expm_fused_artifact(a, power).is_ok()
+    engine.run(Submission::expm(a.clone(), power).method(Method::FusedArtifact)).is_ok()
 }
 
 /// One arm of the residency data-path ablation.
@@ -236,9 +245,9 @@ pub fn residency_data_path_arms(n: usize, steps: usize, seed: u64) -> Vec<ArmRes
         .collect()
 }
 
-/// A5 (full engine) — the same comparison as real executions: resident
-/// [`Engine::expm`] vs the clone-per-launch counterfactual
-/// [`Engine::expm_plan_roundtrip`], with each arm's `bytes_copied` /
+/// A5 (full engine) — the same comparison as real executions: the
+/// resident device plan vs the clone-per-launch counterfactual
+/// (`Method::PlanRoundtrip`), with each arm's `bytes_copied` /
 /// `buffers_recycled` / `peak_resident_bytes` in the detail column.
 pub fn residency_engine_arms<B: Backend>(
     engine: &mut Engine<B>,
@@ -249,8 +258,10 @@ pub fn residency_engine_arms<B: Backend>(
     let a = Matrix::random_spectral(n, 0.999, seed);
     let plan = Plan::binary(power, false);
     engine.warmup_exec(n)?;
-    let (_, resident) = engine.expm(&a, &plan)?;
-    let (_, roundtrip) = engine.expm_plan_roundtrip(&a, &plan)?;
+    let resident = engine.run(Submission::expm(a.clone(), power).plan(plan.clone()))?.stats;
+    let roundtrip = engine
+        .run(Submission::expm(a, power).method(Method::PlanRoundtrip).plan(plan))?
+        .stats;
     let describe = |s: &ExecStats| {
         format!(
             "bytes_copied={} recycled={} peak_resident={}B",

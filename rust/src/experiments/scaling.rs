@@ -20,6 +20,7 @@ use std::fmt::Write as _;
 use crate::config::MatexpConfig;
 use crate::coordinator::request::{ExpmRequest, Method};
 use crate::error::{MatexpError, Result};
+use crate::exec::Executor;
 use crate::linalg::matrix::Matrix;
 use crate::plan::{Plan, Step};
 use crate::pool::cost::DeviceCost;
@@ -175,7 +176,9 @@ pub fn run_pool_scaling(
         let mut total = 0.0;
         let mut shard_base = 0.0;
         for (plan, &power) in plans.iter().zip(&powers) {
-            let (_, stats) = engine.expm(&a, plan)?;
+            let stats = engine
+                .run(crate::exec::Submission::expm(a.clone(), power).plan(plan.clone()))?
+                .stats;
             total += stats.wall_s;
             if power == largest {
                 shard_base = stats.wall_s;
@@ -225,11 +228,13 @@ pub fn run_pool_scaling(
                     let reqs: Vec<ExpmRequest> = powers
                         .iter()
                         .enumerate()
-                        .map(|(i, &power)| ExpmRequest {
-                            id: i as u64 + 1,
-                            matrix: Matrix::random_spectral(n, 0.999, cfg.seed + i as u64),
-                            power,
-                            method: Method::Ours,
+                        .map(|(i, &power)| {
+                            ExpmRequest::new(
+                                i as u64 + 1,
+                                Matrix::random_spectral(n, 0.999, cfg.seed + i as u64),
+                                power,
+                                Method::Ours,
+                            )
                         })
                         .collect();
                     let replies = e.execute_batch(reqs);

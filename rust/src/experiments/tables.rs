@@ -12,7 +12,9 @@
 use std::time::Instant;
 
 use crate::config::MatexpConfig;
+use crate::coordinator::request::Method;
 use crate::error::Result;
+use crate::exec::{Executor, Submission};
 use crate::experiments::paper::{self, PaperCell};
 use crate::linalg::{self, matrix::Matrix};
 use crate::plan::Plan;
@@ -138,8 +140,12 @@ pub fn measure_cell<B: Backend>(
     a: &Matrix,
     power: u64,
 ) -> Result<MethodTimes> {
-    let (_, naive_stats) = engine.expm_naive_roundtrip(a, power)?;
-    let (_, ours_stats) = engine.expm(a, &ours_plan(cfg, power))?;
+    let naive_stats = engine
+        .run(Submission::expm(a.clone(), power).method(Method::NaiveGpu))?
+        .stats;
+    let ours_stats = engine
+        .run(Submission::expm(a.clone(), power).plan(ours_plan(cfg, power)))?
+        .stats;
     let cpu_s = if engine.backend().models_time() {
         let (_, cpu_flops) = calibrated_models();
         2.0 * (a.n() as f64).powi(3) * (power - 1) as f64 / cpu_flops

@@ -57,6 +57,16 @@
 //! site, instead of string matches scattered across five files. See the
 //! op table in [`runtime::op`].
 //!
+//! # Execution surface
+//!
+//! Every executor — [`runtime::Engine`], [`pool::PoolEngine`], and the
+//! serving [`coordinator::ServiceHandle`] — accepts the same typed
+//! [`exec::Submission`] through [`exec::Executor::submit`] and answers
+//! with an [`exec::JobHandle`] (`wait` / `try_result` / `cancel`,
+//! deadline expiry). On the service, submission is asynchronous: no
+//! thread parks per in-flight request, and the TCP wire pipelines many
+//! id-tagged requests over one connection.
+//!
 //! Quick start (pure Rust, runs as-is):
 //!
 //! ```
@@ -64,19 +74,20 @@
 //!
 //! let mut engine = Engine::cpu(CpuAlgo::Blocked);
 //! let a = Matrix::random_spectral(64, 0.99, 42);
-//! let plan = Plan::binary(512, true);
-//! let (pow, stats) = engine.expm(&a, &plan).unwrap();
+//! let resp = engine
+//!     .run(Submission::expm(a, 512).plan(Plan::binary(512, true)))
+//!     .unwrap();
 //! // device-resident discipline: log(N) launches, TWO host crossings
-//! assert_eq!(stats.launches, plan.launches());
-//! assert_eq!((stats.h2d_transfers, stats.d2h_transfers), (1, 1));
+//! assert_eq!(resp.stats.launches, Plan::binary(512, true).launches());
+//! assert_eq!((resp.stats.h2d_transfers, resp.stats.d2h_transfers), (1, 1));
 //! // …whose bytes are ALL the data path copies (buffer-residency layer)
-//! assert_eq!(stats.bytes_copied, 2 * 64 * 64 * 4);
-//! assert!(pow.is_finite());
-//! println!("A^512 in {} launches ({} multiplies)", stats.launches, stats.multiplies);
+//! assert_eq!(resp.stats.bytes_copied, 2 * 64 * 64 * 4);
+//! assert!(resp.result.is_finite());
+//! println!("A^512 in {} launches", resp.stats.launches);
 //! ```
 //!
-//! The same computation on a multi-device pool ([`pool::PoolEngine`] has
-//! the same `expm` surface; `stats.per_device` breaks the work down):
+//! The **identical submission** served by a multi-device pool
+//! (`stats.per_device` breaks the work down):
 //!
 //! ```
 //! use matexp::prelude::*;
@@ -86,13 +97,26 @@
 //! cfg.pool.devices = vec![PoolDeviceKind::Sim, PoolDeviceKind::Sim];
 //!
 //! let a = Matrix::random_spectral(32, 0.99, 42);
-//! let plan = Plan::binary(512, true);
-//! let (single, _) = Engine::cpu(CpuAlgo::Blocked).expm(&a, &plan).unwrap();
-//! let pool = PoolEngine::from_config(&cfg).unwrap();
-//! let (pooled, stats) = pool.expm(&a, &plan).unwrap();
-//! assert!(pooled.approx_eq(&single, 1e-3, 1e-3));
-//! assert!(!stats.per_device.is_empty()); // who did the work
+//! let single = Engine::cpu(CpuAlgo::Blocked)
+//!     .run(Submission::expm(a.clone(), 512))
+//!     .unwrap();
+//! let mut pool = PoolEngine::from_config(&cfg).unwrap();
+//! let pooled = pool.run(Submission::expm(a, 512)).unwrap();
+//! assert!(pooled.result.approx_eq(&single.result, 1e-3, 1e-3));
+//! assert!(!pooled.stats.per_device.is_empty()); // who did the work
 //! ```
+//!
+//! Migration from the deprecated per-discipline entry points:
+//!
+//! | old entry point | new submission |
+//! |---|---|
+//! | `engine.expm(&a, &plan)` | `engine.run(Submission::expm(a, n).plan(plan))` |
+//! | `engine.expm_packed(&a, n)` | `engine.run(Submission::expm(a, n).method(Method::OursPacked))` |
+//! | `engine.expm_naive_roundtrip(&a, n)` | `engine.run(Submission::expm(a, n).method(Method::NaiveGpu))` |
+//! | `engine.expm_plan_roundtrip(&a, &plan)` | `engine.run(Submission::expm(a, n).method(Method::PlanRoundtrip).plan(plan))` |
+//! | `engine.expm_fused_artifact(&a, n)` | `engine.run(Submission::expm(a, n).method(Method::FusedArtifact))` |
+//! | `pool.expm(&a, &plan)` / `pool.expm_packed(&a, n)` | same submissions via `pool.run(..)` |
+//! | `service.submit(m, n, method)` | `service.submit_job(Submission::expm(m, n).method(method))?.wait()` |
 //!
 //! The same code runs on any backend — swap `Engine::cpu(..)` for
 //! `Engine::sim()` (predicted 2012 wall-clock in `stats.wall_s`) or, with
@@ -102,6 +126,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod exec;
 pub mod experiments;
 pub mod linalg;
 pub mod plan;
@@ -119,6 +144,7 @@ pub mod prelude {
         service::Service,
     };
     pub use crate::error::{MatexpError, Result};
+    pub use crate::exec::{Capabilities, Executor, JobHandle, Priority, Submission};
     pub use crate::linalg::expm::CpuAlgo;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::plan::{Plan, PlanKind, Step};

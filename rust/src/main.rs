@@ -15,6 +15,7 @@ use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
 use matexp::coordinator::service::Service;
 use matexp::error::{MatexpError, Result};
+use matexp::exec::{Executor, Priority, Submission};
 use matexp::experiments::{self, ablations, report};
 use matexp::linalg::matrix::Matrix;
 use matexp::linalg::CpuAlgo;
@@ -34,6 +35,8 @@ COMMANDS:
   info         platform + artifact inventory [--device c2050|xeon]
   plan         show launch schedules   --power N [--all]
   expm         compute A^N             --n SIZE --power N [--method M] [--seed S]
+                                       [--deadline-ms MS] [--tolerance T]
+                                       [--priority low|normal|high]
   experiment   regenerate paper results --table 2..5 [--measure] [--figures]
                or an ablation          --ablation tiles|transfers|fusion|cpu
                                        [--n SIZE] [--power N]
@@ -61,7 +64,7 @@ GLOBAL FLAGS:
   --help
 
 METHODS: ours | ours-packed | ours-chained | addition-chain | fused-artifact
-         | naive-gpu | cpu-seq
+         | naive-gpu | plan-roundtrip | cpu-seq
 ";
 
 fn main() {
@@ -227,17 +230,26 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         .get_parsed("power")?
         .ok_or_else(|| MatexpError::Config("expm needs --power".into()))?;
     let method = Method::from_str(&args.get_or("method", "ours"))?;
+    let deadline_ms: Option<u64> = args.get_parsed("deadline-ms")?;
+    let tolerance: Option<f32> = args.get_parsed("tolerance")?;
+    let priority = match args.get("priority") {
+        Some(p) => Priority::from_str(p)?,
+        None => Priority::Normal,
+    };
     args.reject_unknown()?;
 
+    // the one execution surface: CLI runs the same Submission the
+    // service and the examples do
     let mut engine = matexp::coordinator::worker::build_worker_engine(cfg, None)?;
     let a = Matrix::random_spectral(n, 0.999, cfg.seed);
-    let req = matexp::coordinator::request::ExpmRequest {
-        id: 0,
-        matrix: a,
-        power,
-        method,
-    };
-    let resp = matexp::coordinator::worker::execute(&mut engine, cfg, req)?;
+    let mut submission = Submission::expm(a, power).method(method).priority(priority);
+    if let Some(ms) = deadline_ms {
+        submission = submission.deadline(std::time::Duration::from_millis(ms));
+    }
+    if let Some(t) = tolerance {
+        submission = submission.tolerance(t);
+    }
+    let resp = engine.run(submission)?;
     println!("backend: {} ({})", cfg.backend, engine.platform());
     println!("method: {} (plan: {:?})", resp.method, resp.plan_kind);
     println!(

@@ -275,12 +275,12 @@ pub(crate) fn device_loop(
                 let _ = reply.send(done);
             }
             JobPayload::PlanExec(pj) => {
-                let result = engine.expm(&pj.a, &pj.plan);
+                let result = engine.run_plan(&pj.a, &pj.plan);
                 update(JobCost::of_exec(&result), stolen);
                 let _ = pj.reply.send(ExecDone { device: idx, result });
             }
             JobPayload::PackedExec(pj) => {
-                let result = engine.expm_packed(&pj.a, pj.power);
+                let result = engine.run_packed(&pj.a, pj.power);
                 update(JobCost::of_exec(&result), stolen);
                 let _ = pj.reply.send(ExecDone { device: idx, result });
             }

@@ -1,6 +1,8 @@
 //! [`PoolEngine`] — the multi-device counterpart of
-//! [`crate::runtime::Engine`]: same `expm`/`expm_packed` surface, executed
-//! by a [`DevicePool`].
+//! [`crate::runtime::Engine`]: the same [`crate::exec::Executor`]
+//! submission surface, executed by a [`DevicePool`] (the legacy
+//! `expm`/`expm_packed` entry points survive one release as deprecated
+//! shims).
 //!
 //! Dispatch per call:
 //! * small matrices (`n < pool.shard_min_n`) run whole on the fastest
@@ -50,7 +52,7 @@ impl PoolEngine {
     }
 
     /// Replay `plan` across the pool (see module docs for dispatch).
-    pub fn expm(&self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_plan(&self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
         if n == 0 {
@@ -71,7 +73,7 @@ impl PoolEngine {
     /// buffer cannot span devices, so the pool replays the equivalent
     /// binary plan with sharded multiplies instead; the single-device
     /// fallback keeps the true packed discipline.
-    pub fn expm_packed(&self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_packed(&self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         if power == 0 {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
@@ -145,17 +147,35 @@ impl PoolEngine {
         Ok((m, out_key))
     }
 
+    /// §4.3 device-resident plan replay across the pool.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `pool.run(Submission::expm(a, N).plan(plan))`")]
+    pub fn expm(&self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        self.run_plan(a, plan)
+    }
+
+    /// §4.3.8 packed-state exponentiation across the pool.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `pool.run(Submission::expm(a, N).method(Method::OursPacked))`")]
+    pub fn expm_packed(&self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        self.run_packed(a, power)
+    }
+
     /// Execute one admitted request (the coordinator worker's pool path):
     /// large single requests tile-shard, everything else runs whole on one
     /// device. By value — the matrix is shipped to a device thread either
-    /// way, so borrowing would only force an extra deep copy.
+    /// way, so borrowing would only force an extra deep copy. Applies the
+    /// execution surface's shared contract checks (deadline preflight,
+    /// late completion, tolerance).
     pub fn execute_request(&self, req: ExpmRequest) -> Result<ExpmResponse> {
+        crate::exec::check_deadline(req.deadline)?;
+        let (deadline, tolerance) = (req.deadline, req.tolerance);
         let cfg = self.pool.config();
-        match scheduler::pool_dispatch(req.n(), 1, cfg) {
+        let outcome = match scheduler::pool_dispatch(req.n(), 1, cfg) {
             PoolDispatch::TileShard => match scheduler::strategy_for(&req, cfg) {
                 Strategy::DeviceResident(plan) => {
                     let kind = plan.kind;
-                    let (result, stats) = self.expm(&req.matrix, &plan)?;
+                    let (result, stats) = self.run_plan(&req.matrix, &plan)?;
                     Ok(ExpmResponse {
                         id: req.id,
                         result,
@@ -165,7 +185,7 @@ impl PoolEngine {
                     })
                 }
                 Strategy::Packed => {
-                    let (result, stats) = self.expm_packed(&req.matrix, req.power)?;
+                    let (result, stats) = self.run_packed(&req.matrix, req.power)?;
                     Ok(ExpmResponse {
                         id: req.id,
                         result,
@@ -174,12 +194,13 @@ impl PoolEngine {
                         plan_kind: None,
                     })
                 }
-                // fused / naive-roundtrip / cpu-seq disciplines are
-                // single-device by definition: run the request whole
+                // fused / naive-roundtrip / plan-roundtrip / cpu-seq
+                // disciplines are single-device by definition: run whole
                 _ => self.run_whole_request(req),
             },
             PoolDispatch::RequestParallel => self.run_whole_request(req),
-        }
+        };
+        outcome.and_then(|resp| crate::exec::enforce(deadline, tolerance, resp))
     }
 
     /// A batch of admitted requests, request-parallel with work stealing.
@@ -223,7 +244,7 @@ mod tests {
         let engine = PoolEngine::from_config(&cfg).unwrap();
         let a = Matrix::random_spectral(12, 0.95, 3);
         let plan = Plan::binary(100, true);
-        let (got, stats) = engine.expm(&a, &plan).unwrap();
+        let (got, stats) = engine.run_plan(&a, &plan).unwrap();
         assert!(got.approx_eq(&oracle(&a, 100), 1e-4, 1e-4));
         // whole plan on one device: the engine invariants carry over
         assert_eq!(stats.launches, plan.launches());
@@ -245,7 +266,7 @@ mod tests {
                 Plan::chained(power, &[4, 2]),
                 Plan::addition_chain(power),
             ] {
-                let (got, stats) = engine.expm(&a, &plan).unwrap();
+                let (got, stats) = engine.run_plan(&a, &plan).unwrap();
                 assert!(
                     got.approx_eq(&want, 1e-3, 1e-3),
                     "{:?} N={power}: diff {}",
@@ -266,7 +287,7 @@ mod tests {
         cfg.pool.grid = Some(2);
         let engine = PoolEngine::from_config(&cfg).unwrap();
         let a = Matrix::random_spectral(16, 0.9, 9);
-        let (got, stats) = engine.expm_packed(&a, 100).unwrap();
+        let (got, stats) = engine.run_packed(&a, 100).unwrap();
         assert!(got.approx_eq(&oracle(&a, 100), 1e-3, 1e-3));
         assert_eq!(stats.launches, 4 * Plan::binary(100, false).multiplies());
     }
@@ -284,9 +305,10 @@ mod tests {
             Method::OursChained,
             Method::AdditionChain,
             Method::NaiveGpu,
+            Method::PlanRoundtrip,
             Method::CpuSeq,
         ] {
-            let req = ExpmRequest { id: 1, matrix: a.clone(), power: 13, method };
+            let req = ExpmRequest::new(1, a.clone(), 13, method);
             let resp = engine.execute_request(req).unwrap();
             assert!(
                 resp.result.approx_eq(&want, 1e-3, 1e-3),
@@ -300,7 +322,7 @@ mod tests {
     fn rejects_empty_matrix_and_power_zero() {
         let cfg = pool_cfg(vec![PoolDeviceKind::Cpu]);
         let engine = PoolEngine::from_config(&cfg).unwrap();
-        assert!(engine.expm(&Matrix::zeros(0), &Plan::binary(4, false)).is_err());
-        assert!(engine.expm_packed(&Matrix::identity(4), 0).is_err());
+        assert!(engine.run_plan(&Matrix::zeros(0), &Plan::binary(4, false)).is_err());
+        assert!(engine.run_packed(&Matrix::identity(4), 0).is_err());
     }
 }

@@ -4,8 +4,8 @@
 //! a single [`crate::runtime::Engine`] over one backend never delivers
 //! that. This layer does: a [`DevicePool`] owns N backend instances (any
 //! mix of CPU and simulated-C2050 devices, each on its own worker thread
-//! because backends may be `!Send`), and a [`PoolEngine`] runs the same
-//! `expm`/`expm_packed` surface across all of them.
+//! because backends may be `!Send`), and a [`PoolEngine`] serves the same
+//! [`crate::exec::Executor`] submission surface across all of them.
 //!
 //! Two dispatch disciplines, chosen by the scheduler
 //! ([`crate::coordinator::scheduler::pool_dispatch`]):

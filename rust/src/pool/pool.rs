@@ -532,11 +532,8 @@ mod tests {
     fn request_batch_runs_and_tags_devices() {
         let pool = cpu_pool(2);
         let reqs: Vec<ExpmRequest> = (0..6)
-            .map(|i| ExpmRequest {
-                id: i + 1,
-                matrix: Matrix::random_spectral(16, 0.9, i + 1),
-                power: 13,
-                method: Method::Ours,
+            .map(|i| {
+                ExpmRequest::new(i + 1, Matrix::random_spectral(16, 0.9, i + 1), 13, Method::Ours)
             })
             .collect();
         let oracle: Vec<Matrix> = reqs
@@ -570,12 +567,12 @@ mod tests {
                 0,
                 Job {
                     payload: JobPayload::Request(RequestJob {
-                        req: ExpmRequest {
-                            id: i,
-                            matrix: Matrix::random_spectral(48, 0.9, i + 1),
-                            power: 64,
-                            method: Method::Ours,
-                        },
+                        req: ExpmRequest::new(
+                            i,
+                            Matrix::random_spectral(48, 0.9, i + 1),
+                            64,
+                            Method::Ours,
+                        ),
                         reply: tx.clone(),
                     }),
                     stealable: true,

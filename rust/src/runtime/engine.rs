@@ -1,21 +1,28 @@
 //! The execution engine: replays [`Plan`]s on any [`Backend`], with the
 //! launch/transfer/residency accounting the paper's tables are about.
 //!
-//! Three execution disciplines, mirroring the paper's comparison:
+//! **Submit work through the one execution surface** —
+//! [`crate::exec::Executor`]: `engine.run(Submission::expm(a, N))`. The
+//! method on the submission picks the discipline; the engine's internal
+//! strategy dispatch mirrors the paper's comparison:
 //!
-//! * [`Engine::expm_naive_roundtrip`] — §4.2 "Naïve GPU": one launch per
-//!   multiply with a full host round-trip per launch.
-//! * [`Engine::expm`] — §4.3 "Our Approach": replay a [`Plan`] keeping all
-//!   intermediates as device-resident buffers; the matrix crosses the
-//!   host↔device boundary exactly twice, and plan replay ping-pongs
-//!   recycled arena buffers instead of allocating per step.
-//! * [`Engine::expm_packed`] — our §4.3.8 limit case: the `[acc, base]`
+//! * `Method::NaiveGpu` — §4.2 "Naïve GPU": one launch per multiply with
+//!   a full host round-trip per launch.
+//! * `Method::Ours` (and friends) — §4.3 "Our Approach": replay a
+//!   [`Plan`] keeping all intermediates as device-resident buffers; the
+//!   matrix crosses the host↔device boundary exactly twice, and plan
+//!   replay ping-pongs recycled arena buffers instead of allocating per
+//!   step.
+//! * `Method::OursPacked` — our §4.3.8 limit case: the `[acc, base]`
 //!   state is packed into one pair buffer and every exponent bit is ONE
 //!   single-output launch (`StepMul`/`StepSq`), so even the fused
 //!   square+multiply pair never touches the host.
 //!
-//! Plus [`Engine::expm_fused_artifact`] (whole `A^N` as a single launch)
-//! and [`Engine::expm_plan_roundtrip`] (ablation A2's counterfactual).
+//! Plus `Method::FusedArtifact` (whole `A^N` as a single launch) and
+//! `Method::PlanRoundtrip` (ablation A2's counterfactual). The legacy
+//! per-discipline entry points ([`Engine::expm`],
+//! [`Engine::expm_packed`], …) survive one release as `#[deprecated]`
+//! shims over the private strategy implementations.
 //!
 //! The engine is generic over the backend (static dispatch); use
 //! [`Engine::cpu`] / [`Engine::sim`] / [`Engine::from_config`] — or, with
@@ -268,17 +275,19 @@ impl<B: Backend> Engine<B> {
         };
         // binary fused 11 = Init, SqMul, Sq, MulAcc → square/sqmul/matmul
         // (sqmul is optional — some artifact sets don't ship it)
-        let fused = self.expm(&id, &Plan::binary(11, true));
+        let fused = self.run_plan(&id, &Plan::binary(11, true));
         optional_exec(fused)?;
         // chained 64 = square4 + square2 (optional chain kernels)
-        let chained = self.expm(&id, &Plan::chained(64, &[4, 2]));
+        let chained = self.run_plan(&id, &Plan::chained(64, &[4, 2]));
         optional_exec(chained)?;
         // packed 5 = pack2, step_sq, step_mul, unpack0 — all required ops
-        self.expm_packed(&id, 5)?;
+        self.run_packed(&id, 5)?;
         Ok(())
     }
 
-    /// `a · b` through the backend's matmul op (one launch).
+    /// `a · b` through the backend's matmul op (one launch). A low-level
+    /// primitive (tile sweeps, kernel benches) — exponentiation work goes
+    /// through the [`crate::exec::Executor`] surface.
     pub fn matmul(&mut self, a: &Matrix, b: &Matrix) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
         if b.n() != n {
@@ -300,7 +309,11 @@ impl<B: Backend> Engine<B> {
 
     /// §4.2 Naïve GPU: `power − 1` launches, full host round-trip each
     /// (upload both operands, download the product, every single time).
-    pub fn expm_naive_roundtrip(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_naive_roundtrip(
+        &mut self,
+        a: &Matrix,
+        power: u64,
+    ) -> Result<(Matrix, ExecStats)> {
         if power == 0 {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
@@ -327,7 +340,7 @@ impl<B: Backend> Engine<B> {
     /// (plus whatever a `SqMul` tuple split costs on this backend). The
     /// register file drops stale buffers as it overwrites them, so the
     /// backend's arena ping-pongs recycled allocations instead of growing.
-    pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_plan(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
         // prepare everything the plan needs before the timed region
@@ -387,12 +400,16 @@ impl<B: Backend> Engine<B> {
         Ok((result, stats))
     }
 
-    /// Ablation A2's counterfactual: replay `plan` (same launch schedule as
-    /// [`Engine::expm`]) but with a FULL host round-trip per launch — every
-    /// operand re-uploaded, every result downloaded. Isolates the paper's
-    /// §4.3.8 claim ("data is offloaded only log(N) times") from the
-    /// log-vs-linear launch-count effect.
-    pub fn expm_plan_roundtrip(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+    /// Ablation A2's counterfactual: replay `plan` (same launch schedule
+    /// as the device-resident path) but with a FULL host round-trip per
+    /// launch — every operand re-uploaded, every result downloaded.
+    /// Isolates the paper's §4.3.8 claim ("data is offloaded only log(N)
+    /// times") from the log-vs-linear launch-count effect.
+    pub(crate) fn run_plan_roundtrip(
+        &mut self,
+        a: &Matrix,
+        plan: &Plan,
+    ) -> Result<(Matrix, ExecStats)> {
         plan.validate()?;
         let n = a.n();
         // square{k} chains run as k singles and sqmul as matmul+square on
@@ -462,7 +479,7 @@ impl<B: Backend> Engine<B> {
     /// Packed-state binary exponentiation: the `[acc, base]` pair lives in
     /// one packed device buffer; every exponent bit is one launch and
     /// NOTHING round-trips until the final download.
-    pub fn expm_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         if power == 0 {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
@@ -500,7 +517,7 @@ impl<B: Backend> Engine<B> {
 
     /// Whole `A^power` as one launch, if the backend ships a fused
     /// `expm{power}` kernel (see [`crate::runtime::FUSED_EXPM_POWERS`]).
-    pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+    pub(crate) fn run_fused(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
         let op = KernelOp::Expm(power);
         self.backend.prepare(op, n)?;
@@ -514,6 +531,54 @@ impl<B: Backend> Engine<B> {
         stats.d2h_transfers += 1;
         self.end_timed(t0, &mut stats);
         Ok((result, stats))
+    }
+}
+
+/// Deprecated per-discipline entry points, kept as thin shims for one
+/// release. New code submits through the one execution surface:
+///
+/// ```
+/// use matexp::prelude::*;
+/// let a = Matrix::random_spectral(16, 0.95, 1);
+/// let resp = Engine::cpu(CpuAlgo::Ikj)
+///     .run(Submission::expm(a, 100).method(Method::OursPacked))
+///     .unwrap();
+/// assert!(resp.result.is_finite());
+/// ```
+impl<B: Backend> Engine<B> {
+    /// §4.3 device-resident plan replay.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `engine.run(Submission::expm(a, N).plan(plan))`")]
+    pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        self.run_plan(a, plan)
+    }
+
+    /// §4.2 naive per-launch round-trip loop.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `engine.run(Submission::expm(a, N).method(Method::NaiveGpu))`")]
+    pub fn expm_naive_roundtrip(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        self.run_naive_roundtrip(a, power)
+    }
+
+    /// Ablation A2's clone-per-launch counterfactual.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `engine.run(Submission::expm(a, N).method(Method::PlanRoundtrip).plan(plan))`")]
+    pub fn expm_plan_roundtrip(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
+        self.run_plan_roundtrip(a, plan)
+    }
+
+    /// §4.3.8 packed-state bit loop.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `engine.run(Submission::expm(a, N).method(Method::OursPacked))`")]
+    pub fn expm_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        self.run_packed(a, power)
+    }
+
+    /// Single-launch fused `expm{N}` artifact.
+    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
+        `engine.run(Submission::expm(a, N).method(Method::FusedArtifact))`")]
+    pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
+        self.run_fused(a, power)
     }
 }
 
@@ -566,7 +631,7 @@ mod tests {
                 Plan::chained(power, &[4, 2]),
                 Plan::addition_chain(power),
             ] {
-                let (got, stats) = e.expm(&a, &plan).unwrap();
+                let (got, stats) = e.run_plan(&a, &plan).unwrap();
                 assert!(
                     got.approx_eq(&want, 1e-4, 1e-4),
                     "{:?} N={power}: diff {}",
@@ -585,7 +650,7 @@ mod tests {
     fn naive_roundtrip_accounting_on_cpu() {
         let mut e = Engine::cpu(CpuAlgo::Naive);
         let a = Matrix::random_spectral(8, 0.9, 5);
-        let (got, stats) = e.expm_naive_roundtrip(&a, 16).unwrap();
+        let (got, stats) = e.run_naive_roundtrip(&a, 16).unwrap();
         assert!(got.approx_eq(&oracle(&a, 16), 1e-4, 1e-4));
         assert_eq!(stats.launches, 15);
         assert_eq!(stats.multiplies, 15);
@@ -599,7 +664,7 @@ mod tests {
     fn packed_touches_host_exactly_twice() {
         let mut e = Engine::cpu(CpuAlgo::Naive);
         let a = Matrix::random_spectral(8, 0.9, 6);
-        let (got, stats) = e.expm_packed(&a, 100).unwrap();
+        let (got, stats) = e.run_packed(&a, 100).unwrap();
         assert!(got.approx_eq(&oracle(&a, 100), 1e-4, 1e-4));
         assert_eq!(stats.h2d_transfers, 1);
         assert_eq!(stats.d2h_transfers, 1);
@@ -614,13 +679,13 @@ mod tests {
     fn resident_replay_recycles_buffers() {
         let mut e = Engine::cpu(CpuAlgo::Naive);
         let a = Matrix::random_spectral(16, 0.9, 7);
-        let (_, resident) = e.expm(&a, &Plan::binary(1024, false)).unwrap();
+        let (_, resident) = e.run_plan(&a, &Plan::binary(1024, false)).unwrap();
         assert_eq!(resident.bytes_copied, 2 * 16 * 16 * 4);
         // 10 squarings ping-pong the arena: most launches recycle
         assert!(resident.buffers_recycled >= 7, "{resident:?}");
         // peak residency stays a few buffers, not O(launches)
         assert!(resident.peak_resident_bytes <= 4 * 16 * 16 * 4, "{resident:?}");
-        let (_, roundtrip) = e.expm_plan_roundtrip(&a, &Plan::binary(1024, false)).unwrap();
+        let (_, roundtrip) = e.run_plan_roundtrip(&a, &Plan::binary(1024, false)).unwrap();
         assert!(
             roundtrip.bytes_copied >= 10 * resident.bytes_copied,
             "clone-per-launch {roundtrip:?} vs resident {resident:?}"
@@ -631,8 +696,8 @@ mod tests {
     fn sim_engine_reports_simulated_time() {
         let mut e = Engine::sim();
         let a = Matrix::random_spectral(64, 0.9, 7);
-        let (_, ours) = e.expm(&a, &Plan::binary(512, false)).unwrap();
-        let (_, naive) = e.expm_naive_roundtrip(&a, 512).unwrap();
+        let (_, ours) = e.run_plan(&a, &Plan::binary(512, false)).unwrap();
+        let (_, naive) = e.run_naive_roundtrip(&a, 512).unwrap();
         // simulated seconds, not wall: the 2012 C2050 model puts the naive
         // discipline far behind the device-resident one
         assert!(ours.wall_s > 0.0);
@@ -643,10 +708,29 @@ mod tests {
     fn fused_artifact_availability_mirrors_shipped_powers() {
         let mut e = Engine::cpu(CpuAlgo::Naive);
         let a = Matrix::random_spectral(8, 0.9, 8);
-        let (got, stats) = e.expm_fused_artifact(&a, 64).unwrap();
+        let (got, stats) = e.run_fused(&a, 64).unwrap();
         assert_eq!(stats.launches, 1);
         assert!(got.approx_eq(&oracle(&a, 64), 1e-4, 1e-4));
-        assert!(e.expm_fused_artifact(&a, 65).is_err());
+        assert!(e.run_fused(&a, 65).is_err());
+    }
+
+    /// The one-release deprecation window: the legacy entry points still
+    /// execute (they are thin shims over the strategy impls).
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_execute() {
+        let mut e = Engine::cpu(CpuAlgo::Naive);
+        let a = Matrix::random_spectral(8, 0.9, 11);
+        let want = oracle(&a, 20);
+        let (got, _) = e.expm(&a, &Plan::binary(20, false)).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4));
+        let (got, _) = e.expm_packed(&a, 20).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4));
+        let (got, _) = e.expm_naive_roundtrip(&a, 20).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4));
+        let (got, _) = e.expm_plan_roundtrip(&a, &Plan::binary(20, false)).unwrap();
+        assert!(got.approx_eq(&want, 1e-4, 1e-4));
+        assert!(e.expm_fused_artifact(&a, 64).is_ok());
     }
 
     /// Backend wrapper that fails `prepare` for [`KernelOp::SqMul`] with a

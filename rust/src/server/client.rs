@@ -1,5 +1,11 @@
-//! Minimal blocking client for the JSON-lines protocol (examples/tests).
+//! Blocking client for the JSON-lines protocol, with pipelining: `submit`
+//! writes a request line tagged with a client-chosen id and returns a
+//! ticket immediately; `wait` resolves tickets in ANY order, stashing
+//! whatever other replies arrive in between. One connection carries many
+//! in-flight requests — the wire mirror of
+//! [`crate::exec::JobHandle`]'s submit/wait split.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
@@ -15,6 +21,32 @@ pub struct MatexpClient {
     writer: TcpStream,
     /// Matrix payload encoding for requests (server mirrors it back).
     payload: Payload,
+    /// Next client-chosen request id for pipelined submissions.
+    next_id: u64,
+    /// Replies that arrived while waiting on a different ticket.
+    pending: HashMap<u64, WireResponse>,
+    /// Tickets already resolved — a second `wait` on one must error, not
+    /// block forever on a reply that will never come again. Bounded: ids
+    /// below `resolved_floor` are all resolved (ids are assigned as a
+    /// strictly increasing counter), so the set holds only the
+    /// out-of-order frontier and is pruned as the floor advances.
+    resolved: HashSet<u64>,
+    resolved_floor: u64,
+}
+
+/// Ticket for one in-flight pipelined request (resolve with
+/// [`MatexpClient::wait`], in any order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PendingExpm {
+    id: u64,
+    n: usize,
+}
+
+impl PendingExpm {
+    /// The client-chosen request id on the wire.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
 }
 
 impl MatexpClient {
@@ -22,7 +54,15 @@ impl MatexpClient {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?; // request lines must not sit in Nagle's buffer
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(MatexpClient { reader, writer: stream, payload: Payload::Json })
+        Ok(MatexpClient {
+            reader,
+            writer: stream,
+            payload: Payload::Json,
+            next_id: 1,
+            pending: HashMap::new(),
+            resolved: HashSet::new(),
+            resolved_floor: 1,
+        })
     }
 
     /// Use the compact base64 payload encoding (bit-exact, 1/3 the wire
@@ -32,10 +72,14 @@ impl MatexpClient {
         self
     }
 
-    fn roundtrip(&mut self, req: &WireRequest) -> Result<WireResponse> {
+    fn send(&mut self, req: &WireRequest) -> Result<()> {
         let mut line = req.encode()?.into_bytes();
         line.push(b'\n');
         self.writer.write_all(&line)?;
+        Ok(())
+    }
+
+    fn read_response(&mut self) -> Result<WireResponse> {
         let mut buf = String::new();
         self.reader.read_line(&mut buf)?;
         if buf.is_empty() {
@@ -44,21 +88,111 @@ impl MatexpClient {
         WireResponse::decode(buf.trim_end())
     }
 
-    /// Compute `matrix^power` remotely.
-    pub fn expm(&mut self, matrix: &Matrix, power: u64, method: Method) -> Result<(Matrix, WireStats)> {
+    /// Read until a response WITHOUT an id arrives (the reply to a legacy
+    /// one-shot request), stashing any pipelined replies that land first.
+    fn recv_unidentified(&mut self) -> Result<WireResponse> {
+        loop {
+            let resp = self.read_response()?;
+            match resp.id() {
+                Some(rid) => {
+                    self.pending.insert(rid, resp);
+                }
+                None => return Ok(resp),
+            }
+        }
+    }
+
+    fn roundtrip(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.send(req)?;
+        self.recv_unidentified()
+    }
+
+    /// Submit `matrix^power` without waiting: the request is written with
+    /// a client-chosen id and a ticket comes back immediately. Resolve it
+    /// with [`Self::wait`] — in any order relative to other tickets.
+    pub fn submit(&mut self, matrix: &Matrix, power: u64, method: Method) -> Result<PendingExpm> {
+        let id = self.next_id;
         let req = WireRequest::Expm {
             n: matrix.n(),
             power,
             method,
             matrix: matrix.data().to_vec(),
             payload: self.payload,
+            id: Some(id),
         };
-        match self.roundtrip(&req)? {
+        // consume the id only once the line is actually on the wire: an
+        // encode failure (non-finite JSON payload) must not burn an id
+        // that would then sit below the resolved-floor watermark forever
+        self.send(&req)?;
+        self.next_id += 1;
+        Ok(PendingExpm { id, n: matrix.n() })
+    }
+
+    /// Resolve one ticket: returns its result as soon as its reply line
+    /// arrives, buffering replies to other in-flight tickets meanwhile.
+    /// A ticket resolves once; waiting on it again is a typed error.
+    pub fn wait(&mut self, job: &PendingExpm) -> Result<(Matrix, WireStats)> {
+        if job.id < self.resolved_floor || self.resolved.contains(&job.id) {
+            return Err(MatexpError::Service(format!(
+                "ticket {} already resolved",
+                job.id
+            )));
+        }
+        loop {
+            if let Some(resp) = self.pending.remove(&job.id) {
+                self.mark_resolved(job.id);
+                return Self::expm_payload(resp, job.n);
+            }
+            let resp = self.read_response()?;
+            match resp.id() {
+                Some(rid) => {
+                    self.pending.insert(rid, resp);
+                }
+                None => {
+                    return Err(MatexpError::Service(
+                        "server sent an un-identified reply while pipelined \
+                         requests were in flight"
+                            .into(),
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Compute `matrix^power` remotely — the one-shot convenience (and
+    /// the legacy no-id wire path): submit + wait in one call.
+    pub fn expm(
+        &mut self,
+        matrix: &Matrix,
+        power: u64,
+        method: Method,
+    ) -> Result<(Matrix, WireStats)> {
+        let req = WireRequest::Expm {
+            n: matrix.n(),
+            power,
+            method,
+            matrix: matrix.data().to_vec(),
+            payload: self.payload,
+            id: None,
+        };
+        let resp = self.roundtrip(&req)?;
+        Self::expm_payload(resp, matrix.n())
+    }
+
+    fn mark_resolved(&mut self, id: u64) {
+        self.resolved.insert(id);
+        while self.resolved.remove(&self.resolved_floor) {
+            self.resolved_floor += 1;
+        }
+    }
+
+    fn expm_payload(resp: WireResponse, n: usize) -> Result<(Matrix, WireStats)> {
+        match resp {
             WireResponse::Ok { result: Some(data), stats: Some(stats), .. } => {
-                Ok((Matrix::from_vec(matrix.n(), data)?, stats))
+                Ok((Matrix::from_vec(n, data)?, stats))
             }
             WireResponse::Ok { .. } => Err(MatexpError::Service("malformed ok response".into())),
-            WireResponse::Error { message, kind } => {
+            WireResponse::Error { message, kind, .. } => {
                 Err(WireResponse::to_typed_error(&kind, message))
             }
         }
@@ -68,7 +202,7 @@ impl MatexpClient {
     pub fn ping(&mut self) -> Result<()> {
         match self.roundtrip(&WireRequest::Ping)? {
             WireResponse::Ok { .. } => Ok(()),
-            WireResponse::Error { message, kind } => {
+            WireResponse::Error { message, kind, .. } => {
                 Err(WireResponse::to_typed_error(&kind, message))
             }
         }
@@ -79,7 +213,7 @@ impl MatexpClient {
         match self.roundtrip(&WireRequest::Metrics)? {
             WireResponse::Ok { metrics: Some(v), .. } => Ok(v),
             WireResponse::Ok { .. } => Err(MatexpError::Service("no metrics in response".into())),
-            WireResponse::Error { message, kind } => {
+            WireResponse::Error { message, kind, .. } => {
                 Err(WireResponse::to_typed_error(&kind, message))
             }
         }

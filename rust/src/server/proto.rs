@@ -30,7 +30,20 @@ pub enum Payload {
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
     /// Compute `matrix^power`. `matrix` is row-major, length `n*n`.
-    Expm { n: usize, power: u64, method: Method, matrix: Vec<f32>, payload: Payload },
+    ///
+    /// `id` is the **client-chosen request id**: when present, the server
+    /// pipelines — many `Expm` lines may be in flight on one connection
+    /// and each response line echoes its request's id (responses can
+    /// arrive out of submission order). When absent (legacy one-shot
+    /// peers), the server answers in order before reading further.
+    Expm {
+        n: usize,
+        power: u64,
+        method: Method,
+        matrix: Vec<f32>,
+        payload: Payload,
+        id: Option<u64>,
+    },
     /// Service metrics snapshot.
     Metrics,
     /// Liveness check.
@@ -192,13 +205,19 @@ pub enum WireResponse {
         metrics: Option<Json>,
         /// How `result` is encoded on the wire (mirrors the request).
         payload: Payload,
+        /// Echo of the request's client-chosen id (pipelined requests
+        /// only; legacy one-shot responses carry none).
+        id: Option<u64>,
     },
     Error {
         message: String,
         /// Machine-readable error class (`admission` = fix your request,
-        /// `config`, `service` = the service's problem), so remote
-        /// clients keep the typed distinction [`MatexpError`] draws.
+        /// `deadline` = retry with a looser deadline, `config`,
+        /// `service` = the service's problem), so remote clients keep
+        /// the typed distinction [`MatexpError`] draws.
         kind: String,
+        /// Echo of the request's client-chosen id, when it had one.
+        id: Option<u64>,
     },
 }
 
@@ -210,11 +229,14 @@ impl WireRequest {
         Ok(match self {
             WireRequest::Ping => r#"{"op":"ping"}"#.to_string(),
             WireRequest::Metrics => r#"{"op":"metrics"}"#.to_string(),
-            WireRequest::Expm { n, power, method, matrix, payload } => {
+            WireRequest::Expm { n, power, method, matrix, payload, id } => {
                 let mut s = format!(
                     r#"{{"op":"expm","n":{n},"power":{power},"method":"{}","#,
                     method.as_str()
                 );
+                if let Some(id) = id {
+                    s.push_str(&format!(r#""id":{id},"#));
+                }
                 match payload {
                     Payload::Json => {
                         s.push_str("\"matrix\":");
@@ -271,7 +293,8 @@ impl WireRequest {
                         .ok_or_else(|| MatexpError::Service("expm: bad \"matrix\"".into()))?;
                     (m, Payload::Json)
                 };
-                Ok(WireRequest::Expm { n, power, method, matrix, payload })
+                let id = v.get("id").and_then(Json::as_u64);
+                Ok(WireRequest::Expm { n, power, method, matrix, payload, id })
             }
             other => Err(MatexpError::Service(format!("unknown op {other:?}"))),
         }
@@ -293,11 +316,12 @@ impl WireResponse {
             stats: Some(resp.stats.clone().into()),
             metrics: None,
             payload,
+            id: None,
         }
     }
 
     pub fn error(msg: impl Into<String>) -> WireResponse {
-        WireResponse::Error { message: msg.into(), kind: "service".into() }
+        WireResponse::Error { message: msg.into(), kind: "service".into(), id: None }
     }
 
     /// Typed error → wire error, preserving the error class.
@@ -305,9 +329,10 @@ impl WireResponse {
         let kind = match e {
             MatexpError::Admission(_) => "admission",
             MatexpError::Config(_) => "config",
+            MatexpError::Deadline(_) => "deadline",
             _ => "service",
         };
-        WireResponse::Error { message: e.to_string(), kind: kind.into() }
+        WireResponse::Error { message: e.to_string(), kind: kind.into(), id: None }
     }
 
     /// Wire error → typed error (the client side of [`Self::from_error`]).
@@ -315,12 +340,34 @@ impl WireResponse {
         match kind {
             "admission" => MatexpError::Admission(message),
             "config" => MatexpError::Config(message),
+            "deadline" => MatexpError::Deadline(message),
             _ => MatexpError::Service(message),
         }
     }
 
     pub fn pong() -> WireResponse {
-        WireResponse::Ok { result: None, stats: None, metrics: None, payload: Payload::Json }
+        WireResponse::Ok {
+            result: None,
+            stats: None,
+            metrics: None,
+            payload: Payload::Json,
+            id: None,
+        }
+    }
+
+    /// The response's echoed request id, whichever variant it is.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            WireResponse::Ok { id, .. } | WireResponse::Error { id, .. } => *id,
+        }
+    }
+
+    /// Stamp the echoed request id (builder-style).
+    pub fn with_id(mut self, new_id: Option<u64>) -> WireResponse {
+        match &mut self {
+            WireResponse::Ok { id, .. } | WireResponse::Error { id, .. } => *id = new_id,
+        }
+        self
     }
 
     /// Encode as one JSON line (no trailing newline). Errors if a JSON
@@ -329,16 +376,22 @@ impl WireResponse {
     /// array; the base64 payload carries non-finite values bit-exactly.
     pub fn encode(&self) -> Result<String> {
         Ok(match self {
-            WireResponse::Error { message, kind } => {
-                json_obj![
+            WireResponse::Error { message, kind, id } => {
+                let mut obj = json_obj![
                     ("status", "error"),
                     ("kind", kind.as_str()),
                     ("message", message.as_str())
-                ]
-                .to_string()
+                ];
+                if let (Some(id), Json::Obj(fields)) = (id, &mut obj) {
+                    fields.insert("id".to_string(), Json::from(*id));
+                }
+                obj.to_string()
             }
-            WireResponse::Ok { result, stats, metrics, payload } => {
+            WireResponse::Ok { result, stats, metrics, payload, id } => {
                 let mut s = String::from(r#"{"status":"ok""#);
+                if let Some(id) = id {
+                    s.push_str(&format!(r#","id":{id}"#));
+                }
                 if let Some(data) = result {
                     match payload {
                         Payload::Json => {
@@ -390,6 +443,7 @@ impl WireResponse {
                     },
                     metrics: v.get("metrics").cloned(),
                     payload,
+                    id: v.get("id").and_then(Json::as_u64),
                 })
             }
             Some("error") => Ok(WireResponse::Error {
@@ -403,6 +457,7 @@ impl WireResponse {
                     .and_then(Json::as_str)
                     .unwrap_or("service")
                     .to_string(),
+                id: v.get("id").and_then(Json::as_u64),
             }),
             _ => Err(MatexpError::Service("response missing \"status\"".into())),
         }
@@ -421,6 +476,7 @@ mod tests {
             method: Method::Ours,
             matrix: vec![1.0; 4],
             payload: Payload::Json,
+            id: None,
         };
         let s = r.encode().unwrap();
         assert!(s.contains("\"op\":\"expm\""), "{s}");
@@ -435,6 +491,7 @@ mod tests {
             method: Method::Ours,
             matrix: vec![0.1, -2.5, 3.0, f32::MIN_POSITIVE],
             payload: Payload::Base64,
+            id: None,
         };
         let s = r.encode().unwrap();
         assert!(s.contains("matrix_b64"), "{s}");
@@ -446,6 +503,7 @@ mod tests {
             stats: None,
             metrics: None,
             payload: Payload::Base64,
+            id: None,
         };
         assert_eq!(WireResponse::decode(&resp.encode().unwrap()).unwrap(), resp);
     }
@@ -457,6 +515,7 @@ mod tests {
             stats: None,
             metrics: None,
             payload,
+            id: None,
         };
         // JSON has no NaN/Inf: encoding must refuse, not corrupt
         assert!(make(Payload::Json).encode().is_err());
@@ -496,6 +555,7 @@ mod tests {
             }),
             metrics: None,
             payload: Payload::Json,
+            id: None,
         };
         let line = resp.encode().unwrap();
         assert!(line.contains("bytes_copied"), "{line}");
@@ -541,6 +601,7 @@ mod tests {
             }),
             metrics: None,
             payload: Payload::Json,
+            id: None,
         };
         let line = resp.encode().unwrap();
         assert!(line.contains("per_device"), "{line}");
@@ -563,6 +624,7 @@ mod tests {
             method: Method::Ours,
             matrix: vec![0.0; 4],
             payload: Payload::Json,
+            id: None,
         };
         assert!(r.matrix().is_err());
     }
@@ -572,9 +634,10 @@ mod tests {
         let s = WireResponse::error("nope").encode().unwrap();
         assert!(s.contains("\"status\":\"error\""), "{s}");
         match WireResponse::decode(&s).unwrap() {
-            WireResponse::Error { message, kind } => {
+            WireResponse::Error { message, kind, id } => {
                 assert_eq!(message, "nope");
                 assert_eq!(kind, "service");
+                assert_eq!(id, None);
             }
             other => panic!("{other:?}"),
         }
@@ -586,7 +649,7 @@ mod tests {
         let s = WireResponse::from_error(&e).encode().unwrap();
         assert!(s.contains("\"kind\":\"admission\""), "{s}");
         match WireResponse::decode(&s).unwrap() {
-            WireResponse::Error { message, kind } => {
+            WireResponse::Error { message, kind, .. } => {
                 let typed = WireResponse::to_typed_error(&kind, message);
                 assert!(matches!(typed, MatexpError::Admission(_)), "{typed:?}");
             }
@@ -612,6 +675,57 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_ids_roundtrip_and_legacy_lines_still_decode() {
+        // request id survives encode/decode
+        let r = WireRequest::Expm {
+            n: 2,
+            power: 4,
+            method: Method::Ours,
+            matrix: vec![1.0; 4],
+            payload: Payload::Json,
+            id: Some(41),
+        };
+        let line = r.encode().unwrap();
+        assert!(line.contains(r#""id":41"#), "{line}");
+        assert_eq!(WireRequest::decode(&line).unwrap(), r);
+
+        // response ids survive both variants
+        let ok = WireResponse::pong().with_id(Some(7));
+        assert_eq!(ok.id(), Some(7));
+        let decoded = WireResponse::decode(&ok.encode().unwrap()).unwrap();
+        assert_eq!(decoded.id(), Some(7));
+        let err = WireResponse::error("nope").with_id(Some(9));
+        let decoded = WireResponse::decode(&err.encode().unwrap()).unwrap();
+        assert_eq!(decoded.id(), Some(9));
+
+        // legacy one-shot lines (no id anywhere) decode to id: None
+        let legacy_req = r#"{"op":"expm","n":2,"power":4,"method":"ours","matrix":[1,1,1,1]}"#;
+        match WireRequest::decode(legacy_req).unwrap() {
+            WireRequest::Expm { id, .. } => assert_eq!(id, None),
+            other => panic!("{other:?}"),
+        }
+        let legacy_resp = r#"{"status":"ok"}"#;
+        assert_eq!(WireResponse::decode(legacy_resp).unwrap().id(), None);
+        // and encoding without an id emits no id field at all
+        let plain = WireResponse::pong().encode().unwrap();
+        assert!(!plain.contains("\"id\""), "{plain}");
+    }
+
+    #[test]
+    fn deadline_errors_keep_their_kind_across_the_wire() {
+        let e = MatexpError::Deadline("job 3 missed its deadline".into());
+        let s = WireResponse::from_error(&e).encode().unwrap();
+        assert!(s.contains("\"kind\":\"deadline\""), "{s}");
+        match WireResponse::decode(&s).unwrap() {
+            WireResponse::Error { message, kind, .. } => {
+                let typed = WireResponse::to_typed_error(&kind, message);
+                assert!(matches!(typed, MatexpError::Deadline(_)), "{typed:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn encoded_lines_are_single_line() {
         let r = WireRequest::Expm {
             n: 2,
@@ -619,6 +733,7 @@ mod tests {
             method: Method::NaiveGpu,
             matrix: vec![0.5; 4],
             payload: Payload::Base64,
+            id: None,
         };
         assert!(!r.encode().unwrap().contains('\n'));
         assert!(!WireResponse::pong().encode().unwrap().contains('\n'));

@@ -1,13 +1,24 @@
 //! TCP server on std::net: a connection-handler thread pool in front of
-//! the coordinator. PJRT work happens on the coordinator's worker threads;
-//! connection threads only parse lines and block on `submit`.
+//! the coordinator.
+//!
+//! Connections are **pipelined**: a request carrying a client-chosen id
+//! is submitted asynchronously ([`ServiceHandle::submit_with_id`]) and
+//! the reader keeps reading — many requests ride one connection
+//! concurrently, and each completion is written (tagged with its id) as
+//! soon as its worker finishes, in whatever order that happens. A
+//! per-connection completion pump drains one shared reply channel;
+//! requests *without* an id keep the legacy one-shot contract: answered
+//! in order before the next line is read.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::service::ServiceHandle;
-use crate::error::Result;
+use crate::error::{MatexpError, Result};
+use crate::exec::{JobReply, Submission};
 use crate::server::proto::{Payload, WireRequest, WireResponse};
 use crate::util::threadpool::ThreadPool;
 
@@ -35,8 +46,9 @@ impl Server {
 /// immediately with the bound address (tests bind port 0).
 ///
 /// `conn_threads` bounds concurrent connections; requests beyond that
-/// queue at accept. Each connection is handled synchronously —
-/// line in, line out.
+/// queue at accept. Each connection thread reads lines and submits them
+/// asynchronously; replies are written by the connection's completion
+/// pump as workers finish.
 pub fn serve_background(
     service: Arc<ServiceHandle>,
     addr: &str,
@@ -84,53 +96,150 @@ pub fn serve(service: Arc<ServiceHandle>, addr: &str, conn_threads: usize) -> Re
     Ok(())
 }
 
+/// In-flight pipelined jobs on one connection:
+/// service id → (client-chosen id, payload encoding to reply in).
+type Inflight = Arc<Mutex<HashMap<u64, (u64, Payload)>>>;
+
 fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
     stream.set_nodelay(true)?; // line-oriented RPC: don't let Nagle batch replies
-    let mut writer = stream.try_clone()?;
+    // one writer lock per connection: the reader (inline replies) and the
+    // completion pump (pipelined replies) interleave whole lines only
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    let (done_tx, done_rx) = channel::<(u64, JobReply)>();
+    let pump = {
+        let writer = Arc::clone(&writer);
+        let inflight = Arc::clone(&inflight);
+        std::thread::Builder::new()
+            .name("matexp-conn-pump".into())
+            .spawn(move || completion_pump(done_rx, &inflight, &writer))
+            .map_err(MatexpError::Io)?
+    };
+    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx);
+    // dropping the reader's sender lets the pump exit once every entry the
+    // service still holds (clones of done_tx) has been completed
+    drop(done_tx);
+    let _ = pump.join();
+    outcome
+}
+
+fn read_loop(
+    service: &ServiceHandle,
+    reader: BufReader<TcpStream>,
+    writer: &Mutex<TcpStream>,
+    inflight: &Inflight,
+    done_tx: &Sender<(u64, JobReply)>,
+) -> Result<()> {
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let response = match WireRequest::decode(&line) {
-            Ok(req) => dispatch(service, req),
-            Err(e) => WireResponse::error(format!("bad request: {e}")),
-        };
-        // an unencodable payload (non-finite result in a JSON payload)
-        // degrades to a wire error; error responses always encode
-        let encoded = response.encode().unwrap_or_else(|e| {
-            WireResponse::error(format!("unencodable response: {e}"))
-                .encode()
-                .expect("error responses contain no payload")
-        });
-        let mut out = encoded.into_bytes();
-        out.push(b'\n');
-        writer.write_all(&out)?;
+        match WireRequest::decode(&line) {
+            Err(e) => write_line(writer, &WireResponse::error(format!("bad request: {e}")))?,
+            Ok(WireRequest::Ping) => write_line(writer, &WireResponse::pong())?,
+            Ok(WireRequest::Metrics) => {
+                let resp = WireResponse::Ok {
+                    result: None,
+                    stats: None,
+                    metrics: Some(service.metrics().to_json()),
+                    payload: Payload::Json,
+                    id: None,
+                };
+                write_line(writer, &resp)?;
+            }
+            Ok(req @ WireRequest::Expm { .. }) => {
+                handle_expm(service, req, writer, inflight, done_tx)?;
+            }
+        }
     }
     Ok(())
 }
 
-fn dispatch(service: &ServiceHandle, req: WireRequest) -> WireResponse {
-    match req {
-        WireRequest::Ping => WireResponse::pong(),
-        WireRequest::Metrics => WireResponse::Ok {
-            result: None,
-            stats: None,
-            metrics: Some(service.metrics().to_json()),
-            payload: Payload::Json,
-        },
-        WireRequest::Expm { power, method, payload, .. } => {
-            let matrix = match req.matrix() {
-                Ok(m) => m,
-                Err(e) => return WireResponse::from_error(&e),
-            };
-            match service.submit(matrix, power, method) {
-                // reply in the encoding the request used; typed errors
-                // (admission vs service) keep their kind on the wire
-                Ok(resp) => WireResponse::from_expm(&resp, payload),
-                Err(e) => WireResponse::from_error(&e),
+fn handle_expm(
+    service: &ServiceHandle,
+    req: WireRequest,
+    writer: &Mutex<TcpStream>,
+    inflight: &Inflight,
+    done_tx: &Sender<(u64, JobReply)>,
+) -> Result<()> {
+    let WireRequest::Expm { power, method, payload, id: client_id, .. } = &req else {
+        unreachable!("handle_expm is only called with Expm requests");
+    };
+    let (power, method, payload, client_id) = (*power, *method, *payload, *client_id);
+    let matrix = match req.matrix() {
+        Ok(m) => m,
+        Err(e) => {
+            return write_line(writer, &WireResponse::from_error(&e).with_id(client_id));
+        }
+    };
+    let submission = Submission::expm(matrix, power).method(method);
+    match client_id {
+        // pipelined: register the connection bookkeeping under a reserved
+        // service id FIRST, so a worker reply can never race past it
+        Some(cid) => {
+            let sid = service.reserve_id();
+            inflight.lock().expect("inflight map poisoned").insert(sid, (cid, payload));
+            if let Err(e) = service.submit_with_id(sid, submission, done_tx.clone()) {
+                inflight.lock().expect("inflight map poisoned").remove(&sid);
+                write_line(writer, &WireResponse::from_error(&e).with_id(Some(cid)))?;
             }
         }
+        // legacy one-shot peer: block and answer in order, as before
+        None => {
+            let resp = match service.submit_job(submission) {
+                Ok(mut job) => match job.wait() {
+                    // reply in the encoding the request used; typed errors
+                    // (admission vs service) keep their kind on the wire
+                    Ok(r) => WireResponse::from_expm(&r, payload),
+                    Err(e) => WireResponse::from_error(&e),
+                },
+                Err(e) => WireResponse::from_error(&e),
+            };
+            write_line(writer, &resp)?;
+        }
     }
+    Ok(())
+}
+
+/// Drain worker completions for one connection, writing each as soon as
+/// it lands. Exits when every sender is gone (reader finished AND no
+/// in-flight job still holds a clone) or the peer stops reading.
+fn completion_pump(
+    done_rx: Receiver<(u64, JobReply)>,
+    inflight: &Mutex<HashMap<u64, (u64, Payload)>>,
+    writer: &Mutex<TcpStream>,
+) {
+    while let Ok((sid, reply)) = done_rx.recv() {
+        let Some((client_id, payload)) = inflight.lock().expect("inflight map poisoned").remove(&sid)
+        else {
+            continue; // withdrawn (failed submit) — nothing to write
+        };
+        let resp = match reply {
+            Ok(r) => WireResponse::from_expm(&r, payload),
+            // typed error → wire error with its kind (deadline, admission…)
+            Err(e) => WireResponse::from_error(&e),
+        }
+        .with_id(Some(client_id));
+        if write_line(writer, &resp).is_err() {
+            return; // peer gone; remaining completions have no reader
+        }
+    }
+}
+
+/// Encode + write one response line under the connection's writer lock
+/// (an unencodable payload degrades to a wire error with the same id).
+fn write_line(writer: &Mutex<TcpStream>, resp: &WireResponse) -> Result<()> {
+    let encoded = resp.encode().unwrap_or_else(|e| {
+        WireResponse::error(format!("unencodable response: {e}"))
+            .with_id(resp.id())
+            .encode()
+            .expect("error responses contain no payload")
+    });
+    let mut out = encoded.into_bytes();
+    out.push(b'\n');
+    let mut w = writer.lock().expect("connection writer poisoned");
+    w.write_all(&out)?;
+    Ok(())
 }

@@ -21,10 +21,13 @@ pub struct Observation {
 /// Solve a 3x3 linear system by Gaussian elimination with partial pivoting.
 fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
     for col in 0..3 {
-        // pivot
-        let piv = (col..3).max_by(|&i, &j| {
-            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
-        })?;
+        // pivot — total_cmp, not partial_cmp().unwrap(): degenerate
+        // observations (NaN seconds, zero-launch rows) can plant NaN in
+        // the normal equations, and pivot selection must not panic on
+        // them (NaN orders above every finite value under total order,
+        // so a NaN column simply fails the singularity check or yields a
+        // NaN solution the caller clamps)
+        let piv = (col..3).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))?;
         if a[piv][col].abs() < 1e-30 {
             return None;
         }
@@ -68,7 +71,9 @@ pub fn fit_naive_gpu(observations: &[Observation], device: DeviceSpec) -> GpuTim
             continue;
         }
         let per_launch = obs.seconds / launches;
-        if per_launch <= 0.0 {
+        // non-finite rows (NaN/inf seconds) must not poison the normal
+        // equations — one bad observation would wipe out every valid one
+        if !per_launch.is_finite() || per_launch <= 0.0 {
             continue;
         }
         let w = 1.0 / per_launch;
@@ -216,5 +221,47 @@ mod tests {
         let m = fit_naive_gpu(&[], DeviceSpec::tesla_c2050());
         assert!(m.launch_overhead_s > 0.0);
         assert!(m.eff_flops > 0.0);
+    }
+
+    /// Regression: NaN observations used to panic in the pivot's
+    /// `partial_cmp(..).unwrap()`. They must instead be skipped — an
+    /// all-degenerate set falls back to the spec model, and a NaN mixed
+    /// into good observations must not poison the fit of the good ones.
+    #[test]
+    fn nan_observations_do_not_panic_and_yield_a_physical_model() {
+        let obs = [
+            Observation { n: 64, power: 64, seconds: f64::NAN },
+            Observation { n: 128, power: 128, seconds: f64::NAN },
+            Observation { n: 256, power: 64, seconds: f64::NAN },
+        ];
+        let m = fit_naive_gpu(&obs, DeviceSpec::tesla_c2050());
+        assert!(m.launch_overhead_s.is_finite() && m.launch_overhead_s > 0.0, "{m:?}");
+        assert!(m.eff_pcie_bytes_per_s.is_finite() && m.eff_pcie_bytes_per_s > 0.0);
+        assert!(m.eff_flops.is_finite() && m.eff_flops > 0.0);
+        // solve3 itself survives NaN pivots (returns None or a NaN
+        // solution, never panics)
+        let nan_sys = [[f64::NAN; 3]; 3];
+        let _ = solve3(nan_sys, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn nan_observation_does_not_poison_good_ones() {
+        // synthetic data from known coefficients, plus one NaN row: the
+        // fit must still recover the coefficients from the good rows
+        let (a, pcie, flops) = (2.5e-3, 4.8e9, 4.0e11);
+        let mut obs = Vec::new();
+        for n in [64usize, 128, 256, 512] {
+            for power in [64u64, 128, 256, 512] {
+                let per_launch =
+                    a + 3.0 * (n * n * 4) as f64 / pcie + 2.0 * (n as f64).powi(3) / flops;
+                obs.push(Observation { n, power, seconds: per_launch * (power - 1) as f64 });
+            }
+        }
+        obs.push(Observation { n: 128, power: 256, seconds: f64::NAN });
+        obs.push(Observation { n: 64, power: 64, seconds: f64::INFINITY });
+        let m = fit_naive_gpu(&obs, DeviceSpec::tesla_c2050());
+        assert!((m.launch_overhead_s - a).abs() / a < 1e-6, "{}", m.launch_overhead_s);
+        assert!((m.eff_pcie_bytes_per_s - pcie).abs() / pcie < 1e-6);
+        assert!((m.eff_flops - flops).abs() / flops < 1e-6);
     }
 }

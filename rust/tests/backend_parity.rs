@@ -7,6 +7,10 @@
 //! radius exactly 1), so the comparison is meaningful even at N=1024
 //! where a contractive matrix would collapse to zero.
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::plan::Plan;
 use matexp::runtime::{CpuEngine, Engine};

@@ -1,0 +1,167 @@
+//! Acceptance tests for the one execution surface:
+//!
+//! 1. **Parity** — the SAME `Submission` served by `Engine<B>`,
+//!    `PoolEngine` and `ServiceHandle` (all as `dyn Executor`) matches
+//!    the `linalg::expm` oracle at 1e-5.
+//! 2. **No stragglers** — a source grep over `src/` asserting no caller
+//!    outside `runtime/engine.rs` invokes the deprecated `expm_*` entry
+//!    points: the crate itself routes everything through the surface.
+//! 3. **Capabilities** — each executor truthfully reports what it is.
+
+use std::path::{Path, PathBuf};
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+use matexp::pool::{PoolDeviceKind, PoolEngine};
+use matexp::runtime::{BackendKind, Engine};
+
+fn executors() -> Vec<(&'static str, Box<dyn Executor>)> {
+    // Ikj everywhere so every arm shares the oracle's multiply kernel —
+    // the 1e-5 bound then measures the execution surface, not kernel
+    // reassociation differences
+    let mut service_cfg = MatexpConfig::default();
+    service_cfg.cpu_algo = CpuAlgo::Ikj;
+    service_cfg.workers = 2;
+    service_cfg.batcher.max_wait_ms = 1;
+
+    let mut pool_cfg = MatexpConfig::default();
+    pool_cfg.cpu_algo = CpuAlgo::Ikj;
+    pool_cfg.backend = BackendKind::Pool;
+    pool_cfg.pool.devices = vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu];
+
+    vec![
+        ("engine", Box::new(Engine::cpu(CpuAlgo::Ikj))),
+        ("pool", Box::new(PoolEngine::from_config(&pool_cfg).expect("pool starts"))),
+        ("service", Box::new(Service::start(service_cfg).expect("service starts"))),
+    ]
+}
+
+/// Acceptance: one submission, three executors, one oracle, 1e-5.
+#[test]
+fn same_submission_matches_oracle_on_every_executor() {
+    let a = Matrix::random_stochastic(16, 5);
+    let power = 29;
+    let want = linalg::expm::expm(&a, power, CpuAlgo::Ikj).expect("oracle");
+    for (name, mut executor) in executors() {
+        // square-and-multiply disciplines share the oracle's multiply
+        // ordering: 1e-5 holds exactly as specified
+        for method in [Method::Ours, Method::OursPacked] {
+            let resp = executor
+                .run(Submission::expm(a.clone(), power).method(method))
+                .unwrap_or_else(|e| panic!("{name}/{method}: {e}"));
+            assert!(
+                resp.result.approx_eq(&want, 1e-5, 1e-5),
+                "{name}/{method}: diff {}",
+                resp.result.max_abs_diff(&want)
+            );
+            assert_eq!(resp.method, method, "{name}");
+        }
+        // the naive baseline multiplies in a different order (28
+        // sequential products), so it gets the usual cross-ordering bound
+        let resp = executor
+            .run(Submission::expm(a.clone(), power).method(Method::NaiveGpu))
+            .unwrap_or_else(|e| panic!("{name}/naive-gpu: {e}"));
+        assert!(
+            resp.result.approx_eq(&want, 1e-4, 1e-4),
+            "{name}/naive-gpu: diff {}",
+            resp.result.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn capabilities_are_truthful() {
+    for (name, executor) in executors() {
+        let caps = executor.capabilities();
+        assert!(!caps.platform.is_empty(), "{name}");
+        assert!(caps.sizes.is_empty(), "{name}: cpu executors are size-unrestricted");
+        assert!(caps.max_power >= 1 << 20, "{name}");
+        for m in Method::all() {
+            assert!(caps.methods.contains(&m), "{name} missing {m}");
+        }
+        assert_eq!(caps.async_submit, name == "service", "{name}");
+    }
+}
+
+/// The handle contract end-to-end on the asynchronous executor:
+/// try_result polls, wait resolves, cancel withdraws.
+#[test]
+fn service_handles_wait_poll_and_cancel() {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 1;
+    cfg.batcher.max_wait_ms = 1;
+    let service = Service::start(cfg).expect("service starts");
+    let a = Matrix::random_spectral(12, 0.9, 3);
+    let want = linalg::expm::expm(&a, 40, CpuAlgo::Ikj).unwrap();
+
+    let mut job = service.submit_job(Submission::expm(a.clone(), 40)).expect("submit");
+    // poll until done (async submission: the result arrives on its own)
+    let resp = loop {
+        if let Some(outcome) = job.try_result() {
+            break outcome.expect("job succeeds");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    };
+    assert!(resp.result.approx_eq(&want, 1e-3, 1e-3));
+
+    // a cancelled job never delivers, and the service stays healthy
+    let mut doomed = service.submit_job(Submission::expm(a.clone(), 40)).expect("submit");
+    doomed.cancel();
+    assert!(doomed.wait().is_err());
+    let mut after = service.submit_job(Submission::expm(a, 40)).expect("submit");
+    assert!(after.wait().expect("service healthy after cancel").result.is_finite());
+}
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("read src dir") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The deprecation window is real: inside this crate, NOTHING outside
+/// `runtime/engine.rs` (where the shims live) calls the deprecated
+/// `expm_*` entry points — every src-tree caller routes through
+/// `exec::Executor::submit` / the crate-internal strategy dispatch.
+#[test]
+fn no_src_caller_uses_deprecated_expm_entry_points() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    rust_sources(&root, &mut files);
+    assert!(files.len() > 40, "source walker looks broken: {} files", files.len());
+    const FORBIDDEN: [&str; 5] = [
+        ".expm(",
+        ".expm_packed(",
+        ".expm_naive_roundtrip(",
+        ".expm_plan_roundtrip(",
+        ".expm_fused_artifact(",
+    ];
+    for file in files {
+        let rel = file
+            .strip_prefix(&root)
+            .expect("under src/")
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rel == "runtime/engine.rs" {
+            continue; // the shims and their own regression tests
+        }
+        if rel == "lib.rs" {
+            continue; // the crate docs carry the old→new migration table
+        }
+        let src = std::fs::read_to_string(&file).expect("read source");
+        for needle in FORBIDDEN {
+            assert!(
+                !src.contains(needle),
+                "{rel} calls a deprecated expm_* entry point ({needle:?}) — \
+                 route through exec::Executor::submit / Submission"
+            );
+        }
+    }
+}

@@ -3,6 +3,10 @@
 //! per-device utilization, and the pool scaling experiment's acceptance
 //! criteria. Runs unconditionally (cpu + sim devices need no hardware).
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use std::sync::Arc;
 
 use matexp::config::MatexpConfig;
@@ -110,11 +114,13 @@ fn hetero_cpu_sim_pool_agrees_with_both_members() {
     let cfg = pool_cfg(vec![PoolDeviceKind::Cpu, PoolDeviceKind::Sim]);
     let engine = PoolEngine::from_config(&cfg).unwrap();
     let reqs: Vec<matexp::coordinator::request::ExpmRequest> = (0..8)
-        .map(|i| matexp::coordinator::request::ExpmRequest {
-            id: i + 1,
-            matrix: Matrix::random_spectral(24, 0.9, i + 10),
-            power: 100,
-            method: Method::Ours,
+        .map(|i| {
+            matexp::coordinator::request::ExpmRequest::new(
+                i + 1,
+                Matrix::random_spectral(24, 0.9, i + 10),
+                100,
+                Method::Ours,
+            )
         })
         .collect();
     let oracles: Vec<Matrix> = reqs

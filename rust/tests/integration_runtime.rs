@@ -3,6 +3,10 @@
 //! powers. Runs unconditionally (no artifacts needed); the PJRT variants
 //! live at the bottom behind `--features xla` and stay artifact-gated.
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::plan::Plan;
 use matexp::runtime::{Engine, FUSED_EXPM_POWERS};

@@ -140,6 +140,98 @@ fn listener_survives_bad_connections() {
     assert!(got.approx_eq(&want, 1e-3, 1e-3));
 }
 
+/// Satellite acceptance: ≥8 pipelined in-flight requests on ONE
+/// connection, resolved out of submission order with correct
+/// id↔result pairing.
+#[test]
+fn pipelined_requests_on_one_connection_pair_ids_to_results() {
+    let (_service, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    // distinct (matrix, power) per request so a mispaired reply is
+    // guaranteed to fail its oracle check
+    let inputs: Vec<(Matrix, u64)> = (0..10u64)
+        .map(|i| (Matrix::random_spectral(8 + (i as usize % 3) * 4, 0.9, 100 + i), 3 + i))
+        .collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|(a, p)| client.submit(a, *p, Method::Ours).expect("submit"))
+        .collect();
+    assert_eq!(tickets.len(), 10, "all 10 in flight before any wait");
+    // resolve in REVERSE submission order: the client must pair by id,
+    // buffering whatever other replies land first
+    for (ticket, (a, p)) in tickets.iter().zip(&inputs).rev() {
+        let want = linalg::expm::expm(a, *p, CpuAlgo::Ikj).unwrap();
+        let (got, stats) = client.wait(ticket).expect("pipelined wait");
+        assert!(
+            got.approx_eq(&want, 1e-4, 1e-4),
+            "ticket {} (N={p}): diff {}",
+            ticket.id(),
+            got.max_abs_diff(&want)
+        );
+        assert!(stats.multiplies > 0);
+    }
+    // a ticket resolves exactly once: a second wait errors (typed)
+    // instead of blocking forever on a reply that will never come again
+    let err = client.wait(&tickets[0]).unwrap_err().to_string();
+    assert!(err.contains("already resolved"), "{err}");
+}
+
+/// Replies genuinely arrive out of submission order: a slow job
+/// submitted FIRST resolves after a fast one submitted second, on the
+/// same connection (two workers serve the two batches concurrently).
+#[test]
+fn slow_first_fast_second_completes_out_of_order() {
+    let (_service, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let slow_a = Matrix::random_spectral(32, 0.9, 1);
+    let fast_a = Matrix::random_spectral(16, 0.9, 2);
+    // cpu-seq power 300 = 299 full multiplies; the fast job is 3 launches
+    let slow = client.submit(&slow_a, 300, Method::CpuSeq).expect("submit slow");
+    let fast = client.submit(&fast_a, 8, Method::Ours).expect("submit fast");
+    // wait the SLOW one first: the fast reply arrives meanwhile and must
+    // be buffered under its id, not misdelivered
+    let (got_slow, _) = client.wait(&slow).expect("slow");
+    let (got_fast, _) = client.wait(&fast).expect("fast");
+    assert!(got_slow
+        .approx_eq(&linalg::expm::expm(&slow_a, 300, CpuAlgo::Ikj).unwrap(), 1e-3, 1e-3));
+    assert!(got_fast
+        .approx_eq(&linalg::expm::expm(&fast_a, 8, CpuAlgo::Ikj).unwrap(), 1e-4, 1e-4));
+}
+
+/// Legacy one-shot requests (no id on the wire) and pipelined requests
+/// coexist on one connection: the un-id'd reply is answered in order,
+/// id-tagged replies are paired by id around it.
+#[test]
+fn legacy_one_shot_and_pipelined_coexist_on_one_connection() {
+    let (_service, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let a = Matrix::random_spectral(12, 0.9, 21);
+    let b = Matrix::random_spectral(12, 0.9, 22);
+    let t1 = client.submit(&a, 100, Method::Ours).expect("pipelined submit");
+    // legacy blocking call with pipelined work still in flight
+    let want_b = linalg::expm::expm(&b, 16, CpuAlgo::Ikj).unwrap();
+    let (got_b, _) = client.expm(&b, 16, Method::Ours).expect("legacy expm");
+    assert!(got_b.approx_eq(&want_b, 1e-4, 1e-4));
+    // the pipelined ticket still resolves correctly afterwards
+    let want_a = linalg::expm::expm(&a, 100, CpuAlgo::Ikj).unwrap();
+    let (got_a, _) = client.wait(&t1).expect("pipelined wait");
+    assert!(got_a.approx_eq(&want_a, 1e-4, 1e-4));
+}
+
+/// Admission failures on pipelined requests come back as id-tagged
+/// error lines, so the ticket resolves to the typed error.
+#[test]
+fn pipelined_admission_error_is_id_tagged() {
+    let (_service, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    let bad = client.submit(&Matrix::identity(8), 1 << 40, Method::Ours).expect("submit");
+    let good = client.submit(&Matrix::identity(8), 4, Method::Ours).expect("submit");
+    let err = client.wait(&bad).unwrap_err().to_string();
+    assert!(err.contains("MAX_POWER"), "{err}");
+    let (got, _) = client.wait(&good).expect("good request unaffected");
+    assert!(got.approx_eq(&Matrix::identity(8), 1e-5, 1e-5));
+}
+
 #[test]
 fn server_rejects_oversized_power_via_admission() {
     let (_service, addr) = start_server();

@@ -2,11 +2,18 @@
 //! behaviour, admission control, metrics, graceful shutdown. Runs
 //! unconditionally on the default (pure-Rust CPU) backend.
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use std::sync::Arc;
+use std::time::Duration;
 
 use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
 use matexp::coordinator::service::Service;
+use matexp::error::MatexpError;
+use matexp::exec::{Priority, Submission};
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 
 fn start(workers: usize) -> Arc<matexp::coordinator::service::ServiceHandle> {
@@ -143,6 +150,54 @@ fn sim_backend_serves_with_simulated_wall_clock() {
         naive.stats.wall_s,
         ours.stats.wall_s
     );
+}
+
+/// Satellite acceptance: deadline expiry and cancellation against a LIVE
+/// ServiceHandle — a queued job behind a slow one misses a tight
+/// deadline (typed error), a cancelled job never delivers, and the
+/// service serves normally afterwards.
+#[test]
+fn live_deadline_and_cancel_behind_a_slow_job() {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 1; // one worker: the slow job serializes everything behind it
+    cfg.batcher.max_wait_ms = 1;
+    let service = Service::start(cfg).expect("service starts");
+
+    // occupy the worker: 199 sequential full multiplies at n=48
+    let slow = service
+        .submit_job(Submission::expm(Matrix::random_spectral(48, 0.9, 1), 200).method(Method::CpuSeq))
+        .expect("slow submit");
+
+    // a queued job with a deadline far shorter than the slow job's run
+    let mut doomed = service
+        .submit_job(
+            Submission::expm(Matrix::random_spectral(16, 0.9, 2), 8)
+                .deadline(Duration::from_millis(2)),
+        )
+        .expect("doomed submit");
+    match doomed.wait() {
+        Err(MatexpError::Deadline(_)) => {}
+        other => panic!("want typed deadline error, got {other:?}"),
+    }
+
+    // a cancelled queued job never delivers
+    let mut cancelled = service
+        .submit_job(Submission::expm(Matrix::random_spectral(16, 0.9, 3), 8))
+        .expect("submit");
+    cancelled.cancel();
+    assert!(cancelled.wait().is_err());
+
+    // drain the slow job, then verify the service is healthy
+    let mut slow = slow;
+    assert!(slow.wait().expect("slow job completes").result.is_finite());
+    let a = Matrix::random_spectral(16, 0.9, 4);
+    let want = linalg::expm::expm(&a, 32, CpuAlgo::Ikj).unwrap();
+    let resp = service
+        .submit_job(Submission::expm(a, 32).priority(Priority::High))
+        .expect("submit")
+        .wait()
+        .expect("healthy after deadline + cancel");
+    assert!(resp.result.approx_eq(&want, 1e-3, 1e-3));
 }
 
 #[test]

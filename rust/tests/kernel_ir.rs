@@ -12,6 +12,10 @@
 //!    `--ablate-residency` comparison, asserted with a generous 1.2×
 //!    floor (the structural gap is ~10×: 2 copies vs 2-per-step).
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use matexp::experiments::ablations;
 use matexp::linalg::{CpuAlgo, Matrix};
 use matexp::plan::Plan;

@@ -1,6 +1,10 @@
 //! Property-based tests over the planner, engine-replay and coordinator
 //! invariants (in-tree `util::prop` harness; see DESIGN.md §8).
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use std::time::Instant;
 
 use matexp::config::BatcherConfig;
@@ -239,7 +243,7 @@ fn batcher_conserves_and_orders_requests() {
         let mut shipped = Vec::new();
         for id in 0..n_reqs as u64 {
             let n = 8usize << g.usize(0, 2); // sizes 8/16/32
-            let req = ExpmRequest { id, matrix: Matrix::zeros(n), power: 4, method: Method::Ours };
+            let req = ExpmRequest::new(id, Matrix::zeros(n), 4, Method::Ours);
             if let Some(batch) = b.push(req, now) {
                 assert_eq!(batch.requests.len(), max_batch, "ships exactly at max_batch");
                 assert!(batch.requests.iter().all(|r| r.n() == batch.n));

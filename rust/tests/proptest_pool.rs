@@ -3,6 +3,10 @@
 //! uneven heterogeneous splits) and the per-device `ExecStats`
 //! invariants.
 
+// These tests deliberately keep exercising the deprecated one-release
+// shims (expm_* / blocking submit) — they ARE the shim regression
+// coverage. New code routes through exec::Executor::submit.
+#![allow(deprecated)]
 use matexp::config::MatexpConfig;
 use matexp::linalg::matrix::Matrix;
 use matexp::linalg::naive::matmul_naive;
