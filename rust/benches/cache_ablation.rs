@@ -1,0 +1,52 @@
+//! `cargo bench --bench cache_ablation` — ablation A6: the three cache
+//! tiers (plan / prepared-executable / result) quantified per request.
+//!
+//! * setup path: cold planner+prepare vs plan-warm, execution elided;
+//! * result tier: modeled calibrated-C2050 cold execution vs the
+//!   measured warm serve (content digest + LRU hit + result copy);
+//! * full engine: measured cold / plan-warm / result-warm serves.
+
+use matexp::config::MatexpConfig;
+use matexp::experiments::{ablations, report};
+
+fn main() {
+    let cfg = MatexpConfig::default();
+    let iters = 4000;
+
+    for n in [256usize, 512, 1024] {
+        let power = 1024;
+        let setup = ablations::cache_setup_arms(n, power, iters);
+        print!(
+            "{}",
+            report::render_ablation(
+                &format!("A6 cache setup path (n={n}, N={power}, {iters} requests)"),
+                &setup
+            )
+        );
+        println!(
+            "plan-warm setup speedup: {:.1}x\n",
+            setup[0].wall_s / setup[1].wall_s.max(f64::MIN_POSITIVE)
+        );
+
+        let tiers = ablations::cache_result_arms(n, power, cfg.seed);
+        print!(
+            "{}",
+            report::render_ablation(&format!("A6 result tier (n={n}, N={power})"), &tiers)
+        );
+        println!(
+            "result-warm serving speedup vs modeled cold: {:.0}x\n",
+            tiers[0].wall_s / tiers[1].wall_s.max(f64::MIN_POSITIVE)
+        );
+    }
+
+    // measured engine arms at a size a bench run can afford end-to-end
+    let arms = ablations::cache_engine_arms(&cfg, 256, 512).expect("engine arms");
+    print!(
+        "{}",
+        report::render_ablation("A6 cache, full engine (n=256, N=512, measured serves)", &arms)
+    );
+    println!(
+        "measured result-warm speedup: {:.0}x",
+        arms[0].wall_s / arms[2].wall_s.max(f64::MIN_POSITIVE)
+    );
+}

@@ -1,0 +1,89 @@
+//! The multi-tier cache in action: cold vs warm serving, per-submission
+//! bypass/refresh, and byte-budget LRU eviction.
+//!
+//! ```bash
+//! cargo run --release --example cache_demo
+//! ```
+
+use matexp::cache::{stats, CacheControl, ResultCache, ResultKey};
+use matexp::coordinator::request::Method;
+use matexp::coordinator::worker::build_worker_engine;
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::matrix::Matrix;
+use matexp::prelude::MatexpConfig;
+use std::time::Instant;
+
+fn main() -> matexp::error::Result<()> {
+    // --- result caching is opt-in: flip it on like `--cache-results` ---
+    let mut cfg = MatexpConfig::default();
+    cfg.cache.results = true;
+    cfg.cache.budget_mb = 64;
+    let mut engine = build_worker_engine(&cfg, None)?;
+
+    let a = Matrix::random_spectral(192, 0.99, 7);
+    let n = a.n();
+    let power = 1024;
+
+    // cold: plans built, kernels prepared, 10 squarings executed
+    let t0 = Instant::now();
+    let cold = engine.run(Submission::expm(a.clone(), power))?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    println!(
+        "cold  : {:>8.3} ms  ({} launches, {} multiplies)",
+        cold_s * 1e3,
+        cold.stats.launches,
+        cold.stats.multiplies
+    );
+
+    // warm: the identical request is answered from the result cache —
+    // zero launches, bit-identical answer
+    let t0 = Instant::now();
+    let warm = engine.run(Submission::expm(a.clone(), power))?;
+    let warm_s = t0.elapsed().as_secs_f64();
+    println!(
+        "warm  : {:>8.3} ms  ({} launches) — {:.0}x faster, bit-identical: {}",
+        warm_s * 1e3,
+        warm.stats.launches,
+        cold_s / warm_s.max(f64::MIN_POSITIVE),
+        warm.result == cold.result
+    );
+
+    // bypass: measure the real execution even though a warm entry exists
+    let bypass = engine.run(Submission::expm(a.clone(), power).cache(CacheControl::Bypass))?;
+    println!("bypass: re-executed with {} launches (cache untouched)", bypass.stats.launches);
+
+    // refresh: recompute and overwrite the entry (manual invalidation)
+    let refresh = engine.run(Submission::expm(a.clone(), power).cache(CacheControl::Refresh))?;
+    println!("refresh: re-executed with {} launches, entry overwritten", refresh.stats.launches);
+    let served = engine.run(Submission::expm(a, power))?;
+    println!(
+        "        …and the refreshed entry serves again ({} launches)",
+        served.stats.launches
+    );
+
+    // --- byte-budget LRU eviction, on a private cache instance ---
+    // budget fits exactly two n=64 results (16 KiB each)
+    let cache = ResultCache::new(2 * 64 * 64 * 4);
+    let mats: Vec<Matrix> = (0..3).map(|s| Matrix::random(64, s)).collect();
+    for m in &mats {
+        cache.insert(ResultKey::for_parts(m, 8, Method::Ours, None), m, Method::Ours, None);
+    }
+    println!(
+        "\neviction: inserted 3 x 16 KiB under a 32 KiB budget -> {} entries, {} bytes, {} evicted",
+        cache.len(),
+        cache.bytes(),
+        cache.evictions()
+    );
+    let oldest = ResultKey::for_parts(&mats[0], 8, Method::Ours, None);
+    println!("        oldest entry evicted: {}", cache.get(&oldest).is_none());
+
+    // --- the process-wide counters the server's metrics endpoint ships ---
+    let c = stats::snapshot();
+    println!(
+        "\ncounters: plan {}h/{}m  prepared {}h/{}m  result {}h/{}m ({} bytes held)",
+        c.plan_hits, c.plan_misses, c.prepared_hits, c.prepared_misses, c.result_hits,
+        c.result_misses, c.result_bytes
+    );
+    println!("\n(n={n}, N={power}; try `matexp serve --cache-results` for the served path)");
+    Ok(())
+}

@@ -16,8 +16,11 @@ pub use stats::Summary;
 /// One measured quantity.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
+    /// Robust statistics over the timed samples.
     pub summary: Summary,
+    /// How many samples were taken.
     pub samples: usize,
 }
 
@@ -48,16 +51,19 @@ impl Default for BenchConfig {
 
 /// Collects measurements and renders them.
 pub struct Runner {
+    /// Sampling policy (warmup, sample bounds, time budget).
     pub cfg: BenchConfig,
     title: String,
     results: Vec<Measurement>,
 }
 
 impl Runner {
+    /// A runner with the default sampling policy.
     pub fn new(title: &str) -> Runner {
         Runner { cfg: BenchConfig::default(), title: title.to_string(), results: Vec::new() }
     }
 
+    /// A runner with an explicit sampling policy.
     pub fn with_config(title: &str, cfg: BenchConfig) -> Runner {
         Runner { cfg, title: title.to_string(), results: Vec::new() }
     }
@@ -96,6 +102,7 @@ impl Runner {
         });
     }
 
+    /// Everything measured so far, in registration order.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

@@ -3,16 +3,22 @@
 /// Summary of a sample set (seconds).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median (50th percentile, nearest-rank).
     pub median: f64,
+    /// Population standard deviation.
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
     /// 95th percentile (nearest-rank).
     pub p95: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample set.
     pub fn from_samples(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "no samples");
         let mut sorted = samples.to_vec();

@@ -1,0 +1,133 @@
+//! # The multi-tier caching subsystem
+//!
+//! The paper's 1000× speedup is an *amortization* claim: the expensive
+//! parts of serving `A^N` — choosing the launch schedule, compiling the
+//! kernels, and (for repeated hot requests) the execution itself — are
+//! fixed per shape, yet a naive server re-pays them on every request.
+//! This module eliminates that redundant work with three independent
+//! tiers, each keyed by exactly what makes its artifact reusable:
+//!
+//! | tier | cache | key | scope | skips |
+//! |---|---|---|---|---|
+//! | 1 | [`PlanCache`] | `(n, power, plan kind, method)` | process-wide | the planner |
+//! | 2 | [`PreparedSet`] | `(KernelOp, n)` | per engine/backend | `Backend::prepare` |
+//! | 3 | [`ResultCache`] | content digest + `n` + power + method + tolerance bucket | process-wide | the whole execution |
+//!
+//! Every executor — [`crate::runtime::Engine`], [`crate::pool::PoolEngine`]
+//! (and each of its pool devices), [`crate::coordinator::worker::WorkerEngine`]
+//! and the serving [`crate::coordinator::service::ServiceHandle`] — shares
+//! one policy: tier 1 sits inside the scheduler's strategy dispatch, tier 2
+//! inside the engine's `prepare` path, and tier 3 inside the two request
+//! chokepoints ([`crate::coordinator::worker::execute_request`] and
+//! [`crate::pool::PoolEngine::execute_request`]), so warm-path semantics
+//! cannot drift between the sync engine, the device pool and the service.
+//!
+//! Per-submission control rides on [`CacheControl`]
+//! ([`crate::exec::Submission::cache`]): `Use` (the default) reads and
+//! populates, `Bypass` neither reads nor populates the plan/result tiers
+//! (tier 2 is per-engine state and stays warm), `Refresh` recomputes and
+//! overwrites. Plan caching defaults on
+//! ([`crate::config::CacheSettings::plans`]); result caching is opt-in
+//! (`--cache-results`, [`crate::config::CacheSettings::results`]) because
+//! a served-from-cache response reports zero launches — experiments that
+//! measure execution must not silently stop executing. A submission with
+//! an explicit [`crate::exec::Submission::plan`] override never touches
+//! the result tier for the same reason: pinning a plan means the caller
+//! wants the run, not the answer.
+//!
+//! The result tier is **content-addressed** (a 128-bit digest of the
+//! matrix bytes, plus a fingerprint of the execution config) with LRU
+//! eviction against a byte budget (`--cache-budget-mb`); entries never
+//! serve across differing tolerance buckets, across the
+//! conservative-plan boundary, or between differently-configured
+//! executors. Hit/miss/eviction counters for all three tiers are process
+//! totals ([`stats::snapshot`]), surfaced in the server `metrics`
+//! response and the `expm` CLI output.
+//!
+//! `experiment --ablate-cache` (ablation A6) quantifies each tier; see
+//! [`crate::experiments::ablations`].
+
+pub mod plan;
+pub mod prepared;
+pub mod result;
+pub mod stats;
+
+pub use plan::{PlanCache, PlanKey};
+pub use prepared::PreparedSet;
+pub use result::{CachedExpm, ResultCache, ResultCachePolicy, ResultKey};
+pub use stats::CacheCounters;
+
+/// Per-submission cache directive, carried by
+/// [`crate::exec::Submission::cache`] into every tier.
+///
+/// ```
+/// use matexp::prelude::*;
+///
+/// // an ablation arm that must observe the real execution every time
+/// let sub = Submission::expm(Matrix::identity(8), 64).cache(CacheControl::Bypass);
+/// assert_eq!(sub.cache, CacheControl::Bypass);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum CacheControl {
+    /// Read warm entries and populate cold ones — the default.
+    #[default]
+    Use,
+    /// Neither read nor populate the plan and result tiers: plans are
+    /// rebuilt, results recomputed, nothing stored. (Tier 2 — the
+    /// per-backend prepared set — is engine state, not a per-request
+    /// choice: prepared executables stay prepared.)
+    Bypass,
+    /// Recompute everything and overwrite the cached entries (cache
+    /// invalidation by hand, for operators who changed something the keys
+    /// cannot see).
+    Refresh,
+}
+
+impl CacheControl {
+    /// Canonical lowercase name (logs and CLI output).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheControl::Use => "use",
+            CacheControl::Bypass => "bypass",
+            CacheControl::Refresh => "refresh",
+        }
+    }
+
+    /// Every directive, for exhaustive tests.
+    pub fn all() -> [CacheControl; 3] {
+        [CacheControl::Use, CacheControl::Bypass, CacheControl::Refresh]
+    }
+
+    /// May this directive serve a cached entry?
+    pub(crate) fn reads(self) -> bool {
+        self == CacheControl::Use
+    }
+
+    /// May this directive store a computed entry?
+    pub(crate) fn writes(self) -> bool {
+        self != CacheControl::Bypass
+    }
+}
+
+impl std::fmt::Display for CacheControl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_semantics() {
+        assert!(CacheControl::Use.reads() && CacheControl::Use.writes());
+        assert!(!CacheControl::Bypass.reads() && !CacheControl::Bypass.writes());
+        assert!(!CacheControl::Refresh.reads() && CacheControl::Refresh.writes());
+        assert_eq!(CacheControl::default(), CacheControl::Use);
+        for c in CacheControl::all() {
+            assert!(!c.as_str().is_empty());
+            assert_eq!(c.to_string(), c.as_str());
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Tier 1 — the [`PlanCache`]: the planner runs once per shape.
+//!
+//! Launch plans are pure functions of `(power, plan kind)`; the scheduler
+//! nevertheless used to rebuild one per request. This tier memoizes the
+//! built [`Plan`] under [`PlanKey`] — `(n, power, kind, method)`, the
+//! full shape of the strategy decision — behind a process-wide cache
+//! shared by every executor (the scheduler is the one place plans are
+//! born, so one cache covers the sync engine, the pool and the service).
+//!
+//! Plans are small (O(log N) steps), so the cache stores them by value
+//! and hands out clones; a FIFO cap bounds the table when a workload
+//! sweeps many distinct powers.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::cache::CacheControl;
+use crate::coordinator::request::Method;
+use crate::plan::{Plan, PlanKind};
+
+/// Everything that determines which plan the scheduler would build.
+///
+/// `n` does not change the plan's steps today, but it is part of the
+/// strategy decision's shape (a future size-aware planner would fold it
+/// in), so it keys the cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Matrix side length of the requests this plan serves.
+    pub n: usize,
+    /// The exponent the plan computes.
+    pub power: u64,
+    /// Which planner family built it (binary / chained / addition-chain…).
+    pub kind: PlanKind,
+    /// The execution method the strategy dispatch chose it for.
+    pub method: Method,
+}
+
+/// Entries kept before FIFO eviction kicks in. Plans are tiny, so this
+/// bounds memory at well under a megabyte while covering any realistic
+/// working set of `(n, power)` shapes.
+const PLAN_CACHE_CAP: usize = 4096;
+
+struct PlanInner {
+    map: HashMap<PlanKey, Plan>,
+    /// Insertion order, for FIFO eviction at [`PLAN_CACHE_CAP`].
+    order: VecDeque<PlanKey>,
+    cap: usize,
+}
+
+/// Memoized launch plans (tier 1). See the module docs.
+pub struct PlanCache {
+    inner: Mutex<PlanInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    /// An empty cache holding at most `cap` plans.
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            inner: Mutex::new(PlanInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                cap: cap.max(1),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide instance every executor shares.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| PlanCache::new(PLAN_CACHE_CAP))
+    }
+
+    /// The plan for `key`, built by `build` on a miss (or whenever `ctl`
+    /// forbids reading). `Bypass` neither reads nor writes and leaves the
+    /// counters untouched; `Refresh` rebuilds and overwrites.
+    pub fn fetch(&self, key: PlanKey, ctl: CacheControl, build: impl FnOnce() -> Plan) -> Plan {
+        if !ctl.writes() {
+            // Bypass: the caller asked for an uncached planner run.
+            return build();
+        }
+        if ctl.reads() {
+            let inner = self.inner.lock().expect("plan cache poisoned");
+            if let Some(plan) = inner.map.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return plan.clone();
+            }
+        }
+        let plan = build();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        if inner.map.insert(key, plan.clone()).is_none() {
+            inner.order.push_back(key);
+        }
+        while inner.order.len() > inner.cap {
+            let old = inner.order.pop_front().expect("len checked");
+            inner.map.remove(&old);
+        }
+        plan
+    }
+
+    /// Plans currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").map.len()
+    }
+
+    /// `true` when no plan is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Served-from-cache count since process start.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Planner-ran count since process start (`Bypass` runs not included).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached plan (counters keep their totals).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.map.clear();
+        inner.order.clear();
+    }
+}
+
+/// The scheduler's entry point: fetch (or build) the plan for one
+/// admitted request through the global cache, honoring the config toggle
+/// and the submission's [`CacheControl`].
+pub(crate) fn plan_for(
+    key: PlanKey,
+    ctl: CacheControl,
+    enabled: bool,
+    build: impl FnOnce() -> Plan,
+) -> Plan {
+    if !enabled {
+        return build();
+    }
+    PlanCache::global().fetch(key, ctl, build)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn key(power: u64) -> PlanKey {
+        PlanKey { n: 64, power, kind: PlanKind::Binary, method: Method::Ours }
+    }
+
+    #[test]
+    fn second_fetch_hits_and_skips_the_builder() {
+        let cache = PlanCache::new(16);
+        let builds = AtomicUsize::new(0);
+        let build = || {
+            builds.fetch_add(1, Ordering::Relaxed);
+            Plan::binary(100, false)
+        };
+        let a = cache.fetch(key(100), CacheControl::Use, build);
+        let b = cache.fetch(key(100), CacheControl::Use, || unreachable!("must hit"));
+        assert_eq!(a, b);
+        assert_eq!(builds.load(Ordering::Relaxed), 1);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn bypass_never_stores_and_counts_nothing() {
+        let cache = PlanCache::new(16);
+        let _ = cache.fetch(key(64), CacheControl::Bypass, || Plan::binary(64, false));
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn refresh_rebuilds_and_overwrites() {
+        let cache = PlanCache::new(16);
+        let _ = cache.fetch(key(64), CacheControl::Use, || Plan::binary(64, false));
+        // refresh replaces the entry even though one exists
+        let refreshed =
+            cache.fetch(key(64), CacheControl::Refresh, || Plan::binary(64, true));
+        assert_eq!(refreshed.kind, PlanKind::BinaryFused);
+        let served = cache.fetch(key(64), CacheControl::Use, || unreachable!("must hit"));
+        assert_eq!(served.kind, PlanKind::BinaryFused);
+        assert_eq!(cache.len(), 1, "overwrite, not duplicate");
+    }
+
+    #[test]
+    fn distinct_key_components_miss() {
+        let cache = PlanCache::new(16);
+        let build = |p| move || Plan::binary(p, false);
+        let _ = cache.fetch(key(100), CacheControl::Use, build(100));
+        let mut other = key(100);
+        other.n = 128;
+        let _ = cache.fetch(other, CacheControl::Use, build(100));
+        let mut other = key(100);
+        other.method = Method::PlanRoundtrip;
+        let _ = cache.fetch(other, CacheControl::Use, build(100));
+        assert_eq!(cache.misses(), 3, "n and method are both part of the key");
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn fifo_cap_bounds_the_table() {
+        let cache = PlanCache::new(4);
+        for power in 1..=10u64 {
+            let _ = cache.fetch(key(power), CacheControl::Use, || Plan::binary(power, false));
+        }
+        assert_eq!(cache.len(), 4);
+        // the oldest entries are gone: power 1 rebuilds
+        let _ = cache.fetch(key(1), CacheControl::Use, || Plan::binary(1, false));
+        assert_eq!(cache.misses(), 11);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_totals() {
+        let cache = PlanCache::new(16);
+        let _ = cache.fetch(key(8), CacheControl::Use, || Plan::binary(8, false));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Tier 2 — the [`PreparedSet`]: `Backend::prepare` runs once per
+//! `(KernelOp, n)` per backend instance.
+//!
+//! Engines call `prepare` before every timed region so compilation never
+//! pollutes a measurement — which means a warm engine re-prepares the
+//! same ops on every request. The set records which `(op, n)` pairs this
+//! backend has already prepared successfully and skips the call on warm
+//! launches. It lives **inside** [`crate::runtime::Engine`] (one per
+//! backend instance — prepared state is per-backend, not per-process),
+//! which is exactly what makes the policy shared: the bare engine, every
+//! pool device worker and every coordinator worker drive the same
+//! `Engine` prepare path.
+//!
+//! Only *successful* prepares are recorded: a failed or
+//! [`crate::error::MatexpError::UnsupportedOp`] prepare is retried on the
+//! next request, preserving warmup's optional-op policy.
+//!
+//! Per-instance counters feed the process-wide totals reported by
+//! [`super::stats::snapshot`].
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::runtime::op::KernelOp;
+
+static GLOBAL_HITS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Which `(op, n)` pairs one backend instance has successfully prepared.
+#[derive(Debug, Default)]
+pub struct PreparedSet {
+    set: HashSet<(KernelOp, usize)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PreparedSet {
+    /// An empty set (nothing prepared yet).
+    pub fn new() -> PreparedSet {
+        PreparedSet::default()
+    }
+
+    /// `true` — and one warm hit counted — when `(op, n)` was already
+    /// prepared on this backend, so the caller may skip `prepare`.
+    pub fn check(&mut self, op: KernelOp, n: usize) -> bool {
+        if self.set.contains(&(op, n)) {
+            self.hits += 1;
+            GLOBAL_HITS.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record one *successful* prepare of `(op, n)` (a cold miss).
+    pub fn record(&mut self, op: KernelOp, n: usize) {
+        if self.set.insert((op, n)) {
+            self.misses += 1;
+            GLOBAL_MISSES.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Distinct `(op, n)` pairs prepared on this backend.
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    /// `true` when nothing has been prepared yet.
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// Warm skips on this backend instance.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cold prepares on this backend instance.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Process-wide `(hits, misses)` across every engine's prepared set.
+pub(crate) fn global_counters() -> (u64, u64) {
+    (GLOBAL_HITS.load(Ordering::Relaxed), GLOBAL_MISSES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_then_warm() {
+        let mut set = PreparedSet::new();
+        assert!(!set.check(KernelOp::Matmul, 64), "first sighting is cold");
+        set.record(KernelOp::Matmul, 64);
+        assert!(set.check(KernelOp::Matmul, 64), "second sighting is warm");
+        assert_eq!((set.hits(), set.misses()), (1, 1));
+        assert_eq!(set.len(), 1);
+    }
+
+    #[test]
+    fn op_and_size_both_key() {
+        let mut set = PreparedSet::new();
+        set.record(KernelOp::Matmul, 64);
+        assert!(!set.check(KernelOp::Matmul, 128), "same op, other size: cold");
+        assert!(!set.check(KernelOp::Square, 64), "other op, same size: cold");
+        set.record(KernelOp::SquareChain(4), 64);
+        assert!(!set.check(KernelOp::SquareChain(2), 64), "chain length is part of the op");
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_record_counts_once() {
+        let mut set = PreparedSet::new();
+        set.record(KernelOp::Pack2, 8);
+        set.record(KernelOp::Pack2, 8);
+        assert_eq!(set.misses(), 1);
+        assert_eq!(set.len(), 1);
+    }
+}

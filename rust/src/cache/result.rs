@@ -1,0 +1,594 @@
+//! Tier 3 — the content-addressed [`ResultCache`]: repeated hot requests
+//! are answered without touching a device.
+//!
+//! A request's answer depends on exactly the matrix *bytes*, the power,
+//! the method and (for plan selection) the tolerance — so the key is a
+//! 128-bit digest of the operand plus those fields, with the tolerance
+//! coarsened to an order-of-magnitude **bucket** (`⌊log10 tol⌋`): entries
+//! never serve across differing buckets, because a tighter tolerance may
+//! pin a different (more conservative) plan whose reassociation produces
+//! different bits.
+//!
+//! Entries are whole result matrices, so the cache evicts **LRU against a
+//! byte budget** (`--cache-budget-mb`), not an entry count: one n=1024
+//! answer weighs 4 MiB, a thousand n=32 answers weigh the same.
+//!
+//! The tier is opt-in ([`crate::config::CacheSettings::results`]): a hit
+//! reports zero launches/transfers, which is the point for serving and a
+//! trap for experiments. Submissions pinning an explicit plan are never
+//! cached or served (see [`ResultCachePolicy::for_request`]).
+//!
+//! ```
+//! use matexp::cache::{ResultCache, ResultKey};
+//! use matexp::coordinator::request::Method;
+//! use matexp::linalg::matrix::Matrix;
+//!
+//! // budget-eviction semantics, on a private instance: two 16x16 results
+//! // fit a 2 KiB budget only one at a time (16*16*4 = 1 KiB each + none
+//! // spare once the second arrives under a 1.5 KiB budget)
+//! let cache = ResultCache::new(1536);
+//! let a = Matrix::random(16, 1);
+//! let b = Matrix::random(16, 2);
+//! let key_a = ResultKey::for_parts(&a, 64, Method::Ours, None);
+//! let key_b = ResultKey::for_parts(&b, 64, Method::Ours, None);
+//! cache.insert(key_a, &a, Method::Ours, None);
+//! cache.insert(key_b, &b, Method::Ours, None);
+//! // the budget holds one entry: inserting b evicted a (LRU)
+//! assert_eq!(cache.len(), 1);
+//! assert_eq!(cache.evictions(), 1);
+//! assert!(cache.get(&key_a).is_none());
+//! assert_eq!(cache.get(&key_b).unwrap().result, b);
+//! assert!(cache.bytes() <= 1536);
+//! ```
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::cache::CacheControl;
+use crate::config::MatexpConfig;
+use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse, Method};
+use crate::linalg::matrix::Matrix;
+use crate::plan::PlanKind;
+
+/// Bucket for "no tolerance requested" — distinct from every real bucket
+/// (an untoleranced request may take the aggressive chained plan).
+const NO_TOLERANCE_BUCKET: i64 = i64::MAX;
+
+/// 128-bit content digest of a matrix payload: two independent FNV-1a
+/// streams over the f32 bit patterns, folded two lanes per step so the
+/// hot path stays cheap even in debug builds.
+pub(crate) fn digest_f32(data: &[f32]) -> (u64, u64) {
+    const OFF1: u64 = 0xcbf2_9ce4_8422_2325;
+    const OFF2: u64 = 0x6c62_272e_07bb_0142;
+    const PRIME1: u64 = 0x0000_0100_0000_01b3;
+    const PRIME2: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut h1 = OFF1 ^ (data.len() as u64);
+    let mut h2 = OFF2 ^ (data.len() as u64).rotate_left(32);
+    let mut chunks = data.chunks_exact(2);
+    for pair in &mut chunks {
+        let w = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+        h1 = (h1 ^ w).wrapping_mul(PRIME1);
+        h2 = (h2 ^ w.rotate_left(32)).wrapping_mul(PRIME2);
+    }
+    if let [last] = chunks.remainder() {
+        let w = last.to_bits() as u64;
+        h1 = (h1 ^ w).wrapping_mul(PRIME1);
+        h2 = (h2 ^ w.rotate_left(32)).wrapping_mul(PRIME2);
+    }
+    (h1, h2)
+}
+
+/// Order-of-magnitude tolerance bucket: `⌊log10 tol⌋` (computed in f64 so
+/// the boundary is deterministic), or [`NO_TOLERANCE_BUCKET`] for `None`.
+/// Non-positive/non-finite tolerances never reach here — admission
+/// rejects them.
+pub(crate) fn tolerance_bucket(tol: Option<f32>) -> i64 {
+    match tol {
+        Some(t) if t > 0.0 && t.is_finite() => (t as f64).log10().floor() as i64,
+        _ => NO_TOLERANCE_BUCKET,
+    }
+}
+
+/// Digest of the configuration knobs that change the *bits* an execution
+/// produces (backend/pool layout picks the substrate, `cpu_algo` the
+/// summation order, the plan toggles the reassociation). Keyed into
+/// [`ResultKey`] so differently-configured executors sharing the
+/// process-wide cache never cross-serve.
+fn config_fingerprint(cfg: &MatexpConfig) -> u64 {
+    fn fnv(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    let mut h = fnv(0xcbf2_9ce4_8422_2325, cfg.backend.as_str().as_bytes());
+    h = fnv(h, cfg.cpu_algo.name().as_bytes());
+    h = fnv(h, &[cfg.use_square_chains as u8, cfg.fused_sqmul as u8]);
+    h = fnv(h, &cfg.pool.shard_min_n.to_le_bytes());
+    h = fnv(h, &cfg.pool.grid.map(|g| g + 1).unwrap_or(0).to_le_bytes());
+    h = fnv(h, &cfg.pool.max_grid.to_le_bytes());
+    for d in &cfg.pool.devices {
+        h = fnv(h, d.as_str().as_bytes());
+    }
+    h
+}
+
+/// Content-addressed identity of one servable answer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ResultKey {
+    digest: (u64, u64),
+    n: usize,
+    power: u64,
+    method: Method,
+    tol_bucket: i64,
+    /// The scheduler's conservative-plan predicate — tolerances on either
+    /// side of [`crate::coordinator::scheduler::CONSERVATIVE_TOL`] select
+    /// different plans, so they must never share an entry even when they
+    /// fall in the same decade bucket.
+    conservative: bool,
+    /// [`config_fingerprint`] of the serving config (0 for standalone
+    /// [`ResultKey::for_parts`] keys on private cache instances).
+    cfg_digest: u64,
+}
+
+impl ResultKey {
+    /// Key for `matrix^power` under `method` at `tolerance` (bucketed),
+    /// outside any serving configuration — for private [`ResultCache`]
+    /// instances (tests, demos, ablations) where one fixed executor owns
+    /// the cache.
+    pub fn for_parts(
+        matrix: &Matrix,
+        power: u64,
+        method: Method,
+        tolerance: Option<f32>,
+    ) -> ResultKey {
+        ResultKey {
+            digest: digest_f32(matrix.data()),
+            n: matrix.n(),
+            power,
+            method,
+            tol_bucket: tolerance_bucket(tolerance),
+            conservative: crate::coordinator::scheduler::is_conservative(tolerance),
+            cfg_digest: 0,
+        }
+    }
+
+    /// Key for an admitted request under `cfg` — what the shared
+    /// process-wide cache uses. Includes the config fingerprint, so two
+    /// executors with different substrates/plan policies never serve each
+    /// other's bits.
+    pub fn for_request(cfg: &MatexpConfig, req: &ExpmRequest) -> ResultKey {
+        let mut key = ResultKey::for_parts(&req.matrix, req.power, req.method, req.tolerance);
+        key.cfg_digest = config_fingerprint(cfg);
+        key
+    }
+}
+
+/// What a warm hit hands back (plus the hit-side stats the policy adds).
+#[derive(Clone, Debug)]
+pub struct CachedExpm {
+    /// The cached answer, bit-identical to the cold run that produced it.
+    pub result: Matrix,
+    /// Method of the producing run (always equals the request's — the
+    /// method is part of the key).
+    pub method: Method,
+    /// Planner of the producing run, echoed so warm responses report the
+    /// same `plan_kind` as cold ones.
+    pub plan_kind: Option<PlanKind>,
+}
+
+struct Entry {
+    value: CachedExpm,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct ResultInner {
+    map: HashMap<ResultKey, Entry>,
+    /// Recency index: `last_used` tick → key (ticks are unique), so the
+    /// LRU victim is `pop_first()` — O(log n) per eviction instead of a
+    /// full-map scan under the serving-path lock.
+    order: BTreeMap<u64, ResultKey>,
+    bytes: u64,
+    budget: u64,
+    tick: u64,
+}
+
+/// LRU, byte-budgeted result cache (tier 3). See the module docs.
+pub struct ResultCache {
+    inner: Mutex<ResultInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Default byte budget of the process-wide instance until a config sets
+/// one (256 MiB, matching [`crate::config::CacheSettings::budget_mb`]).
+const DEFAULT_BUDGET_BYTES: u64 = 256 << 20;
+
+impl ResultCache {
+    /// An empty cache that evicts LRU entries to stay within
+    /// `budget_bytes` of stored result payloads.
+    pub fn new(budget_bytes: u64) -> ResultCache {
+        ResultCache {
+            inner: Mutex::new(ResultInner {
+                map: HashMap::new(),
+                order: BTreeMap::new(),
+                bytes: 0,
+                budget: budget_bytes,
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide instance the executors share.
+    pub fn global() -> &'static ResultCache {
+        static GLOBAL: OnceLock<ResultCache> = OnceLock::new();
+        GLOBAL.get_or_init(|| ResultCache::new(DEFAULT_BUDGET_BYTES))
+    }
+
+    /// Retarget the byte budget, evicting LRU entries if the cache now
+    /// exceeds it.
+    pub fn set_budget(&self, budget_bytes: u64) {
+        let mut guard = self.inner.lock().expect("result cache poisoned");
+        let inner = &mut *guard;
+        if inner.budget != budget_bytes {
+            inner.budget = budget_bytes;
+            let evicted = Self::evict_to_fit(inner, 0);
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Evict least-recently-used entries until `incoming` more bytes fit
+    /// the budget; returns how many entries were evicted. O(log n) per
+    /// eviction via the recency index.
+    fn evict_to_fit(inner: &mut ResultInner, incoming: u64) -> u64 {
+        let mut evicted = 0;
+        while inner.bytes + incoming > inner.budget && !inner.map.is_empty() {
+            let (_, oldest) = inner.order.pop_first().expect("order mirrors map");
+            let gone = inner.map.remove(&oldest).expect("order mirrors map");
+            inner.bytes -= gone.bytes;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// The cached answer for `key`, refreshing its recency. Counts a hit
+    /// or a miss.
+    pub fn get(&self, key: &ResultKey) -> Option<CachedExpm> {
+        let mut guard = self.inner.lock().expect("result cache poisoned");
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(entry) => {
+                inner.order.remove(&entry.last_used);
+                entry.last_used = tick;
+                inner.order.insert(tick, *key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store (or overwrite) the answer for `key`, evicting LRU entries to
+    /// respect the budget. An answer bigger than the whole budget is
+    /// dropped on the floor rather than flushing everything else.
+    pub fn insert(
+        &self,
+        key: ResultKey,
+        result: &Matrix,
+        method: Method,
+        plan_kind: Option<PlanKind>,
+    ) {
+        let bytes = (result.data().len() * std::mem::size_of::<f32>()) as u64;
+        let mut guard = self.inner.lock().expect("result cache poisoned");
+        let inner = &mut *guard;
+        if bytes > inner.budget {
+            return;
+        }
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.bytes;
+            inner.order.remove(&old.last_used);
+        }
+        let evicted = Self::evict_to_fit(inner, bytes);
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(
+            key,
+            Entry {
+                value: CachedExpm { result: result.clone(), method, plan_kind },
+                bytes,
+                last_used: tick,
+            },
+        );
+        inner.order.insert(tick, key);
+        inner.bytes += bytes;
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cached entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("result cache poisoned").map.len()
+    }
+
+    /// `true` when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of result payloads currently held (≤ the budget, always).
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().expect("result cache poisoned").bytes
+    }
+
+    /// The active byte budget.
+    pub fn budget(&self) -> u64 {
+        self.inner.lock().expect("result cache poisoned").budget
+    }
+
+    /// Warm serves since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found nothing since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Stores since construction.
+    pub fn inserts(&self) -> u64 {
+        self.inserts.load(Ordering::Relaxed)
+    }
+
+    /// Entries evicted by the byte budget since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Drop every entry (counters keep their totals).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().expect("result cache poisoned");
+        inner.map.clear();
+        inner.order.clear();
+        inner.bytes = 0;
+    }
+}
+
+/// One request's relationship to the result tier, resolved once at the
+/// execution chokepoints so every executor applies identical semantics.
+pub enum ResultCachePolicy {
+    /// The tier does not apply: disabled by config, bypassed by the
+    /// submission, or the request pins an explicit plan (pinning a plan
+    /// means the caller wants the run, not the answer).
+    Disabled,
+    /// `CacheControl::Use`: serve warm, store cold.
+    ReadWrite(ResultKey),
+    /// `CacheControl::Refresh`: recompute, then overwrite the entry.
+    WriteOnly(ResultKey),
+}
+
+impl ResultCachePolicy {
+    /// Resolve the policy for one admitted request under `cfg`, syncing
+    /// the global cache's budget to the config.
+    pub fn for_request(cfg: &MatexpConfig, req: &ExpmRequest) -> ResultCachePolicy {
+        if !cfg.cache.results || req.plan.is_some() || !req.cache.writes() {
+            return ResultCachePolicy::Disabled;
+        }
+        ResultCache::global().set_budget(cfg.cache.budget_bytes());
+        let key = ResultKey::for_request(cfg, req);
+        if req.cache.reads() {
+            ResultCachePolicy::ReadWrite(key)
+        } else {
+            ResultCachePolicy::WriteOnly(key)
+        }
+    }
+
+    /// Serve the request from cache if the policy and the cache allow it.
+    /// The response reports zero launches/transfers and the measured
+    /// serve time as `wall_s` — a hit never touches a device.
+    pub fn lookup(&self, id: u64) -> Option<ExpmResponse> {
+        let ResultCachePolicy::ReadWrite(key) = self else { return None };
+        let t0 = Instant::now();
+        let hit = ResultCache::global().get(key)?;
+        Some(ExpmResponse {
+            id,
+            result: hit.result,
+            stats: ExecStats { wall_s: t0.elapsed().as_secs_f64(), ..ExecStats::default() },
+            method: hit.method,
+            plan_kind: hit.plan_kind,
+        })
+    }
+
+    /// Store a freshly computed response, when the policy allows writes.
+    pub fn store(&self, resp: &ExpmResponse) {
+        let key = match self {
+            ResultCachePolicy::Disabled => return,
+            ResultCachePolicy::ReadWrite(key) | ResultCachePolicy::WriteOnly(key) => key,
+        };
+        ResultCache::global().insert(*key, &resp.result, resp.method, resp.plan_kind);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheControl;
+
+    fn mat(n: usize, seed: u64) -> Matrix {
+        Matrix::random(n, seed)
+    }
+
+    fn key(m: &Matrix, power: u64) -> ResultKey {
+        ResultKey::for_parts(m, power, Method::Ours, None)
+    }
+
+    #[test]
+    fn digest_is_content_sensitive_and_deterministic() {
+        let a = mat(8, 1);
+        let mut b = a.clone();
+        assert_eq!(digest_f32(a.data()), digest_f32(b.data()));
+        b.set(7, 7, b.get(7, 7) + 1.0);
+        assert_ne!(digest_f32(a.data()), digest_f32(b.data()));
+        // odd-length tails participate
+        assert_ne!(digest_f32(&[1.0, 2.0, 3.0]), digest_f32(&[1.0, 2.0]));
+        assert_ne!(digest_f32(&[1.0, 2.0, 3.0]), digest_f32(&[1.0, 2.0, 4.0]));
+        // -0.0 and 0.0 are different bit patterns, so different content
+        assert_ne!(digest_f32(&[0.0]), digest_f32(&[-0.0]));
+    }
+
+    #[test]
+    fn key_covers_every_identity_component() {
+        let m = mat(8, 2);
+        let base = key(&m, 64);
+        assert_eq!(base, key(&m, 64));
+        assert_ne!(base, key(&m, 65));
+        assert_ne!(base, ResultKey::for_parts(&m, 64, Method::OursPacked, None));
+        assert_ne!(base, ResultKey::for_parts(&m, 64, Method::Ours, Some(1e-3)));
+        assert_ne!(base, key(&mat(8, 3), 64));
+    }
+
+    #[test]
+    fn request_keys_cover_config_and_the_conservative_boundary() {
+        let mut cfg = MatexpConfig::default();
+        cfg.cache.results = true;
+        let req = ExpmRequest::new(1, mat(8, 77), 64, Method::Ours);
+        let base = ResultKey::for_request(&cfg, &req);
+        assert_eq!(base, ResultKey::for_request(&cfg, &req), "deterministic");
+        // a different execution substrate must never share an entry
+        let mut other = cfg.clone();
+        other.cpu_algo = crate::linalg::expm::CpuAlgo::Ikj;
+        assert_ne!(base, ResultKey::for_request(&other, &req));
+        let mut other = cfg.clone();
+        other.use_square_chains = false;
+        assert_ne!(base, ResultKey::for_request(&other, &req));
+        let mut other = cfg.clone();
+        other.backend = crate::runtime::BackendKind::Pool;
+        assert_ne!(base, ResultKey::for_request(&other, &req));
+        // the conservative-plan boundary splits keys even inside one
+        // tolerance decade: 1e-6 runs the chained plan, 5e-7 the binary
+        let mut loose = req.clone();
+        loose.tolerance = Some(1e-6);
+        let mut tight = req.clone();
+        tight.tolerance = Some(5e-7);
+        assert_ne!(
+            ResultKey::for_request(&cfg, &loose),
+            ResultKey::for_request(&cfg, &tight),
+            "keys must not cross the conservative-plan boundary"
+        );
+    }
+
+    #[test]
+    fn tolerance_buckets_are_order_of_magnitude() {
+        let b = |t| tolerance_bucket(Some(t));
+        assert_eq!(b(2e-4), b(5e-4), "same decade, same bucket");
+        assert_ne!(b(1e-3), b(1e-5), "different decades differ");
+        assert_ne!(tolerance_bucket(None), b(1.0), "no-tolerance is its own bucket");
+        // deterministic across calls
+        assert_eq!(b(1e-4), b(1e-4));
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_counters() {
+        let cache = ResultCache::new(1 << 20);
+        let m = mat(8, 4);
+        let k = key(&m, 16);
+        assert!(cache.get(&k).is_none());
+        cache.insert(k, &m, Method::Ours, Some(PlanKind::Chained));
+        let hit = cache.get(&k).expect("warm");
+        assert_eq!(hit.result, m, "bit-identical payload");
+        assert_eq!(hit.plan_kind, Some(PlanKind::Chained));
+        assert_eq!((cache.hits(), cache.misses(), cache.inserts()), (1, 1, 1));
+        assert_eq!(cache.bytes(), 8 * 8 * 4);
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        // budget fits exactly two 4x4 entries (64 bytes each)
+        let cache = ResultCache::new(128);
+        let (a, b, c) = (mat(4, 1), mat(4, 2), mat(4, 3));
+        cache.insert(key(&a, 2), &a, Method::Ours, None);
+        cache.insert(key(&b, 2), &b, Method::Ours, None);
+        // touch a so b is the LRU entry
+        assert!(cache.get(&key(&a, 2)).is_some());
+        cache.insert(key(&c, 2), &c, Method::Ours, None);
+        assert!(cache.get(&key(&b, 2)).is_none(), "LRU entry evicted");
+        assert!(cache.get(&key(&a, 2)).is_some(), "recently used survives");
+        assert!(cache.get(&key(&c, 2)).is_some());
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.bytes() <= 128);
+    }
+
+    #[test]
+    fn oversized_entries_do_not_flush_the_cache() {
+        let cache = ResultCache::new(100);
+        let small = mat(4, 1); // 64 bytes: fits
+        cache.insert(key(&small, 2), &small, Method::Ours, None);
+        let huge = mat(16, 2); // 1024 bytes: over the whole budget
+        cache.insert(key(&huge, 2), &huge, Method::Ours, None);
+        assert_eq!(cache.len(), 1, "oversized insert dropped, small entry kept");
+        assert!(cache.get(&key(&small, 2)).is_some());
+    }
+
+    #[test]
+    fn shrinking_the_budget_evicts() {
+        let cache = ResultCache::new(1 << 20);
+        for s in 0..4 {
+            let m = mat(8, s);
+            cache.insert(key(&m, 2), &m, Method::Ours, None);
+        }
+        assert_eq!(cache.len(), 4);
+        cache.set_budget(2 * 8 * 8 * 4);
+        assert!(cache.len() <= 2, "shrunk budget evicts down");
+        assert!(cache.bytes() <= cache.budget());
+    }
+
+    #[test]
+    fn policy_disabled_paths() {
+        let mut cfg = MatexpConfig::default();
+        let req = ExpmRequest::new(1, mat(8, 9), 4, Method::Ours);
+        // disabled by config (the default)
+        assert!(matches!(
+            ResultCachePolicy::for_request(&cfg, &req),
+            ResultCachePolicy::Disabled
+        ));
+        cfg.cache.results = true;
+        assert!(matches!(
+            ResultCachePolicy::for_request(&cfg, &req),
+            ResultCachePolicy::ReadWrite(_)
+        ));
+        // a plan override opts out of the tier entirely
+        let mut pinned = req.clone();
+        pinned.plan = Some(crate::plan::Plan::binary(4, false));
+        assert!(matches!(
+            ResultCachePolicy::for_request(&cfg, &pinned),
+            ResultCachePolicy::Disabled
+        ));
+        // per-submission bypass / refresh
+        let mut bypass = req.clone();
+        bypass.cache = CacheControl::Bypass;
+        assert!(matches!(
+            ResultCachePolicy::for_request(&cfg, &bypass),
+            ResultCachePolicy::Disabled
+        ));
+        let mut refresh = req.clone();
+        refresh.cache = CacheControl::Refresh;
+        assert!(matches!(
+            ResultCachePolicy::for_request(&cfg, &refresh),
+            ResultCachePolicy::WriteOnly(_)
+        ));
+    }
+}

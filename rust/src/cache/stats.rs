@@ -1,0 +1,111 @@
+//! Process-wide cache telemetry: one snapshot over all three tiers.
+//!
+//! The counters aggregate the global [`super::PlanCache`] and
+//! [`super::ResultCache`] instances plus every engine's
+//! [`super::PreparedSet`]. They feed the coordinator's metrics snapshot
+//! (and through it the server's `metrics` wire response) and the `expm`
+//! CLI's cache line, so hit rates are observable wherever the stats
+//! already flow.
+
+use crate::cache::{plan::PlanCache, prepared, result::ResultCache};
+use crate::json_obj;
+use crate::util::json::Json;
+
+/// Point-in-time totals for every cache tier (process-wide).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Plans served from the plan cache.
+    pub plan_hits: u64,
+    /// Plans built by the planner (bypass runs not counted).
+    pub plan_misses: u64,
+    /// `Backend::prepare` calls skipped by warm prepared sets.
+    pub prepared_hits: u64,
+    /// Cold prepares recorded across all engines.
+    pub prepared_misses: u64,
+    /// Requests answered from the result cache.
+    pub result_hits: u64,
+    /// Result-cache lookups that found nothing.
+    pub result_misses: u64,
+    /// Results stored.
+    pub result_inserts: u64,
+    /// Entries evicted by the byte budget.
+    pub result_evictions: u64,
+    /// Result entries currently held.
+    pub result_entries: u64,
+    /// Result payload bytes currently held.
+    pub result_bytes: u64,
+}
+
+impl CacheCounters {
+    /// Serialize for the server `metrics` response.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("plan_hits", self.plan_hits),
+            ("plan_misses", self.plan_misses),
+            ("prepared_hits", self.prepared_hits),
+            ("prepared_misses", self.prepared_misses),
+            ("result_hits", self.result_hits),
+            ("result_misses", self.result_misses),
+            ("result_inserts", self.result_inserts),
+            ("result_evictions", self.result_evictions),
+            ("result_entries", self.result_entries),
+            ("result_bytes", self.result_bytes),
+        ]
+    }
+}
+
+/// Snapshot the process-wide cache counters (all three tiers).
+pub fn snapshot() -> CacheCounters {
+    let plans = PlanCache::global();
+    let results = ResultCache::global();
+    let (prepared_hits, prepared_misses) = prepared::global_counters();
+    CacheCounters {
+        plan_hits: plans.hits(),
+        plan_misses: plans.misses(),
+        prepared_hits,
+        prepared_misses,
+        result_hits: results.hits(),
+        result_misses: results.misses(),
+        result_inserts: results.inserts(),
+        result_evictions: results.evictions(),
+        result_entries: results.len() as u64,
+        result_bytes: results.bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_serializes_every_tier() {
+        let s = snapshot();
+        let j = s.to_json().to_string();
+        for field in [
+            "plan_hits",
+            "prepared_misses",
+            "result_hits",
+            "result_evictions",
+            "result_bytes",
+        ] {
+            assert!(j.contains(field), "{field} missing from {j}");
+        }
+    }
+
+    #[test]
+    fn counters_are_monotone_across_snapshots() {
+        let before = snapshot();
+        // drive the global plan cache once
+        let key = crate::cache::PlanKey {
+            n: 3,
+            power: 77,
+            kind: crate::plan::PlanKind::Binary,
+            method: crate::coordinator::request::Method::Ours,
+        };
+        let _ = PlanCache::global().fetch(key, crate::cache::CacheControl::Use, || {
+            crate::plan::Plan::binary(77, false)
+        });
+        let after = snapshot();
+        assert!(after.plan_hits + after.plan_misses > before.plan_hits + before.plan_misses);
+    }
+}

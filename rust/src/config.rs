@@ -57,6 +57,47 @@ impl Default for PoolConfig {
     }
 }
 
+/// Multi-tier cache knobs (see [`crate::cache`]).
+///
+/// Plan caching is semantically invisible (plans are pure functions of
+/// their key) and defaults **on**; result caching changes what a response
+/// *reports* (a warm hit performs zero launches), so it defaults **off**
+/// and is enabled per deployment (`--cache-results`).
+///
+/// ```
+/// use matexp::prelude::*;
+///
+/// let mut cfg = MatexpConfig::default();
+/// assert!(cfg.cache.plans && !cfg.cache.results);
+/// cfg.cache.results = true; // what `--cache-results` does
+/// cfg.cache.budget_mb = 64; // what `--cache-budget-mb 64` does
+/// assert_eq!(cfg.cache.budget_bytes(), 64 << 20);
+/// cfg.validate().unwrap();
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheSettings {
+    /// Memoize built launch plans ([`crate::cache::PlanCache`]).
+    pub plans: bool,
+    /// Serve repeated identical requests from the content-addressed
+    /// result cache ([`crate::cache::ResultCache`]).
+    pub results: bool,
+    /// Byte budget of the result cache, mebibytes (LRU eviction).
+    pub budget_mb: usize,
+}
+
+impl Default for CacheSettings {
+    fn default() -> Self {
+        Self { plans: true, results: false, budget_mb: 256 }
+    }
+}
+
+impl CacheSettings {
+    /// The result-cache budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        (self.budget_mb as u64) << 20
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
@@ -77,9 +118,12 @@ pub struct MatexpConfig {
     pub max_n: usize,
     /// TCP bind address for `matexp serve`.
     pub server_addr: String,
+    /// Dynamic-batcher knobs (coalescing size/deadline, queue bound).
     pub batcher: BatcherConfig,
     /// Multi-device pool layout (used when `backend` is `pool`).
     pub pool: PoolConfig,
+    /// Multi-tier cache policy (plan memoization, result serving).
+    pub cache: CacheSettings,
     /// Use the fused `sqmul` executable in binary plans.
     pub fused_sqmul: bool,
     /// Fold squaring runs into `square2`/`square4` launches.
@@ -108,6 +152,7 @@ impl Default for MatexpConfig {
             server_addr: "127.0.0.1:7070".into(),
             batcher: BatcherConfig::default(),
             pool: PoolConfig::default(),
+            cache: CacheSettings::default(),
             fused_sqmul: true,
             use_square_chains: true,
             warmup_sizes: Vec::new(),
@@ -228,6 +273,30 @@ impl MatexpConfig {
                         }
                     }
                 }
+                "cache" => {
+                    let c = val.as_obj().ok_or_else(|| bad("cache"))?;
+                    for (ck, cv) in c {
+                        match ck.as_str() {
+                            "plans" => {
+                                cfg.cache.plans =
+                                    cv.as_bool().ok_or_else(|| bad("cache.plans"))?
+                            }
+                            "results" => {
+                                cfg.cache.results =
+                                    cv.as_bool().ok_or_else(|| bad("cache.results"))?
+                            }
+                            "budget_mb" => {
+                                cfg.cache.budget_mb =
+                                    cv.as_usize().ok_or_else(|| bad("cache.budget_mb"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field cache.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
                 "fused_sqmul" => {
                     cfg.fused_sqmul = val.as_bool().ok_or_else(|| bad("fused_sqmul"))?
                 }
@@ -295,6 +364,14 @@ impl MatexpConfig {
                 ]
             ),
             (
+                "cache",
+                json_obj![
+                    ("plans", self.cache.plans),
+                    ("results", self.cache.results),
+                    ("budget_mb", self.cache.budget_mb),
+                ]
+            ),
+            (
                 "warmup_sizes",
                 Json::Arr(self.warmup_sizes.iter().map(|&n| Json::from(n)).collect())
             ),
@@ -325,6 +402,9 @@ impl MatexpConfig {
         }
         if self.max_n == 0 {
             return Err(MatexpError::Config("max_n must be >= 1".into()));
+        }
+        if self.cache.budget_mb == 0 {
+            return Err(MatexpError::Config("cache.budget_mb must be >= 1".into()));
         }
         if self.pool.max_grid == 0 {
             return Err(MatexpError::Config("pool.max_grid must be >= 1".into()));
@@ -443,6 +523,28 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = MatexpConfig::default();
         cfg.pool.grid = Some(0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cache_settings_parse_and_validate() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"cache":{"results":true,"budget_mb":32,"plans":false}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.cache.results && !cfg.cache.plans);
+        assert_eq!(cfg.cache.budget_mb, 32);
+        assert_eq!(cfg.cache.budget_bytes(), 32 << 20);
+        cfg.validate().unwrap();
+        // unknown nested fields and bad types rejected
+        assert!(MatexpConfig::from_json(&Json::parse(r#"{"cache":{"wat":1}}"#).unwrap()).is_err());
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"cache":{"results":"yes"}}"#).unwrap()
+        )
+        .is_err());
+        // a zero budget is a config error
+        let mut cfg = MatexpConfig::default();
+        cfg.cache.budget_mb = 0;
         assert!(cfg.validate().is_err());
     }
 

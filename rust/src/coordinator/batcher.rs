@@ -21,6 +21,7 @@ use crate::exec::Priority;
 pub struct Batch {
     /// Matrix size shared by all requests in the batch.
     pub n: usize,
+    /// The batched requests, in arrival order.
     pub requests: Vec<ExpmRequest>,
     /// When the oldest member was enqueued.
     pub opened_at: Instant,
@@ -50,6 +51,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher with the given knobs.
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher { cfg, pending: Vec::new(), order: VecDeque::new(), queued: 0 }
     }
@@ -59,6 +61,7 @@ impl Batcher {
         self.queued
     }
 
+    /// `true` when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queued == 0
     }

@@ -4,6 +4,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::cache::CacheCounters;
 use crate::json_obj;
 use crate::pool::DeviceUtil;
 use crate::util::json::Json;
@@ -16,13 +17,21 @@ pub const LATENCY_BUCKETS_US: [u64; 12] = [
 /// Shared, atomically-updated service metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests submitted (accepted or not).
     pub requests_total: AtomicU64,
+    /// Requests answered successfully.
     pub responses_total: AtomicU64,
+    /// Requests rejected by admission control.
     pub rejected_total: AtomicU64,
+    /// Requests that failed in execution (or lost their caller).
     pub errors_total: AtomicU64,
+    /// Batches shipped to workers.
     pub batches_total: AtomicU64,
+    /// Requests across all shipped batches.
     pub batched_requests_total: AtomicU64,
+    /// Kernel launches across all served responses.
     pub launches_total: AtomicU64,
+    /// Matrix multiplies across all served responses.
     pub multiplies_total: AtomicU64,
     /// Host-edge bytes copied across all served responses (the residency
     /// layer's live counterpart of `ExecStats.bytes_copied`).
@@ -39,13 +48,21 @@ pub struct Metrics {
 /// Point-in-time copy for reporting.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests submitted (accepted or not).
     pub requests_total: u64,
+    /// Requests answered successfully.
     pub responses_total: u64,
+    /// Requests rejected by admission control.
     pub rejected_total: u64,
+    /// Requests that failed in execution (or lost their caller).
     pub errors_total: u64,
+    /// Batches shipped to workers.
     pub batches_total: u64,
+    /// Requests across all shipped batches.
     pub batched_requests_total: u64,
+    /// Kernel launches across all served responses.
     pub launches_total: u64,
+    /// Matrix multiplies across all served responses.
     pub multiplies_total: u64,
     /// Host-edge bytes copied across all served responses.
     pub bytes_copied_total: u64,
@@ -58,13 +75,21 @@ pub struct MetricsSnapshot {
     /// Per-device utilization (empty off the pool backend); filled by
     /// [`crate::coordinator::service::ServiceHandle::metrics`].
     pub devices: Vec<DeviceUtil>,
+    /// Process-wide cache-tier counters (plan / prepared / result), from
+    /// [`crate::cache::stats::snapshot`].
+    pub cache: CacheCounters,
+    /// Latency histogram as `(bucket upper bound µs, count)` pairs.
     pub latency_buckets: Vec<(u64, u64)>,
+    /// Mean served latency, microseconds.
     pub latency_mean_us: f64,
+    /// Median served latency (bucket upper bound), microseconds.
     pub latency_p50_us: u64,
+    /// 99th-percentile served latency (bucket upper bound), microseconds.
     pub latency_p99_us: u64,
 }
 
 impl Metrics {
+    /// All-zero metrics.
     pub fn new() -> Metrics {
         Metrics::default()
     }
@@ -91,6 +116,8 @@ impl Metrics {
         u64::MAX
     }
 
+    /// A point-in-time copy of every counter (plus the process-wide
+    /// cache-tier counters).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let buckets: Vec<(u64, u64)> = LATENCY_BUCKETS_US
             .iter()
@@ -113,6 +140,7 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             steals_total: 0,
             devices: Vec::new(),
+            cache: crate::cache::stats::snapshot(),
             latency_mean_us: if observed == 0 { 0.0 } else { sum as f64 / observed as f64 },
             latency_p50_us: Self::percentile(&buckets, observed, 0.50),
             latency_p99_us: Self::percentile(&buckets, observed, 0.99),
@@ -161,6 +189,7 @@ impl MetricsSnapshot {
             ("buffers_recycled_total", self.buffers_recycled_total),
             ("queue_depth", self.queue_depth),
             ("steals_total", self.steals_total),
+            ("cache", self.cache.to_json()),
             ("devices", Json::Arr(devices)),
             ("latency_buckets", Json::Arr(buckets)),
             ("latency_mean_us", self.latency_mean_us),
@@ -242,6 +271,16 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"bytes_copied_total\":8192"), "{j}");
         assert!(j.contains("\"buffers_recycled_total\":5"), "{j}");
+    }
+
+    #[test]
+    fn cache_counters_ride_the_metrics_json() {
+        let s = Metrics::new().snapshot();
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"cache\""), "{j}");
+        for field in ["plan_hits", "prepared_hits", "result_hits", "result_evictions"] {
+            assert!(j.contains(field), "{field} missing from {j}");
+        }
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use crate::cache::CacheControl;
 use crate::exec::Priority;
 use crate::linalg::matrix::Matrix;
 use crate::plan::{Plan, PlanKind};
@@ -31,6 +32,7 @@ pub enum Method {
 }
 
 impl Method {
+    /// Canonical lowercase name (CLI/config/wire vocabulary).
     pub fn as_str(self) -> &'static str {
         match self {
             Method::Ours => "ours",
@@ -44,6 +46,7 @@ impl Method {
         }
     }
 
+    /// Every method, for exhaustive parsing/tests.
     pub fn all() -> [Method; 8] {
         [
             Method::Ours,
@@ -80,9 +83,13 @@ impl std::fmt::Display for Method {
 /// lower a submission via the [`crate::exec::Executor`] surface).
 #[derive(Clone, Debug)]
 pub struct ExpmRequest {
+    /// Request id (reply-routing key inside the coordinator).
     pub id: u64,
+    /// The operand matrix.
     pub matrix: Matrix,
+    /// The exponent `N` in `A^N`.
     pub power: u64,
+    /// Which execution method to run.
     pub method: Method,
     /// Explicit launch-plan override (local submissions only; plans do
     /// not cross the wire).
@@ -95,6 +102,8 @@ pub struct ExpmRequest {
     /// Requested accuracy bound (tight bounds pin conservative plans; a
     /// non-finite result violates any tolerance).
     pub tolerance: Option<f32>,
+    /// Cache directive for this request (see [`CacheControl`]).
+    pub cache: CacheControl,
 }
 
 impl ExpmRequest {
@@ -110,9 +119,11 @@ impl ExpmRequest {
             deadline: None,
             priority: Priority::default(),
             tolerance: None,
+            cache: CacheControl::default(),
         }
     }
 
+    /// Matrix side length.
     pub fn n(&self) -> usize {
         self.matrix.n()
     }
@@ -121,9 +132,13 @@ impl ExpmRequest {
 /// The served answer.
 #[derive(Clone, Debug)]
 pub struct ExpmResponse {
+    /// Echo of the request's id.
     pub id: u64,
+    /// The computed `A^N` (or the cached copy of it).
     pub result: Matrix,
+    /// What the execution cost (zeroed launches/transfers on cache hits).
     pub stats: ExecStats,
+    /// Echo of the request's method.
     pub method: Method,
     /// Which planner ran (None for fused/packed/CPU paths).
     pub plan_kind: Option<PlanKind>,

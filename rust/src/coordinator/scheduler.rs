@@ -5,10 +5,11 @@
 //! runs (a register [`Plan`], the packed bit-loop, the fused artifact, a
 //! naive round-trip loop, or the CPU baseline).
 
+use crate::cache::{plan::plan_for, PlanKey};
 use crate::config::MatexpConfig;
 use crate::coordinator::request::{ExpmRequest, Method};
 use crate::error::{MatexpError, Result};
-use crate::plan::Plan;
+use crate::plan::{Plan, PlanKind};
 
 /// Largest exponent the service accepts. Plans stay tiny (O(log N)) but
 /// f32 dynamic range makes larger powers numerically meaningless.
@@ -133,12 +134,26 @@ pub fn pool_dispatch(n: usize, requests: usize, cfg: &MatexpConfig) -> PoolDispa
 
 /// Tolerances below this bound pin the conservative binary plan (chained
 /// `square4` launches reassociate more aggressively).
-const CONSERVATIVE_TOL: f32 = 1e-6;
+pub(crate) const CONSERVATIVE_TOL: f32 = 1e-6;
+
+/// The shared conservative-plan predicate. The result cache keys on this
+/// too ([`crate::cache::ResultKey`]), so entries can never cross the
+/// plan-selection boundary even within one tolerance decade.
+pub(crate) fn is_conservative(tolerance: Option<f32>) -> bool {
+    tolerance.is_some_and(|t| t < CONSERVATIVE_TOL)
+}
 
 /// Pick the execution strategy for an admitted request. An explicit
 /// plan override ([`ExpmRequest::plan`], set by
 /// [`crate::exec::Submission::plan`]) wins over the method→plan mapping;
 /// a tight tolerance pins the conservative binary plan for `Ours`.
+///
+/// Plans built here go through the process-wide
+/// [`crate::cache::PlanCache`] (tier 1, keyed by `(n, power, kind,
+/// method)`), honoring `cfg.cache.plans` and the request's
+/// [`crate::cache::CacheControl`] — the one construction site, so the
+/// engine, pool and service all amortize planning identically. Explicit
+/// overrides skip the cache: the caller already holds the plan.
 pub fn strategy_for(req: &ExpmRequest, cfg: &MatexpConfig) -> Strategy {
     if let Some(plan) = &req.plan {
         return match req.method {
@@ -146,21 +161,32 @@ pub fn strategy_for(req: &ExpmRequest, cfg: &MatexpConfig) -> Strategy {
             _ => Strategy::DeviceResident(plan.clone()),
         };
     }
+    // fetch-or-build `kind` for this request through the plan cache
+    let cached = |kind: PlanKind, build: &dyn Fn() -> Plan| {
+        let key = PlanKey { n: req.n(), power: req.power, kind, method: req.method };
+        plan_for(key, req.cache, cfg.cache.plans, build)
+    };
     match req.method {
         Method::Ours => {
-            let conservative = req.tolerance.is_some_and(|t| t < CONSERVATIVE_TOL);
+            let conservative = is_conservative(req.tolerance);
             Strategy::DeviceResident(if cfg.use_square_chains && !conservative {
-                Plan::chained(req.power, &[4, 2])
+                cached(PlanKind::Chained, &|| Plan::chained(req.power, &[4, 2]))
             } else {
-                Plan::binary(req.power, false)
+                cached(PlanKind::Binary, &|| Plan::binary(req.power, false))
             })
         }
-        Method::OursChained => Strategy::DeviceResident(Plan::chained(req.power, &[4, 2])),
+        Method::OursChained => Strategy::DeviceResident(
+            cached(PlanKind::Chained, &|| Plan::chained(req.power, &[4, 2])),
+        ),
         Method::OursPacked => Strategy::Packed,
-        Method::AdditionChain => Strategy::DeviceResident(Plan::addition_chain(req.power)),
+        Method::AdditionChain => Strategy::DeviceResident(
+            cached(PlanKind::AdditionChain, &|| Plan::addition_chain(req.power)),
+        ),
         Method::FusedArtifact => Strategy::Fused,
         Method::NaiveGpu => Strategy::NaiveRoundtrip,
-        Method::PlanRoundtrip => Strategy::PlanRoundtrip(Plan::binary(req.power, false)),
+        Method::PlanRoundtrip => Strategy::PlanRoundtrip(
+            cached(PlanKind::Binary, &|| Plan::binary(req.power, false)),
+        ),
         Method::CpuSeq => Strategy::CpuSequential,
     }
 }

@@ -4,7 +4,8 @@
 //! * N worker threads, each with its own backend engine (backends may be
 //!   `!Send`), pulling batches from a shared queue;
 //! * one collector thread running the [`Batcher`] (size-or-deadline);
-//! * submission is **asynchronous**: [`ServiceHandle::submit_job`]
+//! * submission is **asynchronous** (the blocking `submit` shim was
+//!   removed in 0.4.0): [`ServiceHandle::submit_job`]
 //!   registers a reply slot and returns a [`JobHandle`] immediately —
 //!   nobody parks a thread per in-flight request. `wait`/`try_result`/
 //!   `cancel`/deadline expiry all operate on the handle; the TCP
@@ -21,11 +22,10 @@ use std::time::{Duration, Instant};
 use crate::config::MatexpConfig;
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{ExpmRequest, ExpmResponse, Method};
+use crate::coordinator::request::{ExpmRequest, ExpmResponse};
 use crate::coordinator::{scheduler, worker};
 use crate::error::{MatexpError, Result};
 use crate::exec::{JobHandle, ReplyRegistry, ReplySender, Submission};
-use crate::linalg::matrix::Matrix;
 use crate::pool::DevicePool;
 use crate::runtime::BackendKind;
 
@@ -392,13 +392,6 @@ impl ServiceHandle {
         enqueue(&self.replies, submit_tx, req, reply_tx)
     }
 
-    /// Blocking request — the legacy surface, kept one release.
-    #[deprecated(since = "0.3.0", note = "use `submit_job(Submission)` (the exec::Executor \
-        surface): non-blocking, with deadline/cancel support")]
-    pub fn submit(&self, matrix: Matrix, power: u64, method: Method) -> Result<ExpmResponse> {
-        self.submit_job(Submission::expm(matrix, power).method(method))?.wait()
-    }
-
     /// Graceful shutdown: drain the queue, join all threads.
     pub fn shutdown(mut self) {
         self.submit_tx.take(); // closes the collector's input
@@ -427,6 +420,8 @@ impl Drop for ServiceHandle {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Method;
+    use crate::linalg::matrix::Matrix;
     use std::sync::mpsc::channel;
 
     /// A handle with a live intake queue but NO collector and NO workers:

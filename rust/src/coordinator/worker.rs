@@ -6,6 +6,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cache::ResultCachePolicy;
 use crate::config::MatexpConfig;
 use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse};
 use crate::coordinator::scheduler::{strategy_for, Strategy};
@@ -17,14 +18,20 @@ use crate::runtime::{Backend, BackendKind, Engine};
 
 /// Execute one request on this worker's engine: the strategy dispatch
 /// behind every [`crate::exec::Executor`] — deadline preflight, the
-/// method→discipline mapping, and the shared post-execution contract
-/// checks (late completion, tolerance violations).
+/// result-cache consult (tier 3: a warm hit answers without touching the
+/// backend), the method→discipline mapping, and the shared
+/// post-execution contract checks (late completion, tolerance
+/// violations).
 pub fn execute_request<B: Backend>(
     engine: &mut Engine<B>,
     cfg: &MatexpConfig,
     req: &ExpmRequest,
 ) -> Result<ExpmResponse> {
     crate::exec::check_deadline(req.deadline)?;
+    let cache = ResultCachePolicy::for_request(cfg, req);
+    if let Some(resp) = cache.lookup(req.id) {
+        return crate::exec::enforce(req.deadline, req.tolerance, resp);
+    }
     let strategy = strategy_for(req, cfg);
     let (result, stats, plan_kind) = match strategy {
         Strategy::DeviceResident(plan) => {
@@ -60,11 +67,13 @@ pub fn execute_request<B: Backend>(
             (m, stats, None)
         }
     };
-    crate::exec::enforce(
-        req.deadline,
-        req.tolerance,
-        ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind },
-    )
+    let resp = ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind };
+    // enforce BEFORE storing: a response that violates its contract
+    // (late, or non-finite under a tolerance) must not occupy cache
+    // budget with an answer that can never be served successfully
+    let resp = crate::exec::enforce(req.deadline, req.tolerance, resp)?;
+    cache.store(&resp);
+    Ok(resp)
 }
 
 /// Build the engine a worker thread uses (one per thread; compiled/cached
@@ -92,11 +101,14 @@ pub struct WorkerEngine {
 
 /// The execution substrate behind a [`WorkerEngine`].
 pub enum WorkerKind {
+    /// The worker's own single-backend engine.
     Single(Box<AnyEngine>),
+    /// A handle onto the shared multi-device pool.
     Pool(PoolEngine),
 }
 
 impl WorkerEngine {
+    /// Human-readable description of the execution substrate.
     pub fn platform(&self) -> String {
         match &self.kind {
             WorkerKind::Single(e) => e.platform(),

@@ -43,8 +43,10 @@ pub enum MatexpError {
     /// of treating it as a service failure.
     Deadline(String),
 
+    /// Underlying I/O failures (sockets, config files, artifacts).
     Io(std::io::Error),
 
+    /// JSON parse/encode failures (config, wire protocol).
     Json(crate::util::json::JsonError),
 }
 
@@ -96,6 +98,7 @@ impl From<xla::Error> for MatexpError {
     }
 }
 
+/// Crate-wide result alias over [`MatexpError`].
 pub type Result<T> = std::result::Result<T, MatexpError>;
 
 #[cfg(test)]

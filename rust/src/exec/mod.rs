@@ -17,9 +17,11 @@
 //! now one vocabulary: a [`Submission`] names *what* to compute (matrix,
 //! power, [`Method`](crate::coordinator::request::Method), optional
 //! explicit [`Plan`](crate::plan::Plan)) and *how it must be served*
-//! (deadline, [`Priority`], tolerance); the [`Executor`] decides how to
-//! run it. The legacy entry points survive one release as `#[deprecated]`
-//! shims (a source-grep test keeps the crate itself off them).
+//! (deadline, [`Priority`], tolerance, [`CacheControl`]); the
+//! [`Executor`] decides how to run it. The legacy entry points were
+//! deprecated in 0.3.0 and **removed** in 0.4.0 (a source-grep test
+//! keeps them from creeping back); the old→new migration table lives in
+//! the crate docs ([`crate`]).
 //!
 //! ```
 //! use matexp::prelude::*;
@@ -46,6 +48,8 @@ pub mod submission;
 pub use executor::{Capabilities, Executor};
 pub use handle::{JobHandle, JobReply, ReplySender};
 pub use submission::{Priority, Submission};
+
+pub use crate::cache::CacheControl;
 
 pub(crate) use executor::{check_deadline, enforce};
 pub(crate) use handle::ReplyRegistry;

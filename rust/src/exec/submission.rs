@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::cache::CacheControl;
 use crate::coordinator::request::{ExpmRequest, Method};
 use crate::error::MatexpError;
 use crate::linalg::matrix::Matrix;
@@ -33,6 +34,7 @@ pub enum Priority {
 }
 
 impl Priority {
+    /// Canonical lowercase name (CLI/config vocabulary).
     pub fn as_str(self) -> &'static str {
         match self {
             Priority::Low => "low",
@@ -41,6 +43,7 @@ impl Priority {
         }
     }
 
+    /// Every priority, for exhaustive parsing/tests.
     pub fn all() -> [Priority; 3] {
         [Priority::Low, Priority::Normal, Priority::High]
     }
@@ -107,6 +110,11 @@ pub struct Submission {
     /// non-finite result violates any tolerance (typed error instead of
     /// silently returning infinities).
     pub tolerance: Option<f32>,
+    /// How this submission interacts with the [`crate::cache`] tiers:
+    /// `Use` (default) reads and populates, `Bypass` touches nothing,
+    /// `Refresh` recomputes and overwrites. Local submissions only — the
+    /// wire protocol always uses the server's default policy.
+    pub cache: CacheControl,
 }
 
 impl Submission {
@@ -120,6 +128,7 @@ impl Submission {
             deadline: None,
             priority: Priority::default(),
             tolerance: None,
+            cache: CacheControl::default(),
         }
     }
 
@@ -147,6 +156,7 @@ impl Submission {
         self
     }
 
+    /// Set the scheduling priority (see [`Priority`]).
     pub fn priority(mut self, priority: Priority) -> Submission {
         self.priority = priority;
         self
@@ -155,6 +165,24 @@ impl Submission {
     /// Request an accuracy bound (see the field docs for semantics).
     pub fn tolerance(mut self, tolerance: f32) -> Submission {
         self.tolerance = Some(tolerance);
+        self
+    }
+
+    /// Steer the caching tiers for this submission (see [`CacheControl`]).
+    ///
+    /// ```
+    /// use matexp::prelude::*;
+    ///
+    /// let a = Matrix::random_spectral(8, 0.9, 1);
+    /// // Bypass: rebuild the plan, recompute the result — and store
+    /// // nothing. The execution really runs: launches are reported.
+    /// let resp = Engine::cpu(CpuAlgo::Ikj)
+    ///     .run(Submission::expm(a, 16).cache(CacheControl::Bypass))
+    ///     .unwrap();
+    /// assert!(resp.stats.launches > 0);
+    /// ```
+    pub fn cache(mut self, cache: CacheControl) -> Submission {
+        self.cache = cache;
         self
     }
 
@@ -178,6 +206,7 @@ impl Submission {
             deadline,
             priority: self.priority,
             tolerance: self.tolerance,
+            cache: self.cache,
         }
     }
 }
@@ -215,7 +244,16 @@ mod tests {
         let sub = Submission::expm(Matrix::identity(4), 2);
         assert_eq!(sub.method, Method::Ours);
         assert_eq!(sub.priority, Priority::Normal);
+        assert_eq!(sub.cache, CacheControl::Use);
         assert!(sub.deadline.is_none() && sub.plan.is_none() && sub.tolerance.is_none());
+    }
+
+    #[test]
+    fn cache_control_lowers_into_the_request() {
+        for ctl in CacheControl::all() {
+            let req = Submission::expm(Matrix::identity(4), 2).cache(ctl).into_request(1);
+            assert_eq!(req.cache, ctl);
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | A3        | launch fusion               | [`ablations::fusion_ablation`]  |
 //! | A4        | CPU-baseline fairness       | [`ablations::cpu_variants`]     |
 //! | A5        | buffer residency            | [`ablations::residency_data_path`] |
+//! | A6        | cache tiers (plan/prepared/result) | [`ablations::cache_setup_arms`] |
 //! | S1        | pool scaling (extension)    | [`scaling::run_pool_scaling`]   |
 
 pub mod ablations;

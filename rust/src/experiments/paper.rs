@@ -8,9 +8,13 @@
 /// One published cell: wall-clock seconds for (method, n, power).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PaperCell {
+    /// The exponent `N` of this column.
     pub power: u64,
+    /// Published naive-GPU seconds.
     pub naive_gpu_s: f64,
+    /// Published sequential-CPU seconds.
     pub seq_cpu_s: f64,
+    /// Published "Our Approach" seconds.
     pub ours_s: f64,
 }
 
@@ -38,6 +42,7 @@ pub struct PaperTable {
     pub id: u8,
     /// Matrix size n (n×n).
     pub n: usize,
+    /// The published columns, in power order.
     pub cells: &'static [PaperCell],
 }
 

@@ -35,7 +35,9 @@ pub const TABLE4_POWERS: [u64; 4] = [64, 128, 256, 512];
 /// One pool configuration's outcome.
 #[derive(Clone, Debug)]
 pub struct ScalingArm {
+    /// Arm label ("2xsim", "cpu+4sim", …).
     pub name: String,
+    /// Pool membership of this arm.
     pub devices: Vec<PoolDeviceKind>,
     /// Predicted workload wall (request-parallel makespan), seconds.
     pub predicted_s: f64,
@@ -59,14 +61,19 @@ pub struct ScalingArm {
 /// The whole experiment: baseline + arms.
 #[derive(Clone, Debug)]
 pub struct ScalingTable {
+    /// Matrix side length of the workload.
     pub n: usize,
+    /// The workload's power column (Table 4's N values).
     pub powers: Vec<u64>,
     /// Single calibrated SimBackend running the workload serially.
     pub baseline_predicted_s: f64,
+    /// Measured single-device workload wall, when measured.
     pub baseline_measured_s: Option<f64>,
     /// Single-device wall for the largest power (the shard comparator).
     pub baseline_shard_predicted_s: f64,
+    /// Measured single-device wall for that request, when measured.
     pub baseline_shard_measured_s: Option<f64>,
+    /// One row per pool configuration.
     pub arms: Vec<ScalingArm>,
 }
 

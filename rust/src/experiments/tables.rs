@@ -26,18 +26,24 @@ use crate::simulator::timing::GpuTimingModel;
 /// The three methods of every paper table.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MethodTimes {
+    /// Naive-GPU seconds (§4.2 discipline).
     pub naive_gpu_s: f64,
+    /// Sequential-CPU seconds (§4.1 baseline).
     pub seq_cpu_s: f64,
+    /// "Our Approach" seconds (§4.3 device-resident).
     pub ours_s: f64,
 }
 
 impl MethodTimes {
+    /// "Naïve Speed UP" row: sequential CPU / naive GPU.
     pub fn naive_speedup(&self) -> f64 {
         self.seq_cpu_s / self.naive_gpu_s
     }
+    /// "Our Approach vs Naïve GPU" row.
     pub fn ours_vs_naive(&self) -> f64 {
         self.naive_gpu_s / self.ours_s
     }
+    /// Our approach vs sequential CPU (the figures' tall bars).
     pub fn ours_speedup(&self) -> f64 {
         self.seq_cpu_s / self.ours_s
     }
@@ -46,9 +52,13 @@ impl MethodTimes {
 /// One regenerated cell.
 #[derive(Clone, Debug)]
 pub struct CellResult {
+    /// Matrix side length.
     pub n: usize,
+    /// The exponent `N` of this column.
     pub power: u64,
+    /// The paper's published numbers for this cell, when it has them.
     pub paper: Option<PaperCell>,
+    /// The calibrated model's prediction for this cell.
     pub simulated: MethodTimes,
     /// Present when run with a live engine (`measure = true`).
     pub measured: Option<MethodTimes>,
@@ -59,8 +69,11 @@ pub struct CellResult {
 /// One regenerated table.
 #[derive(Clone, Debug)]
 pub struct TableResult {
+    /// Our table id (2..=5, in n-order).
     pub id: u8,
+    /// Matrix side length of the whole table.
     pub n: usize,
+    /// One regenerated cell per power column.
     pub cells: Vec<CellResult>,
 }
 

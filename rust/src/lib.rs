@@ -67,6 +67,25 @@
 //! thread parks per in-flight request, and the TCP wire pipelines many
 //! id-tagged requests over one connection.
 //!
+//! # Caching
+//!
+//! Behind the surface sits a three-tier caching subsystem ([`cache`])
+//! shared by every executor: a **plan cache** (the planner runs once per
+//! `(n, power, kind, method)` shape), a per-backend
+//! **prepared-executable cache** (`Backend::prepare` runs once per
+//! `(op, n)`), and an opt-in **content-addressed result cache** (repeated
+//! hot requests answered without touching a device; LRU against a byte
+//! budget, never across tolerance buckets). Per-submission control:
+//! [`exec::Submission::cache`] with [`cache::CacheControl`]
+//! (`Use`/`Bypass`/`Refresh`); per-deployment control:
+//! [`config::CacheSettings`] / `--cache-results` / `--cache-budget-mb`.
+//! `experiment --ablate-cache` (A6) quantifies each tier.
+//!
+//! A guided tour of how these layers fit together — module
+//! responsibilities, the config → exec → coordinator → pool → runtime →
+//! backend map, and end-to-end data-flow walkthroughs — lives in
+//! `ARCHITECTURE.md` at the crate root.
+//!
 //! Quick start (pure Rust, runs as-is):
 //!
 //! ```
@@ -106,7 +125,8 @@
 //! assert!(!pooled.stats.per_device.is_empty()); // who did the work
 //! ```
 //!
-//! Migration from the deprecated per-discipline entry points:
+//! Migration from the legacy per-discipline entry points (deprecated in
+//! 0.3.0, **removed** in 0.4.0):
 //!
 //! | old entry point | new submission |
 //! |---|---|
@@ -122,7 +142,10 @@
 //! `Engine::sim()` (predicted 2012 wall-clock in `stats.wall_s`) or, with
 //! `--features xla` and artifacts built, `Engine::pjrt(&registry, variant)`.
 
+#![warn(missing_docs)]
+
 pub mod bench;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -138,7 +161,8 @@ pub mod util;
 
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::MatexpConfig;
+    pub use crate::cache::{CacheControl, ResultCache};
+    pub use crate::config::{CacheSettings, MatexpConfig};
     pub use crate::coordinator::{
         request::{ExecStats, ExpmRequest, ExpmResponse, Method},
         service::Service,

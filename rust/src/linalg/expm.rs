@@ -23,6 +23,7 @@ pub enum CpuAlgo {
 }
 
 impl CpuAlgo {
+    /// The allocating form of this variant's matmul kernel.
     pub fn matmul(self) -> MatmulFn {
         match self {
             CpuAlgo::Naive => naive::matmul_naive,
@@ -45,6 +46,7 @@ impl CpuAlgo {
         }
     }
 
+    /// Canonical lowercase name (CLI/config vocabulary).
     pub fn name(self) -> &'static str {
         match self {
             CpuAlgo::Naive => "naive",
@@ -55,6 +57,7 @@ impl CpuAlgo {
         }
     }
 
+    /// Every variant, for exhaustive parsing/tests/ablations.
     pub fn all() -> [CpuAlgo; 5] {
         [
             CpuAlgo::Naive,

@@ -81,27 +81,33 @@ impl Matrix {
         Self { n, data }
     }
 
+    /// Side length (the matrix is `n × n`).
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// The row-major element buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable access to the row-major element buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the row-major element buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
 
+    /// Element at `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.n + j]
     }
 
+    /// Set element `(i, j)` to `v`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.n + j] = v;
@@ -113,6 +119,7 @@ impl Matrix {
         &self.data[i * self.n..(i + 1) * self.n]
     }
 
+    /// The transposed matrix.
     pub fn transpose(&self) -> Matrix {
         let n = self.n;
         let mut out = Matrix::zeros(n);
@@ -124,6 +131,7 @@ impl Matrix {
         out
     }
 
+    /// A copy with every element multiplied by `s`.
     pub fn scaled(&self, s: f32) -> Matrix {
         Matrix {
             n: self.n,
@@ -146,6 +154,7 @@ impl Matrix {
         self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
+    /// Largest absolute element.
     pub fn max_abs(&self) -> f32 {
         self.data.iter().map(|v| v.abs()).fold(0.0, f32::max)
     }

@@ -15,6 +15,7 @@ impl XorShift64 {
         }
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

@@ -46,6 +46,10 @@ COMMANDS:
                                        [--steps K] [--power N] [--measure]
                                        (clone-per-launch vs resident buffers
                                         at n in {256,512,1024} by default)
+               or the cache ablation   --ablate-cache [--n SIZE] [--power N]
+                                       [--iters K] [--measure]
+                                       (A6: cold vs plan-warm vs result-warm
+                                        at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
   bench-report all tables, simulation-only summary
 
@@ -58,6 +62,8 @@ GLOBAL FLAGS:
   --pool-grid G     force the pool tile grid to GxG (default: cost model)
   --shard-min-n N   smallest matrix the pool tile-shards (default 512)
   --max-n N         admission limit on matrix size (default 4096)
+  --cache-results   serve repeated identical requests from the result cache
+  --cache-budget-mb M   result-cache byte budget, MiB (default 256, LRU)
   --artifacts DIR   artifact directory (default ./artifacts or $MATEXP_ARTIFACTS)
   --variant xla|pallas
   --config FILE     JSON config file
@@ -123,6 +129,12 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
     }
     if let Some(n) = args.get_parsed::<usize>("max-n")? {
         cfg.max_n = n;
+    }
+    if args.has("cache-results") {
+        cfg.cache.results = true;
+    }
+    if let Some(mb) = args.get_parsed::<usize>("cache-budget-mb")? {
+        cfg.cache.budget_mb = mb;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -264,6 +276,19 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         "residency: {} bytes copied, {} buffers recycled, peak {} resident bytes",
         resp.stats.bytes_copied, resp.stats.buffers_recycled, resp.stats.peak_resident_bytes,
     );
+    let cache = matexp::cache::stats::snapshot();
+    println!(
+        "cache: plan {}h/{}m  prepared {}h/{}m  result {}h/{}m ({} entries, {} bytes, {} evicted)",
+        cache.plan_hits,
+        cache.plan_misses,
+        cache.prepared_hits,
+        cache.prepared_misses,
+        cache.result_hits,
+        cache.result_misses,
+        cache.result_entries,
+        cache.result_bytes,
+        cache.result_evictions,
+    );
     for d in &resp.stats.per_device {
         println!(
             "  {:<8} launches: {}  multiplies: {}  transfers: {}h2d/{}d2h  busy: {}",
@@ -280,6 +305,49 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    if args.has("ablate-cache") {
+        let power: u64 = args.get_parsed_or("power", 1024)?;
+        let iters: usize = args.get_parsed_or("iters", 2000)?;
+        let measure = args.has("measure");
+        let ns: Vec<usize> = match args.get_parsed::<usize>("n")? {
+            Some(n) => vec![n],
+            None => vec![256, 512, 1024],
+        };
+        args.reject_unknown()?;
+        for &n in &ns {
+            let setup = ablations::cache_setup_arms(n, power, iters);
+            let title =
+                format!("A6 cache setup path (n={n}, N={power}, {iters} requests, exec elided)");
+            print!("{}", report::render_ablation(&title, &setup));
+            let speedup = setup[0].wall_s / setup[1].wall_s.max(f64::MIN_POSITIVE);
+            println!("plan-warm setup is {speedup:.1}x faster than cold per request\n");
+
+            let tiers = ablations::cache_result_arms(n, power, cfg.seed);
+            print!(
+                "{}",
+                report::render_ablation(&format!("A6 result tier (n={n}, N={power})"), &tiers)
+            );
+            let speedup = tiers[0].wall_s / tiers[1].wall_s.max(f64::MIN_POSITIVE);
+            println!(
+                "result-warm serving is {speedup:.0}x faster than the modeled cold execution\n"
+            );
+
+            if measure {
+                let engine_arms = ablations::cache_engine_arms(cfg, n, power)?;
+                print!(
+                    "{}",
+                    report::render_ablation(
+                        &format!("A6 cache, full engine (n={n}, N={power}, measured serves)"),
+                        &engine_arms
+                    )
+                );
+                let speedup =
+                    engine_arms[0].wall_s / engine_arms[2].wall_s.max(f64::MIN_POSITIVE);
+                println!("result-warm serve measured {speedup:.0}x faster than cold\n");
+            }
+        }
+        return Ok(());
+    }
     if args.has("ablate-residency") {
         let steps: usize = args.get_parsed_or("steps", 10)?;
         let power: u64 = args.get_parsed_or("power", 1024)?;

@@ -32,10 +32,15 @@ use crate::error::{MatexpError, Result};
 /// Which planner produced a plan (for logs/metrics/benches).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PlanKind {
+    /// §4.2: one multiply per step, `N − 1` of them.
     Naive,
+    /// §4.3: square-and-multiply.
     Binary,
+    /// Binary with fused `SqMul` square+multiply launches.
     BinaryFused,
+    /// Binary with squaring runs folded into `square{k}` launches.
     Chained,
+    /// Power-tree addition chain (≤ binary multiply count).
     AdditionChain,
 }
 
@@ -55,8 +60,11 @@ impl std::fmt::Display for PlanKind {
 /// A launch schedule computing `A^power`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
+    /// The exponent this plan computes.
     pub power: u64,
+    /// Which planner produced it.
     pub kind: PlanKind,
+    /// The launch schedule, in execution order.
     pub steps: Vec<Step>,
     /// Number of registers (device buffers) the plan needs; register 0 is
     /// the input.

@@ -110,9 +110,13 @@ pub(crate) struct Job {
 /// Per-device running totals (pool observability).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct DeviceAccum {
+    /// Jobs this device completed.
     pub jobs: u64,
+    /// Jobs it stole from other devices' queues.
     pub steals: u64,
+    /// Kernel launches it performed.
     pub launches: u64,
+    /// Seconds it was busy (simulated on timing-model devices).
     pub busy_s: f64,
     /// Host-edge bytes this device's data path copied.
     pub bytes_copied: u64,
@@ -352,8 +356,9 @@ fn run_tile(
     let TileJob { op, t, inputs, out_key, tile, reply: _reply } = job;
     let mut stats = DeviceStats { device: name.to_string(), ..DeviceStats::default() };
     let result = (|| -> Result<Matrix> {
+        // tier-2 prepared cache: warm tile sizes skip prepare entirely
+        engine.prepare_cached(op, t)?;
         let be = engine.backend_mut();
-        be.prepare(op, t)?;
         let _ = be.take_sim_time();
         let _ = be.take_residency();
         let t0 = Instant::now();

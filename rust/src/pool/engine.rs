@@ -1,8 +1,8 @@
 //! [`PoolEngine`] — the multi-device counterpart of
 //! [`crate::runtime::Engine`]: the same [`crate::exec::Executor`]
-//! submission surface, executed by a [`DevicePool`] (the legacy
-//! `expm`/`expm_packed` entry points survive one release as deprecated
-//! shims).
+//! submission surface, executed by a [`DevicePool`]. (The legacy
+//! `expm`/`expm_packed` shims were removed in 0.4.0 — submit through the
+//! surface.)
 //!
 //! Dispatch per call:
 //! * small matrices (`n < pool.shard_min_n`) run whole on the fastest
@@ -14,6 +14,7 @@
 
 use std::sync::Arc;
 
+use crate::cache::ResultCachePolicy;
 use crate::config::MatexpConfig;
 use crate::coordinator::request::{ExpmRequest, ExpmResponse};
 use crate::coordinator::scheduler::{self, PoolDispatch, Strategy};
@@ -43,10 +44,12 @@ impl PoolEngine {
         PoolEngine { pool }
     }
 
+    /// The pool this engine submits to.
     pub fn pool(&self) -> &Arc<DevicePool> {
         &self.pool
     }
 
+    /// Human-readable description of the pool's membership.
     pub fn platform(&self) -> String {
         self.pool.platform()
     }
@@ -147,60 +150,79 @@ impl PoolEngine {
         Ok((m, out_key))
     }
 
-    /// §4.3 device-resident plan replay across the pool.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `pool.run(Submission::expm(a, N).plan(plan))`")]
-    pub fn expm(&self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
-        self.run_plan(a, plan)
-    }
-
-    /// §4.3.8 packed-state exponentiation across the pool.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `pool.run(Submission::expm(a, N).method(Method::OursPacked))`")]
-    pub fn expm_packed(&self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
-        self.run_packed(a, power)
-    }
-
     /// Execute one admitted request (the coordinator worker's pool path):
     /// large single requests tile-shard, everything else runs whole on one
     /// device. By value — the matrix is shipped to a device thread either
     /// way, so borrowing would only force an extra deep copy. Applies the
     /// execution surface's shared contract checks (deadline preflight,
-    /// late completion, tolerance).
+    /// late completion, tolerance) and the shared result-cache policy
+    /// (tier 3): the tile-sharded disciplines consult/store here (a warm
+    /// hit answers before any device is consulted); whole-request
+    /// dispatch consults inside the device's `worker::execute_request`,
+    /// under the same key either way.
     pub fn execute_request(&self, req: ExpmRequest) -> Result<ExpmResponse> {
         crate::exec::check_deadline(req.deadline)?;
         let (deadline, tolerance) = (req.deadline, req.tolerance);
         let cfg = self.pool.config();
-        let outcome = match scheduler::pool_dispatch(req.n(), 1, cfg) {
+        // the result-cache consult happens on exactly ONE level per
+        // request: here for the tile-sharded disciplines this method runs
+        // itself, and inside `worker::execute_request` on the device
+        // thread for everything shipped whole — so pooled requests never
+        // double-count misses or pay a redundant digest+store
+        match scheduler::pool_dispatch(req.n(), 1, cfg) {
             PoolDispatch::TileShard => match scheduler::strategy_for(&req, cfg) {
                 Strategy::DeviceResident(plan) => {
+                    let cache = ResultCachePolicy::for_request(cfg, &req);
+                    if let Some(resp) = cache.lookup(req.id) {
+                        return crate::exec::enforce(deadline, tolerance, resp);
+                    }
                     let kind = plan.kind;
                     let (result, stats) = self.run_plan(&req.matrix, &plan)?;
-                    Ok(ExpmResponse {
-                        id: req.id,
-                        result,
-                        stats,
-                        method: req.method,
-                        plan_kind: Some(kind),
-                    })
+                    let resp = crate::exec::enforce(
+                        deadline,
+                        tolerance,
+                        ExpmResponse {
+                            id: req.id,
+                            result,
+                            stats,
+                            method: req.method,
+                            plan_kind: Some(kind),
+                        },
+                    )?;
+                    cache.store(&resp);
+                    Ok(resp)
                 }
                 Strategy::Packed => {
+                    let cache = ResultCachePolicy::for_request(cfg, &req);
+                    if let Some(resp) = cache.lookup(req.id) {
+                        return crate::exec::enforce(deadline, tolerance, resp);
+                    }
                     let (result, stats) = self.run_packed(&req.matrix, req.power)?;
-                    Ok(ExpmResponse {
-                        id: req.id,
-                        result,
-                        stats,
-                        method: req.method,
-                        plan_kind: None,
-                    })
+                    let resp = crate::exec::enforce(
+                        deadline,
+                        tolerance,
+                        ExpmResponse {
+                            id: req.id,
+                            result,
+                            stats,
+                            method: req.method,
+                            plan_kind: None,
+                        },
+                    )?;
+                    cache.store(&resp);
+                    Ok(resp)
                 }
                 // fused / naive-roundtrip / plan-roundtrip / cpu-seq
                 // disciplines are single-device by definition: run whole
-                _ => self.run_whole_request(req),
+                // (the device-side worker applies the cache policy)
+                _ => self
+                    .run_whole_request(req)
+                    .and_then(|resp| crate::exec::enforce(deadline, tolerance, resp)),
             },
-            PoolDispatch::RequestParallel => self.run_whole_request(req),
-        };
-        outcome.and_then(|resp| crate::exec::enforce(deadline, tolerance, resp))
+            PoolDispatch::RequestParallel => self
+                .run_whole_request(req)
+                .and_then(|resp| crate::exec::enforce(deadline, tolerance, resp)),
+        }
     }
 
     /// A batch of admitted requests, request-parallel with work stealing.

@@ -57,6 +57,7 @@ pub enum PoolDeviceKind {
 }
 
 impl PoolDeviceKind {
+    /// Canonical lowercase name (CLI/config vocabulary).
     pub fn as_str(self) -> &'static str {
         match self {
             PoolDeviceKind::Cpu => "cpu",

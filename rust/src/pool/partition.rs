@@ -36,6 +36,7 @@ impl TileGrid {
         Ok(TileGrid { n, g, t })
     }
 
+    /// The partitioned matrix's side length.
     pub fn n(&self) -> usize {
         self.n
     }

@@ -37,7 +37,9 @@ const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
 /// Per-device utilization snapshot (pool observability).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceUtil {
+    /// Device name (`sim#1`, `cpu#0`).
     pub name: String,
+    /// What kind of device it is.
     pub kind: PoolDeviceKind,
     /// Jobs this device completed.
     pub jobs: u64,
@@ -58,6 +60,7 @@ pub struct DeviceUtil {
 /// Point-in-time pool metrics.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PoolMetrics {
+    /// One utilization snapshot per pool device.
     pub devices: Vec<DeviceUtil>,
 }
 
@@ -180,14 +183,17 @@ impl DevicePool {
         Ok(costs)
     }
 
+    /// Number of devices in the pool.
     pub fn device_count(&self) -> usize {
         self.names.len()
     }
 
+    /// Device names, in configuration order (`cpu#0`, `sim#1`, …).
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
+    /// Device kinds, in configuration order.
     pub fn kinds(&self) -> &[PoolDeviceKind] {
         &self.kinds
     }
@@ -197,10 +203,12 @@ impl DevicePool {
         &self.costs
     }
 
+    /// The configuration the pool was built from.
     pub fn config(&self) -> &MatexpConfig {
         &self.cfg
     }
 
+    /// Human-readable description of the pool's membership.
     pub fn platform(&self) -> String {
         let list: Vec<&str> = self.kinds.iter().map(|k| k.as_str()).collect();
         format!("device pool [{}] (cost-model splitter + work stealing)", list.join(", "))

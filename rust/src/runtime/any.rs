@@ -21,8 +21,11 @@ use crate::runtime::pjrt::PjrtBackend;
 
 /// One of the shipped backends, chosen at runtime.
 pub enum AnyBackend {
+    /// Pure-Rust CPU execution (the default).
     Cpu(CpuBackend),
+    /// The calibrated Tesla C2050 timing model.
     Sim(SimBackend),
+    /// AOT artifacts on PJRT (cargo feature `xla`).
     #[cfg(feature = "xla")]
     Pjrt(PjrtBackend),
 }
@@ -32,6 +35,7 @@ pub enum AnyBackend {
 pub enum AnyBuffer {
     /// CPU and simulator backends share the host buffer representation.
     Host(CpuBuffer),
+    /// A device-resident PJRT buffer.
     #[cfg(feature = "xla")]
     Pjrt(std::rc::Rc<xla::PjRtBuffer>),
 }
@@ -94,6 +98,7 @@ impl AnyBackend {
         }
     }
 
+    /// Which backend this instance is.
     pub fn kind(&self) -> BackendKind {
         match self {
             AnyBackend::Cpu(_) => BackendKind::Cpu,

@@ -52,6 +52,7 @@ pub struct BufferArena {
 }
 
 impl BufferArena {
+    /// An empty arena (no pooled allocations yet).
     pub fn new() -> BufferArena {
         BufferArena::default()
     }
@@ -127,10 +128,12 @@ pub struct ArenaMat {
 }
 
 impl ArenaMat {
+    /// The held matrix.
     pub fn matrix(&self) -> &Matrix {
         self.mat.as_ref().expect("present until drop")
     }
 
+    /// Mutable access to the held matrix (launch kernels write here).
     pub fn matrix_mut(&mut self) -> &mut Matrix {
         self.mat.as_mut().expect("present until drop")
     }

@@ -16,19 +16,33 @@ pub const SUPPORTED_MANIFEST_VERSION: u64 = 2;
 /// One artifact as recorded by aot.py.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Unique manifest name (e.g. `matmul_n256_f32_xla`).
     pub name: String,
+    /// Canonical op name ([`crate::runtime::KernelOp::name`] vocabulary).
     pub op: String,
+    /// Matrix side length the artifact was lowered for.
     pub n: usize,
+    /// Element dtype (`f32`).
     pub dtype: String,
+    /// Kernel variant (`xla` / `pallas`).
     pub variant: String,
+    /// Number of input buffers the executable takes.
     pub num_inputs: usize,
+    /// Number of output buffers it produces.
     pub num_outputs: usize,
+    /// HLO text filename relative to the artifact directory.
     pub file: String,
+    /// Tile block sizes, for tiled matmul entries.
     pub blocks: Option<Vec<usize>>,
+    /// Tile label, for tiled entries (`None` = the untiled default).
     pub tile: Option<String>,
+    /// Compiler-estimated VMEM footprint, bytes.
     pub vmem_bytes: Option<u64>,
+    /// Compiler-estimated MXU utilization (0..1).
     pub mxu_utilization: Option<f64>,
+    /// SHA-256 of the HLO text (integrity checks).
     pub sha256: String,
+    /// HLO text length in characters (size diagnostics).
     pub hlo_chars: u64,
 }
 
@@ -120,10 +134,12 @@ impl ArtifactRegistry {
         Ok(ArtifactRegistry { dir: dir.to_path_buf(), entries, by_key })
     }
 
+    /// The artifact directory this registry indexed.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Every manifest entry, in manifest order.
     pub fn entries(&self) -> &[ArtifactEntry] {
         &self.entries
     }
@@ -133,6 +149,7 @@ impl ArtifactRegistry {
         self.find_dtype(op, n, "f32", variant)
     }
 
+    /// Default (untiled) artifact for `(op, n, dtype, variant)`.
     pub fn find_dtype(
         &self,
         op: &str,

@@ -38,9 +38,13 @@ pub const FUSED_EXPM_POWERS: [u64; 5] = [64, 128, 256, 512, 1024];
 /// round-trip the 2-tuple through the host (2 D2H + 2 H2D — ablation A2's
 /// "bad arm"); the pure-Rust backends split in place for free.
 pub struct SplitPair<B> {
+    /// The pair's first half (`acc`).
     pub first: B,
+    /// The pair's second half (`base`).
     pub second: B,
+    /// Host→device transfers the split cost on this backend.
     pub h2d_transfers: usize,
+    /// Device→host transfers the split cost on this backend.
     pub d2h_transfers: usize,
 }
 

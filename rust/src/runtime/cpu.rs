@@ -31,7 +31,9 @@ use crate::runtime::op::KernelOp;
 /// never copy matrix data.
 #[derive(Clone, Debug)]
 pub enum CpuBuffer {
+    /// A single device-resident matrix.
     Mat(Rc<ArenaMat>),
+    /// A packed `[acc, base]` pair (independent `Rc` halves).
     Pair(Rc<ArenaMat>, Rc<ArenaMat>),
 }
 
@@ -63,10 +65,12 @@ pub struct CpuBackend {
 }
 
 impl CpuBackend {
+    /// A backend executing launches with the given matmul variant.
     pub fn new(algo: CpuAlgo) -> CpuBackend {
         CpuBackend { algo, matmul_into: algo.matmul_into(), arena: BufferArena::new() }
     }
 
+    /// The matmul variant this backend launches with.
     pub fn algo(&self) -> CpuAlgo {
         self.algo
     }

@@ -20,9 +20,16 @@
 //!
 //! Plus `Method::FusedArtifact` (whole `A^N` as a single launch) and
 //! `Method::PlanRoundtrip` (ablation A2's counterfactual). The legacy
-//! per-discipline entry points ([`Engine::expm`],
-//! [`Engine::expm_packed`], …) survive one release as `#[deprecated]`
-//! shims over the private strategy implementations.
+//! per-discipline entry points were removed in 0.4.0 after their
+//! one-release deprecation window; the old→new migration table lives in
+//! the crate docs ([`crate`]).
+//!
+//! Every `prepare` the engine issues goes through its per-backend
+//! [`crate::cache::PreparedSet`] (cache tier 2): a `(KernelOp, n)` pair
+//! that prepared successfully once is never re-prepared on this backend,
+//! so warm launches skip compile/validation work entirely. Only successes
+//! are recorded — an [`MatexpError::UnsupportedOp`] stays retryable,
+//! preserving warmup's optional-op policy.
 //!
 //! The engine is generic over the backend (static dispatch); use
 //! [`Engine::cpu`] / [`Engine::sim`] / [`Engine::from_config`] — or, with
@@ -30,6 +37,7 @@
 
 use std::time::Instant;
 
+use crate::cache::PreparedSet;
 use crate::error::{MatexpError, Result};
 use crate::linalg::expm::CpuAlgo;
 use crate::linalg::matrix::Matrix;
@@ -50,7 +58,9 @@ pub struct DeviceStats {
     /// Matrix multiplies this device performed (tile-level multiplies in
     /// sharded mode, so they can exceed the plan's logical count).
     pub multiplies: usize,
+    /// Host→device transfers this device performed.
     pub h2d_transfers: usize,
+    /// Device→host transfers this device performed.
     pub d2h_transfers: usize,
     /// Host-edge bytes this device's data path copied.
     pub bytes_copied: u64,
@@ -111,6 +121,9 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    /// Accumulate another execution's stats into this one (counters add;
+    /// the resident peak takes the max; per-device breakdowns fold by
+    /// device name).
     pub fn merge(&mut self, other: &ExecStats) {
         self.launches += other.launches;
         self.multiplies += other.multiplies;
@@ -138,6 +151,8 @@ impl ExecStats {
 /// Plan executor over one execution backend.
 pub struct Engine<B: Backend> {
     backend: B,
+    /// Tier-2 cache: `(op, n)` pairs this backend already prepared.
+    prepared: PreparedSet,
 }
 
 /// Engine on the default pure-Rust backend.
@@ -180,20 +195,43 @@ impl Engine<crate::runtime::pjrt::PjrtBackend> {
 }
 
 impl<B: Backend> Engine<B> {
+    /// Wrap a backend in a plan-replaying engine (fresh prepared cache).
     pub fn new(backend: B) -> Engine<B> {
-        Engine { backend }
+        Engine { backend, prepared: PreparedSet::new() }
     }
 
+    /// The underlying execution backend.
     pub fn backend(&self) -> &B {
         &self.backend
     }
 
+    /// Mutable access to the backend. Skipping the engine's prepare path
+    /// is fine — backends keep `prepare` idempotent — but state that
+    /// *invalidates* prepared executables must not be mutated this way.
     pub fn backend_mut(&mut self) -> &mut B {
         &mut self.backend
     }
 
+    /// Human-readable description of the execution substrate.
     pub fn platform(&self) -> String {
         self.backend.platform()
+    }
+
+    /// `Backend::prepare` behind the tier-2 prepared cache: a pair that
+    /// prepared successfully once on this backend is skipped thereafter.
+    /// Failures are NOT recorded, so optional ops stay retryable.
+    pub(crate) fn prepare_cached(&mut self, op: KernelOp, n: usize) -> Result<()> {
+        if self.prepared.check(op, n) {
+            return Ok(());
+        }
+        self.backend.prepare(op, n)?;
+        self.prepared.record(op, n);
+        Ok(())
+    }
+
+    /// Distinct `(op, n)` pairs prepared so far (diagnostics/tests).
+    pub fn prepared_ops(&self) -> usize {
+        self.prepared.len()
     }
 
     /// Start a timed region: reset the simulated clock and residency
@@ -248,10 +286,10 @@ impl<B: Backend> Engine<B> {
         const OPTIONAL: [KernelOp; 3] =
             [KernelOp::SqMul, KernelOp::SquareChain(2), KernelOp::SquareChain(4)];
         for op in REQUIRED {
-            self.backend.prepare(op, n)?;
+            self.prepare_cached(op, n)?;
         }
         for op in OPTIONAL {
-            match self.backend.prepare(op, n) {
+            match self.prepare_cached(op, n) {
                 Ok(()) | Err(MatexpError::UnsupportedOp(_)) => {}
                 Err(e) => return Err(e),
             }
@@ -293,7 +331,7 @@ impl<B: Backend> Engine<B> {
         if b.n() != n {
             return Err(MatexpError::Linalg("matmul size mismatch".into()));
         }
-        self.backend.prepare(KernelOp::Matmul, n)?;
+        self.prepare_cached(KernelOp::Matmul, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let ba = self.backend.upload(a.clone())?;
@@ -318,7 +356,7 @@ impl<B: Backend> Engine<B> {
             return Err(MatexpError::Plan("power must be >= 1".into()));
         }
         let n = a.n();
-        self.backend.prepare(KernelOp::Matmul, n)?; // compile outside the timed region
+        self.prepare_cached(KernelOp::Matmul, n)?; // compile outside the timed region
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let mut acc = a.clone();
@@ -344,9 +382,10 @@ impl<B: Backend> Engine<B> {
         plan.validate()?;
         let n = a.n();
         // prepare everything the plan needs before the timed region
+        // (warm engines skip this wholesale via the prepared cache)
         for step in &plan.steps {
             if let Some(op) = step.op() {
-                self.backend.prepare(op, n)?;
+                self.prepare_cached(op, n)?;
             }
         }
         let mut stats = ExecStats::default();
@@ -414,8 +453,8 @@ impl<B: Backend> Engine<B> {
         let n = a.n();
         // square{k} chains run as k singles and sqmul as matmul+square on
         // this path, so only the two base ops are needed
-        self.backend.prepare(KernelOp::Matmul, n)?;
-        self.backend.prepare(KernelOp::Square, n)?;
+        self.prepare_cached(KernelOp::Matmul, n)?;
+        self.prepare_cached(KernelOp::Square, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let mut regs: Vec<Option<Matrix>> = vec![None; plan.n_regs];
@@ -520,7 +559,7 @@ impl<B: Backend> Engine<B> {
     pub(crate) fn run_fused(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
         let n = a.n();
         let op = KernelOp::Expm(power);
-        self.backend.prepare(op, n)?;
+        self.prepare_cached(op, n)?;
         let mut stats = ExecStats::default();
         let t0 = self.begin_timed();
         let buf = self.backend.upload(a.clone())?;
@@ -531,54 +570,6 @@ impl<B: Backend> Engine<B> {
         stats.d2h_transfers += 1;
         self.end_timed(t0, &mut stats);
         Ok((result, stats))
-    }
-}
-
-/// Deprecated per-discipline entry points, kept as thin shims for one
-/// release. New code submits through the one execution surface:
-///
-/// ```
-/// use matexp::prelude::*;
-/// let a = Matrix::random_spectral(16, 0.95, 1);
-/// let resp = Engine::cpu(CpuAlgo::Ikj)
-///     .run(Submission::expm(a, 100).method(Method::OursPacked))
-///     .unwrap();
-/// assert!(resp.result.is_finite());
-/// ```
-impl<B: Backend> Engine<B> {
-    /// §4.3 device-resident plan replay.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `engine.run(Submission::expm(a, N).plan(plan))`")]
-    pub fn expm(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
-        self.run_plan(a, plan)
-    }
-
-    /// §4.2 naive per-launch round-trip loop.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `engine.run(Submission::expm(a, N).method(Method::NaiveGpu))`")]
-    pub fn expm_naive_roundtrip(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
-        self.run_naive_roundtrip(a, power)
-    }
-
-    /// Ablation A2's clone-per-launch counterfactual.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `engine.run(Submission::expm(a, N).method(Method::PlanRoundtrip).plan(plan))`")]
-    pub fn expm_plan_roundtrip(&mut self, a: &Matrix, plan: &Plan) -> Result<(Matrix, ExecStats)> {
-        self.run_plan_roundtrip(a, plan)
-    }
-
-    /// §4.3.8 packed-state bit loop.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `engine.run(Submission::expm(a, N).method(Method::OursPacked))`")]
-    pub fn expm_packed(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
-        self.run_packed(a, power)
-    }
-
-    /// Single-launch fused `expm{N}` artifact.
-    #[deprecated(since = "0.3.0", note = "submit through exec::Executor: \
-        `engine.run(Submission::expm(a, N).method(Method::FusedArtifact))`")]
-    pub fn expm_fused_artifact(&mut self, a: &Matrix, power: u64) -> Result<(Matrix, ExecStats)> {
-        self.run_fused(a, power)
     }
 }
 
@@ -714,23 +705,22 @@ mod tests {
         assert!(e.run_fused(&a, 65).is_err());
     }
 
-    /// The one-release deprecation window: the legacy entry points still
-    /// execute (they are thin shims over the strategy impls).
+    /// Tier-2 prepared cache: a warm engine never re-prepares, and the
+    /// skip is observable through the per-engine counters.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_execute() {
+    fn prepared_cache_skips_warm_prepares() {
         let mut e = Engine::cpu(CpuAlgo::Naive);
-        let a = Matrix::random_spectral(8, 0.9, 11);
-        let want = oracle(&a, 20);
-        let (got, _) = e.expm(&a, &Plan::binary(20, false)).unwrap();
-        assert!(got.approx_eq(&want, 1e-4, 1e-4));
-        let (got, _) = e.expm_packed(&a, 20).unwrap();
-        assert!(got.approx_eq(&want, 1e-4, 1e-4));
-        let (got, _) = e.expm_naive_roundtrip(&a, 20).unwrap();
-        assert!(got.approx_eq(&want, 1e-4, 1e-4));
-        let (got, _) = e.expm_plan_roundtrip(&a, &Plan::binary(20, false)).unwrap();
-        assert!(got.approx_eq(&want, 1e-4, 1e-4));
-        assert!(e.expm_fused_artifact(&a, 64).is_ok());
+        assert_eq!(e.prepared_ops(), 0);
+        e.warmup(8).unwrap();
+        let after_first = e.prepared_ops();
+        assert!(after_first >= 6, "all required ops recorded: {after_first}");
+        let cold_misses = e.prepared.misses();
+        e.warmup(8).unwrap();
+        assert_eq!(e.prepared.misses(), cold_misses, "second warmup prepares nothing new");
+        assert!(e.prepared.hits() >= 6, "warm warmup is all hits");
+        // a new size is cold again
+        e.warmup(16).unwrap();
+        assert!(e.prepared_ops() > after_first);
     }
 
     /// Backend wrapper that fails `prepare` for [`KernelOp::SqMul`] with a

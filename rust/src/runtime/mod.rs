@@ -60,6 +60,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Canonical lowercase name (CLI/config vocabulary).
     pub fn as_str(self) -> &'static str {
         match self {
             BackendKind::Cpu => "cpu",
@@ -69,6 +70,7 @@ impl BackendKind {
         }
     }
 
+    /// Every backend kind, for exhaustive parsing/tests.
     pub fn all() -> [BackendKind; 4] {
         [BackendKind::Cpu, BackendKind::Sim, BackendKind::Pjrt, BackendKind::Pool]
     }
@@ -105,6 +107,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Canonical lowercase name (CLI/config/manifest vocabulary).
     pub fn as_str(self) -> &'static str {
         match self {
             Variant::Xla => "xla",

@@ -49,6 +49,7 @@ impl PjrtBackend {
         Ok(PjrtBackend { client, variant, info, exes: HashMap::new() })
     }
 
+    /// Which kernel variant's artifacts this backend executes.
     pub fn variant(&self) -> Variant {
         self.variant
     }

@@ -45,6 +45,7 @@ impl SimBackend {
         SimBackend::new(GpuTimingModel::from_spec(DeviceSpec::tesla_c2050()))
     }
 
+    /// The timing model this backend advances its clock with.
     pub fn model(&self) -> &GpuTimingModel {
         &self.model
     }

@@ -50,6 +50,7 @@ impl PendingExpm {
 }
 
 impl MatexpClient {
+    /// Connect to a `matexp serve` endpoint (`host:port`).
     pub fn connect(addr: &str) -> Result<MatexpClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?; // request lines must not sit in Nagle's buffer

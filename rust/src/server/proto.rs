@@ -21,8 +21,10 @@ use crate::util::json::{write_f32_array, Json};
 /// replies in whatever encoding the request used.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Payload {
+    /// Readable JSON `f32` arrays — the default.
     #[default]
     Json,
+    /// Little-endian f32 bytes, base64-packed (compact and bit-exact).
     Base64,
 }
 
@@ -37,11 +39,17 @@ pub enum WireRequest {
     /// arrive out of submission order). When absent (legacy one-shot
     /// peers), the server answers in order before reading further.
     Expm {
+        /// Matrix side length.
         n: usize,
+        /// The exponent `N`.
         power: u64,
+        /// Execution method the server should use.
         method: Method,
+        /// Row-major operand, length `n * n`.
         matrix: Vec<f32>,
+        /// How `matrix` travels on the wire (the reply mirrors it).
         payload: Payload,
+        /// Client-chosen request id (pipelining), if any.
         id: Option<u64>,
     },
     /// Service metrics snapshot.
@@ -53,24 +61,34 @@ pub enum WireRequest {
 /// One device's share of a pooled execution, on the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireDeviceStats {
+    /// Device name (`sim#1`, `cpu#0`).
     pub device: String,
+    /// Kernel launches this device performed.
     pub launches: usize,
+    /// Matrix multiplies this device performed.
     pub multiplies: usize,
+    /// Host→device transfers this device performed.
     pub h2d_transfers: usize,
+    /// Device→host transfers this device performed.
     pub d2h_transfers: usize,
     /// Host-edge bytes this device's data path copied.
     pub bytes_copied: u64,
     /// Launch outputs served from recycled arena buffers.
     pub buffers_recycled: u64,
+    /// Seconds this device was busy (simulated on timing-model devices).
     pub wall_s: f64,
 }
 
 /// Stats subset that crosses the wire.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireStats {
+    /// Kernel launches of the whole execution.
     pub launches: usize,
+    /// Matrix multiplies performed.
     pub multiplies: usize,
+    /// Host→device matrix transfers.
     pub h2d_transfers: usize,
+    /// Device→host matrix transfers.
     pub d2h_transfers: usize,
     /// Host-edge bytes the data path copied (two edge transfers on the
     /// device-resident disciplines; O(launches·n²) on clone-per-launch).
@@ -79,6 +97,7 @@ pub struct WireStats {
     pub buffers_recycled: u64,
     /// High-water mark of resident device-buffer bytes.
     pub peak_resident_bytes: u64,
+    /// Wall-clock seconds (simulated on timing-model backends).
     pub wall_s: f64,
     /// Per-device breakdown (empty off the pool backend).
     pub per_device: Vec<WireDeviceStats>,
@@ -114,6 +133,7 @@ impl From<ExecStats> for WireStats {
 }
 
 impl WireStats {
+    /// Serialize into the response line's `stats` object.
     pub fn to_json(&self) -> Json {
         let per_device: Vec<Json> = self
             .per_device
@@ -144,6 +164,8 @@ impl WireStats {
         ]
     }
 
+    /// Decode a response line's `stats` object (legacy-tolerant: fields
+    /// newer peers add decode to zero/empty).
     pub fn from_json(v: &Json) -> Result<WireStats> {
         let want = |name: &str| -> Result<&Json> {
             v.get(name)
@@ -199,9 +221,14 @@ impl WireStats {
 /// One response line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireResponse {
+    /// A successful reply (`"status":"ok"`); which payload fields are
+    /// present depends on the request (`expm` / `metrics` / `ping`).
     Ok {
+        /// Row-major result matrix, for `expm` replies.
         result: Option<Vec<f32>>,
+        /// Execution stats, for `expm` replies.
         stats: Option<WireStats>,
+        /// Metrics snapshot JSON, for `metrics` replies.
         metrics: Option<Json>,
         /// How `result` is encoded on the wire (mirrors the request).
         payload: Payload,
@@ -209,7 +236,9 @@ pub enum WireResponse {
         /// only; legacy one-shot responses carry none).
         id: Option<u64>,
     },
+    /// A failed reply (`"status":"error"`).
     Error {
+        /// Human-readable error text.
         message: String,
         /// Machine-readable error class (`admission` = fix your request,
         /// `deadline` = retry with a looser deadline, `config`,
@@ -310,6 +339,7 @@ impl WireRequest {
 }
 
 impl WireResponse {
+    /// Build the reply line for a served `expm` request.
     pub fn from_expm(resp: &ExpmResponse, payload: Payload) -> WireResponse {
         WireResponse::Ok {
             result: Some(resp.result.data().to_vec()),
@@ -320,6 +350,7 @@ impl WireResponse {
         }
     }
 
+    /// A generic service-kind error line.
     pub fn error(msg: impl Into<String>) -> WireResponse {
         WireResponse::Error { message: msg.into(), kind: "service".into(), id: None }
     }
@@ -345,6 +376,7 @@ impl WireResponse {
         }
     }
 
+    /// The empty-ok reply to a `ping`.
     pub fn pong() -> WireResponse {
         WireResponse::Ok {
             result: None,

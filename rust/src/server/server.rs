@@ -29,6 +29,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// The address the listener actually bound (tests bind port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
     }

@@ -13,8 +13,11 @@ use crate::simulator::timing::GpuTimingModel;
 /// One published observation: naive-GPU wall time for (n, power).
 #[derive(Clone, Copy, Debug)]
 pub struct Observation {
+    /// Matrix side length.
     pub n: usize,
+    /// Exponent `N` of the observed run.
     pub power: u64,
+    /// Published wall-clock seconds for the naive-GPU run.
     pub seconds: f64,
 }
 

@@ -3,11 +3,13 @@
 /// Static description of a compute device.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceSpec {
+    /// Marketing name ("NVIDIA Tesla C2050").
     pub name: String,
     /// Streaming multiprocessors ("Number of Processors" in Table 1).
     pub processors: u32,
     /// Total cores.
     pub cores: u32,
+    /// Cores per streaming multiprocessor.
     pub cores_per_processor: u32,
     /// Shader clock, MHz.
     pub clock_mhz: u32,
@@ -15,6 +17,7 @@ pub struct DeviceSpec {
     pub core_clock_mhz: u32,
     /// Device memory bandwidth, GB/s.
     pub bandwidth_gbs: f64,
+    /// Memory bus type ("GDDR5" in Table 1).
     pub bus_type: String,
     /// Peak single-precision GFLOP/s as reported by the vendor/paper.
     pub peak_gflops: f64,

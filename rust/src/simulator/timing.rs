@@ -19,6 +19,7 @@ use crate::simulator::device::DeviceSpec;
 /// Calibrated analytic model for one device.
 #[derive(Clone, Debug)]
 pub struct GpuTimingModel {
+    /// The modeled device's spec sheet (Table 1).
     pub device: DeviceSpec,
     /// Fixed cost per kernel launch, seconds (driver + dispatch).
     pub launch_overhead_s: f64,
@@ -48,11 +49,17 @@ pub struct GpuTimingModel {
 /// Predicted timing breakdown for executing a plan.
 #[derive(Clone, Copy, Debug)]
 pub struct SimReport {
+    /// Predicted wall-clock seconds, all components summed.
     pub total_s: f64,
+    /// Launch-dispatch (and session) overhead seconds.
     pub overhead_s: f64,
+    /// Host↔device transfer seconds.
     pub transfer_s: f64,
+    /// Roofline kernel-compute seconds.
     pub kernel_s: f64,
+    /// Kernel launches the plan performs.
     pub launches: usize,
+    /// Matrix multiplies across those launches.
     pub multiplies: usize,
 }
 

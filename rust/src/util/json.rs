@@ -20,13 +20,19 @@ use std::fmt::Write as _;
 /// element-wise-equal `Arr` compare equal (see the manual `PartialEq`).
 #[derive(Clone, Debug)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// A boxed (mixed-type) array.
     Arr(Vec<Json>),
     /// Packed all-numeric array (matrix payloads).
     NumArr(Vec<f64>),
+    /// An object (sorted keys — deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -53,7 +59,9 @@ impl PartialEq for Json {
 /// Parse error with the byte offset where parsing failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset where parsing failed.
     pub offset: usize,
+    /// What went wrong there.
     pub message: String,
 }
 
@@ -65,6 +73,7 @@ impl std::fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Result alias over [`JsonError`].
 pub type JsonResult<T> = std::result::Result<T, JsonError>;
 
 // ---------------------------------------------------------------- access
@@ -83,6 +92,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The boolean, for `Bool` values.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -90,6 +100,7 @@ impl Json {
         }
     }
 
+    /// The number, for `Num` values.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -97,6 +108,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, when it is one exactly.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
@@ -106,10 +118,12 @@ impl Json {
         }
     }
 
+    /// [`Json::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// The string, for `Str` values.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -154,6 +168,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, for `Obj` values.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -166,6 +181,7 @@ impl Json {
         self.as_obj().and_then(|m| m.get(key))
     }
 
+    /// `true` for the `Null` value.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }

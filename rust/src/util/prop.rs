@@ -50,6 +50,7 @@ impl Gen {
         v
     }
 
+    /// Uniform integer in `[lo, hi]` (inclusive), as `usize`.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.u64(lo as u64, hi as u64) as usize
     }
@@ -67,6 +68,7 @@ impl Gen {
         &items[self.usize(0, items.len() - 1)]
     }
 
+    /// A fair coin flip (shrinks toward `false`).
     pub fn bool(&mut self) -> bool {
         self.u64(0, 1) == 1
     }

@@ -24,6 +24,7 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path (removed recursively on drop).
     pub fn path(&self) -> &Path {
         &self.path
     }

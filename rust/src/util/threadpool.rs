@@ -45,6 +45,7 @@ impl ThreadPool {
             .expect("pool workers alive");
     }
 
+    /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }

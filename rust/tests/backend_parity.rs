@@ -6,11 +6,12 @@
 //! Row-stochastic inputs keep every power well-conditioned (spectral
 //! radius exactly 1), so the comparison is meaningful even at N=1024
 //! where a contractive matrix would collapse to zero.
+//!
+//! Everything routes through the one execution surface
+//! (`exec::Executor::submit` with explicit plan overrides) — the
+//! deprecated `expm_*` shims were removed in 0.4.0.
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
+use matexp::exec::{Executor, Submission};
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::plan::Plan;
 use matexp::runtime::{CpuEngine, Engine};
@@ -41,6 +42,11 @@ fn engine() -> CpuEngine {
     Engine::cpu(CpuAlgo::Ikj)
 }
 
+/// Replay an explicit plan through the execution surface.
+fn replay(e: &mut CpuEngine, a: &Matrix, power: u64, plan: Plan) -> Matrix {
+    e.run(Submission::expm(a.clone(), power).plan(plan)).expect("replay").result
+}
+
 #[test]
 fn binary_plan_parity() {
     let mut e = engine();
@@ -48,7 +54,7 @@ fn binary_plan_parity() {
         let a = input(n);
         for power in POWERS {
             let want = oracle(&a, power);
-            let (got, _) = e.expm(&a, &Plan::binary(power, false)).unwrap();
+            let got = replay(&mut e, &a, power, Plan::binary(power, false));
             check("binary", n, power, &got, &want);
         }
     }
@@ -61,7 +67,7 @@ fn fused_binary_plan_parity() {
         let a = input(n);
         for power in POWERS {
             let want = oracle(&a, power);
-            let (got, _) = e.expm(&a, &Plan::binary(power, true)).unwrap();
+            let got = replay(&mut e, &a, power, Plan::binary(power, true));
             check("binary-fused", n, power, &got, &want);
         }
     }
@@ -74,7 +80,7 @@ fn chained_plan_parity() {
         let a = input(n);
         for power in POWERS {
             let want = oracle(&a, power);
-            let (got, _) = e.expm(&a, &Plan::chained(power, &[4, 2])).unwrap();
+            let got = replay(&mut e, &a, power, Plan::chained(power, &[4, 2]));
             check("chained", n, power, &got, &want);
         }
     }
@@ -87,7 +93,7 @@ fn addition_chain_plan_parity() {
         let a = input(n);
         for power in POWERS {
             let want = oracle(&a, power);
-            let (got, _) = e.expm(&a, &Plan::addition_chain(power)).unwrap();
+            let got = replay(&mut e, &a, power, Plan::addition_chain(power));
             check("addition-chain", n, power, &got, &want);
         }
     }
@@ -102,7 +108,7 @@ fn naive_plan_parity() {
             // the naive plan replays the oracle's own multiply chain
             // (`expm_naive`), so compare against that form directly
             let want = linalg::expm::expm_naive(&a, power, CpuAlgo::Ikj).unwrap();
-            let (got, _) = e.expm(&a, &Plan::naive(power)).unwrap();
+            let got = replay(&mut e, &a, power, Plan::naive(power));
             check("naive", n, power, &got, &want);
             // and the binary oracle agrees too (different association
             // order, so only to tolerance)
@@ -113,12 +119,16 @@ fn naive_plan_parity() {
 
 #[test]
 fn packed_discipline_parity() {
+    use matexp::coordinator::request::Method;
     let mut e = engine();
     for n in SIZES {
         let a = input(n);
         for power in POWERS {
             let want = oracle(&a, power);
-            let (got, _) = e.expm_packed(&a, power).unwrap();
+            let got = e
+                .run(Submission::expm(a.clone(), power).method(Method::OursPacked))
+                .expect("packed")
+                .result;
             check("packed", n, power, &got, &want);
         }
     }
@@ -134,7 +144,7 @@ fn parity_holds_across_matmul_variants() {
             let a = input(n);
             for power in [13u64, 100] {
                 let want = oracle(&a, power);
-                let (got, _) = e.expm(&a, &Plan::binary(power, false)).unwrap();
+                let got = replay(&mut e, &a, power, Plan::binary(power, false));
                 assert!(
                     got.approx_eq(&want, 1e-4, 1e-4),
                     "algo {} n={n} N={power}: max diff {}",

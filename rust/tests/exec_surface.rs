@@ -3,9 +3,10 @@
 //! 1. **Parity** — the SAME `Submission` served by `Engine<B>`,
 //!    `PoolEngine` and `ServiceHandle` (all as `dyn Executor`) matches
 //!    the `linalg::expm` oracle at 1e-5.
-//! 2. **No stragglers** — a source grep over `src/` asserting no caller
-//!    outside `runtime/engine.rs` invokes the deprecated `expm_*` entry
-//!    points: the crate itself routes everything through the surface.
+//! 2. **No stragglers** — a source grep over `src/` asserting the 0.3.x
+//!    entry points removed in 0.4.0 (`expm_*`, blocking `submit`) are
+//!    neither called nor redeclared: everything routes through the
+//!    surface.
 //! 3. **Capabilities** — each executor truthfully reports what it is.
 
 use std::path::{Path, PathBuf};
@@ -126,22 +127,29 @@ fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-/// The deprecation window is real: inside this crate, NOTHING outside
-/// `runtime/engine.rs` (where the shims live) calls the deprecated
-/// `expm_*` entry points — every src-tree caller routes through
-/// `exec::Executor::submit` / the crate-internal strategy dispatch.
+/// The deprecation window CLOSED in 0.4.0: the `expm_*` shims and the
+/// blocking `ServiceHandle::submit` are gone, nothing in `src/` calls
+/// (or redeclares) them, and no `#[deprecated]` item lingers — every
+/// caller routes through `exec::Executor::submit` / the crate-internal
+/// strategy dispatch.
 #[test]
-fn no_src_caller_uses_deprecated_expm_entry_points() {
+fn removed_entry_points_stay_removed() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
     let mut files = Vec::new();
     rust_sources(&root, &mut files);
     assert!(files.len() > 40, "source walker looks broken: {} files", files.len());
-    const FORBIDDEN: [&str; 5] = [
+    // call sites AND declarations of the removed entry points
+    const FORBIDDEN: [&str; 10] = [
         ".expm(",
         ".expm_packed(",
         ".expm_naive_roundtrip(",
         ".expm_plan_roundtrip(",
         ".expm_fused_artifact(",
+        "fn expm_packed(",
+        "fn expm_naive_roundtrip(",
+        "fn expm_plan_roundtrip(",
+        "fn expm_fused_artifact(",
+        "#[deprecated",
     ];
     for file in files {
         let rel = file
@@ -149,9 +157,6 @@ fn no_src_caller_uses_deprecated_expm_entry_points() {
             .expect("under src/")
             .to_string_lossy()
             .replace('\\', "/");
-        if rel == "runtime/engine.rs" {
-            continue; // the shims and their own regression tests
-        }
         if rel == "lib.rs" {
             continue; // the crate docs carry the old→new migration table
         }
@@ -159,7 +164,7 @@ fn no_src_caller_uses_deprecated_expm_entry_points() {
         for needle in FORBIDDEN {
             assert!(
                 !src.contains(needle),
-                "{rel} calls a deprecated expm_* entry point ({needle:?}) — \
+                "{rel} reintroduces a removed 0.3.x entry point ({needle:?}) — \
                  route through exec::Executor::submit / Submission"
             );
         }

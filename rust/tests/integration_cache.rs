@@ -1,0 +1,323 @@
+//! Acceptance tests for the multi-tier caching subsystem (ISSUE 5):
+//!
+//! 1. **A6 speedups, asserted** — plan-warm setup ≥ 1.2× faster than
+//!    cold at n=1024 (measured, execution elided), and result-warm
+//!    serving ≥ 10× faster than cold (measured end-to-end on a real
+//!    engine; plus the modeled-cold comparison at n=1024 with a
+//!    debug-profile-relaxed floor).
+//! 2. **Correctness** — warm-path results are BIT-identical to cold-path
+//!    results across all three config-driven executors; the result cache
+//!    never serves across differing tolerance buckets; bypass/refresh do
+//!    what they say.
+//! 3. **Eviction** — the byte budget holds under proptest-random
+//!    insert/get sequences, checked against an exact LRU model.
+//! 4. **Observability** — hit/miss/eviction counters ride the service
+//!    metrics (and thus the wire's `metrics` JSON).
+
+use matexp::cache::{CacheControl, ResultCache, ResultKey};
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::{ExpmResponse, Method};
+use matexp::coordinator::service::Service;
+use matexp::coordinator::worker;
+use matexp::error::Result;
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+use matexp::pool::{PoolDeviceKind, PoolEngine};
+use matexp::runtime::BackendKind;
+use matexp::util::prop::property;
+use matexp::experiments::ablations;
+
+/// A config with result caching enabled (the default budget, so parallel
+/// tests never evict each other's distinctly-keyed entries).
+fn caching_cfg() -> MatexpConfig {
+    let mut cfg = MatexpConfig::default();
+    cfg.cache.results = true;
+    cfg.cpu_algo = CpuAlgo::Ikj;
+    cfg.batcher.max_wait_ms = 1;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// A6 acceptance: the speedup floors
+// ---------------------------------------------------------------------------
+
+/// Plan-warm ≥ 1.2× faster than cold at n=1024 — measured on the setup
+/// path (planner + prepare, execution elided; the execution itself is
+/// identical in both arms by construction).
+#[test]
+fn a6_plan_warm_setup_beats_cold_at_n1024() {
+    let arms = ablations::cache_setup_arms(1024, 1024, 3000);
+    let (cold, warm) = (&arms[0], &arms[1]);
+    let speedup = cold.wall_s / warm.wall_s.max(f64::MIN_POSITIVE);
+    assert!(
+        speedup >= 1.2,
+        "plan-warm setup must be >= 1.2x faster than cold at n=1024: {speedup:.2}x \
+         (cold {:.6}s vs warm {:.6}s over 3000 requests)",
+        cold.wall_s,
+        warm.wall_s
+    );
+}
+
+/// Result-warm ≥ 10× faster than cold, measured end-to-end on a real
+/// engine (cold = fresh engine + CacheControl::Bypass; warm = second
+/// identical request served from the cache). n=96/power=512 keeps the
+/// cold run debug-feasible; the ratio only grows with n (O(n³·log N)
+/// execution avoided vs O(n²) digest + copy paid).
+#[test]
+fn a6_result_warm_serves_10x_faster_measured() {
+    let cfg = caching_cfg();
+    let arms = ablations::cache_engine_arms(&cfg, 96, 512).unwrap();
+    let get = |name: &str| arms.iter().find(|a| a.name == name).unwrap();
+    let (cold, warm) = (get("cold"), get("result-warm"));
+    assert_eq!(warm.launches, 0, "warm serve must not touch a device");
+    let speedup = cold.wall_s / warm.wall_s.max(f64::MIN_POSITIVE);
+    assert!(
+        speedup >= 10.0,
+        "result-warm must be >= 10x faster than cold: {speedup:.1}x \
+         (cold {:.6}s vs warm {:.6}s)",
+        cold.wall_s,
+        warm.wall_s
+    );
+}
+
+/// The n=1024 result-tier arms: measured warm serve vs the modeled
+/// calibrated-C2050 cold execution (the repro's yardstick for 2012
+/// device time). Release builds assert the full 10× criterion; debug
+/// builds relax the floor (the 4 MiB content digest is ~10× slower
+/// unoptimized while the modeled cold side is constant) — the release
+/// tier-1 CI job enforces the real floor.
+#[test]
+fn a6_result_tier_modeled_cold_vs_measured_warm_at_n1024() {
+    let arms = ablations::cache_result_arms(1024, 1024, 42);
+    let (cold, warm) = (&arms[0], &arms[1]);
+    let speedup = cold.wall_s / warm.wall_s.max(f64::MIN_POSITIVE);
+    let floor = if cfg!(debug_assertions) { 2.0 } else { 10.0 };
+    assert!(
+        speedup >= floor,
+        "result-warm serving must be >= {floor}x faster than the modeled cold \
+         execution at n=1024: {speedup:.1}x (cold {:.6}s vs warm {:.6}s)",
+        cold.wall_s,
+        warm.wall_s
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Correctness: bit-identical warm paths, tolerance-bucket isolation
+// ---------------------------------------------------------------------------
+
+/// The same submission served twice through every config-driven executor:
+/// the second (warm) response is BIT-identical to the first (cold) one
+/// and performed zero launches.
+#[test]
+fn warm_results_bit_identical_across_all_three_executors() {
+    let cfg = caching_cfg();
+
+    let mut pool_cfg = caching_cfg();
+    pool_cfg.backend = BackendKind::Pool;
+    pool_cfg.pool.devices = vec![PoolDeviceKind::Cpu, PoolDeviceKind::Cpu];
+
+    let mut service_cfg = caching_cfg();
+    service_cfg.workers = 2;
+
+    // distinct seeds per executor: each runs its own cold pass even
+    // though the three share the process-wide cache
+    let run_twice =
+        |executor: &mut dyn Executor, seed: u64| -> (ExpmResponse, ExpmResponse, Matrix) {
+            let a = Matrix::random_spectral(24, 0.95, seed);
+            let want = linalg::expm::expm(&a, 100, CpuAlgo::Ikj).expect("oracle");
+            let cold = executor.run(Submission::expm(a.clone(), 100)).expect("cold run");
+            let warm = executor.run(Submission::expm(a, 100)).expect("warm run");
+            (cold, warm, want)
+        };
+
+    let mut engine = worker::build_worker_engine(&cfg, None).expect("engine");
+    let mut pool = PoolEngine::from_config(&pool_cfg).expect("pool");
+    let mut service = Service::start(service_cfg).expect("service");
+    let executors: [(&str, &mut dyn Executor, u64); 3] = [
+        ("engine", &mut engine, 1001),
+        ("pool", &mut pool, 1002),
+        ("service", &mut service, 1003),
+    ];
+    for (name, executor, seed) in executors {
+        let (cold, warm, want) = run_twice(executor, seed);
+        assert!(cold.stats.launches > 0, "{name}: cold run must execute");
+        assert_eq!(warm.stats.launches, 0, "{name}: warm run must be served from cache");
+        assert_eq!(warm.stats.multiplies, 0, "{name}");
+        assert_eq!(
+            warm.result, cold.result,
+            "{name}: warm result must be bit-identical to the cold one"
+        );
+        assert_eq!(warm.plan_kind, cold.plan_kind, "{name}: plan_kind echoed");
+        // and the cached answer is right, not just self-consistent
+        assert!(
+            cold.result.approx_eq(&want, 1e-3, 1e-3),
+            "{name}: cold result diverges from the oracle by {}",
+            cold.result.max_abs_diff(&want)
+        );
+    }
+}
+
+/// The result cache never serves across differing tolerance buckets: a
+/// request with a different order-of-magnitude tolerance re-executes.
+#[test]
+fn result_cache_never_serves_across_tolerance_buckets() {
+    let cfg = caching_cfg();
+    let mut engine = worker::build_worker_engine(&cfg, None).expect("engine");
+    let a = Matrix::random_spectral(16, 0.9, 2001);
+    let run = |engine: &mut worker::WorkerEngine, tol: Option<f32>| -> Result<ExpmResponse> {
+        let mut sub = Submission::expm(a.clone(), 64);
+        if let Some(t) = tol {
+            sub = sub.tolerance(t);
+        }
+        engine.run(sub)
+    };
+    // cold at tolerance 1e-3, warm at the same bucket (2e-3 is the same
+    // decade)
+    assert!(run(&mut engine, Some(1e-3)).unwrap().stats.launches > 0);
+    assert_eq!(run(&mut engine, Some(2e-3)).unwrap().stats.launches, 0, "same bucket serves");
+    // a different decade is a different bucket: must re-execute
+    assert!(
+        run(&mut engine, Some(1e-5)).unwrap().stats.launches > 0,
+        "tighter tolerance bucket must not be served from the looser one"
+    );
+    // and no-tolerance is its own bucket
+    assert!(run(&mut engine, None).unwrap().stats.launches > 0);
+    assert_eq!(run(&mut engine, None).unwrap().stats.launches, 0);
+}
+
+/// Bypass never reads or writes; Refresh re-executes and overwrites.
+#[test]
+fn bypass_and_refresh_semantics_through_the_surface() {
+    let cfg = caching_cfg();
+    let mut engine = worker::build_worker_engine(&cfg, None).expect("engine");
+    let a = Matrix::random_spectral(16, 0.9, 3001);
+    let sub = |ctl: CacheControl| Submission::expm(a.clone(), 64).cache(ctl);
+
+    // two bypass runs: both execute, nothing stored
+    assert!(engine.run(sub(CacheControl::Bypass)).unwrap().stats.launches > 0);
+    assert!(engine.run(sub(CacheControl::Bypass)).unwrap().stats.launches > 0);
+    // Use after bypass-only traffic: still cold (bypass stored nothing)
+    assert!(engine.run(sub(CacheControl::Use)).unwrap().stats.launches > 0);
+    assert_eq!(engine.run(sub(CacheControl::Use)).unwrap().stats.launches, 0);
+    // Refresh re-executes even though a warm entry exists…
+    assert!(engine.run(sub(CacheControl::Refresh)).unwrap().stats.launches > 0);
+    // …and leaves a servable (overwritten) entry behind
+    assert_eq!(engine.run(sub(CacheControl::Use)).unwrap().stats.launches, 0);
+}
+
+/// An explicit plan override opts out of the result tier entirely: the
+/// pinned replay always executes, and is never served to others.
+#[test]
+fn plan_overrides_never_touch_the_result_cache() {
+    use matexp::plan::Plan;
+    let cfg = caching_cfg();
+    let mut engine = worker::build_worker_engine(&cfg, None).expect("engine");
+    let a = Matrix::random_spectral(16, 0.9, 4001);
+    for _ in 0..2 {
+        let resp = engine
+            .run(Submission::expm(a.clone(), 64).plan(Plan::binary(64, false)))
+            .unwrap();
+        assert!(resp.stats.launches > 0, "pinned-plan runs always execute");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eviction: byte budget under random traffic, vs an exact LRU model
+// ---------------------------------------------------------------------------
+
+/// Byte-budget eviction under proptest-random insert/get sequences: the
+/// cache's live set and byte total match an exact LRU model at every
+/// step, and the budget is never exceeded.
+#[test]
+fn eviction_respects_byte_budget_under_random_traffic() {
+    property("result cache == LRU model", 60, |g| {
+        // tiny matrices so entry bytes (n²·4) vary: n in 2..6 → 16..100 B
+        let budget = g.u64(32, 512);
+        let cache = ResultCache::new(budget);
+        // model: (key-seed, bytes, last-used tick), most fields mirrored
+        let mut model: Vec<(u64, u64, u64)> = Vec::new();
+        let mut tick = 0u64;
+        let keyed = |seed: u64| {
+            let n = 2 + (seed % 5) as usize; // deterministic size per seed
+            let m = Matrix::random(n, seed);
+            (ResultKey::for_parts(&m, 8, Method::Ours, None), m)
+        };
+        for _ in 0..g.usize(1, 60) {
+            let seed = g.u64(1, 12);
+            let (key, m) = keyed(seed);
+            let bytes = (m.n() * m.n() * 4) as u64;
+            tick += 1;
+            if g.bool() {
+                // insert
+                cache.insert(key, &m, Method::Ours, None);
+                if bytes <= budget {
+                    model.retain(|&(s, _, _)| s != seed);
+                    model.push((seed, bytes, tick));
+                    // evict LRU until the budget holds
+                    while model.iter().map(|&(_, b, _)| b).sum::<u64>() > budget {
+                        let oldest = model
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, &(_, _, t))| t)
+                            .map(|(i, _)| i)
+                            .unwrap();
+                        model.remove(oldest);
+                    }
+                }
+            } else {
+                // get refreshes recency on a hit
+                let hit = cache.get(&key);
+                let modeled = model.iter_mut().find(|e| e.0 == seed);
+                match (&hit, &modeled) {
+                    (Some(_), Some(_)) | (None, None) => {}
+                    other => panic!("cache/model diverge for seed {seed}: {other:?}"),
+                }
+                if let Some(entry) = modeled {
+                    entry.2 = tick;
+                }
+                if let Some(h) = hit {
+                    assert_eq!(h.result, m, "served payload is bit-identical");
+                }
+            }
+            // invariants after every operation
+            let model_bytes: u64 = model.iter().map(|&(_, b, _)| b).sum();
+            assert_eq!(cache.bytes(), model_bytes, "byte accounting mirrors the model");
+            assert_eq!(cache.len(), model.len(), "entry count mirrors the model");
+            assert!(cache.bytes() <= budget, "budget never exceeded");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Observability: counters on the service metrics path
+// ---------------------------------------------------------------------------
+
+/// Cache counters are visible in the service metrics snapshot and its
+/// JSON (the same object the TCP `metrics` endpoint ships).
+#[test]
+fn cache_counters_visible_in_service_metrics() {
+    let mut cfg = caching_cfg();
+    cfg.workers = 1;
+    let service = Service::start(cfg).expect("service");
+    let a = Matrix::random_spectral(16, 0.9, 5001);
+    let before = service.metrics().cache.clone();
+    for _ in 0..2 {
+        service
+            .submit_job(Submission::expm(a.clone(), 32))
+            .expect("submit")
+            .wait()
+            .expect("served");
+    }
+    let after = service.metrics().cache.clone();
+    assert!(
+        after.result_hits > before.result_hits,
+        "the second identical request must count a result hit: {before:?} -> {after:?}"
+    );
+    assert!(after.result_inserts > before.result_inserts);
+    assert!(after.plan_hits + after.plan_misses > 0);
+    let j = service.metrics().to_json().to_string();
+    for field in ["result_hits", "result_misses", "result_evictions", "plan_hits", "prepared_hits"]
+    {
+        assert!(j.contains(field), "{field} missing from metrics json: {j}");
+    }
+}

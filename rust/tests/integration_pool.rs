@@ -3,11 +3,9 @@
 //! per-device utilization, and the pool scaling experiment's acceptance
 //! criteria. Runs unconditionally (cpu + sim devices need no hardware).
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
 use std::sync::Arc;
+
+use matexp::exec::Submission;
 
 use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
@@ -37,7 +35,11 @@ fn pool_service_serves_correct_results_with_device_breakdowns() {
     for seed in 1..=6u64 {
         let a = Matrix::random_spectral(16, 0.9, seed);
         let want = linalg::expm::expm(&a, 50, CpuAlgo::Ikj).unwrap();
-        let resp = service.submit(a, 50, Method::Ours).unwrap();
+        let resp = service
+            .submit_job(Submission::expm(a, 50).method(Method::Ours))
+            .unwrap()
+            .wait()
+            .unwrap();
         assert!(
             resp.result.approx_eq(&want, 1e-3, 1e-3),
             "seed {seed}: diff {}",
@@ -60,9 +62,14 @@ fn admission_enforces_max_n_with_typed_error() {
     cfg.max_n = 32;
     let service = Service::start(cfg).unwrap();
     // at the limit: fine
-    service.submit(Matrix::identity(32), 2, Method::Ours).unwrap();
-    // over it: the typed admission rejection, counted in metrics
-    let err = service.submit(Matrix::identity(33), 2, Method::Ours).unwrap_err();
+    service
+        .submit_job(Submission::expm(Matrix::identity(32), 2))
+        .unwrap()
+        .wait()
+        .unwrap();
+    // over it: the typed admission rejection (surfaces at submit),
+    // counted in metrics
+    let err = service.submit_job(Submission::expm(Matrix::identity(33), 2)).unwrap_err();
     assert!(matches!(err, MatexpError::Admission(_)), "{err:?}");
     assert!(err.to_string().contains("max_n"), "{err}");
     assert_eq!(service.metrics().rejected_total, 1);

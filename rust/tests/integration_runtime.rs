@@ -2,17 +2,35 @@
 //! execution discipline, on the pure-Rust backends, across sizes and
 //! powers. Runs unconditionally (no artifacts needed); the PJRT variants
 //! live at the bottom behind `--features xla` and stay artifact-gated.
+//!
+//! Every discipline is exercised through the one execution surface
+//! (`exec::Executor` submissions) — the deprecated `expm_*` shims were
+//! removed in 0.4.0.
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
+use matexp::coordinator::request::{ExpmResponse, Method};
+use matexp::exec::{Executor, Submission};
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::plan::Plan;
-use matexp::runtime::{Engine, FUSED_EXPM_POWERS};
+use matexp::runtime::{Backend, Engine, FUSED_EXPM_POWERS};
 
 fn cpu_oracle(a: &Matrix, power: u64) -> Matrix {
     linalg::expm::expm(a, power, CpuAlgo::Ikj).expect("cpu oracle")
+}
+
+/// Replay an explicit plan through the surface.
+fn replay<B: Backend>(engine: &mut Engine<B>, a: &Matrix, plan: Plan) -> ExpmResponse {
+    let power = plan.power;
+    engine.run(Submission::expm(a.clone(), power).plan(plan)).expect("replay")
+}
+
+/// Run one method through the surface.
+fn run_method<B: Backend>(
+    engine: &mut Engine<B>,
+    a: &Matrix,
+    power: u64,
+    method: Method,
+) -> ExpmResponse {
+    engine.run(Submission::expm(a.clone(), power).method(method)).expect("run")
 }
 
 #[test]
@@ -22,14 +40,14 @@ fn device_resident_binary_matches_cpu_across_sizes() {
         let a = Matrix::random_spectral(n, 0.95, n as u64);
         for power in [1u64, 2, 3, 13, 64, 100] {
             let want = cpu_oracle(&a, power);
-            let (got, stats) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
+            let resp = replay(&mut engine, &a, Plan::binary(power, false));
             assert!(
-                got.approx_eq(&want, 1e-3, 1e-3),
+                resp.result.approx_eq(&want, 1e-3, 1e-3),
                 "n={n} N={power}: max diff {}",
-                got.max_abs_diff(&want)
+                resp.result.max_abs_diff(&want)
             );
-            assert_eq!(stats.h2d_transfers, 1, "device-resident uploads once");
-            assert_eq!(stats.d2h_transfers, 1);
+            assert_eq!(resp.stats.h2d_transfers, 1, "device-resident uploads once");
+            assert_eq!(resp.stats.d2h_transfers, 1);
         }
     }
 }
@@ -48,15 +66,22 @@ fn all_disciplines_agree_on_one_workload() {
             got.max_abs_diff(&want)
         );
     };
-    check("binary", &engine.expm(&a, &Plan::binary(power, false)).unwrap().0);
-    check("fused", &engine.expm(&a, &Plan::binary(power, true)).unwrap().0);
-    check("chained", &engine.expm(&a, &Plan::chained(power, &[4, 2])).unwrap().0);
-    check("addition-chain", &engine.expm(&a, &Plan::addition_chain(power)).unwrap().0);
-    check("packed", &engine.expm_packed(&a, power).unwrap().0);
-    check("naive-roundtrip", &engine.expm_naive_roundtrip(&a, power).unwrap().0);
+    check("binary", &replay(&mut engine, &a, Plan::binary(power, false)).result);
+    check("fused", &replay(&mut engine, &a, Plan::binary(power, true)).result);
+    check("chained", &replay(&mut engine, &a, Plan::chained(power, &[4, 2])).result);
+    check("addition-chain", &replay(&mut engine, &a, Plan::addition_chain(power)).result);
+    check("packed", &run_method(&mut engine, &a, power, Method::OursPacked).result);
+    check("naive-roundtrip", &run_method(&mut engine, &a, power, Method::NaiveGpu).result);
     check(
         "plan-roundtrip",
-        &engine.expm_plan_roundtrip(&a, &Plan::binary(power, false)).unwrap().0,
+        &engine
+            .run(
+                Submission::expm(a.clone(), power)
+                    .method(Method::PlanRoundtrip)
+                    .plan(Plan::binary(power, false)),
+            )
+            .expect("plan-roundtrip")
+            .result,
     );
 }
 
@@ -68,12 +93,12 @@ fn every_cpu_algo_backend_agrees() {
     let want = cpu_oracle(&a, power);
     for algo in CpuAlgo::all() {
         let mut engine = Engine::cpu(algo);
-        let (got, _) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
+        let resp = replay(&mut engine, &a, Plan::binary(power, false));
         assert!(
-            got.approx_eq(&want, 1e-3, 1e-3),
+            resp.result.approx_eq(&want, 1e-3, 1e-3),
             "algo {}: max diff {}",
             algo.name(),
-            got.max_abs_diff(&want)
+            resp.result.max_abs_diff(&want)
         );
     }
 }
@@ -84,28 +109,30 @@ fn fused_expm_ops_match_plans() {
     let n = 16;
     let a = Matrix::random_spectral(n, 0.98, 21);
     for power in FUSED_EXPM_POWERS {
-        let (fused, stats) = engine.expm_fused_artifact(&a, power).unwrap();
-        assert_eq!(stats.launches, 1, "fused = single launch");
-        let (planned, _) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
+        let fused = run_method(&mut engine, &a, power, Method::FusedArtifact);
+        assert_eq!(fused.stats.launches, 1, "fused = single launch");
+        let planned = replay(&mut engine, &a, Plan::binary(power, false));
         assert!(
-            fused.approx_eq(&planned, 1e-2, 1e-2),
+            fused.result.approx_eq(&planned.result, 1e-2, 1e-2),
             "N={power}: max diff {}",
-            fused.max_abs_diff(&planned)
+            fused.result.max_abs_diff(&planned.result)
         );
     }
     // non-shipped power errors like a missing artifact would
-    assert!(engine.expm_fused_artifact(&a, 65).is_err());
+    assert!(engine
+        .run(Submission::expm(a.clone(), 65).method(Method::FusedArtifact))
+        .is_err());
 }
 
 #[test]
 fn naive_roundtrip_transfer_accounting() {
     let mut engine = Engine::cpu(CpuAlgo::Blocked);
     let a = Matrix::random_spectral(16, 0.9, 31);
-    let (_, stats) = engine.expm_naive_roundtrip(&a, 64).unwrap();
-    assert_eq!(stats.launches, 63);
-    assert_eq!(stats.multiplies, 63);
-    assert_eq!(stats.h2d_transfers, 2 * 63, "both operands re-uploaded per launch");
-    assert_eq!(stats.d2h_transfers, 63, "result downloaded per launch");
+    let resp = run_method(&mut engine, &a, 64, Method::NaiveGpu);
+    assert_eq!(resp.stats.launches, 63);
+    assert_eq!(resp.stats.multiplies, 63);
+    assert_eq!(resp.stats.h2d_transfers, 2 * 63, "both operands re-uploaded per launch");
+    assert_eq!(resp.stats.d2h_transfers, 63, "result downloaded per launch");
 }
 
 #[test]
@@ -114,9 +141,10 @@ fn launch_counts_match_plan_costs() {
     let a = Matrix::random_spectral(16, 0.9, 41);
     for power in [64u64, 100, 511, 1024] {
         let plan = Plan::binary(power, false);
-        let (_, stats) = engine.expm(&a, &plan).unwrap();
-        assert_eq!(stats.launches, plan.launches(), "N={power}");
-        assert_eq!(stats.multiplies, plan.multiplies(), "N={power}");
+        let (launches, multiplies) = (plan.launches(), plan.multiplies());
+        let resp = replay(&mut engine, &a, plan);
+        assert_eq!(resp.stats.launches, launches, "N={power}");
+        assert_eq!(resp.stats.multiplies, multiplies, "N={power}");
     }
 }
 
@@ -125,11 +153,11 @@ fn identity_and_stochastic_invariants_hold_through_engine() {
     let mut engine = Engine::cpu(CpuAlgo::Blocked);
     // identity stays identity at any power
     let e = Matrix::identity(32);
-    let (p, _) = engine.expm(&e, &Plan::binary(1024, false)).unwrap();
+    let p = replay(&mut engine, &e, Plan::binary(1024, false)).result;
     assert!(p.approx_eq(&e, 1e-5, 0.0));
     // stochastic rows keep summing to 1
     let s = Matrix::random_stochastic(32, 9);
-    let (p, _) = engine.expm_packed(&s, 512).unwrap();
+    let p = run_method(&mut engine, &s, 512, Method::OursPacked).result;
     for i in 0..32 {
         let sum: f32 = p.row(i).iter().sum();
         assert!((sum - 1.0).abs() < 1e-3, "row {i}: {sum}");
@@ -140,8 +168,8 @@ fn identity_and_stochastic_invariants_hold_through_engine() {
 fn power_zero_rejected_everywhere() {
     let mut engine = Engine::cpu(CpuAlgo::Blocked);
     let a = Matrix::identity(8);
-    assert!(engine.expm_naive_roundtrip(&a, 0).is_err());
-    assert!(engine.expm_packed(&a, 0).is_err());
+    assert!(engine.run(Submission::expm(a.clone(), 0).method(Method::NaiveGpu)).is_err());
+    assert!(engine.run(Submission::expm(a, 0).method(Method::OursPacked)).is_err());
 }
 
 #[test]
@@ -150,21 +178,21 @@ fn sim_backend_numerics_match_cpu_and_times_follow_model() {
     let a = Matrix::random_spectral(64, 0.95, 13);
     let power = 256;
     let want = cpu_oracle(&a, power);
-    let (ours, ours_stats) = sim.expm(&a, &Plan::binary(power, false)).unwrap();
-    assert!(ours.approx_eq(&want, 1e-3, 1e-3), "sim numerics diverge");
-    let (_, naive_stats) = sim.expm_naive_roundtrip(&a, power).unwrap();
+    let ours = replay(&mut sim, &a, Plan::binary(power, false));
+    assert!(ours.result.approx_eq(&want, 1e-3, 1e-3), "sim numerics diverge");
+    let naive = run_method(&mut sim, &a, power, Method::NaiveGpu);
     // wall_s is SIMULATED 2012-testbed time: the paper's core claim must
     // hold by construction — device residency beats per-launch round-trips
-    assert!(ours_stats.wall_s > 0.0);
+    assert!(ours.stats.wall_s > 0.0);
     assert!(
-        naive_stats.wall_s > ours_stats.wall_s * 5.0,
+        naive.stats.wall_s > ours.stats.wall_s * 5.0,
         "simulated naive {} must be far slower than ours {}",
-        naive_stats.wall_s,
-        ours_stats.wall_s
+        naive.stats.wall_s,
+        ours.stats.wall_s
     );
     // and the simulated clock tracks launch counts: 255 launches vs 8
-    assert_eq!(naive_stats.launches, 255);
-    assert_eq!(ours_stats.launches, 8);
+    assert_eq!(naive.stats.launches, 255);
+    assert_eq!(ours.stats.launches, 8);
 }
 
 #[test]
@@ -173,8 +201,8 @@ fn cpu_and_sim_backends_agree_numerically() {
     let mut sim = Engine::sim();
     let a = Matrix::random_stochastic(24, 17);
     for power in [13u64, 100] {
-        let (c, _) = cpu.expm(&a, &Plan::chained(power, &[4, 2])).unwrap();
-        let (s, _) = sim.expm(&a, &Plan::chained(power, &[4, 2])).unwrap();
+        let c = replay(&mut cpu, &a, Plan::chained(power, &[4, 2])).result;
+        let s = replay(&mut sim, &a, Plan::chained(power, &[4, 2])).result;
         assert!(c.approx_eq(&s, 1e-4, 1e-4), "N={power}: {}", c.max_abs_diff(&s));
     }
 }
@@ -207,8 +235,8 @@ mod pjrt {
             let a = Matrix::random_spectral(n, 0.95, n as u64);
             for power in [1u64, 2, 13, 100] {
                 let want = cpu_oracle(&a, power);
-                let (got, _) = engine.expm(&a, &Plan::binary(power, false)).unwrap();
-                assert!(got.approx_eq(&want, 1e-3, 1e-3), "n={n} N={power}");
+                let resp = replay(&mut engine, &a, Plan::binary(power, false));
+                assert!(resp.result.approx_eq(&want, 1e-3, 1e-3), "n={n} N={power}");
             }
         }
     }
@@ -232,7 +260,7 @@ mod pjrt {
         let mut engine = Engine::pjrt(&reg, Variant::Xla).unwrap();
         let a = Matrix::random_spectral(16, 0.9, 3);
         // 11 = 0b1011 → fused binary plan contains SqMul steps
-        let (_, stats) = engine.expm(&a, &Plan::binary(11, true)).unwrap();
-        assert!(stats.h2d_transfers > 1, "PJRT pays for tuple splits: {stats:?}");
+        let resp = replay(&mut engine, &a, Plan::binary(11, true));
+        assert!(resp.stats.h2d_transfers > 1, "PJRT pays for tuple splits: {:?}", resp.stats);
     }
 }

@@ -1,26 +1,37 @@
 //! Integration: the serving coordinator — concurrent submission, batching
 //! behaviour, admission control, metrics, graceful shutdown. Runs
 //! unconditionally on the default (pure-Rust CPU) backend.
+//!
+//! Everything submits through the asynchronous `exec::Executor` surface
+//! (`submit_job` + `JobHandle`) — the blocking `submit` shim was removed
+//! in 0.4.0.
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
 use std::sync::Arc;
 use std::time::Duration;
 
 use matexp::config::MatexpConfig;
-use matexp::coordinator::request::Method;
-use matexp::coordinator::service::Service;
-use matexp::error::MatexpError;
+use matexp::coordinator::request::{ExpmResponse, Method};
+use matexp::coordinator::service::{Service, ServiceHandle};
+use matexp::error::{MatexpError, Result};
 use matexp::exec::{Priority, Submission};
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 
-fn start(workers: usize) -> Arc<matexp::coordinator::service::ServiceHandle> {
+fn start(workers: usize) -> Arc<ServiceHandle> {
     let mut cfg = MatexpConfig::default();
     cfg.workers = workers;
     cfg.batcher.max_wait_ms = 1;
     Arc::new(Service::start(cfg).expect("service starts"))
+}
+
+/// Submit through the surface and wait — the old blocking shim, spelled
+/// out (admission errors surface at submit, execution errors at wait).
+fn submit_wait(
+    service: &ServiceHandle,
+    matrix: Matrix,
+    power: u64,
+    method: Method,
+) -> Result<ExpmResponse> {
+    service.submit_job(Submission::expm(matrix, power).method(method))?.wait()
 }
 
 #[test]
@@ -34,7 +45,7 @@ fn serves_correct_results_concurrently() {
                 let a = Matrix::random_spectral(n, 0.95, c);
                 let power = 32 + c;
                 let want = linalg::expm::expm(&a, power, CpuAlgo::Ikj).unwrap();
-                let resp = service.submit(a, power, Method::Ours).expect("submit");
+                let resp = submit_wait(&service, a, power, Method::Ours).expect("served");
                 assert!(
                     resp.result.approx_eq(&want, 1e-3, 1e-3),
                     "client {c}: diff {}",
@@ -63,7 +74,7 @@ fn all_methods_servable() {
         Method::NaiveGpu,
         Method::CpuSeq,
     ] {
-        let resp = service.submit(a.clone(), 64, method).expect("submit");
+        let resp = submit_wait(&service, a.clone(), 64, method).expect("served");
         assert!(
             resp.result.approx_eq(&want, 1e-2, 1e-2),
             "{method}: diff {}",
@@ -77,21 +88,19 @@ fn all_methods_servable() {
 fn admission_rejects_bad_requests() {
     let service = start(1);
     // power 0
-    assert!(service.submit(Matrix::identity(16), 0, Method::Ours).is_err());
+    assert!(submit_wait(&service, Matrix::identity(16), 0, Method::Ours).is_err());
     // absurd power
-    assert!(service
-        .submit(Matrix::identity(16), 1 << 40, Method::Ours)
-        .is_err());
+    assert!(submit_wait(&service, Matrix::identity(16), 1 << 40, Method::Ours).is_err());
     // non-finite input
     let mut bad = Matrix::identity(16);
     bad.set(0, 0, f32::INFINITY);
-    assert!(service.submit(bad, 8, Method::Ours).is_err());
+    assert!(submit_wait(&service, bad, 8, Method::Ours).is_err());
     let m = service.metrics();
     assert_eq!(m.rejected_total, 3);
     // the cpu backend is size-unrestricted: odd sizes are served, not
     // rejected (PJRT admission rejects sizes outside the artifact set)
-    service.submit(Matrix::identity(10), 8, Method::Ours).unwrap();
-    service.submit(Matrix::identity(100), 8, Method::CpuSeq).unwrap();
+    submit_wait(&service, Matrix::identity(10), 8, Method::Ours).unwrap();
+    submit_wait(&service, Matrix::identity(100), 8, Method::CpuSeq).unwrap();
     assert_eq!(service.metrics().rejected_total, 3);
 }
 
@@ -99,13 +108,12 @@ fn admission_rejects_bad_requests() {
 fn missing_fused_power_is_clean_error_not_crash() {
     let service = start(1);
     // power 65 is not a shipped fused power
-    let err = service
-        .submit(Matrix::identity(64), 65, Method::FusedArtifact)
+    let err = submit_wait(&service, Matrix::identity(64), 65, Method::FusedArtifact)
         .unwrap_err()
         .to_string();
-    assert!(err.contains("no artifact"), "{err}");
+    assert!(err.contains("no artifact") || err.contains("no fused"), "{err}");
     // service still healthy afterwards
-    service.submit(Matrix::identity(64), 64, Method::Ours).unwrap();
+    submit_wait(&service, Matrix::identity(64), 64, Method::Ours).unwrap();
 }
 
 #[test]
@@ -120,7 +128,7 @@ fn batching_coalesces_same_size_requests() {
             let service = Arc::clone(&service);
             scope.spawn(move || {
                 let a = Matrix::random_spectral(16, 0.9, c);
-                service.submit(a, 16, Method::Ours).expect("submit");
+                submit_wait(&service, a, 16, Method::Ours).expect("served");
             });
         }
     });
@@ -141,8 +149,8 @@ fn sim_backend_serves_with_simulated_wall_clock() {
     cfg.batcher.max_wait_ms = 1;
     let service = Service::start(cfg).expect("sim service starts");
     let a = Matrix::random_spectral(64, 0.95, 4);
-    let naive = service.submit(a.clone(), 128, Method::NaiveGpu).unwrap();
-    let ours = service.submit(a, 128, Method::Ours).unwrap();
+    let naive = submit_wait(&service, a.clone(), 128, Method::NaiveGpu).unwrap();
+    let ours = submit_wait(&service, a, 128, Method::Ours).unwrap();
     // simulated 2012 wall-clock: the paper's headline ordering holds
     assert!(
         naive.stats.wall_s > ours.stats.wall_s,
@@ -164,9 +172,9 @@ fn live_deadline_and_cancel_behind_a_slow_job() {
     let service = Service::start(cfg).expect("service starts");
 
     // occupy the worker: 199 sequential full multiplies at n=48
-    let slow = service
-        .submit_job(Submission::expm(Matrix::random_spectral(48, 0.9, 1), 200).method(Method::CpuSeq))
-        .expect("slow submit");
+    let slow_sub =
+        Submission::expm(Matrix::random_spectral(48, 0.9, 1), 200).method(Method::CpuSeq);
+    let slow = service.submit_job(slow_sub).expect("slow submit");
 
     // a queued job with a deadline far shorter than the slow job's run
     let mut doomed = service
@@ -204,6 +212,6 @@ fn live_deadline_and_cancel_behind_a_slow_job() {
 fn shutdown_then_submit_fails_cleanly() {
     let service = start(1);
     let service = Arc::try_unwrap(service).ok().expect("sole owner");
-    service.submit(Matrix::identity(16), 4, Method::Ours).unwrap();
+    submit_wait(&service, Matrix::identity(16), 4, Method::Ours).unwrap();
     service.shutdown();
 }

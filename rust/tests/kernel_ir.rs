@@ -12,10 +12,8 @@
 //!    `--ablate-residency` comparison, asserted with a generous 1.2×
 //!    floor (the structural gap is ~10×: 2 copies vs 2-per-step).
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
+use matexp::coordinator::request::Method;
+use matexp::exec::{Executor, Submission};
 use matexp::experiments::ablations;
 use matexp::linalg::{CpuAlgo, Matrix};
 use matexp::plan::Plan;
@@ -109,7 +107,10 @@ fn packed_n1024_power1024_copies_exactly_two_host_edges() {
     const N: usize = 1024;
     let mut engine = Engine::cpu(CpuAlgo::Ikj);
     let a = Matrix::zeros(N);
-    let (result, stats) = engine.expm_packed(&a, 1024).unwrap();
+    let resp = engine
+        .run(Submission::expm(a, 1024).method(Method::OursPacked))
+        .unwrap();
+    let (result, stats) = (resp.result, resp.stats);
     assert_eq!(result, Matrix::zeros(N));
     assert_eq!(stats.h2d_transfers, 1);
     assert_eq!(stats.d2h_transfers, 1);
@@ -156,8 +157,14 @@ fn engine_resident_vs_roundtrip_bytes_at_n1024() {
     let mut engine = Engine::cpu(CpuAlgo::Ikj);
     let a = Matrix::zeros(N);
     let plan = Plan::binary(1024, false); // 10 squarings
-    let (_, resident) = engine.expm(&a, &plan).unwrap();
-    let (_, roundtrip) = engine.expm_plan_roundtrip(&a, &plan).unwrap();
+    let resident = engine
+        .run(Submission::expm(a.clone(), 1024).plan(plan.clone()))
+        .unwrap()
+        .stats;
+    let roundtrip = engine
+        .run(Submission::expm(a, 1024).method(Method::PlanRoundtrip).plan(plan))
+        .unwrap()
+        .stats;
     assert_eq!(resident.bytes_copied, 2 * (N * N * 4) as u64);
     assert_eq!(roundtrip.bytes_copied, 20 * (N * N * 4) as u64);
     assert!(

@@ -1,15 +1,12 @@
 //! Property-based tests over the planner, engine-replay and coordinator
 //! invariants (in-tree `util::prop` harness; see DESIGN.md §8).
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
 use std::time::Instant;
 
 use matexp::config::BatcherConfig;
 use matexp::coordinator::batcher::Batcher;
 use matexp::coordinator::request::{ExpmRequest, Method};
+use matexp::exec::{Executor, Submission};
 use matexp::linalg::{matrix::Matrix, CpuAlgo};
 use matexp::plan::{mod_pow, Plan, PlanKind, Step};
 use matexp::runtime::Engine;
@@ -215,20 +212,26 @@ fn cpu_engine_replay_matches_plan_cost_model() {
     property("engine replay == plan cost model", 120, |g| {
         let mut engine = Engine::cpu(CpuAlgo::Naive); // construction is free
         let power = g.u64(1, 1 << 12);
+        // the naive planner is O(N), so its arm bounds the power — the
+        // submission's power must match the plan's for admission
         let plan = match g.usize(0, 4) {
-            0 => Plan::naive(power.min(64)), // naive plans are O(N); bound them
+            0 => Plan::naive(power.min(64)),
             1 => Plan::binary(power, false),
             2 => Plan::binary(power, true),
             3 => Plan::chained(power, &[4, 2]),
             _ => Plan::addition_chain(power),
         };
+        let power = plan.power;
+        let (kind, launches, multiplies) = (plan.kind, plan.launches(), plan.multiplies());
         let a = Matrix::identity(4);
-        let (out, stats) = engine.expm(&a, &plan).expect("replay");
-        assert!(out.approx_eq(&a, 1e-6, 0.0), "identity stays identity");
-        assert_eq!(stats.launches, plan.launches(), "{:?}", plan.kind);
-        assert_eq!(stats.multiplies, plan.multiplies(), "{:?}", plan.kind);
-        assert_eq!(stats.h2d_transfers, 1, "{:?}", plan.kind);
-        assert_eq!(stats.d2h_transfers, 1, "{:?}", plan.kind);
+        let resp = engine
+            .run(Submission::expm(a.clone(), power).plan(plan))
+            .expect("replay through the execution surface");
+        assert!(resp.result.approx_eq(&a, 1e-6, 0.0), "identity stays identity");
+        assert_eq!(resp.stats.launches, launches, "{kind:?}");
+        assert_eq!(resp.stats.multiplies, multiplies, "{kind:?}");
+        assert_eq!(resp.stats.h2d_transfers, 1, "{kind:?}");
+        assert_eq!(resp.stats.d2h_transfers, 1, "{kind:?}");
     });
 }
 

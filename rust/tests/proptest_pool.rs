@@ -3,11 +3,8 @@
 //! uneven heterogeneous splits) and the per-device `ExecStats`
 //! invariants.
 
-// These tests deliberately keep exercising the deprecated one-release
-// shims (expm_* / blocking submit) — they ARE the shim regression
-// coverage. New code routes through exec::Executor::submit.
-#![allow(deprecated)]
 use matexp::config::MatexpConfig;
+use matexp::exec::{Executor, Submission};
 use matexp::linalg::matrix::Matrix;
 use matexp::linalg::naive::matmul_naive;
 use matexp::plan::Plan;
@@ -69,7 +66,7 @@ fn per_device_launches_sum_to_plan_launches() {
     // to exactly the plan's launch count
     property("pool per-device launches == plan launches", 20, |g| {
         let devices = g.usize(1, 3);
-        let engine =
+        let mut engine =
             PoolEngine::from_config(&pool_cfg(vec![PoolDeviceKind::Cpu; devices])).unwrap();
         let power = g.u64(1, 512);
         let plan = match g.usize(0, 2) {
@@ -77,12 +74,13 @@ fn per_device_launches_sum_to_plan_launches() {
             1 => Plan::binary(power, true),
             _ => Plan::chained(power, &[4, 2]),
         };
+        let (kind, launches) = (plan.kind, plan.launches());
         let a = Matrix::random_spectral(g.usize(4, 16), 0.9, g.u64(1, 1 << 20));
-        let (got, stats) = engine.expm(&a, &plan).unwrap();
-        assert!(got.is_finite());
-        assert_eq!(stats.launches, plan.launches(), "{:?}", plan.kind);
-        let sum: usize = stats.per_device.iter().map(|d| d.launches).sum();
-        assert_eq!(sum, plan.launches(), "{:?}", plan.kind);
+        let resp = engine.run(Submission::expm(a, power).plan(plan)).unwrap();
+        assert!(resp.result.is_finite());
+        assert_eq!(resp.stats.launches, launches, "{kind:?}");
+        let sum: usize = resp.stats.per_device.iter().map(|d| d.launches).sum();
+        assert_eq!(sum, launches, "{kind:?}");
     });
 }
 
@@ -95,12 +93,14 @@ fn sharded_replay_breakdown_is_conserved() {
         let mut cfg = pool_cfg(vec![PoolDeviceKind::Cpu; devices]);
         let grid_dim = g.usize(1, 3);
         cfg.pool.grid = Some(grid_dim);
-        let engine = PoolEngine::from_config(&cfg).unwrap();
+        let mut engine = PoolEngine::from_config(&cfg).unwrap();
         let n = g.usize(6, 24);
         let power = g.u64(1, 64);
         let plan = Plan::binary(power, false);
+        let multiplies = plan.multiplies();
         let a = Matrix::random_spectral(n, 0.9, g.u64(1, 1 << 20));
-        let (got, stats) = engine.expm(&a, &plan).unwrap();
+        let resp = engine.run(Submission::expm(a.clone(), power).plan(plan)).unwrap();
+        let (got, stats) = (resp.result, resp.stats);
         let want = matexp::linalg::expm::expm(&a, power, matexp::linalg::CpuAlgo::Naive)
             .unwrap();
         assert!(
@@ -109,7 +109,7 @@ fn sharded_replay_breakdown_is_conserved() {
             got.max_abs_diff(&want)
         );
         let tiles = TileGrid::new(n, grid_dim).unwrap().tiles();
-        assert_eq!(stats.launches, tiles * plan.multiplies());
+        assert_eq!(stats.launches, tiles * multiplies);
         let launches: usize = stats.per_device.iter().map(|d| d.launches).sum();
         assert_eq!(launches, stats.launches);
         let d2h: usize = stats.per_device.iter().map(|d| d.d2h_transfers).sum();
