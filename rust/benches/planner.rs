@@ -56,6 +56,7 @@ fn main() {
         metrics: None,
         payload: matexp::server::proto::Payload::Json,
         id: None,
+        frame: None,
     };
     runner.bench("wire-encode/512x512/json", || {
         black_box(resp.encode().unwrap());
@@ -70,6 +71,7 @@ fn main() {
         metrics: None,
         payload: matexp::server::proto::Payload::Base64,
         id: None,
+        frame: None,
     };
     runner.bench("wire-encode/512x512/b64", || {
         black_box(resp_b64.encode().unwrap());

@@ -1,0 +1,553 @@
+//! `matexp loadtest` — a concurrent-client load harness over the TCP
+//! wire, plus the codec micro-benchmark and the persisted `BENCH_*.json`
+//! snapshot format.
+//!
+//! The harness drives a running server (or one the CLI starts in-process)
+//! with N clients on real sockets, each speaking one wire mode — JSON
+//! array payloads, base64 payloads, or binary frames — and reports p50 /
+//! p99 / mean latency, throughput, and wire-byte counts per mode. Closed
+//! loop by default (each client fires its next request the moment the
+//! previous one answers); an open loop with a fixed per-client arrival
+//! rate is available via [`LoadtestConfig::rate`], where latency is
+//! measured from the request's *scheduled* start so queueing delay is
+//! charged to the server, not silently absorbed (no coordinated
+//! omission).
+//!
+//! Results serialize to the repo's bench-trajectory format
+//! ([`snapshot`] / [`validate_snapshot`]): one `BENCH_<pr>.json` per
+//! load-bearing change, committed at the repo root so the trajectory of
+//! serving performance is diffable over time.
+
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::bench::stats::percentile;
+use crate::coordinator::request::Method;
+use crate::error::{MatexpError, Result};
+use crate::json_obj;
+use crate::linalg::matrix::Matrix;
+use crate::server::client::MatexpClient;
+use crate::server::frame::Frame;
+use crate::server::proto::{Payload, WireResponse, WireStats};
+use crate::util::json::Json;
+
+/// Identifier of the snapshot format written by [`snapshot`].
+pub const SNAPSHOT_SCHEMA: &str = "matexp-loadtest/1";
+
+/// Which codec the load clients speak.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// JSON lines with plain `f32`-array payloads.
+    Json,
+    /// JSON lines with base64 payloads.
+    Base64,
+    /// Binary frames (negotiated per connection; the run fails if the
+    /// server does not speak them).
+    Binary,
+}
+
+impl WireMode {
+    /// Canonical lowercase name (CLI / snapshot vocabulary).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Base64 => "base64",
+            WireMode::Binary => "binary",
+        }
+    }
+
+    /// Every mode, in snapshot order.
+    pub fn all() -> [WireMode; 3] {
+        [WireMode::Json, WireMode::Base64, WireMode::Binary]
+    }
+}
+
+impl std::str::FromStr for WireMode {
+    type Err = MatexpError;
+
+    fn from_str(s: &str) -> Result<WireMode> {
+        WireMode::all()
+            .into_iter()
+            .find(|m| m.as_str() == s.to_ascii_lowercase())
+            .ok_or_else(|| {
+                MatexpError::Config(format!("unknown wire mode {s:?} (json|base64|binary)"))
+            })
+    }
+}
+
+/// One load run's shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadtestConfig {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Measured requests per client.
+    pub requests: usize,
+    /// Unmeasured warmup requests per client (fills caches, spins up
+    /// workers, settles allocator state).
+    pub warmup: usize,
+    /// Matrix side length of every request.
+    pub n: usize,
+    /// Exponent `N` of every request.
+    pub power: u64,
+    /// Execution method of every request.
+    pub method: Method,
+    /// `Some(r)`: open loop, each client schedules arrivals at `r` req/s
+    /// and latency runs from the scheduled start. `None`: closed loop.
+    pub rate: Option<f64>,
+    /// Seed for the per-client operand matrices.
+    pub seed: u64,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> LoadtestConfig {
+        LoadtestConfig {
+            clients: 4,
+            requests: 25,
+            warmup: 2,
+            n: 64,
+            power: 256,
+            method: Method::Ours,
+            rate: None,
+            seed: 42,
+        }
+    }
+}
+
+impl LoadtestConfig {
+    /// Basic shape validation (zero clients or requests measure nothing).
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 || self.requests == 0 {
+            return Err(MatexpError::Config(
+                "loadtest needs at least 1 client and 1 request".into(),
+            ));
+        }
+        if self.rate.is_some_and(|r| !r.is_finite() || r <= 0.0) {
+            return Err(MatexpError::Config("--rate must be a positive number".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Aggregated result of one `(mode, config)` run.
+#[derive(Clone, Debug)]
+pub struct ModeReport {
+    /// Wire mode the clients spoke.
+    pub mode: WireMode,
+    /// Total measured requests (clients × requests per client).
+    pub requests: usize,
+    /// Wall-clock seconds of the measured phase (slowest client; all
+    /// clients start together on a barrier after warmup).
+    pub wall_s: f64,
+    /// Measured requests per second over `wall_s`.
+    pub throughput_rps: f64,
+    /// Median request latency, seconds.
+    pub p50_s: f64,
+    /// 99th-percentile request latency, seconds.
+    pub p99_s: f64,
+    /// Mean request latency, seconds.
+    pub mean_s: f64,
+    /// Fastest request, seconds.
+    pub min_s: f64,
+    /// Slowest request, seconds.
+    pub max_s: f64,
+    /// Bytes the clients wrote to the wire (requests), warmup included.
+    pub wire_bytes_out: u64,
+    /// Bytes the clients read off the wire (replies), warmup included.
+    pub wire_bytes_in: u64,
+}
+
+/// Run one wire mode against a live server at `addr`.
+///
+/// Every client connects, configures its codec (binary mode negotiates
+/// frames and fails the run if the server declines), performs its warmup
+/// requests, then parks on a barrier so the measured phase starts
+/// simultaneously across clients.
+pub fn run_mode(addr: &str, mode: WireMode, cfg: &LoadtestConfig) -> Result<ModeReport> {
+    cfg.validate()?;
+    let barrier = Barrier::new(cfg.clients);
+    let per_client: Vec<Result<(Vec<f64>, f64, (u64, u64))>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|cid| {
+                let barrier = &barrier;
+                scope.spawn(move || run_client(addr, mode, cfg, cid as u64, barrier))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(MatexpError::Service("load client panicked".into())))
+            })
+            .collect()
+    });
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.clients * cfg.requests);
+    let (mut wall_s, mut bytes_out, mut bytes_in) = (0.0f64, 0u64, 0u64);
+    for outcome in per_client {
+        let (lat, client_wall, (out, inn)) = outcome?;
+        latencies.extend(lat);
+        wall_s = wall_s.max(client_wall);
+        bytes_out += out;
+        bytes_in += inn;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+    let total = latencies.len();
+    Ok(ModeReport {
+        mode,
+        requests: total,
+        wall_s,
+        throughput_rps: total as f64 / wall_s.max(f64::MIN_POSITIVE),
+        p50_s: percentile(&latencies, 0.50),
+        p99_s: percentile(&latencies, 0.99),
+        mean_s: latencies.iter().sum::<f64>() / total as f64,
+        min_s: latencies[0],
+        max_s: latencies[total - 1],
+        wire_bytes_out: bytes_out,
+        wire_bytes_in: bytes_in,
+    })
+}
+
+/// One client's share of a run: latencies, measured-phase wall seconds,
+/// and wire-byte totals.
+fn run_client(
+    addr: &str,
+    mode: WireMode,
+    cfg: &LoadtestConfig,
+    cid: u64,
+    barrier: &Barrier,
+) -> Result<(Vec<f64>, f64, (u64, u64))> {
+    let mut client = MatexpClient::connect(addr)?;
+    match mode {
+        WireMode::Json => {}
+        WireMode::Base64 => client = client.with_base64(),
+        WireMode::Binary => {
+            if !client.negotiate_binary()? {
+                return Err(MatexpError::Service(
+                    "server declined binary frame negotiation".into(),
+                ));
+            }
+        }
+    }
+    // spectral radius < 1 keeps A^N finite at any measured power
+    let a = Matrix::random_spectral(cfg.n, 0.9, cfg.seed.wrapping_add(cid) + 1);
+    for _ in 0..cfg.warmup {
+        client.expm(&a, cfg.power, cfg.method)?;
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        let started = match cfg.rate {
+            // open loop: requests are due on a fixed schedule, and
+            // latency runs from the *due* time — a slow server eats into
+            // later requests' budget instead of slowing the clock down
+            Some(rate) => {
+                let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                due
+            }
+            None => Instant::now(),
+        };
+        client.expm(&a, cfg.power, cfg.method)?;
+        latencies.push(started.elapsed().as_secs_f64());
+    }
+    Ok((latencies, t0.elapsed().as_secs_f64(), client.wire_bytes()))
+}
+
+/// Round-trip codec timing at one matrix size: the JSON/base64 line codec
+/// vs the binary frame codec, encode + decode of one full expm reply.
+#[derive(Clone, Copy, Debug)]
+pub struct CodecBench {
+    /// Matrix side length measured.
+    pub n: usize,
+    /// Best-of-iters seconds for the JSON line with a base64 payload
+    /// (the *faster* of the two line encodings — the honest baseline).
+    pub json_b64_s: f64,
+    /// Best-of-iters seconds for the binary frame.
+    pub frame_s: f64,
+    /// `json_b64_s / frame_s`.
+    pub speedup: f64,
+}
+
+/// Measure one encode+decode round trip of an n×n expm reply in both
+/// codecs, best of `iters` (the steady-state cost, robust to a stray
+/// scheduler hiccup).
+pub fn codec_roundtrip(n: usize, iters: usize) -> CodecBench {
+    let m = Matrix::random(n, 7);
+    let stats = WireStats {
+        launches: 10,
+        multiplies: 10,
+        h2d_transfers: 1,
+        d2h_transfers: 1,
+        bytes_copied: (n * n * 8) as u64,
+        buffers_recycled: 8,
+        peak_resident_bytes: (n * n * 8) as u64,
+        wall_s: 0.01,
+        per_device: Vec::new(),
+    };
+    let line_resp = WireResponse::Ok {
+        result: Some(m.data().to_vec()),
+        stats: Some(stats.clone()),
+        metrics: None,
+        payload: Payload::Base64,
+        id: Some(1),
+        frame: None,
+    };
+    let best = |f: &mut dyn FnMut()| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters.max(1) {
+            let t = Instant::now();
+            f();
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let json_b64_s = best(&mut || {
+        let line = line_resp.encode().expect("finite payload encodes");
+        let decoded = WireResponse::decode(&line).expect("own encoding decodes");
+        std::hint::black_box(decoded);
+    });
+    let frame_resp =
+        Frame::ExpmOk { id: 1, n, stats: stats.clone(), result: m.data().to_vec() };
+    let frame_s = best(&mut || {
+        let bytes = frame_resp.encode();
+        let decoded = Frame::read_from(&mut &bytes[..], crate::server::frame::MAX_PAYLOAD)
+            .expect("own encoding decodes");
+        std::hint::black_box(decoded);
+    });
+    CodecBench { n, json_b64_s, frame_s, speedup: json_b64_s / frame_s.max(f64::MIN_POSITIVE) }
+}
+
+/// Serialize a finished run into the persisted `BENCH_<pr>.json` shape.
+pub fn snapshot(
+    bench_id: u64,
+    cfg: &LoadtestConfig,
+    modes: &[ModeReport],
+    codec: &CodecBench,
+) -> Json {
+    let mode_rows: Vec<Json> = modes
+        .iter()
+        .map(|r| {
+            json_obj![
+                ("mode", r.mode.as_str()),
+                ("requests", r.requests),
+                ("wall_s", r.wall_s),
+                ("throughput_rps", r.throughput_rps),
+                ("p50_s", r.p50_s),
+                ("p99_s", r.p99_s),
+                ("mean_s", r.mean_s),
+                ("min_s", r.min_s),
+                ("max_s", r.max_s),
+                ("wire_bytes_out", r.wire_bytes_out),
+                ("wire_bytes_in", r.wire_bytes_in),
+            ]
+        })
+        .collect();
+    json_obj![
+        ("schema", SNAPSHOT_SCHEMA),
+        ("bench_id", bench_id),
+        (
+            "workload",
+            json_obj![
+                ("clients", cfg.clients),
+                ("requests_per_client", cfg.requests),
+                ("warmup_per_client", cfg.warmup),
+                ("n", cfg.n),
+                ("power", cfg.power),
+                ("method", cfg.method.as_str()),
+                (
+                    "loop",
+                    match cfg.rate {
+                        Some(_) => "open",
+                        None => "closed",
+                    }
+                ),
+                ("rate_rps", cfg.rate.unwrap_or(0.0)),
+            ]
+        ),
+        ("modes", Json::Arr(mode_rows)),
+        (
+            "codec_roundtrip",
+            json_obj![
+                ("n", codec.n),
+                ("json_b64_s", codec.json_b64_s),
+                ("frame_s", codec.frame_s),
+                ("speedup", codec.speedup),
+            ]
+        ),
+    ]
+}
+
+/// Validate a persisted snapshot (CI gates `BENCH_*.json` artifacts on
+/// this, so a malformed or truncated snapshot fails the build instead of
+/// silently polluting the trajectory).
+pub fn validate_snapshot(v: &Json) -> Result<()> {
+    let fail = |why: &str| Err(MatexpError::Config(format!("malformed loadtest snapshot: {why}")));
+    if v.get("schema").and_then(Json::as_str) != Some(SNAPSHOT_SCHEMA) {
+        return fail(&format!("schema must be {SNAPSHOT_SCHEMA:?}"));
+    }
+    if v.get("bench_id").and_then(Json::as_u64).is_none() {
+        return fail("missing numeric bench_id");
+    }
+    if v.get("workload").is_none() {
+        return fail("missing workload");
+    }
+    let modes = match v.get("modes").and_then(Json::as_arr) {
+        Some(m) if !m.is_empty() => m,
+        _ => return fail("modes must be a non-empty array"),
+    };
+    for (i, mode) in modes.iter().enumerate() {
+        if mode.get("mode").and_then(Json::as_str).is_none() {
+            return fail(&format!("modes[{i}] missing mode name"));
+        }
+        for field in ["p50_s", "p99_s", "mean_s", "throughput_rps", "wall_s"] {
+            match mode.get(field).and_then(Json::as_f64) {
+                Some(x) if x.is_finite() && x > 0.0 => {}
+                _ => return fail(&format!("modes[{i}].{field} must be finite and positive")),
+            }
+        }
+    }
+    match v.get("codec_roundtrip").and_then(|c| c.get("speedup")).and_then(Json::as_f64) {
+        Some(x) if x.is_finite() && x > 0.0 => {}
+        _ => return fail("codec_roundtrip.speedup must be finite and positive"),
+    }
+    Ok(())
+}
+
+/// Render one run as the human table `matexp loadtest` prints.
+pub fn render(modes: &[ModeReport], codec: &CodecBench) -> String {
+    use crate::bench::format_secs;
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<8} {:>9} {:>11} {:>11} {:>11} {:>11} {:>12} {:>12}",
+        "mode", "requests", "p50", "p99", "mean", "req/s", "bytes out", "bytes in"
+    );
+    for r in modes {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>9} {:>11} {:>11} {:>11} {:>11.1} {:>12} {:>12}",
+            r.mode.as_str(),
+            r.requests,
+            format_secs(r.p50_s),
+            format_secs(r.p99_s),
+            format_secs(r.mean_s),
+            r.throughput_rps,
+            r.wire_bytes_out,
+            r.wire_bytes_in,
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\ncodec round-trip at n={}: json+b64 {} vs frame {} ({:.1}x)",
+        codec.n,
+        format_secs(codec.json_b64_s),
+        format_secs(codec.frame_s),
+        codec.speedup,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(mode: WireMode) -> ModeReport {
+        ModeReport {
+            mode,
+            requests: 100,
+            wall_s: 2.0,
+            throughput_rps: 50.0,
+            p50_s: 0.01,
+            p99_s: 0.05,
+            mean_s: 0.015,
+            min_s: 0.005,
+            max_s: 0.06,
+            wire_bytes_out: 1 << 20,
+            wire_bytes_in: 1 << 21,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_and_validates() {
+        let cfg = LoadtestConfig::default();
+        let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
+        let v = snapshot(6, &cfg, &[report(WireMode::Json), report(WireMode::Binary)], &codec);
+        validate_snapshot(&v).unwrap();
+        // survives a serialize → parse round trip (what CI actually reads)
+        let reparsed = Json::parse(&v.to_string()).unwrap();
+        validate_snapshot(&reparsed).unwrap();
+        let text = v.to_string();
+        assert!(text.contains("\"schema\":\"matexp-loadtest/1\""), "{text}");
+        assert!(text.contains("\"p99_s\""), "{text}");
+    }
+
+    #[test]
+    fn validate_rejects_damage() {
+        let cfg = LoadtestConfig::default();
+        let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
+        let good = snapshot(6, &cfg, &[report(WireMode::Json)], &codec);
+
+        assert!(validate_snapshot(&Json::parse("{}").unwrap()).is_err());
+        assert!(validate_snapshot(&Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
+
+        // empty modes
+        assert!(validate_snapshot(&snapshot(6, &cfg, &[], &codec)).is_err());
+
+        // a zeroed p50 (a run that measured nothing) is malformed
+        let zeroed = good.to_string().replace("\"p50_s\":0.01", "\"p50_s\":0");
+        assert_ne!(zeroed, good.to_string(), "replace must hit");
+        assert!(validate_snapshot(&Json::parse(&zeroed).unwrap()).is_err());
+
+        // a NaN speedup (codec bench never ran) is malformed
+        let mut bad_codec = codec;
+        bad_codec.speedup = 0.0;
+        assert!(
+            validate_snapshot(&snapshot(6, &cfg, &[report(WireMode::Json)], &bad_codec)).is_err()
+        );
+    }
+
+    #[test]
+    fn codec_roundtrip_measures_both_paths() {
+        let c = codec_roundtrip(16, 3);
+        assert_eq!(c.n, 16);
+        assert!(c.json_b64_s > 0.0 && c.json_b64_s.is_finite());
+        assert!(c.frame_s > 0.0 && c.frame_s.is_finite());
+        assert!(c.speedup > 0.0);
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(LoadtestConfig::default().validate().is_ok());
+        assert!(LoadtestConfig { clients: 0, ..Default::default() }.validate().is_err());
+        assert!(LoadtestConfig { requests: 0, ..Default::default() }.validate().is_err());
+        assert!(
+            LoadtestConfig { rate: Some(0.0), ..Default::default() }.validate().is_err()
+        );
+        assert!(
+            LoadtestConfig { rate: Some(f64::NAN), ..Default::default() }.validate().is_err()
+        );
+    }
+
+    #[test]
+    fn wire_mode_parses() {
+        use std::str::FromStr;
+        for m in WireMode::all() {
+            assert_eq!(WireMode::from_str(m.as_str()).unwrap(), m);
+        }
+        assert!(WireMode::from_str("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_mode() {
+        let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
+        let out = render(&[report(WireMode::Json), report(WireMode::Binary)], &codec);
+        assert!(out.contains("json"), "{out}");
+        assert!(out.contains("binary"), "{out}");
+        assert!(out.contains("codec round-trip"), "{out}");
+    }
+}

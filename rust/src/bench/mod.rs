@@ -7,6 +7,7 @@
 //! experiment benches additionally print paper-vs-simulated-vs-measured
 //! rows (see [`crate::experiments`]).
 
+pub mod loadtest;
 pub mod stats;
 
 use std::time::{Duration, Instant};

@@ -41,6 +41,14 @@ pub struct Metrics {
     /// Gauge: requests waiting in the batcher right now (set by the
     /// collector each loop).
     pub queue_depth: AtomicU64,
+    /// Wire bytes read off client connections (JSON lines and binary
+    /// frames both), maintained by the TCP front-end.
+    pub wire_bytes_in_total: AtomicU64,
+    /// Wire bytes written to client connections.
+    pub wire_bytes_out_total: AtomicU64,
+    /// Binary frames handled (read or written) by the TCP front-end —
+    /// how much traffic has moved off the JSON line codec.
+    pub frames_total: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
 }
@@ -70,6 +78,12 @@ pub struct MetricsSnapshot {
     pub buffers_recycled_total: u64,
     /// Requests waiting in the batcher at snapshot time.
     pub queue_depth: u64,
+    /// Wire bytes read off client connections.
+    pub wire_bytes_in_total: u64,
+    /// Wire bytes written to client connections.
+    pub wire_bytes_out_total: u64,
+    /// Binary frames handled by the TCP front-end.
+    pub frames_total: u64,
     /// Total cross-queue steals in the device pool (0 off the pool backend).
     pub steals_total: u64,
     /// Per-device utilization (empty off the pool backend); filled by
@@ -138,6 +152,9 @@ impl Metrics {
             bytes_copied_total: self.bytes_copied_total.load(Ordering::Relaxed),
             buffers_recycled_total: self.buffers_recycled_total.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            wire_bytes_in_total: self.wire_bytes_in_total.load(Ordering::Relaxed),
+            wire_bytes_out_total: self.wire_bytes_out_total.load(Ordering::Relaxed),
+            frames_total: self.frames_total.load(Ordering::Relaxed),
             steals_total: 0,
             devices: Vec::new(),
             cache: crate::cache::stats::snapshot(),
@@ -188,6 +205,9 @@ impl MetricsSnapshot {
             ("bytes_copied_total", self.bytes_copied_total),
             ("buffers_recycled_total", self.buffers_recycled_total),
             ("queue_depth", self.queue_depth),
+            ("wire_bytes_in_total", self.wire_bytes_in_total),
+            ("wire_bytes_out_total", self.wire_bytes_out_total),
+            ("frames_total", self.frames_total),
             ("steals_total", self.steals_total),
             ("cache", self.cache.to_json()),
             ("devices", Json::Arr(devices)),
@@ -281,6 +301,20 @@ mod tests {
         for field in ["plan_hits", "prepared_hits", "result_hits", "result_evictions"] {
             assert!(j.contains(field), "{field} missing from {j}");
         }
+    }
+
+    #[test]
+    fn wire_totals_serialize() {
+        let m = Metrics::new();
+        m.wire_bytes_in_total.fetch_add(100, Ordering::Relaxed);
+        m.wire_bytes_out_total.fetch_add(250, Ordering::Relaxed);
+        m.frames_total.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.wire_bytes_in_total, s.wire_bytes_out_total, s.frames_total), (100, 250, 3));
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"wire_bytes_in_total\":100"), "{j}");
+        assert!(j.contains("\"wire_bytes_out_total\":250"), "{j}");
+        assert!(j.contains("\"frames_total\":3"), "{j}");
     }
 
     #[test]

@@ -335,6 +335,12 @@ impl ServiceHandle {
         )
     }
 
+    /// The live metrics struct itself, for layers that update counters
+    /// directly (the TCP front-end's wire-byte accounting).
+    pub(crate) fn metrics_shared(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Metrics snapshot; on the pool backend it carries the live
     /// per-device utilization and steal counts too.
     pub fn metrics(&self) -> crate::coordinator::metrics::MetricsSnapshot {

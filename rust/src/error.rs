@@ -32,6 +32,12 @@ pub enum MatexpError {
     /// Serving-layer failures (queue closed, worker died, protocol).
     Service(String),
 
+    /// The wire connection is dead (EOF mid-pipeline, a protocol
+    /// violation, or a failed write) and has been poisoned: every
+    /// outstanding ticket on it resolves to this instead of blocking
+    /// forever on a socket that will never answer.
+    Disconnected(String),
+
     /// Admission-control rejections: the request is well-formed but
     /// violates a configured limit (max matrix size, max power), so the
     /// caller can distinguish "fix your request" from "the service broke".
@@ -61,6 +67,7 @@ impl std::fmt::Display for MatexpError {
             MatexpError::Linalg(m) => write!(f, "linalg error: {m}"),
             MatexpError::Config(m) => write!(f, "config error: {m}"),
             MatexpError::Service(m) => write!(f, "service error: {m}"),
+            MatexpError::Disconnected(m) => write!(f, "connection lost: {m}"),
             MatexpError::Admission(m) => write!(f, "admission rejected: {m}"),
             MatexpError::Deadline(m) => write!(f, "deadline exceeded: {m}"),
             MatexpError::Io(e) => write!(f, "io error: {e}"),
@@ -111,6 +118,7 @@ mod tests {
         assert!(MatexpError::Config("x".into()).to_string().starts_with("config error"));
         assert!(MatexpError::UnsupportedOp("x".into()).to_string().starts_with("unsupported op"));
         assert!(MatexpError::Deadline("x".into()).to_string().starts_with("deadline exceeded"));
+        assert!(MatexpError::Disconnected("x".into()).to_string().starts_with("connection lost"));
         let io: MatexpError = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().contains("gone"));
     }

@@ -6,11 +6,14 @@
 //! * `expm`       — compute `A^N` once, printing stats (any method)
 //! * `experiment` — regenerate a paper table+figures or an ablation
 //! * `serve`      — run the TCP serving front-end
+//! * `loadtest`   — drive a server with concurrent wire clients, write a
+//!   `BENCH_*.json` latency/throughput snapshot
 //! * `bench-report` — run every table in simulation and print the summary
 
 use std::str::FromStr;
 use std::sync::Arc;
 
+use matexp::bench::loadtest::{self, LoadtestConfig, WireMode};
 use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
 use matexp::coordinator::service::Service;
@@ -51,6 +54,16 @@ COMMANDS:
                                        (A6: cold vs plan-warm vs result-warm
                                         at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
+  loadtest     wire load harness       [--addr HOST:PORT] [--clients K]
+                                       [--requests R] [--warmup W] [--n SIZE]
+                                       [--power N] [--method M] [--rate RPS]
+                                       [--wire json|base64|binary|all]
+                                       [--codec-n SIZE] [--bench-id ID]
+                                       [--out FILE]
+                                       (no --addr: serves itself in-process;
+                                        --rate: open loop at RPS per client;
+                                        --check FILE: validate a snapshot
+                                        and exit)
   bench-report all tables, simulation-only summary
 
 GLOBAL FLAGS:
@@ -148,6 +161,7 @@ fn run(args: &Args) -> Result<()> {
         "expm" => cmd_expm(args, &cfg),
         "experiment" => cmd_experiment(args, &cfg),
         "serve" => cmd_serve(args, cfg),
+        "loadtest" => cmd_loadtest(args, cfg),
         "bench-report" => cmd_bench_report(args, &cfg),
         other => Err(MatexpError::Config(format!(
             "unknown command {other:?}; see --help"
@@ -476,6 +490,80 @@ fn cmd_serve(args: &Args, cfg: MatexpConfig) -> Result<()> {
         println!("serving sizes {:?}", service.sizes());
     }
     matexp::server::server::serve(service, &addr, conn_threads)
+}
+
+fn cmd_loadtest(args: &Args, cfg: MatexpConfig) -> Result<()> {
+    // validation-only mode: CI gates committed `BENCH_*.json` files on it
+    if let Some(path) = args.get("check") {
+        let path = path.to_string();
+        args.reject_unknown()?;
+        let text = std::fs::read_to_string(&path)?;
+        let v = matexp::util::json::Json::parse(&text)?;
+        loadtest::validate_snapshot(&v)?;
+        println!("{path}: valid loadtest snapshot");
+        return Ok(());
+    }
+
+    let lt = LoadtestConfig {
+        clients: args.get_parsed_or("clients", 4)?,
+        requests: args.get_parsed_or("requests", 25)?,
+        warmup: args.get_parsed_or("warmup", 2)?,
+        n: args.get_parsed_or("n", 64)?,
+        power: args.get_parsed_or("power", 256)?,
+        method: Method::from_str(&args.get_or("method", "ours"))?,
+        rate: args.get_parsed::<f64>("rate")?,
+        seed: cfg.seed,
+    };
+    lt.validate()?;
+    let modes: Vec<WireMode> = match args.get_or("wire", "all").as_str() {
+        "all" => WireMode::all().to_vec(),
+        one => vec![WireMode::from_str(one)?],
+    };
+    let codec_n: usize = args.get_parsed_or("codec-n", 1024)?;
+    let bench_id: u64 = args.get_parsed_or("bench-id", 6)?;
+    let out = args.get_or("out", &format!("BENCH_{bench_id}.json"));
+    let external_addr = args.get("addr").map(str::to_string);
+    args.reject_unknown()?;
+
+    // no --addr: serve ourselves in-process so `matexp loadtest` is a
+    // one-command benchmark (and the CI smoke job needs no orchestration)
+    let (addr, own_server) = match external_addr {
+        Some(addr) => (addr, None),
+        None => {
+            println!("starting in-process server: {} workers, backend {}", cfg.workers, cfg.backend);
+            let service = Arc::new(Service::start(cfg)?);
+            let server =
+                matexp::server::server::serve_background(Arc::clone(&service), "127.0.0.1:0", 32)?;
+            (server.local_addr().to_string(), Some((service, server)))
+        }
+    };
+
+    let mut reports = Vec::with_capacity(modes.len());
+    for mode in modes {
+        println!(
+            "{}: {} clients x {} requests (+{} warmup), n={}, N={} ({} loop)…",
+            mode.as_str(),
+            lt.clients,
+            lt.requests,
+            lt.warmup,
+            lt.n,
+            lt.power,
+            if lt.rate.is_some() { "open" } else { "closed" },
+        );
+        reports.push(loadtest::run_mode(&addr, mode, &lt)?);
+    }
+    let codec = loadtest::codec_roundtrip(codec_n, 3);
+    print!("\n{}", loadtest::render(&reports, &codec));
+
+    let snap = loadtest::snapshot(bench_id, &lt, &reports, &codec);
+    loadtest::validate_snapshot(&snap)?;
+    std::fs::write(&out, snap.to_string_pretty() + "\n")?;
+    println!("snapshot written to {out}");
+
+    if let Some((_service, server)) = own_server {
+        server.shutdown(); // unblocks accept, drains connections, joins threads
+    }
+    Ok(())
 }
 
 fn cmd_bench_report(args: &Args, cfg: &MatexpConfig) -> Result<()> {

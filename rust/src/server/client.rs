@@ -1,9 +1,20 @@
-//! Blocking client for the JSON-lines protocol, with pipelining: `submit`
-//! writes a request line tagged with a client-chosen id and returns a
-//! ticket immediately; `wait` resolves tickets in ANY order, stashing
-//! whatever other replies arrive in between. One connection carries many
+//! Blocking client for the wire protocol, with pipelining: `submit`
+//! writes a request tagged with a client-chosen id and returns a ticket
+//! immediately; `wait` resolves tickets in ANY order, stashing whatever
+//! other replies arrive in between. One connection carries many
 //! in-flight requests — the wire mirror of
 //! [`crate::exec::JobHandle`]'s submit/wait split.
+//!
+//! The client speaks JSON lines by default and upgrades to binary frames
+//! after [`MatexpClient::negotiate_binary`] (a JSON `hello` the server
+//! acks with its frame version; pre-frame servers answer an error and
+//! the client simply stays on JSON — same socket, no reconnect).
+//!
+//! A dead connection is **poisoned**: EOF, a protocol violation, or a
+//! failed read/write marks the client broken and every call from then on
+//! — including `wait` on tickets submitted earlier — returns
+//! [`MatexpError::Disconnected`] instead of blocking on a socket that
+//! will never answer.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
@@ -12,6 +23,7 @@ use std::net::TcpStream;
 use crate::coordinator::request::Method;
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
+use crate::server::frame::{self, Frame};
 use crate::server::proto::{Payload, WireRequest, WireResponse, WireStats};
 use crate::util::json::Json;
 
@@ -19,8 +31,15 @@ use crate::util::json::Json;
 pub struct MatexpClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
-    /// Matrix payload encoding for requests (server mirrors it back).
+    /// Matrix payload encoding for JSON-line requests (server mirrors it
+    /// back). Ignored on the binary frame path, which is always raw f32.
     payload: Payload,
+    /// Submit expm requests as binary frames (after a successful
+    /// [`Self::negotiate_binary`]).
+    binary: bool,
+    /// Once set, the connection is dead and every call fails fast with
+    /// [`MatexpError::Disconnected`] carrying this reason.
+    poisoned: Option<String>,
     /// Next client-chosen request id for pipelined submissions.
     next_id: u64,
     /// Replies that arrived while waiting on a different ticket.
@@ -32,6 +51,9 @@ pub struct MatexpClient {
     /// out-of-order frontier and is pruned as the floor advances.
     resolved: HashSet<u64>,
     resolved_floor: u64,
+    /// Wire bytes written / read over this connection's lifetime.
+    bytes_out: u64,
+    bytes_in: u64,
 }
 
 /// Ticket for one in-flight pipelined request (resolve with
@@ -59,34 +81,127 @@ impl MatexpClient {
             reader,
             writer: stream,
             payload: Payload::Json,
+            binary: false,
+            poisoned: None,
             next_id: 1,
             pending: HashMap::new(),
             resolved: HashSet::new(),
             resolved_floor: 1,
+            bytes_out: 0,
+            bytes_in: 0,
         })
     }
 
-    /// Use the compact base64 payload encoding (bit-exact, 1/3 the wire
-    /// bytes, ~10x the codec speed for large matrices).
+    /// Use the compact base64 payload encoding on JSON lines (bit-exact,
+    /// 1/3 the wire bytes, ~10x the codec speed for large matrices).
     pub fn with_base64(mut self) -> MatexpClient {
         self.payload = Payload::Base64;
         self
     }
 
-    fn send(&mut self, req: &WireRequest) -> Result<()> {
-        let mut line = req.encode()?.into_bytes();
-        line.push(b'\n');
-        self.writer.write_all(&line)?;
+    /// Negotiate the binary frame codec: send a JSON `hello`, and if the
+    /// server acks a frame version ≥ 1, submit expm requests as binary
+    /// frames from here on (replies come back binary too). Returns
+    /// whether the upgrade happened — `false` against pre-frame servers,
+    /// which answer `unknown op`; the connection stays up on JSON lines
+    /// either way.
+    pub fn negotiate_binary(&mut self) -> Result<bool> {
+        self.send(&WireRequest::Hello { frame_version: u32::from(frame::VERSION) })?;
+        match self.recv_unidentified()? {
+            WireResponse::Ok { frame: Some(v), .. } if v >= 1 => {
+                self.binary = true;
+                Ok(true)
+            }
+            WireResponse::Ok { .. } | WireResponse::Error { .. } => Ok(false),
+        }
+    }
+
+    /// Whether expm requests currently go out as binary frames.
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Wire traffic over this connection's lifetime: `(bytes written,
+    /// bytes read)` — what the load harness's per-request byte counters
+    /// are built from.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.bytes_out, self.bytes_in)
+    }
+
+    /// Fail fast once the connection is poisoned.
+    fn guard(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(why) => Err(MatexpError::Disconnected(why.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// Mark the connection dead and return the typed error. Every
+    /// outstanding ticket's next `wait` (and any later call) gets the
+    /// same [`MatexpError::Disconnected`].
+    fn poison(&mut self, why: impl Into<String>) -> MatexpError {
+        let why = why.into();
+        self.poisoned = Some(why.clone());
+        MatexpError::Disconnected(why)
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        self.guard()?;
+        if let Err(e) = self.writer.write_all(bytes) {
+            return Err(self.poison(format!("write failed: {e}")));
+        }
+        self.bytes_out += bytes.len() as u64;
         Ok(())
     }
 
+    fn send(&mut self, req: &WireRequest) -> Result<()> {
+        let mut line = req.encode()?.into_bytes();
+        line.push(b'\n');
+        self.send_bytes(&line)
+    }
+
     fn read_response(&mut self) -> Result<WireResponse> {
-        let mut buf = String::new();
-        self.reader.read_line(&mut buf)?;
-        if buf.is_empty() {
-            return Err(MatexpError::Service("server closed the connection".into()));
+        self.guard()?;
+        // one-byte peek dispatches the codec, mirroring the server
+        let first = match self.reader.fill_buf() {
+            Ok([]) => return Err(self.poison("server closed the connection")),
+            Ok(buf) => buf[0],
+            Err(e) => return Err(self.poison(format!("read failed: {e}"))),
+        };
+        if first == frame::MAGIC[0] {
+            let (f, wire_bytes) = match Frame::read_from(&mut self.reader, frame::MAX_PAYLOAD) {
+                Ok(ok) => ok,
+                // any frame damage poisons: the byte stream is untrustworthy
+                Err(e) => return Err(self.poison(format!("bad frame from server: {e}"))),
+            };
+            self.bytes_in += wire_bytes as u64;
+            match f {
+                Frame::ExpmOk { id, stats, result, .. } => Ok(WireResponse::Ok {
+                    result: Some(result),
+                    stats: Some(stats),
+                    metrics: None,
+                    payload: self.payload,
+                    id: Some(id),
+                    frame: None,
+                }),
+                Frame::Error { id, kind, message } => {
+                    Ok(WireResponse::Error { message, kind, id })
+                }
+                Frame::Expm { .. } => {
+                    Err(self.poison("server sent a request frame as a reply"))
+                }
+            }
+        } else {
+            let mut buf = String::new();
+            match self.reader.read_line(&mut buf) {
+                Ok(0) => Err(self.poison("server closed the connection")),
+                Ok(k) => {
+                    self.bytes_in += k as u64;
+                    WireResponse::decode(buf.trim_end())
+                }
+                Err(e) => Err(self.poison(format!("read failed: {e}"))),
+            }
         }
-        WireResponse::decode(buf.trim_end())
     }
 
     /// Read until a response WITHOUT an id arrives (the reply to a legacy
@@ -108,30 +223,45 @@ impl MatexpClient {
         self.recv_unidentified()
     }
 
-    /// Submit `matrix^power` without waiting: the request is written with
-    /// a client-chosen id and a ticket comes back immediately. Resolve it
+    /// Submit `matrix^power` without waiting: the request goes out tagged
+    /// with a client-chosen id (as a binary frame once negotiated, a JSON
+    /// line otherwise) and a ticket comes back immediately. Resolve it
     /// with [`Self::wait`] — in any order relative to other tickets.
     pub fn submit(&mut self, matrix: &Matrix, power: u64, method: Method) -> Result<PendingExpm> {
         let id = self.next_id;
-        let req = WireRequest::Expm {
-            n: matrix.n(),
-            power,
-            method,
-            matrix: matrix.data().to_vec(),
-            payload: self.payload,
-            id: Some(id),
-        };
-        // consume the id only once the line is actually on the wire: an
+        // consume the id only once the request is actually on the wire: an
         // encode failure (non-finite JSON payload) must not burn an id
         // that would then sit below the resolved-floor watermark forever
-        self.send(&req)?;
+        if self.binary {
+            let f = Frame::Expm {
+                id,
+                n: matrix.n(),
+                power,
+                method,
+                matrix: matrix.data().to_vec(),
+            };
+            self.send_bytes(&f.encode())?;
+        } else {
+            let req = WireRequest::Expm {
+                n: matrix.n(),
+                power,
+                method,
+                matrix: matrix.data().to_vec(),
+                payload: self.payload,
+                id: Some(id),
+            };
+            self.send(&req)?;
+        }
         self.next_id += 1;
         Ok(PendingExpm { id, n: matrix.n() })
     }
 
-    /// Resolve one ticket: returns its result as soon as its reply line
+    /// Resolve one ticket: returns its result as soon as its reply
     /// arrives, buffering replies to other in-flight tickets meanwhile.
-    /// A ticket resolves once; waiting on it again is a typed error.
+    /// A ticket resolves once; waiting on it again is a typed error. On a
+    /// poisoned connection (EOF or protocol violation, now or during an
+    /// earlier call) every unresolved ticket's wait returns
+    /// [`MatexpError::Disconnected`].
     pub fn wait(&mut self, job: &PendingExpm) -> Result<(Matrix, WireStats)> {
         if job.id < self.resolved_floor || self.resolved.contains(&job.id) {
             return Err(MatexpError::Service(format!(
@@ -149,25 +279,32 @@ impl MatexpClient {
                 Some(rid) => {
                     self.pending.insert(rid, resp);
                 }
+                // an id-less reply mid-pipeline can't be routed to ANY
+                // ticket — the stream's reply pairing is broken, so the
+                // whole connection is poisoned, not just this wait
                 None => {
-                    return Err(MatexpError::Service(
+                    return Err(self.poison(
                         "server sent an un-identified reply while pipelined \
-                         requests were in flight"
-                            .into(),
+                         requests were in flight",
                     ))
                 }
             }
         }
     }
 
-    /// Compute `matrix^power` remotely — the one-shot convenience (and
-    /// the legacy no-id wire path): submit + wait in one call.
+    /// Compute `matrix^power` remotely — the one-shot convenience. On a
+    /// binary-negotiated connection this is submit + wait on a frame; on
+    /// JSON it is the legacy no-id wire path.
     pub fn expm(
         &mut self,
         matrix: &Matrix,
         power: u64,
         method: Method,
     ) -> Result<(Matrix, WireStats)> {
+        if self.binary {
+            let ticket = self.submit(matrix, power, method)?;
+            return self.wait(&ticket);
+        }
         let req = WireRequest::Expm {
             n: matrix.n(),
             power,

@@ -1,0 +1,542 @@
+//! Length-prefixed binary frames: the zero-copy sibling of the JSON line
+//! codec in [`crate::server::proto`].
+//!
+//! A frame is a fixed 12-byte header followed by a payload, everything
+//! little-endian:
+//!
+//! ```text
+//! +--------+--------+--------+--------+
+//! | 0xB5   |  'M'   |  'X'   |  'F'   |   magic (first byte >= 0x80, so a
+//! +--------+--------+--------+--------+   frame can never be confused with
+//! | ver=1  | kind   | reserved (=0)   |   the first byte of a JSON line)
+//! +--------+--------+-----------------+
+//! | payload length (u32, LE)          |
+//! +-----------------------------------+
+//! | payload ...                       |
+//! +-----------------------------------+
+//! ```
+//!
+//! Payload layouts by `kind`:
+//!
+//! * `1` — expm request: `id:u64 | power:u64 | n:u32 | method_len:u8 |
+//!   method:utf8 | matrix:(n*n)×f32`
+//! * `2` — expm ok: `id:u64 | n:u32 | stats_len:u32 | stats:utf8-JSON |
+//!   result:(n*n)×f32`
+//! * `3` — error: `has_id:u8 | id:u64 | kind_len:u8 | kind:utf8 |
+//!   msg_len:u32 | message:utf8`
+//!
+//! The matrix travels as raw little-endian `f32` bytes — no base64, no
+//! intermediate `String` — and decodes straight into a `Vec<f32>` that
+//! [`crate::linalg::matrix::Matrix::from_vec`] (and from there the
+//! engine's arena-adopting upload path) takes by value. Binary expm
+//! requests always carry an id: the frame path is pipelined-only, the
+//! legacy ordered one-shot contract stays on JSON lines.
+//!
+//! Error handling is split in two deliberate layers: [`read_raw`] fails
+//! only on *framing* damage (bad magic/version, truncated stream,
+//! oversized length) — those poison the byte stream and the connection
+//! must close — while [`Frame::decode`] fails on *content* damage inside
+//! one well-delimited payload, which the connection survives (the server
+//! answers with an error frame, salvaging the request id via
+//! [`salvage_id`] when the prefix is intact).
+
+use std::io::Read;
+use std::str::FromStr;
+
+use crate::coordinator::request::Method;
+use crate::error::{MatexpError, Result};
+use crate::server::proto::WireStats;
+use crate::util::json::Json;
+
+/// Frame preamble. The first byte is ≥ 0x80 so the serving loop can
+/// dispatch frame-vs-JSON-line by peeking a single byte: no JSON line
+/// (nor any ASCII text) ever starts with it.
+pub const MAGIC: [u8; 4] = [0xB5, b'M', b'X', b'F'];
+
+/// Wire format version this build speaks (negotiated via the JSON
+/// `hello` op; see [`crate::server::proto::WireRequest::Hello`]).
+pub const VERSION: u8 = 1;
+
+/// Fixed header size in bytes (magic + version + kind + reserved + len).
+pub const HEADER_LEN: usize = 12;
+
+/// Default ceiling on a frame's payload length (256 MiB — comfortably
+/// above the largest admissible matrix, far below an attacker-chosen
+/// 4 GiB allocation). [`read_raw`] rejects longer frames up front.
+pub const MAX_PAYLOAD: u32 = 256 * 1024 * 1024;
+
+/// Payload kind tag of an expm request frame.
+pub const KIND_EXPM: u8 = 1;
+/// Payload kind tag of a successful expm reply frame.
+pub const KIND_EXPM_OK: u8 = 2;
+/// Payload kind tag of an error reply frame.
+pub const KIND_ERROR: u8 = 3;
+
+/// One binary wire message (either direction).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Compute `matrix^power` — the binary sibling of
+    /// [`crate::server::proto::WireRequest::Expm`]. Always pipelined
+    /// (carries a client-chosen id).
+    Expm {
+        /// Client-chosen request id (echoed on the reply frame).
+        id: u64,
+        /// Matrix side length.
+        n: usize,
+        /// The exponent `N`.
+        power: u64,
+        /// Execution method the server should use.
+        method: Method,
+        /// Row-major operand, length `n * n`, bit-exact on the wire.
+        matrix: Vec<f32>,
+    },
+    /// A successful expm reply.
+    ExpmOk {
+        /// Echo of the request id.
+        id: u64,
+        /// Matrix side length.
+        n: usize,
+        /// Execution stats (as the same JSON object the line codec uses,
+        /// so both codecs share one stats schema).
+        stats: WireStats,
+        /// Row-major result, length `n * n`, bit-exact on the wire.
+        result: Vec<f32>,
+    },
+    /// A failed reply (mirrors [`crate::server::proto::WireResponse::Error`]).
+    Error {
+        /// Echo of the request id, when it could be recovered.
+        id: Option<u64>,
+        /// Machine-readable error class (`admission`, `deadline`, …).
+        kind: String,
+        /// Human-readable error text.
+        message: String,
+    },
+}
+
+/// Little-endian payload cursor with typed truncation errors.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(MatexpError::Service(format!(
+                "frame payload truncated reading {what} ({len} bytes at offset {}, {} available)",
+                self.pos,
+                self.buf.len() - self.pos
+            ))),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self, len: usize, what: &str) -> Result<&'a str> {
+        std::str::from_utf8(self.take(len, what)?)
+            .map_err(|_| MatexpError::Service(format!("frame: {what} is not UTF-8")))
+    }
+
+    /// n*n little-endian f32s, decoded straight into an owned `Vec<f32>`.
+    fn f32_matrix(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let count = n
+            .checked_mul(n)
+            .ok_or_else(|| MatexpError::Service(format!("frame: {what} side {n} overflows")))?;
+        let bytes = self.take(
+            count
+                .checked_mul(4)
+                .ok_or_else(|| MatexpError::Service(format!("frame: {what} too large")))?,
+            what,
+        )?;
+        let mut out = Vec::with_capacity(count);
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+        Ok(out)
+    }
+
+    /// Reject trailing garbage: a payload must be exactly its fields.
+    fn finish(&self, kind: u8) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(MatexpError::Service(format!(
+                "frame kind {kind}: {} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn push_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    out.reserve(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+impl Frame {
+    /// Kind tag this frame encodes as.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Expm { .. } => KIND_EXPM,
+            Frame::ExpmOk { .. } => KIND_EXPM_OK,
+            Frame::Error { .. } => KIND_ERROR,
+        }
+    }
+
+    /// The frame's request id, when it carries one.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Frame::Expm { id, .. } | Frame::ExpmOk { id, .. } => Some(*id),
+            Frame::Error { id, .. } => *id,
+        }
+    }
+
+    /// Build an error frame from a typed error, keeping its wire kind
+    /// (the binary mirror of
+    /// [`crate::server::proto::WireResponse::from_error`]).
+    pub fn from_error(e: &MatexpError, id: Option<u64>) -> Frame {
+        Frame::Error {
+            id,
+            kind: crate::server::proto::error_kind(e).to_string(),
+            message: e.to_string(),
+        }
+    }
+
+    /// Encode header + payload into one byte vector, ready to write.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload: Vec<u8> = Vec::new();
+        match self {
+            Frame::Expm { id, n, power, method, matrix } => {
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&power.to_le_bytes());
+                payload.extend_from_slice(&(*n as u32).to_le_bytes());
+                let m = method.as_str().as_bytes();
+                payload.push(m.len() as u8);
+                payload.extend_from_slice(m);
+                push_f32s(&mut payload, matrix);
+            }
+            Frame::ExpmOk { id, n, stats, result } => {
+                payload.extend_from_slice(&id.to_le_bytes());
+                payload.extend_from_slice(&(*n as u32).to_le_bytes());
+                let stats = stats.to_json().to_string();
+                payload.extend_from_slice(&(stats.len() as u32).to_le_bytes());
+                payload.extend_from_slice(stats.as_bytes());
+                push_f32s(&mut payload, result);
+            }
+            Frame::Error { id, kind, message } => {
+                payload.push(u8::from(id.is_some()));
+                payload.extend_from_slice(&id.unwrap_or(0).to_le_bytes());
+                payload.push(kind.len().min(255) as u8);
+                payload.extend_from_slice(&kind.as_bytes()[..kind.len().min(255)]);
+                payload.extend_from_slice(&(message.len() as u32).to_le_bytes());
+                payload.extend_from_slice(message.as_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.kind());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode one payload previously delimited by [`read_raw`]. Failures
+    /// here are *content* errors: the stream framing is intact and the
+    /// connection may keep serving.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor::new(payload);
+        let frame = match kind {
+            KIND_EXPM => {
+                let id = c.u64("id")?;
+                let power = c.u64("power")?;
+                let n = c.u32("n")? as usize;
+                let mlen = c.u8("method length")? as usize;
+                let method = Method::from_str(c.str(mlen, "method")?)?;
+                let matrix = c.f32_matrix(n, "matrix")?;
+                Frame::Expm { id, n, power, method, matrix }
+            }
+            KIND_EXPM_OK => {
+                let id = c.u64("id")?;
+                let n = c.u32("n")? as usize;
+                let slen = c.u32("stats length")? as usize;
+                let stats = WireStats::from_json(&Json::parse(c.str(slen, "stats")?)?)?;
+                let result = c.f32_matrix(n, "result")?;
+                Frame::ExpmOk { id, n, stats, result }
+            }
+            KIND_ERROR => {
+                let has_id = c.u8("has_id")?;
+                let id = c.u64("id")?;
+                let klen = c.u8("kind length")? as usize;
+                let kind = c.str(klen, "error kind")?.to_string();
+                let mlen = c.u32("message length")? as usize;
+                let message = c.str(mlen, "message")?.to_string();
+                Frame::Error { id: (has_id != 0).then_some(id), kind, message }
+            }
+            other => {
+                return Err(MatexpError::Service(format!("unknown frame kind {other}")));
+            }
+        };
+        c.finish(kind)?;
+        Ok(frame)
+    }
+
+    /// Read + decode one whole frame (client-side convenience). Returns
+    /// the frame and the number of wire bytes it occupied.
+    pub fn read_from(r: &mut impl Read, max_payload: u32) -> Result<(Frame, usize)> {
+        let (kind, payload) = read_raw(r, max_payload)?;
+        let wire_bytes = HEADER_LEN + payload.len();
+        Ok((Frame::decode(kind, &payload)?, wire_bytes))
+    }
+}
+
+/// Read one frame's header + payload bytes off the stream. Failures here
+/// are *framing* errors (bad magic/version, truncation, oversized
+/// length): the byte stream is no longer trustworthy and the caller must
+/// close the connection.
+pub fn read_raw(r: &mut impl Read, max_payload: u32) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(truncated("frame header"))?;
+    if header[..4] != MAGIC {
+        return Err(MatexpError::Service(format!(
+            "bad frame magic {:02x?}",
+            &header[..4]
+        )));
+    }
+    if header[4] != VERSION {
+        return Err(MatexpError::Service(format!(
+            "unsupported frame version {} (this build speaks {VERSION})",
+            header[4]
+        )));
+    }
+    if header[6] != 0 || header[7] != 0 {
+        return Err(MatexpError::Service("nonzero reserved bytes in frame header".into()));
+    }
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    if len > max_payload {
+        return Err(MatexpError::Service(format!(
+            "oversized frame: payload {len} bytes exceeds the {max_payload}-byte cap"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(truncated("frame payload"))?;
+    Ok((header[5], payload))
+}
+
+/// Best-effort request-id recovery from a damaged payload, so the error
+/// reply can still be routed to the waiting ticket. The id prefix sits at
+/// a fixed offset in every kind, so any payload long enough yields it.
+pub fn salvage_id(kind: u8, payload: &[u8]) -> Option<u64> {
+    let at = |off: usize| -> Option<u64> {
+        let b = payload.get(off..off + 8)?;
+        Some(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    };
+    match kind {
+        KIND_EXPM | KIND_EXPM_OK => at(0),
+        KIND_ERROR if payload.first() == Some(&1) => at(1),
+        _ => None,
+    }
+}
+
+/// Map `read_exact`'s EOF to a typed truncation error (anything else
+/// stays an I/O error).
+fn truncated(what: &'static str) -> impl Fn(std::io::Error) -> MatexpError {
+    move |e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            MatexpError::Service(format!("truncated {what}: connection cut mid-frame"))
+        } else {
+            MatexpError::Io(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> WireStats {
+        WireStats {
+            launches: 3,
+            multiplies: 5,
+            h2d_transfers: 1,
+            d2h_transfers: 1,
+            bytes_copied: 2048,
+            buffers_recycled: 2,
+            peak_resident_bytes: 1 << 16,
+            wall_s: 0.125,
+            per_device: Vec::new(),
+        }
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let (got, wire) = Frame::read_from(&mut &bytes[..], MAX_PAYLOAD).unwrap();
+        assert_eq!(wire, bytes.len());
+        got
+    }
+
+    #[test]
+    fn expm_request_roundtrips() {
+        let f = Frame::Expm {
+            id: 42,
+            n: 2,
+            power: 100,
+            method: Method::Ours,
+            matrix: vec![1.0, -2.5, 0.0, 3.25],
+        };
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn expm_ok_roundtrips_with_stats() {
+        let f = Frame::ExpmOk { id: 7, n: 2, stats: stats(), result: vec![0.5; 4] };
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn error_frames_roundtrip_with_and_without_id() {
+        for id in [None, Some(9u64)] {
+            let f = Frame::Error { id, kind: "admission".into(), message: "too big".into() };
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn non_finite_values_are_bit_exact() {
+        // the whole point of the binary path: NaN/±Inf/subnormals travel
+        // unchanged, where the JSON array codec must refuse them
+        let weird = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1e-42, -0.0, f32::MIN_POSITIVE, 1.0, 2.0, 3.0];
+        let f = Frame::Expm { id: 1, n: 3, power: 2, method: Method::CpuSeq, matrix: weird.clone() };
+        match roundtrip(&f) {
+            Frame::Expm { matrix, .. } => {
+                for (a, b) in weird.iter().zip(&matrix) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn n1_edge_roundtrips() {
+        let f = Frame::Expm { id: 1, n: 1, power: 1, method: Method::Ours, matrix: vec![2.0] };
+        assert_eq!(roundtrip(&f), f);
+        let f = Frame::ExpmOk { id: 1, n: 1, stats: stats(), result: vec![2.0] };
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn truncation_at_every_cut_is_a_typed_error() {
+        let bytes = Frame::Expm {
+            id: 3,
+            n: 2,
+            power: 8,
+            method: Method::Ours,
+            matrix: vec![1.0; 4],
+        }
+        .encode();
+        for cut in 0..bytes.len() {
+            let err = Frame::read_from(&mut &bytes[..cut], MAX_PAYLOAD).unwrap_err();
+            assert!(
+                matches!(err, MatexpError::Service(_)),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        let mut bytes = Frame::Error { id: None, kind: "service".into(), message: "x".into() }
+            .encode();
+        bytes[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::read_from(&mut &bytes[..], MAX_PAYLOAD).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+        // a small cap rejects even modest frames (servers can tighten it)
+        let small = Frame::Expm { id: 1, n: 4, power: 2, method: Method::Ours, matrix: vec![0.0; 16] }
+            .encode();
+        let err = Frame::read_from(&mut &small[..], 8).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_version_reserved_rejected() {
+        let good = Frame::Error { id: None, kind: "service".into(), message: "x".into() }.encode();
+        for (offset, value, needle) in [
+            (0usize, 0x7Bu8, "magic"),    // '{' — a JSON line where a frame should be
+            (4, 2, "version"),
+            (6, 1, "reserved"),
+        ] {
+            let mut bytes = good.clone();
+            bytes[offset] = value;
+            let err = Frame::read_from(&mut &bytes[..], MAX_PAYLOAD).unwrap_err();
+            assert!(err.to_string().contains(needle), "{offset}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_and_trailing_garbage_rejected() {
+        assert!(Frame::decode(99, &[]).is_err());
+        let f = Frame::Error { id: None, kind: "service".into(), message: "x".into() };
+        let mut bytes = f.encode();
+        bytes.push(0xEE); // trailing byte beyond the declared fields
+        let len = (bytes.len() - HEADER_LEN) as u32;
+        bytes[8..12].copy_from_slice(&len.to_le_bytes());
+        let err = Frame::read_from(&mut &bytes[..], MAX_PAYLOAD).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn wrong_matrix_length_is_a_content_error() {
+        // declared n=3 but only 4 floats present: decode must fail inside
+        // the delimited payload, not over/under-read the stream
+        let f = Frame::Expm { id: 1, n: 2, power: 2, method: Method::Ours, matrix: vec![1.0; 4] };
+        let mut bytes = f.encode();
+        bytes[HEADER_LEN + 16..HEADER_LEN + 20].copy_from_slice(&3u32.to_le_bytes());
+        let (kind, payload) = read_raw(&mut &bytes[..], MAX_PAYLOAD).unwrap();
+        assert!(Frame::decode(kind, &payload).is_err());
+        // but the id is still salvageable for the error reply
+        assert_eq!(salvage_id(kind, &payload), Some(1));
+        // and the unpatched encoding still decodes
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn salvage_id_recovers_prefixes_only() {
+        let expm = Frame::Expm { id: 77, n: 1, power: 1, method: Method::Ours, matrix: vec![1.0] };
+        let bytes = expm.encode();
+        assert_eq!(salvage_id(KIND_EXPM, &bytes[HEADER_LEN..]), Some(77));
+        assert_eq!(salvage_id(KIND_EXPM, &[1, 2]), None); // too short
+        let err = Frame::Error { id: Some(5), kind: "k".into(), message: "m".into() }.encode();
+        assert_eq!(salvage_id(KIND_ERROR, &err[HEADER_LEN..]), Some(5));
+        let anon = Frame::Error { id: None, kind: "k".into(), message: "m".into() }.encode();
+        assert_eq!(salvage_id(KIND_ERROR, &anon[HEADER_LEN..]), None);
+        assert_eq!(salvage_id(99, &bytes[HEADER_LEN..]), None);
+    }
+}

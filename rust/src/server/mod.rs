@@ -1,13 +1,21 @@
-//! TCP front-end: newline-delimited JSON over a socket.
+//! TCP front-end: newline-delimited JSON and binary frames over one
+//! socket.
 //!
 //! The deployment face of the coordinator — what turns the paper's kernel
-//! study into a service ("supercomputer at every desk", §1). Wire format
-//! is deliberately simple: one JSON object per line, both directions.
+//! study into a service ("supercomputer at every desk", §1). Two codecs
+//! share each connection: one JSON object per line (the readable default
+//! and the legacy contract, [`proto`]) and a length-prefixed binary
+//! frame format ([`frame`]) that carries matrices as raw little-endian
+//! `f32` bytes — no base64, no intermediate `String` — negotiated per
+//! connection with a JSON `hello`. The server dispatches by peeking one
+//! byte per message.
 
 pub mod client;
+pub mod frame;
 pub mod proto;
 pub mod server;
 
 pub use client::MatexpClient;
+pub use frame::Frame;
 pub use proto::{WireRequest, WireResponse, WireStats};
-pub use server::serve;
+pub use server::{serve, serve_background, Server};

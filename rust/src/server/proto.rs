@@ -56,6 +56,16 @@ pub enum WireRequest {
     Metrics,
     /// Liveness check.
     Ping,
+    /// Capability negotiation: the client announces the highest binary
+    /// frame version it speaks ([`crate::server::frame::VERSION`] for
+    /// this build, 0 for JSON-only). The server answers `ok` with a
+    /// `frame` field carrying the version both sides share (the min), or
+    /// — on pre-frame servers — an `unknown op` error, which the client
+    /// treats as "JSON lines only". Either way the connection stays up.
+    Hello {
+        /// Highest frame version the client can speak.
+        frame_version: u32,
+    },
 }
 
 /// One device's share of a pooled execution, on the wire.
@@ -235,6 +245,10 @@ pub enum WireResponse {
         /// Echo of the request's client-chosen id (pipelined requests
         /// only; legacy one-shot responses carry none).
         id: Option<u64>,
+        /// Negotiated binary frame version, on `hello` replies only
+        /// (`None` everywhere else, and on replies from pre-frame
+        /// servers, which never saw a `hello` they understood).
+        frame: Option<u32>,
     },
     /// A failed reply (`"status":"error"`).
     Error {
@@ -258,6 +272,9 @@ impl WireRequest {
         Ok(match self {
             WireRequest::Ping => r#"{"op":"ping"}"#.to_string(),
             WireRequest::Metrics => r#"{"op":"metrics"}"#.to_string(),
+            WireRequest::Hello { frame_version } => {
+                format!(r#"{{"op":"hello","frame":{frame_version}}}"#)
+            }
             WireRequest::Expm { n, power, method, matrix, payload, id } => {
                 let mut s = format!(
                     r#"{{"op":"expm","n":{n},"power":{power},"method":"{}","#,
@@ -293,6 +310,10 @@ impl WireRequest {
         match op {
             "ping" => Ok(WireRequest::Ping),
             "metrics" => Ok(WireRequest::Metrics),
+            "hello" => Ok(WireRequest::Hello {
+                // a hello without a frame field is a JSON-only peer
+                frame_version: v.get("frame").and_then(Json::as_u64).unwrap_or(0) as u32,
+            }),
             "expm" => {
                 let n = v
                     .get("n")
@@ -347,6 +368,7 @@ impl WireResponse {
             metrics: None,
             payload,
             id: None,
+            frame: None,
         }
     }
 
@@ -357,13 +379,20 @@ impl WireResponse {
 
     /// Typed error → wire error, preserving the error class.
     pub fn from_error(e: &MatexpError) -> WireResponse {
-        let kind = match e {
-            MatexpError::Admission(_) => "admission",
-            MatexpError::Config(_) => "config",
-            MatexpError::Deadline(_) => "deadline",
-            _ => "service",
-        };
-        WireResponse::Error { message: e.to_string(), kind: kind.into(), id: None }
+        WireResponse::Error { message: e.to_string(), kind: error_kind(e).into(), id: None }
+    }
+
+    /// The `ok` reply to a `hello`: echoes the frame version both sides
+    /// share (0 = JSON lines only).
+    pub fn hello_ack(frame_version: u32) -> WireResponse {
+        WireResponse::Ok {
+            result: None,
+            stats: None,
+            metrics: None,
+            payload: Payload::Json,
+            id: None,
+            frame: Some(frame_version),
+        }
     }
 
     /// Wire error → typed error (the client side of [`Self::from_error`]).
@@ -384,6 +413,7 @@ impl WireResponse {
             metrics: None,
             payload: Payload::Json,
             id: None,
+            frame: None,
         }
     }
 
@@ -419,10 +449,13 @@ impl WireResponse {
                 }
                 obj.to_string()
             }
-            WireResponse::Ok { result, stats, metrics, payload, id } => {
+            WireResponse::Ok { result, stats, metrics, payload, id, frame } => {
                 let mut s = String::from(r#"{"status":"ok""#);
                 if let Some(id) = id {
                     s.push_str(&format!(r#","id":{id}"#));
+                }
+                if let Some(v) = frame {
+                    s.push_str(&format!(r#","frame":{v}"#));
                 }
                 if let Some(data) = result {
                     match payload {
@@ -476,6 +509,7 @@ impl WireResponse {
                     metrics: v.get("metrics").cloned(),
                     payload,
                     id: v.get("id").and_then(Json::as_u64),
+                    frame: v.get("frame").and_then(Json::as_u64).map(|v| v as u32),
                 })
             }
             Some("error") => Ok(WireResponse::Error {
@@ -493,6 +527,20 @@ impl WireResponse {
             }),
             _ => Err(MatexpError::Service("response missing \"status\"".into())),
         }
+    }
+}
+
+/// Typed error → wire error class, shared by the JSON line codec
+/// ([`WireResponse::from_error`]) and the binary frame codec
+/// ([`crate::server::frame::Frame::from_error`]): `admission` = fix your
+/// request, `deadline` = retry with a looser deadline, `config`,
+/// `service` = the service's problem.
+pub fn error_kind(e: &MatexpError) -> &'static str {
+    match e {
+        MatexpError::Admission(_) => "admission",
+        MatexpError::Config(_) => "config",
+        MatexpError::Deadline(_) => "deadline",
+        _ => "service",
     }
 }
 
@@ -536,6 +584,7 @@ mod tests {
             metrics: None,
             payload: Payload::Base64,
             id: None,
+            frame: None,
         };
         assert_eq!(WireResponse::decode(&resp.encode().unwrap()).unwrap(), resp);
     }
@@ -548,6 +597,7 @@ mod tests {
             metrics: None,
             payload,
             id: None,
+            frame: None,
         };
         // JSON has no NaN/Inf: encoding must refuse, not corrupt
         assert!(make(Payload::Json).encode().is_err());
@@ -571,6 +621,28 @@ mod tests {
     }
 
     #[test]
+    fn hello_negotiation_roundtrips() {
+        let r = WireRequest::Hello { frame_version: 1 };
+        let line = r.encode().unwrap();
+        assert!(line.contains(r#""op":"hello""#), "{line}");
+        assert_eq!(WireRequest::decode(&line).unwrap(), r);
+        // a hello without the frame field decodes as a JSON-only peer
+        match WireRequest::decode(r#"{"op":"hello"}"#).unwrap() {
+            WireRequest::Hello { frame_version } => assert_eq!(frame_version, 0),
+            other => panic!("{other:?}"),
+        }
+        // the ack carries the negotiated version; plain oks carry none
+        let ack = WireResponse::hello_ack(1);
+        let line = ack.encode().unwrap();
+        assert!(line.contains(r#""frame":1"#), "{line}");
+        match WireResponse::decode(&line).unwrap() {
+            WireResponse::Ok { frame, .. } => assert_eq!(frame, Some(1)),
+            other => panic!("{other:?}"),
+        }
+        assert!(!WireResponse::pong().encode().unwrap().contains("frame"));
+    }
+
+    #[test]
     fn response_roundtrip() {
         let resp = WireResponse::Ok {
             result: Some(vec![1.0, 2.0]),
@@ -588,6 +660,7 @@ mod tests {
             metrics: None,
             payload: Payload::Json,
             id: None,
+            frame: None,
         };
         let line = resp.encode().unwrap();
         assert!(line.contains("bytes_copied"), "{line}");
@@ -634,6 +707,7 @@ mod tests {
             metrics: None,
             payload: Payload::Json,
             id: None,
+            frame: None,
         };
         let line = resp.encode().unwrap();
         assert!(line.contains("per_device"), "{line}");

@@ -9,23 +9,42 @@
 //! per-connection completion pump drains one shared reply channel;
 //! requests *without* an id keep the legacy one-shot contract: answered
 //! in order before the next line is read.
+//!
+//! Both wire codecs ride one socket: the reader peeks a single byte per
+//! message — [`frame::MAGIC`]'s first byte (≥ 0x80) means a binary
+//! frame, anything else a JSON line — so a client may interleave binary
+//! frames, pipelined JSON lines, and legacy id-less JSON lines freely.
+//! Replies mirror the codec of their request.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Method;
 use crate::coordinator::service::ServiceHandle;
 use crate::error::{MatexpError, Result};
 use crate::exec::{JobReply, Submission};
+use crate::linalg::matrix::Matrix;
+use crate::server::frame::{self, Frame};
 use crate::server::proto::{Payload, WireRequest, WireResponse};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
-/// A running server: bound address + accept-loop thread.
+/// Live connections by connection id, so [`Server::shutdown`] can cut
+/// their sockets and unblock the read loops.
+type ConnRegistry = Arc<Mutex<HashMap<u64, TcpStream>>>;
+
+/// A running server: bound address + accept-loop thread + the shutdown
+/// plumbing ([`Server::shutdown`] stops it; dropping it does too).
 pub struct Server {
     local_addr: SocketAddr,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    conns: ConnRegistry,
 }
 
 impl Server {
@@ -34,22 +53,55 @@ impl Server {
         self.local_addr
     }
 
-    /// Block until the accept loop exits (it runs until the process dies,
-    /// so this is effectively "serve forever").
+    /// Block until the accept loop exits — "serve until shut down" (from
+    /// another thread holding the server, or process death).
     pub fn join(mut self) {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
     }
+
+    /// Stop serving: unblock the accept loop, cut every live connection
+    /// (their read loops see EOF, their completion pumps drain), and join
+    /// all server threads. Idempotent; `Drop` calls it too, so tests that
+    /// simply drop the `Server` no longer leak the listener and threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        let Some(thread) = self.accept_thread.take() else {
+            return; // already shut down (or joined)
+        };
+        self.stop.store(true, Ordering::SeqCst);
+        // cut live connections first so their handler threads (which the
+        // accept thread's pool joins on exit) are guaranteed to unblock
+        for (_, stream) in self.conns.lock().expect("conn registry poisoned").drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        // a throwaway connection unblocks the accept loop so it can see
+        // the stop flag; it exits before handling the stream
+        let _ = TcpStream::connect(self.local_addr);
+        let _ = thread.join();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
 }
 
 /// Bind `addr` and serve connections in the background; returns
-/// immediately with the bound address (tests bind port 0).
+/// immediately with the bound address (tests bind port 0). The returned
+/// [`Server`] owns the listener: dropping it (or calling
+/// [`Server::shutdown`]) stops serving — hold it for the server's
+/// lifetime.
 ///
 /// `conn_threads` bounds concurrent connections; requests beyond that
-/// queue at accept. Each connection thread reads lines and submits them
-/// asynchronously; replies are written by the connection's completion
-/// pump as workers finish.
+/// queue at accept. Each connection thread reads messages (JSON lines or
+/// binary frames) and submits them asynchronously; replies are written
+/// by the connection's completion pump as workers finish.
 pub fn serve_background(
     service: Arc<ServiceHandle>,
     addr: &str,
@@ -58,38 +110,59 @@ pub fn serve_background(
     let listener = TcpListener::bind(addr)?;
     let local_addr = listener.local_addr()?;
     let pool = ThreadPool::new(conn_threads, "matexp-conn");
-    let accept_thread = std::thread::Builder::new()
-        .name("matexp-accept".into())
-        .spawn(move || {
-            for stream in listener.incoming() {
-                // a transient accept failure (EMFILE, aborted handshake,
-                // ECONNRESET) must not kill the listener: log and keep
-                // serving — one bad connection is that connection's
-                // problem, not the server's
-                let stream = match stream {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("accept error (continuing): {e}");
-                        continue;
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: ConnRegistry = Arc::new(Mutex::new(HashMap::new()));
+    let accept_thread = {
+        let stop = Arc::clone(&stop);
+        let conns = Arc::clone(&conns);
+        std::thread::Builder::new()
+            .name("matexp-accept".into())
+            .spawn(move || {
+                let next_conn = AtomicU64::new(0);
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break; // pool drop below joins the handler threads
                     }
-                };
-                let service = Arc::clone(&service);
-                pool.execute(move || {
-                    let peer = stream
-                        .peer_addr()
-                        .map(|a| a.to_string())
-                        .unwrap_or_else(|_| "<unknown>".into());
-                    if let Err(e) = handle_connection(&service, stream) {
-                        eprintln!("connection {peer}: {e}");
+                    // a transient accept failure (EMFILE, aborted
+                    // handshake, ECONNRESET) must not kill the listener:
+                    // log and keep serving — one bad connection is that
+                    // connection's problem, not the server's
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("accept error (continuing): {e}");
+                            continue;
+                        }
+                    };
+                    let cid = next_conn.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        conns.lock().expect("conn registry poisoned").insert(cid, clone);
                     }
-                });
-            }
-        })?;
-    Ok(Server { local_addr, accept_thread: Some(accept_thread) })
+                    let service = Arc::clone(&service);
+                    let stop = Arc::clone(&stop);
+                    let conns = Arc::clone(&conns);
+                    pool.execute(move || {
+                        let peer = stream
+                            .peer_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "<unknown>".into());
+                        let outcome = handle_connection(&service, stream);
+                        conns.lock().expect("conn registry poisoned").remove(&cid);
+                        // a cut socket during shutdown is expected noise
+                        if let Err(e) = outcome {
+                            if !stop.load(Ordering::SeqCst) {
+                                eprintln!("connection {peer}: {e}");
+                            }
+                        }
+                    });
+                }
+            })?
+    };
+    Ok(Server { local_addr, accept_thread: Some(accept_thread), stop, conns })
 }
 
-/// Serve until the process is killed. Binds `addr`, prints the bound
-/// address, then blocks.
+/// Serve until shut down. Binds `addr`, prints the bound address, then
+/// blocks on the accept loop.
 pub fn serve(service: Arc<ServiceHandle>, addr: &str, conn_threads: usize) -> Result<()> {
     let server = serve_background(service, addr, conn_threads)?;
     println!("matexp serving on {}", server.local_addr());
@@ -97,27 +170,39 @@ pub fn serve(service: Arc<ServiceHandle>, addr: &str, conn_threads: usize) -> Re
     Ok(())
 }
 
+/// Which codec a pipelined reply must be written in (mirrors its
+/// request's codec).
+#[derive(Clone, Copy, Debug)]
+enum ReplyWire {
+    /// JSON line, with this matrix payload encoding.
+    Line(Payload),
+    /// Binary frame.
+    Frame,
+}
+
 /// In-flight pipelined jobs on one connection:
-/// service id → (client-chosen id, payload encoding to reply in).
-type Inflight = Arc<Mutex<HashMap<u64, (u64, Payload)>>>;
+/// service id → (client-chosen id, reply codec).
+type Inflight = Arc<Mutex<HashMap<u64, (u64, ReplyWire)>>>;
 
 fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
-    stream.set_nodelay(true)?; // line-oriented RPC: don't let Nagle batch replies
+    stream.set_nodelay(true)?; // message-oriented RPC: don't let Nagle batch replies
     // one writer lock per connection: the reader (inline replies) and the
-    // completion pump (pipelined replies) interleave whole lines only
+    // completion pump (pipelined replies) interleave whole messages only
     let writer = Arc::new(Mutex::new(stream.try_clone()?));
     let reader = BufReader::new(stream);
     let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    let metrics = service.metrics_shared();
     let (done_tx, done_rx) = channel::<(u64, JobReply)>();
     let pump = {
         let writer = Arc::clone(&writer);
         let inflight = Arc::clone(&inflight);
+        let metrics = Arc::clone(&metrics);
         std::thread::Builder::new()
             .name("matexp-conn-pump".into())
-            .spawn(move || completion_pump(done_rx, &inflight, &writer))
+            .spawn(move || completion_pump(done_rx, &inflight, &writer, &metrics))
             .map_err(MatexpError::Io)?
     };
-    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx);
+    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx, &metrics);
     // dropping the reader's sender lets the pump exit once every entry the
     // service still holds (clones of done_tx) has been completed
     drop(done_tx);
@@ -127,35 +212,131 @@ fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
 
 fn read_loop(
     service: &ServiceHandle,
-    reader: BufReader<TcpStream>,
+    mut reader: BufReader<TcpStream>,
     writer: &Mutex<TcpStream>,
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
+    metrics: &Metrics,
 ) -> Result<()> {
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        match WireRequest::decode(&line) {
-            Err(e) => write_line(writer, &WireResponse::error(format!("bad request: {e}")))?,
-            Ok(WireRequest::Ping) => write_line(writer, &WireResponse::pong())?,
-            Ok(WireRequest::Metrics) => {
-                let resp = WireResponse::Ok {
-                    result: None,
-                    stats: None,
-                    metrics: Some(service.metrics().to_json()),
-                    payload: Payload::Json,
-                    id: None,
-                };
-                write_line(writer, &resp)?;
+    loop {
+        // one-byte peek dispatches the codec: no JSON line (nor any ASCII
+        // text) starts with the frame magic's first byte
+        let first = match reader.fill_buf() {
+            Ok([]) => return Ok(()), // clean EOF between messages
+            Ok(buf) => buf[0],
+            Err(e) => return Err(e.into()),
+        };
+        if first == frame::MAGIC[0] {
+            read_one_frame(service, &mut reader, writer, inflight, done_tx, metrics)?;
+        } else {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(());
             }
-            Ok(req @ WireRequest::Expm { .. }) => {
-                handle_expm(service, req, writer, inflight, done_tx)?;
+            metrics.wire_bytes_in_total.fetch_add(line.len() as u64, Ordering::Relaxed);
+            let line = line.trim_end_matches(['\r', '\n']);
+            if line.trim().is_empty() {
+                continue;
             }
+            read_one_line(service, line, writer, inflight, done_tx, metrics)?;
         }
     }
-    Ok(())
+}
+
+/// Handle one JSON line (any op). Decode failures are answered on the
+/// line codec with the id salvaged best-effort from the raw text, so a
+/// pipelined client's ticket still resolves (to a typed error) instead
+/// of waiting forever on a reply that would otherwise carry no id.
+fn read_one_line(
+    service: &ServiceHandle,
+    line: &str,
+    writer: &Mutex<TcpStream>,
+    inflight: &Inflight,
+    done_tx: &Sender<(u64, JobReply)>,
+    metrics: &Metrics,
+) -> Result<()> {
+    match WireRequest::decode(line) {
+        Err(e) => {
+            let id = salvage_line_id(line);
+            write_line(writer, &WireResponse::error(format!("bad request: {e}")).with_id(id), metrics)
+        }
+        Ok(WireRequest::Ping) => write_line(writer, &WireResponse::pong(), metrics),
+        Ok(WireRequest::Hello { frame_version }) => {
+            let negotiated = frame_version.min(u32::from(frame::VERSION));
+            write_line(writer, &WireResponse::hello_ack(negotiated), metrics)
+        }
+        Ok(WireRequest::Metrics) => {
+            let resp = WireResponse::Ok {
+                result: None,
+                stats: None,
+                metrics: Some(service.metrics().to_json()),
+                payload: Payload::Json,
+                id: None,
+                frame: None,
+            };
+            write_line(writer, &resp, metrics)
+        }
+        Ok(req @ WireRequest::Expm { .. }) => {
+            handle_expm(service, req, writer, inflight, done_tx, metrics)
+        }
+    }
+}
+
+/// Handle one binary frame. Framing damage (bad header, truncation,
+/// oversized length) poisons the byte stream: reply best-effort, then
+/// propagate the error so the connection closes. Content damage inside a
+/// well-delimited payload gets an error frame (with the id salvaged from
+/// the payload prefix when possible) and the connection keeps serving.
+fn read_one_frame(
+    service: &ServiceHandle,
+    reader: &mut BufReader<TcpStream>,
+    writer: &Mutex<TcpStream>,
+    inflight: &Inflight,
+    done_tx: &Sender<(u64, JobReply)>,
+    metrics: &Metrics,
+) -> Result<()> {
+    let (kind, payload) = match frame::read_raw(reader, frame::MAX_PAYLOAD) {
+        Ok(raw) => raw,
+        Err(e) => {
+            let _ = write_frame(writer, &Frame::from_error(&e, None), metrics);
+            return Err(e);
+        }
+    };
+    metrics
+        .wire_bytes_in_total
+        .fetch_add((frame::HEADER_LEN + payload.len()) as u64, Ordering::Relaxed);
+    metrics.frames_total.fetch_add(1, Ordering::Relaxed);
+    match Frame::decode(kind, &payload) {
+        Ok(Frame::Expm { id, n, power, method, matrix }) => {
+            match Matrix::from_vec(n, matrix) {
+                Ok(m) => submit_pipelined(
+                    service,
+                    m,
+                    power,
+                    method,
+                    id,
+                    ReplyWire::Frame,
+                    writer,
+                    inflight,
+                    done_tx,
+                    metrics,
+                ),
+                Err(e) => write_frame(writer, &Frame::from_error(&e, Some(id)), metrics),
+            }
+        }
+        // a client has no business sending reply frames; answer and move on
+        Ok(other) => {
+            let e = MatexpError::Service(format!(
+                "unexpected frame kind {} from client",
+                other.kind()
+            ));
+            write_frame(writer, &Frame::from_error(&e, other.id()), metrics)
+        }
+        Err(e) => {
+            let id = frame::salvage_id(kind, &payload);
+            write_frame(writer, &Frame::from_error(&e, id), metrics)
+        }
+    }
 }
 
 fn handle_expm(
@@ -164,6 +345,7 @@ fn handle_expm(
     writer: &Mutex<TcpStream>,
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
+    metrics: &Metrics,
 ) -> Result<()> {
     let WireRequest::Expm { power, method, payload, id: client_id, .. } = &req else {
         unreachable!("handle_expm is only called with Expm requests");
@@ -172,23 +354,26 @@ fn handle_expm(
     let matrix = match req.matrix() {
         Ok(m) => m,
         Err(e) => {
-            return write_line(writer, &WireResponse::from_error(&e).with_id(client_id));
+            return write_line(writer, &WireResponse::from_error(&e).with_id(client_id), metrics);
         }
     };
-    let submission = Submission::expm(matrix, power).method(method);
     match client_id {
-        // pipelined: register the connection bookkeeping under a reserved
-        // service id FIRST, so a worker reply can never race past it
-        Some(cid) => {
-            let sid = service.reserve_id();
-            inflight.lock().expect("inflight map poisoned").insert(sid, (cid, payload));
-            if let Err(e) = service.submit_with_id(sid, submission, done_tx.clone()) {
-                inflight.lock().expect("inflight map poisoned").remove(&sid);
-                write_line(writer, &WireResponse::from_error(&e).with_id(Some(cid)))?;
-            }
-        }
+        // pipelined: same path as binary frames, replying on the line codec
+        Some(cid) => submit_pipelined(
+            service,
+            matrix,
+            power,
+            method,
+            cid,
+            ReplyWire::Line(payload),
+            writer,
+            inflight,
+            done_tx,
+            metrics,
+        ),
         // legacy one-shot peer: block and answer in order, as before
         None => {
+            let submission = Submission::expm(matrix, power).method(method);
             let resp = match service.submit_job(submission) {
                 Ok(mut job) => match job.wait() {
                     // reply in the encoding the request used; typed errors
@@ -198,32 +383,94 @@ fn handle_expm(
                 },
                 Err(e) => WireResponse::from_error(&e),
             };
-            write_line(writer, &resp)?;
+            write_line(writer, &resp, metrics)
         }
+    }
+}
+
+/// Submit one pipelined expm (either codec): register the connection
+/// bookkeeping under a reserved service id FIRST, so a worker reply can
+/// never race past it; a failed submit answers inline on the request's
+/// codec.
+#[allow(clippy::too_many_arguments)]
+fn submit_pipelined(
+    service: &ServiceHandle,
+    matrix: Matrix,
+    power: u64,
+    method: Method,
+    cid: u64,
+    wire: ReplyWire,
+    writer: &Mutex<TcpStream>,
+    inflight: &Inflight,
+    done_tx: &Sender<(u64, JobReply)>,
+    metrics: &Metrics,
+) -> Result<()> {
+    let submission = Submission::expm(matrix, power).method(method);
+    let sid = service.reserve_id();
+    inflight.lock().expect("inflight map poisoned").insert(sid, (cid, wire));
+    if let Err(e) = service.submit_with_id(sid, submission, done_tx.clone()) {
+        inflight.lock().expect("inflight map poisoned").remove(&sid);
+        write_reply_error(writer, &e, cid, wire, metrics)?;
     }
     Ok(())
 }
 
+/// Write a typed error as an id-tagged reply in the given codec.
+fn write_reply_error(
+    writer: &Mutex<TcpStream>,
+    e: &MatexpError,
+    cid: u64,
+    wire: ReplyWire,
+    metrics: &Metrics,
+) -> Result<()> {
+    match wire {
+        ReplyWire::Line(_) => {
+            write_line(writer, &WireResponse::from_error(e).with_id(Some(cid)), metrics)
+        }
+        ReplyWire::Frame => write_frame(writer, &Frame::from_error(e, Some(cid)), metrics),
+    }
+}
+
 /// Drain worker completions for one connection, writing each as soon as
-/// it lands. Exits when every sender is gone (reader finished AND no
-/// in-flight job still holds a clone) or the peer stops reading.
+/// it lands — in the codec its request arrived in. Exits when every
+/// sender is gone (reader finished AND no in-flight job still holds a
+/// clone) or the peer stops reading.
 fn completion_pump(
     done_rx: Receiver<(u64, JobReply)>,
-    inflight: &Mutex<HashMap<u64, (u64, Payload)>>,
+    inflight: &Mutex<HashMap<u64, (u64, ReplyWire)>>,
     writer: &Mutex<TcpStream>,
+    metrics: &Metrics,
 ) {
     while let Ok((sid, reply)) = done_rx.recv() {
-        let Some((client_id, payload)) = inflight.lock().expect("inflight map poisoned").remove(&sid)
+        let Some((client_id, wire)) = inflight.lock().expect("inflight map poisoned").remove(&sid)
         else {
             continue; // withdrawn (failed submit) — nothing to write
         };
-        let resp = match reply {
-            Ok(r) => WireResponse::from_expm(&r, payload),
+        let wrote = match (wire, reply) {
+            (ReplyWire::Line(payload), Ok(r)) => {
+                write_line(writer, &WireResponse::from_expm(&r, payload).with_id(Some(client_id)), metrics)
+            }
             // typed error → wire error with its kind (deadline, admission…)
-            Err(e) => WireResponse::from_error(&e),
-        }
-        .with_id(Some(client_id));
-        if write_line(writer, &resp).is_err() {
+            (ReplyWire::Line(_), Err(e)) => {
+                write_line(writer, &WireResponse::from_error(&e).with_id(Some(client_id)), metrics)
+            }
+            (ReplyWire::Frame, Ok(r)) => {
+                // the binary reply consumes the response: the result's
+                // buffer is moved onto the wire encoder, not re-cloned
+                let n = r.result.n();
+                let f = Frame::ExpmOk {
+                    id: client_id,
+                    n,
+                    stats: r.stats.into(),
+                    result: r.result.into_vec(),
+                };
+                write_frame(writer, &f, metrics)
+            }
+            (ReplyWire::Frame, Err(e)) => {
+                write_frame(writer, &Frame::from_error(&e, Some(client_id)), metrics)
+            }
+        };
+        if wrote.is_err() {
             return; // peer gone; remaining completions have no reader
         }
     }
@@ -231,7 +478,7 @@ fn completion_pump(
 
 /// Encode + write one response line under the connection's writer lock
 /// (an unencodable payload degrades to a wire error with the same id).
-fn write_line(writer: &Mutex<TcpStream>, resp: &WireResponse) -> Result<()> {
+fn write_line(writer: &Mutex<TcpStream>, resp: &WireResponse, metrics: &Metrics) -> Result<()> {
     let encoded = resp.encode().unwrap_or_else(|e| {
         WireResponse::error(format!("unencodable response: {e}"))
             .with_id(resp.id())
@@ -240,7 +487,80 @@ fn write_line(writer: &Mutex<TcpStream>, resp: &WireResponse) -> Result<()> {
     });
     let mut out = encoded.into_bytes();
     out.push(b'\n');
+    metrics.wire_bytes_out_total.fetch_add(out.len() as u64, Ordering::Relaxed);
     let mut w = writer.lock().expect("connection writer poisoned");
     w.write_all(&out)?;
     Ok(())
+}
+
+/// Encode + write one binary frame under the connection's writer lock.
+fn write_frame(writer: &Mutex<TcpStream>, f: &Frame, metrics: &Metrics) -> Result<()> {
+    let out = f.encode();
+    metrics.wire_bytes_out_total.fetch_add(out.len() as u64, Ordering::Relaxed);
+    metrics.frames_total.fetch_add(1, Ordering::Relaxed);
+    let mut w = writer.lock().expect("connection writer poisoned");
+    w.write_all(&out)?;
+    Ok(())
+}
+
+/// Best-effort `id` recovery from a request line that failed to decode:
+/// parseable JSON yields its `id` field; otherwise a raw scan for an
+/// `"id": <digits>` fragment. `None` when the text holds no usable id —
+/// the error reply then goes out id-less, exactly as before.
+fn salvage_line_id(line: &str) -> Option<u64> {
+    if let Ok(v) = Json::parse(line) {
+        return v.get("id").and_then(Json::as_u64);
+    }
+    let bytes = line.as_bytes();
+    let key = b"\"id\"";
+    if bytes.len() < key.len() {
+        return None;
+    }
+    for start in 0..=bytes.len() - key.len() {
+        if &bytes[start..start + key.len()] != key {
+            continue;
+        }
+        let mut j = start + key.len();
+        while bytes.get(j).is_some_and(u8::is_ascii_whitespace) {
+            j += 1;
+        }
+        if bytes.get(j) != Some(&b':') {
+            continue;
+        }
+        j += 1;
+        while bytes.get(j).is_some_and(u8::is_ascii_whitespace) {
+            j += 1;
+        }
+        let digits = j;
+        while bytes.get(j).is_some_and(u8::is_ascii_digit) {
+            j += 1;
+        }
+        if j > digits {
+            if let Ok(id) = line[digits..j].parse() {
+                return Some(id);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn salvage_from_valid_json() {
+        assert_eq!(salvage_line_id(r#"{"op":"nope","id":42}"#), Some(42));
+        assert_eq!(salvage_line_id(r#"{"op":"nope"}"#), None);
+    }
+
+    #[test]
+    fn salvage_from_corrupt_text() {
+        // truncated JSON — unparseable, but the id fragment is intact
+        assert_eq!(salvage_line_id(r#"{"op":"expm","id":7,"n":"BRO"#), Some(7));
+        assert_eq!(salvage_line_id(r#"{"id" : 31, garbage"#), Some(31));
+        assert_eq!(salvage_line_id("total garbage"), None);
+        assert_eq!(salvage_line_id(r#"{"id":x}"#), None); // non-numeric id
+        assert_eq!(salvage_line_id(r#"{"id":99999999999999999999999}"#), None); // overflow
+    }
 }

@@ -1,0 +1,449 @@
+//! Integration: the binary frame codec and the wire-layer correctness
+//! fixes — bit-exact roundtrips under the property harness, per-connection
+//! negotiation, both codecs interleaved on one socket, best-effort id
+//! salvage on corrupt lines, client poisoning on connection death, and
+//! `Server::shutdown`. Runs unconditionally on the pure-Rust CPU backend.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+
+use matexp::bench::loadtest;
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::error::MatexpError;
+use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
+use matexp::server::client::MatexpClient;
+use matexp::server::frame::{self, Frame};
+use matexp::server::proto::{Payload, WireRequest, WireResponse};
+use matexp::server::server::{serve_background, Server};
+use matexp::util::json::Json;
+use matexp::util::prop::property;
+
+fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, String) {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8).expect("binds");
+    let addr = server.local_addr().to_string();
+    (service, server, addr)
+}
+
+/// Bit-exact f32 slice comparison (NaN-tolerant, unlike `==`).
+fn assert_bits_eq(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------------- proptest
+
+/// Any f32 bit pattern — NaNs, ±Inf, subnormals, -0.0 — survives a frame
+/// roundtrip unchanged, at any edge size down to n=1.
+#[test]
+fn prop_expm_frames_roundtrip_bit_exact() {
+    property("expm frame roundtrip", 128, |g| {
+        let n = g.usize(1, 6);
+        let matrix: Vec<f32> =
+            (0..n * n).map(|_| f32::from_bits(g.u64(0, u32::MAX as u64) as u32)).collect();
+        let f = Frame::Expm {
+            id: g.u64(0, u64::MAX),
+            n,
+            power: g.u64(0, u64::MAX),
+            method: *g.choose(&Method::all()),
+            matrix: matrix.clone(),
+        };
+        let bytes = f.encode();
+        let (got, wire) = Frame::read_from(&mut &bytes[..], frame::MAX_PAYLOAD).unwrap();
+        assert_eq!(wire, bytes.len());
+        match got {
+            Frame::Expm { id, n: gn, power, method, matrix: gm } => {
+                let Frame::Expm { id: wid, n: wn, power: wp, method: wm, .. } = &f else {
+                    unreachable!()
+                };
+                assert_eq!((id, gn, power, method), (*wid, *wn, *wp, *wm));
+                assert_bits_eq(&matrix, &gm);
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    });
+}
+
+/// Reply frames roundtrip too, stats object included.
+#[test]
+fn prop_expm_ok_frames_roundtrip_bit_exact() {
+    property("expm-ok frame roundtrip", 96, |g| {
+        let n = g.usize(1, 5);
+        let result: Vec<f32> =
+            (0..n * n).map(|_| f32::from_bits(g.u64(0, u32::MAX as u64) as u32)).collect();
+        let stats = matexp::server::proto::WireStats {
+            launches: g.usize(0, 1000),
+            multiplies: g.usize(0, 1000),
+            h2d_transfers: g.usize(0, 50),
+            d2h_transfers: g.usize(0, 50),
+            bytes_copied: g.u64(0, 1 << 40),
+            buffers_recycled: g.u64(0, 1 << 20),
+            peak_resident_bytes: g.u64(0, 1 << 40),
+            wall_s: g.u64(0, 1_000_000) as f64 / 1e6,
+            per_device: Vec::new(),
+        };
+        let f = Frame::ExpmOk { id: g.u64(0, u64::MAX), n, stats: stats.clone(), result: result.clone() };
+        let bytes = f.encode();
+        let (got, _) = Frame::read_from(&mut &bytes[..], frame::MAX_PAYLOAD).unwrap();
+        match got {
+            Frame::ExpmOk { stats: gs, result: gr, .. } => {
+                assert_eq!(gs, stats);
+                assert_bits_eq(&result, &gr);
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    });
+}
+
+/// Truncating an encoded frame at ANY byte boundary yields a typed
+/// error, never a panic, a hang, or a bogus decode.
+#[test]
+fn prop_truncated_frames_rejected_with_typed_errors() {
+    property("truncated frame rejected", 96, |g| {
+        let n = g.usize(1, 4);
+        let f = Frame::Expm {
+            id: g.u64(0, u64::MAX),
+            n,
+            power: g.u64(1, 1 << 20),
+            method: *g.choose(&Method::all()),
+            matrix: (0..n * n).map(|_| g.f32(2.0)).collect(),
+        };
+        let bytes = f.encode();
+        let cut = g.usize(0, bytes.len() - 1);
+        let err = Frame::read_from(&mut &bytes[..cut], frame::MAX_PAYLOAD).unwrap_err();
+        assert!(matches!(err, MatexpError::Service(_)), "cut {cut}: {err}");
+    });
+}
+
+/// An adversarial declared length is rejected up front by the payload
+/// cap — no multi-gigabyte allocation ever happens.
+#[test]
+fn prop_oversized_lengths_rejected() {
+    property("oversized frame rejected", 64, |g| {
+        let mut bytes =
+            Frame::Error { id: None, kind: "service".into(), message: "x".into() }.encode();
+        let huge = g.u64(u64::from(frame::MAX_PAYLOAD) + 1, u32::MAX as u64) as u32;
+        bytes[8..12].copy_from_slice(&huge.to_le_bytes());
+        let err = Frame::read_from(&mut &bytes[..], frame::MAX_PAYLOAD).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    });
+}
+
+// ------------------------------------------------------- negotiation + e2e
+
+#[test]
+fn negotiated_binary_client_computes_correctly() {
+    let (_service, _server, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    assert!(!client.is_binary());
+    assert!(client.negotiate_binary().expect("hello roundtrip"), "server speaks frames");
+    assert!(client.is_binary());
+    let a = Matrix::random_spectral(16, 0.95, 123);
+    let want = linalg::expm::expm(&a, 100, CpuAlgo::Ikj).unwrap();
+    let (got, stats) = client.expm(&a, 100, Method::Ours).expect("binary expm");
+    assert!(got.approx_eq(&want, 1e-3, 1e-3), "diff {}", got.max_abs_diff(&want));
+    assert!(stats.multiplies > 0);
+    // the server really did speak frames, and the binary payload is
+    // leaner on the wire than any JSON encoding of a 16x16 matrix
+    let m = client.metrics().expect("metrics");
+    assert!(m.get("frames_total").and_then(Json::as_u64).unwrap() >= 2, "{m}");
+    let (out_bytes, in_bytes) = client.wire_bytes();
+    assert!(out_bytes > 0 && in_bytes > 0);
+}
+
+#[test]
+fn binary_pipelining_resolves_out_of_order() {
+    let (_service, _server, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+    assert!(client.negotiate_binary().unwrap());
+    let inputs: Vec<(Matrix, u64)> =
+        (0..8u64).map(|i| (Matrix::random_spectral(8, 0.9, 500 + i), 3 + i)).collect();
+    let tickets: Vec<_> =
+        inputs.iter().map(|(a, p)| client.submit(a, *p, Method::Ours).expect("submit")).collect();
+    for (ticket, (a, p)) in tickets.iter().zip(&inputs).rev() {
+        let want = linalg::expm::expm(a, *p, CpuAlgo::Ikj).unwrap();
+        let (got, _) = client.wait(ticket).expect("binary wait");
+        assert!(got.approx_eq(&want, 1e-4, 1e-4), "ticket {}", ticket.id());
+    }
+}
+
+/// All three request shapes interleave on ONE socket: a binary frame, a
+/// pipelined JSON line, and a legacy id-less JSON line — each answered in
+/// the codec it arrived in.
+#[test]
+fn binary_json_and_legacy_interleave_on_one_connection() {
+    let (_service, _server, addr) = start_server();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let a = Matrix::random_spectral(8, 0.9, 31);
+    let b = Matrix::random_spectral(8, 0.9, 32);
+    let c = Matrix::random_spectral(8, 0.9, 33);
+
+    // 1: binary frame, id 1
+    let req = Frame::Expm { id: 1, n: 8, power: 5, method: Method::Ours, matrix: a.data().to_vec() };
+    writer.write_all(&req.encode()).unwrap();
+    // 2: pipelined JSON line, id 2
+    let req = WireRequest::Expm {
+        n: 8,
+        power: 6,
+        method: Method::Ours,
+        matrix: b.data().to_vec(),
+        payload: Payload::Json,
+        id: Some(2),
+    };
+    writer.write_all((req.encode().unwrap() + "\n").as_bytes()).unwrap();
+    // 3: legacy id-less JSON line (ordered one-shot contract)
+    let req = WireRequest::Expm {
+        n: 8,
+        power: 7,
+        method: Method::Ours,
+        matrix: c.data().to_vec(),
+        payload: Payload::Json,
+        id: None,
+    };
+    writer.write_all((req.encode().unwrap() + "\n").as_bytes()).unwrap();
+
+    let (mut got_frame, mut got_json, mut got_legacy) = (None, None, None);
+    for _ in 0..3 {
+        let first = reader.fill_buf().unwrap()[0];
+        if first == frame::MAGIC[0] {
+            let (f, _) = Frame::read_from(&mut reader, frame::MAX_PAYLOAD).unwrap();
+            match f {
+                Frame::ExpmOk { id: 1, n: 8, result, .. } => {
+                    got_frame = Some(Matrix::from_vec(8, result).unwrap());
+                }
+                other => panic!("unexpected frame reply: {other:?}"),
+            }
+        } else {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match WireResponse::decode(line.trim_end()).unwrap() {
+                WireResponse::Ok { result: Some(data), id, .. } => {
+                    let m = Matrix::from_vec(8, data).unwrap();
+                    match id {
+                        Some(2) => got_json = Some(m),
+                        None => got_legacy = Some(m),
+                        other => panic!("unexpected reply id {other:?}"),
+                    }
+                }
+                other => panic!("unexpected line reply: {other:?}"),
+            }
+        }
+    }
+    let oracle = |m: &Matrix, p: u64| linalg::expm::expm(m, p, CpuAlgo::Ikj).unwrap();
+    assert!(got_frame.unwrap().approx_eq(&oracle(&a, 5), 1e-4, 1e-4), "frame reply");
+    assert!(got_json.unwrap().approx_eq(&oracle(&b, 6), 1e-4, 1e-4), "json reply");
+    assert!(got_legacy.unwrap().approx_eq(&oracle(&c, 7), 1e-4, 1e-4), "legacy reply");
+}
+
+/// Content damage inside one well-delimited frame answers an error frame
+/// (id salvaged from the intact prefix) and the connection keeps serving.
+#[test]
+fn damaged_frame_payload_answers_error_and_connection_survives() {
+    let (_service, _server, addr) = start_server();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // declared n=3 but a 2x2 matrix present: a content error, id intact
+    let a = Matrix::identity(2);
+    let good =
+        Frame::Expm { id: 77, n: 2, power: 2, method: Method::Ours, matrix: a.data().to_vec() };
+    let mut bytes = good.encode();
+    bytes[frame::HEADER_LEN + 16..frame::HEADER_LEN + 20].copy_from_slice(&3u32.to_le_bytes());
+    writer.write_all(&bytes).unwrap();
+
+    let (f, _) = Frame::read_from(&mut reader, frame::MAX_PAYLOAD).unwrap();
+    match f {
+        Frame::Error { id, kind, message } => {
+            assert_eq!(id, Some(77), "salvaged id routes the error to the ticket");
+            assert_eq!(kind, "service");
+            assert!(message.contains("truncated") || message.contains("frame"), "{message}");
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // the stream framing was intact, so the connection still serves
+    writer.write_all(&good.encode()).unwrap();
+    let (f, _) = Frame::read_from(&mut reader, frame::MAX_PAYLOAD).unwrap();
+    assert!(matches!(f, Frame::ExpmOk { id: 77, .. }), "connection survived: {f:?}");
+}
+
+// --------------------------------------------------- id salvage (satellite)
+
+/// A corrupt (undecodable) id-tagged line among healthy pipelined ones
+/// gets an id-tagged error reply, so its ticket resolves instead of
+/// hanging — and the healthy requests are untouched.
+#[test]
+fn corrupt_line_with_salvageable_id_resolves_its_ticket() {
+    let (_service, _server, addr) = start_server();
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let a = Matrix::identity(4);
+    let healthy = |id: u64, power: u64| WireRequest::Expm {
+        n: 4,
+        power,
+        method: Method::Ours,
+        matrix: a.data().to_vec(),
+        payload: Payload::Json,
+        id: Some(id),
+    };
+    writer.write_all((healthy(10, 2).encode().unwrap() + "\n").as_bytes()).unwrap();
+    // truncated JSON — unparseable, but the id fragment is intact
+    writer
+        .write_all(b"{\"op\":\"expm\",\"id\":11,\"n\":4,\"power\":2,\"matrix\":[1,2\n")
+        .unwrap();
+    writer.write_all((healthy(12, 3).encode().unwrap() + "\n").as_bytes()).unwrap();
+
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = WireResponse::decode(line.trim_end()).unwrap();
+        by_id.insert(resp.id().expect("every reply carries its request id"), resp);
+    }
+    match &by_id[&11] {
+        WireResponse::Error { message, .. } => {
+            assert!(message.contains("bad request"), "{message}");
+        }
+        other => panic!("corrupt line should error: {other:?}"),
+    }
+    for id in [10u64, 12] {
+        assert!(
+            matches!(&by_id[&id], WireResponse::Ok { result: Some(_), .. }),
+            "healthy request {id} unaffected: {:?}",
+            by_id[&id]
+        );
+    }
+}
+
+// ------------------------------------------------ poisoning (satellite)
+
+/// The server dies mid-pipeline: every outstanding ticket resolves to the
+/// typed disconnect error — nothing blocks forever — and so does every
+/// later call on the same client.
+#[test]
+fn client_poisons_when_server_dies_mid_pipeline() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake_server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // swallow exactly the two request lines, then die without a reply
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let _ = stream.shutdown(Shutdown::Both);
+    });
+
+    let mut client = MatexpClient::connect(&addr).unwrap();
+    let a = Matrix::identity(4);
+    let t1 = client.submit(&a, 2, Method::Ours).unwrap();
+    let t2 = client.submit(&a, 3, Method::Ours).unwrap();
+    let e1 = client.wait(&t1).unwrap_err();
+    assert!(matches!(e1, MatexpError::Disconnected(_)), "first ticket: {e1}");
+    let e2 = client.wait(&t2).unwrap_err();
+    assert!(matches!(e2, MatexpError::Disconnected(_)), "second ticket: {e2}");
+    let e3 = client.ping().unwrap_err();
+    assert!(matches!(e3, MatexpError::Disconnected(_)), "later calls too: {e3}");
+    fake_server.join().unwrap();
+}
+
+/// An id-less reply while pipelined tickets are in flight breaks the
+/// stream's reply pairing: the client poisons the whole connection
+/// instead of mispairing or hanging (the old behavior silently dropped
+/// the reply and waited forever).
+#[test]
+fn client_poisons_on_unidentified_reply_mid_pipeline() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake_server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        // a reply with no id, while an id-tagged request is outstanding
+        w.write_all(b"{\"status\":\"ok\"}\n").unwrap();
+        // keep the socket open so the only failure mode is the protocol one
+        let mut park = String::new();
+        let _ = reader.read_line(&mut park);
+    });
+
+    let mut client = MatexpClient::connect(&addr).unwrap();
+    let t = client.submit(&Matrix::identity(4), 2, Method::Ours).unwrap();
+    let err = client.wait(&t).unwrap_err();
+    match &err {
+        MatexpError::Disconnected(why) => {
+            assert!(why.contains("un-identified"), "{why}");
+        }
+        other => panic!("expected Disconnected, got {other}"),
+    }
+    drop(client); // closes the socket; the fake server's park read returns
+    fake_server.join().unwrap();
+}
+
+// ------------------------------------------------- shutdown (satellite)
+
+/// `Server::shutdown` unblocks the accept loop, cuts live connections,
+/// and joins every server thread — while the coordinator service keeps
+/// working underneath.
+#[test]
+fn server_shutdown_cuts_connections_and_stops_listening() {
+    let (service, server, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+    let a = Matrix::random_spectral(16, 0.9, 7);
+    let in_flight = client.submit(&a, 300, Method::CpuSeq).unwrap();
+
+    server.shutdown(); // returns only after accept + handlers have joined
+
+    // the outstanding ticket resolves (typed disconnect, or the reply won
+    // the race against the socket cut) — it must not hang
+    match client.wait(&in_flight) {
+        Err(MatexpError::Disconnected(_)) | Ok(_) => {}
+        Err(e) => panic!("unexpected wait error after shutdown: {e}"),
+    }
+    // no new connections are served
+    let still_up = MatexpClient::connect(&addr).and_then(|mut c| c.ping());
+    assert!(still_up.is_err(), "server still serving after shutdown");
+    // the service outlives its TCP front-end: direct submission works
+    use matexp::exec::Submission;
+    let resp = service
+        .submit_job(Submission::expm(Matrix::identity(8), 4).method(Method::Ours))
+        .and_then(|mut h| h.wait())
+        .expect("service usable after server shutdown");
+    assert!(resp.result.approx_eq(&Matrix::identity(8), 1e-5, 1e-5));
+}
+
+// --------------------------------------------------- codec performance
+
+/// Tentpole acceptance: one encode+decode round trip of an n=1024 expm
+/// reply must be ≥5x faster as a binary frame than as the (faster,
+/// base64) JSON line encoding. Debug builds assert a relaxed floor — the
+/// optimizer gap between the two paths is a release property.
+#[test]
+fn binary_frames_beat_the_line_codec_at_n1024() {
+    let c = loadtest::codec_roundtrip(1024, 3);
+    let floor = if cfg!(debug_assertions) { 1.0 } else { 5.0 };
+    assert!(
+        c.speedup >= floor,
+        "frame codec only {:.2}x faster than json+base64 at n=1024 \
+         (json_b64 {:.4}s vs frame {:.4}s, floor {floor}x)",
+        c.speedup,
+        c.json_b64_s,
+        c.frame_s,
+    );
+}

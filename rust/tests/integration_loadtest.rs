@@ -1,0 +1,96 @@
+//! Integration: the `matexp loadtest` driver end-to-end against a real
+//! server — every wire mode completes its full request count, the binary
+//! codec is measurably leaner on the wire than the JSON line codec, the
+//! open-loop pacer works, and the emitted snapshot validates against the
+//! schema the CI gate enforces.
+
+use std::sync::Arc;
+
+use matexp::bench::loadtest::{self, LoadtestConfig, WireMode};
+use matexp::config::MatexpConfig;
+use matexp::coordinator::service::Service;
+use matexp::server::server::{serve_background, Server};
+
+fn start_server() -> (Server, String) {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let server = serve_background(service, "127.0.0.1:0", 16).expect("binds");
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn small() -> LoadtestConfig {
+    LoadtestConfig { clients: 2, requests: 4, warmup: 1, n: 16, power: 32, ..Default::default() }
+}
+
+#[test]
+fn every_wire_mode_completes_and_binary_is_leaner() {
+    let (_server, addr) = start_server();
+    let cfg = small();
+    let reports: Vec<_> = WireMode::all()
+        .iter()
+        .map(|&mode| loadtest::run_mode(&addr, mode, &cfg).expect("mode run"))
+        .collect();
+    for r in &reports {
+        assert_eq!(r.requests, cfg.clients * cfg.requests, "{:?}", r.mode);
+        for (name, v) in [
+            ("p50", r.p50_s),
+            ("p99", r.p99_s),
+            ("mean", r.mean_s),
+            ("throughput", r.throughput_rps),
+            ("wall", r.wall_s),
+        ] {
+            assert!(v.is_finite() && v > 0.0, "{:?} {name} = {v}", r.mode);
+        }
+        assert!(r.p50_s <= r.p99_s, "{:?}: p50 {} > p99 {}", r.mode, r.p50_s, r.p99_s);
+        assert!(r.min_s <= r.p50_s && r.max_s >= r.p99_s, "{:?}", r.mode);
+    }
+    let by_mode = |m: WireMode| reports.iter().find(|r| r.mode == m).unwrap();
+    let (json, binary) = (by_mode(WireMode::Json), by_mode(WireMode::Binary));
+    // a 16x16 f32 matrix is 1KiB raw; its JSON text is several KiB. The
+    // measured-phase byte counters must show the gap in both directions.
+    assert!(
+        binary.wire_bytes_out < json.wire_bytes_out,
+        "binary out {} !< json out {}",
+        binary.wire_bytes_out,
+        json.wire_bytes_out
+    );
+    assert!(
+        binary.wire_bytes_in < json.wire_bytes_in,
+        "binary in {} !< json in {}",
+        binary.wire_bytes_in,
+        json.wire_bytes_in
+    );
+}
+
+#[test]
+fn open_loop_pacer_completes_and_measures_from_scheduled_start() {
+    let (_server, addr) = start_server();
+    // 2 clients x 3 requests at a rate the tiny workload easily sustains
+    let cfg = LoadtestConfig { requests: 3, rate: Some(200.0), ..small() };
+    let r = loadtest::run_mode(&addr, WireMode::Binary, &cfg).expect("open-loop run");
+    assert_eq!(r.requests, 6);
+    assert!(r.p50_s > 0.0 && r.p50_s.is_finite());
+    // the run is paced: wall clock covers at least the scheduled span of
+    // the last request (requests-1)/rate, minus scheduling slop
+    assert!(r.wall_s >= (cfg.requests - 1) as f64 / 200.0 * 0.5, "wall {}", r.wall_s);
+}
+
+#[test]
+fn snapshot_from_real_reports_validates() {
+    let (_server, addr) = start_server();
+    let cfg = small();
+    let reports: Vec<_> = WireMode::all()
+        .iter()
+        .map(|&mode| loadtest::run_mode(&addr, mode, &cfg).expect("mode run"))
+        .collect();
+    let codec = loadtest::codec_roundtrip(64, 2);
+    let snap = loadtest::snapshot(6, &cfg, &reports, &codec);
+    loadtest::validate_snapshot(&snap).expect("real snapshot validates");
+    // the gate really gates: a snapshot claiming a foreign schema fails
+    let damaged = snap.to_string().replace(loadtest::SNAPSHOT_SCHEMA, "someone-else/9");
+    let damaged = matexp::util::json::Json::parse(&damaged).unwrap();
+    assert!(loadtest::validate_snapshot(&damaged).is_err(), "foreign schema must be rejected");
+}

@@ -11,21 +11,25 @@ use matexp::coordinator::request::Method;
 use matexp::coordinator::service::Service;
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::server::client::MatexpClient;
-use matexp::server::server::serve_background;
+use matexp::server::server::{serve_background, Server};
 use matexp::util::json::Json;
 
-fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, String) {
+/// The returned [`Server`] must be held for the test's lifetime: dropping
+/// it shuts the listener down (that IS the shutdown satellite — tests no
+/// longer leak accept threads and sockets when they finish).
+fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, String) {
     let mut cfg = MatexpConfig::default();
     cfg.workers = 2;
     cfg.batcher.max_wait_ms = 1;
     let service = Arc::new(Service::start(cfg).expect("service starts"));
     let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8).expect("binds");
-    (service, server.local_addr().to_string())
+    let addr = server.local_addr().to_string();
+    (service, server, addr)
 }
 
 #[test]
 fn expm_roundtrip_over_tcp() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     client.ping().expect("ping");
     let a = Matrix::random_spectral(16, 0.95, 77);
@@ -42,7 +46,7 @@ fn expm_roundtrip_over_tcp() {
 
 #[test]
 fn concurrent_tcp_clients() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     std::thread::scope(|scope| {
         for c in 0..4u64 {
             let addr = addr.clone();
@@ -61,7 +65,7 @@ fn concurrent_tcp_clients() {
 
 #[test]
 fn metrics_endpoint_reports_counts() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let a = Matrix::random_spectral(16, 0.9, 5);
     client.expm(&a, 16, Method::Ours).unwrap();
@@ -81,7 +85,7 @@ fn metrics_endpoint_reports_counts() {
 
 #[test]
 fn expm_response_carries_residency_stats() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let a = Matrix::random_spectral(16, 0.9, 9);
     let (_, stats) = client.expm(&a, 1024, Method::OursPacked).expect("expm");
@@ -93,7 +97,7 @@ fn expm_response_carries_residency_stats() {
 
 #[test]
 fn malformed_lines_get_error_responses_and_connection_survives() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let stream = TcpStream::connect(&addr).unwrap();
     let mut writer = stream.try_clone().unwrap();
     let mut reader = BufReader::new(stream);
@@ -119,7 +123,7 @@ fn listener_survives_bad_connections() {
     // error, silently killing the server. Slam it with connections that
     // die mid-handshake/mid-line and verify later clients still get
     // served.
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     for i in 0..8 {
         let stream = TcpStream::connect(&addr).unwrap();
         let mut w = stream.try_clone().unwrap();
@@ -145,7 +149,7 @@ fn listener_survives_bad_connections() {
 /// id↔result pairing.
 #[test]
 fn pipelined_requests_on_one_connection_pair_ids_to_results() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     // distinct (matrix, power) per request so a mispaired reply is
     // guaranteed to fail its oracle check
@@ -181,7 +185,7 @@ fn pipelined_requests_on_one_connection_pair_ids_to_results() {
 /// same connection (two workers serve the two batches concurrently).
 #[test]
 fn slow_first_fast_second_completes_out_of_order() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let slow_a = Matrix::random_spectral(32, 0.9, 1);
     let fast_a = Matrix::random_spectral(16, 0.9, 2);
@@ -203,7 +207,7 @@ fn slow_first_fast_second_completes_out_of_order() {
 /// id-tagged replies are paired by id around it.
 #[test]
 fn legacy_one_shot_and_pipelined_coexist_on_one_connection() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let a = Matrix::random_spectral(12, 0.9, 21);
     let b = Matrix::random_spectral(12, 0.9, 22);
@@ -222,7 +226,7 @@ fn legacy_one_shot_and_pipelined_coexist_on_one_connection() {
 /// error lines, so the ticket resolves to the typed error.
 #[test]
 fn pipelined_admission_error_is_id_tagged() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let bad = client.submit(&Matrix::identity(8), 1 << 40, Method::Ours).expect("submit");
     let good = client.submit(&Matrix::identity(8), 4, Method::Ours).expect("submit");
@@ -234,7 +238,7 @@ fn pipelined_admission_error_is_id_tagged() {
 
 #[test]
 fn server_rejects_oversized_power_via_admission() {
-    let (_service, addr) = start_server();
+    let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
     let a = Matrix::identity(16);
     let err = client.expm(&a, 1 << 40, Method::Ours).unwrap_err().to_string();
