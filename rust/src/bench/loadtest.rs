@@ -31,8 +31,20 @@ use crate::server::frame::Frame;
 use crate::server::proto::{Payload, WireResponse, WireStats};
 use crate::util::json::Json;
 
-/// Identifier of the snapshot format written by [`snapshot`].
-pub const SNAPSHOT_SCHEMA: &str = "matexp-loadtest/1";
+/// Identifier of the snapshot format written by [`snapshot`]. Version 2
+/// added the per-stage latency breakdown (`modes[].stages`), sourced from
+/// the server's trace layer via the stats stage fields.
+pub const SNAPSHOT_SCHEMA: &str = "matexp-loadtest/2";
+
+/// Stage names of the per-request breakdown, in snapshot order (matching
+/// the stats fields `queue_us` / `plan_us` / `prepare_us` / `launch_us` /
+/// `wire_us`).
+pub const STAGE_NAMES: [&str; 5] = ["queue", "plan", "prepare", "launch", "wire"];
+
+/// One request's server-side stage breakdown, microseconds.
+fn stage_sample(s: &WireStats) -> [u64; 5] {
+    [s.queue_us, s.plan_us, s.prepare_us, s.launch_us, s.wire_us]
+}
 
 /// Which codec the load clients speak.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -154,6 +166,45 @@ pub struct ModeReport {
     pub wire_bytes_out: u64,
     /// Bytes the clients read off the wire (replies), warmup included.
     pub wire_bytes_in: u64,
+    /// Per-stage server-side latency breakdown (one row per
+    /// [`STAGE_NAMES`] entry), aggregated over the measured requests.
+    pub stages: Vec<StageReport>,
+}
+
+/// Distribution of one server-side stage over a run's measured requests.
+#[derive(Clone, Copy, Debug)]
+pub struct StageReport {
+    /// Stage name (one of [`STAGE_NAMES`]).
+    pub stage: &'static str,
+    /// Median stage time, microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile stage time, microseconds.
+    pub p99_us: f64,
+    /// Mean stage time, microseconds.
+    pub mean_us: f64,
+}
+
+/// Aggregate per-request stage samples into one [`StageReport`] per
+/// stage. Zero samples (a run that measured nothing) yields all-zero
+/// rows rather than NaNs.
+fn aggregate_stages(samples: &[[u64; 5]]) -> Vec<StageReport> {
+    STAGE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(k, stage)| {
+            let mut col: Vec<f64> = samples.iter().map(|s| s[k] as f64).collect();
+            col.sort_by(|a, b| a.partial_cmp(b).expect("NaN stage sample"));
+            if col.is_empty() {
+                return StageReport { stage, p50_us: 0.0, p99_us: 0.0, mean_us: 0.0 };
+            }
+            StageReport {
+                stage,
+                p50_us: percentile(&col, 0.50),
+                p99_us: percentile(&col, 0.99),
+                mean_us: col.iter().sum::<f64>() / col.len() as f64,
+            }
+        })
+        .collect()
 }
 
 /// Run one wire mode against a live server at `addr`.
@@ -165,7 +216,7 @@ pub struct ModeReport {
 pub fn run_mode(addr: &str, mode: WireMode, cfg: &LoadtestConfig) -> Result<ModeReport> {
     cfg.validate()?;
     let barrier = Barrier::new(cfg.clients);
-    let per_client: Vec<Result<(Vec<f64>, f64, (u64, u64))>> = std::thread::scope(|scope| {
+    let per_client: Vec<Result<ClientRun>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
             .map(|cid| {
                 let barrier = &barrier;
@@ -182,13 +233,15 @@ pub fn run_mode(addr: &str, mode: WireMode, cfg: &LoadtestConfig) -> Result<Mode
     });
 
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.clients * cfg.requests);
+    let mut stage_samples: Vec<[u64; 5]> = Vec::with_capacity(cfg.clients * cfg.requests);
     let (mut wall_s, mut bytes_out, mut bytes_in) = (0.0f64, 0u64, 0u64);
     for outcome in per_client {
-        let (lat, client_wall, (out, inn)) = outcome?;
-        latencies.extend(lat);
-        wall_s = wall_s.max(client_wall);
-        bytes_out += out;
-        bytes_in += inn;
+        let run = outcome?;
+        latencies.extend(run.latencies);
+        stage_samples.extend(run.stages);
+        wall_s = wall_s.max(run.wall_s);
+        bytes_out += run.bytes_out;
+        bytes_in += run.bytes_in;
     }
     latencies.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
     let total = latencies.len();
@@ -204,18 +257,31 @@ pub fn run_mode(addr: &str, mode: WireMode, cfg: &LoadtestConfig) -> Result<Mode
         max_s: latencies[total - 1],
         wire_bytes_out: bytes_out,
         wire_bytes_in: bytes_in,
+        stages: aggregate_stages(&stage_samples),
     })
 }
 
-/// One client's share of a run: latencies, measured-phase wall seconds,
-/// and wire-byte totals.
+/// One client's share of a run.
+struct ClientRun {
+    /// End-to-end latency of each measured request, seconds.
+    latencies: Vec<f64>,
+    /// Per-request server-side stage breakdowns, microseconds.
+    stages: Vec<[u64; 5]>,
+    /// Measured-phase wall seconds for this client.
+    wall_s: f64,
+    /// Wire bytes this client wrote.
+    bytes_out: u64,
+    /// Wire bytes this client read.
+    bytes_in: u64,
+}
+
 fn run_client(
     addr: &str,
     mode: WireMode,
     cfg: &LoadtestConfig,
     cid: u64,
     barrier: &Barrier,
-) -> Result<(Vec<f64>, f64, (u64, u64))> {
+) -> Result<ClientRun> {
     let mut client = MatexpClient::connect(addr)?;
     match mode {
         WireMode::Json => {}
@@ -236,6 +302,7 @@ fn run_client(
     barrier.wait();
     let t0 = Instant::now();
     let mut latencies = Vec::with_capacity(cfg.requests);
+    let mut stages = Vec::with_capacity(cfg.requests);
     for i in 0..cfg.requests {
         let started = match cfg.rate {
             // open loop: requests are due on a fixed schedule, and
@@ -251,10 +318,18 @@ fn run_client(
             }
             None => Instant::now(),
         };
-        client.expm(&a, cfg.power, cfg.method)?;
+        let (_, stats) = client.expm(&a, cfg.power, cfg.method)?;
         latencies.push(started.elapsed().as_secs_f64());
+        stages.push(stage_sample(&stats));
     }
-    Ok((latencies, t0.elapsed().as_secs_f64(), client.wire_bytes()))
+    let (bytes_out, bytes_in) = client.wire_bytes();
+    Ok(ClientRun {
+        latencies,
+        stages,
+        wall_s: t0.elapsed().as_secs_f64(),
+        bytes_out,
+        bytes_in,
+    })
 }
 
 /// Round-trip codec timing at one matrix size: the JSON/base64 line codec
@@ -286,6 +361,11 @@ pub fn codec_roundtrip(n: usize, iters: usize) -> CodecBench {
         buffers_recycled: 8,
         peak_resident_bytes: (n * n * 8) as u64,
         wall_s: 0.01,
+        queue_us: 150,
+        plan_us: 6,
+        prepare_us: 80,
+        launch_us: 700,
+        wire_us: 30,
         per_device: Vec::new(),
     };
     let line_resp = WireResponse::Ok {
@@ -331,6 +411,18 @@ pub fn snapshot(
     let mode_rows: Vec<Json> = modes
         .iter()
         .map(|r| {
+            let stage_rows: Vec<Json> = r
+                .stages
+                .iter()
+                .map(|s| {
+                    json_obj![
+                        ("stage", s.stage),
+                        ("p50_us", s.p50_us),
+                        ("p99_us", s.p99_us),
+                        ("mean_us", s.mean_us),
+                    ]
+                })
+                .collect();
             json_obj![
                 ("mode", r.mode.as_str()),
                 ("requests", r.requests),
@@ -343,6 +435,7 @@ pub fn snapshot(
                 ("max_s", r.max_s),
                 ("wire_bytes_out", r.wire_bytes_out),
                 ("wire_bytes_in", r.wire_bytes_in),
+                ("stages", Json::Arr(stage_rows)),
             ]
         })
         .collect();
@@ -409,6 +502,33 @@ pub fn validate_snapshot(v: &Json) -> Result<()> {
                 _ => return fail(&format!("modes[{i}].{field} must be finite and positive")),
             }
         }
+        // schema v2: one stage row per STAGE_NAMES entry, in order, with
+        // finite non-negative quantiles (zero is legitimate — e.g.
+        // `prepare` on a warm cache)
+        let stages = match mode.get("stages").and_then(Json::as_arr) {
+            Some(s) if s.len() == STAGE_NAMES.len() => s,
+            _ => {
+                return fail(&format!(
+                    "modes[{i}].stages must list all {} stages",
+                    STAGE_NAMES.len()
+                ))
+            }
+        };
+        for (row, want) in stages.iter().zip(STAGE_NAMES) {
+            if row.get("stage").and_then(Json::as_str) != Some(want) {
+                return fail(&format!("modes[{i}].stages out of order (expected {want:?})"));
+            }
+            for field in ["p50_us", "p99_us", "mean_us"] {
+                match row.get(field).and_then(Json::as_f64) {
+                    Some(x) if x.is_finite() && x >= 0.0 => {}
+                    _ => {
+                        return fail(&format!(
+                            "modes[{i}].stages[{want}].{field} must be finite and non-negative"
+                        ))
+                    }
+                }
+            }
+        }
     }
     match v.get("codec_roundtrip").and_then(|c| c.get("speedup")).and_then(Json::as_f64) {
         Some(x) if x.is_finite() && x > 0.0 => {}
@@ -441,6 +561,26 @@ pub fn render(modes: &[ModeReport], codec: &CodecBench) -> String {
             r.wire_bytes_in,
         );
     }
+    // per-stage server-side breakdown (from the trace layer, via the
+    // stats stage fields each reply carries)
+    let _ = writeln!(
+        out,
+        "\n{:<8} {:<9} {:>11} {:>11} {:>11}",
+        "mode", "stage", "p50", "p99", "mean"
+    );
+    for r in modes {
+        for s in &r.stages {
+            let _ = writeln!(
+                out,
+                "{:<8} {:<9} {:>11} {:>11} {:>11}",
+                r.mode.as_str(),
+                s.stage,
+                format_secs(s.p50_us / 1e6),
+                format_secs(s.p99_us / 1e6),
+                format_secs(s.mean_us / 1e6),
+            );
+        }
+    }
     let _ = writeln!(
         out,
         "\ncodec round-trip at n={}: json+b64 {} vs frame {} ({:.1}x)",
@@ -469,6 +609,7 @@ mod tests {
             max_s: 0.06,
             wire_bytes_out: 1 << 20,
             wire_bytes_in: 1 << 21,
+            stages: aggregate_stages(&[[120, 5, 0, 800, 30], [90, 4, 60, 750, 25]]),
         }
     }
 
@@ -482,8 +623,33 @@ mod tests {
         let reparsed = Json::parse(&v.to_string()).unwrap();
         validate_snapshot(&reparsed).unwrap();
         let text = v.to_string();
-        assert!(text.contains("\"schema\":\"matexp-loadtest/1\""), "{text}");
+        assert!(text.contains("\"schema\":\"matexp-loadtest/2\""), "{text}");
         assert!(text.contains("\"p99_s\""), "{text}");
+        // v2 carries the per-stage breakdown for every mode
+        assert!(text.contains("\"stages\""), "{text}");
+        assert!(text.contains("\"stage\":\"launch\""), "{text}");
+    }
+
+    #[test]
+    fn stage_aggregation_and_validation() {
+        let rows = aggregate_stages(&[[100, 10, 0, 500, 20], [200, 20, 0, 700, 40]]);
+        assert_eq!(rows.len(), STAGE_NAMES.len());
+        assert_eq!(rows[0].stage, "queue");
+        assert!(rows[0].p50_us >= 100.0 && rows[0].p99_us <= 200.0);
+        // the all-zero prepare column is legitimate (warm cache)
+        assert_eq!(rows[2].p50_us, 0.0);
+        // no samples → zero rows, not NaNs
+        for row in aggregate_stages(&[]) {
+            assert_eq!(row.mean_us, 0.0);
+        }
+
+        // a snapshot whose mode rows lack the stage table is malformed v2
+        let cfg = LoadtestConfig::default();
+        let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
+        let good = snapshot(7, &cfg, &[report(WireMode::Json)], &codec);
+        let stripped = good.to_string().replace("\"stage\":\"launch\"", "\"stage\":\"lunch\"");
+        assert_ne!(stripped, good.to_string(), "replace must hit");
+        assert!(validate_snapshot(&Json::parse(&stripped).unwrap()).is_err());
     }
 
     #[test]
@@ -549,5 +715,9 @@ mod tests {
         assert!(out.contains("json"), "{out}");
         assert!(out.contains("binary"), "{out}");
         assert!(out.contains("codec round-trip"), "{out}");
+        // the per-stage table names every stage
+        for stage in STAGE_NAMES {
+            assert!(out.contains(stage), "missing stage {stage}: {out}");
+        }
     }
 }

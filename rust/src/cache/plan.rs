@@ -18,6 +18,7 @@ use std::sync::{Mutex, OnceLock};
 use crate::cache::CacheControl;
 use crate::coordinator::request::Method;
 use crate::plan::{Plan, PlanKind};
+use crate::trace;
 
 /// Everything that determines which plan the scheduler would build.
 ///
@@ -87,11 +88,14 @@ impl PlanCache {
             let inner = self.inner.lock().expect("plan cache poisoned");
             if let Some(plan) = inner.map.get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                trace::event(trace::SpanKind::CacheHit(trace::Tier::Plan), trace::current(), key.n);
                 return plan.clone();
             }
         }
+        trace::event(trace::SpanKind::CacheMiss(trace::Tier::Plan), trace::current(), key.n);
         let plan = build();
         self.misses.fetch_add(1, Ordering::Relaxed);
+        trace::event(trace::SpanKind::CacheStore(trace::Tier::Plan), trace::current(), key.n);
         let mut inner = self.inner.lock().expect("plan cache poisoned");
         if inner.map.insert(key, plan.clone()).is_none() {
             inner.order.push_back(key);

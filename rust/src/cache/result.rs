@@ -51,6 +51,7 @@ use crate::config::MatexpConfig;
 use crate::coordinator::request::{ExecStats, ExpmRequest, ExpmResponse, Method};
 use crate::linalg::matrix::Matrix;
 use crate::plan::PlanKind;
+use crate::trace;
 
 /// Bucket for "no tolerance requested" — distinct from every real bucket
 /// (an untoleranced request may take the aggressive chained plan).
@@ -403,7 +404,16 @@ impl ResultCachePolicy {
     pub fn lookup(&self, id: u64) -> Option<ExpmResponse> {
         let ResultCachePolicy::ReadWrite(key) = self else { return None };
         let t0 = Instant::now();
-        let hit = ResultCache::global().get(key)?;
+        let hit = match ResultCache::global().get(key) {
+            Some(hit) => {
+                trace::event(trace::SpanKind::CacheHit(trace::Tier::Result), trace::current(), key.n);
+                hit
+            }
+            None => {
+                trace::event(trace::SpanKind::CacheMiss(trace::Tier::Result), trace::current(), key.n);
+                return None;
+            }
+        };
         Some(ExpmResponse {
             id,
             result: hit.result,
@@ -420,6 +430,7 @@ impl ResultCachePolicy {
             ResultCachePolicy::ReadWrite(key) | ResultCachePolicy::WriteOnly(key) => key,
         };
         ResultCache::global().insert(*key, &resp.result, resp.method, resp.plan_kind);
+        trace::event(trace::SpanKind::CacheStore(trace::Tier::Result), trace::current(), key.n);
     }
 }
 

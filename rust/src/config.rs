@@ -98,6 +98,30 @@ impl CacheSettings {
     }
 }
 
+/// Flight-recorder knobs (see [`crate::trace`]).
+///
+/// The recorder defaults **on** — recording a span is a handful of
+/// relaxed atomic stores into a fixed ring, cheap enough for production
+/// (the loadtest overhead gate asserts it). `slow_ms` switches on the
+/// slow-request stderr log (`--trace-slow-ms`); 0 keeps it off.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceSettings {
+    /// Record spans into the flight recorder.
+    pub enabled: bool,
+    /// Spans the flight recorder retains (rounded up to a power of two;
+    /// ~48 bytes each).
+    pub ring_capacity: usize,
+    /// Emit a single-line JSON report to stderr for requests slower than
+    /// this many milliseconds (0 = disabled).
+    pub slow_ms: u64,
+}
+
+impl Default for TraceSettings {
+    fn default() -> Self {
+        Self { enabled: true, ring_capacity: crate::trace::DEFAULT_RING_CAPACITY, slow_ms: 0 }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
@@ -124,6 +148,8 @@ pub struct MatexpConfig {
     pub pool: PoolConfig,
     /// Multi-tier cache policy (plan memoization, result serving).
     pub cache: CacheSettings,
+    /// Flight-recorder tracing policy (span ring, slow-request log).
+    pub trace: TraceSettings,
     /// Use the fused `sqmul` executable in binary plans.
     pub fused_sqmul: bool,
     /// Fold squaring runs into `square2`/`square4` launches.
@@ -153,6 +179,7 @@ impl Default for MatexpConfig {
             batcher: BatcherConfig::default(),
             pool: PoolConfig::default(),
             cache: CacheSettings::default(),
+            trace: TraceSettings::default(),
             fused_sqmul: true,
             use_square_chains: true,
             warmup_sizes: Vec::new(),
@@ -297,6 +324,30 @@ impl MatexpConfig {
                         }
                     }
                 }
+                "trace" => {
+                    let t = val.as_obj().ok_or_else(|| bad("trace"))?;
+                    for (tk, tv) in t {
+                        match tk.as_str() {
+                            "enabled" => {
+                                cfg.trace.enabled =
+                                    tv.as_bool().ok_or_else(|| bad("trace.enabled"))?
+                            }
+                            "ring_capacity" => {
+                                cfg.trace.ring_capacity =
+                                    tv.as_usize().ok_or_else(|| bad("trace.ring_capacity"))?
+                            }
+                            "slow_ms" => {
+                                cfg.trace.slow_ms =
+                                    tv.as_u64().ok_or_else(|| bad("trace.slow_ms"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field trace.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
                 "fused_sqmul" => {
                     cfg.fused_sqmul = val.as_bool().ok_or_else(|| bad("fused_sqmul"))?
                 }
@@ -372,6 +423,14 @@ impl MatexpConfig {
                 ]
             ),
             (
+                "trace",
+                json_obj![
+                    ("enabled", self.trace.enabled),
+                    ("ring_capacity", self.trace.ring_capacity),
+                    ("slow_ms", self.trace.slow_ms),
+                ]
+            ),
+            (
                 "warmup_sizes",
                 Json::Arr(self.warmup_sizes.iter().map(|&n| Json::from(n)).collect())
             ),
@@ -405,6 +464,9 @@ impl MatexpConfig {
         }
         if self.cache.budget_mb == 0 {
             return Err(MatexpError::Config("cache.budget_mb must be >= 1".into()));
+        }
+        if self.trace.ring_capacity == 0 {
+            return Err(MatexpError::Config("trace.ring_capacity must be >= 1".into()));
         }
         if self.pool.max_grid == 0 {
             return Err(MatexpError::Config("pool.max_grid must be >= 1".into()));
@@ -545,6 +607,31 @@ mod tests {
         // a zero budget is a config error
         let mut cfg = MatexpConfig::default();
         cfg.cache.budget_mb = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_settings_parse_and_validate() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"trace":{"enabled":false,"ring_capacity":512,"slow_ms":25}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(!cfg.trace.enabled);
+        assert_eq!(cfg.trace.ring_capacity, 512);
+        assert_eq!(cfg.trace.slow_ms, 25);
+        cfg.validate().unwrap();
+        // defaults: recorder on, slow log off
+        let d = TraceSettings::default();
+        assert!(d.enabled);
+        assert_eq!(d.slow_ms, 0);
+        assert!(MatexpConfig::from_json(&Json::parse(r#"{"trace":{"wat":1}}"#).unwrap()).is_err());
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"trace":{"enabled":"on"}}"#).unwrap()
+        )
+        .is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.trace.ring_capacity = 0;
         assert!(cfg.validate().is_err());
     }
 

@@ -38,8 +38,11 @@ pub struct Metrics {
     pub bytes_copied_total: AtomicU64,
     /// Launch outputs served from recycled arena buffers, all responses.
     pub buffers_recycled_total: AtomicU64,
-    /// Gauge: requests waiting in the batcher right now (set by the
-    /// collector each loop).
+    /// Gauge: requests admitted but not yet shipped to a worker.
+    /// Incremented at submission, decremented when the collector ships
+    /// the batch — so the gauge is live even while the collector idles
+    /// (it used to be overwritten only once per collector-loop turn,
+    /// which left it stale between batches).
     pub queue_depth: AtomicU64,
     /// Wire bytes read off client connections (JSON lines and binary
     /// frames both), maintained by the TCP front-end.
@@ -76,7 +79,7 @@ pub struct MetricsSnapshot {
     pub bytes_copied_total: u64,
     /// Recycled-buffer launch outputs across all served responses.
     pub buffers_recycled_total: u64,
-    /// Requests waiting in the batcher at snapshot time.
+    /// Requests admitted but not yet shipped to a worker at snapshot time.
     pub queue_depth: u64,
     /// Wire bytes read off client connections.
     pub wire_bytes_in_total: u64,

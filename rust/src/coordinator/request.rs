@@ -6,6 +6,7 @@ use crate::cache::CacheControl;
 use crate::exec::Priority;
 use crate::linalg::matrix::Matrix;
 use crate::plan::{Plan, PlanKind};
+use crate::trace::TraceId;
 
 pub use crate::runtime::engine::ExecStats;
 
@@ -104,6 +105,13 @@ pub struct ExpmRequest {
     pub tolerance: Option<f32>,
     /// Cache directive for this request (see [`CacheControl`]).
     pub cache: CacheControl,
+    /// Correlates every [`crate::trace::Span`] this request produces
+    /// (carried from the submission, or minted by [`ExpmRequest::new`]).
+    pub trace: TraceId,
+    /// When the serving coordinator enqueued this request (stamped by the
+    /// service; `None` on direct engine/pool execution). The worker turns
+    /// it into the `queue_us` stage of [`ExecStats`].
+    pub queued_at: Option<Instant>,
 }
 
 impl ExpmRequest {
@@ -120,6 +128,8 @@ impl ExpmRequest {
             priority: Priority::default(),
             tolerance: None,
             cache: CacheControl::default(),
+            trace: TraceId::mint(),
+            queued_at: None,
         }
     }
 
@@ -164,5 +174,7 @@ mod tests {
         assert_eq!(r.n(), 8);
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.plan.is_none() && r.deadline.is_none() && r.tolerance.is_none());
+        assert_ne!(r.trace, TraceId::NONE);
+        assert!(r.queued_at.is_none());
     }
 }

@@ -28,6 +28,9 @@ use crate::error::{MatexpError, Result};
 use crate::exec::{JobHandle, ReplyRegistry, ReplySender, Submission};
 use crate::pool::DevicePool;
 use crate::runtime::BackendKind;
+use crate::json_obj;
+use crate::trace;
+use crate::util::json::Json;
 
 /// Namespace for [`Service::start`].
 pub struct Service;
@@ -54,6 +57,7 @@ impl Service {
     /// so admission can reject unservable requests up front.
     pub fn start(cfg: MatexpConfig) -> Result<ServiceHandle> {
         cfg.validate()?;
+        trace::configure(&cfg.trace);
         let sizes = servable_sizes(&cfg)?;
         let metrics = Arc::new(Metrics::new());
         let replies: ReplyRegistry = Arc::new(Mutex::new(HashMap::new()));
@@ -139,6 +143,11 @@ fn collector_loop(
         metrics
             .batched_requests_total
             .fetch_add(batch.requests.len() as u64, Ordering::Relaxed);
+        // shipped requests leave the queue: the gauge was incremented at
+        // submission, so the enqueue/dequeue pair keeps it live even when
+        // this loop idles (it used to be overwritten here each iteration,
+        // which left it stale between batches)
+        metrics.queue_depth.fetch_sub(batch.requests.len() as u64, Ordering::Relaxed);
         if let Err(send_err) = batch_tx.send(batch) {
             // workers are gone: fail every request in the dropped batch
             // through its reply slot — leaving the slots registered would
@@ -181,7 +190,6 @@ fn collector_loop(
         for batch in batcher.flush_due(Instant::now()) {
             ship(batch, metrics);
         }
-        metrics.queue_depth.store(batcher.len() as u64, Ordering::Relaxed);
     }
 }
 
@@ -243,6 +251,26 @@ fn worker_loop(
             }
         };
         let started = Instant::now();
+        // close each request's queue stage: enqueue stamp → this dequeue
+        // (the span is recorded here so cancelled requests still show
+        // their queueing; `queue_us` rides the response stats)
+        let dequeued_us = trace::now_us();
+        let mut queue_info: HashMap<u64, (u64, u64, usize)> = HashMap::new();
+        for req in &batch.requests {
+            let q_us = req
+                .queued_at
+                .map_or(0, |q| started.saturating_duration_since(q).as_micros() as u64);
+            if req.queued_at.is_some() {
+                trace::record_span_at(
+                    trace::SpanKind::Queue,
+                    req.trace,
+                    dequeued_us.saturating_sub(q_us),
+                    dequeued_us,
+                    req.n(),
+                );
+            }
+            queue_info.insert(req.id, (req.trace.get(), q_us, req.n()));
+        }
         // the pool dispatches whole batches request-parallel (per-device
         // queues + stealing); everything else executes serially here with
         // per-request latency (a parallel batch's requests all share the
@@ -268,7 +296,11 @@ fn worker_loop(
                 })
                 .collect()
         };
-        for (id, outcome, elapsed) in outcomes {
+        for (id, mut outcome, elapsed) in outcomes {
+            let (trace_raw, q_us, n) = queue_info.get(&id).copied().unwrap_or((0, 0, 0));
+            if let Ok(resp) = &mut outcome {
+                resp.stats.queue_us = q_us;
+            }
             let reply_tx = replies.lock().expect("reply map poisoned").remove(&id);
             match (&outcome, reply_tx) {
                 (Ok(resp), Some(tx)) => {
@@ -285,6 +317,7 @@ fn worker_loop(
                         .fetch_add(resp.stats.buffers_recycled, Ordering::Relaxed);
                     let latency = elapsed.unwrap_or_else(|| started.elapsed());
                     metrics.observe_latency_us(latency.as_micros() as u64);
+                    slow_log(resp, trace_raw, n, latency);
                     let _ = tx.send((id, outcome));
                 }
                 (Err(_), Some(tx)) => {
@@ -299,6 +332,34 @@ fn worker_loop(
             }
         }
     }
+}
+
+/// Emit the slow-request record to stderr as single-line JSON when one
+/// request's end-to-end service latency (dequeue → response, plus its
+/// queue stage) crosses the configured threshold
+/// ([`crate::config::TraceSettings::slow_ms`] / `--trace-slow-ms`;
+/// 0 disables the log).
+fn slow_log(resp: &ExpmResponse, trace_raw: u64, n: usize, latency: Duration) {
+    let threshold = trace::slow_threshold_us();
+    let latency_us = (latency.as_micros() as u64).saturating_add(resp.stats.queue_us);
+    if threshold == 0 || latency_us < threshold {
+        return;
+    }
+    let line: Json = json_obj![
+        ("slow_request", json_obj![
+            ("id", resp.id),
+            ("trace", trace_raw),
+            ("n", n),
+            ("method", resp.method.as_str()),
+            ("latency_us", latency_us),
+            ("queue_us", resp.stats.queue_us),
+            ("plan_us", resp.stats.plan_us),
+            ("prepare_us", resp.stats.prepare_us),
+            ("launch_us", resp.stats.launch_us),
+            ("launches", resp.stats.launches),
+        ]),
+    ];
+    eprintln!("{}", line.to_string());
 }
 
 /// Register the reply slot and hand the request to the collector — and,
@@ -366,10 +427,11 @@ impl ServiceHandle {
     /// the handle.
     pub fn submit_job(&self, submission: Submission) -> Result<JobHandle> {
         let id = self.reserve_id();
+        let trace = submission.trace;
         let deadline = submission.deadline.map(|d| Instant::now() + d);
         let (tx, rx) = std::sync::mpsc::channel();
         self.submit_request(submission.into_request_at(id, deadline), tx)?;
-        Ok(JobHandle::pending(id, deadline, rx, Arc::clone(&self.replies)))
+        Ok(JobHandle::pending(id, trace, deadline, rx, Arc::clone(&self.replies)))
     }
 
     /// Asynchronous submission with a caller-chosen reserved id
@@ -385,7 +447,7 @@ impl ServiceHandle {
         self.submit_request(submission.into_request(id), reply_tx)
     }
 
-    fn submit_request(&self, req: ExpmRequest, reply_tx: ReplySender) -> Result<()> {
+    fn submit_request(&self, mut req: ExpmRequest, reply_tx: ReplySender) -> Result<()> {
         self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         if let Err(e) = scheduler::admit(&req, &self.sizes, &self.cfg) {
             self.metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
@@ -395,7 +457,12 @@ impl ServiceHandle {
             .submit_tx
             .as_ref()
             .ok_or_else(|| MatexpError::Service("service shut down".into()))?;
-        enqueue(&self.replies, submit_tx, req, reply_tx)
+        req.queued_at = Some(Instant::now());
+        enqueue(&self.replies, submit_tx, req, reply_tx)?;
+        // gauge up at enqueue, down when the collector ships the batch —
+        // live regardless of whether the collector loop is spinning
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Graceful shutdown: drain the queue, join all threads.
@@ -499,6 +566,50 @@ mod tests {
         assert_eq!(slots(&handle), 1);
         drop(job);
         assert_eq!(slots(&handle), 0);
+    }
+
+    /// Satellite regression: the queue-depth gauge used to be written
+    /// only inside the collector loop, so with an idle (or absent)
+    /// collector it stayed stale. It now moves at enqueue time.
+    #[test]
+    fn queue_depth_moves_at_enqueue_without_a_collector() {
+        let (handle, _intake) = inert_handle();
+        assert_eq!(handle.metrics.snapshot().queue_depth, 0);
+        let _j1 = handle.submit_job(Submission::expm(Matrix::identity(8), 4)).unwrap();
+        let _j2 = handle.submit_job(Submission::expm(Matrix::identity(8), 4)).unwrap();
+        assert_eq!(handle.metrics.snapshot().queue_depth, 2, "enqueue increments the gauge");
+        // a rejected submission never enters the queue
+        let _ = handle.submit_job(Submission::expm(Matrix::identity(8), 0));
+        assert_eq!(handle.metrics.snapshot().queue_depth, 2);
+    }
+
+    /// End-to-end through a real service: the request's spans land in the
+    /// flight recorder under the handle's trace id, the queue stage rides
+    /// the response stats, and the queue-depth gauge drains back to zero.
+    #[test]
+    fn served_request_traces_and_drains_the_gauge() {
+        // hold the recorder guard: a parallel test may disable recording
+        let _guard = crate::trace::test_guard();
+        let mut cfg = MatexpConfig::default();
+        cfg.workers = 1;
+        let handle = Service::start(cfg).unwrap();
+        let mut job = handle
+            .submit_job(Submission::expm(Matrix::random_spectral(8, 0.9, 3), 64))
+            .unwrap();
+        let trace_id = job.trace();
+        assert_ne!(trace_id, crate::trace::TraceId::NONE);
+        let resp = job.wait().unwrap();
+        assert!(resp.result.is_finite());
+        let spans: Vec<trace::Span> = trace::recent_spans()
+            .into_iter()
+            .filter(|s| s.trace_id == trace_id.get())
+            .collect();
+        assert!(spans.iter().any(|s| s.kind == trace::SpanKind::Queue), "{spans:?}");
+        assert!(spans.iter().any(|s| s.kind == trace::SpanKind::Execute), "{spans:?}");
+        assert!(spans.iter().any(|s| s.kind == trace::SpanKind::Launch), "{spans:?}");
+        trace::validate_spans(&spans).unwrap();
+        assert_eq!(handle.metrics().queue_depth, 0, "every request shipped");
+        handle.shutdown();
     }
 
     #[test]

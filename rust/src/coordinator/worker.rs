@@ -15,6 +15,7 @@ use crate::linalg::{self, CpuAlgo};
 use crate::pool::{DevicePool, PoolEngine};
 use crate::runtime::engine::AnyEngine;
 use crate::runtime::{Backend, BackendKind, Engine};
+use crate::trace;
 
 /// Execute one request on this worker's engine: the strategy dispatch
 /// behind every [`crate::exec::Executor`] — deadline preflight, the
@@ -28,11 +29,19 @@ pub fn execute_request<B: Backend>(
     req: &ExpmRequest,
 ) -> Result<ExpmResponse> {
     crate::exec::check_deadline(req.deadline)?;
+    // everything below runs in the request's trace context: launch /
+    // prepare spans recorded by the engine correlate to req.trace, and
+    // the stage accumulators drain into the response's stats
+    let _scope = trace::enter(req.trace);
+    let exec_start = trace::now_us();
     let cache = ResultCachePolicy::for_request(cfg, req);
     if let Some(resp) = cache.lookup(req.id) {
+        trace::record_span(trace::SpanKind::Execute, req.trace, exec_start, req.n());
         return crate::exec::enforce(req.deadline, req.tolerance, resp);
     }
+    let plan_t0 = trace::now_us();
     let strategy = strategy_for(req, cfg);
+    trace::add_stage(trace::Stage::Plan, trace::now_us().saturating_sub(plan_t0));
     let (result, stats, plan_kind) = match strategy {
         Strategy::DeviceResident(plan) => {
             let kind = plan.kind;
@@ -67,12 +76,18 @@ pub fn execute_request<B: Backend>(
             (m, stats, None)
         }
     };
+    let mut stats = stats;
+    let [plan_us, prepare_us, launch_us] = trace::take_stages();
+    stats.plan_us = plan_us;
+    stats.prepare_us = prepare_us;
+    stats.launch_us = launch_us;
     let resp = ExpmResponse { id: req.id, result, stats, method: req.method, plan_kind };
     // enforce BEFORE storing: a response that violates its contract
     // (late, or non-finite under a tolerance) must not occupy cache
     // budget with an answer that can never be served successfully
     let resp = crate::exec::enforce(req.deadline, req.tolerance, resp)?;
     cache.store(&resp);
+    trace::record_span(trace::SpanKind::Execute, req.trace, exec_start, req.n());
     Ok(resp)
 }
 

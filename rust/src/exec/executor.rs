@@ -143,7 +143,7 @@ impl<B: Backend> Executor for Engine<B> {
         let req = submission.into_request(next_sync_id());
         scheduler::admit(&req, &[], cfg)?;
         let outcome = worker::execute_request(self, cfg, &req);
-        Ok(JobHandle::ready(req.id, req.deadline, outcome))
+        Ok(JobHandle::ready(req.id, req.trace, req.deadline, outcome))
     }
 
     fn capabilities(&self) -> Capabilities {
@@ -154,10 +154,10 @@ impl<B: Backend> Executor for Engine<B> {
 impl Executor for PoolEngine {
     fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
         let req = submission.into_request(next_sync_id());
-        let (id, deadline) = (req.id, req.deadline);
+        let (id, trace, deadline) = (req.id, req.trace, req.deadline);
         scheduler::admit(&req, &[], self.pool().config())?;
         let outcome = self.execute_request(req);
-        Ok(JobHandle::ready(id, deadline, outcome))
+        Ok(JobHandle::ready(id, trace, deadline, outcome))
     }
 
     fn capabilities(&self) -> Capabilities {
@@ -168,12 +168,12 @@ impl Executor for PoolEngine {
 impl Executor for WorkerEngine {
     fn submit(&mut self, submission: Submission) -> Result<JobHandle> {
         let req = submission.into_request(next_sync_id());
-        let (id, deadline) = (req.id, req.deadline);
+        let (id, trace, deadline) = (req.id, req.trace, req.deadline);
         // admit and dispatch with the config the worker was built from
         // (the CLI's loaded config), not crate defaults
         scheduler::admit(&req, &[], self.config())?;
         let outcome = worker::execute(self, req);
-        Ok(JobHandle::ready(id, deadline, outcome))
+        Ok(JobHandle::ready(id, trace, deadline, outcome))
     }
 
     fn capabilities(&self) -> Capabilities {

@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use crate::coordinator::request::ExpmResponse;
 use crate::error::{MatexpError, Result};
+use crate::trace::TraceId;
 
 /// What a worker sends back for one job: the response, or the TYPED
 /// error — the kind survives the thread hop, so a `Deadline` rejection
@@ -46,6 +47,7 @@ enum State {
 /// deadline expiry enforced at the waiting edge.
 pub struct JobHandle {
     id: u64,
+    trace: TraceId,
     deadline: Option<Instant>,
     state: State,
 }
@@ -56,25 +58,33 @@ impl JobHandle {
     /// already decided, so it no longer gates anything.
     pub(crate) fn ready(
         id: u64,
+        trace: TraceId,
         deadline: Option<Instant>,
         outcome: Result<ExpmResponse>,
     ) -> JobHandle {
-        JobHandle { id, deadline, state: State::Ready(Some(outcome)) }
+        JobHandle { id, trace, deadline, state: State::Ready(Some(outcome)) }
     }
 
     /// Handle over an in-flight service job.
     pub(crate) fn pending(
         id: u64,
+        trace: TraceId,
         deadline: Option<Instant>,
         rx: Receiver<(u64, JobReply)>,
         replies: ReplyRegistry,
     ) -> JobHandle {
-        JobHandle { id, deadline, state: State::Pending { rx, replies, done: false } }
+        JobHandle { id, trace, deadline, state: State::Pending { rx, replies, done: false } }
     }
 
     /// The id the executor assigned this job.
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The trace id correlating this job's [`crate::trace::Span`]s —
+    /// what `matexp trace` dumps filter on.
+    pub fn trace(&self) -> TraceId {
+        self.trace
     }
 
     /// Absolute deadline, if the submission carried one.
@@ -228,8 +238,9 @@ mod tests {
 
     #[test]
     fn ready_handle_yields_once() {
-        let mut h = JobHandle::ready(1, None, Ok(resp(1)));
+        let mut h = JobHandle::ready(1, TraceId::from_raw(11), None, Ok(resp(1)));
         assert_eq!(h.id(), 1);
+        assert_eq!(h.trace(), TraceId::from_raw(11));
         assert!(h.wait().is_ok());
         assert!(h.wait().is_err(), "second wait must not fabricate a result");
         assert!(!h.cancel(), "a completed job cannot be withdrawn");
@@ -239,7 +250,7 @@ mod tests {
     fn pending_handle_delivers_worker_reply() {
         let (tx, rx) = channel();
         let registry = registry_with(7, tx.clone());
-        let mut h = JobHandle::pending(7, None, rx, Arc::clone(&registry));
+        let mut h = JobHandle::pending(7, TraceId::NONE, None, rx, Arc::clone(&registry));
         assert!(h.try_result().is_none(), "nothing sent yet");
         tx.send((7, Ok(resp(7)))).unwrap();
         let got = h.wait().unwrap();
@@ -251,7 +262,7 @@ mod tests {
         let (tx, rx) = channel();
         let registry = registry_with(3, tx);
         let deadline = Some(Instant::now() + Duration::from_millis(5));
-        let mut h = JobHandle::pending(3, deadline, rx, Arc::clone(&registry));
+        let mut h = JobHandle::pending(3, TraceId::NONE, deadline, rx, Arc::clone(&registry));
         match h.wait() {
             Err(MatexpError::Deadline(_)) => {}
             other => panic!("want deadline error, got {other:?}"),
@@ -263,7 +274,7 @@ mod tests {
     fn cancel_deregisters_and_poisons_wait() {
         let (tx, rx) = channel();
         let registry = registry_with(9, tx);
-        let mut h = JobHandle::pending(9, None, rx, Arc::clone(&registry));
+        let mut h = JobHandle::pending(9, TraceId::NONE, None, rx, Arc::clone(&registry));
         assert!(h.cancel());
         assert!(registry.lock().unwrap().is_empty());
         assert!(!h.cancel(), "double cancel is a no-op");
@@ -274,7 +285,7 @@ mod tests {
     fn drop_deregisters_abandoned_jobs() {
         let (tx, rx) = channel();
         let registry = registry_with(4, tx);
-        drop(JobHandle::pending(4, None, rx, Arc::clone(&registry)));
+        drop(JobHandle::pending(4, TraceId::NONE, None, rx, Arc::clone(&registry)));
         assert!(registry.lock().unwrap().is_empty());
     }
 }

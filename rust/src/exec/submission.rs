@@ -13,6 +13,7 @@ use crate::coordinator::request::{ExpmRequest, Method};
 use crate::error::MatexpError;
 use crate::linalg::matrix::Matrix;
 use crate::plan::Plan;
+use crate::trace::TraceId;
 
 /// Scheduling priority of a submission.
 ///
@@ -115,6 +116,9 @@ pub struct Submission {
     /// `Refresh` recomputes and overwrites. Local submissions only — the
     /// wire protocol always uses the server's default policy.
     pub cache: CacheControl,
+    /// The trace id correlating every [`crate::trace::Span`] this
+    /// submission produces, minted at construction.
+    pub trace: TraceId,
 }
 
 impl Submission {
@@ -129,6 +133,7 @@ impl Submission {
             priority: Priority::default(),
             tolerance: None,
             cache: CacheControl::default(),
+            trace: TraceId::mint(),
         }
     }
 
@@ -207,6 +212,8 @@ impl Submission {
             priority: self.priority,
             tolerance: self.tolerance,
             cache: self.cache,
+            trace: self.trace,
+            queued_at: None,
         }
     }
 }
@@ -234,6 +241,7 @@ mod tests {
 
         let req = sub.into_request(9);
         assert_eq!(req.id, 9);
+        assert_ne!(req.trace, TraceId::NONE, "lowering keeps the minted trace id");
         assert_eq!(req.method, Method::NaiveGpu);
         assert!(req.deadline.is_some());
         assert_eq!(req.priority, Priority::High);

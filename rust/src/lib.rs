@@ -157,6 +157,7 @@ pub mod pool;
 pub mod runtime;
 pub mod server;
 pub mod simulator;
+pub mod trace;
 pub mod util;
 
 /// One-stop imports for examples and downstream users.
@@ -179,4 +180,5 @@ pub mod prelude {
         SimEngine, Variant,
     };
     pub use crate::simulator::device::DeviceSpec;
+    pub use crate::trace::TraceId;
 }

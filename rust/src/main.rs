@@ -8,6 +8,9 @@
 //! * `serve`      — run the TCP serving front-end
 //! * `loadtest`   — drive a server with concurrent wire clients, write a
 //!   `BENCH_*.json` latency/throughput snapshot
+//! * `trace`      — dump a running server's flight recorder as Chrome
+//!   trace-event JSON (Perfetto / `chrome://tracing` loadable)
+//! * `metrics`    — fetch a running server's metrics (JSON or Prometheus)
 //! * `bench-report` — run every table in simulation and print the summary
 
 use std::str::FromStr;
@@ -26,6 +29,7 @@ use matexp::plan::{Plan, PlanCost};
 use matexp::runtime::artifacts::ArtifactRegistry;
 use matexp::runtime::engine::AnyEngine;
 use matexp::runtime::{BackendKind, Variant};
+use matexp::server::client::MatexpClient;
 use matexp::simulator::device::DeviceSpec;
 use matexp::util::cli::Args;
 
@@ -39,7 +43,9 @@ COMMANDS:
   plan         show launch schedules   --power N [--all]
   expm         compute A^N             --n SIZE --power N [--method M] [--seed S]
                                        [--deadline-ms MS] [--tolerance T]
-                                       [--priority low|normal|high]
+                                       [--priority low|normal|high] [--explain]
+                                       (--explain: per-stage latency breakdown
+                                        + cache-tier outcomes)
   experiment   regenerate paper results --table 2..5 [--measure] [--figures]
                or an ablation          --ablation tiles|transfers|fusion|cpu
                                        [--n SIZE] [--power N]
@@ -54,6 +60,11 @@ COMMANDS:
                                        (A6: cold vs plan-warm vs result-warm
                                         at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
+  trace        dump a server's flight recorder as Chrome trace JSON
+                                       [--addr HOST:PORT] [--out FILE]
+                                       [--check]  (validate, print span count)
+  metrics      fetch server metrics    [--addr HOST:PORT]
+                                       [--format json|prometheus]
   loadtest     wire load harness       [--addr HOST:PORT] [--clients K]
                                        [--requests R] [--warmup W] [--n SIZE]
                                        [--power N] [--method M] [--rate RPS]
@@ -77,6 +88,9 @@ GLOBAL FLAGS:
   --max-n N         admission limit on matrix size (default 4096)
   --cache-results   serve repeated identical requests from the result cache
   --cache-budget-mb M   result-cache byte budget, MiB (default 256, LRU)
+  --trace / --no-trace  flight-recorder span capture (default on)
+  --trace-ring N    spans the flight recorder retains (default 4096)
+  --trace-slow-ms MS    stderr JSON line for requests slower than MS (0 = off)
   --artifacts DIR   artifact directory (default ./artifacts or $MATEXP_ARTIFACTS)
   --variant xla|pallas
   --config FILE     JSON config file
@@ -149,18 +163,35 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
     if let Some(mb) = args.get_parsed::<usize>("cache-budget-mb")? {
         cfg.cache.budget_mb = mb;
     }
+    if args.has("trace") {
+        cfg.trace.enabled = true;
+    }
+    if args.has("no-trace") {
+        cfg.trace.enabled = false;
+    }
+    if let Some(cap) = args.get_parsed::<usize>("trace-ring")? {
+        cfg.trace.ring_capacity = cap;
+    }
+    if let Some(ms) = args.get_parsed::<u64>("trace-slow-ms")? {
+        cfg.trace.slow_ms = ms;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    // arm the flight recorder for every command (the service configures
+    // it again at start, idempotently, from the same settings)
+    matexp::trace::configure(&cfg.trace);
     match args.command.as_deref().unwrap_or("") {
         "info" => cmd_info(args, &cfg),
         "plan" => cmd_plan(args),
         "expm" => cmd_expm(args, &cfg),
         "experiment" => cmd_experiment(args, &cfg),
         "serve" => cmd_serve(args, cfg),
+        "trace" => cmd_trace(args, &cfg),
+        "metrics" => cmd_metrics(args, &cfg),
         "loadtest" => cmd_loadtest(args, cfg),
         "bench-report" => cmd_bench_report(args, &cfg),
         other => Err(MatexpError::Config(format!(
@@ -262,6 +293,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         Some(p) => Priority::from_str(p)?,
         None => Priority::Normal,
     };
+    let explain = args.has("explain");
     args.reject_unknown()?;
 
     // the one execution surface: CLI runs the same Submission the
@@ -275,6 +307,7 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
     if let Some(t) = tolerance {
         submission = submission.tolerance(t);
     }
+    let trace_id = submission.trace;
     let resp = engine.run(submission)?;
     println!("backend: {} ({})", cfg.backend, engine.platform());
     println!("method: {} (plan: {:?})", resp.method, resp.plan_kind);
@@ -315,7 +348,46 @@ fn cmd_expm(args: &Args, cfg: &MatexpConfig) -> Result<()> {
         );
     }
     println!("result fro-norm: {:.4e}", resp.result.frobenius());
+    if explain {
+        print_explain(&resp, trace_id);
+    }
     Ok(())
+}
+
+/// `expm --explain`: the request's per-stage breakdown and cache-tier
+/// outcomes, from the stats stage fields and the flight recorder.
+fn print_explain(resp: &matexp::coordinator::request::ExpmResponse, trace_id: matexp::trace::TraceId) {
+    use matexp::trace::SpanKind;
+    println!("\n== explain (trace {}) ==", trace_id.get());
+    println!("{:<10} {:>12}", "stage", "time");
+    for (stage, us) in [
+        ("queue", resp.stats.queue_us),
+        ("plan", resp.stats.plan_us),
+        ("prepare", resp.stats.prepare_us),
+        ("launch", resp.stats.launch_us),
+        ("wire", resp.stats.wire_us),
+    ] {
+        println!(
+            "{stage:<10} {:>12}",
+            matexp::bench::format_secs(us as f64 / 1e6)
+        );
+    }
+    // cache-tier outcomes, in the order they happened
+    let mut outcomes: Vec<String> = matexp::trace::recent_spans()
+        .iter()
+        .filter(|s| s.trace_id == trace_id.get())
+        .filter(|s| {
+            matches!(
+                s.kind,
+                SpanKind::CacheHit(_) | SpanKind::CacheMiss(_) | SpanKind::CacheStore(_)
+            )
+        })
+        .map(|s| s.kind.as_str().to_string())
+        .collect();
+    if outcomes.is_empty() {
+        outcomes.push("none recorded (recorder off or ring overwritten)".into());
+    }
+    println!("cache: {}", outcomes.join(" -> "));
 }
 
 fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
@@ -492,6 +564,48 @@ fn cmd_serve(args: &Args, cfg: MatexpConfig) -> Result<()> {
     matexp::server::server::serve(service, &addr, conn_threads)
 }
 
+/// `matexp trace` — pull a running server's flight recorder and emit it
+/// as a Chrome trace-event document (Perfetto / `chrome://tracing`).
+fn cmd_trace(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    let check = args.has("check");
+    let out = args.get("out").map(str::to_string);
+    args.reject_unknown()?;
+    let mut client = MatexpClient::connect(&cfg.server_addr)?;
+    let doc = client.trace_dump()?;
+    if check {
+        let events = matexp::trace::chrome::validate(&doc)?;
+        println!("valid Chrome trace: {events} events");
+    }
+    let text = doc.to_string_pretty();
+    match out {
+        Some(path) => {
+            std::fs::write(&path, text + "\n")?;
+            println!("trace written to {path} (load it in https://ui.perfetto.dev)");
+        }
+        None if check => {} // --check alone validates without dumping
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+/// `matexp metrics` — fetch a running server's metrics snapshot, as JSON
+/// or Prometheus text exposition.
+fn cmd_metrics(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    let format = args.get_or("format", "json");
+    args.reject_unknown()?;
+    let mut client = MatexpClient::connect(&cfg.server_addr)?;
+    match format.as_str() {
+        "json" => println!("{}", client.metrics()?.to_string_pretty()),
+        "prometheus" => print!("{}", client.metrics_prometheus()?),
+        other => {
+            return Err(MatexpError::Config(format!(
+                "unknown metrics format {other:?} (json|prometheus)"
+            )))
+        }
+    }
+    Ok(())
+}
+
 fn cmd_loadtest(args: &Args, cfg: MatexpConfig) -> Result<()> {
     // validation-only mode: CI gates committed `BENCH_*.json` files on it
     if let Some(path) = args.get("check") {
@@ -520,7 +634,7 @@ fn cmd_loadtest(args: &Args, cfg: MatexpConfig) -> Result<()> {
         one => vec![WireMode::from_str(one)?],
     };
     let codec_n: usize = args.get_parsed_or("codec-n", 1024)?;
-    let bench_id: u64 = args.get_parsed_or("bench-id", 6)?;
+    let bench_id: u64 = args.get_parsed_or("bench-id", 7)?;
     let out = args.get_or("out", &format!("BENCH_{bench_id}.json"));
     let external_addr = args.get("addr").map(str::to_string);
     args.reject_unknown()?;

@@ -24,6 +24,7 @@ use crate::plan::{Plan, Step};
 use crate::pool::cost::{ShardDecision, ShardPlan};
 use crate::pool::pool::DevicePool;
 use crate::runtime::ExecStats;
+use crate::trace;
 
 /// Plan executor over a heterogeneous device pool. Cheap to clone-share:
 /// the pool lives behind an `Arc` and all methods take `&self` (the pool
@@ -170,55 +171,104 @@ impl PoolEngine {
         // thread for everything shipped whole — so pooled requests never
         // double-count misses or pay a redundant digest+store
         match scheduler::pool_dispatch(req.n(), 1, cfg) {
-            PoolDispatch::TileShard => match scheduler::strategy_for(&req, cfg) {
-                Strategy::DeviceResident(plan) => {
-                    let cache = ResultCachePolicy::for_request(cfg, &req);
-                    if let Some(resp) = cache.lookup(req.id) {
-                        return crate::exec::enforce(deadline, tolerance, resp);
+            // the tile-sharded arms execute on THIS thread, so they own
+            // the request's trace scope (root `Execute` span + the plan
+            // stage); whole-request dispatch ships to a device thread,
+            // whose `worker::execute_request` enters the scope there.
+            // Tile launches run on device threads outside the scope, so
+            // they record as untraced (trace 0) launch spans.
+            PoolDispatch::TileShard => {
+                let scope = trace::enter(req.trace);
+                let exec_start = trace::now_us();
+                let plan_t0 = trace::now_us();
+                let strategy = scheduler::strategy_for(&req, cfg);
+                trace::add_stage(trace::Stage::Plan, trace::now_us().saturating_sub(plan_t0));
+                match strategy {
+                    Strategy::DeviceResident(plan) => {
+                        let cache = ResultCachePolicy::for_request(cfg, &req);
+                        if let Some(resp) = cache.lookup(req.id) {
+                            trace::record_span(
+                                trace::SpanKind::Execute,
+                                req.trace,
+                                exec_start,
+                                req.n(),
+                            );
+                            return crate::exec::enforce(deadline, tolerance, resp);
+                        }
+                        let kind = plan.kind;
+                        let (result, mut stats) = self.run_plan(&req.matrix, &plan)?;
+                        let [plan_us, prepare_us, launch_us] = trace::take_stages();
+                        stats.plan_us = plan_us;
+                        stats.prepare_us = prepare_us;
+                        stats.launch_us = launch_us;
+                        let resp = crate::exec::enforce(
+                            deadline,
+                            tolerance,
+                            ExpmResponse {
+                                id: req.id,
+                                result,
+                                stats,
+                                method: req.method,
+                                plan_kind: Some(kind),
+                            },
+                        )?;
+                        cache.store(&resp);
+                        trace::record_span(
+                            trace::SpanKind::Execute,
+                            req.trace,
+                            exec_start,
+                            req.n(),
+                        );
+                        Ok(resp)
                     }
-                    let kind = plan.kind;
-                    let (result, stats) = self.run_plan(&req.matrix, &plan)?;
-                    let resp = crate::exec::enforce(
-                        deadline,
-                        tolerance,
-                        ExpmResponse {
-                            id: req.id,
-                            result,
-                            stats,
-                            method: req.method,
-                            plan_kind: Some(kind),
-                        },
-                    )?;
-                    cache.store(&resp);
-                    Ok(resp)
-                }
-                Strategy::Packed => {
-                    let cache = ResultCachePolicy::for_request(cfg, &req);
-                    if let Some(resp) = cache.lookup(req.id) {
-                        return crate::exec::enforce(deadline, tolerance, resp);
+                    Strategy::Packed => {
+                        let cache = ResultCachePolicy::for_request(cfg, &req);
+                        if let Some(resp) = cache.lookup(req.id) {
+                            trace::record_span(
+                                trace::SpanKind::Execute,
+                                req.trace,
+                                exec_start,
+                                req.n(),
+                            );
+                            return crate::exec::enforce(deadline, tolerance, resp);
+                        }
+                        let (result, mut stats) = self.run_packed(&req.matrix, req.power)?;
+                        let [plan_us, prepare_us, launch_us] = trace::take_stages();
+                        stats.plan_us = plan_us;
+                        stats.prepare_us = prepare_us;
+                        stats.launch_us = launch_us;
+                        let resp = crate::exec::enforce(
+                            deadline,
+                            tolerance,
+                            ExpmResponse {
+                                id: req.id,
+                                result,
+                                stats,
+                                method: req.method,
+                                plan_kind: None,
+                            },
+                        )?;
+                        cache.store(&resp);
+                        trace::record_span(
+                            trace::SpanKind::Execute,
+                            req.trace,
+                            exec_start,
+                            req.n(),
+                        );
+                        Ok(resp)
                     }
-                    let (result, stats) = self.run_packed(&req.matrix, req.power)?;
-                    let resp = crate::exec::enforce(
-                        deadline,
-                        tolerance,
-                        ExpmResponse {
-                            id: req.id,
-                            result,
-                            stats,
-                            method: req.method,
-                            plan_kind: None,
-                        },
-                    )?;
-                    cache.store(&resp);
-                    Ok(resp)
+                    // fused / naive-roundtrip / plan-roundtrip / cpu-seq
+                    // disciplines are single-device by definition: run
+                    // whole (the device-side worker applies the cache
+                    // policy AND owns the trace scope — drop ours first
+                    // so its stage billing is not nested away)
+                    _ => {
+                        drop(scope);
+                        self.run_whole_request(req)
+                            .and_then(|resp| crate::exec::enforce(deadline, tolerance, resp))
+                    }
                 }
-                // fused / naive-roundtrip / plan-roundtrip / cpu-seq
-                // disciplines are single-device by definition: run whole
-                // (the device-side worker applies the cache policy)
-                _ => self
-                    .run_whole_request(req)
-                    .and_then(|resp| crate::exec::enforce(deadline, tolerance, resp)),
-            },
+            }
             PoolDispatch::RequestParallel => self
                 .run_whole_request(req)
                 .and_then(|resp| crate::exec::enforce(deadline, tolerance, resp)),

@@ -46,6 +46,7 @@ use crate::runtime::backend::Backend;
 use crate::runtime::cpu::CpuBackend;
 use crate::runtime::op::KernelOp;
 use crate::runtime::sim::SimBackend;
+use crate::trace;
 
 /// One device's share of an execution (filled by the multi-device
 /// [`crate::pool`] layer; empty for single-backend engines).
@@ -118,6 +119,21 @@ pub struct ExecStats {
     /// empty on single-backend engines. Launch/transfer counts across the
     /// entries sum to the totals above.
     pub per_device: Vec<DeviceStats>,
+    /// Microseconds queued in the serving coordinator before a worker
+    /// picked the request up (0 on direct engine/pool execution).
+    pub queue_us: u64,
+    /// Microseconds spent in strategy/plan selection (the
+    /// [`crate::trace::Stage::Plan`] accumulator).
+    pub plan_us: u64,
+    /// Microseconds spent in cold `Backend::prepare` calls (warm prepared
+    /// cache hits bill nothing here).
+    pub prepare_us: u64,
+    /// Microseconds spent inside kernel launches, summed over the
+    /// request's launch chain.
+    pub launch_us: u64,
+    /// Microseconds the server spent decoding the request and encoding
+    /// the response (0 on local submissions that never touch the wire).
+    pub wire_us: u64,
 }
 
 impl ExecStats {
@@ -133,6 +149,11 @@ impl ExecStats {
         self.buffers_recycled += other.buffers_recycled;
         self.peak_resident_bytes = self.peak_resident_bytes.max(other.peak_resident_bytes);
         self.wall_s += other.wall_s;
+        self.queue_us += other.queue_us;
+        self.plan_us += other.plan_us;
+        self.prepare_us += other.prepare_us;
+        self.launch_us += other.launch_us;
+        self.wire_us += other.wire_us;
         for d in &other.per_device {
             self.merge_device(d);
         }
@@ -222,10 +243,15 @@ impl<B: Backend> Engine<B> {
     /// Failures are NOT recorded, so optional ops stay retryable.
     pub(crate) fn prepare_cached(&mut self, op: KernelOp, n: usize) -> Result<()> {
         if self.prepared.check(op, n) {
+            trace::event(trace::SpanKind::CacheHit(trace::Tier::Prepared), trace::current(), n);
             return Ok(());
         }
+        trace::event(trace::SpanKind::CacheMiss(trace::Tier::Prepared), trace::current(), n);
+        let t0 = trace::now_us();
         self.backend.prepare(op, n)?;
+        trace::add_stage(trace::Stage::Prepare, trace::now_us().saturating_sub(t0));
         self.prepared.record(op, n);
+        trace::event(trace::SpanKind::CacheStore(trace::Tier::Prepared), trace::current(), n);
         Ok(())
     }
 
@@ -264,7 +290,10 @@ impl<B: Backend> Engine<B> {
         inputs: &[B::Buffer],
         stats: &mut ExecStats,
     ) -> Result<B::Buffer> {
+        let t0 = trace::now_us();
         let out = self.backend.launch(op, n, inputs)?;
+        trace::add_stage(trace::Stage::Launch, trace::now_us().saturating_sub(t0));
+        trace::record_launch(trace::current(), op, n, t0);
         stats.launches += 1;
         Ok(out)
     }

@@ -24,7 +24,7 @@ use crate::coordinator::request::Method;
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
 use crate::server::frame::{self, Frame};
-use crate::server::proto::{Payload, WireRequest, WireResponse, WireStats};
+use crate::server::proto::{MetricsFormat, Payload, WireRequest, WireResponse, WireStats};
 use crate::util::json::Json;
 
 /// Blocking TCP client.
@@ -348,9 +348,30 @@ impl MatexpClient {
 
     /// Server metrics snapshot as parsed JSON.
     pub fn metrics(&mut self) -> Result<Json> {
-        match self.roundtrip(&WireRequest::Metrics)? {
+        self.ok_payload(&WireRequest::Metrics { format: MetricsFormat::Json })
+    }
+
+    /// Server metrics in Prometheus text exposition format.
+    pub fn metrics_prometheus(&mut self) -> Result<String> {
+        let v = self.ok_payload(&WireRequest::Metrics { format: MetricsFormat::Prometheus })?;
+        match v.as_str() {
+            Some(text) => Ok(text.to_string()),
+            None => Err(MatexpError::Service("prometheus metrics not a string".into())),
+        }
+    }
+
+    /// The server's recent trace spans as a Chrome trace-event document
+    /// (parsed JSON, ready to pretty-print into a Perfetto-loadable file).
+    pub fn trace_dump(&mut self) -> Result<Json> {
+        self.ok_payload(&WireRequest::Trace)
+    }
+
+    /// Round-trip a payload-bearing control op and unwrap its `metrics`
+    /// field (the ok-reply payload slot shared by `metrics` and `trace`).
+    fn ok_payload(&mut self, req: &WireRequest) -> Result<Json> {
+        match self.roundtrip(req)? {
             WireResponse::Ok { metrics: Some(v), .. } => Ok(v),
-            WireResponse::Ok { .. } => Err(MatexpError::Service("no metrics in response".into())),
+            WireResponse::Ok { .. } => Err(MatexpError::Service("no payload in response".into())),
             WireResponse::Error { message, kind, .. } => {
                 Err(WireResponse::to_typed_error(&kind, message))
             }

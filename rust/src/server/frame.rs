@@ -391,6 +391,11 @@ mod tests {
             buffers_recycled: 2,
             peak_resident_bytes: 1 << 16,
             wall_s: 0.125,
+            queue_us: 40,
+            plan_us: 3,
+            prepare_us: 0,
+            launch_us: 200,
+            wire_us: 9,
             per_device: Vec::new(),
         }
     }

@@ -28,6 +28,27 @@ pub enum Payload {
     Base64,
 }
 
+/// Rendering of a `metrics` reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MetricsFormat {
+    /// Structured JSON snapshot (the default, and the legacy behavior).
+    #[default]
+    Json,
+    /// Prometheus text exposition ([`crate::trace::prometheus::render`]),
+    /// carried on the wire as a JSON string.
+    Prometheus,
+}
+
+impl MetricsFormat {
+    /// Canonical lowercase name (`format` field on the wire).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricsFormat::Json => "json",
+            MetricsFormat::Prometheus => "prometheus",
+        }
+    }
+}
+
 /// One request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
@@ -52,8 +73,15 @@ pub enum WireRequest {
         /// Client-chosen request id (pipelining), if any.
         id: Option<u64>,
     },
-    /// Service metrics snapshot.
-    Metrics,
+    /// Service metrics snapshot, rendered per the requested format
+    /// (absent on the wire = JSON, which legacy peers always get).
+    Metrics {
+        /// Reply rendering: structured JSON or Prometheus text.
+        format: MetricsFormat,
+    },
+    /// Dump the server's recent trace spans as a Chrome trace-event
+    /// document (the flight-recorder egress behind `matexp trace`).
+    Trace,
     /// Liveness check.
     Ping,
     /// Capability negotiation: the client announces the highest binary
@@ -109,6 +137,16 @@ pub struct WireStats {
     pub peak_resident_bytes: u64,
     /// Wall-clock seconds (simulated on timing-model backends).
     pub wall_s: f64,
+    /// Microseconds queued before a worker picked the request up.
+    pub queue_us: u64,
+    /// Microseconds in strategy/plan selection.
+    pub plan_us: u64,
+    /// Microseconds in cold `prepare` calls (warm cache hits bill zero).
+    pub prepare_us: u64,
+    /// Microseconds inside kernel launches, summed over the launch chain.
+    pub launch_us: u64,
+    /// Microseconds spent on the server's wire edge for this request.
+    pub wire_us: u64,
     /// Per-device breakdown (empty off the pool backend).
     pub per_device: Vec<WireDeviceStats>,
 }
@@ -124,6 +162,11 @@ impl From<ExecStats> for WireStats {
             buffers_recycled: s.buffers_recycled,
             peak_resident_bytes: s.peak_resident_bytes,
             wall_s: s.wall_s,
+            queue_us: s.queue_us,
+            plan_us: s.plan_us,
+            prepare_us: s.prepare_us,
+            launch_us: s.launch_us,
+            wire_us: s.wire_us,
             per_device: s
                 .per_device
                 .iter()
@@ -170,6 +213,11 @@ impl WireStats {
             ("buffers_recycled", self.buffers_recycled),
             ("peak_resident_bytes", self.peak_resident_bytes),
             ("wall_s", self.wall_s),
+            ("queue_us", self.queue_us),
+            ("plan_us", self.plan_us),
+            ("prepare_us", self.prepare_us),
+            ("launch_us", self.launch_us),
+            ("wire_us", self.wire_us),
             ("per_device", Json::Arr(per_device)),
         ]
     }
@@ -223,6 +271,12 @@ impl WireStats {
                 .and_then(Json::as_u64)
                 .unwrap_or(0),
             wall_s: want("wall_s")?.as_f64().unwrap_or(0.0),
+            // legacy stats blocks without the stage breakdown decode to 0
+            queue_us: v.get("queue_us").and_then(Json::as_u64).unwrap_or(0),
+            plan_us: v.get("plan_us").and_then(Json::as_u64).unwrap_or(0),
+            prepare_us: v.get("prepare_us").and_then(Json::as_u64).unwrap_or(0),
+            launch_us: v.get("launch_us").and_then(Json::as_u64).unwrap_or(0),
+            wire_us: v.get("wire_us").and_then(Json::as_u64).unwrap_or(0),
             per_device,
         })
     }
@@ -271,7 +325,15 @@ impl WireRequest {
     pub fn encode(&self) -> Result<String> {
         Ok(match self {
             WireRequest::Ping => r#"{"op":"ping"}"#.to_string(),
-            WireRequest::Metrics => r#"{"op":"metrics"}"#.to_string(),
+            // JSON format encodes exactly as the legacy line, so old
+            // servers keep answering plain metrics requests
+            WireRequest::Metrics { format: MetricsFormat::Json } => {
+                r#"{"op":"metrics"}"#.to_string()
+            }
+            WireRequest::Metrics { format } => {
+                format!(r#"{{"op":"metrics","format":"{}"}}"#, format.as_str())
+            }
+            WireRequest::Trace => r#"{"op":"trace"}"#.to_string(),
             WireRequest::Hello { frame_version } => {
                 format!(r#"{{"op":"hello","frame":{frame_version}}}"#)
             }
@@ -309,7 +371,14 @@ impl WireRequest {
             .ok_or_else(|| MatexpError::Service("request missing \"op\"".into()))?;
         match op {
             "ping" => Ok(WireRequest::Ping),
-            "metrics" => Ok(WireRequest::Metrics),
+            "metrics" => Ok(WireRequest::Metrics {
+                // an absent (or unrecognized) format is the legacy JSON
+                format: match v.get("format").and_then(Json::as_str) {
+                    Some("prometheus") => MetricsFormat::Prometheus,
+                    _ => MetricsFormat::Json,
+                },
+            }),
+            "trace" => Ok(WireRequest::Trace),
             "hello" => Ok(WireRequest::Hello {
                 // a hello without a frame field is a JSON-only peer
                 frame_version: v.get("frame").and_then(Json::as_u64).unwrap_or(0) as u32,
@@ -615,8 +684,21 @@ mod tests {
 
     #[test]
     fn ping_metrics_roundtrip() {
-        for r in [WireRequest::Ping, WireRequest::Metrics] {
+        for r in [
+            WireRequest::Ping,
+            WireRequest::Metrics { format: MetricsFormat::Json },
+            WireRequest::Metrics { format: MetricsFormat::Prometheus },
+            WireRequest::Trace,
+        ] {
             assert_eq!(WireRequest::decode(&r.encode().unwrap()).unwrap(), r);
+        }
+        // the JSON-format request is byte-identical to the legacy line
+        let line = WireRequest::Metrics { format: MetricsFormat::Json }.encode().unwrap();
+        assert_eq!(line, r#"{"op":"metrics"}"#);
+        // an unrecognized format degrades to JSON instead of erroring
+        match WireRequest::decode(r#"{"op":"metrics","format":"yaml"}"#).unwrap() {
+            WireRequest::Metrics { format } => assert_eq!(format, MetricsFormat::Json),
+            other => panic!("{other:?}"),
         }
     }
 
@@ -655,6 +737,11 @@ mod tests {
                 buffers_recycled: 7,
                 peak_resident_bytes: 4096,
                 wall_s: 0.5,
+                queue_us: 120,
+                plan_us: 8,
+                prepare_us: 300,
+                launch_us: 450,
+                wire_us: 25,
                 per_device: Vec::new(),
             }),
             metrics: None,
@@ -681,6 +768,11 @@ mod tests {
                 buffers_recycled: 12,
                 peak_resident_bytes: 1 << 20,
                 wall_s: 0.25,
+                queue_us: 0,
+                plan_us: 4,
+                prepare_us: 0,
+                launch_us: 900,
+                wire_us: 10,
                 per_device: vec![
                     WireDeviceStats {
                         device: "sim#0".into(),
@@ -720,6 +812,10 @@ mod tests {
         assert!(stats.per_device.is_empty());
         assert_eq!(stats.bytes_copied, 0);
         assert_eq!(stats.peak_resident_bytes, 0);
+        // ...and without the stage breakdown it decodes to zeros too
+        assert_eq!(stats.queue_us, 0);
+        assert_eq!(stats.launch_us, 0);
+        assert_eq!(stats.wire_us, 0);
     }
 
     #[test]

@@ -30,7 +30,8 @@ use crate::error::{MatexpError, Result};
 use crate::exec::{JobReply, Submission};
 use crate::linalg::matrix::Matrix;
 use crate::server::frame::{self, Frame};
-use crate::server::proto::{Payload, WireRequest, WireResponse};
+use crate::server::proto::{MetricsFormat, Payload, WireRequest, WireResponse};
+use crate::trace;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
@@ -180,9 +181,32 @@ enum ReplyWire {
     Frame,
 }
 
-/// In-flight pipelined jobs on one connection:
-/// service id → (client-chosen id, reply codec).
-type Inflight = Arc<Mutex<HashMap<u64, (u64, ReplyWire)>>>;
+impl ReplyWire {
+    /// The codec tag this reply's wire spans carry.
+    fn codec(self) -> trace::Codec {
+        match self {
+            ReplyWire::Line(_) => trace::Codec::Json,
+            ReplyWire::Frame => trace::Codec::Frame,
+        }
+    }
+}
+
+/// Per-request bookkeeping for one pipelined job on one connection.
+struct InflightEntry {
+    /// Client-chosen request id (echoed on the reply).
+    cid: u64,
+    /// Codec the reply must be written in.
+    wire: ReplyWire,
+    /// The submission's trace id (raw), for the reply's wire spans.
+    trace: u64,
+    /// Request decode cost, carried into the reply's `wire_us` stage.
+    decode_us: u64,
+    /// Matrix side length (span annotation).
+    n: usize,
+}
+
+/// In-flight pipelined jobs on one connection, by service id.
+type Inflight = Arc<Mutex<HashMap<u64, InflightEntry>>>;
 
 fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
     stream.set_nodelay(true)?; // message-oriented RPC: don't let Nagle batch replies
@@ -255,6 +279,7 @@ fn read_one_line(
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
 ) -> Result<()> {
+    let decode_start = trace::now_us();
     match WireRequest::decode(line) {
         Err(e) => {
             let id = salvage_line_id(line);
@@ -265,11 +290,32 @@ fn read_one_line(
             let negotiated = frame_version.min(u32::from(frame::VERSION));
             write_line(writer, &WireResponse::hello_ack(negotiated), metrics)
         }
-        Ok(WireRequest::Metrics) => {
+        Ok(WireRequest::Metrics { format }) => {
+            let payload = match format {
+                MetricsFormat::Json => service.metrics().to_json(),
+                // Prometheus text exposition travels as a JSON string
+                MetricsFormat::Prometheus => {
+                    Json::from(trace::prometheus::render(&service.metrics()))
+                }
+            };
             let resp = WireResponse::Ok {
                 result: None,
                 stats: None,
-                metrics: Some(service.metrics().to_json()),
+                metrics: Some(payload),
+                payload: Payload::Json,
+                id: None,
+                frame: None,
+            };
+            write_line(writer, &resp, metrics)
+        }
+        Ok(WireRequest::Trace) => {
+            // flight-recorder egress: the ring's recent spans as one
+            // Chrome trace-event document
+            let doc = trace::chrome::export(&trace::recent_spans());
+            let resp = WireResponse::Ok {
+                result: None,
+                stats: None,
+                metrics: Some(doc),
                 payload: Payload::Json,
                 id: None,
                 frame: None,
@@ -277,7 +323,7 @@ fn read_one_line(
             write_line(writer, &resp, metrics)
         }
         Ok(req @ WireRequest::Expm { .. }) => {
-            handle_expm(service, req, writer, inflight, done_tx, metrics)
+            handle_expm(service, req, decode_start, writer, inflight, done_tx, metrics)
         }
     }
 }
@@ -306,6 +352,9 @@ fn read_one_frame(
         .wire_bytes_in_total
         .fetch_add((frame::HEADER_LEN + payload.len()) as u64, Ordering::Relaxed);
     metrics.frames_total.fetch_add(1, Ordering::Relaxed);
+    // decode cost starts once the payload is fully off the socket (the
+    // read above is network wait, not codec work)
+    let decode_start = trace::now_us();
     match Frame::decode(kind, &payload) {
         Ok(Frame::Expm { id, n, power, method, matrix }) => {
             match Matrix::from_vec(n, matrix) {
@@ -316,6 +365,7 @@ fn read_one_frame(
                     method,
                     id,
                     ReplyWire::Frame,
+                    decode_start,
                     writer,
                     inflight,
                     done_tx,
@@ -342,6 +392,7 @@ fn read_one_frame(
 fn handle_expm(
     service: &ServiceHandle,
     req: WireRequest,
+    decode_start: u64,
     writer: &Mutex<TcpStream>,
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
@@ -366,6 +417,7 @@ fn handle_expm(
             method,
             cid,
             ReplyWire::Line(payload),
+            decode_start,
             writer,
             inflight,
             done_tx,
@@ -373,17 +425,42 @@ fn handle_expm(
         ),
         // legacy one-shot peer: block and answer in order, as before
         None => {
+            let n = matrix.n();
             let submission = Submission::expm(matrix, power).method(method);
+            // the trace id exists only from here; the decode span is
+            // recorded retroactively against the measured start
+            let t = submission.trace;
+            let decode_end = trace::now_us();
+            trace::record_span_at(
+                trace::SpanKind::WireDecode(trace::Codec::Json),
+                t,
+                decode_start,
+                decode_end,
+                n,
+            );
+            let decode_us = decode_end.saturating_sub(decode_start);
             let resp = match service.submit_job(submission) {
                 Ok(mut job) => match job.wait() {
                     // reply in the encoding the request used; typed errors
                     // (admission vs service) keep their kind on the wire
-                    Ok(r) => WireResponse::from_expm(&r, payload),
+                    Ok(mut r) => {
+                        r.stats.wire_us = decode_us;
+                        WireResponse::from_expm(&r, payload)
+                    }
                     Err(e) => WireResponse::from_error(&e),
                 },
                 Err(e) => WireResponse::from_error(&e),
             };
-            write_line(writer, &resp, metrics)
+            let t0 = trace::now_us();
+            let wrote = write_line(writer, &resp, metrics);
+            trace::record_span_at(
+                trace::SpanKind::WireEncode(trace::Codec::Json),
+                t,
+                t0,
+                trace::now_us(),
+                n,
+            );
+            wrote
         }
     }
 }
@@ -400,14 +477,36 @@ fn submit_pipelined(
     method: Method,
     cid: u64,
     wire: ReplyWire,
+    decode_start: u64,
     writer: &Mutex<TcpStream>,
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
 ) -> Result<()> {
+    let n = matrix.n();
     let submission = Submission::expm(matrix, power).method(method);
+    // the trace id is minted with the submission; the decode span is
+    // recorded retroactively against the measured start
+    let trace_id = submission.trace;
+    let decode_end = trace::now_us();
+    trace::record_span_at(
+        trace::SpanKind::WireDecode(wire.codec()),
+        trace_id,
+        decode_start,
+        decode_end,
+        n,
+    );
     let sid = service.reserve_id();
-    inflight.lock().expect("inflight map poisoned").insert(sid, (cid, wire));
+    inflight.lock().expect("inflight map poisoned").insert(
+        sid,
+        InflightEntry {
+            cid,
+            wire,
+            trace: trace_id.get(),
+            decode_us: decode_end.saturating_sub(decode_start),
+            n,
+        },
+    );
     if let Err(e) = service.submit_with_id(sid, submission, done_tx.clone()) {
         inflight.lock().expect("inflight map poisoned").remove(&sid);
         write_reply_error(writer, &e, cid, wire, metrics)?;
@@ -437,24 +536,30 @@ fn write_reply_error(
 /// clone) or the peer stops reading.
 fn completion_pump(
     done_rx: Receiver<(u64, JobReply)>,
-    inflight: &Mutex<HashMap<u64, (u64, ReplyWire)>>,
+    inflight: &Mutex<HashMap<u64, InflightEntry>>,
     writer: &Mutex<TcpStream>,
     metrics: &Metrics,
 ) {
     while let Ok((sid, reply)) = done_rx.recv() {
-        let Some((client_id, wire)) = inflight.lock().expect("inflight map poisoned").remove(&sid)
-        else {
+        let Some(entry) = inflight.lock().expect("inflight map poisoned").remove(&sid) else {
             continue; // withdrawn (failed submit) — nothing to write
         };
+        let InflightEntry { cid: client_id, wire, trace: trace_raw, decode_us, n } = entry;
+        let encode_start = trace::now_us();
         let wrote = match (wire, reply) {
-            (ReplyWire::Line(payload), Ok(r)) => {
+            (ReplyWire::Line(payload), Ok(mut r)) => {
+                // the stage breakdown's wire edge is the request decode
+                // cost — the encode below happens after the stats are
+                // serialized, so it lands in the trace span instead
+                r.stats.wire_us = decode_us;
                 write_line(writer, &WireResponse::from_expm(&r, payload).with_id(Some(client_id)), metrics)
             }
             // typed error → wire error with its kind (deadline, admission…)
             (ReplyWire::Line(_), Err(e)) => {
                 write_line(writer, &WireResponse::from_error(&e).with_id(Some(client_id)), metrics)
             }
-            (ReplyWire::Frame, Ok(r)) => {
+            (ReplyWire::Frame, Ok(mut r)) => {
+                r.stats.wire_us = decode_us;
                 // the binary reply consumes the response: the result's
                 // buffer is moved onto the wire encoder, not re-cloned
                 let n = r.result.n();
@@ -470,6 +575,13 @@ fn completion_pump(
                 write_frame(writer, &Frame::from_error(&e, Some(client_id)), metrics)
             }
         };
+        trace::record_span_at(
+            trace::SpanKind::WireEncode(wire.codec()),
+            trace::TraceId::from_raw(trace_raw),
+            encode_start,
+            trace::now_us(),
+            n,
+        );
         if wrote.is_err() {
             return; // peer gone; remaining completions have no reader
         }

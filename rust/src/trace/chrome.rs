@@ -1,0 +1,207 @@
+//! Chrome trace-event export: flight-recorder spans → a JSON array
+//! loadable in Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! Every span becomes one **complete event** (`"ph":"X"`) with
+//! microsecond `ts`/`dur` on the shared trace clock; the request's
+//! [`super::TraceId`] is used as the `tid`, so each request renders as
+//! its own timeline row and the per-stage spans (wire decode → queue →
+//! execute → launches → wire encode) line up visually.
+//!
+//! The encoding is **bit-stable**: events are sorted by `(ts, seq, name)`
+//! and the JSON object keys are emitted in sorted order
+//! ([`crate::util::json::Json::Obj`] is a `BTreeMap`), so the same span
+//! set always serializes to byte-identical output — asserted by a test,
+//! and what makes `matexp trace` dumps diffable across runs.
+
+use crate::error::{MatexpError, Result};
+use crate::json_obj;
+use crate::util::json::Json;
+
+use super::Span;
+
+/// Render spans as a Chrome trace-event JSON array (complete events,
+/// deterministically ordered).
+pub fn export(spans: &[Span]) -> Json {
+    let mut sorted: Vec<&Span> = spans.iter().collect();
+    sorted.sort_by(|a, b| {
+        (a.start_us, a.seq, a.name()).cmp(&(b.start_us, b.seq, b.name()))
+    });
+    let events: Vec<Json> = sorted
+        .into_iter()
+        .map(|s| {
+            let mut args = json_obj![("n", s.n), ("seq", s.seq), ("trace_id", s.trace_id)];
+            if let (Json::Obj(map), Some(op)) = (&mut args, s.op) {
+                map.insert("op".to_string(), Json::Str(op.name()));
+            }
+            json_obj![
+                ("name", s.name()),
+                ("cat", s.kind.category()),
+                ("ph", "X"),
+                ("ts", s.start_us),
+                ("dur", s.dur_us),
+                ("pid", 1u64),
+                ("tid", s.trace_id),
+                ("args", args),
+            ]
+        })
+        .collect();
+    Json::Arr(events)
+}
+
+/// Render spans straight to the serialized Chrome trace string.
+pub fn export_string(spans: &[Span]) -> String {
+    export(spans).to_string()
+}
+
+fn want_u64(event: &Json, field: &str, idx: usize) -> Result<u64> {
+    event
+        .get(field)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| bad(idx, &format!("missing or non-integer {field:?}")))
+}
+
+fn bad(idx: usize, msg: &str) -> MatexpError {
+    MatexpError::Service(format!("chrome trace event {idx}: {msg}"))
+}
+
+/// Validate a parsed document against the Chrome trace-event shape this
+/// module emits (what `matexp trace --check` and the CI smoke job run).
+/// Returns the number of events.
+pub fn validate(doc: &Json) -> Result<usize> {
+    let events = doc
+        .as_arr()
+        .ok_or_else(|| MatexpError::Service("chrome trace must be a JSON array".into()))?;
+    for (idx, event) in events.iter().enumerate() {
+        if event.as_obj().is_none() {
+            return Err(bad(idx, "not an object"));
+        }
+        match event.get("name").and_then(Json::as_str) {
+            Some(name) if !name.is_empty() => {}
+            _ => return Err(bad(idx, "missing or empty \"name\"")),
+        }
+        if event.get("ph").and_then(Json::as_str) != Some("X") {
+            return Err(bad(idx, "\"ph\" must be \"X\" (complete event)"));
+        }
+        let ts = want_u64(event, "ts", idx)?;
+        let dur = want_u64(event, "dur", idx)?;
+        if ts.checked_add(dur).is_none() {
+            return Err(bad(idx, "ts + dur overflows"));
+        }
+        want_u64(event, "pid", idx)?;
+        want_u64(event, "tid", idx)?;
+        if let Some(args) = event.get("args") {
+            if args.as_obj().is_none() {
+                return Err(bad(idx, "\"args\" must be an object"));
+            }
+        }
+    }
+    Ok(events.len())
+}
+
+/// Parse and validate a serialized trace dump. Returns the event count.
+pub fn validate_str(text: &str) -> Result<usize> {
+    let doc = Json::parse(text).map_err(MatexpError::Json)?;
+    validate(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::KernelOp;
+    use crate::trace::{Codec, SpanKind, Tier};
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            Span {
+                seq: 3,
+                trace_id: 7,
+                kind: SpanKind::Execute,
+                start_us: 15,
+                dur_us: 100,
+                op: None,
+                n: 64,
+            },
+            Span {
+                seq: 1,
+                trace_id: 7,
+                kind: SpanKind::WireDecode(Codec::Frame),
+                start_us: 0,
+                dur_us: 5,
+                op: None,
+                n: 64,
+            },
+            Span {
+                seq: 4,
+                trace_id: 7,
+                kind: SpanKind::Launch,
+                start_us: 20,
+                dur_us: 50,
+                op: Some(KernelOp::SquareChain(4)),
+                n: 64,
+            },
+            Span {
+                seq: 5,
+                trace_id: 7,
+                kind: SpanKind::CacheMiss(Tier::Result),
+                start_us: 16,
+                dur_us: 0,
+                op: None,
+                n: 64,
+            },
+        ]
+    }
+
+    #[test]
+    fn export_is_bit_stable_and_sorted() {
+        let spans = sample_spans();
+        let a = export_string(&spans);
+        let mut reversed = spans.clone();
+        reversed.reverse();
+        let b = export_string(&reversed);
+        assert_eq!(a, b, "same span set must serialize byte-identically");
+        // sorted by ts: decode (0) first, execute (15) before launch (20)
+        let first_decode = a.find("wire_decode_frame").unwrap();
+        let exec = a.find("\"execute\"").unwrap();
+        let launch = a.find("launch:square4").unwrap();
+        assert!(first_decode < exec && exec < launch, "{a}");
+    }
+
+    #[test]
+    fn export_validates_and_counts() {
+        let spans = sample_spans();
+        let text = export_string(&spans);
+        assert_eq!(validate_str(&text).unwrap(), spans.len());
+    }
+
+    #[test]
+    fn launch_events_carry_op_and_n() {
+        let text = export_string(&sample_spans());
+        let doc = Json::parse(&text).unwrap();
+        let launch = doc
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("launch:square4"))
+            .unwrap();
+        let args = launch.get("args").unwrap();
+        assert_eq!(args.get("op").and_then(Json::as_str), Some("square4"));
+        assert_eq!(args.get("n").and_then(Json::as_u64), Some(64));
+        assert_eq!(launch.get("cat").and_then(Json::as_str), Some("exec"));
+        assert_eq!(launch.get("tid").and_then(Json::as_u64), Some(7));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_str("{}").is_err(), "object, not array");
+        assert!(validate_str("[{}]").is_err(), "event without name");
+        assert!(validate_str("[{\"name\":\"x\",\"ph\":\"B\",\"ts\":0,\"dur\":0,\"pid\":1,\"tid\":1}]").is_err(), "wrong phase");
+        assert!(validate_str("[{\"name\":\"x\",\"ph\":\"X\",\"ts\":-4,\"dur\":0,\"pid\":1,\"tid\":1}]").is_err(), "negative ts");
+        assert!(validate_str("not json").is_err());
+        assert_eq!(validate_str("[]").unwrap(), 0, "empty trace is valid");
+        assert_eq!(
+            validate_str("[{\"name\":\"x\",\"ph\":\"X\",\"ts\":1,\"dur\":2,\"pid\":1,\"tid\":9}]")
+                .unwrap(),
+            1
+        );
+    }
+}

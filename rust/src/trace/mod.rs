@@ -1,0 +1,768 @@
+//! # End-to-end request tracing: the observability substrate
+//!
+//! The serving path — wire decode → admission → batcher queue → plan /
+//! cache consult → prepare → launch chain → wire encode — used to report
+//! only end-to-end latency and global counters, so a perf PR could not
+//! prove *which* stage it moved. This module is the measurement layer the
+//! paper's per-phase host/transfer/kernel breakdown implies:
+//!
+//! * **[`TraceId`]** — minted when a [`crate::exec::Submission`] is built
+//!   and threaded through the request, the coordinator, the engines and
+//!   the wire edge, so every span of one request correlates.
+//! * **Spans in a flight recorder** — every instrumented region records a
+//!   [`Span`] into a process-global, lock-free, fixed-capacity
+//!   [`ring::Ring`] (always on, overwrite-oldest, bounded memory). Three
+//!   egress paths: the `trace` wire op / `matexp trace` CLI dump them as
+//!   Chrome trace-event JSON ([`chrome`]), the per-request stage
+//!   breakdown rides [`crate::runtime::ExecStats`], and
+//!   [`prometheus`] renders the metrics snapshot in text exposition
+//!   format.
+//! * **Stage accumulators** — thread-local counters ([`enter`] /
+//!   [`take_stages`]) let deep layers (engine prepare/launch) bill their
+//!   time to the request without threading a context through every
+//!   signature.
+//! * **Slow-request log** — requests slower than the configured
+//!   threshold ([`crate::config::TraceSettings::slow_ms`],
+//!   `--trace-slow-ms`) are emitted to stderr as single-line JSON by the
+//!   serving coordinator.
+//!
+//! The recorder is configured once at startup ([`configure`]) from
+//! [`crate::config::TraceSettings`]; recording one span is a
+//! `fetch_add` plus five relaxed stores, cheap enough to leave on in
+//! production (a loadtest asserts the overhead bound).
+
+pub mod chrome;
+pub mod prometheus;
+pub mod ring;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::runtime::op::KernelOp;
+
+// ---------------------------------------------------------------- trace id
+
+/// Correlates every span of one request. Minted at
+/// [`crate::exec::Submission`] construction; `NONE` (id 0) marks
+/// activity outside any traced request (warmup, benches).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// The "no trace" id (0) — spans recorded outside a request.
+    pub const NONE: TraceId = TraceId(0);
+
+    /// Mint a fresh, process-unique trace id.
+    pub fn mint() -> TraceId {
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        TraceId(NEXT.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// The raw id.
+    pub fn get(self) -> u64 {
+        self.0
+    }
+
+    /// A trace id from a raw value (wire / tests).
+    pub fn from_raw(id: u64) -> TraceId {
+        TraceId(id)
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+// ---------------------------------------------------------------- span model
+
+/// Which cache tier a cache event belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Tier 1: the plan cache.
+    Plan,
+    /// Tier 2: the per-engine prepared set.
+    Prepared,
+    /// Tier 3: the content-addressed result cache.
+    Result,
+}
+
+impl Tier {
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Plan => "plan",
+            Tier::Prepared => "prepared",
+            Tier::Result => "result",
+        }
+    }
+}
+
+/// Which wire codec a decode/encode span used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// JSON line codec.
+    Json,
+    /// Length-prefixed binary frame codec.
+    Frame,
+}
+
+impl Codec {
+    /// Canonical lowercase name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Codec::Json => "json",
+            Codec::Frame => "frame",
+        }
+    }
+}
+
+/// The span taxonomy — every instrumented region/event on the serving
+/// path. `Execute` is the per-request **root**: plan/prepare/launch spans
+/// and cache events nest inside it; wire and queue spans are its
+/// siblings on the request timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Wire request decode (server edge), tagged with the codec.
+    WireDecode(Codec),
+    /// Wire response encode + write (server edge), tagged with the codec.
+    WireEncode(Codec),
+    /// Time spent queued in the batcher (enqueue → worker dequeue).
+    Queue,
+    /// Strategy/plan selection (scheduler dispatch, plan-cache consult).
+    Plan,
+    /// `Backend::prepare` work (compile/validate), cold entries only.
+    Prepare,
+    /// One kernel launch (carries the [`KernelOp`] and matrix size).
+    Launch,
+    /// Whole request execution on a worker engine (the root span).
+    Execute,
+    /// A cache tier served a warm entry.
+    CacheHit(Tier),
+    /// A cache tier had no entry.
+    CacheMiss(Tier),
+    /// A cache tier stored a fresh entry.
+    CacheStore(Tier),
+}
+
+impl SpanKind {
+    /// Canonical span name (Chrome trace `name`, slow-log keys).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::WireDecode(Codec::Json) => "wire_decode_json",
+            SpanKind::WireDecode(Codec::Frame) => "wire_decode_frame",
+            SpanKind::WireEncode(Codec::Json) => "wire_encode_json",
+            SpanKind::WireEncode(Codec::Frame) => "wire_encode_frame",
+            SpanKind::Queue => "queue",
+            SpanKind::Plan => "plan",
+            SpanKind::Prepare => "prepare",
+            SpanKind::Launch => "launch",
+            SpanKind::Execute => "execute",
+            SpanKind::CacheHit(Tier::Plan) => "cache_hit_plan",
+            SpanKind::CacheHit(Tier::Prepared) => "cache_hit_prepared",
+            SpanKind::CacheHit(Tier::Result) => "cache_hit_result",
+            SpanKind::CacheMiss(Tier::Plan) => "cache_miss_plan",
+            SpanKind::CacheMiss(Tier::Prepared) => "cache_miss_prepared",
+            SpanKind::CacheMiss(Tier::Result) => "cache_miss_result",
+            SpanKind::CacheStore(Tier::Plan) => "cache_store_plan",
+            SpanKind::CacheStore(Tier::Prepared) => "cache_store_prepared",
+            SpanKind::CacheStore(Tier::Result) => "cache_store_result",
+        }
+    }
+
+    /// Chrome trace category (Perfetto track grouping).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::WireDecode(_) | SpanKind::WireEncode(_) => "wire",
+            SpanKind::Queue => "queue",
+            SpanKind::Plan | SpanKind::Prepare => "sched",
+            SpanKind::Launch | SpanKind::Execute => "exec",
+            SpanKind::CacheHit(_) | SpanKind::CacheMiss(_) | SpanKind::CacheStore(_) => "cache",
+        }
+    }
+
+    /// `true` for the kinds that must nest inside an [`SpanKind::Execute`]
+    /// root (see [`validate_spans`]).
+    pub fn is_child(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Plan
+                | SpanKind::Prepare
+                | SpanKind::Launch
+                | SpanKind::CacheHit(_)
+                | SpanKind::CacheMiss(_)
+                | SpanKind::CacheStore(_)
+        )
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            SpanKind::WireDecode(_) => 1,
+            SpanKind::WireEncode(_) => 2,
+            SpanKind::Queue => 3,
+            SpanKind::Plan => 4,
+            SpanKind::Prepare => 5,
+            SpanKind::Launch => 6,
+            SpanKind::Execute => 7,
+            SpanKind::CacheHit(_) => 8,
+            SpanKind::CacheMiss(_) => 9,
+            SpanKind::CacheStore(_) => 10,
+        }
+    }
+
+    fn tag(self) -> u64 {
+        match self {
+            SpanKind::WireDecode(c) | SpanKind::WireEncode(c) => match c {
+                Codec::Json => 0,
+                Codec::Frame => 1,
+            },
+            SpanKind::CacheHit(t) | SpanKind::CacheMiss(t) | SpanKind::CacheStore(t) => match t {
+                Tier::Plan => 0,
+                Tier::Prepared => 1,
+                Tier::Result => 2,
+            },
+            _ => 0,
+        }
+    }
+
+    fn from_codes(code: u64, tag: u64) -> Option<SpanKind> {
+        let codec = match tag {
+            0 => Codec::Json,
+            1 => Codec::Frame,
+            _ => Codec::Json, // validated below for wire kinds
+        };
+        let tier = match tag {
+            0 => Tier::Plan,
+            1 => Tier::Prepared,
+            2 => Tier::Result,
+            _ => return None,
+        };
+        Some(match code {
+            1 if tag <= 1 => SpanKind::WireDecode(codec),
+            2 if tag <= 1 => SpanKind::WireEncode(codec),
+            3 => SpanKind::Queue,
+            4 => SpanKind::Plan,
+            5 => SpanKind::Prepare,
+            6 => SpanKind::Launch,
+            7 => SpanKind::Execute,
+            8 => SpanKind::CacheHit(tier),
+            9 => SpanKind::CacheMiss(tier),
+            10 => SpanKind::CacheStore(tier),
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded region or event on a request's timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// The ring ticket this span was recorded under (global order).
+    pub seq: u64,
+    /// The request's [`TraceId`] (0 = outside any request).
+    pub trace_id: u64,
+    /// What this span measures.
+    pub kind: SpanKind,
+    /// Start, microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// The launched kernel, for [`SpanKind::Launch`] spans.
+    pub op: Option<KernelOp>,
+    /// Matrix side length, when known (0 otherwise).
+    pub n: u64,
+}
+
+impl Span {
+    /// End of the span, microseconds since the trace epoch.
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+
+    /// Span name for rendering: the kind, with the kernel op appended for
+    /// launches (`launch:matmul`).
+    pub fn name(&self) -> String {
+        match self.op {
+            Some(op) => format!("{}:{}", self.kind.as_str(), op.name()),
+            None => self.kind.as_str().to_string(),
+        }
+    }
+
+    /// Pack kind/tag/op into the ring's meta word (+ the size word).
+    /// Layout: bits 56–63 kind, 48–55 tag, 40–47 opcode, 0–31 op param.
+    pub(crate) fn encode_meta(&self) -> (u64, u64) {
+        let (opcode, param) = match self.op {
+            None => (0u64, 0u64),
+            Some(KernelOp::Matmul) => (1, 0),
+            Some(KernelOp::Square) => (2, 0),
+            Some(KernelOp::SquareChain(k)) => (3, k as u64),
+            Some(KernelOp::SqMul) => (4, 0),
+            Some(KernelOp::Pack2) => (5, 0),
+            Some(KernelOp::StepSq) => (6, 0),
+            Some(KernelOp::StepMul) => (7, 0),
+            Some(KernelOp::Unpack0) => (8, 0),
+            Some(KernelOp::Mma(g)) => (9, g as u64),
+            // powers are capped at 2^30 by admission, so u32 suffices
+            Some(KernelOp::Expm(p)) => (10, p.min(u32::MAX as u64)),
+        };
+        let meta = (self.kind.code() << 56)
+            | (self.kind.tag() << 48)
+            | (opcode << 40)
+            | (param & 0xFFFF_FFFF);
+        (meta, self.n)
+    }
+
+    /// Decode a ring slot back into a span. Bounds-checks every field and
+    /// returns `None` for garbled slots (see [`ring`] module docs).
+    pub(crate) fn decode(
+        seq: u64,
+        trace_id: u64,
+        start_us: u64,
+        dur_us: u64,
+        meta: u64,
+        n: u64,
+    ) -> Option<Span> {
+        let kind = SpanKind::from_codes(meta >> 56, (meta >> 48) & 0xFF)?;
+        let param = meta & 0xFFFF_FFFF;
+        let op = match (meta >> 40) & 0xFF {
+            0 => None,
+            1 => Some(KernelOp::Matmul),
+            2 => Some(KernelOp::Square),
+            3 => Some(KernelOp::SquareChain(param as u32)),
+            4 => Some(KernelOp::SqMul),
+            5 => Some(KernelOp::Pack2),
+            6 => Some(KernelOp::StepSq),
+            7 => Some(KernelOp::StepMul),
+            8 => Some(KernelOp::Unpack0),
+            9 => Some(KernelOp::Mma(param as u32)),
+            10 => Some(KernelOp::Expm(param)),
+            _ => return None,
+        };
+        start_us.checked_add(dur_us)?;
+        Some(Span { seq, trace_id, kind, start_us, dur_us, op, n })
+    }
+}
+
+// ---------------------------------------------------------------- clock
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (monotonic). All span
+/// timestamps share this clock, so nesting comparisons are exact.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------- recorder
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+static SLOW_US: AtomicU64 = AtomicU64::new(0);
+static RING: OnceLock<ring::Ring> = OnceLock::new();
+
+/// Default flight-recorder capacity (spans). At 48 bytes/slot this is
+/// ~200 KiB — roughly 400 requests of history at ~10 spans each.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+fn recorder() -> &'static ring::Ring {
+    RING.get_or_init(|| ring::Ring::new(CAPACITY.load(Ordering::Relaxed)))
+}
+
+/// Apply [`crate::config::TraceSettings`] to the process-global recorder.
+/// Call once at startup, before traffic: the ring is allocated lazily on
+/// first use, and a capacity change after that point is ignored (the
+/// enabled flag and slow threshold always apply).
+pub fn configure(settings: &crate::config::TraceSettings) {
+    CAPACITY.store(settings.ring_capacity.max(1), Ordering::Relaxed);
+    ENABLED.store(settings.enabled, Ordering::Relaxed);
+    SLOW_US.store(settings.slow_ms.saturating_mul(1_000), Ordering::Relaxed);
+}
+
+/// Toggle span recording (the flight recorder defaults on).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the flight recorder recording?
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Slow-request threshold in microseconds (0 = slow logging disabled).
+pub fn slow_threshold_us() -> u64 {
+    SLOW_US.load(Ordering::Relaxed)
+}
+
+/// Record one span into the flight recorder (no-op when disabled).
+pub fn record(span: Span) {
+    if enabled() {
+        recorder().push(&span);
+    }
+}
+
+/// Record a region that ends now: `start_us` from an earlier [`now_us`].
+pub fn record_span(kind: SpanKind, trace: TraceId, start_us: u64, n: usize) {
+    record_span_at(kind, trace, start_us, now_us(), n);
+}
+
+/// Record a region with an explicit end (for spans whose trace id is only
+/// known after the region finished, e.g. wire decode).
+pub fn record_span_at(kind: SpanKind, trace: TraceId, start_us: u64, end_us: u64, n: usize) {
+    record(Span {
+        seq: 0,
+        trace_id: trace.get(),
+        kind,
+        start_us,
+        dur_us: end_us.saturating_sub(start_us),
+        op: None,
+        n: n as u64,
+    });
+}
+
+/// Record one kernel launch span.
+pub fn record_launch(trace: TraceId, op: KernelOp, n: usize, start_us: u64) {
+    record(Span {
+        seq: 0,
+        trace_id: trace.get(),
+        kind: SpanKind::Launch,
+        start_us,
+        dur_us: now_us().saturating_sub(start_us),
+        op: Some(op),
+        n: n as u64,
+    });
+}
+
+/// Record an instant event (cache hit/miss/store).
+pub fn event(kind: SpanKind, trace: TraceId, n: usize) {
+    let t = now_us();
+    record(Span { seq: 0, trace_id: trace.get(), kind, start_us: t, dur_us: 0, op: None, n: n as u64 });
+}
+
+/// Snapshot the newest recorded spans, oldest first.
+pub fn recent_spans() -> Vec<Span> {
+    recorder().recent()
+}
+
+/// Total spans ever recorded (monotone).
+pub fn spans_recorded() -> u64 {
+    recorder().recorded()
+}
+
+// ------------------------------------------------------- request context
+
+/// Per-request stages the deep layers bill time into via thread-locals
+/// (the engine has no request in scope at prepare/launch sites).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Strategy/plan selection time.
+    Plan,
+    /// Cold `Backend::prepare` time.
+    Prepare,
+    /// Kernel launch time (sum over the request's launches).
+    Launch,
+}
+
+thread_local! {
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    static STAGES: Cell<[u64; 3]> = const { Cell::new([0; 3]) };
+}
+
+/// RAII scope marking "this thread is executing request `trace`".
+/// Restores the previous context on drop, so nested executions (a worker
+/// driving a sub-request) unwind correctly.
+pub struct TraceScope {
+    prev: u64,
+    prev_stages: [u64; 3],
+}
+
+/// Enter a request's trace context: spans recorded by deeper layers on
+/// this thread correlate to `trace`, and the stage accumulators reset.
+pub fn enter(trace: TraceId) -> TraceScope {
+    let prev = CURRENT.with(|c| c.replace(trace.get()));
+    let prev_stages = STAGES.with(|s| s.replace([0; 3]));
+    TraceScope { prev, prev_stages }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+        STAGES.with(|s| s.set(self.prev_stages));
+    }
+}
+
+/// The trace id of the request this thread is executing ([`TraceId::NONE`]
+/// outside any request).
+pub fn current() -> TraceId {
+    TraceId(CURRENT.with(|c| c.get()))
+}
+
+/// Bill `dur_us` to a stage of the current request.
+pub fn add_stage(stage: Stage, dur_us: u64) {
+    STAGES.with(|s| {
+        let mut v = s.get();
+        v[stage as usize] = v[stage as usize].saturating_add(dur_us);
+        s.set(v);
+    });
+}
+
+/// Read-and-reset the current request's `[plan, prepare, launch]`
+/// accumulators (microseconds). The executing worker drains these into
+/// [`crate::runtime::ExecStats`] after the request completes.
+pub fn take_stages() -> [u64; 3] {
+    STAGES.with(|s| s.replace([0; 3]))
+}
+
+/// Serializes tests that toggle or assert on the process-global recorder
+/// (a test disabling recording must not race tests asserting that their
+/// spans landed).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- checks
+
+/// Structural validation of a span set — the "balanced span tree"
+/// property the proptests and the trace smoke test assert:
+///
+/// * every span's `start + dur` does not overflow (start ≤ end);
+/// * per trace id, at most one [`SpanKind::Execute`] root;
+/// * every child-kind span (plan/prepare/launch/cache) of a trace that
+///   has a root lies within the root's `[start, end]` window.
+///
+/// Spans with trace id 0 (outside any request) are only checked for
+/// well-formed timestamps.
+pub fn validate_spans(spans: &[Span]) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut roots: HashMap<u64, &Span> = HashMap::new();
+    for s in spans {
+        if s.start_us.checked_add(s.dur_us).is_none() {
+            return Err(format!("span {} overflows its interval", s.name()));
+        }
+        if s.trace_id != 0 && s.kind == SpanKind::Execute {
+            if let Some(prev) = roots.insert(s.trace_id, s) {
+                return Err(format!(
+                    "trace {} has two execute roots (seq {} and {})",
+                    s.trace_id, prev.seq, s.seq
+                ));
+            }
+        }
+    }
+    for s in spans {
+        if s.trace_id == 0 || !s.kind.is_child() {
+            continue;
+        }
+        if let Some(root) = roots.get(&s.trace_id) {
+            if s.start_us < root.start_us || s.end_us() > root.end_us() {
+                return Err(format!(
+                    "trace {}: {} [{}, {}] escapes its execute root [{}, {}]",
+                    s.trace_id,
+                    s.name(),
+                    s.start_us,
+                    s.end_us(),
+                    root.start_us,
+                    root.end_us()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, trace: u64, start: u64, dur: u64) -> Span {
+        Span { seq: 0, trace_id: trace, kind, start_us: start, dur_us: dur, op: None, n: 8 }
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert_ne!(a, b);
+        assert_ne!(a, TraceId::NONE);
+        assert!(a.get() > 0 && b.get() > a.get());
+    }
+
+    #[test]
+    fn meta_roundtrips_every_kind_and_op() {
+        let kinds = [
+            SpanKind::WireDecode(Codec::Json),
+            SpanKind::WireDecode(Codec::Frame),
+            SpanKind::WireEncode(Codec::Json),
+            SpanKind::WireEncode(Codec::Frame),
+            SpanKind::Queue,
+            SpanKind::Plan,
+            SpanKind::Prepare,
+            SpanKind::Launch,
+            SpanKind::Execute,
+            SpanKind::CacheHit(Tier::Plan),
+            SpanKind::CacheMiss(Tier::Prepared),
+            SpanKind::CacheStore(Tier::Result),
+        ];
+        let ops = [
+            None,
+            Some(KernelOp::Matmul),
+            Some(KernelOp::Square),
+            Some(KernelOp::SquareChain(4)),
+            Some(KernelOp::SqMul),
+            Some(KernelOp::Pack2),
+            Some(KernelOp::StepSq),
+            Some(KernelOp::StepMul),
+            Some(KernelOp::Unpack0),
+            Some(KernelOp::Mma(7)),
+            Some(KernelOp::Expm(1024)),
+        ];
+        for kind in kinds {
+            for op in ops {
+                let s = Span {
+                    seq: 9,
+                    trace_id: 42,
+                    kind,
+                    start_us: 100,
+                    dur_us: 7,
+                    op,
+                    n: 512,
+                };
+                let (meta, n) = s.encode_meta();
+                let back = Span::decode(9, 42, 100, 7, meta, n).unwrap();
+                assert_eq!(back, s, "{kind:?} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbled_meta() {
+        assert!(Span::decode(0, 1, 0, 0, 0, 0).is_none(), "kind 0 is invalid");
+        assert!(Span::decode(0, 1, 0, 0, 99 << 56, 0).is_none(), "unknown kind");
+        assert!(Span::decode(0, 1, 0, 0, (6 << 56) | (99 << 40), 0).is_none(), "unknown op");
+        assert!(Span::decode(0, 1, 0, 0, (8 << 56) | (7 << 48), 0).is_none(), "bad tier tag");
+        assert!(Span::decode(0, 1, u64::MAX, 2, 6 << 56, 0).is_none(), "interval overflow");
+    }
+
+    #[test]
+    fn scope_sets_and_restores_context() {
+        assert_eq!(current(), TraceId::NONE);
+        let outer = TraceId::mint();
+        let scope = enter(outer);
+        assert_eq!(current(), outer);
+        add_stage(Stage::Launch, 5);
+        {
+            let inner = TraceId::mint();
+            let _nested = enter(inner);
+            assert_eq!(current(), inner);
+            add_stage(Stage::Launch, 99); // billed to the nested scope
+        }
+        assert_eq!(current(), outer);
+        add_stage(Stage::Plan, 2);
+        assert_eq!(take_stages(), [2, 0, 5], "nested billing must not leak out");
+        drop(scope);
+        assert_eq!(current(), TraceId::NONE);
+    }
+
+    #[test]
+    fn recording_lands_in_the_global_ring() {
+        let _guard = test_guard();
+        let before = spans_recorded();
+        let t = TraceId::mint();
+        let start = now_us();
+        record_span(SpanKind::Execute, t, start, 8);
+        event(SpanKind::CacheHit(Tier::Plan), t, 8);
+        // other tests may record concurrently, so count is a lower bound
+        // and the assertions filter on this test's fresh trace id
+        assert!(spans_recorded() >= before + 2);
+        let mine: Vec<Span> =
+            recent_spans().into_iter().filter(|s| s.trace_id == t.get()).collect();
+        assert_eq!(mine.len(), 2);
+        assert_eq!(mine[0].kind, SpanKind::Execute);
+        assert_eq!(mine[1].kind, SpanKind::CacheHit(Tier::Plan));
+    }
+
+    #[test]
+    fn disabled_recorder_drops_spans() {
+        let _guard = test_guard();
+        let t = TraceId::mint();
+        set_enabled(false);
+        record_span(SpanKind::Queue, t, now_us(), 4);
+        set_enabled(true);
+        assert!(
+            recent_spans().iter().all(|s| s.trace_id != t.get()),
+            "span recorded while the recorder was disabled"
+        );
+    }
+
+    #[test]
+    fn validate_accepts_balanced_trees() {
+        let spans = vec![
+            span(SpanKind::WireDecode(Codec::Frame), 1, 0, 5),
+            span(SpanKind::Queue, 1, 5, 10),
+            span(SpanKind::Execute, 1, 15, 100),
+            span(SpanKind::Plan, 1, 16, 2),
+            span(SpanKind::Launch, 1, 20, 50),
+            span(SpanKind::CacheMiss(Tier::Result), 1, 15, 0),
+            span(SpanKind::WireEncode(Codec::Frame), 1, 115, 3),
+            span(SpanKind::Execute, 2, 0, 10),
+            span(SpanKind::Launch, 0, 999, 1), // untraced: timestamps only
+        ];
+        validate_spans(&spans).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_double_roots_and_escaping_children() {
+        let double = vec![span(SpanKind::Execute, 1, 0, 10), span(SpanKind::Execute, 1, 20, 10)];
+        assert!(validate_spans(&double).unwrap_err().contains("two execute roots"));
+        let escape = vec![span(SpanKind::Execute, 1, 10, 10), span(SpanKind::Launch, 1, 5, 30)];
+        assert!(validate_spans(&escape).unwrap_err().contains("escapes"));
+    }
+
+    #[test]
+    fn span_names_carry_the_kernel_op() {
+        let mut s = span(SpanKind::Launch, 1, 0, 1);
+        s.op = Some(KernelOp::SquareChain(4));
+        assert_eq!(s.name(), "launch:square4");
+        assert_eq!(span(SpanKind::Queue, 1, 0, 1).name(), "queue");
+    }
+
+    #[test]
+    fn prop_random_span_sets_never_panic_validation() {
+        use crate::util::prop::property;
+        property("validate_spans is total", 128, |g| {
+            let len = g.usize(0, 24);
+            let spans: Vec<Span> = (0..len)
+                .map(|_| {
+                    let kind = match g.usize(0, 9) {
+                        0 => SpanKind::WireDecode(Codec::Json),
+                        1 => SpanKind::WireEncode(Codec::Frame),
+                        2 => SpanKind::Queue,
+                        3 => SpanKind::Plan,
+                        4 => SpanKind::Prepare,
+                        5 => SpanKind::Launch,
+                        6 => SpanKind::Execute,
+                        7 => SpanKind::CacheHit(Tier::Plan),
+                        8 => SpanKind::CacheMiss(Tier::Result),
+                        _ => SpanKind::CacheStore(Tier::Prepared),
+                    };
+                    Span {
+                        seq: g.u64(0, 1000),
+                        trace_id: g.u64(0, 4),
+                        kind,
+                        start_us: g.u64(0, 1000),
+                        dur_us: g.u64(0, 1000),
+                        op: None,
+                        n: g.u64(0, 64),
+                    }
+                })
+                .collect();
+            // total function: returns Ok or Err, never panics
+            let _ = validate_spans(&spans);
+        });
+    }
+}

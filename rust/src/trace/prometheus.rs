@@ -1,0 +1,285 @@
+//! Prometheus text-exposition rendering of the service
+//! [`MetricsSnapshot`] — the third trace egress path (`metrics --format
+//! prometheus` on the wire and CLI), scrape-ready for a stock Prometheus
+//! server with zero dependencies.
+//!
+//! Every counter keeps the `_total` suffix, the batcher queue depth and
+//! cache occupancy are gauges, per-device pool utilization becomes
+//! labeled series (`matexp_device_jobs{device="sim#0"}`), and the
+//! latency histogram is rendered as a proper cumulative
+//! `_bucket`/`_sum`/`_count` family with `le="+Inf"` — not the raw
+//! per-bucket counts the JSON endpoint reports. [`lint`] enforces the
+//! naming rules (unique series, `_total` on counters, declared types)
+//! and runs in this module's tests so a renderer change cannot silently
+//! ship malformed exposition.
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+
+use crate::coordinator::metrics::MetricsSnapshot;
+
+/// Metric name prefix for everything this module emits.
+pub const PREFIX: &str = "matexp_";
+
+fn counter(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {PREFIX}{name} {help}");
+    let _ = writeln!(out, "# TYPE {PREFIX}{name} counter");
+    let _ = writeln!(out, "{PREFIX}{name} {value}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {PREFIX}{name} {help}");
+    let _ = writeln!(out, "# TYPE {PREFIX}{name} gauge");
+    let _ = writeln!(out, "{PREFIX}{name} {value}");
+}
+
+/// Render a metrics snapshot in Prometheus text exposition format
+/// (version 0.0.4 — what `/metrics` scrape endpoints serve).
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    counter(&mut out, "requests_total", "Requests submitted (accepted or not).", snap.requests_total);
+    counter(&mut out, "responses_total", "Requests answered successfully.", snap.responses_total);
+    counter(&mut out, "rejected_total", "Requests rejected by admission control.", snap.rejected_total);
+    counter(&mut out, "errors_total", "Requests that failed in execution.", snap.errors_total);
+    counter(&mut out, "batches_total", "Batches shipped to workers.", snap.batches_total);
+    counter(
+        &mut out,
+        "batched_requests_total",
+        "Requests across all shipped batches.",
+        snap.batched_requests_total,
+    );
+    counter(&mut out, "launches_total", "Kernel launches across all served responses.", snap.launches_total);
+    counter(&mut out, "multiplies_total", "Matrix multiplies across all served responses.", snap.multiplies_total);
+    counter(&mut out, "bytes_copied_total", "Host-edge bytes copied across all served responses.", snap.bytes_copied_total);
+    counter(
+        &mut out,
+        "buffers_recycled_total",
+        "Launch outputs served from recycled arena buffers.",
+        snap.buffers_recycled_total,
+    );
+    counter(&mut out, "wire_bytes_in_total", "Wire bytes read off client connections.", snap.wire_bytes_in_total);
+    counter(&mut out, "wire_bytes_out_total", "Wire bytes written to client connections.", snap.wire_bytes_out_total);
+    counter(&mut out, "frames_total", "Binary frames handled by the TCP front-end.", snap.frames_total);
+    counter(&mut out, "steals_total", "Cross-queue steals in the device pool.", snap.steals_total);
+
+    counter(&mut out, "cache_plan_hits_total", "Plan-cache hits.", snap.cache.plan_hits);
+    counter(&mut out, "cache_plan_misses_total", "Plan-cache misses.", snap.cache.plan_misses);
+    counter(&mut out, "cache_prepared_hits_total", "Prepared-executable cache hits.", snap.cache.prepared_hits);
+    counter(&mut out, "cache_prepared_misses_total", "Prepared-executable cache misses.", snap.cache.prepared_misses);
+    counter(&mut out, "cache_result_hits_total", "Result-cache hits.", snap.cache.result_hits);
+    counter(&mut out, "cache_result_misses_total", "Result-cache misses.", snap.cache.result_misses);
+    counter(&mut out, "cache_result_inserts_total", "Result-cache inserts.", snap.cache.result_inserts);
+    counter(&mut out, "cache_result_evictions_total", "Result-cache LRU evictions.", snap.cache.result_evictions);
+
+    gauge(&mut out, "queue_depth", "Requests waiting in the batcher right now.", snap.queue_depth);
+    gauge(&mut out, "cache_result_entries", "Entries resident in the result cache.", snap.cache.result_entries);
+    gauge(&mut out, "cache_result_bytes", "Bytes resident in the result cache.", snap.cache.result_bytes);
+
+    if !snap.devices.is_empty() {
+        let _ = writeln!(out, "# HELP {PREFIX}device_jobs Requests executed per pool device.");
+        let _ = writeln!(out, "# TYPE {PREFIX}device_jobs gauge");
+        for d in &snap.devices {
+            let _ = writeln!(out, "{PREFIX}device_jobs{{device=\"{}\"}} {}", d.name, d.jobs);
+        }
+        let _ = writeln!(out, "# HELP {PREFIX}device_busy_seconds Busy time per pool device.");
+        let _ = writeln!(out, "# TYPE {PREFIX}device_busy_seconds gauge");
+        for d in &snap.devices {
+            let _ = writeln!(out, "{PREFIX}device_busy_seconds{{device=\"{}\"}} {}", d.name, d.busy_s);
+        }
+        let _ = writeln!(out, "# HELP {PREFIX}device_queue_depth Queued requests per pool device.");
+        let _ = writeln!(out, "# TYPE {PREFIX}device_queue_depth gauge");
+        for d in &snap.devices {
+            let _ =
+                writeln!(out, "{PREFIX}device_queue_depth{{device=\"{}\"}} {}", d.name, d.queue_depth);
+        }
+    }
+
+    // latency histogram: snapshot buckets are per-bucket counts with
+    // upper bounds; Prometheus wants cumulative counts and le="+Inf"
+    let _ = writeln!(out, "# HELP {PREFIX}request_latency_us Served request latency, microseconds.");
+    let _ = writeln!(out, "# TYPE {PREFIX}request_latency_us histogram");
+    let mut cumulative = 0u64;
+    for &(bound, count) in &snap.latency_buckets {
+        cumulative += count;
+        if bound == u64::MAX {
+            let _ = writeln!(out, "{PREFIX}request_latency_us_bucket{{le=\"+Inf\"}} {cumulative}");
+        } else {
+            let _ =
+                writeln!(out, "{PREFIX}request_latency_us_bucket{{le=\"{bound}\"}} {cumulative}");
+        }
+    }
+    // the sum is reconstructed from the tracked mean (exact: the service
+    // maintains sum and count; mean = sum/count)
+    let sum = snap.latency_mean_us * cumulative as f64;
+    let _ = writeln!(out, "{PREFIX}request_latency_us_sum {sum}");
+    let _ = writeln!(out, "{PREFIX}request_latency_us_count {cumulative}");
+    out
+}
+
+fn base_name(series: &str) -> &str {
+    series.split('{').next().unwrap_or(series)
+}
+
+fn histogram_base(name: &str) -> Option<&str> {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            return Some(base);
+        }
+    }
+    None
+}
+
+/// Lint text exposition output: every series name is well-formed and
+/// declared with a `# TYPE`, counters carry the `_total` suffix, no
+/// series (name + labels) appears twice, and every histogram family has
+/// `_bucket` with `le="+Inf"`, `_sum` and `_count`.
+pub fn lint(text: &str) -> Result<(), String> {
+    let mut types: std::collections::HashMap<String, String> = std::collections::HashMap::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut histogram_parts: std::collections::HashMap<String, HashSet<&'static str>> =
+        std::collections::HashMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let (name, kind) = match (parts.next(), parts.next()) {
+                (Some(n), Some(k)) => (n, k),
+                _ => return Err(format!("malformed TYPE line: {line:?}")),
+            };
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("unknown metric type {kind:?} for {name}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("duplicate TYPE declaration for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let series = match line.split_whitespace().next() {
+            Some(s) => s,
+            None => continue,
+        };
+        let name = base_name(series);
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+        {
+            return Err(format!("invalid metric name {name:?}"));
+        }
+        if !seen.insert(series.to_string()) {
+            return Err(format!("duplicate series {series:?}"));
+        }
+        let declared = match histogram_base(name) {
+            Some(base) if types.get(base).map(String::as_str) == Some("histogram") => {
+                let parts = histogram_parts.entry(base.to_string()).or_default();
+                if name.ends_with("_sum") {
+                    parts.insert("sum");
+                } else if name.ends_with("_count") {
+                    parts.insert("count");
+                } else if series.contains("le=\"+Inf\"") {
+                    parts.insert("inf");
+                }
+                continue;
+            }
+            _ => types.get(name),
+        };
+        match declared.map(String::as_str) {
+            None => return Err(format!("series {name} has no TYPE declaration")),
+            Some("counter") if !name.ends_with("_total") => {
+                return Err(format!("counter {name} must end with _total"));
+            }
+            _ => {}
+        }
+    }
+    for (base, parts) in &histogram_parts {
+        for (part, label) in
+            [("inf", "a le=\"+Inf\" bucket"), ("sum", "a _sum series"), ("count", "a _count series")]
+        {
+            if !parts.contains(part) {
+                return Err(format!("histogram {base} is missing {label}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use std::sync::atomic::Ordering;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let m = Metrics::new();
+        m.requests_total.fetch_add(12, Ordering::Relaxed);
+        m.responses_total.fetch_add(10, Ordering::Relaxed);
+        m.queue_depth.store(3, Ordering::Relaxed);
+        for us in [90, 90, 2_000, 40_000] {
+            m.observe_latency_us(us);
+        }
+        let mut s = m.snapshot();
+        s.steals_total = 4;
+        s.devices.push(crate::pool::DeviceUtil {
+            name: "sim#0".into(),
+            kind: crate::pool::PoolDeviceKind::Sim,
+            jobs: 5,
+            steals: 2,
+            launches: 9,
+            busy_s: 0.5,
+            bytes_copied: 4096,
+            buffers_recycled: 3,
+            queue_depth: 1,
+        });
+        s
+    }
+
+    #[test]
+    fn render_passes_the_lint() {
+        lint(&render(&sample_snapshot())).unwrap();
+        lint(&render(&Metrics::new().snapshot())).unwrap();
+    }
+
+    #[test]
+    fn histogram_is_cumulative_with_inf() {
+        let text = render(&sample_snapshot());
+        assert!(text.contains("matexp_request_latency_us_bucket{le=\"100\"} 2"), "{text}");
+        assert!(text.contains("matexp_request_latency_us_bucket{le=\"2500\"} 3"), "{text}");
+        assert!(text.contains("matexp_request_latency_us_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("matexp_request_latency_us_count 4"), "{text}");
+        // sum = 90+90+2000+40000
+        assert!(text.contains("matexp_request_latency_us_sum 42180"), "{text}");
+    }
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let text = render(&sample_snapshot());
+        assert!(text.contains("# TYPE matexp_requests_total counter"), "{text}");
+        assert!(text.contains("matexp_requests_total 12"), "{text}");
+        assert!(text.contains("# TYPE matexp_queue_depth gauge"), "{text}");
+        assert!(text.contains("matexp_queue_depth 3"), "{text}");
+        assert!(text.contains("matexp_device_jobs{device=\"sim#0\"} 5"), "{text}");
+        assert!(text.contains("matexp_cache_plan_hits_total"), "{text}");
+    }
+
+    #[test]
+    fn lint_catches_naming_violations() {
+        let dup = "# TYPE m_x_total counter\nm_x_total 1\nm_x_total 2\n";
+        assert!(lint(dup).unwrap_err().contains("duplicate series"));
+        let unsuffixed = "# TYPE m_req counter\nm_req 1\n";
+        assert!(lint(unsuffixed).unwrap_err().contains("_total"));
+        let undeclared = "m_mystery 1\n";
+        assert!(lint(undeclared).unwrap_err().contains("no TYPE"));
+        let bad_name = "# TYPE 9lives counter\n9lives 1\n";
+        assert!(lint(bad_name).is_err());
+        let incomplete = "# TYPE m_h histogram\nm_h_bucket{le=\"1\"} 1\nm_h_sum 1\nm_h_count 1\n";
+        assert!(lint(incomplete).unwrap_err().contains("+Inf"));
+        let labeled_ok = "# TYPE m_g gauge\nm_g{a=\"1\"} 1\nm_g{a=\"2\"} 2\n";
+        lint(labeled_ok).unwrap();
+    }
+}

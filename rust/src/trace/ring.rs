@@ -1,0 +1,209 @@
+//! The flight-recorder ring: a lock-free, fixed-capacity, overwrite-oldest
+//! span store.
+//!
+//! Writers claim a monotonically increasing **ticket** with one
+//! `fetch_add` and write into slot `ticket % capacity`; the newest
+//! `capacity` spans are always retained and older ones are silently
+//! overwritten, so memory stays bounded no matter how long the process
+//! serves. Each slot is a seqlock: a sequence word derived from the
+//! ticket (odd while a write is in flight, even when committed) brackets
+//! the payload words, so readers detect and skip torn slots instead of
+//! blocking writers. Payload words are relaxed atomics — a reader can
+//! never observe a half-written *word*, and a half-written *slot* fails
+//! sequence validation.
+//!
+//! The one race this design accepts: if a writer stalls mid-write for
+//! long enough that the ring wraps fully and a later writer finishes the
+//! same slot, a reader may decode a span mixing words from both writes.
+//! [`super::Span::decode`] bounds-checks every field, so the worst case
+//! is one garbled-but-well-formed span in a dump — an acceptable trade
+//! for a recorder that never takes a lock on the serving path.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use super::Span;
+
+/// Atomic words per slot: sequence, trace id, start, duration, meta, n.
+pub(crate) const SLOT_WORDS: usize = 6;
+
+const SEQ: usize = 0;
+const TRACE: usize = 1;
+const START: usize = 2;
+const DUR: usize = 3;
+const META: usize = 4;
+const DIM: usize = 5;
+
+/// Fixed-capacity lock-free span ring (see module docs).
+pub struct Ring {
+    slots: Box<[AtomicU64]>,
+    capacity: usize,
+    /// Next ticket to claim. Tickets are global: `head / capacity` is the
+    /// wrap count, `head % capacity` the slot.
+    head: AtomicU64,
+}
+
+impl Ring {
+    /// A ring retaining the newest `capacity` spans (rounded up to a
+    /// power of two, minimum 16).
+    pub fn new(capacity: usize) -> Ring {
+        let capacity = capacity.max(16).next_power_of_two();
+        let slots = (0..capacity * SLOT_WORDS).map(|_| AtomicU64::new(0)).collect();
+        Ring { slots, capacity, head: AtomicU64::new(0) }
+    }
+
+    /// How many spans this ring retains.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total spans ever recorded (monotone; exceeds `capacity` once the
+    /// ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    fn word(&self, slot: usize, field: usize) -> &AtomicU64 {
+        &self.slots[slot * SLOT_WORDS + field]
+    }
+
+    /// Record one span. Lock-free: one `fetch_add` plus five relaxed
+    /// stores bracketed by the slot's sequence word.
+    pub fn push(&self, span: &Span) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = (ticket % self.capacity as u64) as usize;
+        // odd = write in flight
+        self.word(slot, SEQ).store(2 * ticket + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        let (meta, n) = span.encode_meta();
+        self.word(slot, TRACE).store(span.trace_id, Ordering::Relaxed);
+        self.word(slot, START).store(span.start_us, Ordering::Relaxed);
+        self.word(slot, DUR).store(span.dur_us, Ordering::Relaxed);
+        self.word(slot, META).store(meta, Ordering::Relaxed);
+        self.word(slot, DIM).store(n, Ordering::Relaxed);
+        // commit: even, and only if no later writer claimed the slot while
+        // we were writing (a full wrap mid-write) — losing the race means
+        // our span is already overwritten, so dropping the commit is right
+        let _ = self.word(slot, SEQ).compare_exchange(
+            2 * ticket + 1,
+            2 * ticket + 2,
+            Ordering::Release,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Snapshot the newest committed spans, oldest first. Torn or
+    /// in-flight slots are skipped, so the result may hold fewer than
+    /// `capacity` entries even on a wrapped ring.
+    pub fn recent(&self) -> Vec<Span> {
+        let head = self.head.load(Ordering::Acquire);
+        let first = head.saturating_sub(self.capacity as u64);
+        let mut out = Vec::with_capacity((head - first) as usize);
+        for ticket in first..head {
+            let slot = (ticket % self.capacity as u64) as usize;
+            let seq1 = self.word(slot, SEQ).load(Ordering::Acquire);
+            if seq1 != 2 * ticket + 2 {
+                continue; // in flight, torn, or already overwritten
+            }
+            let trace_id = self.word(slot, TRACE).load(Ordering::Relaxed);
+            let start_us = self.word(slot, START).load(Ordering::Relaxed);
+            let dur_us = self.word(slot, DUR).load(Ordering::Relaxed);
+            let meta = self.word(slot, META).load(Ordering::Relaxed);
+            let n = self.word(slot, DIM).load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            let seq2 = self.word(slot, SEQ).load(Ordering::Relaxed);
+            if seq1 != seq2 {
+                continue; // overwritten while reading
+            }
+            if let Some(span) = Span::decode(ticket, trace_id, start_us, dur_us, meta, n) {
+                out.push(span);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SpanKind;
+
+    fn span(trace_id: u64, start: u64) -> Span {
+        Span {
+            seq: 0,
+            trace_id,
+            kind: SpanKind::Launch,
+            start_us: start,
+            dur_us: 3,
+            op: Some(crate::runtime::KernelOp::Matmul),
+            n: 64,
+        }
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(Ring::new(0).capacity(), 16);
+        assert_eq!(Ring::new(100).capacity(), 128);
+        assert_eq!(Ring::new(4096).capacity(), 4096);
+    }
+
+    #[test]
+    fn push_then_recent_roundtrips() {
+        let ring = Ring::new(16);
+        for i in 0..5 {
+            ring.push(&span(i, 10 * i));
+        }
+        let got = ring.recent();
+        assert_eq!(got.len(), 5);
+        for (i, s) in got.iter().enumerate() {
+            assert_eq!(s.trace_id, i as u64);
+            assert_eq!(s.start_us, 10 * i as u64);
+            assert_eq!(s.op, Some(crate::runtime::KernelOp::Matmul));
+            assert_eq!(s.n, 64);
+        }
+    }
+
+    #[test]
+    fn overwrites_oldest_when_full() {
+        let ring = Ring::new(16); // rounds to 16
+        for i in 0..40u64 {
+            ring.push(&span(i, i));
+        }
+        let got = ring.recent();
+        assert_eq!(got.len(), 16, "exactly the newest capacity spans survive");
+        assert_eq!(got.first().unwrap().trace_id, 24);
+        assert_eq!(got.last().unwrap().trace_id, 39);
+        assert_eq!(ring.recorded(), 40);
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_the_ring() {
+        use std::sync::Arc;
+        let ring = Arc::new(Ring::new(64));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        ring.push(&span(w * 1000 + i, i));
+                        if i % 7 == 0 {
+                            // readers race the writers; they must never
+                            // panic or return undecodable spans
+                            let _ = ring.recent();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(ring.recorded(), 2000);
+        // quiescent read: every slot is committed and decodable
+        let got = ring.recent();
+        assert_eq!(got.len(), 64);
+        for s in &got {
+            assert!(s.trace_id % 1000 < 500, "garbled span {s:?}");
+            assert_eq!(s.n, 64);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: the trace subsystem end to end — a TCP request leaves a
+//! span trail in the flight recorder that covers the request's life
+//! (wire decode, queue, planning, execution, wire encode), exports as a
+//! valid Chrome trace-event document over the `trace` wire op, and the
+//! per-request stage breakdown on the stats block stays inside the
+//! client-observed end-to-end latency. A second test bounds the
+//! recorder's overhead.
+//!
+//! The recorder is process-global (one ring, one enable flag), so every
+//! test here serializes on [`LOCK`] — the overhead test flips the global
+//! enable flag and would otherwise race the span-collection test.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::matrix::Matrix;
+use matexp::server::client::MatexpClient;
+use matexp::server::server::{serve_background, Server};
+use matexp::util::json::Json;
+
+/// Serializes tests against the process-global recorder state.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, String) {
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    // Service::start reconfigures the global recorder from cfg.trace
+    // (enabled, default ring), undoing whatever a prior test left behind
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 4).expect("binds");
+    let addr = server.local_addr().to_string();
+    (service, server, addr)
+}
+
+/// Acceptance: one TCP request produces spans covering at least five
+/// distinct stages, the `trace` wire op exports them as a valid Chrome
+/// trace document, and the stats stage breakdown sums to no more than
+/// the end-to-end latency the client actually observed.
+#[test]
+fn tcp_request_leaves_a_multi_stage_trace() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_service, _server, addr) = start_server();
+    let mut client = MatexpClient::connect(&addr).expect("connect");
+
+    // n=20 is unique to this test, so the request's events are
+    // recognizable in the shared ring without access to its trace id
+    let a = Matrix::random_spectral(20, 0.9, 41);
+    let t0 = Instant::now();
+    let (_result, stats) = client.expm(&a, 100, Method::Ours).expect("expm");
+    let elapsed_us = t0.elapsed().as_micros() as u64;
+
+    // stage breakdown: every stage fits inside the observed latency,
+    // and so does their sum (stages are disjoint slices of the request)
+    let stage_sum =
+        stats.queue_us + stats.plan_us + stats.prepare_us + stats.launch_us + stats.wire_us;
+    assert!(
+        stage_sum <= elapsed_us,
+        "stage sum {stage_sum}us exceeds end-to-end latency {elapsed_us}us: {stats:?}"
+    );
+    assert!(stage_sum > 0, "no stage measured a nonzero duration: {stats:?}");
+
+    // pull the flight recorder over the wire and validate the document
+    let doc = client.trace_dump().expect("trace op");
+    let events = matexp::trace::chrome::validate(&doc).expect("valid Chrome trace");
+    assert!(events > 0, "empty trace document");
+
+    // find our request's root span by its unique n, then collect every
+    // event that shares its tid (the trace id)
+    let arr = doc.as_arr().expect("trace doc is an event array");
+    let our_n = |e: &Json| e.get("args").and_then(|a| a.get("n")).and_then(Json::as_u64);
+    let root = arr
+        .iter()
+        .find(|e| {
+            e.get("name").and_then(Json::as_str) == Some("execute") && our_n(e) == Some(20)
+        })
+        .expect("execute root span for the n=20 request");
+    let tid = root.get("tid").and_then(Json::as_u64).expect("root tid");
+    assert_ne!(tid, 0, "request ran untraced");
+
+    let mut stages: Vec<&str> = arr
+        .iter()
+        .filter(|e| e.get("tid").and_then(Json::as_u64) == Some(tid))
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    stages.sort_unstable();
+    stages.dedup();
+    assert!(
+        stages.len() >= 5,
+        "expected >=5 distinct stages for trace {tid}, got {stages:?}"
+    );
+    // the trail must reach both edges of the stack: the wire codec layer
+    // and the executor
+    assert!(stages.contains(&"wire_decode_json"), "{stages:?}");
+    assert!(stages.contains(&"wire_encode_json"), "{stages:?}");
+    assert!(stages.contains(&"queue"), "{stages:?}");
+    assert!(stages.contains(&"execute"), "{stages:?}");
+}
+
+/// The recorder stays cheap enough to leave on: p50 latency with
+/// tracing enabled is within a few percent of tracing disabled (plus an
+/// absolute floor — at sub-millisecond p50 a few percent is below
+/// scheduler noise). Debug builds get a relaxed bound; the release gate
+/// is the one CI's release-test job enforces.
+#[test]
+fn tracing_overhead_is_bounded() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    fn p50_us(cfg: MatexpConfig, seed_base: u64) -> f64 {
+        let mut service = Service::start(cfg).expect("service starts");
+        // distinct matrices per iteration so runs exercise the full
+        // traced path instead of collapsing into result-cache hits
+        let inputs: Vec<Matrix> =
+            (0..50).map(|i| Matrix::random_spectral(32, 0.9, seed_base + i)).collect();
+        for a in &inputs[..10] {
+            service.run(Submission::expm(a.clone(), 64).method(Method::Ours)).expect("warmup");
+        }
+        let mut lat: Vec<f64> = inputs[10..]
+            .iter()
+            .map(|a| {
+                let t0 = Instant::now();
+                service.run(Submission::expm(a.clone(), 64).method(Method::Ours)).expect("run");
+                t0.elapsed().as_secs_f64() * 1e6
+            })
+            .collect();
+        lat.sort_by(|x, y| x.total_cmp(y));
+        lat[lat.len() / 2]
+    }
+
+    let mut cfg_on = MatexpConfig::default();
+    cfg_on.workers = 2;
+    cfg_on.batcher.max_wait_ms = 1;
+    let mut cfg_off = cfg_on.clone();
+    cfg_off.trace.enabled = false;
+
+    // Service::start configures the global recorder from cfg.trace, so
+    // the two runs must be sequential: traced first, untraced second
+    let on = p50_us(cfg_on, 1_000);
+    let off = p50_us(cfg_off, 2_000);
+
+    // leave the recorder on for whichever test runs next
+    matexp::trace::set_enabled(true);
+
+    let (factor, slack_us) = if cfg!(debug_assertions) { (1.5, 1_000.0) } else { (1.05, 200.0) };
+    assert!(
+        on <= off * factor + slack_us,
+        "tracing overhead too high: p50 on={on:.1}us off={off:.1}us \
+         (bound {factor}x + {slack_us}us)"
+    );
+}
