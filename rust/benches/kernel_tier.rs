@@ -1,0 +1,76 @@
+//! `cargo bench --bench kernel_tier` — ablation A7: the raw-speed CPU
+//! kernel tier (packed / simd / strassen) against the earlier matmul
+//! variants at the paper's sizes n ∈ {256, 512, 1024}.
+//!
+//! Beyond the sampled per-kernel timings, this bench asserts the tier's
+//! speedup contract at n=1024: the best new kernel must beat the
+//! `blocked` baseline by ≥2× in release builds with the `simd` feature,
+//! by ≥1× (never slower) with the scalar-packed fallback, and by a
+//! relaxed 0.2× floor in debug builds (where only the plumbing, not the
+//! codegen, is under test).
+
+use matexp::bench::{BenchConfig, Runner};
+use matexp::experiments::{ablations, report};
+use matexp::linalg::matrix::Matrix;
+use matexp::linalg::{packed, CpuAlgo};
+use std::time::Duration;
+
+const SIZES: [usize; 3] = [256, 512, 1024];
+
+fn main() {
+    let seed = 42u64;
+    let mut runner = Runner::with_config(
+        "CPU kernel tier",
+        BenchConfig {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 10,
+            time_budget: Duration::from_secs(30),
+        },
+    );
+    for n in SIZES {
+        let a = Matrix::random_spectral(n, 0.99, seed);
+        let b = Matrix::random_spectral(n, 0.99, seed ^ 1);
+        for algo in CpuAlgo::all() {
+            if algo == CpuAlgo::Auto {
+                continue; // dispatch row: duplicates whichever kernel wins
+            }
+            let mm = algo.matmul();
+            runner.bench(&format!("matmul/{}/n{n}", algo.name()), || {
+                matexp::bench::black_box(&mm(&a, &b));
+            });
+        }
+    }
+    runner.report();
+
+    // the A7 table per size, plus the speedup contract at n=1024
+    for n in SIZES {
+        let arms = ablations::kernel_tier(n, seed);
+        print!("{}", report::render_ablation(&format!("A7 kernel tier (n={n})"), &arms));
+        println!();
+        if n != 1024 {
+            continue;
+        }
+        let wall = |name: &str| {
+            arms.iter()
+                .find(|x| x.name == name)
+                .unwrap_or_else(|| panic!("{name} missing from the kernel tier"))
+                .wall_s
+        };
+        let blocked = wall("blocked");
+        let tier = wall("packed").min(wall("simd")).min(wall("strassen"));
+        let speedup = blocked / tier.max(f64::MIN_POSITIVE);
+        let floor = if cfg!(debug_assertions) {
+            0.2
+        } else if packed::simd_active() {
+            2.0
+        } else {
+            1.0
+        };
+        println!("kernel tier speedup at n=1024: {speedup:.2}x vs blocked (floor {floor}x)");
+        assert!(
+            speedup >= floor,
+            "kernel tier regressed: {speedup:.2}x < {floor}x vs blocked at n=1024"
+        );
+    }
+}

@@ -122,6 +122,31 @@ impl Default for TraceSettings {
     }
 }
 
+/// Runtime kernel-autotuner knobs (see [`crate::linalg::autotune`]).
+///
+/// Off by default: probing costs a few multiplies per configured size at
+/// startup. When enabled (`--autotune`), worker engines race the CPU
+/// matmul variants at each size in `sizes`, record the winners in the
+/// process-global tuning table, and `CpuAlgo::Auto` / the pool cost
+/// model dispatch through it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AutotuneConfig {
+    /// Probe kernel variants at worker startup and dispatch through the
+    /// recorded winners.
+    pub enabled: bool,
+    /// Timed probes per `(size, variant)` pair — best-of-k absorbs
+    /// scheduling noise (`--autotune-probes`).
+    pub probes: usize,
+    /// Matrix sizes the tuner races at startup.
+    pub sizes: Vec<usize>,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        Self { enabled: false, probes: 3, sizes: vec![64, 128, 256] }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
@@ -150,6 +175,8 @@ pub struct MatexpConfig {
     pub cache: CacheSettings,
     /// Flight-recorder tracing policy (span ring, slow-request log).
     pub trace: TraceSettings,
+    /// Runtime kernel-autotuner policy (startup probing, probe budget).
+    pub autotune: AutotuneConfig,
     /// Use the fused `sqmul` executable in binary plans.
     pub fused_sqmul: bool,
     /// Fold squaring runs into `square2`/`square4` launches.
@@ -180,6 +207,7 @@ impl Default for MatexpConfig {
             pool: PoolConfig::default(),
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
+            autotune: AutotuneConfig::default(),
             fused_sqmul: true,
             use_square_chains: true,
             warmup_sizes: Vec::new(),
@@ -348,6 +376,30 @@ impl MatexpConfig {
                         }
                     }
                 }
+                "autotune" => {
+                    let a = val.as_obj().ok_or_else(|| bad("autotune"))?;
+                    for (ak, av) in a {
+                        match ak.as_str() {
+                            "enabled" => {
+                                cfg.autotune.enabled =
+                                    av.as_bool().ok_or_else(|| bad("autotune.enabled"))?
+                            }
+                            "probes" => {
+                                cfg.autotune.probes =
+                                    av.as_usize().ok_or_else(|| bad("autotune.probes"))?
+                            }
+                            "sizes" => {
+                                cfg.autotune.sizes =
+                                    av.as_usize_vec().ok_or_else(|| bad("autotune.sizes"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field autotune.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
                 "fused_sqmul" => {
                     cfg.fused_sqmul = val.as_bool().ok_or_else(|| bad("fused_sqmul"))?
                 }
@@ -431,6 +483,19 @@ impl MatexpConfig {
                 ]
             ),
             (
+                "autotune",
+                json_obj![
+                    ("enabled", self.autotune.enabled),
+                    ("probes", self.autotune.probes),
+                    (
+                        "sizes",
+                        Json::Arr(
+                            self.autotune.sizes.iter().map(|&n| Json::from(n)).collect()
+                        )
+                    ),
+                ]
+            ),
+            (
                 "warmup_sizes",
                 Json::Arr(self.warmup_sizes.iter().map(|&n| Json::from(n)).collect())
             ),
@@ -473,6 +538,17 @@ impl MatexpConfig {
         }
         if self.pool.grid == Some(0) {
             return Err(MatexpError::Config("pool.grid must be >= 1".into()));
+        }
+        if self.autotune.probes == 0 {
+            return Err(MatexpError::Config("autotune.probes must be >= 1".into()));
+        }
+        if self.autotune.enabled && self.autotune.sizes.is_empty() {
+            return Err(MatexpError::Config(
+                "autotune.sizes must list at least one size when autotune is enabled".into(),
+            ));
+        }
+        if self.autotune.sizes.contains(&0) {
+            return Err(MatexpError::Config("autotune.sizes entries must be >= 1".into()));
         }
         if self.backend == BackendKind::Pool && self.pool.devices.is_empty() {
             return Err(MatexpError::Config(
@@ -632,6 +708,40 @@ mod tests {
         .is_err());
         let mut cfg = MatexpConfig::default();
         cfg.trace.ring_capacity = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn autotune_settings_parse_and_validate() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"autotune":{"enabled":true,"probes":5,"sizes":[32,64]}}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(cfg.autotune.enabled);
+        assert_eq!(cfg.autotune.probes, 5);
+        assert_eq!(cfg.autotune.sizes, vec![32, 64]);
+        cfg.validate().unwrap();
+        // defaults: tuner off, sane probe budget
+        let d = AutotuneConfig::default();
+        assert!(!d.enabled && d.probes >= 1 && !d.sizes.is_empty());
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"autotune":{"wat":1}}"#).unwrap()
+        )
+        .is_err());
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"autotune":{"enabled":"on"}}"#).unwrap()
+        )
+        .is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.autotune.probes = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.autotune.enabled = true;
+        cfg.autotune.sizes.clear();
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.autotune.sizes.push(0);
         assert!(cfg.validate().is_err());
     }
 

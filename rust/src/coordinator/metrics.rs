@@ -52,6 +52,10 @@ pub struct Metrics {
     /// Binary frames handled (read or written) by the TCP front-end —
     /// how much traffic has moved off the JSON line codec.
     pub frames_total: AtomicU64,
+    /// Request payload bytes decoded straight into recycled wire-arena
+    /// buffers (the zero-copy frame path's saving: each counted byte is
+    /// one that skipped a fresh heap allocation at the wire edge).
+    pub wire_bytes_recycled_total: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
 }
@@ -87,6 +91,8 @@ pub struct MetricsSnapshot {
     pub wire_bytes_out_total: u64,
     /// Binary frames handled by the TCP front-end.
     pub frames_total: u64,
+    /// Request payload bytes decoded into recycled wire-arena buffers.
+    pub wire_bytes_recycled_total: u64,
     /// Total cross-queue steals in the device pool (0 off the pool backend).
     pub steals_total: u64,
     /// Per-device utilization (empty off the pool backend); filled by
@@ -95,6 +101,9 @@ pub struct MetricsSnapshot {
     /// Process-wide cache-tier counters (plan / prepared / result), from
     /// [`crate::cache::stats::snapshot`].
     pub cache: CacheCounters,
+    /// CPU-kernel autotuner winner table (empty when autotuning is off),
+    /// from [`crate::linalg::autotune::snapshot`].
+    pub autotune: Vec<crate::linalg::autotune::TuneRow>,
     /// Latency histogram as `(bucket upper bound µs, count)` pairs.
     pub latency_buckets: Vec<(u64, u64)>,
     /// Mean served latency, microseconds.
@@ -158,9 +167,11 @@ impl Metrics {
             wire_bytes_in_total: self.wire_bytes_in_total.load(Ordering::Relaxed),
             wire_bytes_out_total: self.wire_bytes_out_total.load(Ordering::Relaxed),
             frames_total: self.frames_total.load(Ordering::Relaxed),
+            wire_bytes_recycled_total: self.wire_bytes_recycled_total.load(Ordering::Relaxed),
             steals_total: 0,
             devices: Vec::new(),
             cache: crate::cache::stats::snapshot(),
+            autotune: crate::linalg::autotune::snapshot(),
             latency_mean_us: if observed == 0 { 0.0 } else { sum as f64 / observed as f64 },
             latency_p50_us: Self::percentile(&buckets, observed, 0.50),
             latency_p99_us: Self::percentile(&buckets, observed, 0.99),
@@ -177,6 +188,18 @@ impl MetricsSnapshot {
             .iter()
             .map(|&(bound, count)| {
                 Json::Arr(vec![Json::Num(bound as f64), Json::Num(count as f64)])
+            })
+            .collect();
+        let autotune: Vec<Json> = self
+            .autotune
+            .iter()
+            .map(|r| {
+                json_obj![
+                    ("n", r.n as f64),
+                    ("winner", r.winner.name()),
+                    ("secs", r.secs),
+                    ("gflops", r.gflops),
+                ]
             })
             .collect();
         let devices: Vec<Json> = self
@@ -211,8 +234,10 @@ impl MetricsSnapshot {
             ("wire_bytes_in_total", self.wire_bytes_in_total),
             ("wire_bytes_out_total", self.wire_bytes_out_total),
             ("frames_total", self.frames_total),
+            ("wire_bytes_recycled_total", self.wire_bytes_recycled_total),
             ("steals_total", self.steals_total),
             ("cache", self.cache.to_json()),
+            ("autotune", Json::Arr(autotune)),
             ("devices", Json::Arr(devices)),
             ("latency_buckets", Json::Arr(buckets)),
             ("latency_mean_us", self.latency_mean_us),
@@ -312,12 +337,27 @@ mod tests {
         m.wire_bytes_in_total.fetch_add(100, Ordering::Relaxed);
         m.wire_bytes_out_total.fetch_add(250, Ordering::Relaxed);
         m.frames_total.fetch_add(3, Ordering::Relaxed);
+        m.wire_bytes_recycled_total.fetch_add(64, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!((s.wire_bytes_in_total, s.wire_bytes_out_total, s.frames_total), (100, 250, 3));
+        assert_eq!(s.wire_bytes_recycled_total, 64);
         let j = s.to_json().to_string();
         assert!(j.contains("\"wire_bytes_in_total\":100"), "{j}");
         assert!(j.contains("\"wire_bytes_out_total\":250"), "{j}");
         assert!(j.contains("\"frames_total\":3"), "{j}");
+        assert!(j.contains("\"wire_bytes_recycled_total\":64"), "{j}");
+    }
+
+    #[test]
+    fn autotune_table_rides_the_metrics_json() {
+        // the table itself is process-global (other tests may have
+        // populated it), so assert shape rather than contents
+        let s = Metrics::new().snapshot();
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"autotune\":["), "{j}");
+        for row in &s.autotune {
+            assert!(j.contains(row.winner.name()), "{j}");
+        }
     }
 
     #[test]

@@ -169,7 +169,17 @@ pub fn strategy_for(req: &ExpmRequest, cfg: &MatexpConfig) -> Strategy {
     match req.method {
         Method::Ours => {
             let conservative = is_conservative(req.tolerance);
-            Strategy::DeviceResident(if cfg.use_square_chains && !conservative {
+            // autotuned fast-multiply tier: once the tuner has measured
+            // Strassen winning at some size, non-conservative requests at
+            // or above it take the Strassen-kind plan (same squaring
+            // schedule, fast-multiply dispatch intent)
+            let strassen = cfg.autotune.enabled
+                && !conservative
+                && crate::linalg::autotune::strassen_threshold()
+                    .is_some_and(|t| req.n() >= t);
+            Strategy::DeviceResident(if strassen {
+                cached(PlanKind::Strassen, &|| Plan::strassen(req.power))
+            } else if cfg.use_square_chains && !conservative {
                 cached(PlanKind::Chained, &|| Plan::chained(req.power, &[4, 2]))
             } else {
                 cached(PlanKind::Binary, &|| Plan::binary(req.power, false))
@@ -329,6 +339,44 @@ mod tests {
         }
         c.use_square_chains = true;
         match strategy_for(&req(64, 512, Method::Ours), &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Chained),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn autotuned_strassen_threshold_selects_the_strassen_kind() {
+        // teach the tuner that Strassen wins at a test-unique size; the
+        // threshold is the smallest strassen-winning size on record, so
+        // it can only be ≤ this one
+        crate::linalg::autotune::record(
+            643,
+            &[
+                (crate::linalg::CpuAlgo::Blocked, 5.0),
+                (crate::linalg::CpuAlgo::Strassen, 1.0),
+            ],
+        );
+        let threshold = crate::linalg::autotune::strassen_threshold().unwrap();
+        assert!(threshold <= 643);
+        let mut c = cfg();
+        c.autotune.enabled = true;
+        match strategy_for(&req(threshold, 512, Method::Ours), &c) {
+            Strategy::DeviceResident(p) => {
+                assert_eq!(p.kind, crate::plan::PlanKind::Strassen);
+                // same squaring schedule as the binary plan
+                assert_eq!(p.multiplies(), Plan::binary(512, false).multiplies());
+            }
+            s => panic!("{s:?}"),
+        }
+        // a tight tolerance still pins the conservative binary plan
+        let mut r = req(threshold, 512, Method::Ours);
+        r.tolerance = Some(1e-7);
+        match strategy_for(&r, &c) {
+            Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Binary),
+            s => panic!("{s:?}"),
+        }
+        // with autotune disabled (the default), nothing changes
+        match strategy_for(&req(threshold, 512, Method::Ours), &cfg()) {
             Strategy::DeviceResident(p) => assert_eq!(p.kind, crate::plan::PlanKind::Chained),
             s => panic!("{s:?}"),
         }

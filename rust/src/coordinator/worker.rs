@@ -96,6 +96,9 @@ pub fn execute_request<B: Backend>(
 /// `cfg.warmup_sizes` are prepared AND executed once so the worker's
 /// first real request is served at steady-state latency.
 pub fn build_engine(cfg: &MatexpConfig) -> Result<AnyEngine> {
+    // probe CPU kernel variants once per process (no-op unless enabled);
+    // the winner table steers CpuAlgo::Auto and the Strassen threshold
+    crate::linalg::autotune::ensure(&cfg.autotune, cfg.seed);
     let mut engine = Engine::from_config(cfg)?;
     for &n in &cfg.warmup_sizes {
         // a size the backend cannot serve is a config mistake worth surfacing
@@ -152,6 +155,9 @@ pub fn build_worker_engine(
     cfg: &MatexpConfig,
     shared_pool: Option<Arc<DevicePool>>,
 ) -> Result<WorkerEngine> {
+    // runs before DevicePool::new so pool calibration can consume the
+    // autotuner's measured CPU curve (idempotent across workers)
+    crate::linalg::autotune::ensure(&cfg.autotune, cfg.seed);
     let kind = if cfg.backend == BackendKind::Pool {
         let pool = match shared_pool {
             Some(p) => p,

@@ -508,6 +508,56 @@ pub fn cache_engine_arms(cfg: &MatexpConfig, n: usize, power: u64) -> Result<Vec
     ])
 }
 
+/// A7 — kernel-tier ablation behind `--ablate-kernels`: every
+/// [`crate::linalg::CpuAlgo`] variant multiplies once at size `n` (best
+/// of two runs, so a cold first touch doesn't charge a kernel for page
+/// faults), with GFLOP/s and the speedup over the `blocked` baseline —
+/// the pre-tier default dispatch — in the detail column. The `simd` row
+/// notes when it is actually the scalar-packed fallback (feature off, or
+/// the ISA probe failed at runtime).
+pub fn kernel_tier(n: usize, seed: u64) -> Vec<ArmResult> {
+    let a = Matrix::random_spectral(n, 0.99, seed);
+    let b = Matrix::random_spectral(n, 0.99, seed ^ 7);
+    let timed: Vec<(&'static str, f64)> = linalg::matmul_variants()
+        .into_iter()
+        .map(|(name, mm)| {
+            let mut best = f64::INFINITY;
+            for _ in 0..2 {
+                let t0 = Instant::now();
+                let c = mm(&a, &b);
+                best = best.min(t0.elapsed().as_secs_f64());
+                std::hint::black_box(&c);
+            }
+            (name, best.max(f64::MIN_POSITIVE))
+        })
+        .collect();
+    let blocked = timed
+        .iter()
+        .find(|&&(nm, _)| nm == "blocked")
+        .map(|&(_, s)| s)
+        .expect("blocked is always a registered variant");
+    timed
+        .into_iter()
+        .map(|(name, wall)| ArmResult {
+            name: name.to_string(),
+            wall_s: wall,
+            launches: 0,
+            multiplies: 1,
+            transfers: 0,
+            detail: format!(
+                "{:.2} GFLOP/s, {:.2}x vs blocked{}",
+                2.0 * (n as f64).powi(3) / wall / 1e9,
+                blocked / wall,
+                if name == "simd" && !crate::linalg::packed::simd_active() {
+                    " (scalar fallback: simd feature off or ISA unavailable)"
+                } else {
+                    ""
+                },
+            ),
+        })
+        .collect()
+}
+
 /// A4 — CPU-baseline fairness sweep: one multiply per variant at size `n`.
 pub fn cpu_variants(n: usize, seed: u64) -> Vec<ArmResult> {
     let a = Matrix::random_spectral(n, 0.99, seed);
@@ -544,8 +594,19 @@ mod tests {
     #[test]
     fn cpu_variants_all_report() {
         let arms = cpu_variants(48, 1);
-        assert_eq!(arms.len(), 5);
+        assert_eq!(arms.len(), CpuAlgo::all().len());
         assert!(arms.iter().all(|a| a.wall_s > 0.0));
+    }
+
+    #[test]
+    fn kernel_tier_reports_every_algo_with_speedups() {
+        let arms = kernel_tier(48, 1);
+        assert_eq!(arms.len(), CpuAlgo::all().len());
+        assert!(arms.iter().all(|a| a.wall_s > 0.0));
+        assert!(arms.iter().all(|a| a.detail.contains("GFLOP/s")), "{arms:?}");
+        assert!(arms.iter().all(|a| a.detail.contains("x vs blocked")), "{arms:?}");
+        let blocked = arms.iter().find(|a| a.name == "blocked").unwrap();
+        assert!(blocked.detail.contains("1.00x vs blocked"), "{}", blocked.detail);
     }
 
     #[test]

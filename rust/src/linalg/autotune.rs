@@ -1,0 +1,364 @@
+//! Runtime kernel autotuner: probe the CPU matmul variants per size,
+//! record the winners, dispatch through them.
+//!
+//! The pool's micro-calibration (`pool/cost.rs`) times one multiply at
+//! one fixed size and extrapolates as uniform `2n³` — good enough to
+//! split tiles, wrong about *which kernel* to run, because the variants
+//! cross over: the packed microkernel wins small-to-mid sizes, SIMD
+//! stretches that lead, and Strassen's 7-multiply recursion overtakes
+//! everything past a machine-dependent n. This module generalizes that
+//! calibration into a keyed tuning table (the `PlanCache` discipline —
+//! a process-global table keyed by probe size, populated once, consulted
+//! on every dispatch):
+//!
+//! 1. [`run`] races the candidate variants at each configured size
+//!    (best-of-k timed multiplies) and records a [`TuneRow`] per size.
+//! 2. [`CpuAlgo::Auto`](crate::linalg::CpuAlgo) dispatches through
+//!    [`best_for`] — the winner at the nearest probed size.
+//! 3. The Strassen recursion cutoff and the scheduler's
+//!    `PlanKind::Strassen` threshold come from the same table
+//!    ([`strassen_crossover`], [`strassen_threshold`]).
+//! 4. The pool cost model consumes [`cpu_curve`] so LPT assignment sees
+//!    the real per-size throughput curve instead of one extrapolated
+//!    point.
+//!
+//! Winner selection ([`select_winner`]) is a pure function of the
+//! measurements, so identical probe data always produces an identical
+//! table — the determinism contract the tests pin. Candidate order always
+//! starts with `Blocked` (the pre-tier default): a recorded winner is the
+//! measured minimum, so tuned dispatch can never pick a variant slower
+//! than the default *at a probed size*.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::json_obj;
+use crate::linalg::expm::CpuAlgo;
+use crate::linalg::matrix::Matrix;
+use crate::util::json::Json;
+
+/// One row of the tuning table: the measured winner at one probed size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneRow {
+    /// Probed matrix side length.
+    pub n: usize,
+    /// Winning variant at this size.
+    pub winner: CpuAlgo,
+    /// Best-of-probes seconds for one winner multiply.
+    pub secs: f64,
+    /// Effective winner throughput, `2n³ / secs / 1e9`.
+    pub gflops: f64,
+}
+
+struct TuneState {
+    rows: BTreeMap<usize, TuneRow>,
+    probes: u64,
+}
+
+fn state() -> &'static Mutex<TuneState> {
+    static S: OnceLock<Mutex<TuneState>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(TuneState { rows: BTreeMap::new(), probes: 0 }))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, TuneState> {
+    state().lock().expect("autotune table poisoned")
+}
+
+/// Smallest probed size where Strassen won (0 = none yet).
+static STRASSEN_AT: AtomicUsize = AtomicUsize::new(0);
+
+/// Tuned Strassen recursion cutoff (0 = use the compiled default).
+static CROSSOVER: AtomicUsize = AtomicUsize::new(0);
+
+/// The variants raced at size `n`, in deterministic tie-break order.
+/// `Blocked` (the pre-tier default) always leads so a winner can never be
+/// slower than it at a probed size; `Naive`/`Transposed` are excluded
+/// (dominated at every size worth a probe budget); Strassen only enters
+/// once recursion has room to pay for its extra adds.
+pub fn candidates(n: usize) -> Vec<CpuAlgo> {
+    let mut c = vec![
+        CpuAlgo::Blocked,
+        CpuAlgo::Ikj,
+        CpuAlgo::Threaded,
+        CpuAlgo::Packed,
+        CpuAlgo::Simd,
+    ];
+    if n >= 64 {
+        c.push(CpuAlgo::Strassen);
+    }
+    c
+}
+
+/// Pick the winner from `(variant, seconds)` measurements: smallest
+/// finite positive time, ties broken by earlier position. Pure — the same
+/// measurements always select the same winner, which is what makes the
+/// whole table deterministic for a given set of probe timings.
+pub fn select_winner(measured: &[(CpuAlgo, f64)]) -> Option<(CpuAlgo, f64)> {
+    let mut best: Option<(CpuAlgo, f64)> = None;
+    for &(algo, secs) in measured {
+        if !secs.is_finite() || secs <= 0.0 {
+            continue;
+        }
+        if best.is_none_or(|(_, b)| secs < b) {
+            best = Some((algo, secs));
+        }
+    }
+    best
+}
+
+/// Record one size's measurements into the table and refresh the derived
+/// Strassen thresholds. Returns the stored row (`None` when no
+/// measurement was usable). This is also the test seam: synthetic
+/// measurements drive exactly the code path the live probes do.
+pub fn record(n: usize, measured: &[(CpuAlgo, f64)]) -> Option<TuneRow> {
+    let (mut winner, secs) = select_winner(measured)?;
+    if winner == CpuAlgo::Auto {
+        winner = CpuAlgo::Blocked; // Auto can't win a race it dispatches
+    }
+    let row = TuneRow {
+        n,
+        winner,
+        secs,
+        gflops: 2.0 * (n as f64).powi(3) / secs / 1e9,
+    };
+    let mut s = lock();
+    s.probes += measured.len() as u64;
+    s.rows.insert(n, row.clone());
+    // derived thresholds: first size Strassen wins, and the largest
+    // probed size where something else still won (= recursion cutoff)
+    let first_strassen = s
+        .rows
+        .values()
+        .filter(|r| r.winner == CpuAlgo::Strassen)
+        .map(|r| r.n)
+        .min();
+    STRASSEN_AT.store(first_strassen.unwrap_or(0), Ordering::Relaxed);
+    if first_strassen.is_some() {
+        let cutoff = s
+            .rows
+            .values()
+            .filter(|r| r.winner != CpuAlgo::Strassen)
+            .map(|r| r.n)
+            .max()
+            .unwrap_or(0);
+        CROSSOVER.store(cutoff, Ordering::Relaxed);
+    }
+    Some(row)
+}
+
+/// Time one multiply through `algo`, best of `probes` runs.
+fn probe_one(algo: CpuAlgo, a: &Matrix, b: &Matrix, c: &mut Matrix, probes: usize) -> f64 {
+    let f = algo.matmul_into();
+    let mut best = f64::INFINITY;
+    for _ in 0..probes.max(1) {
+        let t = Instant::now();
+        f(a, b, c);
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Race the candidates at each size and record the winners. Returns the
+/// recorded rows in probe order. Deterministic inputs (seeded operands),
+/// measured timings — the *selection* from those timings is pure.
+pub fn run(sizes: &[usize], probes: usize, seed: u64) -> Vec<TuneRow> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        if n == 0 {
+            continue;
+        }
+        let a = Matrix::random_spectral(n, 0.9, seed);
+        let b = Matrix::random_spectral(n, 0.9, seed ^ 0x9E37_79B9);
+        let mut c = Matrix::zeros(n);
+        let measured: Vec<(CpuAlgo, f64)> = candidates(n)
+            .into_iter()
+            .map(|algo| (algo, probe_one(algo, &a, &b, &mut c, probes)))
+            .collect();
+        if let Some(row) = record(n, &measured) {
+            out.push(row);
+        }
+    }
+    out
+}
+
+/// Run the autotuner once per process when the config enables it. Worker
+/// engine construction calls this at startup; later calls (more workers,
+/// tests) are no-ops.
+pub fn ensure(cfg: &crate::config::AutotuneConfig, seed: u64) {
+    static RAN: OnceLock<()> = OnceLock::new();
+    if !cfg.enabled {
+        return;
+    }
+    RAN.get_or_init(|| {
+        run(&cfg.sizes, cfg.probes, seed);
+    });
+}
+
+/// The tuned variant for size `n`: the recorded winner at the nearest
+/// probed size (log-scale distance, so 96 maps to 128 rather than 64
+/// being equidistant-by-subtraction). `Blocked` before any tuning.
+pub fn best_for(n: usize) -> CpuAlgo {
+    let s = lock();
+    let target = (n.max(1) as f64).ln();
+    let mut best: Option<(f64, CpuAlgo)> = None;
+    for (&pn, row) in &s.rows {
+        let d = ((pn.max(1) as f64).ln() - target).abs();
+        if best.is_none_or(|(bd, _)| d < bd) {
+            best = Some((d, row.winner));
+        }
+    }
+    match best {
+        Some((_, w)) if w != CpuAlgo::Auto => w,
+        _ => CpuAlgo::Blocked,
+    }
+}
+
+/// The `CpuAlgo::Auto` allocating kernel: dispatch through the table.
+pub fn matmul_auto(a: &Matrix, b: &Matrix) -> Matrix {
+    (best_for(a.n()).matmul())(a, b)
+}
+
+/// The `CpuAlgo::Auto` in-place kernel: dispatch through the table.
+pub fn matmul_auto_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    (best_for(a.n()).matmul_into())(a, b, c)
+}
+
+/// Smallest probed size where Strassen won the race — the scheduler's
+/// threshold for selecting `PlanKind::Strassen`. `None` until a probe
+/// says so.
+pub fn strassen_threshold() -> Option<usize> {
+    match STRASSEN_AT.load(Ordering::Relaxed) {
+        0 => None,
+        n => Some(n),
+    }
+}
+
+/// The Strassen recursion cutoff: the largest probed size where a
+/// non-Strassen variant still won, or the compiled default before tuning.
+pub fn strassen_crossover() -> usize {
+    match CROSSOVER.load(Ordering::Relaxed) {
+        0 => crate::linalg::strassen::DEFAULT_CROSSOVER,
+        n => n,
+    }
+}
+
+/// Winner seconds-per-multiply at every probed size, ascending — the
+/// pool cost model's measured throughput curve.
+pub fn cpu_curve() -> Vec<(usize, f64)> {
+    lock().rows.values().map(|r| (r.n, r.secs)).collect()
+}
+
+/// Every recorded tuning row, probed sizes ascending.
+pub fn snapshot() -> Vec<TuneRow> {
+    lock().rows.values().cloned().collect()
+}
+
+/// Total variant probes recorded since process start.
+pub fn probes_total() -> u64 {
+    lock().probes
+}
+
+/// The tuning table as JSON (metrics endpoint, `expm --explain`).
+pub fn to_json() -> Json {
+    Json::Arr(
+        snapshot()
+            .iter()
+            .map(|r| {
+                json_obj![
+                    ("n", r.n as f64),
+                    ("winner", r.winner.name()),
+                    ("secs", r.secs),
+                    ("gflops", r.gflops),
+                ]
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_winner_is_deterministic_and_order_tied() {
+        let measured = vec![
+            (CpuAlgo::Blocked, 2.0),
+            (CpuAlgo::Packed, 1.0),
+            (CpuAlgo::Simd, 1.0), // tie: earlier candidate wins
+            (CpuAlgo::Strassen, f64::NAN),
+        ];
+        let a = select_winner(&measured);
+        let b = select_winner(&measured);
+        assert_eq!(a, b, "same probe data must select the same winner");
+        assert_eq!(a, Some((CpuAlgo::Packed, 1.0)));
+    }
+
+    #[test]
+    fn select_winner_skips_unusable_timings() {
+        assert_eq!(select_winner(&[]), None);
+        assert_eq!(
+            select_winner(&[(CpuAlgo::Blocked, f64::INFINITY), (CpuAlgo::Ikj, -1.0)]),
+            None
+        );
+    }
+
+    #[test]
+    fn record_builds_a_deterministic_table() {
+        // distinct odd sizes so parallel tests can't collide on the key
+        let measured = vec![(CpuAlgo::Blocked, 3.0e-3), (CpuAlgo::Packed, 1.0e-3)];
+        let r1 = record(9941, &measured).unwrap();
+        let r2 = record(9941, &measured).unwrap();
+        assert_eq!(r1, r2, "same probe data must produce the same row");
+        assert_eq!(r1.winner, CpuAlgo::Packed);
+        assert_eq!(best_for(9941), CpuAlgo::Packed);
+        assert!(r1.gflops > 0.0);
+    }
+
+    #[test]
+    fn strassen_win_sets_threshold_and_crossover() {
+        record(9973, &[(CpuAlgo::Blocked, 5.0), (CpuAlgo::Strassen, 1.0)]);
+        record(9949, &[(CpuAlgo::Blocked, 1.0), (CpuAlgo::Strassen, 5.0)]);
+        let t = strassen_threshold().expect("threshold set after a strassen win");
+        assert!(t <= 9973);
+        // the cutoff is a size where something else won, so recursion
+        // always has a measured-profitable base case
+        let c = strassen_crossover();
+        assert!(c >= 9949 || c == crate::linalg::strassen::DEFAULT_CROSSOVER);
+    }
+
+    #[test]
+    fn run_probes_record_real_winners() {
+        let rows = run(&[12], 1, 7);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].n, 12);
+        assert!(rows[0].secs.is_finite() && rows[0].secs > 0.0);
+        assert!(probes_total() >= candidates(12).len() as u64);
+        // whatever won, auto dispatch at that size must agree numerically
+        let a = Matrix::random(12, 1);
+        let b = Matrix::random(12, 2);
+        let want = crate::linalg::naive::matmul_naive(&a, &b);
+        assert!(matmul_auto(&a, &b).approx_eq(&want, 1e-4, 1e-4));
+        let mut c = Matrix::random(12, 99);
+        matmul_auto_into(&a, &b, &mut c);
+        assert!(c.approx_eq(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn best_for_defaults_to_blocked_far_from_any_probe() {
+        // before/without nearby rows the fallback is the pre-tier default;
+        // with rows, it returns SOME recorded winner — never Auto
+        let w = best_for(3);
+        assert_ne!(w, CpuAlgo::Auto);
+    }
+
+    #[test]
+    fn json_snapshot_has_one_entry_per_row() {
+        record(9967, &[(CpuAlgo::Blocked, 2.0e-3)]);
+        match to_json() {
+            Json::Arr(rows) => assert_eq!(rows.len(), snapshot().len()),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+}

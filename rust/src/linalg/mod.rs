@@ -5,12 +5,22 @@
 //! The stronger CPU variants ([`transposed`], [`blocked`], [`threaded`])
 //! exist as ablations: they quantify how much of the paper's reported GPU
 //! speedup is really "GPU vs *unoptimized* CPU" (DESIGN.md §6).
+//!
+//! The raw-speed tier on top of those ([`packed`], [`strassen`],
+//! [`autotune`]) is the CPU answer to the paper's hand-tuned GPU
+//! kernels: packed register-tile microkernels (scalar and explicit
+//! SIMD), a Strassen fast multiply above a tuned crossover, and a
+//! runtime autotuner that races the variants per size and dispatches
+//! through the winners (`CpuAlgo::Auto`).
 
+pub mod autotune;
 pub mod blocked;
 pub mod expm;
 pub mod matrix;
 pub mod naive;
+pub mod packed;
 pub mod rand;
+pub mod strassen;
 pub mod threaded;
 pub mod transposed;
 
@@ -27,13 +37,11 @@ pub type MatmulFn = fn(&Matrix, &Matrix) -> Matrix;
 /// of a fresh `n×n` allocation per launch.
 pub type MatmulIntoFn = fn(&Matrix, &Matrix, &mut Matrix);
 
-/// All CPU matmul variants, for sweeps and dispatch by name.
+/// All CPU matmul variants, for sweeps and dispatch by name. Derived
+/// from [`CpuAlgo::all`] so the list can never drift from the enum.
 pub fn matmul_variants() -> Vec<(&'static str, MatmulFn)> {
-    vec![
-        ("naive", naive::matmul_naive as MatmulFn),
-        ("transposed", transposed::matmul_transposed as MatmulFn),
-        ("ikj", transposed::matmul_ikj as MatmulFn),
-        ("blocked", blocked::matmul_blocked_default as MatmulFn),
-        ("threaded", threaded::matmul_threaded as MatmulFn),
-    ]
+    CpuAlgo::all()
+        .into_iter()
+        .map(|a| (a.name(), a.matmul()))
+        .collect()
 }

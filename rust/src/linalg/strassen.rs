@@ -1,0 +1,188 @@
+//! Strassen fast matrix multiply: 7 recursive multiplies instead of 8.
+//!
+//! Above a crossover size the O(n^2.807) multiply count beats the extra
+//! O(n²) adds; below it the packed microkernel
+//! ([`crate::linalg::packed`]) wins on constants, so recursion bottoms
+//! out there. The crossover is a tunable: the runtime autotuner
+//! ([`crate::linalg::autotune`]) measures where the trade flips on the
+//! actual machine and overrides [`DEFAULT_CROSSOVER`].
+//!
+//! Odd sizes are handled by per-level zero padding: each half-block is
+//! extracted at `m = ⌈n/2⌉` with the missing row/column zero-filled, and
+//! the write-back clips to the real output — no power-of-two requirement
+//! anywhere, which matters because exponentiation workloads arrive at
+//! arbitrary n.
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::packed;
+
+/// Recursion cutoff used until the autotuner measures a better one:
+/// sub-multiplies at or below this size run the packed microkernel
+/// directly.
+pub const DEFAULT_CROSSOVER: usize = 128;
+
+/// `a · b` via Strassen recursion with the autotuned crossover
+/// ([`crate::linalg::autotune::strassen_crossover`]).
+pub fn matmul_strassen(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_strassen_with(a, b, crate::linalg::autotune::strassen_crossover())
+}
+
+/// In-place form of [`matmul_strassen`] (output fully overwritten).
+pub fn matmul_strassen_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(c.n(), a.n(), "output size mismatch");
+    let out = matmul_strassen(a, b);
+    c.data_mut().copy_from_slice(out.data());
+}
+
+/// `a · b` via Strassen recursion with an explicit crossover (tests and
+/// the autotuner's crossover probe use this; everything else should go
+/// through [`matmul_strassen`]).
+pub fn matmul_strassen_with(a: &Matrix, b: &Matrix, crossover: usize) -> Matrix {
+    assert_eq!(a.n(), b.n(), "matmul size mismatch");
+    rec(a, b, crossover.max(2))
+}
+
+fn rec(a: &Matrix, b: &Matrix, crossover: usize) -> Matrix {
+    let n = a.n();
+    if n <= crossover {
+        return packed::matmul_packed(a, b);
+    }
+    // ⌈n/2⌉ half-blocks, zero-padded on the odd edge
+    let m = n.div_ceil(2);
+    let a11 = block(a, 0, 0, m);
+    let a12 = block(a, 0, m, m);
+    let a21 = block(a, m, 0, m);
+    let a22 = block(a, m, m, m);
+    let b11 = block(b, 0, 0, m);
+    let b12 = block(b, 0, m, m);
+    let b21 = block(b, m, 0, m);
+    let b22 = block(b, m, m, m);
+
+    // Strassen's seven products
+    let m1 = rec(&add(&a11, &a22), &add(&b11, &b22), crossover);
+    let m2 = rec(&add(&a21, &a22), &b11, crossover);
+    let m3 = rec(&a11, &sub(&b12, &b22), crossover);
+    let m4 = rec(&a22, &sub(&b21, &b11), crossover);
+    let m5 = rec(&add(&a11, &a12), &b22, crossover);
+    let m6 = rec(&sub(&a21, &a11), &add(&b11, &b12), crossover);
+    let m7 = rec(&sub(&a12, &a22), &add(&b21, &b22), crossover);
+
+    let c11 = add(&sub(&add(&m1, &m4), &m5), &m7);
+    let c12 = add(&m3, &m5);
+    let c21 = add(&m2, &m4);
+    let c22 = add(&sub(&add(&m1, &m3), &m2), &m6);
+
+    let mut c = Matrix::zeros(n);
+    write_block(&mut c, &c11, 0, 0);
+    write_block(&mut c, &c12, 0, m);
+    write_block(&mut c, &c21, m, 0);
+    write_block(&mut c, &c22, m, m);
+    c
+}
+
+/// Extract the `m×m` block at `(i0, j0)`, zero-padding past the edge.
+fn block(src: &Matrix, i0: usize, j0: usize, m: usize) -> Matrix {
+    let n = src.n();
+    let mut out = Matrix::zeros(m);
+    let rows = m.min(n.saturating_sub(i0));
+    let cols = m.min(n.saturating_sub(j0));
+    let s = src.data();
+    let d = out.data_mut();
+    for i in 0..rows {
+        let row = (i0 + i) * n + j0;
+        d[i * m..i * m + cols].copy_from_slice(&s[row..row + cols]);
+    }
+    out
+}
+
+/// Write `blk` into `dst` at `(i0, j0)`, clipping the padded edge.
+fn write_block(dst: &mut Matrix, blk: &Matrix, i0: usize, j0: usize) {
+    let n = dst.n();
+    let m = blk.n();
+    let rows = m.min(n.saturating_sub(i0));
+    let cols = m.min(n.saturating_sub(j0));
+    let s = blk.data();
+    let d = dst.data_mut();
+    for i in 0..rows {
+        let row = (i0 + i) * n + j0;
+        d[row..row + cols].copy_from_slice(&s[i * m..i * m + cols]);
+    }
+}
+
+/// Elementwise `x + y`.
+fn add(x: &Matrix, y: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for (d, s) in out.data_mut().iter_mut().zip(y.data()) {
+        *d += *s;
+    }
+    out
+}
+
+/// Elementwise `x - y`.
+fn sub(x: &Matrix, y: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for (d, s) in out.data_mut().iter_mut().zip(y.data()) {
+        *d -= *s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::naive::matmul_naive;
+
+    #[test]
+    fn matches_naive_with_deep_recursion() {
+        // crossover 2 forces multiple recursion levels, including the
+        // odd-size padding path (5, 7, 9, 13)
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 9, 13, 16, 24] {
+            let a = Matrix::random(n, 21);
+            let b = Matrix::random(n, 22);
+            let want = matmul_naive(&a, &b);
+            let got = matmul_strassen_with(&a, &b, 2);
+            assert!(
+                got.approx_eq(&want, 1e-3, 1e-3),
+                "n={n} diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn default_crossover_path_matches_packed() {
+        // below the crossover, strassen IS the packed kernel
+        let a = Matrix::random(24, 31);
+        let b = Matrix::random(24, 32);
+        assert_eq!(
+            matmul_strassen(&a, &b),
+            packed::matmul_packed(&a, &b)
+        );
+    }
+
+    #[test]
+    fn into_overwrites_stale_output() {
+        let a = Matrix::random(9, 41);
+        let b = Matrix::random(9, 42);
+        let want = matmul_strassen_with(&a, &b, 2);
+        let mut c = Matrix::random(9, 99); // stale contents must vanish
+        let out = matmul_strassen(&a, &b);
+        c.data_mut().copy_from_slice(out.data());
+        assert!(c.approx_eq(&want, 1e-4, 1e-4));
+        let mut c2 = Matrix::random(9, 98);
+        matmul_strassen_into(&a, &b, &mut c2);
+        assert_eq!(c2, out);
+    }
+
+    #[test]
+    fn block_extraction_pads_and_clips() {
+        // n=3 → m=2: the (m, m) block holds only element (2, 2)
+        let a = Matrix::from_vec(3, (0..9).map(|v| v as f32).collect()).unwrap();
+        let b22 = block(&a, 2, 2, 2);
+        assert_eq!(b22.data(), &[8.0, 0.0, 0.0, 0.0]);
+        let mut back = Matrix::zeros(3);
+        write_block(&mut back, &b22, 2, 2);
+        assert_eq!(back.get(2, 2), 8.0);
+        assert_eq!(back.get(0, 0), 0.0);
+    }
+}

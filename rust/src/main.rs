@@ -59,6 +59,10 @@ COMMANDS:
                                        [--iters K] [--measure]
                                        (A6: cold vs plan-warm vs result-warm
                                         at n in {256,512,1024} by default)
+               or the kernel ablation  --ablate-kernels [--n SIZE]
+                                       (A7: every CpuAlgo single-multiply,
+                                        GFLOP/s + speedup vs blocked,
+                                        at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
   trace        dump a server's flight recorder as Chrome trace JSON
                                        [--addr HOST:PORT] [--out FILE]
@@ -81,7 +85,10 @@ GLOBAL FLAGS:
   --backend cpu|sim|pjrt|pool   execution backend (default cpu; pjrt needs
                            the `xla` cargo feature + `make artifacts`;
                            pool = heterogeneous multi-device)
-  --cpu-algo naive|transposed|ikj|blocked|threaded
+  --cpu-algo naive|transposed|ikj|blocked|threaded|packed|simd|strassen|auto
+  --autotune        probe CPU kernel variants at startup; winners steer
+                    cpu-algo auto dispatch + the Strassen plan threshold
+  --autotune-probes K   best-of-K timing per autotuner probe (default 3)
   --pool-devices LIST   pool members, e.g. cpu,sim,sim (backend pool)
   --pool-grid G     force the pool tile grid to GxG (default: cost model)
   --shard-min-n N   smallest matrix the pool tile-shards (default 512)
@@ -129,6 +136,17 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
     }
     if let Some(a) = args.get("cpu-algo") {
         cfg.cpu_algo = CpuAlgo::from_str(a)?;
+    }
+    if args.has("autotune") {
+        cfg.autotune.enabled = true;
+        // autotuning exists to steer dispatch: unless the user pinned a
+        // specific kernel, route CPU multiplies through the winner table
+        if args.get("cpu-algo").is_none() {
+            cfg.cpu_algo = CpuAlgo::Auto;
+        }
+    }
+    if let Some(p) = args.get_parsed::<usize>("autotune-probes")? {
+        cfg.autotune.probes = p;
     }
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
@@ -388,9 +406,49 @@ fn print_explain(resp: &matexp::coordinator::request::ExpmResponse, trace_id: ma
         outcomes.push("none recorded (recorder off or ring overwritten)".into());
     }
     println!("cache: {}", outcomes.join(" -> "));
+    // the autotuner's winner table, when a probe pass has run
+    let rows = matexp::linalg::autotune::snapshot();
+    if rows.is_empty() {
+        println!("autotune: off (enable with --autotune)");
+    } else {
+        let table: Vec<String> = rows
+            .iter()
+            .map(|r| format!("n={} -> {} ({:.1} GFLOP/s)", r.n, r.winner.name(), r.gflops))
+            .collect();
+        println!(
+            "autotune: {} ({} probes; strassen plans above n={})",
+            table.join(", "),
+            matexp::linalg::autotune::probes_total(),
+            matexp::linalg::autotune::strassen_threshold()
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "off".into()),
+        );
+    }
 }
 
 fn cmd_experiment(args: &Args, cfg: &MatexpConfig) -> Result<()> {
+    if args.has("ablate-kernels") {
+        let ns: Vec<usize> = match args.get_parsed::<usize>("n")? {
+            Some(n) => vec![n],
+            None => vec![256, 512, 1024],
+        };
+        args.reject_unknown()?;
+        for &n in &ns {
+            let arms = ablations::kernel_tier(n, cfg.seed);
+            print!("{}", report::render_ablation(&format!("A7 kernel tier (n={n})"), &arms));
+            let blocked = arms.iter().find(|a| a.name == "blocked").expect("blocked always runs");
+            let best = arms
+                .iter()
+                .min_by(|x, y| x.wall_s.total_cmp(&y.wall_s))
+                .expect("kernel tier is never empty");
+            println!(
+                "best kernel at n={n}: {} ({:.2}x vs blocked)\n",
+                best.name,
+                blocked.wall_s / best.wall_s.max(f64::MIN_POSITIVE)
+            );
+        }
+        return Ok(());
+    }
     if args.has("ablate-cache") {
         let power: u64 = args.get_parsed_or("power", 1024)?;
         let iters: usize = args.get_parsed_or("iters", 2000)?;

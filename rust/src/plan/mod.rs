@@ -42,6 +42,12 @@ pub enum PlanKind {
     Chained,
     /// Power-tree addition chain (≤ binary multiply count).
     AdditionChain,
+    /// Binary squaring schedule whose multiplies are intended for the
+    /// Strassen fast-multiply kernel (selected above the autotuned
+    /// crossover — see [`crate::linalg::autotune`]). The *schedule* is
+    /// identical to [`PlanKind::Binary`]; the kind marks the dispatch
+    /// intent for logs, caching and metrics.
+    Strassen,
 }
 
 impl std::fmt::Display for PlanKind {
@@ -52,6 +58,7 @@ impl std::fmt::Display for PlanKind {
             PlanKind::BinaryFused => "binary-fused",
             PlanKind::Chained => "chained",
             PlanKind::AdditionChain => "addition-chain",
+            PlanKind::Strassen => "strassen",
         };
         f.write_str(s)
     }
@@ -94,6 +101,16 @@ impl Plan {
     /// Extension: power-tree addition chain (≤ binary multiply count).
     pub fn addition_chain(power: u64) -> Plan {
         chain::addition_chain_plan(power)
+    }
+
+    /// Square-and-multiply schedule tagged for the Strassen fast-multiply
+    /// kernel: same steps as [`Plan::binary`], but the kind tells the
+    /// executor/caches that large multiplies should take the
+    /// trade-multiplies-for-adds path above the tuned crossover.
+    pub fn strassen(power: u64) -> Plan {
+        let mut plan = binary::binary_plan(power, false);
+        plan.kind = PlanKind::Strassen;
+        plan
     }
 
     /// Number of kernel launches (the paper's headline cost).
@@ -225,6 +242,7 @@ mod tests {
             Plan::binary(power, true),
             Plan::chained(power, &[4, 2]),
             Plan::addition_chain(power),
+            Plan::strassen(power),
         ] {
             plan.validate().unwrap();
             assert_eq!(

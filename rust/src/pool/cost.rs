@@ -26,6 +26,40 @@ pub enum DeviceCost {
     /// Micro-calibrated device (CPU): `fixed + 2·n³ · per_flop` seconds
     /// per multiply.
     Measured { fixed_s: f64, per_flop_s: f64 },
+    /// Measured throughput curve (CPU with the autotuner on):
+    /// `(n, seconds-per-multiply)` samples ascending in `n`, from
+    /// [`crate::linalg::autotune::cpu_curve`]. Predictions interpolate
+    /// log-log between samples and extrapolate cubically past the ends —
+    /// unlike [`DeviceCost::Measured`], this sees the kernel crossovers
+    /// (packed → SIMD → Strassen), so LPT stops mispredicting splits at
+    /// sizes far from the single calibration point.
+    Curve { samples: Vec<(usize, f64)> },
+}
+
+/// Seconds for one multiply at size `n` from a measured curve: exact at
+/// samples, log-log interpolation between them, cubic (`2n³`) scaling
+/// from the nearest end sample outside the measured range.
+fn curve_multiply_s(samples: &[(usize, f64)], n: usize) -> f64 {
+    assert!(!samples.is_empty(), "empty cost curve");
+    let x = n.max(1) as f64;
+    let (n0, s0) = samples[0];
+    if x <= n0 as f64 {
+        return s0 * (x / n0.max(1) as f64).powi(3);
+    }
+    let (nl, sl) = samples[samples.len() - 1];
+    if x >= nl as f64 {
+        return sl * (x / nl.max(1) as f64).powi(3);
+    }
+    for w in samples.windows(2) {
+        let (na, sa) = w[0];
+        let (nb, sb) = w[1];
+        if x <= nb as f64 {
+            let t = (x.ln() - (na.max(1) as f64).ln())
+                / ((nb.max(1) as f64).ln() - (na.max(1) as f64).ln());
+            return (sa.max(1e-12).ln() + t * (sb.max(1e-12).ln() - sa.max(1e-12).ln())).exp();
+        }
+    }
+    sl
 }
 
 impl DeviceCost {
@@ -41,6 +75,7 @@ impl DeviceCost {
             DeviceCost::Measured { fixed_s, per_flop_s } => {
                 fixed_s + 2.0 * (t as f64).powi(3) * g as f64 * per_flop_s
             }
+            DeviceCost::Curve { samples } => g as f64 * curve_multiply_s(samples, t),
         }
     }
 
@@ -52,6 +87,7 @@ impl DeviceCost {
             DeviceCost::Measured { fixed_s, per_flop_s } => {
                 fixed_s + 2.0 * (n as f64).powi(3) * per_flop_s
             }
+            DeviceCost::Curve { samples } => curve_multiply_s(samples, n),
         }
     }
 
@@ -60,7 +96,7 @@ impl DeviceCost {
     pub fn request_s(&self, n: usize, multiplies: usize) -> f64 {
         let transfers = match self {
             DeviceCost::Model(m) => m.transfer_time(n, 2),
-            DeviceCost::Measured { .. } => 0.0,
+            DeviceCost::Measured { .. } | DeviceCost::Curve { .. } => 0.0,
         };
         self.resident_multiply_s(n) * multiplies as f64 + transfers
     }
@@ -279,6 +315,40 @@ mod tests {
             }
             other => panic!("expected shard at n=1024, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn curve_is_exact_at_samples_and_monotone_between() {
+        let c = DeviceCost::Curve {
+            samples: vec![(64, 1e-4), (128, 8e-4), (256, 6.4e-3)],
+        };
+        assert!((c.resident_multiply_s(64) - 1e-4).abs() < 1e-12);
+        assert!((c.resident_multiply_s(256) - 6.4e-3).abs() < 1e-12);
+        // between samples: strictly between the endpoints
+        let mid = c.resident_multiply_s(96);
+        assert!(mid > 1e-4 && mid < 8e-4, "{mid}");
+        // outside the range: cubic scaling from the end samples
+        let below = c.resident_multiply_s(32);
+        assert!((below - 1e-4 / 8.0).abs() < 1e-9, "{below}");
+        let above = c.resident_multiply_s(512);
+        assert!((above - 6.4e-3 * 8.0).abs() < 1e-6, "{above}");
+        // tile jobs scale with the multiply count
+        let one = c.tile_job_s(64, 1);
+        assert!((c.tile_job_s(64, 4) - 4.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_feeds_lpt_like_any_other_cost() {
+        // a curve 3x slower than the flat-cost device: LPT sides with the
+        // flat device ~3:1, same as the measured/measured case above
+        let curve = DeviceCost::Curve {
+            samples: vec![(32, 2.0 * 32f64.powi(3) * 3e-9), (128, 2.0 * 128f64.powi(3) * 3e-9)],
+        };
+        let costs = [cpu(1e-9), curve];
+        let jobs: Vec<(usize, usize)> = (0..16).map(|_| (64, 8)).collect();
+        let assignment = assign_requests(&costs, &jobs);
+        let fast = assignment.iter().filter(|&&d| d == 0).count();
+        assert!((11..=13).contains(&fast), "fast device got {fast}/16");
     }
 
     #[test]

@@ -143,7 +143,12 @@ impl DevicePool {
     }
 
     /// One cost model per device: the analytic C2050 model for sim
-    /// devices, a measured probe for CPU devices.
+    /// devices, a measured probe for CPU devices. When the runtime
+    /// autotuner has already recorded a per-size throughput curve
+    /// ([`crate::linalg::autotune::cpu_curve`]), CPU devices use it
+    /// instead of the single-point extrapolation — the calibration probe
+    /// still runs (it doubles as the device-thread warmup and keeps the
+    /// job accounting identical either way).
     fn calibrate(&self, kinds: &[PoolDeviceKind]) -> Result<Vec<DeviceCost>> {
         let mut costs = Vec::with_capacity(kinds.len());
         for (idx, kind) in kinds.iter().enumerate() {
@@ -172,11 +177,16 @@ impl DevicePool {
                                 self.names[idx]
                             ))
                         })??;
-                    let flops = 2.0 * (CALIBRATION_TILE as f64).powi(3);
-                    costs.push(DeviceCost::Measured {
-                        fixed_s: 0.0,
-                        per_flop_s: secs / flops,
-                    });
+                    let curve = crate::linalg::autotune::cpu_curve();
+                    if curve.len() >= 2 {
+                        costs.push(DeviceCost::Curve { samples: curve });
+                    } else {
+                        let flops = 2.0 * (CALIBRATION_TILE as f64).powi(3);
+                        costs.push(DeviceCost::Measured {
+                            fixed_s: 0.0,
+                            per_flop_s: secs / flops,
+                        });
+                    }
                 }
             }
         }

@@ -137,6 +137,21 @@ impl ArenaMat {
     pub fn matrix_mut(&mut self) -> &mut Matrix {
         self.mat.as_mut().expect("present until drop")
     }
+
+    /// Take the matrix out, detaching it from the arena: the allocation
+    /// leaves with the caller instead of returning to the free list, and
+    /// its bytes stop counting as live. The wire edge uses this to decode
+    /// a request payload into a recycled buffer and then hand the engine
+    /// an owned [`Matrix`].
+    pub fn into_matrix(mut self) -> Matrix {
+        let m = self.mat.take().expect("present until drop");
+        if let Some(inner) = self.arena.upgrade() {
+            let bytes = (m.data().len() * std::mem::size_of::<f32>()) as u64;
+            let mut inner = inner.borrow_mut();
+            inner.live_bytes = inner.live_bytes.saturating_sub(bytes);
+        }
+        m
+    }
 }
 
 impl std::ops::Deref for ArenaMat {
@@ -221,6 +236,23 @@ mod tests {
         let held: Vec<ArenaMat> = (0..20).map(|_| arena.alloc(4)).collect();
         drop(held);
         assert!(arena.free_buffers() <= FREE_PER_SIZE_CAP);
+    }
+
+    #[test]
+    fn into_matrix_detaches_without_recycling() {
+        let arena = BufferArena::new();
+        drop(arena.alloc(4)); // seed the free list
+        let mut held = arena.alloc(4); // recycled allocation
+        held.matrix_mut().set(0, 0, 7.0);
+        let m = held.into_matrix();
+        assert_eq!(m.get(0, 0), 7.0);
+        // the allocation left with the caller: nothing back on the free
+        // list, nothing still counted live
+        assert_eq!(arena.free_buffers(), 0);
+        let stats = arena.take();
+        assert_eq!(stats.buffers_recycled, 1);
+        drop(m);
+        assert_eq!(arena.free_buffers(), 0);
     }
 
     #[test]

@@ -199,6 +199,56 @@ fn push_f32s(out: &mut Vec<u8>, data: &[f32]) {
     }
 }
 
+/// The fixed-field prefix of an expm request payload, decoded without
+/// touching the matrix bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpmHeader {
+    /// Client-chosen request id.
+    pub id: u64,
+    /// The exponent `N`.
+    pub power: u64,
+    /// Matrix side length.
+    pub n: usize,
+    /// Execution method the server should use.
+    pub method: Method,
+}
+
+/// Split an expm request payload into its decoded prefix and the raw
+/// little-endian matrix bytes (length-checked: exactly `n·n·4`). This is
+/// the zero-copy entry the server's wire edge uses — the matrix bytes can
+/// be decoded with [`fill_f32s`] straight into a recycled arena buffer
+/// instead of a fresh `Vec<f32>`. [`Frame::decode`] delegates here so
+/// there is exactly one parser for the layout.
+pub fn decode_expm_prefix(payload: &[u8]) -> Result<(ExpmHeader, &[u8])> {
+    let mut c = Cursor::new(payload);
+    let id = c.u64("id")?;
+    let power = c.u64("power")?;
+    let n = c.u32("n")? as usize;
+    let mlen = c.u8("method length")? as usize;
+    let method = Method::from_str(c.str(mlen, "method")?)?;
+    let count = n
+        .checked_mul(n)
+        .ok_or_else(|| MatexpError::Service(format!("frame: matrix side {n} overflows")))?;
+    let bytes = c.take(
+        count
+            .checked_mul(4)
+            .ok_or_else(|| MatexpError::Service("frame: matrix too large".into()))?,
+        "matrix",
+    )?;
+    c.finish(KIND_EXPM)?;
+    Ok((ExpmHeader { id, power, n, method }, bytes))
+}
+
+/// Decode little-endian `f32` bytes into a caller-provided buffer
+/// (`bytes.len()` must be exactly `4 · out.len()` — guaranteed when
+/// `bytes` came from [`decode_expm_prefix`] and `out` is `n·n` long).
+pub fn fill_f32s(bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(bytes.len(), out.len() * 4, "fill_f32s: length mismatch");
+    for (dst, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+    }
+}
+
 impl Frame {
     /// Kind tag this frame encodes as.
     pub fn kind(&self) -> u8 {
@@ -275,13 +325,18 @@ impl Frame {
         let mut c = Cursor::new(payload);
         let frame = match kind {
             KIND_EXPM => {
-                let id = c.u64("id")?;
-                let power = c.u64("power")?;
-                let n = c.u32("n")? as usize;
-                let mlen = c.u8("method length")? as usize;
-                let method = Method::from_str(c.str(mlen, "method")?)?;
-                let matrix = c.f32_matrix(n, "matrix")?;
-                Frame::Expm { id, n, power, method, matrix }
+                // one parser for the layout: the zero-copy prefix
+                // splitter, followed by a fresh-buffer fill
+                let (h, bytes) = decode_expm_prefix(payload)?;
+                let mut matrix = vec![0.0f32; h.n * h.n];
+                fill_f32s(bytes, &mut matrix);
+                return Ok(Frame::Expm {
+                    id: h.id,
+                    n: h.n,
+                    power: h.power,
+                    method: h.method,
+                    matrix,
+                });
             }
             KIND_EXPM_OK => {
                 let id = c.u64("id")?;
@@ -530,6 +585,28 @@ mod tests {
         assert_eq!(salvage_id(kind, &payload), Some(1));
         // and the unpatched encoding still decodes
         assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn expm_prefix_split_matches_full_decode() {
+        let f = Frame::Expm {
+            id: 11,
+            n: 2,
+            power: 9,
+            method: Method::Ours,
+            matrix: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let bytes = f.encode();
+        let (kind, payload) = read_raw(&mut &bytes[..], MAX_PAYLOAD).unwrap();
+        assert_eq!(kind, KIND_EXPM);
+        let (h, raw) = decode_expm_prefix(&payload).unwrap();
+        assert_eq!(h, ExpmHeader { id: 11, power: 9, n: 2, method: Method::Ours });
+        assert_eq!(raw.len(), 4 * 4);
+        let mut out = [0.0f32; 4];
+        fill_f32s(raw, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0]);
+        // the prefix splitter enforces exact payload length too
+        assert!(decode_expm_prefix(&payload[..payload.len() - 1]).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::coordinator::service::ServiceHandle;
 use crate::error::{MatexpError, Result};
 use crate::exec::{JobReply, Submission};
 use crate::linalg::matrix::Matrix;
+use crate::runtime::arena::BufferArena;
 use crate::server::frame::{self, Frame};
 use crate::server::proto::{MetricsFormat, Payload, WireRequest, WireResponse};
 use crate::trace;
@@ -217,16 +218,19 @@ fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
     let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
     let metrics = service.metrics_shared();
     let (done_tx, done_rx) = channel::<(u64, JobReply)>();
+    // result buffers flow back from the pump to the reader's wire arena,
+    // so the next frame decode reuses them instead of allocating fresh
+    let (recycle_tx, recycle_rx) = channel::<Vec<f32>>();
     let pump = {
         let writer = Arc::clone(&writer);
         let inflight = Arc::clone(&inflight);
         let metrics = Arc::clone(&metrics);
         std::thread::Builder::new()
             .name("matexp-conn-pump".into())
-            .spawn(move || completion_pump(done_rx, &inflight, &writer, &metrics))
+            .spawn(move || completion_pump(done_rx, &inflight, &writer, &metrics, &recycle_tx))
             .map_err(MatexpError::Io)?
     };
-    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx, &metrics);
+    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx, &metrics, &recycle_rx);
     // dropping the reader's sender lets the pump exit once every entry the
     // service still holds (clones of done_tx) has been completed
     drop(done_tx);
@@ -241,7 +245,12 @@ fn read_loop(
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
+    recycle_rx: &Receiver<Vec<f32>>,
 ) -> Result<()> {
+    // per-connection wire arena: frame payloads decode straight into
+    // recycled result buffers (the arena is !Send and stays on this
+    // thread; the pump feeds it through `recycle_rx`)
+    let wire_arena = BufferArena::new();
     loop {
         // one-byte peek dispatches the codec: no JSON line (nor any ASCII
         // text) starts with the frame magic's first byte
@@ -251,7 +260,16 @@ fn read_loop(
             Err(e) => return Err(e.into()),
         };
         if first == frame::MAGIC[0] {
-            read_one_frame(service, &mut reader, writer, inflight, done_tx, metrics)?;
+            read_one_frame(
+                service,
+                &mut reader,
+                writer,
+                inflight,
+                done_tx,
+                metrics,
+                &wire_arena,
+                recycle_rx,
+            )?;
         } else {
             let mut line = String::new();
             if reader.read_line(&mut line)? == 0 {
@@ -333,6 +351,12 @@ fn read_one_line(
 /// propagate the error so the connection closes. Content damage inside a
 /// well-delimited payload gets an error frame (with the id salvaged from
 /// the payload prefix when possible) and the connection keeps serving.
+///
+/// Expm requests take the zero-copy path: the payload prefix is split off
+/// with [`frame::decode_expm_prefix`] and the matrix bytes land directly
+/// in a `wire_arena` buffer — recycled from an earlier reply whenever one
+/// is pooled — instead of an always-fresh `Vec<f32>`.
+#[allow(clippy::too_many_arguments)]
 fn read_one_frame(
     service: &ServiceHandle,
     reader: &mut BufReader<TcpStream>,
@@ -340,6 +364,8 @@ fn read_one_frame(
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
+    wire_arena: &BufferArena,
+    recycle_rx: &Receiver<Vec<f32>>,
 ) -> Result<()> {
     let (kind, payload) = match frame::read_raw(reader, frame::MAX_PAYLOAD) {
         Ok(raw) => raw,
@@ -355,25 +381,45 @@ fn read_one_frame(
     // decode cost starts once the payload is fully off the socket (the
     // read above is network wait, not codec work)
     let decode_start = trace::now_us();
-    match Frame::decode(kind, &payload) {
-        Ok(Frame::Expm { id, n, power, method, matrix }) => {
-            match Matrix::from_vec(n, matrix) {
-                Ok(m) => submit_pipelined(
+    if kind == frame::KIND_EXPM {
+        return match frame::decode_expm_prefix(&payload) {
+            Ok((h, bytes)) => {
+                // pool any result buffers the pump handed back since the
+                // last request, so this decode can reuse one
+                for buf in recycle_rx.try_iter() {
+                    let side = (buf.len() as f64).sqrt().round() as usize;
+                    if let Ok(m) = Matrix::from_vec(side, buf) {
+                        drop(wire_arena.adopt(m)); // drop → free list
+                    }
+                }
+                let mut out = wire_arena.alloc(h.n);
+                frame::fill_f32s(bytes, out.matrix_mut().data_mut());
+                if wire_arena.take().buffers_recycled > 0 {
+                    metrics
+                        .wire_bytes_recycled_total
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                }
+                submit_pipelined(
                     service,
-                    m,
-                    power,
-                    method,
-                    id,
+                    out.into_matrix(),
+                    h.power,
+                    h.method,
+                    h.id,
                     ReplyWire::Frame,
                     decode_start,
                     writer,
                     inflight,
                     done_tx,
                     metrics,
-                ),
-                Err(e) => write_frame(writer, &Frame::from_error(&e, Some(id)), metrics),
+                )
             }
-        }
+            Err(e) => {
+                let id = frame::salvage_id(kind, &payload);
+                write_frame(writer, &Frame::from_error(&e, id), metrics)
+            }
+        };
+    }
+    match Frame::decode(kind, &payload) {
         // a client has no business sending reply frames; answer and move on
         Ok(other) => {
             let e = MatexpError::Service(format!(
@@ -539,6 +585,7 @@ fn completion_pump(
     inflight: &Mutex<HashMap<u64, InflightEntry>>,
     writer: &Mutex<TcpStream>,
     metrics: &Metrics,
+    recycle: &Sender<Vec<f32>>,
 ) {
     while let Ok((sid, reply)) = done_rx.recv() {
         let Some(entry) = inflight.lock().expect("inflight map poisoned").remove(&sid) else {
@@ -569,7 +616,14 @@ fn completion_pump(
                     stats: r.stats.into(),
                     result: r.result.into_vec(),
                 };
-                write_frame(writer, &f, metrics)
+                let wrote = write_frame(writer, &f, metrics);
+                // encode copied the bytes out; hand the buffer back to
+                // the reader's wire arena for the next request decode
+                // (best-effort — the reader may already be gone)
+                if let Frame::ExpmOk { result, .. } = f {
+                    let _ = recycle.send(result);
+                }
+                wrote
             }
             (ReplyWire::Frame, Err(e)) => {
                 write_frame(writer, &Frame::from_error(&e, Some(client_id)), metrics)

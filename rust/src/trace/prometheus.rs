@@ -60,6 +60,12 @@ pub fn render(snap: &MetricsSnapshot) -> String {
     counter(&mut out, "wire_bytes_in_total", "Wire bytes read off client connections.", snap.wire_bytes_in_total);
     counter(&mut out, "wire_bytes_out_total", "Wire bytes written to client connections.", snap.wire_bytes_out_total);
     counter(&mut out, "frames_total", "Binary frames handled by the TCP front-end.", snap.frames_total);
+    counter(
+        &mut out,
+        "wire_bytes_recycled_total",
+        "Request payload bytes decoded into recycled wire-arena buffers.",
+        snap.wire_bytes_recycled_total,
+    );
     counter(&mut out, "steals_total", "Cross-queue steals in the device pool.", snap.steals_total);
 
     counter(&mut out, "cache_plan_hits_total", "Plan-cache hits.", snap.cache.plan_hits);

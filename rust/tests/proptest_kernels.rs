@@ -1,0 +1,144 @@
+//! Property-based parity for the raw-speed CPU kernel tier: the packed /
+//! simd microkernels and the Strassen recursion against the naive oracle
+//! at awkward sizes (odd n, non-multiples of the pack widths), the
+//! Strassen *plan* against the binary plan through a real engine, and
+//! determinism of the autotuner's selection logic.
+//!
+//! This runs as its own test binary, so the process-global autotuner
+//! table it touches is isolated from the library's unit tests.
+
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::matrix::Matrix;
+use matexp::linalg::{autotune, naive, packed, strassen, CpuAlgo};
+use matexp::plan::Plan;
+use matexp::runtime::Engine;
+use matexp::util::prop::property;
+
+#[test]
+fn packed_kernels_match_naive_at_awkward_sizes() {
+    property("packed/simd parity vs naive", 48, |g| {
+        // deliberately hits 1, odd sizes, and non-multiples of MR/NR
+        let n = g.usize(1, 40);
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(n, seed);
+        let b = Matrix::random(n, seed ^ 0xABCD);
+        let want = naive::matmul_naive(&a, &b);
+        let packed = packed::matmul_packed(&a, &b);
+        assert!(
+            packed.approx_eq(&want, 1e-4, 1e-4),
+            "packed diverged at n={n}: {}",
+            packed.max_abs_diff(&want)
+        );
+        let simd = packed::matmul_simd(&a, &b);
+        assert!(
+            simd.approx_eq(&want, 1e-4, 1e-4),
+            "simd diverged at n={n}: {}",
+            simd.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn strassen_matches_naive_below_and_above_the_crossover() {
+    property("strassen parity vs naive", 32, |g| {
+        let n = g.usize(1, 32);
+        let crossover = *g.choose(&[4usize, 8, 16]);
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(n, seed);
+        let b = Matrix::random(n, seed ^ 0x5151);
+        let want = naive::matmul_naive(&a, &b);
+        let got = strassen::matmul_strassen_with(&a, &b, crossover);
+        assert!(
+            got.approx_eq(&want, 1e-4, 1e-4),
+            "strassen diverged at n={n} crossover={crossover}: {}",
+            got.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn strassen_plan_matches_the_binary_plan_end_to_end() {
+    property("strassen plan parity", 12, |g| {
+        let mut engine = Engine::cpu(CpuAlgo::Blocked);
+        let n = g.usize(3, 12);
+        let power = g.u64(1, 24);
+        let a = Matrix::random_spectral(n, 0.9, g.u64(0, u64::MAX / 2));
+        let binary = engine
+            .run(Submission::expm(a.clone(), power).plan(Plan::binary(power, false)))
+            .expect("binary plan executes");
+        let strassen_kind = engine
+            .run(Submission::expm(a, power).plan(Plan::strassen(power)))
+            .expect("strassen plan executes");
+        assert!(
+            strassen_kind.result.approx_eq(&binary.result, 1e-4, 1e-4),
+            "plans diverged at n={n} N={power}: {}",
+            strassen_kind.result.max_abs_diff(&binary.result)
+        );
+        assert_eq!(
+            strassen_kind.stats.multiplies, binary.stats.multiplies,
+            "the strassen plan keeps the binary schedule"
+        );
+    });
+}
+
+#[test]
+fn autotuner_selection_is_deterministic() {
+    property("select_winner determinism", 96, |g| {
+        let algos = [
+            CpuAlgo::Blocked,
+            CpuAlgo::Ikj,
+            CpuAlgo::Threaded,
+            CpuAlgo::Packed,
+            CpuAlgo::Simd,
+            CpuAlgo::Strassen,
+        ];
+        let count = g.usize(0, algos.len() - 1);
+        let measured: Vec<(CpuAlgo, f64)> = (0..=count)
+            .map(|i| {
+                // mix usable timings with unusable ones (zero / negative /
+                // non-finite) the selector must skip
+                let secs = match g.usize(0, 4) {
+                    0 => f64::NAN,
+                    1 => -1.0,
+                    2 => 0.0,
+                    _ => g.u64(1, 1_000_000) as f64 * 1e-9,
+                };
+                (algos[i], secs)
+            })
+            .collect();
+        let first = autotune::select_winner(&measured);
+        assert_eq!(first, autotune::select_winner(&measured), "same input, same winner");
+        if let Some((_, secs)) = first {
+            let best_usable = measured
+                .iter()
+                .map(|&(_, s)| s)
+                .filter(|s| s.is_finite() && *s > 0.0)
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(secs, best_usable, "winner carries the fastest usable timing");
+        } else {
+            assert!(
+                measured.iter().all(|&(_, s)| !s.is_finite() || s <= 0.0),
+                "no winner only when nothing was usable: {measured:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn autotuner_table_is_deterministic_over_fixed_probe_data() {
+    property("record determinism", 24, |g| {
+        // unique-per-case odd sizes well away from any real probe sweep
+        let n = 50_001 + 2 * g.usize(0, 499);
+        let secs = g.u64(1, 1_000_000) as f64 * 1e-9;
+        let measured = [
+            (CpuAlgo::Blocked, secs * 3.0),
+            (CpuAlgo::Packed, secs),
+            (CpuAlgo::Strassen, secs * 2.0),
+        ];
+        let first = autotune::record(n, &measured).expect("usable timings yield a row");
+        let second = autotune::record(n, &measured).expect("usable timings yield a row");
+        assert_eq!(first, second, "same probe data, same table row");
+        assert_eq!(first.winner, CpuAlgo::Packed);
+        assert_eq!(autotune::best_for(n), CpuAlgo::Packed);
+    });
+}
