@@ -33,8 +33,15 @@ use crate::util::json::Json;
 
 /// Identifier of the snapshot format written by [`snapshot`]. Version 2
 /// added the per-stage latency breakdown (`modes[].stages`), sourced from
-/// the server's trace layer via the stats stage fields.
-pub const SNAPSHOT_SCHEMA: &str = "matexp-loadtest/2";
+/// the server's trace layer via the stats stage fields. Version 3 added
+/// the `members` block: per-member routed-request counts fetched from a
+/// cluster router (empty when the target is a single server), the
+/// affinity evidence a router benchmark is committed with.
+pub const SNAPSHOT_SCHEMA: &str = "matexp-loadtest/3";
+
+/// The previous snapshot schema, still accepted by [`validate_snapshot`]
+/// so committed `BENCH_7`/`BENCH_8` artifacts keep gating CI.
+pub const SNAPSHOT_SCHEMA_V2: &str = "matexp-loadtest/2";
 
 /// Stage names of the per-request breakdown, in snapshot order (matching
 /// the stats fields `queue_us` / `plan_us` / `prepare_us` / `launch_us` /
@@ -332,6 +339,40 @@ fn run_client(
     })
 }
 
+/// One cluster member's share of a routed run (snapshot `members` rows).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemberSpread {
+    /// Member address as the router names it.
+    pub member: String,
+    /// Requests the router sent it (affinity + least-load), lifetime.
+    pub routed: u64,
+}
+
+/// Ask whatever serves `addr` for its per-member routed counts: a cluster
+/// router's status/metrics document carries a `members` array, a plain
+/// server's does not — so this returns the spread behind a router and an
+/// empty vec (not an error) against a single server or on any wire
+/// failure. Drives the snapshot's `members` block.
+pub fn fetch_members(addr: &str) -> Vec<MemberSpread> {
+    let Ok(mut client) = MatexpClient::connect(addr) else {
+        return Vec::new();
+    };
+    let Ok(doc) = client.metrics() else {
+        return Vec::new();
+    };
+    let Some(rows) = doc.get("members").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    rows.iter()
+        .filter_map(|m| {
+            Some(MemberSpread {
+                member: m.get("member").and_then(Json::as_str)?.to_string(),
+                routed: m.get("routed").and_then(Json::as_u64)?,
+            })
+        })
+        .collect()
+}
+
 /// Round-trip codec timing at one matrix size: the JSON/base64 line codec
 /// vs the binary frame codec, encode + decode of one full expm reply.
 #[derive(Clone, Copy, Debug)]
@@ -402,11 +443,14 @@ pub fn codec_roundtrip(n: usize, iters: usize) -> CodecBench {
 }
 
 /// Serialize a finished run into the persisted `BENCH_<pr>.json` shape.
+/// `members` is the per-member routed spread from [`fetch_members`]
+/// (empty against a single server).
 pub fn snapshot(
     bench_id: u64,
     cfg: &LoadtestConfig,
     modes: &[ModeReport],
     codec: &CodecBench,
+    members: &[MemberSpread],
 ) -> Json {
     let mode_rows: Vec<Json> = modes
         .iter()
@@ -463,6 +507,15 @@ pub fn snapshot(
         ),
         ("modes", Json::Arr(mode_rows)),
         (
+            "members",
+            Json::Arr(
+                members
+                    .iter()
+                    .map(|m| json_obj![("member", m.member.as_str()), ("routed", m.routed)])
+                    .collect()
+            )
+        ),
+        (
             "codec_roundtrip",
             json_obj![
                 ("n", codec.n),
@@ -479,9 +532,13 @@ pub fn snapshot(
 /// silently polluting the trajectory).
 pub fn validate_snapshot(v: &Json) -> Result<()> {
     let fail = |why: &str| Err(MatexpError::Config(format!("malformed loadtest snapshot: {why}")));
-    if v.get("schema").and_then(Json::as_str) != Some(SNAPSHOT_SCHEMA) {
-        return fail(&format!("schema must be {SNAPSHOT_SCHEMA:?}"));
-    }
+    let v3 = match v.get("schema").and_then(Json::as_str) {
+        Some(SNAPSHOT_SCHEMA) => true,
+        Some(SNAPSHOT_SCHEMA_V2) => false,
+        _ => {
+            return fail(&format!("schema must be {SNAPSHOT_SCHEMA:?} (or {SNAPSHOT_SCHEMA_V2:?})"))
+        }
+    };
     if v.get("bench_id").and_then(Json::as_u64).is_none() {
         return fail("missing numeric bench_id");
     }
@@ -527,6 +584,23 @@ pub fn validate_snapshot(v: &Json) -> Result<()> {
                         ))
                     }
                 }
+            }
+        }
+    }
+    // schema v3: the members block is required (empty is fine — it means
+    // "target was a single server"); each row pairs an address with its
+    // routed count
+    if v3 {
+        let members = match v.get("members").and_then(Json::as_arr) {
+            Some(m) => m,
+            None => return fail("members must be an array (schema v3)"),
+        };
+        for (i, m) in members.iter().enumerate() {
+            if m.get("member").and_then(Json::as_str).is_none() {
+                return fail(&format!("members[{i}] missing member address"));
+            }
+            if m.get("routed").and_then(Json::as_u64).is_none() {
+                return fail(&format!("members[{i}] missing numeric routed count"));
             }
         }
     }
@@ -613,21 +687,62 @@ mod tests {
         }
     }
 
+    fn spread() -> Vec<MemberSpread> {
+        vec![
+            MemberSpread { member: "127.0.0.1:9401".into(), routed: 70 },
+            MemberSpread { member: "127.0.0.1:9402".into(), routed: 30 },
+        ]
+    }
+
     #[test]
     fn snapshot_roundtrips_and_validates() {
         let cfg = LoadtestConfig::default();
         let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
-        let v = snapshot(6, &cfg, &[report(WireMode::Json), report(WireMode::Binary)], &codec);
+        let v = snapshot(
+            9,
+            &cfg,
+            &[report(WireMode::Json), report(WireMode::Binary)],
+            &codec,
+            &spread(),
+        );
         validate_snapshot(&v).unwrap();
         // survives a serialize → parse round trip (what CI actually reads)
         let reparsed = Json::parse(&v.to_string()).unwrap();
         validate_snapshot(&reparsed).unwrap();
         let text = v.to_string();
-        assert!(text.contains("\"schema\":\"matexp-loadtest/2\""), "{text}");
+        assert!(text.contains("\"schema\":\"matexp-loadtest/3\""), "{text}");
         assert!(text.contains("\"p99_s\""), "{text}");
-        // v2 carries the per-stage breakdown for every mode
+        // v2 carried the per-stage breakdown for every mode
         assert!(text.contains("\"stages\""), "{text}");
         assert!(text.contains("\"stage\":\"launch\""), "{text}");
+        // v3 carries the per-member routed spread
+        assert!(text.contains("\"member\":\"127.0.0.1:9401\""), "{text}");
+        assert!(text.contains("\"routed\":70"), "{text}");
+    }
+
+    #[test]
+    fn members_block_rules() {
+        let cfg = LoadtestConfig::default();
+        let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
+        // empty spread (single-server target) is a valid v3 snapshot
+        let single = snapshot(9, &cfg, &[report(WireMode::Json)], &codec, &[]);
+        validate_snapshot(&single).unwrap();
+        // a v3 snapshot missing the block entirely is malformed…
+        let routed = snapshot(9, &cfg, &[report(WireMode::Json)], &codec, &spread());
+        let stripped = routed
+            .to_string()
+            .replace("\"members\":[{\"member\":\"127.0.0.1:9401\"", "\"membres\":[{\"member\":\"127.0.0.1:9401\"");
+        assert_ne!(stripped, routed.to_string(), "replace must hit");
+        assert!(validate_snapshot(&Json::parse(&stripped).unwrap()).is_err());
+        // …as is a member row without its routed count
+        let unrouted = routed.to_string().replace("\"routed\":70", "\"route\":70");
+        assert_ne!(unrouted, routed.to_string(), "replace must hit");
+        assert!(validate_snapshot(&Json::parse(&unrouted).unwrap()).is_err());
+        // a committed v2 snapshot (no members block) still validates
+        let v2 = single
+            .to_string()
+            .replace("\"schema\":\"matexp-loadtest/3\"", "\"schema\":\"matexp-loadtest/2\"");
+        validate_snapshot(&Json::parse(&v2).unwrap()).unwrap();
     }
 
     #[test]
@@ -646,7 +761,7 @@ mod tests {
         // a snapshot whose mode rows lack the stage table is malformed v2
         let cfg = LoadtestConfig::default();
         let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
-        let good = snapshot(7, &cfg, &[report(WireMode::Json)], &codec);
+        let good = snapshot(7, &cfg, &[report(WireMode::Json)], &codec, &[]);
         let stripped = good.to_string().replace("\"stage\":\"launch\"", "\"stage\":\"lunch\"");
         assert_ne!(stripped, good.to_string(), "replace must hit");
         assert!(validate_snapshot(&Json::parse(&stripped).unwrap()).is_err());
@@ -656,13 +771,13 @@ mod tests {
     fn validate_rejects_damage() {
         let cfg = LoadtestConfig::default();
         let codec = CodecBench { n: 64, json_b64_s: 1e-3, frame_s: 1e-4, speedup: 10.0 };
-        let good = snapshot(6, &cfg, &[report(WireMode::Json)], &codec);
+        let good = snapshot(6, &cfg, &[report(WireMode::Json)], &codec, &[]);
 
         assert!(validate_snapshot(&Json::parse("{}").unwrap()).is_err());
         assert!(validate_snapshot(&Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
 
         // empty modes
-        assert!(validate_snapshot(&snapshot(6, &cfg, &[], &codec)).is_err());
+        assert!(validate_snapshot(&snapshot(6, &cfg, &[], &codec, &[])).is_err());
 
         // a zeroed p50 (a run that measured nothing) is malformed
         let zeroed = good.to_string().replace("\"p50_s\":0.01", "\"p50_s\":0");
@@ -672,9 +787,8 @@ mod tests {
         // a NaN speedup (codec bench never ran) is malformed
         let mut bad_codec = codec;
         bad_codec.speedup = 0.0;
-        assert!(
-            validate_snapshot(&snapshot(6, &cfg, &[report(WireMode::Json)], &bad_codec)).is_err()
-        );
+        assert!(validate_snapshot(&snapshot(6, &cfg, &[report(WireMode::Json)], &bad_codec, &[]))
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Rendezvous (highest-random-weight) hashing over the result-cache
+//! content digest — the placement function of the cluster tier.
+//!
+//! The router's whole reason to exist is cache affinity: the paper's
+//! amortization argument (plan once, serve many) only compounds across
+//! machines if every repetition of a hot matrix lands on the node whose
+//! result cache already holds it. Rendezvous hashing gives exactly that
+//! with no coordination state: every `(digest, member)` pair gets a
+//! deterministic pseudo-random score, and a digest is **owned** by the
+//! member with the highest score. Two properties make it the right
+//! choice over a mod-N ring:
+//!
+//! - **Minimal disruption.** Removing a member only moves the digests it
+//!   owned (their second-highest scorer takes over — every other
+//!   digest's argmax is untouched). Adding a member steals an expected
+//!   `1/(N+1)` of the keyspace, uniformly from everyone. A ring with
+//!   naive `digest % N` placement reshuffles almost everything on any
+//!   membership change, flushing every warm cache in the cluster.
+//! - **Statelessness.** The owner is a pure function of the digest and
+//!   the live member set, so the router never persists a placement table
+//!   and two routers in front of the same members agree by construction.
+//!
+//! The digest is the same 128-bit dual-FNV content digest the result
+//! cache keys on ([`crate::cache::ResultKey`]) — routing and caching
+//! hash *the same bytes*, so "lands on the warm node" is exact, not
+//! probabilistic. Scores mix the member name into the digest with an
+//! FNV-1a pass and a splitmix64 finalizer; the finalizer's avalanche is
+//! what makes per-member scores independent enough for the `1/N`
+//! balance property (a bare FNV of `digest || name` correlates scores
+//! across members that share a prefix).
+
+/// FNV-1a offset basis (the same constant the result-cache digest uses).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Score one `(digest, member)` pair. Higher wins; the member with the
+/// top score over the live set owns the digest.
+///
+/// Deterministic across processes and platforms (pure integer mixing,
+/// no hasher randomization), so a router restart — or a second router —
+/// reproduces the same placement for the same member set.
+pub fn score(digest: (u64, u64), member: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in member.as_bytes() {
+        h = (h ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+    }
+    // fold both digest lanes in at different rotations so the pair acts
+    // as a full 128-bit key, then avalanche with splitmix64's finalizer
+    let mut x = h ^ digest.0.rotate_left(17) ^ digest.1.rotate_left(43);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Index of the member that owns `digest` — the argmax of
+/// [`score`] over `members`, ties broken by name so the choice is total.
+/// `None` when `members` is empty.
+pub fn owner(digest: (u64, u64), members: &[&str]) -> Option<usize> {
+    let mut best: Option<(u64, &str, usize)> = None;
+    for (i, m) in members.iter().enumerate() {
+        let s = score(digest, m);
+        let wins = match best {
+            None => true,
+            // ties (astronomically rare) break toward the smaller name so
+            // the choice is a total order, not iteration-order luck
+            Some((bs, bm, _)) => s > bs || (s == bs && *m < bm),
+        };
+        if wins {
+            best = Some((s, m, i));
+        }
+    }
+    best.map(|(_, _, i)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rand::XorShift64;
+    use crate::util::prop::property;
+
+    fn digests(count: usize, seed: u64) -> Vec<(u64, u64)> {
+        let mut rng = XorShift64::new(seed);
+        (0..count).map(|_| (rng.next_u64(), rng.next_u64())).collect()
+    }
+
+    #[test]
+    fn owner_is_deterministic_and_total() {
+        let members = ["a:1", "b:2", "c:3"];
+        for d in digests(100, 7) {
+            let first = owner(d, &members).unwrap();
+            assert_eq!(owner(d, &members), Some(first));
+            assert!(first < members.len());
+        }
+        assert_eq!(owner((1, 2), &[]), None);
+    }
+
+    #[test]
+    fn removal_moves_only_the_removed_members_digests() {
+        // the defining HRW property, checked exhaustively: dropping one
+        // member never changes the owner of a digest it did not own
+        let members = ["n0:1", "n1:1", "n2:1", "n3:1", "n4:1"];
+        for d in digests(500, 11) {
+            let before = owner(d, &members).unwrap();
+            for gone in 0..members.len() {
+                if gone == before {
+                    continue;
+                }
+                let survivors: Vec<&str> =
+                    members.iter().enumerate().filter(|(i, _)| *i != gone).map(|(_, m)| *m).collect();
+                assert_eq!(survivors[owner(d, &survivors).unwrap()], members[before]);
+            }
+        }
+    }
+
+    #[test]
+    fn join_moves_about_one_over_n() {
+        // adding a 6th member to 5 should steal ~1/6 of the keyspace,
+        // uniformly: measure over a big digest sample
+        let five = ["n0:1", "n1:1", "n2:1", "n3:1", "n4:1"];
+        let six = ["n0:1", "n1:1", "n2:1", "n3:1", "n4:1", "n5:1"];
+        let sample = digests(4000, 23);
+        let moved = sample
+            .iter()
+            .filter(|d| five[owner(**d, &five).unwrap()] != six[owner(**d, &six).unwrap()])
+            .count();
+        let frac = moved as f64 / sample.len() as f64;
+        assert!((0.10..=0.25).contains(&frac), "moved fraction {frac} far from 1/6");
+        // and every digest that moved, moved TO the new member
+        for d in &sample {
+            let b = five[owner(*d, &five).unwrap()];
+            let a = six[owner(*d, &six).unwrap()];
+            assert!(a == b || a == "n5:1", "{b} -> {a} is not a steal by the joiner");
+        }
+    }
+
+    #[test]
+    fn placement_is_balanced() {
+        let members = ["n0:1", "n1:1", "n2:1", "n3:1"];
+        let sample = digests(4000, 31);
+        let mut counts = [0usize; 4];
+        for d in &sample {
+            counts[owner(*d, &members).unwrap()] += 1;
+        }
+        let fair = sample.len() / members.len();
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                (fair / 2..=fair * 2).contains(c),
+                "member {i} owns {c} of {} (fair share {fair})",
+                sample.len()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_rendezvous_stable_under_membership_changes() {
+        property("hrw_removal_stability", 200, |g| {
+            let n = g.usize(2, 8);
+            let members: Vec<String> = (0..n).map(|i| format!("node{i}:70{i:02}")).collect();
+            let refs: Vec<&str> = members.iter().map(String::as_str).collect();
+            let d = (g.u64(0, u64::MAX - 1), g.u64(0, u64::MAX - 1));
+            let before = owner(d, &refs).unwrap();
+            // remove a random member that is NOT the owner: owner must hold
+            let gone = g.usize(0, n - 1);
+            if gone != before {
+                let survivors: Vec<&str> =
+                    refs.iter().enumerate().filter(|(i, _)| *i != gone).map(|(_, m)| *m).collect();
+                assert_eq!(survivors[owner(d, &survivors).unwrap()], refs[before]);
+            }
+            // add a member: the owner either holds or the joiner steals
+            let mut grown = refs.clone();
+            grown.push("joiner:7999");
+            let after = grown[owner(d, &grown).unwrap()];
+            assert!(after == refs[before] || after == "joiner:7999");
+        });
+    }
+}

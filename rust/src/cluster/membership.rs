@@ -1,0 +1,206 @@
+//! Cluster membership: the router's live view of its member servers.
+//!
+//! A [`Member`] is one backend `matexp serve` process, tracked entirely
+//! with atomics so the routing hot path (score, pick, count) never takes
+//! a lock — the [`Membership`] `RwLock` guards only the *set* (join,
+//! leave, snapshot), which changes rarely. Each member carries:
+//!
+//! - `up` — flipped by the health-check thread and by egress failures;
+//!   a down member is excluded from routing until a probe succeeds.
+//! - `draining` — set by the `cluster drain` op; a draining member
+//!   finishes its in-flight work but receives nothing new.
+//! - `outstanding` — router-side in-flight count, the load signal for
+//!   least-load routing and the shed-at admission gate.
+//! - `routed_affinity` / `routed_least_load` — per-policy totals behind
+//!   the `matexp_cluster_requests_routed_total` Prometheus series.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One member server, as the router sees it. Shared via `Arc` between
+/// the routing path, the health checker, and the status/metrics
+/// renderers; all fields are atomics, so readers never block routing.
+#[derive(Debug)]
+pub struct Member {
+    name: String,
+    up: AtomicBool,
+    draining: AtomicBool,
+    outstanding: AtomicU64,
+    routed_affinity: AtomicU64,
+    routed_least_load: AtomicU64,
+}
+
+impl Member {
+    /// A fresh member at `addr` (`host:port`), initially up and not
+    /// draining — the health checker will demote it if the first probe
+    /// fails.
+    pub fn new(addr: impl Into<String>) -> Arc<Member> {
+        Arc::new(Member {
+            name: addr.into(),
+            up: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            outstanding: AtomicU64::new(0),
+            routed_affinity: AtomicU64::new(0),
+            routed_least_load: AtomicU64::new(0),
+        })
+    }
+
+    /// The member's address, which doubles as its identity: the
+    /// rendezvous hash key, the `member` label on Prometheus series, and
+    /// the handle `cluster drain`/`leave` ops refer to.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Whether the last health probe (or egress attempt) succeeded.
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::Relaxed)
+    }
+
+    /// Mark the member up or down (health checker and egress failures).
+    pub fn set_up(&self, up: bool) {
+        self.up.store(up, Ordering::Relaxed);
+    }
+
+    /// Whether the member is draining (finishing in-flight work only).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Enter or leave the draining state.
+    pub fn set_draining(&self, draining: bool) {
+        self.draining.store(draining, Ordering::Relaxed);
+    }
+
+    /// Router-side in-flight requests against this member right now.
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    /// Eligible to receive new work: up and not draining.
+    pub fn eligible(&self) -> bool {
+        self.is_up() && !self.is_draining()
+    }
+
+    /// Per-policy routed totals: `(affinity, least_load)`.
+    pub fn routed(&self) -> (u64, u64) {
+        (self.routed_affinity.load(Ordering::Relaxed), self.routed_least_load.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn begin_request(&self) {
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn end_request(&self) {
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_affinity(&self) {
+        self.routed_affinity.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_least_load(&self) {
+        self.routed_least_load.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The mutable member set. Lock scope is set changes only — routing
+/// takes a [`Membership::snapshot`] (a clone of the `Arc` list) and
+/// works lock-free from there.
+#[derive(Debug, Default)]
+pub struct Membership {
+    members: RwLock<Vec<Arc<Member>>>,
+}
+
+impl Membership {
+    /// Build the initial set from configured addresses (duplicates are
+    /// collapsed; order is preserved for stable status output).
+    pub fn new(addrs: &[String]) -> Membership {
+        let m = Membership::default();
+        for a in addrs {
+            m.join(a);
+        }
+        m
+    }
+
+    /// Current members, cheap to clone and safe to iterate without
+    /// holding the set lock.
+    pub fn snapshot(&self) -> Vec<Arc<Member>> {
+        self.members.read().expect("membership lock poisoned").clone()
+    }
+
+    /// Add a member at `addr`. Returns `false` (and changes nothing) if
+    /// it is already present.
+    pub fn join(&self, addr: &str) -> bool {
+        let mut set = self.members.write().expect("membership lock poisoned");
+        if set.iter().any(|m| m.name() == addr) {
+            return false;
+        }
+        set.push(Member::new(addr));
+        true
+    }
+
+    /// Remove the member at `addr`. Returns `false` if it was not
+    /// present. In-flight requests against it finish on the snapshot
+    /// their connection already holds.
+    pub fn leave(&self, addr: &str) -> bool {
+        let mut set = self.members.write().expect("membership lock poisoned");
+        let before = set.len();
+        set.retain(|m| m.name() != addr);
+        set.len() != before
+    }
+
+    /// Look up a member by address.
+    pub fn get(&self, addr: &str) -> Option<Arc<Member>> {
+        self.members.read().expect("membership lock poisoned").iter().find(|m| m.name() == addr).cloned()
+    }
+
+    /// Number of members (up or not).
+    pub fn len(&self) -> usize {
+        self.members.read().expect("membership lock poisoned").len()
+    }
+
+    /// Whether the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_leave_and_lookup() {
+        let m = Membership::new(&["a:1".into(), "b:2".into(), "a:1".into()]);
+        assert_eq!(m.len(), 2, "duplicate join collapses");
+        assert!(!m.join("b:2"));
+        assert!(m.join("c:3"));
+        assert!(m.leave("a:1"));
+        assert!(!m.leave("a:1"));
+        assert!(m.get("c:3").is_some());
+        assert!(m.get("a:1").is_none());
+        let names: Vec<String> = m.snapshot().iter().map(|x| x.name().to_string()).collect();
+        assert_eq!(names, vec!["b:2".to_string(), "c:3".to_string()]);
+    }
+
+    #[test]
+    fn member_state_flips_and_counts() {
+        let m = Member::new("a:1");
+        assert!(m.eligible());
+        m.set_draining(true);
+        assert!(!m.eligible());
+        m.set_draining(false);
+        m.set_up(false);
+        assert!(!m.eligible());
+        m.begin_request();
+        m.begin_request();
+        assert_eq!(m.outstanding(), 2);
+        m.end_request();
+        assert_eq!(m.outstanding(), 1);
+        m.note_affinity();
+        m.note_affinity();
+        m.note_least_load();
+        assert_eq!(m.routed(), (2, 1));
+    }
+}

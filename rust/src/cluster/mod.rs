@@ -1,0 +1,70 @@
+//! # The distributed serving tier
+//!
+//! One process with a device pool serves one machine's worth of the
+//! paper's workload; the ROADMAP's north star ("matrix exponentiation
+//! for millions of users") needs many. This module turns N independent
+//! `matexp serve` processes into one service behind a **content-affinity
+//! router** — the cluster-scale version of the paper's economics: cheap
+//! commodity nodes, coordinated so the expensive work (planning,
+//! compiling, executing a hot matrix) is paid once *per cluster*, not
+//! once per node.
+//!
+//! ## Why content affinity
+//!
+//! The result cache ([`crate::cache`]) is content-addressed: a repeated
+//! hot matrix is a cache hit *only on the node that computed it first*.
+//! A load balancer that sprays requests round-robin turns an N-node
+//! cluster into N cold caches. The router instead hashes the same
+//! 128-bit content digest the cache keys on, and rendezvous hashing
+//! ([`hash`]) maps each digest to one owner — so every repetition of a
+//! hot matrix lands where its result already lives, and membership
+//! changes move only the minimal `1/N` slice of the digest space.
+//!
+//! ## Pieces
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`hash`] | rendezvous (HRW) placement over the result-cache digest |
+//! | [`Membership`] / [`Member`] | lock-free member registry: liveness, drain state, load counters |
+//! | [`Router`] | the front-end: both wire codecs in, [`crate::server::MatexpClient`] frames out |
+//! | [`Cluster`] | in-process cluster-sim: N real servers + router, one handle |
+//!
+//! The router owns the cluster's operational surface: periodic health
+//! probes (a down member's digest range falls to per-digest runners-up),
+//! runtime membership via the `cluster` wire op (join/leave/drain/
+//! status), backpressure shedding with the same typed
+//! [`crate::error::MatexpError::Admission`] a single server uses, and
+//! graceful drain. Observability rides the existing rails: `route` and
+//! `member_send` spans in the trace ring ([`crate::trace`]) and
+//! `matexp_cluster_*` series in the Prometheus exposition
+//! ([`router::render_prometheus`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use matexp::cluster::Cluster;
+//! use matexp::prelude::*;
+//! use matexp::server::MatexpClient;
+//!
+//! // three real servers on loopback + a router, one handle
+//! let cluster = Cluster::spawn_local(3)?;
+//! let mut client = MatexpClient::connect(&cluster.router_addr())?;
+//! let a = Matrix::identity(32);
+//! let (result, stats) = client.expm(&a, 1024, Method::Ours)?;
+//! assert_eq!(result.n(), 32);
+//! # let _ = stats;
+//! cluster.shutdown();
+//! # Ok::<(), matexp::error::MatexpError>(())
+//! ```
+//!
+//! (`no_run` to keep doctests socket-free; the integration suite runs
+//! the same flow for real, including failover and drain.)
+
+pub mod hash;
+pub mod membership;
+pub mod router;
+pub mod sim;
+
+pub use membership::{Member, Membership};
+pub use router::{render_prometheus, RoutePolicy, Router};
+pub use sim::Cluster;

@@ -1,0 +1,834 @@
+//! The router front-end: one listening socket speaking the full wire
+//! protocol (JSON lines *and* binary frames), fanning `expm` work out to
+//! member servers over [`MatexpClient`] egress connections.
+//!
+//! ## Data path
+//!
+//! ```text
+//! client ──lines/frames──▶ router conn handler
+//!                             │  digest = digest_f32(matrix)      (Route span)
+//!                             │  pick: HRW owner, else least-load, else shed
+//!                             ▼
+//!                     MatexpClient egress ──frames──▶ member serve  (MemberSend span)
+//!                             │
+//!                             ◀── result/typed error, relayed in the
+//!                                 client's own codec and id
+//! ```
+//!
+//! Each accepted connection is handled **sequentially** — one request in
+//! flight per client connection (pipelined ids are still echoed
+//! faithfully; concurrency comes from many connections, exactly like the
+//! loadtest drives it). Every handler keeps its own lazily-opened egress
+//! client per member, so member TCP connections are pooled per client
+//! connection and reconnect (with backoff) independently.
+//!
+//! ## Routing policy
+//!
+//! Cache-eligible requests ([`CacheControl::Use`]/`Refresh`) go to the
+//! rendezvous owner of the matrix digest ([`super::hash`]) — the member
+//! whose result cache is warm for that exact content. If the owner is
+//! saturated (`outstanding ≥ shed_at`), the request **spills** to the
+//! least-loaded unsaturated member; when every live member is saturated
+//! the router sheds with the typed [`MatexpError::Admission`] the
+//! single-server admission gate already uses, so clients cannot tell a
+//! router apart from an overloaded server. `CacheControl::Bypass`
+//! requests skip the affinity step entirely — there is no warm state to
+//! aim at — and always go least-load.
+//!
+//! ## Failure and drain semantics
+//!
+//! A member that fails a health probe or an egress attempt is marked
+//! down and excluded from routing until a probe succeeds; its share of
+//! the digest space falls to the per-digest runners-up (an HRW property
+//! — nobody else's placement moves). An egress failure *before* anything
+//! was sent reroutes transparently; a failure *mid-request* surfaces as
+//! the typed `Disconnected` error (the work may have executed — an
+//! idempotent retry is the client's call, not the router's). Draining a
+//! member stops new routing immediately, waits (bounded) for its
+//! router-side in-flight count to reach zero, tells the member itself to
+//! stop accepting direct work, and detaches it from the set.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::hash;
+use super::membership::{Member, Membership};
+use crate::cache::result::digest_f32;
+use crate::config::ClusterSettings;
+use crate::coordinator::request::Method;
+use crate::error::{MatexpError, Result};
+use crate::exec::CacheControl;
+use crate::json_obj;
+use crate::linalg::matrix::Matrix;
+use crate::server::client::{MatexpClient, ReconnectPolicy};
+use crate::server::frame::{self, Frame};
+use crate::server::proto::{ClusterAction, MetricsFormat, WireRequest, WireResponse};
+use crate::trace::prometheus::PREFIX;
+use crate::trace::{self, SpanKind, TraceId};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+/// Egress reconnect backoff ceiling, milliseconds.
+const RECONNECT_MAX_MS: u64 = 2_000;
+/// Health probe connect/read timeout, milliseconds.
+const PROBE_TIMEOUT_MS: u64 = 250;
+/// Upper bound on how long a drain waits for in-flight work.
+const DRAIN_WAIT_MS: u64 = 5_000;
+
+/// Which routing policy placed a request — the `policy` label on
+/// `matexp_cluster_requests_routed_total`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rendezvous owner of the matrix digest (warm result cache).
+    Affinity,
+    /// Lowest outstanding count (cache-bypass traffic or spill from a
+    /// saturated affinity owner).
+    LeastLoad,
+}
+
+impl RoutePolicy {
+    /// Canonical label value (`affinity` / `least_load`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicy::Affinity => "affinity",
+            RoutePolicy::LeastLoad => "least_load",
+        }
+    }
+}
+
+/// State shared by every connection handler, the health checker, and the
+/// status/metrics renderers.
+pub(crate) struct RouterShared {
+    pub(crate) membership: Membership,
+    pub(crate) shed_at: u64,
+    pub(crate) shed_total: AtomicU64,
+    pub(crate) reconnect: ReconnectPolicy,
+    pub(crate) health_ms: u64,
+}
+
+/// The running router: accept loop + health checker + open-connection
+/// registry, shut down as one unit (mirrors [`crate::server::Server`]).
+pub struct Router {
+    local_addr: SocketAddr,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    health_thread: Option<thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    shared: Arc<RouterShared>,
+}
+
+impl Router {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start routing
+    /// to `settings.members`. `conn_threads` bounds concurrent client
+    /// connections. Errors if the member list is empty.
+    pub fn start(addr: &str, settings: &ClusterSettings, conn_threads: usize) -> Result<Router> {
+        if settings.members.is_empty() {
+            return Err(MatexpError::Config(
+                "cluster has no members (set --members or cluster.members)".into(),
+            ));
+        }
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(RouterShared {
+            membership: Membership::new(&settings.members),
+            shed_at: settings.shed_at as u64,
+            shed_total: AtomicU64::new(0),
+            reconnect: ReconnectPolicy {
+                max_attempts: settings.reconnect_attempts,
+                base_ms: settings.reconnect_base_ms,
+                max_ms: RECONNECT_MAX_MS,
+            },
+            health_ms: settings.health_ms,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let health_thread = thread::Builder::new().name("matexp-health".into()).spawn({
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            move || health_loop(&stop, &shared)
+        })?;
+
+        let accept_thread = thread::Builder::new().name("matexp-route-accept".into()).spawn({
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let shared = Arc::clone(&shared);
+            move || {
+                let pool = ThreadPool::new(conn_threads, "matexp-route-conn");
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    if let Ok(clone) = stream.try_clone() {
+                        let mut held = conns.lock().expect("router conn registry poisoned");
+                        held.retain(|s| s.peer_addr().is_ok());
+                        held.push(clone);
+                    }
+                    let shared = Arc::clone(&shared);
+                    pool.execute(move || {
+                        let _ = route_connection(&shared, stream);
+                    });
+                }
+            }
+        })?;
+
+        Ok(Router {
+            local_addr,
+            accept_thread: Some(accept_thread),
+            health_thread: Some(health_thread),
+            stop,
+            conns,
+            shared,
+        })
+    }
+
+    /// The bound listening address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The router's status document — the same JSON the `metrics` and
+    /// `cluster status` wire ops answer with.
+    pub fn status(&self) -> Json {
+        status_json(&self.shared)
+    }
+
+    /// Block until the router is shut down from another thread (the
+    /// foreground `matexp route` path).
+    pub fn join(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.health_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting, close every client connection, and join the
+    /// accept and health threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for s in self.conns.lock().expect("router conn registry poisoned").drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // unblock the accept loop so it observes the stop flag
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.health_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Per-connection egress: one lazily-opened client per member address,
+/// with the router's reconnect policy attached.
+struct Egress {
+    clients: HashMap<String, MatexpClient>,
+    reconnect: ReconnectPolicy,
+}
+
+impl Egress {
+    fn client_for(&mut self, addr: &str) -> Result<&mut MatexpClient> {
+        if !self.clients.contains_key(addr) {
+            let mut c = MatexpClient::connect(addr)?.with_reconnect(self.reconnect);
+            // members of this build ack frames; a JSON-only member just
+            // stays on lines, which is slower but equally correct
+            c.negotiate_binary()?;
+            self.clients.insert(addr.to_string(), c);
+        }
+        Ok(self.clients.get_mut(addr).expect("just inserted"))
+    }
+
+    fn drop_client(&mut self, addr: &str) {
+        self.clients.remove(addr);
+    }
+}
+
+/// How an egress attempt failed — the distinction that decides between
+/// transparent reroute and a typed error to the client.
+enum EgressFailure {
+    /// Nothing reached the member (connect/negotiate failed): safe to
+    /// reroute the request elsewhere.
+    Connect(MatexpError),
+    /// The connection died with the request possibly in flight: the
+    /// member may have executed it, so this request fails typed.
+    InFlight(MatexpError),
+    /// The member answered with a typed error: pass it through verbatim.
+    Typed(MatexpError),
+}
+
+fn send_to_member(
+    egress: &mut Egress,
+    member: &Member,
+    matrix: &Matrix,
+    power: u64,
+    method: Method,
+    cache: CacheControl,
+    trace_id: TraceId,
+) -> std::result::Result<(Matrix, crate::server::proto::WireStats), EgressFailure> {
+    let client = match egress.client_for(member.name()) {
+        Ok(c) => c,
+        Err(e) => return Err(EgressFailure::Connect(e)),
+    };
+    let t0 = trace::now_us();
+    match client.expm_cached(matrix, power, method, cache) {
+        Ok(ok) => {
+            trace::record_span_at(SpanKind::MemberSend, trace_id, t0, trace::now_us(), matrix.n());
+            Ok(ok)
+        }
+        Err(e @ MatexpError::Disconnected(_)) => Err(EgressFailure::InFlight(e)),
+        Err(e) => Err(EgressFailure::Typed(e)),
+    }
+}
+
+/// The routing decision: HRW owner for cache-eligible traffic, least
+/// load otherwise, typed `Admission` when every live member is at the
+/// shed threshold. Pure over the snapshot so it unit-tests directly.
+pub(crate) fn pick_member(
+    members: &[Arc<Member>],
+    digest: (u64, u64),
+    cache: CacheControl,
+    shed_at: u64,
+    excluded: &HashSet<String>,
+) -> Result<(Arc<Member>, RoutePolicy)> {
+    let eligible: Vec<&Arc<Member>> =
+        members.iter().filter(|m| m.eligible() && !excluded.contains(m.name())).collect();
+    if eligible.is_empty() {
+        return Err(MatexpError::Service("no live cluster members".into()));
+    }
+    if cache != CacheControl::Bypass {
+        let names: Vec<&str> = eligible.iter().map(|m| m.name()).collect();
+        let i = hash::owner(digest, &names).expect("eligible set is non-empty");
+        if eligible[i].outstanding() < shed_at {
+            return Ok((Arc::clone(eligible[i]), RoutePolicy::Affinity));
+        }
+    }
+    // the owner is saturated (or the request bypasses the cache): spill
+    // to the least-loaded unsaturated member, ties broken by name
+    let mut best: Option<&Arc<Member>> = None;
+    for m in &eligible {
+        if m.outstanding() >= shed_at {
+            continue;
+        }
+        let wins = match best {
+            None => true,
+            Some(b) => {
+                let (mo, bo) = (m.outstanding(), b.outstanding());
+                mo < bo || (mo == bo && m.name() < b.name())
+            }
+        };
+        if wins {
+            best = Some(m);
+        }
+    }
+    match best {
+        Some(m) => Ok((Arc::clone(m), RoutePolicy::LeastLoad)),
+        None => Err(MatexpError::Admission(format!(
+            "cluster saturated: all {} live members at shed-at={shed_at} outstanding",
+            eligible.len()
+        ))),
+    }
+}
+
+fn route_expm(
+    shared: &RouterShared,
+    egress: &mut Egress,
+    matrix: &Matrix,
+    power: u64,
+    method: Method,
+    cache: CacheControl,
+) -> Result<(Matrix, crate::server::proto::WireStats)> {
+    let trace_id = TraceId::mint();
+    let digest = digest_f32(matrix.data());
+    let mut excluded: HashSet<String> = HashSet::new();
+    loop {
+        let t0 = trace::now_us();
+        let members = shared.membership.snapshot();
+        let (member, policy) = match pick_member(&members, digest, cache, shared.shed_at, &excluded)
+        {
+            Ok(pick) => pick,
+            Err(e) => {
+                if matches!(e, MatexpError::Admission(_)) {
+                    shared.shed_total.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(e);
+            }
+        };
+        trace::record_span_at(SpanKind::Route, trace_id, t0, trace::now_us(), matrix.n());
+        match policy {
+            RoutePolicy::Affinity => member.note_affinity(),
+            RoutePolicy::LeastLoad => member.note_least_load(),
+        }
+        member.begin_request();
+        let outcome = send_to_member(egress, &member, matrix, power, method, cache, trace_id);
+        member.end_request();
+        match outcome {
+            Ok(ok) => return Ok(ok),
+            Err(EgressFailure::Connect(_)) => {
+                // never reached the member: mark it down and reroute
+                member.set_up(false);
+                egress.drop_client(member.name());
+                excluded.insert(member.name().to_string());
+            }
+            Err(EgressFailure::InFlight(e)) => {
+                // possibly executed: this request fails typed; the member
+                // is marked down so the NEXT request reroutes cleanly
+                member.set_up(false);
+                egress.drop_client(member.name());
+                return Err(e);
+            }
+            Err(EgressFailure::Typed(e)) => return Err(e),
+        }
+    }
+}
+
+fn ok_doc(doc: Json) -> WireResponse {
+    WireResponse::Ok {
+        result: None,
+        stats: None,
+        metrics: Some(doc),
+        payload: crate::server::proto::Payload::Json,
+        id: None,
+        frame: None,
+    }
+}
+
+/// The router's status document: role, shed state, and one entry per
+/// member with liveness and per-policy routed counts. This is what the
+/// `metrics` (JSON) and `cluster status` ops answer, and what the
+/// loadtest reads its per-member spread from.
+pub(crate) fn status_json(shared: &RouterShared) -> Json {
+    let members: Vec<Json> = shared
+        .membership
+        .snapshot()
+        .iter()
+        .map(|m| {
+            let (aff, ll) = m.routed();
+            json_obj![
+                ("member", m.name()),
+                ("up", m.is_up()),
+                ("draining", m.is_draining()),
+                ("outstanding", m.outstanding()),
+                ("routed_affinity", aff),
+                ("routed_least_load", ll),
+                ("routed", aff + ll),
+            ]
+        })
+        .collect();
+    json_obj![
+        ("role", "router"),
+        ("members", Json::Arr(members)),
+        ("shed_at", shared.shed_at),
+        ("shed_total", shared.shed_total.load(Ordering::Relaxed)),
+    ]
+}
+
+/// Render the cluster's Prometheus series (`matexp_cluster_member_up`,
+/// `matexp_cluster_requests_routed_total{member,policy}`,
+/// `matexp_cluster_shed_total`) — the router's answer to
+/// `metrics --format prometheus`, lint-clean under
+/// [`crate::trace::prometheus::lint`].
+pub fn render_prometheus(members: &[Arc<Member>], shed_total: u64) -> String {
+    let mut out = String::with_capacity(1024);
+    let _ = writeln!(
+        out,
+        "# HELP {PREFIX}cluster_member_up Member liveness as seen by the router (1 = routable)."
+    );
+    let _ = writeln!(out, "# TYPE {PREFIX}cluster_member_up gauge");
+    for m in members {
+        let _ =
+            writeln!(out, "{PREFIX}cluster_member_up{{member=\"{}\"}} {}", m.name(), u64::from(m.is_up()));
+    }
+    let _ = writeln!(
+        out,
+        "# HELP {PREFIX}cluster_requests_routed_total Requests routed, per member and policy."
+    );
+    let _ = writeln!(out, "# TYPE {PREFIX}cluster_requests_routed_total counter");
+    for m in members {
+        let (aff, ll) = m.routed();
+        let _ = writeln!(
+            out,
+            "{PREFIX}cluster_requests_routed_total{{member=\"{}\",policy=\"affinity\"}} {aff}",
+            m.name()
+        );
+        let _ = writeln!(
+            out,
+            "{PREFIX}cluster_requests_routed_total{{member=\"{}\",policy=\"least_load\"}} {ll}",
+            m.name()
+        );
+    }
+    let _ = writeln!(
+        out,
+        "# HELP {PREFIX}cluster_shed_total Requests shed because every live member was saturated."
+    );
+    let _ = writeln!(out, "# TYPE {PREFIX}cluster_shed_total counter");
+    let _ = writeln!(out, "{PREFIX}cluster_shed_total {shed_total}");
+    out
+}
+
+fn metrics_reply(shared: &RouterShared, format: MetricsFormat) -> WireResponse {
+    match format {
+        MetricsFormat::Json => ok_doc(status_json(shared)),
+        MetricsFormat::Prometheus => ok_doc(Json::from(render_prometheus(
+            &shared.membership.snapshot(),
+            shared.shed_total.load(Ordering::Relaxed),
+        ))),
+    }
+}
+
+fn handle_cluster(
+    shared: &RouterShared,
+    action: ClusterAction,
+    addr: Option<String>,
+) -> WireResponse {
+    match action {
+        ClusterAction::Status => ok_doc(status_json(shared)),
+        ClusterAction::Join => match addr {
+            Some(a) if a.contains(':') => {
+                shared.membership.join(&a);
+                ok_doc(status_json(shared))
+            }
+            Some(a) => WireResponse::from_error(&MatexpError::Config(format!(
+                "member address {a:?} is not host:port"
+            ))),
+            None => WireResponse::from_error(&MatexpError::Config(
+                "cluster join needs an \"addr\" (the member to add)".into(),
+            )),
+        },
+        ClusterAction::Leave => match addr {
+            Some(a) => {
+                if shared.membership.leave(&a) {
+                    ok_doc(status_json(shared))
+                } else {
+                    WireResponse::from_error(&MatexpError::Config(format!("unknown member {a:?}")))
+                }
+            }
+            None => WireResponse::from_error(&MatexpError::Config(
+                "cluster leave needs an \"addr\" (the member to remove)".into(),
+            )),
+        },
+        ClusterAction::Drain => match addr {
+            Some(a) => drain_member(shared, &a),
+            None => WireResponse::from_error(&MatexpError::Config(
+                "cluster drain needs an \"addr\" (the member to drain)".into(),
+            )),
+        },
+    }
+}
+
+fn drain_member(shared: &RouterShared, addr: &str) -> WireResponse {
+    let Some(member) = shared.membership.get(addr) else {
+        return WireResponse::from_error(&MatexpError::Config(format!("unknown member {addr:?}")));
+    };
+    // stop routing new work immediately, then wait (bounded) for the
+    // router-side in-flight count to reach zero
+    member.set_draining(true);
+    let deadline = Instant::now() + Duration::from_millis(DRAIN_WAIT_MS);
+    while member.outstanding() > 0 && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(2));
+    }
+    let drained = member.outstanding() == 0;
+    // tell the member itself to refuse direct work too (best effort —
+    // a member that is already gone has nothing left to refuse)
+    if let Ok(mut c) = MatexpClient::connect(addr) {
+        let _ = c.cluster(ClusterAction::Drain, None);
+    }
+    if drained {
+        shared.membership.leave(addr);
+    }
+    let mut doc = status_json(shared);
+    if let Json::Obj(fields) = &mut doc {
+        fields.insert("drained".into(), Json::from(drained));
+        fields.insert("detached".into(), Json::from(drained));
+    }
+    ok_doc(doc)
+}
+
+/// Recover the client-chosen id from a line that failed to decode, so
+/// the error reply still routes to the right pipelined ticket.
+fn salvage_id(line: &str) -> Option<u64> {
+    Json::parse(line).ok()?.get("id")?.as_u64()
+}
+
+fn route_connection(shared: &Arc<RouterShared>, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut egress = Egress { clients: HashMap::new(), reconnect: shared.reconnect };
+    loop {
+        // one-byte peek dispatches the codec, mirroring the server
+        let first = match reader.fill_buf() {
+            Ok([]) => return Ok(()),
+            Ok(buf) => buf[0],
+            Err(_) => return Ok(()),
+        };
+        if first == frame::MAGIC[0] {
+            let (f, _) = Frame::read_from(&mut reader, frame::MAX_PAYLOAD)?;
+            let Frame::Expm { id, n, power, method, matrix } = f else {
+                // a reply frame as a request: the stream is broken
+                return Ok(());
+            };
+            let reply = match Matrix::from_vec(n, matrix) {
+                // frames carry no cache directive: always cache-eligible
+                Ok(m) => match route_expm(shared, &mut egress, &m, power, method, CacheControl::Use)
+                {
+                    Ok((result, stats)) => {
+                        Frame::ExpmOk { id, n, stats, result: result.into_vec() }
+                    }
+                    Err(e) => Frame::from_error(&e, Some(id)),
+                },
+                Err(e) => Frame::from_error(&e, Some(id)),
+            };
+            if writer.write_all(&reply.encode()).is_err() {
+                return Ok(());
+            }
+        } else {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()),
+                Ok(_) => {}
+                Err(_) => return Ok(()),
+            }
+            let text = line.trim_end();
+            if text.is_empty() {
+                continue;
+            }
+            let reply = match WireRequest::decode(text) {
+                Err(e) => WireResponse::from_error(&e).with_id(salvage_id(text)),
+                Ok(WireRequest::Ping) => WireResponse::pong(),
+                Ok(WireRequest::Hello { frame_version }) => {
+                    WireResponse::hello_ack(frame_version.min(u32::from(frame::VERSION)))
+                }
+                Ok(WireRequest::Metrics { format }) => metrics_reply(shared, format),
+                Ok(WireRequest::Trace) => {
+                    ok_doc(trace::chrome::export(&trace::recent_spans()))
+                }
+                Ok(WireRequest::Cluster { action, addr }) => handle_cluster(shared, action, addr),
+                Ok(WireRequest::Expm { n, power, method, matrix, payload, id, cache }) => {
+                    match Matrix::from_vec(n, matrix) {
+                        Ok(m) => match route_expm(shared, &mut egress, &m, power, method, cache) {
+                            Ok((result, stats)) => WireResponse::Ok {
+                                result: Some(result.into_vec()),
+                                stats: Some(stats),
+                                metrics: None,
+                                payload,
+                                id,
+                                frame: None,
+                            },
+                            Err(e) => WireResponse::from_error(&e).with_id(id),
+                        },
+                        Err(e) => WireResponse::from_error(&e).with_id(id),
+                    }
+                }
+            };
+            let encoded = match reply.encode() {
+                Ok(s) => s,
+                // a non-finite result can't ride a JSON array: report the
+                // typed error instead of emitting a corrupt payload
+                Err(e) => WireResponse::from_error(&e)
+                    .encode()
+                    .expect("error lines always encode"),
+            };
+            if writer.write_all(encoded.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// One ping probe against a member, with connect and read timeouts —
+/// raw sockets, not [`MatexpClient`], so a hung member cannot wedge the
+/// health thread.
+fn probe(addr: &str, timeout: Duration) -> bool {
+    let Ok(mut addrs) = addr.to_socket_addrs() else { return false };
+    let Some(sock) = addrs.next() else { return false };
+    let Ok(mut stream) = TcpStream::connect_timeout(&sock, timeout) else { return false };
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_nodelay(true);
+    if stream.write_all(b"{\"op\":\"ping\"}\n").is_err() {
+        return false;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(k) if k > 0 => {
+            matches!(WireResponse::decode(line.trim_end()), Ok(WireResponse::Ok { .. }))
+        }
+        _ => false,
+    }
+}
+
+fn health_loop(stop: &AtomicBool, shared: &RouterShared) {
+    while !stop.load(Ordering::SeqCst) {
+        for m in shared.membership.snapshot() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            m.set_up(probe(m.name(), Duration::from_millis(PROBE_TIMEOUT_MS)));
+        }
+        // sleep in small slices so shutdown stays prompt
+        let mut slept = 0;
+        while slept < shared.health_ms && !stop.load(Ordering::SeqCst) {
+            let step = (shared.health_ms - slept).min(25);
+            thread::sleep(Duration::from_millis(step));
+            slept += step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> Vec<Arc<Member>> {
+        vec![Member::new("a:1"), Member::new("b:2"), Member::new("c:3")]
+    }
+
+    fn shared_with(shed_at: u64) -> RouterShared {
+        RouterShared {
+            membership: Membership::new(&["a:1".into(), "b:2".into(), "c:3".into()]),
+            shed_at,
+            shed_total: AtomicU64::new(0),
+            reconnect: ReconnectPolicy::default(),
+            health_ms: 500,
+        }
+    }
+
+    #[test]
+    fn affinity_is_stable_and_respects_liveness() {
+        let members = three();
+        let none = HashSet::new();
+        let d = (42, 77);
+        let (first, policy) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+        assert_eq!(policy, RoutePolicy::Affinity);
+        for _ in 0..10 {
+            let (m, _) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+            assert_eq!(m.name(), first.name(), "same digest, same owner");
+        }
+        // owner down -> a different member takes over, deterministically
+        first.set_up(false);
+        let (fallback, _) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+        assert_ne!(fallback.name(), first.name());
+        // owner back up -> placement returns (no lasting reshuffle)
+        first.set_up(true);
+        let (back, _) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+        assert_eq!(back.name(), first.name());
+    }
+
+    #[test]
+    fn bypass_and_saturation_go_least_load() {
+        let members = three();
+        let none = HashSet::new();
+        members[0].begin_request();
+        members[0].begin_request();
+        members[1].begin_request();
+        // bypass traffic ignores the digest: least-loaded member wins
+        let (m, policy) = pick_member(&members, (1, 1), CacheControl::Bypass, 64, &none).unwrap();
+        assert_eq!(policy, RoutePolicy::LeastLoad);
+        assert_eq!(m.name(), "c:3");
+        // a saturated affinity owner spills to least-load
+        let d = (42, 77);
+        let (owner, _) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+        while owner.outstanding() < 4 {
+            owner.begin_request();
+        }
+        let (spill, policy) = pick_member(&members, d, CacheControl::Use, 4, &none).unwrap();
+        assert_eq!(policy, RoutePolicy::LeastLoad);
+        assert_ne!(spill.name(), owner.name());
+    }
+
+    #[test]
+    fn full_cluster_sheds_with_admission_and_empty_cluster_is_service() {
+        let members = three();
+        let none = HashSet::new();
+        for m in &members {
+            m.begin_request();
+        }
+        let e = pick_member(&members, (9, 9), CacheControl::Use, 1, &none).unwrap_err();
+        assert!(matches!(e, MatexpError::Admission(_)), "{e:?}");
+        // draining members are not admission candidates either
+        for m in &members {
+            m.end_request();
+            m.set_draining(true);
+        }
+        let e = pick_member(&members, (9, 9), CacheControl::Use, 1, &none).unwrap_err();
+        assert!(matches!(e, MatexpError::Service(_)), "{e:?}");
+        let e = pick_member(&[], (9, 9), CacheControl::Use, 1, &none).unwrap_err();
+        assert!(matches!(e, MatexpError::Service(_)), "{e:?}");
+    }
+
+    #[test]
+    fn excluded_members_are_skipped() {
+        let members = three();
+        let d = (42, 77);
+        let none = HashSet::new();
+        let (owner, _) = pick_member(&members, d, CacheControl::Use, 64, &none).unwrap();
+        let mut excluded = HashSet::new();
+        excluded.insert(owner.name().to_string());
+        let (next, _) = pick_member(&members, d, CacheControl::Use, 64, &excluded).unwrap();
+        assert_ne!(next.name(), owner.name());
+    }
+
+    #[test]
+    fn prometheus_exposition_is_lint_clean_and_labeled() {
+        let members = three();
+        members[0].note_affinity();
+        members[0].note_affinity();
+        members[1].note_least_load();
+        members[2].set_up(false);
+        let text = render_prometheus(&members, 3);
+        crate::trace::prometheus::lint(&text).unwrap();
+        assert!(text.contains("matexp_cluster_member_up{member=\"a:1\"} 1"), "{text}");
+        assert!(text.contains("matexp_cluster_member_up{member=\"c:3\"} 0"), "{text}");
+        assert!(
+            text.contains(
+                "matexp_cluster_requests_routed_total{member=\"a:1\",policy=\"affinity\"} 2"
+            ),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "matexp_cluster_requests_routed_total{member=\"b:2\",policy=\"least_load\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("matexp_cluster_shed_total 3"), "{text}");
+    }
+
+    #[test]
+    fn status_document_reports_members_and_shed_state() {
+        let shared = shared_with(8);
+        shared.shed_total.fetch_add(2, Ordering::Relaxed);
+        let members = shared.membership.snapshot();
+        members[1].note_affinity();
+        let doc = status_json(&shared);
+        assert_eq!(doc.get("role").and_then(Json::as_str), Some("router"));
+        assert_eq!(doc.get("shed_at").and_then(Json::as_u64), Some(8));
+        assert_eq!(doc.get("shed_total").and_then(Json::as_u64), Some(2));
+        let rows = doc.get("members").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1].get("routed").and_then(Json::as_u64), Some(1));
+        assert_eq!(rows[0].get("up").and_then(Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,114 @@
+//! In-process cluster simulation: N real servers on loopback ports plus
+//! a router in front, owned by one handle — the cluster equivalent of
+//! [`crate::server::serve_background`], and what the integration tests
+//! and CI smoke drive.
+//!
+//! Nothing here is mocked: each member is a full
+//! [`crate::coordinator::Service`] behind a real TCP
+//! [`crate::server::Server`], and the router egresses over real
+//! [`crate::server::MatexpClient`] connections. "Kill a member" closes
+//! its listener and connections exactly like a crashed process would, so
+//! failover tests exercise the same code paths a production deployment
+//! hits — just without containers.
+
+use std::sync::Arc;
+
+use super::router::Router;
+use crate::config::{ClusterSettings, MatexpConfig};
+use crate::coordinator::service::{Service, ServiceHandle};
+use crate::error::Result;
+use crate::server::server::{serve_background, Server};
+
+/// One spawned member: its service handle plus the TCP front-end.
+struct SimMember {
+    addr: String,
+    server: Option<Server>,
+    service: Option<Arc<ServiceHandle>>,
+}
+
+/// A local cluster: N member servers plus the router, shut down as one.
+pub struct Cluster {
+    router: Option<Router>,
+    members: Vec<SimMember>,
+}
+
+impl Cluster {
+    /// Spawn `n` members (each a full service on an ephemeral loopback
+    /// port, result cache enabled — affinity is pointless without it)
+    /// and a router over them, with default [`ClusterSettings`].
+    pub fn spawn_local(n: usize) -> Result<Cluster> {
+        Cluster::spawn_local_with(n, ClusterSettings::default())
+    }
+
+    /// [`Cluster::spawn_local`] with explicit settings (`members` is
+    /// filled in from the spawned servers; anything preconfigured there
+    /// is kept, letting tests mix in unreachable members).
+    pub fn spawn_local_with(n: usize, mut settings: ClusterSettings) -> Result<Cluster> {
+        let mut members = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut cfg = MatexpConfig::default();
+            cfg.workers = 2;
+            cfg.batcher.max_wait_ms = 1;
+            cfg.cache.results = true;
+            let service = Arc::new(Service::start(cfg)?);
+            let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8)?;
+            let addr = server.local_addr().to_string();
+            settings.members.push(addr.clone());
+            members.push(SimMember { addr, server: Some(server), service: Some(service) });
+        }
+        let router = Router::start("127.0.0.1:0", &settings, 8)?;
+        Ok(Cluster { router: Some(router), members })
+    }
+
+    /// The router's listening address — point clients (or the loadtest)
+    /// here exactly as they would at a single server.
+    pub fn router_addr(&self) -> String {
+        self.router.as_ref().expect("router running").local_addr().to_string()
+    }
+
+    /// Member `i`'s direct listening address.
+    pub fn member_addr(&self, i: usize) -> &str {
+        &self.members[i].addr
+    }
+
+    /// Number of members spawned (killed ones included).
+    pub fn members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Kill member `i` the way a crash would look from outside: close
+    /// its listener and every open connection. Idempotent. The router
+    /// notices via egress failure or the next health probe.
+    pub fn kill_member(&mut self, i: usize) {
+        if let Some(server) = self.members[i].server.take() {
+            server.shutdown();
+        }
+        if let Some(service) = self.members[i].service.take() {
+            if let Ok(service) = Arc::try_unwrap(service) {
+                service.shutdown();
+            }
+        }
+    }
+
+    /// Shut the whole cluster down: router first (so nothing routes into
+    /// closing members), then every member.
+    pub fn shutdown(mut self) {
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+        for i in 0..self.members.len() {
+            self.kill_member(i);
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+        for i in 0..self.members.len() {
+            self.kill_member(i);
+        }
+    }
+}

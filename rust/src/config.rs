@@ -147,6 +147,39 @@ impl Default for AutotuneConfig {
     }
 }
 
+/// Cluster-router knobs (see [`crate::cluster`]; driven by
+/// `matexp route`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterSettings {
+    /// Member addresses (`host:port`) the router fans out to. Empty means
+    /// "no cluster": `matexp route` refuses to start.
+    pub members: Vec<String>,
+    /// Outstanding requests per member at which the router stops routing
+    /// to it; when every live member is at the threshold, new work is
+    /// shed with a typed [`MatexpError::Admission`].
+    pub shed_at: usize,
+    /// Milliseconds between health probes of each member.
+    pub health_ms: u64,
+    /// Egress reconnect attempts per broken member connection before the
+    /// router marks the member down.
+    pub reconnect_attempts: u32,
+    /// First egress reconnect delay, milliseconds (doubles per attempt,
+    /// capped internally).
+    pub reconnect_base_ms: u64,
+}
+
+impl Default for ClusterSettings {
+    fn default() -> Self {
+        Self {
+            members: Vec::new(),
+            shed_at: 64,
+            health_ms: 500,
+            reconnect_attempts: 5,
+            reconnect_base_ms: 50,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MatexpConfig {
@@ -175,6 +208,9 @@ pub struct MatexpConfig {
     pub cache: CacheSettings,
     /// Flight-recorder tracing policy (span ring, slow-request log).
     pub trace: TraceSettings,
+    /// Cluster-router policy (members, shedding, health cadence) for
+    /// `matexp route`.
+    pub cluster: ClusterSettings,
     /// Runtime kernel-autotuner policy (startup probing, probe budget).
     pub autotune: AutotuneConfig,
     /// Use the fused `sqmul` executable in binary plans.
@@ -207,6 +243,7 @@ impl Default for MatexpConfig {
             pool: PoolConfig::default(),
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
+            cluster: ClusterSettings::default(),
             autotune: AutotuneConfig::default(),
             fused_sqmul: true,
             use_square_chains: true,
@@ -376,6 +413,49 @@ impl MatexpConfig {
                         }
                     }
                 }
+                "cluster" => {
+                    let c = val.as_obj().ok_or_else(|| bad("cluster"))?;
+                    for (ck, cv) in c {
+                        match ck.as_str() {
+                            "members" => {
+                                let arr = cv.as_arr().ok_or_else(|| bad("cluster.members"))?;
+                                let mut members = Vec::with_capacity(arr.len());
+                                for m in arr {
+                                    members.push(
+                                        m.as_str()
+                                            .ok_or_else(|| bad("cluster.members"))?
+                                            .to_string(),
+                                    );
+                                }
+                                cfg.cluster.members = members;
+                            }
+                            "shed_at" => {
+                                cfg.cluster.shed_at =
+                                    cv.as_usize().ok_or_else(|| bad("cluster.shed_at"))?
+                            }
+                            "health_ms" => {
+                                cfg.cluster.health_ms =
+                                    cv.as_u64().ok_or_else(|| bad("cluster.health_ms"))?
+                            }
+                            "reconnect_attempts" => {
+                                cfg.cluster.reconnect_attempts = cv
+                                    .as_u64()
+                                    .ok_or_else(|| bad("cluster.reconnect_attempts"))?
+                                    as u32
+                            }
+                            "reconnect_base_ms" => {
+                                cfg.cluster.reconnect_base_ms = cv
+                                    .as_u64()
+                                    .ok_or_else(|| bad("cluster.reconnect_base_ms"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field cluster.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
                 "autotune" => {
                     let a = val.as_obj().ok_or_else(|| bad("autotune"))?;
                     for (ak, av) in a {
@@ -483,6 +563,25 @@ impl MatexpConfig {
                 ]
             ),
             (
+                "cluster",
+                json_obj![
+                    (
+                        "members",
+                        Json::Arr(
+                            self.cluster
+                                .members
+                                .iter()
+                                .map(|m| Json::Str(m.clone()))
+                                .collect()
+                        )
+                    ),
+                    ("shed_at", self.cluster.shed_at),
+                    ("health_ms", self.cluster.health_ms),
+                    ("reconnect_attempts", u64::from(self.cluster.reconnect_attempts)),
+                    ("reconnect_base_ms", self.cluster.reconnect_base_ms),
+                ]
+            ),
+            (
                 "autotune",
                 json_obj![
                     ("enabled", self.autotune.enabled),
@@ -554,6 +653,22 @@ impl MatexpConfig {
             return Err(MatexpError::Config(
                 "backend \"pool\" needs at least one device in pool.devices".into(),
             ));
+        }
+        if self.cluster.shed_at == 0 {
+            return Err(MatexpError::Config("cluster.shed_at must be >= 1".into()));
+        }
+        if self.cluster.health_ms == 0 {
+            return Err(MatexpError::Config("cluster.health_ms must be >= 1".into()));
+        }
+        if self.cluster.reconnect_attempts == 0 {
+            return Err(MatexpError::Config("cluster.reconnect_attempts must be >= 1".into()));
+        }
+        for m in &self.cluster.members {
+            if !m.contains(':') {
+                return Err(MatexpError::Config(format!(
+                    "cluster.members entry {m:?} is not a host:port address"
+                )));
+            }
         }
         Ok(())
     }
@@ -742,6 +857,46 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = MatexpConfig::default();
         cfg.autotune.sizes.push(0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_settings_parse_and_validate() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(
+                r#"{"cluster":{"members":["a:1","b:2"],"shed_at":8,"health_ms":100,
+                    "reconnect_attempts":3,"reconnect_base_ms":10}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.members, vec!["a:1".to_string(), "b:2".to_string()]);
+        assert_eq!(cfg.cluster.shed_at, 8);
+        assert_eq!(cfg.cluster.health_ms, 100);
+        assert_eq!(cfg.cluster.reconnect_attempts, 3);
+        assert_eq!(cfg.cluster.reconnect_base_ms, 10);
+        cfg.validate().unwrap();
+        // defaults: no members (route refuses), sane thresholds
+        let d = ClusterSettings::default();
+        assert!(d.members.is_empty() && d.shed_at >= 1 && d.health_ms >= 1);
+        assert!(
+            MatexpConfig::from_json(&Json::parse(r#"{"cluster":{"wat":1}}"#).unwrap()).is_err()
+        );
+        assert!(MatexpConfig::from_json(
+            &Json::parse(r#"{"cluster":{"members":"a:1"}}"#).unwrap()
+        )
+        .is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.cluster.shed_at = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.cluster.health_ms = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.cluster.reconnect_attempts = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = MatexpConfig::default();
+        cfg.cluster.members.push("noport".into());
         assert!(cfg.validate().is_err());
     }
 

@@ -146,6 +146,7 @@
 
 pub mod bench;
 pub mod cache;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;

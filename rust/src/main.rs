@@ -6,6 +6,7 @@
 //! * `expm`       — compute `A^N` once, printing stats (any method)
 //! * `experiment` — regenerate a paper table+figures or an ablation
 //! * `serve`      — run the TCP serving front-end
+//! * `route`      — run the cluster router in front of N `serve` members
 //! * `loadtest`   — drive a server with concurrent wire clients, write a
 //!   `BENCH_*.json` latency/throughput snapshot
 //! * `trace`      — dump a running server's flight recorder as Chrome
@@ -64,6 +65,11 @@ COMMANDS:
                                         GFLOP/s + speedup vs blocked,
                                         at n in {256,512,1024} by default)
   serve        TCP front-end           [--addr HOST:PORT] [--workers W]
+  route        cluster router          --members A:1,B:2,… [--addr HOST:PORT]
+                                       [--shed-at K] [--health-ms MS]
+                                       (content-affinity fan-out over running
+                                        `matexp serve` members; same wire
+                                        protocol in as a single server)
   trace        dump a server's flight recorder as Chrome trace JSON
                                        [--addr HOST:PORT] [--out FILE]
                                        [--check]  (validate, print span count)
@@ -208,6 +214,7 @@ fn run(args: &Args) -> Result<()> {
         "expm" => cmd_expm(args, &cfg),
         "experiment" => cmd_experiment(args, &cfg),
         "serve" => cmd_serve(args, cfg),
+        "route" => cmd_route(args, cfg),
         "trace" => cmd_trace(args, &cfg),
         "metrics" => cmd_metrics(args, &cfg),
         "loadtest" => cmd_loadtest(args, cfg),
@@ -622,6 +629,40 @@ fn cmd_serve(args: &Args, cfg: MatexpConfig) -> Result<()> {
     matexp::server::server::serve(service, &addr, conn_threads)
 }
 
+/// `matexp route` — run the cluster router: one listening socket speaking
+/// the full wire protocol, fanning expm work out to the member servers by
+/// content affinity (see [`matexp::cluster`]).
+fn cmd_route(args: &Args, mut cfg: MatexpConfig) -> Result<()> {
+    let conn_threads: usize = args.get_parsed_or("conn-threads", 16)?;
+    if let Some(list) = args.get("members") {
+        cfg.cluster.members =
+            list.split(',').map(str::trim).filter(|m| !m.is_empty()).map(String::from).collect();
+    }
+    if let Some(k) = args.get_parsed::<usize>("shed-at")? {
+        cfg.cluster.shed_at = k;
+    }
+    if let Some(ms) = args.get_parsed::<u64>("health-ms")? {
+        cfg.cluster.health_ms = ms;
+    }
+    args.reject_unknown()?;
+    cfg.validate()?;
+    if cfg.cluster.members.is_empty() {
+        return Err(MatexpError::Config(
+            "route needs at least one member (--members HOST:PORT,… or cluster.members)".into(),
+        ));
+    }
+    let router = matexp::cluster::Router::start(&cfg.server_addr, &cfg.cluster, conn_threads)?;
+    println!(
+        "matexp routing on {} over {} members (shed-at {}, health every {} ms)",
+        router.local_addr(),
+        cfg.cluster.members.len(),
+        cfg.cluster.shed_at,
+        cfg.cluster.health_ms,
+    );
+    router.join();
+    Ok(())
+}
+
 /// `matexp trace` — pull a running server's flight recorder and emit it
 /// as a Chrome trace-event document (Perfetto / `chrome://tracing`).
 fn cmd_trace(args: &Args, cfg: &MatexpConfig) -> Result<()> {
@@ -692,7 +733,7 @@ fn cmd_loadtest(args: &Args, cfg: MatexpConfig) -> Result<()> {
         one => vec![WireMode::from_str(one)?],
     };
     let codec_n: usize = args.get_parsed_or("codec-n", 1024)?;
-    let bench_id: u64 = args.get_parsed_or("bench-id", 7)?;
+    let bench_id: u64 = args.get_parsed_or("bench-id", 9)?;
     let out = args.get_or("out", &format!("BENCH_{bench_id}.json"));
     let external_addr = args.get("addr").map(str::to_string);
     args.reject_unknown()?;
@@ -727,7 +768,10 @@ fn cmd_loadtest(args: &Args, cfg: MatexpConfig) -> Result<()> {
     let codec = loadtest::codec_roundtrip(codec_n, 3);
     print!("\n{}", loadtest::render(&reports, &codec));
 
-    let snap = loadtest::snapshot(bench_id, &lt, &reports, &codec);
+    // against a router, the status op yields per-member routed counts —
+    // the snapshot's affinity evidence; a plain server yields none
+    let members = loadtest::fetch_members(&addr);
+    let snap = loadtest::snapshot(bench_id, &lt, &reports, &codec, &members);
     loadtest::validate_snapshot(&snap)?;
     std::fs::write(&out, snap.to_string_pretty() + "\n")?;
     println!("snapshot written to {out}");

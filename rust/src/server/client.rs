@@ -15,22 +15,58 @@
 //! — including `wait` on tickets submitted earlier — returns
 //! [`MatexpError::Disconnected`] instead of blocking on a socket that
 //! will never answer.
+//!
+//! Opt-in **auto-reconnect** ([`MatexpClient::with_reconnect`]) softens
+//! that: the next *send* on a poisoned client redials the original
+//! address with capped, jittered exponential backoff and carries on —
+//! but tickets from before the break stay lost (their `wait` returns a
+//! typed [`MatexpError::Disconnected`]; a reconnect can never invent the
+//! replies a dead server owed). The cluster router leans on this to ride
+//! out member restarts without rebuilding its egress pool.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
+use crate::cache::CacheControl;
 use crate::coordinator::request::Method;
 use crate::error::{MatexpError, Result};
 use crate::linalg::matrix::Matrix;
 use crate::server::frame::{self, Frame};
-use crate::server::proto::{MetricsFormat, Payload, WireRequest, WireResponse, WireStats};
+use crate::server::proto::{
+    ClusterAction, MetricsFormat, Payload, WireRequest, WireResponse, WireStats,
+};
 use crate::util::json::Json;
+
+/// Backoff schedule for [`MatexpClient::with_reconnect`]: attempt `k`
+/// sleeps `min(base_ms << k, max_ms)` plus up to 50% random jitter, and
+/// after `max_attempts` consecutive failures the client stays poisoned
+/// with a typed "exhausted" [`MatexpError::Disconnected`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReconnectPolicy {
+    /// Consecutive dial failures tolerated before giving up.
+    pub max_attempts: u32,
+    /// First retry delay in milliseconds (doubles per attempt).
+    pub base_ms: u64,
+    /// Ceiling on any single retry delay in milliseconds.
+    pub max_ms: u64,
+}
+
+impl Default for ReconnectPolicy {
+    /// 5 attempts, 50 ms doubling to a 2 s cap — rides out a process
+    /// restart without hammering a host that is actually gone.
+    fn default() -> ReconnectPolicy {
+        ReconnectPolicy { max_attempts: 5, base_ms: 50, max_ms: 2_000 }
+    }
+}
 
 /// Blocking TCP client.
 pub struct MatexpClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// The `host:port` this client dialed — what auto-reconnect redials.
+    addr: String,
     /// Matrix payload encoding for JSON-line requests (server mirrors it
     /// back). Ignored on the binary frame path, which is always raw f32.
     payload: Payload,
@@ -54,6 +90,14 @@ pub struct MatexpClient {
     /// Wire bytes written / read over this connection's lifetime.
     bytes_out: u64,
     bytes_in: u64,
+    /// When set, a poisoned connection redials instead of failing fast.
+    reconnect: Option<ReconnectPolicy>,
+    /// Successful reconnects performed so far.
+    reconnects: u64,
+    /// Ids below this were submitted on a connection that has since been
+    /// replaced — their replies died with the old socket, so `wait`
+    /// returns a typed loss instead of blocking on the new one.
+    epoch_floor: u64,
 }
 
 /// Ticket for one in-flight pipelined request (resolve with
@@ -74,12 +118,11 @@ impl PendingExpm {
 impl MatexpClient {
     /// Connect to a `matexp serve` endpoint (`host:port`).
     pub fn connect(addr: &str) -> Result<MatexpClient> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?; // request lines must not sit in Nagle's buffer
-        let reader = BufReader::new(stream.try_clone()?);
+        let (reader, writer) = Self::dial(addr)?;
         Ok(MatexpClient {
             reader,
-            writer: stream,
+            writer,
+            addr: addr.to_string(),
             payload: Payload::Json,
             binary: false,
             poisoned: None,
@@ -89,7 +132,29 @@ impl MatexpClient {
             resolved_floor: 1,
             bytes_out: 0,
             bytes_in: 0,
+            reconnect: None,
+            reconnects: 0,
+            epoch_floor: 1,
         })
+    }
+
+    /// One TCP dial, shared by `connect` and auto-reconnect.
+    fn dial(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?; // request lines must not sit in Nagle's buffer
+        Ok((BufReader::new(stream.try_clone()?), stream))
+    }
+
+    /// Redial the original address automatically when the connection
+    /// breaks, per `policy` (see [`ReconnectPolicy`]).
+    pub fn with_reconnect(mut self, policy: ReconnectPolicy) -> MatexpClient {
+        self.reconnect = Some(policy);
+        self
+    }
+
+    /// Successful automatic reconnects over this client's lifetime.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
     }
 
     /// Use the compact base64 payload encoding on JSON lines (bit-exact,
@@ -145,7 +210,63 @@ impl MatexpClient {
         MatexpError::Disconnected(why)
     }
 
+    /// If the connection is poisoned and a reconnect policy is set,
+    /// redial before the next write. In-flight tickets are NOT replayed:
+    /// `pending` is dropped and `epoch_floor` advances past every id the
+    /// old connection handed out, so their `wait` fails typed instead of
+    /// pairing pre-break tickets with post-break replies.
+    fn ensure_connected(&mut self) -> Result<()> {
+        let policy = match (&self.poisoned, self.reconnect) {
+            (Some(_), Some(p)) => p,
+            _ => return Ok(()),
+        };
+        // spread a fleet's redials: jitter each delay by up to 50%,
+        // seeded from the clock (determinism is worthless here — every
+        // client backing off in lockstep is the failure mode)
+        let seed = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| u64::from(d.subsec_nanos()))
+            .unwrap_or(0x9e37_79b9)
+            | 1;
+        let mut rng = crate::linalg::rand::XorShift64::new(seed);
+        let mut attempt: u32 = 0;
+        loop {
+            match Self::dial(&self.addr) {
+                Ok((reader, writer)) => {
+                    self.reader = reader;
+                    self.writer = writer;
+                    self.poisoned = None;
+                    self.pending.clear();
+                    self.epoch_floor = self.next_id;
+                    self.reconnects += 1;
+                    if self.binary {
+                        // the frame upgrade was per-connection state
+                        self.binary = false;
+                        self.binary = self.negotiate_binary()?;
+                    }
+                    return Ok(());
+                }
+                Err(_) => {
+                    attempt += 1;
+                    if attempt >= policy.max_attempts {
+                        return Err(self.poison(format!(
+                            "reconnect to {} exhausted after {} attempts",
+                            self.addr, policy.max_attempts
+                        )));
+                    }
+                    let backoff = policy
+                        .base_ms
+                        .saturating_mul(1u64 << (attempt - 1).min(20))
+                        .min(policy.max_ms);
+                    let jitter = rng.next_below(backoff / 2 + 1);
+                    std::thread::sleep(Duration::from_millis(backoff + jitter));
+                }
+            }
+        }
+    }
+
     fn send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        self.ensure_connected()?;
         self.guard()?;
         if let Err(e) = self.writer.write_all(bytes) {
             return Err(self.poison(format!("write failed: {e}")));
@@ -249,6 +370,7 @@ impl MatexpClient {
                 matrix: matrix.data().to_vec(),
                 payload: self.payload,
                 id: Some(id),
+                cache: CacheControl::Use,
             };
             self.send(&req)?;
         }
@@ -266,6 +388,14 @@ impl MatexpClient {
         if job.id < self.resolved_floor || self.resolved.contains(&job.id) {
             return Err(MatexpError::Service(format!(
                 "ticket {} already resolved",
+                job.id
+            )));
+        }
+        // submitted before a reconnect replaced the connection: the old
+        // socket died owing this reply, and the new one never will send it
+        if job.id < self.epoch_floor {
+            return Err(MatexpError::Disconnected(format!(
+                "ticket {} was lost to a reconnect",
                 job.id
             )));
         }
@@ -301,7 +431,21 @@ impl MatexpClient {
         power: u64,
         method: Method,
     ) -> Result<(Matrix, WireStats)> {
-        if self.binary {
+        self.expm_cached(matrix, power, method, CacheControl::Use)
+    }
+
+    /// [`Self::expm`] with an explicit result-cache directive. `Use`
+    /// rides the binary frame path when negotiated; `Bypass`/`Refresh`
+    /// always go as a JSON line (the frame codec has no cache slot —
+    /// directives are rare, byte efficiency is for the hot path).
+    pub fn expm_cached(
+        &mut self,
+        matrix: &Matrix,
+        power: u64,
+        method: Method,
+        cache: CacheControl,
+    ) -> Result<(Matrix, WireStats)> {
+        if self.binary && cache == CacheControl::Use {
             let ticket = self.submit(matrix, power, method)?;
             return self.wait(&ticket);
         }
@@ -312,6 +456,7 @@ impl MatexpClient {
             matrix: matrix.data().to_vec(),
             payload: self.payload,
             id: None,
+            cache,
         };
         let resp = self.roundtrip(&req)?;
         Self::expm_payload(resp, matrix.n())
@@ -364,6 +509,14 @@ impl MatexpClient {
     /// (parsed JSON, ready to pretty-print into a Perfetto-loadable file).
     pub fn trace_dump(&mut self) -> Result<Json> {
         self.ok_payload(&WireRequest::Trace)
+    }
+
+    /// Issue a `cluster` membership op (join/leave/drain/status) and
+    /// return the peer's status document. Against a router this drives
+    /// membership; against a member, `drain`/`status` manage that one
+    /// node and join/leave answer a typed error.
+    pub fn cluster(&mut self, action: ClusterAction, addr: Option<&str>) -> Result<Json> {
+        self.ok_payload(&WireRequest::Cluster { action, addr: addr.map(str::to_string) })
     }
 
     /// Round-trip a payload-bearing control op and unwrap its `metrics`

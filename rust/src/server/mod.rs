@@ -15,7 +15,7 @@ pub mod frame;
 pub mod proto;
 pub mod server;
 
-pub use client::MatexpClient;
+pub use client::{MatexpClient, ReconnectPolicy};
 pub use frame::Frame;
-pub use proto::{WireRequest, WireResponse, WireStats};
+pub use proto::{ClusterAction, WireRequest, WireResponse, WireStats};
 pub use server::{serve, serve_background, Server};

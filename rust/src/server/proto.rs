@@ -6,6 +6,7 @@
 
 use std::str::FromStr;
 
+use crate::cache::CacheControl;
 use crate::coordinator::request::{ExecStats, ExpmResponse, Method};
 use crate::error::{MatexpError, Result};
 use crate::json_obj;
@@ -49,6 +50,51 @@ impl MetricsFormat {
     }
 }
 
+/// Cluster-management actions carried by the `cluster` wire op
+/// (`{"op":"cluster","action":"drain","addr":"host:port"}`).
+///
+/// `Join`/`Leave`/`Drain` address a [`crate::cluster::Router`];
+/// a member server answers `Status` (and accepts `Drain` against
+/// itself) but rejects membership changes — those are router state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterAction {
+    /// Add a member (`addr` required) to the router's set.
+    Join,
+    /// Remove a member (`addr` required) immediately, no drain.
+    Leave,
+    /// Stop routing new work to a member (`addr` required at the
+    /// router, absent when sent to the member itself), wait for its
+    /// in-flight work, then detach it.
+    Drain,
+    /// Report the cluster (or member) status document.
+    Status,
+}
+
+impl ClusterAction {
+    /// Canonical lowercase name (`action` field on the wire).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClusterAction::Join => "join",
+            ClusterAction::Leave => "leave",
+            ClusterAction::Drain => "drain",
+            ClusterAction::Status => "status",
+        }
+    }
+}
+
+impl FromStr for ClusterAction {
+    type Err = MatexpError;
+    fn from_str(s: &str) -> Result<ClusterAction> {
+        match s {
+            "join" => Ok(ClusterAction::Join),
+            "leave" => Ok(ClusterAction::Leave),
+            "drain" => Ok(ClusterAction::Drain),
+            "status" => Ok(ClusterAction::Status),
+            other => Err(MatexpError::Service(format!("unknown cluster action {other:?}"))),
+        }
+    }
+}
+
 /// One request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
@@ -72,6 +118,10 @@ pub enum WireRequest {
         payload: Payload,
         /// Client-chosen request id (pipelining), if any.
         id: Option<u64>,
+        /// Per-request cache directive (absent on the wire = `Use`, the
+        /// legacy behavior). The router also reads this to route
+        /// `Bypass` traffic least-load instead of by content affinity.
+        cache: CacheControl,
     },
     /// Service metrics snapshot, rendered per the requested format
     /// (absent on the wire = JSON, which legacy peers always get).
@@ -93,6 +143,16 @@ pub enum WireRequest {
     Hello {
         /// Highest frame version the client can speak.
         frame_version: u32,
+    },
+    /// Cluster management (`{"op":"cluster","action":...,"addr":...}`):
+    /// membership changes and drains against a router, status/drain
+    /// against a member. Replies carry the status document in the ok
+    /// reply's `metrics` payload slot.
+    Cluster {
+        /// What to do.
+        action: ClusterAction,
+        /// The member address the action targets, where one is needed.
+        addr: Option<String>,
     },
 }
 
@@ -337,13 +397,26 @@ impl WireRequest {
             WireRequest::Hello { frame_version } => {
                 format!(r#"{{"op":"hello","frame":{frame_version}}}"#)
             }
-            WireRequest::Expm { n, power, method, matrix, payload, id } => {
+            WireRequest::Cluster { action, addr } => {
+                let mut s = format!(r#"{{"op":"cluster","action":"{}""#, action.as_str());
+                if let Some(addr) = addr {
+                    s.push_str(&format!(r#","addr":{}"#, Json::from(addr.as_str())));
+                }
+                s.push('}');
+                s
+            }
+            WireRequest::Expm { n, power, method, matrix, payload, id, cache } => {
                 let mut s = format!(
                     r#"{{"op":"expm","n":{n},"power":{power},"method":"{}","#,
                     method.as_str()
                 );
                 if let Some(id) = id {
                     s.push_str(&format!(r#""id":{id},"#));
+                }
+                // `use` is the implicit legacy default: emitting nothing
+                // keeps these lines byte-compatible with older peers
+                if *cache != CacheControl::Use {
+                    s.push_str(&format!(r#""cache":"{}","#, cache.as_str()));
                 }
                 match payload {
                     Payload::Json => {
@@ -413,7 +486,23 @@ impl WireRequest {
                     (m, Payload::Json)
                 };
                 let id = v.get("id").and_then(Json::as_u64);
-                Ok(WireRequest::Expm { n, power, method, matrix, payload, id })
+                // tolerant like the metrics format: an unrecognized
+                // directive degrades to the legacy `use`
+                let cache = match v.get("cache").and_then(Json::as_str) {
+                    Some("bypass") => CacheControl::Bypass,
+                    Some("refresh") => CacheControl::Refresh,
+                    _ => CacheControl::Use,
+                };
+                Ok(WireRequest::Expm { n, power, method, matrix, payload, id, cache })
+            }
+            "cluster" => {
+                let action = ClusterAction::from_str(
+                    v.get("action")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| MatexpError::Service("cluster: bad \"action\"".into()))?,
+                )?;
+                let addr = v.get("addr").and_then(Json::as_str).map(str::to_string);
+                Ok(WireRequest::Cluster { action, addr })
             }
             other => Err(MatexpError::Service(format!("unknown op {other:?}"))),
         }
@@ -626,6 +715,7 @@ mod tests {
             matrix: vec![1.0; 4],
             payload: Payload::Json,
             id: None,
+            cache: CacheControl::Use,
         };
         let s = r.encode().unwrap();
         assert!(s.contains("\"op\":\"expm\""), "{s}");
@@ -641,6 +731,7 @@ mod tests {
             matrix: vec![0.1, -2.5, 3.0, f32::MIN_POSITIVE],
             payload: Payload::Base64,
             id: None,
+            cache: CacheControl::Use,
         };
         let s = r.encode().unwrap();
         assert!(s.contains("matrix_b64"), "{s}");
@@ -689,6 +780,8 @@ mod tests {
             WireRequest::Metrics { format: MetricsFormat::Json },
             WireRequest::Metrics { format: MetricsFormat::Prometheus },
             WireRequest::Trace,
+            WireRequest::Cluster { action: ClusterAction::Status, addr: None },
+            WireRequest::Cluster { action: ClusterAction::Drain, addr: Some("h:1".into()) },
         ] {
             assert_eq!(WireRequest::decode(&r.encode().unwrap()).unwrap(), r);
         }
@@ -699,6 +792,62 @@ mod tests {
         match WireRequest::decode(r#"{"op":"metrics","format":"yaml"}"#).unwrap() {
             WireRequest::Metrics { format } => assert_eq!(format, MetricsFormat::Json),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cluster_op_roundtrips_every_action() {
+        for action in
+            [ClusterAction::Join, ClusterAction::Leave, ClusterAction::Drain, ClusterAction::Status]
+        {
+            for addr in [None, Some("10.0.0.7:7070".to_string())] {
+                let r = WireRequest::Cluster { action, addr: addr.clone() };
+                let line = r.encode().unwrap();
+                assert!(line.contains(r#""op":"cluster""#), "{line}");
+                assert_eq!(line.contains("addr"), addr.is_some(), "{line}");
+                assert_eq!(WireRequest::decode(&line).unwrap(), r);
+            }
+        }
+        // an unknown action is a typed decode error, like an unknown op
+        assert!(WireRequest::decode(r#"{"op":"cluster","action":"explode"}"#).is_err());
+        assert!(WireRequest::decode(r#"{"op":"cluster"}"#).is_err());
+    }
+
+    #[test]
+    fn cache_directive_roundtrips_and_defaults_to_use() {
+        let mut r = WireRequest::Expm {
+            n: 2,
+            power: 4,
+            method: Method::Ours,
+            matrix: vec![1.0; 4],
+            payload: Payload::Json,
+            id: Some(3),
+            cache: CacheControl::Bypass,
+        };
+        let line = r.encode().unwrap();
+        assert!(line.contains(r#""cache":"bypass""#), "{line}");
+        assert_eq!(WireRequest::decode(&line).unwrap(), r);
+        if let WireRequest::Expm { cache, .. } = &mut r {
+            *cache = CacheControl::Refresh;
+        }
+        let line = r.encode().unwrap();
+        assert!(line.contains(r#""cache":"refresh""#), "{line}");
+        assert_eq!(WireRequest::decode(&line).unwrap(), r);
+        // the default `use` is implicit: absent on the wire, so encoded
+        // lines stay byte-compatible with pre-cluster peers...
+        if let WireRequest::Expm { cache, .. } = &mut r {
+            *cache = CacheControl::Use;
+        }
+        assert!(!r.encode().unwrap().contains("cache"), "{:?}", r.encode());
+        // ...and absent (or unrecognized) directives decode to `use`
+        for line in [
+            r#"{"op":"expm","n":2,"power":4,"method":"ours","matrix":[1,1,1,1]}"#,
+            r#"{"op":"expm","n":2,"power":4,"method":"ours","cache":"warp","matrix":[1,1,1,1]}"#,
+        ] {
+            match WireRequest::decode(line).unwrap() {
+                WireRequest::Expm { cache, .. } => assert_eq!(cache, CacheControl::Use),
+                other => panic!("{other:?}"),
+            }
         }
     }
 
@@ -827,6 +976,7 @@ mod tests {
             matrix: vec![0.0; 4],
             payload: Payload::Json,
             id: None,
+            cache: CacheControl::Use,
         };
         assert!(r.matrix().is_err());
     }
@@ -886,6 +1036,7 @@ mod tests {
             matrix: vec![1.0; 4],
             payload: Payload::Json,
             id: Some(41),
+            cache: CacheControl::Use,
         };
         let line = r.encode().unwrap();
         assert!(line.contains(r#""id":41"#), "{line}");
@@ -936,6 +1087,7 @@ mod tests {
             matrix: vec![0.5; 4],
             payload: Payload::Base64,
             id: None,
+            cache: CacheControl::Use,
         };
         assert!(!r.encode().unwrap().contains('\n'));
         assert!(!WireResponse::pong().encode().unwrap().contains('\n'));

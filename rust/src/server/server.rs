@@ -23,15 +23,17 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
+use crate::cache::CacheControl;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Method;
 use crate::coordinator::service::ServiceHandle;
 use crate::error::{MatexpError, Result};
 use crate::exec::{JobReply, Submission};
+use crate::json_obj;
 use crate::linalg::matrix::Matrix;
 use crate::runtime::arena::BufferArena;
 use crate::server::frame::{self, Frame};
-use crate::server::proto::{MetricsFormat, Payload, WireRequest, WireResponse};
+use crate::server::proto::{ClusterAction, MetricsFormat, Payload, WireRequest, WireResponse};
 use crate::trace;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -47,12 +49,21 @@ pub struct Server {
     accept_thread: Option<std::thread::JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     conns: ConnRegistry,
+    /// Set by a `cluster drain` wire op: stop admitting new expm work
+    /// (typed [`MatexpError::Admission`]) while in-flight jobs finish.
+    draining: Arc<AtomicBool>,
 }
 
 impl Server {
     /// The address the listener actually bound (tests bind port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Whether a `cluster drain` op has put this server into drain mode
+    /// (new expm submissions refused, in-flight work completing).
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 
     /// Block until the accept loop exits — "serve until shut down" (from
@@ -114,9 +125,13 @@ pub fn serve_background(
     let pool = ThreadPool::new(conn_threads, "matexp-conn");
     let stop = Arc::new(AtomicBool::new(false));
     let conns: ConnRegistry = Arc::new(Mutex::new(HashMap::new()));
+    // one drain flag shared by every connection: a `cluster drain` op on
+    // any of them switches the whole server to refusing new work
+    let draining = Arc::new(AtomicBool::new(false));
     let accept_thread = {
         let stop = Arc::clone(&stop);
         let conns = Arc::clone(&conns);
+        let draining = Arc::clone(&draining);
         std::thread::Builder::new()
             .name("matexp-accept".into())
             .spawn(move || {
@@ -143,12 +158,13 @@ pub fn serve_background(
                     let service = Arc::clone(&service);
                     let stop = Arc::clone(&stop);
                     let conns = Arc::clone(&conns);
+                    let draining = Arc::clone(&draining);
                     pool.execute(move || {
                         let peer = stream
                             .peer_addr()
                             .map(|a| a.to_string())
                             .unwrap_or_else(|_| "<unknown>".into());
-                        let outcome = handle_connection(&service, stream);
+                        let outcome = handle_connection(&service, stream, &draining);
                         conns.lock().expect("conn registry poisoned").remove(&cid);
                         // a cut socket during shutdown is expected noise
                         if let Err(e) = outcome {
@@ -160,7 +176,7 @@ pub fn serve_background(
                 }
             })?
     };
-    Ok(Server { local_addr, accept_thread: Some(accept_thread), stop, conns })
+    Ok(Server { local_addr, accept_thread: Some(accept_thread), stop, conns, draining })
 }
 
 /// Serve until shut down. Binds `addr`, prints the bound address, then
@@ -209,7 +225,11 @@ struct InflightEntry {
 /// In-flight pipelined jobs on one connection, by service id.
 type Inflight = Arc<Mutex<HashMap<u64, InflightEntry>>>;
 
-fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
+fn handle_connection(
+    service: &ServiceHandle,
+    stream: TcpStream,
+    draining: &AtomicBool,
+) -> Result<()> {
     stream.set_nodelay(true)?; // message-oriented RPC: don't let Nagle batch replies
     // one writer lock per connection: the reader (inline replies) and the
     // completion pump (pipelined replies) interleave whole messages only
@@ -230,7 +250,8 @@ fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
             .spawn(move || completion_pump(done_rx, &inflight, &writer, &metrics, &recycle_tx))
             .map_err(MatexpError::Io)?
     };
-    let outcome = read_loop(service, reader, &writer, &inflight, &done_tx, &metrics, &recycle_rx);
+    let outcome =
+        read_loop(service, reader, &writer, &inflight, &done_tx, &metrics, &recycle_rx, draining);
     // dropping the reader's sender lets the pump exit once every entry the
     // service still holds (clones of done_tx) has been completed
     drop(done_tx);
@@ -238,6 +259,7 @@ fn handle_connection(service: &ServiceHandle, stream: TcpStream) -> Result<()> {
     outcome
 }
 
+#[allow(clippy::too_many_arguments)]
 fn read_loop(
     service: &ServiceHandle,
     mut reader: BufReader<TcpStream>,
@@ -246,6 +268,7 @@ fn read_loop(
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
     recycle_rx: &Receiver<Vec<f32>>,
+    draining: &AtomicBool,
 ) -> Result<()> {
     // per-connection wire arena: frame payloads decode straight into
     // recycled result buffers (the arena is !Send and stays on this
@@ -269,6 +292,7 @@ fn read_loop(
                 metrics,
                 &wire_arena,
                 recycle_rx,
+                draining,
             )?;
         } else {
             let mut line = String::new();
@@ -280,7 +304,7 @@ fn read_loop(
             if line.trim().is_empty() {
                 continue;
             }
-            read_one_line(service, line, writer, inflight, done_tx, metrics)?;
+            read_one_line(service, line, writer, inflight, done_tx, metrics, draining)?;
         }
     }
 }
@@ -289,6 +313,7 @@ fn read_loop(
 /// line codec with the id salvaged best-effort from the raw text, so a
 /// pipelined client's ticket still resolves (to a typed error) instead
 /// of waiting forever on a reply that would otherwise carry no id.
+#[allow(clippy::too_many_arguments)]
 fn read_one_line(
     service: &ServiceHandle,
     line: &str,
@@ -296,6 +321,7 @@ fn read_one_line(
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
+    draining: &AtomicBool,
 ) -> Result<()> {
     let decode_start = trace::now_us();
     match WireRequest::decode(line) {
@@ -340,9 +366,41 @@ fn read_one_line(
             };
             write_line(writer, &resp, metrics)
         }
-        Ok(req @ WireRequest::Expm { .. }) => {
-            handle_expm(service, req, decode_start, writer, inflight, done_tx, metrics)
+        Ok(WireRequest::Cluster { action, .. }) => {
+            // member-side cluster surface: drain and status only — the
+            // router owns membership, a member can't join itself anywhere
+            let resp = match action {
+                ClusterAction::Drain => {
+                    draining.store(true, Ordering::SeqCst);
+                    member_status(draining)
+                }
+                ClusterAction::Status => member_status(draining),
+                ClusterAction::Join | ClusterAction::Leave => {
+                    WireResponse::from_error(&MatexpError::Service(
+                        "cluster membership ops are handled by the router, not members".into(),
+                    ))
+                }
+            };
+            write_line(writer, &resp, metrics)
         }
+        Ok(req @ WireRequest::Expm { .. }) => {
+            handle_expm(service, req, decode_start, writer, inflight, done_tx, metrics, draining)
+        }
+    }
+}
+
+/// A member's `cluster status` reply: its role and drain state, in the
+/// ok-reply payload slot shared with `metrics` and `trace`.
+fn member_status(draining: &AtomicBool) -> WireResponse {
+    let doc: Json =
+        json_obj![("role", "member"), ("draining", draining.load(Ordering::SeqCst))];
+    WireResponse::Ok {
+        result: None,
+        stats: None,
+        metrics: Some(doc),
+        payload: Payload::Json,
+        id: None,
+        frame: None,
     }
 }
 
@@ -366,6 +424,7 @@ fn read_one_frame(
     metrics: &Metrics,
     wire_arena: &BufferArena,
     recycle_rx: &Receiver<Vec<f32>>,
+    draining: &AtomicBool,
 ) -> Result<()> {
     let (kind, payload) = match frame::read_raw(reader, frame::MAX_PAYLOAD) {
         Ok(raw) => raw,
@@ -404,6 +463,7 @@ fn read_one_frame(
                     out.into_matrix(),
                     h.power,
                     h.method,
+                    CacheControl::Use,
                     h.id,
                     ReplyWire::Frame,
                     decode_start,
@@ -411,6 +471,7 @@ fn read_one_frame(
                     inflight,
                     done_tx,
                     metrics,
+                    draining,
                 )
             }
             Err(e) => {
@@ -435,6 +496,7 @@ fn read_one_frame(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_expm(
     service: &ServiceHandle,
     req: WireRequest,
@@ -443,11 +505,13 @@ fn handle_expm(
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
+    draining: &AtomicBool,
 ) -> Result<()> {
-    let WireRequest::Expm { power, method, payload, id: client_id, .. } = &req else {
+    let WireRequest::Expm { power, method, payload, id: client_id, cache, .. } = &req else {
         unreachable!("handle_expm is only called with Expm requests");
     };
-    let (power, method, payload, client_id) = (*power, *method, *payload, *client_id);
+    let (power, method, payload, client_id, cache) =
+        (*power, *method, *payload, *client_id, *cache);
     let matrix = match req.matrix() {
         Ok(m) => m,
         Err(e) => {
@@ -461,6 +525,7 @@ fn handle_expm(
             matrix,
             power,
             method,
+            cache,
             cid,
             ReplyWire::Line(payload),
             decode_start,
@@ -468,11 +533,17 @@ fn handle_expm(
             inflight,
             done_tx,
             metrics,
+            draining,
         ),
         // legacy one-shot peer: block and answer in order, as before
         None => {
+            if draining.load(Ordering::SeqCst) {
+                let e =
+                    MatexpError::Admission("server is draining: not accepting new work".into());
+                return write_line(writer, &WireResponse::from_error(&e), metrics);
+            }
             let n = matrix.n();
-            let submission = Submission::expm(matrix, power).method(method);
+            let submission = Submission::expm(matrix, power).method(method).cache(cache);
             // the trace id exists only from here; the decode span is
             // recorded retroactively against the measured start
             let t = submission.trace;
@@ -521,6 +592,7 @@ fn submit_pipelined(
     matrix: Matrix,
     power: u64,
     method: Method,
+    cache: CacheControl,
     cid: u64,
     wire: ReplyWire,
     decode_start: u64,
@@ -528,9 +600,16 @@ fn submit_pipelined(
     inflight: &Inflight,
     done_tx: &Sender<(u64, JobReply)>,
     metrics: &Metrics,
+    draining: &AtomicBool,
 ) -> Result<()> {
+    // drain gate: in-flight jobs finish, new ones answer a typed refusal
+    // the router (or any client) can distinguish from overload
+    if draining.load(Ordering::SeqCst) {
+        let e = MatexpError::Admission("server is draining: not accepting new work".into());
+        return write_reply_error(writer, &e, cid, wire, metrics);
+    }
     let n = matrix.n();
-    let submission = Submission::expm(matrix, power).method(method);
+    let submission = Submission::expm(matrix, power).method(method).cache(cache);
     // the trace id is minted with the submission; the decode span is
     // recorded retroactively against the measured start
     let trace_id = submission.trace;

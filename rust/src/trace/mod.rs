@@ -146,6 +146,11 @@ pub enum SpanKind {
     CacheMiss(Tier),
     /// A cache tier stored a fresh entry.
     CacheStore(Tier),
+    /// Cluster router: one routing decision (digest → member pick,
+    /// including reroutes around down members).
+    Route,
+    /// Cluster router: one egress round-trip to a chosen member.
+    MemberSend,
 }
 
 impl SpanKind {
@@ -170,6 +175,8 @@ impl SpanKind {
             SpanKind::CacheStore(Tier::Plan) => "cache_store_plan",
             SpanKind::CacheStore(Tier::Prepared) => "cache_store_prepared",
             SpanKind::CacheStore(Tier::Result) => "cache_store_result",
+            SpanKind::Route => "route",
+            SpanKind::MemberSend => "member_send",
         }
     }
 
@@ -181,6 +188,7 @@ impl SpanKind {
             SpanKind::Plan | SpanKind::Prepare => "sched",
             SpanKind::Launch | SpanKind::Execute => "exec",
             SpanKind::CacheHit(_) | SpanKind::CacheMiss(_) | SpanKind::CacheStore(_) => "cache",
+            SpanKind::Route | SpanKind::MemberSend => "cluster",
         }
     }
 
@@ -210,6 +218,8 @@ impl SpanKind {
             SpanKind::CacheHit(_) => 8,
             SpanKind::CacheMiss(_) => 9,
             SpanKind::CacheStore(_) => 10,
+            SpanKind::Route => 11,
+            SpanKind::MemberSend => 12,
         }
     }
 
@@ -251,6 +261,8 @@ impl SpanKind {
             8 => SpanKind::CacheHit(tier),
             9 => SpanKind::CacheMiss(tier),
             10 => SpanKind::CacheStore(tier),
+            11 => SpanKind::Route,
+            12 => SpanKind::MemberSend,
             _ => return None,
         })
     }
@@ -607,6 +619,8 @@ mod tests {
             SpanKind::CacheHit(Tier::Plan),
             SpanKind::CacheMiss(Tier::Prepared),
             SpanKind::CacheStore(Tier::Result),
+            SpanKind::Route,
+            SpanKind::MemberSend,
         ];
         let ops = [
             None,

@@ -1,0 +1,148 @@
+//! Regression: [`MatexpClient`] auto-reconnect against a scripted fake
+//! server — kill the connection and the client redials and carries on,
+//! tickets from before the break fail with the typed "lost to a
+//! reconnect" error instead of blocking forever, and when the listener
+//! itself is gone the backoff schedule exhausts into a typed error.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+
+use matexp::coordinator::request::Method;
+use matexp::error::MatexpError;
+use matexp::linalg::matrix::Matrix;
+use matexp::server::proto::{WireRequest, WireResponse};
+use matexp::server::{MatexpClient, ReconnectPolicy};
+
+/// Millisecond-scale backoff so the failure paths stay fast under test.
+fn fast_policy() -> ReconnectPolicy {
+    ReconnectPolicy { max_attempts: 4, base_ms: 1, max_ms: 4 }
+}
+
+/// Answer `count` JSON lines on `conn` (pong for pings, a typed error
+/// for anything else), then hang up by returning.
+fn serve_lines(conn: TcpStream, count: usize) {
+    conn.set_nodelay(true).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    for _ in 0..count {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return, // client went away first
+            Ok(_) => {}
+        }
+        let reply = match WireRequest::decode(line.trim_end()) {
+            Ok(WireRequest::Ping) => WireResponse::pong(),
+            _ => WireResponse::from_error(&MatexpError::Service(
+                "fake server only answers pings".into(),
+            )),
+        };
+        let encoded = reply.encode().unwrap();
+        if writer.write_all(encoded.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            return;
+        }
+    }
+}
+
+#[test]
+fn client_redials_after_the_server_hangs_up() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (hung_up_tx, hung_up) = mpsc::channel();
+    let server = thread::spawn(move || {
+        // first connection: answer exactly one ping, then hang up
+        let (conn, _) = listener.accept().unwrap();
+        serve_lines(conn, 1);
+        hung_up_tx.send(()).unwrap();
+        // second connection: the redial — keep serving
+        let (conn, _) = listener.accept().unwrap();
+        serve_lines(conn, usize::MAX);
+    });
+
+    let mut client = MatexpClient::connect(&addr).unwrap().with_reconnect(fast_policy());
+    client.ping().expect("first connection serves");
+    hung_up.recv().unwrap();
+
+    // the call that DISCOVERS the dead socket fails typed (the reply it
+    // was owed died with the connection) ...
+    match client.ping() {
+        Err(MatexpError::Disconnected(_)) => {}
+        other => panic!("expected Disconnected on the broken socket, got {other:?}"),
+    }
+    // ... and the next send redials transparently
+    client.ping().expect("redial carries on");
+    assert_eq!(client.reconnects(), 1, "exactly one reconnect");
+    client.ping().expect("the redialed connection is stable");
+    assert_eq!(client.reconnects(), 1, "no spurious redials once healthy");
+
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn tickets_from_before_the_break_fail_typed_after_reconnect() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (hung_up_tx, hung_up) = mpsc::channel();
+    let server = thread::spawn(move || {
+        // first connection: swallow the pipelined submit unanswered, then
+        // hang up — the reply this ticket is owed will never exist
+        let (conn, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        drop(reader);
+        hung_up_tx.send(()).unwrap();
+        let (conn, _) = listener.accept().unwrap();
+        serve_lines(conn, usize::MAX);
+    });
+
+    let mut client = MatexpClient::connect(&addr).unwrap().with_reconnect(fast_policy());
+    let ticket = client.submit(&Matrix::identity(4), 8, Method::Ours).unwrap();
+    hung_up.recv().unwrap();
+
+    // drive the client over the break: one call discovers the dead
+    // socket, the next one reconnects
+    assert!(client.ping().is_err(), "the broken socket must surface");
+    client.ping().expect("redial carries on");
+    assert_eq!(client.reconnects(), 1);
+
+    // the pre-break ticket is typed-lost, not silently re-paired with
+    // replies from the new connection
+    match client.wait(&ticket) {
+        Err(MatexpError::Disconnected(msg)) => {
+            assert!(msg.contains("lost to a reconnect"), "unexpected loss message: {msg}")
+        }
+        other => panic!("pre-break ticket must fail typed, got {other:?}"),
+    }
+
+    drop(client);
+    server.join().unwrap();
+}
+
+#[test]
+fn backoff_exhausts_into_a_typed_error_when_the_listener_is_gone() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = thread::spawn(move || {
+        let (conn, _) = listener.accept().unwrap();
+        serve_lines(conn, 1);
+        // listener drops here: the port stops answering entirely
+    });
+
+    let mut client = MatexpClient::connect(&addr).unwrap().with_reconnect(fast_policy());
+    client.ping().expect("first connection serves");
+    server.join().unwrap();
+
+    assert!(client.ping().is_err(), "the closed connection must surface");
+    // every redial is refused; after max_attempts the client reports the
+    // exhaustion as a typed error instead of retrying forever
+    match client.ping() {
+        Err(MatexpError::Disconnected(msg)) => {
+            assert!(msg.contains("exhausted after 4 attempts"), "unexpected message: {msg}")
+        }
+        other => panic!("expected typed exhaustion, got {other:?}"),
+    }
+    assert_eq!(client.reconnects(), 0, "no dial ever succeeded");
+}

@@ -1,0 +1,279 @@
+//! Integration: the cluster tier end-to-end on real sockets — a
+//! [`matexp::cluster::Cluster`] of three member servers behind the
+//! content-affinity router. Covers the acceptance bar for the tier:
+//! repeated digests concentrate on their rendezvous owners (≥90%
+//! affinity), routed results are bit-identical to a single server's,
+//! killing a member loses no subsequent requests, saturation sheds with
+//! the typed `Admission` error, and drain + runtime join/leave work over
+//! the `cluster` wire op.
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use matexp::cache::CacheControl;
+use matexp::cluster::Cluster;
+use matexp::config::{ClusterSettings, MatexpConfig};
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::error::MatexpError;
+use matexp::linalg::matrix::Matrix;
+use matexp::server::server::serve_background;
+use matexp::server::{ClusterAction, MatexpClient};
+use matexp::util::json::Json;
+
+/// A deterministic, numerically tame workload matrix (spectral radius
+/// well under 1, so high powers stay finite).
+fn hot_matrix(n: usize, seed: u64) -> Matrix {
+    Matrix::random_spectral(n, 0.6, seed)
+}
+
+/// Sum of a status row counter across every member in a router status
+/// document.
+fn sum_member_counter(status: &Json, field: &str) -> u64 {
+    status
+        .get("members")
+        .and_then(Json::as_arr)
+        .map(|rows| rows.iter().filter_map(|r| r.get(field).and_then(Json::as_u64)).sum())
+        .unwrap_or(0)
+}
+
+#[test]
+fn repeated_digests_concentrate_with_affinity_and_match_single_server() {
+    let cluster = Cluster::spawn_local(3).expect("cluster spawns");
+    let mut client = MatexpClient::connect(&cluster.router_addr()).expect("connect router");
+    assert!(client.negotiate_binary().expect("hello roundtrips"), "router must ack frames");
+
+    // two hot matrices, each repeated many times through the router
+    let hot = [hot_matrix(32, 11), hot_matrix(32, 22)];
+    let mut routed: Vec<Matrix> = Vec::new();
+    for round in 0..15 {
+        for m in &hot {
+            let (result, _) = client.expm(m, 64, Method::Ours).expect("routed expm");
+            if round == 0 {
+                routed.push(result);
+            }
+        }
+    }
+
+    // every request was cache-eligible and nothing was saturated, so the
+    // router must have placed ALL of them by affinity (≥90% is the
+    // acceptance floor; the deterministic path gives 100%)
+    let status = client.cluster(ClusterAction::Status, None).expect("status");
+    let affinity = sum_member_counter(&status, "routed_affinity");
+    let total = sum_member_counter(&status, "routed");
+    assert_eq!(total, 30, "all requests accounted for: {status}");
+    assert!(
+        affinity as f64 >= 0.9 * total as f64,
+        "affinity {affinity}/{total} below 90%: {status}"
+    );
+
+    // concentration: two distinct digests can warm at most two members —
+    // the third must have seen nothing
+    let rows = status.get("members").and_then(Json::as_arr).expect("members block");
+    assert_eq!(rows.len(), 3);
+    let busy = rows
+        .iter()
+        .filter(|r| r.get("routed").and_then(Json::as_u64).unwrap_or(0) > 0)
+        .count();
+    assert!(busy <= hot.len(), "2 hot digests spread over {busy} members: {status}");
+
+    // bit-identical to a single server computing the same submissions
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let single = serve_background(service, "127.0.0.1:0", 4).expect("binds");
+    let mut direct = MatexpClient::connect(&single.local_addr().to_string()).expect("connect");
+    for (m, via_router) in hot.iter().zip(&routed) {
+        let (expect, _) = direct.expm(m, 64, Method::Ours).expect("direct expm");
+        let same = expect
+            .data()
+            .iter()
+            .zip(via_router.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "routed result differs bitwise from single-server result");
+    }
+
+    cluster.shutdown();
+}
+
+#[test]
+fn killing_a_member_loses_no_subsequent_requests() {
+    let mut cluster = Cluster::spawn_local(3).expect("cluster spawns");
+    let addr = cluster.router_addr();
+    let mut client = MatexpClient::connect(&addr).expect("connect router");
+
+    // warm every member's egress path with a spread of digests
+    for seed in 0..6 {
+        let m = hot_matrix(24, 100 + seed);
+        client.expm(&m, 32, Method::Ours).expect("warmup expm");
+    }
+
+    cluster.kill_member(0);
+
+    // same connection: the egress socket to the dead member is already
+    // open, so the first request aimed at it may fail with the typed
+    // in-flight error — but only typed errors, and only briefly
+    let mut typed_errors = 0;
+    let mut tail_ok = 0;
+    for seed in 0..20 {
+        let m = hot_matrix(24, 200 + seed);
+        match client.expm(&m, 32, Method::Ours) {
+            Ok((result, _)) => {
+                assert_eq!(result.n(), 24);
+                tail_ok += 1;
+            }
+            Err(MatexpError::Disconnected(_) | MatexpError::Service(_)) => {
+                typed_errors += 1;
+                tail_ok = 0;
+            }
+            Err(e) => panic!("untyped failure after member kill: {e:?}"),
+        }
+    }
+    assert!(typed_errors <= 3, "{typed_errors} typed errors after kill — reroute not sticking");
+    assert!(tail_ok >= 10, "requests kept failing after the router saw the dead member");
+
+    // a fresh connection has a fresh egress pool: the dead member fails
+    // at connect time, which reroutes transparently — zero errors
+    let mut fresh = MatexpClient::connect(&addr).expect("reconnect router");
+    for seed in 0..10 {
+        let m = hot_matrix(24, 300 + seed);
+        let (result, _) = fresh.expm(&m, 32, Method::Ours).expect("post-kill expm");
+        assert_eq!(result.n(), 24);
+    }
+
+    cluster.shutdown();
+}
+
+#[test]
+fn saturated_cluster_sheds_with_typed_admission() {
+    // one member, shed-at 1: while any request is in flight, every other
+    // pick must shed — the concurrent barrage below makes overlap certain
+    let settings = ClusterSettings { shed_at: 1, ..ClusterSettings::default() };
+    let cluster = Cluster::spawn_local_with(1, settings).expect("cluster spawns");
+    let addr = cluster.router_addr();
+
+    let threads = 4;
+    let per_thread = 6;
+    let barrier = Arc::new(Barrier::new(threads));
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        handles.push(thread::spawn(move || {
+            let mut client = MatexpClient::connect(&addr).expect("connect router");
+            barrier.wait();
+            let (mut ok, mut shed) = (0u32, 0u32);
+            for i in 0..per_thread {
+                // distinct matrices + bypass: no result-cache shortcut,
+                // so every request holds the member for real work
+                let m = hot_matrix(48, 1_000 + (t * per_thread + i) as u64);
+                match client.expm_cached(&m, 512, Method::Ours, CacheControl::Bypass) {
+                    Ok(_) => ok += 1,
+                    Err(MatexpError::Admission(msg)) => {
+                        assert!(msg.contains("saturated"), "unexpected admission text: {msg}");
+                        shed += 1;
+                    }
+                    Err(e) => panic!("expected ok or Admission, got {e:?}"),
+                }
+            }
+            (ok, shed)
+        }));
+    }
+    let mut total_ok = 0;
+    let mut total_shed = 0;
+    for h in handles {
+        let (ok, shed) = h.join().expect("client thread");
+        total_ok += ok;
+        total_shed += shed;
+    }
+    assert!(total_ok > 0, "nothing succeeded — the cluster is broken, not shedding");
+    assert!(total_shed > 0, "4 concurrent clients at shed-at=1 never overlapped");
+
+    // the router counted every shed it issued
+    let mut control = MatexpClient::connect(&addr).expect("connect router");
+    let status = control.cluster(ClusterAction::Status, None).expect("status");
+    let counted = status.get("shed_total").and_then(Json::as_u64).unwrap_or(0);
+    assert!(counted >= u64::from(total_shed), "shed_total {counted} < observed {total_shed}");
+
+    cluster.shutdown();
+}
+
+#[test]
+fn drain_detaches_the_member_and_it_refuses_direct_work() {
+    let cluster = Cluster::spawn_local(3).expect("cluster spawns");
+    let victim = cluster.member_addr(0).to_string();
+    let mut control = MatexpClient::connect(&cluster.router_addr()).expect("connect router");
+
+    let doc = control.cluster(ClusterAction::Drain, Some(victim.as_str())).expect("drain");
+    assert_eq!(doc.get("drained").and_then(Json::as_bool), Some(true), "{doc}");
+    assert_eq!(doc.get("detached").and_then(Json::as_bool), Some(true), "{doc}");
+    let rows = doc.get("members").and_then(Json::as_arr).expect("members block");
+    assert_eq!(rows.len(), 2, "drained member must leave the set: {doc}");
+    assert!(rows.iter().all(|r| r.get("member").and_then(Json::as_str) != Some(victim.as_str())));
+
+    // the member itself now refuses new direct work with the same typed
+    // admission error the single-server drain gate uses
+    let mut direct = MatexpClient::connect(&victim).expect("member still listens");
+    let status = direct.cluster(ClusterAction::Status, None).expect("member status");
+    assert_eq!(status.get("role").and_then(Json::as_str), Some("member"), "{status}");
+    assert_eq!(status.get("draining").and_then(Json::as_bool), Some(true), "{status}");
+    let m = hot_matrix(16, 7);
+    match direct.expm(&m, 16, Method::Ours) {
+        Err(MatexpError::Admission(msg)) => {
+            assert!(msg.contains("draining"), "unexpected admission text: {msg}")
+        }
+        other => panic!("draining member accepted work: {other:?}"),
+    }
+
+    // the remaining members absorb the drained member's digest range
+    for seed in 0..8 {
+        let m = hot_matrix(24, 400 + seed);
+        let (result, _) = control.expm(&m, 32, Method::Ours).expect("post-drain expm");
+        assert_eq!(result.n(), 24);
+    }
+
+    cluster.shutdown();
+}
+
+#[test]
+fn runtime_join_and_leave_reshape_the_member_set() {
+    let cluster = Cluster::spawn_local(2).expect("cluster spawns");
+    let mut control = MatexpClient::connect(&cluster.router_addr()).expect("connect router");
+
+    // a third, standalone member started outside the sim harness
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    cfg.cache.results = true;
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let extra = serve_background(service, "127.0.0.1:0", 4).expect("binds");
+    let extra_addr = extra.local_addr().to_string();
+
+    let doc = control.cluster(ClusterAction::Join, Some(extra_addr.as_str())).expect("join");
+    let rows = doc.get("members").and_then(Json::as_arr).expect("members block");
+    assert_eq!(rows.len(), 3, "join must grow the set: {doc}");
+
+    // traffic still flows over the reshaped set
+    for seed in 0..6 {
+        let m = hot_matrix(24, 500 + seed);
+        let (result, _) = control.expm(&m, 32, Method::Ours).expect("post-join expm");
+        assert_eq!(result.n(), 24);
+    }
+
+    let doc = control.cluster(ClusterAction::Leave, Some(extra_addr.as_str())).expect("leave");
+    let rows = doc.get("members").and_then(Json::as_arr).expect("members block");
+    assert_eq!(rows.len(), 2, "leave must shrink the set: {doc}");
+
+    // bad membership ops answer typed config errors, not protocol breaks
+    match control.cluster(ClusterAction::Join, Some("noport")) {
+        Err(MatexpError::Config(_)) => {}
+        other => panic!("join of a portless address must be a config error: {other:?}"),
+    }
+    match control.cluster(ClusterAction::Leave, Some("ghost:1")) {
+        Err(MatexpError::Config(_)) => {}
+        other => panic!("leave of an unknown member must be a config error: {other:?}"),
+    }
+
+    cluster.shutdown();
+}

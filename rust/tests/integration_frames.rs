@@ -9,6 +9,7 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::Arc;
 
 use matexp::bench::loadtest;
+use matexp::cache::CacheControl;
 use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
 use matexp::coordinator::service::Service;
@@ -200,6 +201,7 @@ fn binary_json_and_legacy_interleave_on_one_connection() {
         matrix: b.data().to_vec(),
         payload: Payload::Json,
         id: Some(2),
+        cache: CacheControl::Use,
     };
     writer.write_all((req.encode().unwrap() + "\n").as_bytes()).unwrap();
     // 3: legacy id-less JSON line (ordered one-shot contract)
@@ -210,6 +212,7 @@ fn binary_json_and_legacy_interleave_on_one_connection() {
         matrix: c.data().to_vec(),
         payload: Payload::Json,
         id: None,
+        cache: CacheControl::Use,
     };
     writer.write_all((req.encode().unwrap() + "\n").as_bytes()).unwrap();
 
@@ -298,6 +301,7 @@ fn corrupt_line_with_salvageable_id_resolves_its_ticket() {
         matrix: a.data().to_vec(),
         payload: Payload::Json,
         id: Some(id),
+        cache: CacheControl::Use,
     };
     writer.write_all((healthy(10, 2).encode().unwrap() + "\n").as_bytes()).unwrap();
     // truncated JSON — unparseable, but the id fragment is intact

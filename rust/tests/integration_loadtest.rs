@@ -87,7 +87,11 @@ fn snapshot_from_real_reports_validates() {
         .map(|&mode| loadtest::run_mode(&addr, mode, &cfg).expect("mode run"))
         .collect();
     let codec = loadtest::codec_roundtrip(64, 2);
-    let snap = loadtest::snapshot(6, &cfg, &reports, &codec);
+    // a plain server exposes no members block — fetch finds none, and the
+    // empty spread is still a valid v3 snapshot
+    let members = loadtest::fetch_members(&addr);
+    assert!(members.is_empty(), "single server must expose no member spread");
+    let snap = loadtest::snapshot(6, &cfg, &reports, &codec, &members);
     loadtest::validate_snapshot(&snap).expect("real snapshot validates");
     // the gate really gates: a snapshot claiming a foreign schema fails
     let damaged = snap.to_string().replace(loadtest::SNAPSHOT_SCHEMA, "someone-else/9");
