@@ -147,7 +147,9 @@ pub(crate) fn plan_for(
     if !enabled {
         return build();
     }
-    PlanCache::global().fetch(key, ctl, build)
+    let plan = PlanCache::global().fetch(key, ctl, build);
+    crate::store::persist_plan(&key, &plan);
+    plan
 }
 
 #[cfg(test)]

@@ -11,7 +11,12 @@
 //!
 //! Entries are whole result matrices, so the cache evicts **LRU against a
 //! byte budget** (`--cache-budget-mb`), not an entry count: one n=1024
-//! answer weighs 4 MiB, a thousand n=32 answers weigh the same.
+//! answer weighs 4 MiB, a thousand n=32 answers weigh the same. Each
+//! entry is charged its payload **plus** [`ResultCache::ENTRY_OVERHEAD`]
+//! for the key and bookkeeping it pins, so thousands of tiny results
+//! cannot overshoot the budget through uncounted metadata. When the
+//! persistence tier is active ([`crate::store`]), the budget **spills**
+//! demoted entries to disk instead of deleting the work.
 //!
 //! The tier is opt-in ([`crate::config::CacheSettings::results`]): a hit
 //! reports zero launches/transfers, which is the point for serving and a
@@ -23,9 +28,9 @@
 //! use matexp::coordinator::request::Method;
 //! use matexp::linalg::matrix::Matrix;
 //!
-//! // budget-eviction semantics, on a private instance: two 16x16 results
-//! // fit a 2 KiB budget only one at a time (16*16*4 = 1 KiB each + none
-//! // spare once the second arrives under a 1.5 KiB budget)
+//! // budget-eviction semantics, on a private instance: a 16x16 result
+//! // weighs 16*16*4 = 1 KiB of payload plus the fixed per-entry
+//! // overhead charge, so a 1.5 KiB budget holds one entry but not two
 //! let cache = ResultCache::new(1536);
 //! let a = Matrix::random(16, 1);
 //! let b = Matrix::random(16, 2);
@@ -165,7 +170,81 @@ impl ResultKey {
         key.cfg_digest = config_fingerprint(cfg);
         key
     }
+
+    /// Matrix dimension this key was computed for (sizes the payload a
+    /// store entry may carry).
+    pub(crate) fn n(&self) -> usize {
+        self.n
+    }
+
+    /// 128-bit store address: the content digest with every remaining
+    /// identity component (n, power, method, tolerance bucket,
+    /// conservative boundary, config fingerprint) folded in with the same
+    /// dual-FNV primes, so distinct keys address distinct store entries.
+    pub(crate) fn store_digest(&self) -> (u64, u64) {
+        const PRIME1: u64 = 0x0000_0100_0000_01b3;
+        const PRIME2: u64 = 0x9e37_79b9_7f4a_7c15;
+        let (mut h1, mut h2) = self.digest;
+        let words = [
+            self.n as u64,
+            self.power,
+            self.method as u64,
+            self.tol_bucket as u64,
+            self.conservative as u64,
+            self.cfg_digest,
+        ];
+        for w in words {
+            h1 = (h1 ^ w).wrapping_mul(PRIME1);
+            h2 = (h2 ^ w.rotate_left(32)).wrapping_mul(PRIME2);
+        }
+        (h1, h2)
+    }
+
+    /// Serialize every key field for embedding in a store payload —
+    /// [`ResultKey::from_bytes`] is the exact inverse, and the store
+    /// verifies the decoded key against the requested one so an
+    /// addressing collision can never serve foreign bits.
+    pub(crate) fn to_bytes(&self) -> [u8; KEY_BYTES] {
+        let mut out = [0u8; KEY_BYTES];
+        out[0..8].copy_from_slice(&self.digest.0.to_le_bytes());
+        out[8..16].copy_from_slice(&self.digest.1.to_le_bytes());
+        out[16..24].copy_from_slice(&(self.n as u64).to_le_bytes());
+        out[24..32].copy_from_slice(&self.power.to_le_bytes());
+        out[32] = self.method as u8;
+        out[33..41].copy_from_slice(&self.tol_bucket.to_le_bytes());
+        out[41] = self.conservative as u8;
+        out[42..50].copy_from_slice(&self.cfg_digest.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`ResultKey::to_bytes`]; `None` for short buffers or
+    /// non-canonical method/bool tags.
+    pub(crate) fn from_bytes(b: &[u8]) -> Option<ResultKey> {
+        if b.len() < KEY_BYTES {
+            return None;
+        }
+        let u64_at =
+            |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().expect("length checked"));
+        let method = *Method::all().get(b[32] as usize)?;
+        let conservative = match b[41] {
+            0 => false,
+            1 => true,
+            _ => return None,
+        };
+        Some(ResultKey {
+            digest: (u64_at(0), u64_at(8)),
+            n: u64_at(16) as usize,
+            power: u64_at(24),
+            method,
+            tol_bucket: u64_at(33) as i64,
+            conservative,
+            cfg_digest: u64_at(42),
+        })
+    }
 }
+
+/// Byte length of [`ResultKey::to_bytes`].
+pub(crate) const KEY_BYTES: usize = 50;
 
 /// What a warm hit hands back (plus the hit-side stats the policy adds).
 #[derive(Clone, Debug)]
@@ -195,6 +274,10 @@ struct ResultInner {
     bytes: u64,
     budget: u64,
     tick: u64,
+    /// When set (a persistent store is active), budget-driven demotions
+    /// hand their entries to [`crate::store::spill_result`] instead of
+    /// dropping the work — see [`ResultCache::set_spill`].
+    spill: bool,
 }
 
 /// LRU, byte-budgeted result cache (tier 3). See the module docs.
@@ -221,6 +304,7 @@ impl ResultCache {
                 bytes: 0,
                 budget: budget_bytes,
                 tick: 0,
+                spill: false,
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -229,36 +313,68 @@ impl ResultCache {
         }
     }
 
+    /// Fixed budget charge per entry on top of the matrix payload: the
+    /// key, the entry struct (cached matrix handle, byte count, recency
+    /// tick) and both index slots that pin it. Counting this is what
+    /// keeps thousands of tiny results from overshooting the byte budget
+    /// through uncounted metadata.
+    pub const ENTRY_OVERHEAD: u64 = (std::mem::size_of::<ResultKey>()
+        + std::mem::size_of::<Entry>()
+        + 2 * std::mem::size_of::<(u64, ResultKey)>()) as u64;
+
     /// The process-wide instance the executors share.
     pub fn global() -> &'static ResultCache {
         static GLOBAL: OnceLock<ResultCache> = OnceLock::new();
         GLOBAL.get_or_init(|| ResultCache::new(DEFAULT_BUDGET_BYTES))
     }
 
-    /// Retarget the byte budget, evicting LRU entries if the cache now
-    /// exceeds it.
+    /// Retarget the byte budget, evicting (or spilling) LRU entries if
+    /// the cache now exceeds it.
     pub fn set_budget(&self, budget_bytes: u64) {
         let mut guard = self.inner.lock().expect("result cache poisoned");
         let inner = &mut *guard;
+        let mut spilled = Vec::new();
         if inner.budget != budget_bytes {
             inner.budget = budget_bytes;
-            let evicted = Self::evict_to_fit(inner, 0);
+            let (evicted, demoted) = Self::evict_to_fit(inner, 0);
+            spilled = demoted;
             self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        drop(guard);
+        for (key, value) in &spilled {
+            crate::store::spill_result(key, value);
         }
     }
 
+    /// Route budget-driven demotions to the persistent store
+    /// ([`crate::store::spill_result`]) instead of dropping them. Set on
+    /// the process-wide instance whenever a store is active; private
+    /// instances default to plain eviction.
+    pub fn set_spill(&self, spill: bool) {
+        self.inner.lock().expect("result cache poisoned").spill = spill;
+    }
+
     /// Evict least-recently-used entries until `incoming` more bytes fit
-    /// the budget; returns how many entries were evicted. O(log n) per
-    /// eviction via the recency index.
-    fn evict_to_fit(inner: &mut ResultInner, incoming: u64) -> u64 {
+    /// the budget; returns how many entries were evicted plus the demoted
+    /// entries themselves when spilling is on (the caller hands them to
+    /// the store *after* releasing the lock). O(log n) per eviction via
+    /// the recency index.
+    fn evict_to_fit(
+        inner: &mut ResultInner,
+        incoming: u64,
+    ) -> (u64, Vec<(ResultKey, CachedExpm)>) {
         let mut evicted = 0;
+        let mut spilled = Vec::new();
         while inner.bytes + incoming > inner.budget && !inner.map.is_empty() {
             let (_, oldest) = inner.order.pop_first().expect("order mirrors map");
             let gone = inner.map.remove(&oldest).expect("order mirrors map");
             inner.bytes -= gone.bytes;
             evicted += 1;
+            if inner.spill {
+                spilled.push((oldest, gone.value));
+            }
         }
-        evicted
+        (evicted, spilled)
     }
 
     /// The cached answer for `key`, refreshing its recency. Counts a hit
@@ -283,9 +399,11 @@ impl ResultCache {
         }
     }
 
-    /// Store (or overwrite) the answer for `key`, evicting LRU entries to
-    /// respect the budget. An answer bigger than the whole budget is
-    /// dropped on the floor rather than flushing everything else.
+    /// Store (or overwrite) the answer for `key`, evicting (or spilling)
+    /// LRU entries to respect the budget. An answer bigger than the whole
+    /// budget is dropped on the floor rather than flushing everything
+    /// else. Each entry is charged its payload plus
+    /// [`ResultCache::ENTRY_OVERHEAD`].
     pub fn insert(
         &self,
         key: ResultKey,
@@ -293,7 +411,8 @@ impl ResultCache {
         method: Method,
         plan_kind: Option<PlanKind>,
     ) {
-        let bytes = (result.data().len() * std::mem::size_of::<f32>()) as u64;
+        let bytes =
+            (result.data().len() * std::mem::size_of::<f32>()) as u64 + Self::ENTRY_OVERHEAD;
         let mut guard = self.inner.lock().expect("result cache poisoned");
         let inner = &mut *guard;
         if bytes > inner.budget {
@@ -303,7 +422,7 @@ impl ResultCache {
             inner.bytes -= old.bytes;
             inner.order.remove(&old.last_used);
         }
-        let evicted = Self::evict_to_fit(inner, bytes);
+        let (evicted, spilled) = Self::evict_to_fit(inner, bytes);
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
         inner.tick += 1;
         let tick = inner.tick;
@@ -318,6 +437,24 @@ impl ResultCache {
         inner.order.insert(tick, key);
         inner.bytes += bytes;
         self.inserts.fetch_add(1, Ordering::Relaxed);
+        drop(guard);
+        for (key, value) in &spilled {
+            crate::store::spill_result(key, value);
+        }
+    }
+
+    /// The `limit` most recently used entries, newest first — what the
+    /// cluster artifact pull ([`crate::store::export_hot`]) ships to a
+    /// joining member.
+    pub fn export_recent(&self, limit: usize) -> Vec<(ResultKey, CachedExpm)> {
+        let guard = self.inner.lock().expect("result cache poisoned");
+        guard
+            .order
+            .iter()
+            .rev()
+            .take(limit)
+            .map(|(_, key)| (*key, guard.map[key].value.clone()))
+            .collect()
     }
 
     /// Cached entries.
@@ -389,6 +526,7 @@ impl ResultCachePolicy {
         if !cfg.cache.results || req.plan.is_some() || !req.cache.writes() {
             return ResultCachePolicy::Disabled;
         }
+        ResultCache::global().set_spill(crate::store::active().is_some());
         ResultCache::global().set_budget(cfg.cache.budget_bytes());
         let key = ResultKey::for_request(cfg, req);
         if req.cache.reads() {
@@ -398,13 +536,17 @@ impl ResultCachePolicy {
         }
     }
 
-    /// Serve the request from cache if the policy and the cache allow it.
-    /// The response reports zero launches/transfers and the measured
-    /// serve time as `wall_s` — a hit never touches a device.
+    /// Serve the request from cache if the policy and the cache allow it:
+    /// from the in-memory tier, or — on a memory miss with a persistent
+    /// store active — from a checksum-verified store entry promoted back
+    /// into memory ([`crate::store::load_result`]). The response reports
+    /// zero launches/transfers and the measured serve time as `wall_s` —
+    /// a hit never touches a device.
     pub fn lookup(&self, id: u64) -> Option<ExpmResponse> {
         let ResultCachePolicy::ReadWrite(key) = self else { return None };
         let t0 = Instant::now();
-        let hit = match ResultCache::global().get(key) {
+        let warm = ResultCache::global().get(key).or_else(|| crate::store::load_result(key));
+        let hit = match warm {
             Some(hit) => {
                 trace::event(trace::SpanKind::CacheHit(trace::Tier::Result), trace::current(), key.n);
                 hit
@@ -424,12 +566,16 @@ impl ResultCachePolicy {
     }
 
     /// Store a freshly computed response, when the policy allows writes.
+    /// Write-through: with a persistent store active the entry is also
+    /// persisted immediately, so a warm restart can serve it with zero
+    /// launches even if it is never demoted from memory.
     pub fn store(&self, resp: &ExpmResponse) {
         let key = match self {
             ResultCachePolicy::Disabled => return,
             ResultCachePolicy::ReadWrite(key) | ResultCachePolicy::WriteOnly(key) => key,
         };
         ResultCache::global().insert(*key, &resp.result, resp.method, resp.plan_kind);
+        crate::store::persist_result(key, &resp.result, resp.method, resp.plan_kind);
         trace::event(trace::SpanKind::CacheStore(trace::Tier::Result), trace::current(), key.n);
     }
 }
@@ -523,13 +669,14 @@ mod tests {
         assert_eq!(hit.result, m, "bit-identical payload");
         assert_eq!(hit.plan_kind, Some(PlanKind::Chained));
         assert_eq!((cache.hits(), cache.misses(), cache.inserts()), (1, 1, 1));
-        assert_eq!(cache.bytes(), 8 * 8 * 4);
+        assert_eq!(cache.bytes(), 8 * 8 * 4 + ResultCache::ENTRY_OVERHEAD);
     }
 
     #[test]
     fn lru_eviction_respects_recency() {
-        // budget fits exactly two 4x4 entries (64 bytes each)
-        let cache = ResultCache::new(128);
+        // budget fits exactly two 4x4 entries (64 payload bytes each,
+        // plus the per-entry overhead charge)
+        let cache = ResultCache::new(2 * (64 + ResultCache::ENTRY_OVERHEAD));
         let (a, b, c) = (mat(4, 1), mat(4, 2), mat(4, 3));
         cache.insert(key(&a, 2), &a, Method::Ours, None);
         cache.insert(key(&b, 2), &b, Method::Ours, None);
@@ -540,15 +687,17 @@ mod tests {
         assert!(cache.get(&key(&a, 2)).is_some(), "recently used survives");
         assert!(cache.get(&key(&c, 2)).is_some());
         assert_eq!(cache.evictions(), 1);
-        assert!(cache.bytes() <= 128);
+        assert!(cache.bytes() <= cache.budget());
     }
 
     #[test]
     fn oversized_entries_do_not_flush_the_cache() {
-        let cache = ResultCache::new(100);
-        let small = mat(4, 1); // 64 bytes: fits
+        // room for the small 4x4 entry (64 B + overhead) but not the
+        // 16x16 one (1024 B + overhead)
+        let cache = ResultCache::new(ResultCache::ENTRY_OVERHEAD + 200);
+        let small = mat(4, 1);
         cache.insert(key(&small, 2), &small, Method::Ours, None);
-        let huge = mat(16, 2); // 1024 bytes: over the whole budget
+        let huge = mat(16, 2);
         cache.insert(key(&huge, 2), &huge, Method::Ours, None);
         assert_eq!(cache.len(), 1, "oversized insert dropped, small entry kept");
         assert!(cache.get(&key(&small, 2)).is_some());
@@ -562,9 +711,77 @@ mod tests {
             cache.insert(key(&m, 2), &m, Method::Ours, None);
         }
         assert_eq!(cache.len(), 4);
-        cache.set_budget(2 * 8 * 8 * 4);
-        assert!(cache.len() <= 2, "shrunk budget evicts down");
+        cache.set_budget(2 * (8 * 8 * 4 + ResultCache::ENTRY_OVERHEAD));
+        assert_eq!(cache.len(), 2, "shrunk budget evicts down to what fits");
         assert!(cache.bytes() <= cache.budget());
+    }
+
+    #[test]
+    fn byte_accounting_matches_the_exact_model_for_tiny_entries() {
+        // the regression this guards: counting only matrix payloads let
+        // thousands of tiny results overshoot the budget through
+        // uncounted key/entry metadata (~ENTRY_OVERHEAD per entry, 15x
+        // the payload of a 2x2 result)
+        let per_entry = 2 * 2 * 4 + ResultCache::ENTRY_OVERHEAD;
+        let capacity = 100u64;
+        let cache = ResultCache::new(capacity * per_entry);
+        for s in 0..4000 {
+            let m = mat(2, s);
+            cache.insert(key(&m, 2), &m, Method::Ours, None);
+        }
+        assert_eq!(cache.len() as u64, capacity, "exactly the modeled capacity");
+        assert_eq!(cache.bytes(), capacity * per_entry, "bytes match the exact model");
+        assert!(cache.bytes() <= cache.budget());
+        assert_eq!(cache.evictions(), 4000 - capacity, "each overflow evicts exactly one");
+    }
+
+    #[test]
+    fn export_recent_returns_newest_first() {
+        let cache = ResultCache::new(1 << 20);
+        let mats: Vec<Matrix> = (0..3).map(mat8).collect();
+        for m in &mats {
+            cache.insert(key(m, 2), m, Method::Ours, None);
+        }
+        // touch the oldest so recency order is 0, 2, 1
+        assert!(cache.get(&key(&mats[0], 2)).is_some());
+        let hot = cache.export_recent(2);
+        assert_eq!(hot.len(), 2);
+        assert_eq!(hot[0].0, key(&mats[0], 2), "most recently used first");
+        assert_eq!(hot[1].0, key(&mats[2], 2));
+        assert_eq!(hot[0].1.result, mats[0], "payload rides along");
+        assert_eq!(cache.export_recent(10).len(), 3, "limit caps, never pads");
+    }
+
+    fn mat8(seed: u64) -> Matrix {
+        mat(8, seed)
+    }
+
+    #[test]
+    fn key_bytes_roundtrip_and_store_digests_separate() {
+        let m = mat(8, 5);
+        let keys = [
+            key(&m, 64),
+            key(&m, 65),
+            ResultKey::for_parts(&m, 64, Method::OursPacked, None),
+            ResultKey::for_parts(&m, 64, Method::Ours, Some(1e-3)),
+        ];
+        let mut digests = Vec::new();
+        for k in &keys {
+            assert_eq!(ResultKey::from_bytes(&k.to_bytes()), Some(*k), "bit-exact roundtrip");
+            digests.push(k.store_digest());
+            assert_eq!(k.store_digest(), k.store_digest(), "deterministic");
+        }
+        digests.sort_unstable();
+        digests.dedup();
+        assert_eq!(digests.len(), keys.len(), "distinct keys, distinct store addresses");
+        // decoding rejects short buffers and non-canonical tags
+        assert_eq!(ResultKey::from_bytes(&[0u8; 10]), None);
+        let mut bad_method = keys[0].to_bytes();
+        bad_method[32] = 200;
+        assert_eq!(ResultKey::from_bytes(&bad_method), None);
+        let mut bad_bool = keys[0].to_bytes();
+        bad_bool[41] = 7;
+        assert_eq!(ResultKey::from_bytes(&bad_bool), None);
     }
 
     #[test]

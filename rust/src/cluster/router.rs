@@ -534,6 +534,41 @@ fn handle_cluster(
                 "cluster drain needs an \"addr\" (the member to drain)".into(),
             )),
         },
+        ClusterAction::Pull => match addr {
+            // one member's export — the owner a joining peer warms from
+            Some(a) => match shared.membership.get(&a) {
+                Some(member) => ok_doc(json_obj![
+                    ("role", "router"),
+                    ("member", member.name()),
+                    ("artifacts", Json::Arr(member_export(member.name()))),
+                ]),
+                None => WireResponse::from_error(&MatexpError::Config(format!(
+                    "unknown member {a:?}"
+                ))),
+            },
+            // no addr: aggregate every live member's hottest artifacts
+            None => {
+                let mut all = Vec::new();
+                for member in shared.membership.snapshot() {
+                    if member.is_up() {
+                        all.extend(member_export(member.name()));
+                    }
+                }
+                ok_doc(json_obj![("role", "router"), ("artifacts", Json::Arr(all))])
+            }
+        },
+    }
+}
+
+/// Fetch one member's hot-artifact export, best effort: a member that
+/// cannot be reached or answers without an `artifacts` array contributes
+/// nothing rather than failing the pull.
+fn member_export(addr: &str) -> Vec<Json> {
+    let Ok(mut c) = MatexpClient::connect(addr) else { return Vec::new() };
+    let Ok(doc) = c.cluster(ClusterAction::Pull, None) else { return Vec::new() };
+    match doc.get("artifacts").and_then(|a| a.as_arr()) {
+        Some(items) => items.to_vec(),
+        None => Vec::new(),
     }
 }
 

@@ -98,6 +98,47 @@ impl CacheSettings {
     }
 }
 
+/// Persistent artifact-store knobs (see [`crate::store`]).
+///
+/// Off by default (`dir: None`): no persistence, the result cache evicts
+/// instead of spilling, and the store counters stay at zero. Setting a
+/// directory (`--store-dir`) turns the tier on: results, the autotune
+/// table and memoized plans persist there, survive restarts, and memory
+/// evictions demote to disk instead of deleting work.
+///
+/// ```
+/// use matexp::prelude::*;
+///
+/// let mut cfg = MatexpConfig::default();
+/// assert!(cfg.store.dir.is_none(), "persistence is opt-in");
+/// cfg.store.dir = Some("/tmp/matexp-store".into()); // what `--store-dir` does
+/// cfg.store.budget_mb = 512; // what `--store-budget-mb 512` does
+/// assert_eq!(cfg.store.budget_bytes(), 512 << 20);
+/// cfg.validate().unwrap();
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreSettings {
+    /// Directory for the on-disk artifact store; `None` disables
+    /// persistence entirely.
+    pub dir: Option<PathBuf>,
+    /// Byte budget of the on-disk store, mebibytes (oldest entries are
+    /// deleted first when a write would exceed it).
+    pub budget_mb: usize,
+}
+
+impl Default for StoreSettings {
+    fn default() -> Self {
+        Self { dir: None, budget_mb: 1024 }
+    }
+}
+
+impl StoreSettings {
+    /// The on-disk budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        (self.budget_mb as u64) << 20
+    }
+}
+
 /// Flight-recorder knobs (see [`crate::trace`]).
 ///
 /// The recorder defaults **on** — recording a span is a handful of
@@ -206,6 +247,8 @@ pub struct MatexpConfig {
     pub pool: PoolConfig,
     /// Multi-tier cache policy (plan memoization, result serving).
     pub cache: CacheSettings,
+    /// Persistent artifact-store policy (spill-to-disk, warm restarts).
+    pub store: StoreSettings,
     /// Flight-recorder tracing policy (span ring, slow-request log).
     pub trace: TraceSettings,
     /// Cluster-router policy (members, shedding, health cadence) for
@@ -242,6 +285,7 @@ impl Default for MatexpConfig {
             batcher: BatcherConfig::default(),
             pool: PoolConfig::default(),
             cache: CacheSettings::default(),
+            store: StoreSettings::default(),
             trace: TraceSettings::default(),
             cluster: ClusterSettings::default(),
             autotune: AutotuneConfig::default(),
@@ -384,6 +428,31 @@ impl MatexpConfig {
                             other => {
                                 return Err(MatexpError::Config(format!(
                                     "unknown config field cache.{other}"
+                                )))
+                            }
+                        }
+                    }
+                }
+                "store" => {
+                    let s = val.as_obj().ok_or_else(|| bad("store"))?;
+                    for (sk, sv) in s {
+                        match sk.as_str() {
+                            "dir" => {
+                                cfg.store.dir = if sv.is_null() {
+                                    None
+                                } else {
+                                    Some(PathBuf::from(
+                                        sv.as_str().ok_or_else(|| bad("store.dir"))?,
+                                    ))
+                                };
+                            }
+                            "budget_mb" => {
+                                cfg.store.budget_mb =
+                                    sv.as_usize().ok_or_else(|| bad("store.budget_mb"))?
+                            }
+                            other => {
+                                return Err(MatexpError::Config(format!(
+                                    "unknown config field store.{other}"
                                 )))
                             }
                         }
@@ -555,6 +624,19 @@ impl MatexpConfig {
                 ]
             ),
             (
+                "store",
+                json_obj![
+                    (
+                        "dir",
+                        match &self.store.dir {
+                            Some(d) => Json::Str(d.display().to_string()),
+                            None => Json::Null,
+                        }
+                    ),
+                    ("budget_mb", self.store.budget_mb),
+                ]
+            ),
+            (
                 "trace",
                 json_obj![
                     ("enabled", self.trace.enabled),
@@ -628,6 +710,9 @@ impl MatexpConfig {
         }
         if self.cache.budget_mb == 0 {
             return Err(MatexpError::Config("cache.budget_mb must be >= 1".into()));
+        }
+        if self.store.budget_mb == 0 {
+            return Err(MatexpError::Config("store.budget_mb must be >= 1".into()));
         }
         if self.trace.ring_capacity == 0 {
             return Err(MatexpError::Config("trace.ring_capacity must be >= 1".into()));
@@ -798,6 +883,35 @@ mod tests {
         // a zero budget is a config error
         let mut cfg = MatexpConfig::default();
         cfg.cache.budget_mb = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn store_settings_parse_and_validate() {
+        let cfg = MatexpConfig::from_json(
+            &Json::parse(r#"{"store":{"dir":"/tmp/s","budget_mb":64}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.store.dir, Some(PathBuf::from("/tmp/s")));
+        assert_eq!(cfg.store.budget_mb, 64);
+        assert_eq!(cfg.store.budget_bytes(), 64 << 20);
+        cfg.validate().unwrap();
+        // a null dir is the explicit "persistence off"
+        let cfg =
+            MatexpConfig::from_json(&Json::parse(r#"{"store":{"dir":null}}"#).unwrap()).unwrap();
+        assert_eq!(cfg.store.dir, None);
+        // defaults: off, 1 GiB budget
+        let d = StoreSettings::default();
+        assert!(d.dir.is_none());
+        assert_eq!(d.budget_mb, 1024);
+        // unknown nested fields and bad types rejected
+        assert!(MatexpConfig::from_json(&Json::parse(r#"{"store":{"wat":1}}"#).unwrap()).is_err());
+        assert!(
+            MatexpConfig::from_json(&Json::parse(r#"{"store":{"dir":7}}"#).unwrap()).is_err()
+        );
+        // a zero budget is a config error
+        let mut cfg = MatexpConfig::default();
+        cfg.store.budget_mb = 0;
         assert!(cfg.validate().is_err());
     }
 

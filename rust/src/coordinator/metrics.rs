@@ -104,6 +104,9 @@ pub struct MetricsSnapshot {
     /// CPU-kernel autotuner winner table (empty when autotuning is off),
     /// from [`crate::linalg::autotune::snapshot`].
     pub autotune: Vec<crate::linalg::autotune::TuneRow>,
+    /// Persistence-tier counters (all zero when no `--store-dir` is
+    /// configured), from [`crate::store::counters`].
+    pub store: crate::store::StoreCounters,
     /// Latency histogram as `(bucket upper bound µs, count)` pairs.
     pub latency_buckets: Vec<(u64, u64)>,
     /// Mean served latency, microseconds.
@@ -172,6 +175,7 @@ impl Metrics {
             devices: Vec::new(),
             cache: crate::cache::stats::snapshot(),
             autotune: crate::linalg::autotune::snapshot(),
+            store: crate::store::counters(),
             latency_mean_us: if observed == 0 { 0.0 } else { sum as f64 / observed as f64 },
             latency_p50_us: Self::percentile(&buckets, observed, 0.50),
             latency_p99_us: Self::percentile(&buckets, observed, 0.99),
@@ -237,6 +241,7 @@ impl MetricsSnapshot {
             ("wire_bytes_recycled_total", self.wire_bytes_recycled_total),
             ("steals_total", self.steals_total),
             ("cache", self.cache.to_json()),
+            ("store", self.store.to_json()),
             ("autotune", Json::Arr(autotune)),
             ("devices", Json::Arr(devices)),
             ("latency_buckets", Json::Arr(buckets)),
@@ -327,6 +332,18 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"cache\""), "{j}");
         for field in ["plan_hits", "prepared_hits", "result_hits", "result_evictions"] {
+            assert!(j.contains(field), "{field} missing from {j}");
+        }
+    }
+
+    #[test]
+    fn store_counters_ride_the_metrics_json() {
+        // store counters are process-global (other tests may bump them),
+        // so assert presence of every field rather than exact values
+        let s = Metrics::new().snapshot();
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"store\""), "{j}");
+        for field in ["hits", "misses", "spills", "loads", "entries", "bytes"] {
             assert!(j.contains(field), "{field} missing from {j}");
         }
     }

@@ -96,9 +96,13 @@ pub fn execute_request<B: Backend>(
 /// `cfg.warmup_sizes` are prepared AND executed once so the worker's
 /// first real request is served at steady-state latency.
 pub fn build_engine(cfg: &MatexpConfig) -> Result<AnyEngine> {
+    // open the persistent store first (warm-loads a saved autotune table
+    // and memoized plans, so a restart skips re-probing/re-planning)
+    crate::store::configure(&cfg.store)?;
     // probe CPU kernel variants once per process (no-op unless enabled);
     // the winner table steers CpuAlgo::Auto and the Strassen threshold
     crate::linalg::autotune::ensure(&cfg.autotune, cfg.seed);
+    crate::store::persist_autotune();
     let mut engine = Engine::from_config(cfg)?;
     for &n in &cfg.warmup_sizes {
         // a size the backend cannot serve is a config mistake worth surfacing
@@ -155,9 +159,11 @@ pub fn build_worker_engine(
     cfg: &MatexpConfig,
     shared_pool: Option<Arc<DevicePool>>,
 ) -> Result<WorkerEngine> {
+    crate::store::configure(&cfg.store)?;
     // runs before DevicePool::new so pool calibration can consume the
     // autotuner's measured CPU curve (idempotent across workers)
     crate::linalg::autotune::ensure(&cfg.autotune, cfg.seed);
+    crate::store::persist_autotune();
     let kind = if cfg.backend == BackendKind::Pool {
         let pool = match shared_pool {
             Some(p) => p,

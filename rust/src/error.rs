@@ -49,6 +49,13 @@ pub enum MatexpError {
     /// of treating it as a service failure.
     Deadline(String),
 
+    /// Persistent-store failures: a torn or corrupt on-disk entry (bad
+    /// magic, checksum mismatch, truncation), an unwritable store
+    /// directory, or an undecodable artifact. Typed so the tiered cache
+    /// can treat a damaged entry as a miss — never serve wrong bits —
+    /// while the store keeps serving its healthy entries.
+    Store(String),
+
     /// Underlying I/O failures (sockets, config files, artifacts).
     Io(std::io::Error),
 
@@ -70,6 +77,7 @@ impl std::fmt::Display for MatexpError {
             MatexpError::Disconnected(m) => write!(f, "connection lost: {m}"),
             MatexpError::Admission(m) => write!(f, "admission rejected: {m}"),
             MatexpError::Deadline(m) => write!(f, "deadline exceeded: {m}"),
+            MatexpError::Store(m) => write!(f, "store error: {m}"),
             MatexpError::Io(e) => write!(f, "io error: {e}"),
             MatexpError::Json(e) => write!(f, "json error: {e}"),
         }
@@ -119,6 +127,7 @@ mod tests {
         assert!(MatexpError::UnsupportedOp("x".into()).to_string().starts_with("unsupported op"));
         assert!(MatexpError::Deadline("x".into()).to_string().starts_with("deadline exceeded"));
         assert!(MatexpError::Disconnected("x".into()).to_string().starts_with("connection lost"));
+        assert!(MatexpError::Store("x".into()).to_string().starts_with("store error"));
         let io: MatexpError = std::io::Error::new(std::io::ErrorKind::Other, "gone").into();
         assert!(io.to_string().contains("gone"));
     }

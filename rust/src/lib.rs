@@ -158,13 +158,14 @@ pub mod pool;
 pub mod runtime;
 pub mod server;
 pub mod simulator;
+pub mod store;
 pub mod trace;
 pub mod util;
 
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
     pub use crate::cache::{CacheControl, ResultCache};
-    pub use crate::config::{CacheSettings, MatexpConfig};
+    pub use crate::config::{CacheSettings, MatexpConfig, StoreSettings};
     pub use crate::coordinator::{
         request::{ExecStats, ExpmRequest, ExpmResponse, Method},
         service::Service,
@@ -181,5 +182,6 @@ pub mod prelude {
         SimEngine, Variant,
     };
     pub use crate::simulator::device::DeviceSpec;
+    pub use crate::store::{ArtifactKind, ArtifactStore, Sink, StoreKey};
     pub use crate::trace::TraceId;
 }

@@ -101,6 +101,10 @@ GLOBAL FLAGS:
   --max-n N         admission limit on matrix size (default 4096)
   --cache-results   serve repeated identical requests from the result cache
   --cache-budget-mb M   result-cache byte budget, MiB (default 256, LRU)
+  --store-dir DIR   persistent artifact store: results spill to disk
+                    instead of evicting, autotune table and plans
+                    survive restarts (default off)
+  --store-budget-mb M   on-disk store byte budget, MiB (default 1024)
   --trace / --no-trace  flight-recorder span capture (default on)
   --trace-ring N    spans the flight recorder retains (default 4096)
   --trace-slow-ms MS    stderr JSON line for requests slower than MS (0 = off)
@@ -186,6 +190,12 @@ fn load_config(args: &Args) -> Result<MatexpConfig> {
     }
     if let Some(mb) = args.get_parsed::<usize>("cache-budget-mb")? {
         cfg.cache.budget_mb = mb;
+    }
+    if let Some(dir) = args.get("store-dir") {
+        cfg.store.dir = Some(dir.into());
+    }
+    if let Some(mb) = args.get_parsed::<usize>("store-budget-mb")? {
+        cfg.store.budget_mb = mb;
     }
     if args.has("trace") {
         cfg.trace.enabled = true;

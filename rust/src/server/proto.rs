@@ -68,6 +68,13 @@ pub enum ClusterAction {
     Drain,
     /// Report the cluster (or member) status document.
     Status,
+    /// Pull hot artifacts. Sent to a member (`addr` absent) it answers
+    /// its hottest store artifacts (results/autotune/plans, base64
+    /// payloads); sent to a router (`addr` absent too) it aggregates the
+    /// members' exports. With `addr` set, the receiver pulls FROM that
+    /// peer and installs the artifacts into its own warm tiers — how a
+    /// joining member warms itself from the owner member's store.
+    Pull,
 }
 
 impl ClusterAction {
@@ -78,6 +85,7 @@ impl ClusterAction {
             ClusterAction::Leave => "leave",
             ClusterAction::Drain => "drain",
             ClusterAction::Status => "status",
+            ClusterAction::Pull => "pull",
         }
     }
 }
@@ -90,6 +98,7 @@ impl FromStr for ClusterAction {
             "leave" => Ok(ClusterAction::Leave),
             "drain" => Ok(ClusterAction::Drain),
             "status" => Ok(ClusterAction::Status),
+            "pull" => Ok(ClusterAction::Pull),
             other => Err(MatexpError::Service(format!("unknown cluster action {other:?}"))),
         }
     }
@@ -798,7 +807,13 @@ mod tests {
     #[test]
     fn cluster_op_roundtrips_every_action() {
         for action in
-            [ClusterAction::Join, ClusterAction::Leave, ClusterAction::Drain, ClusterAction::Status]
+            [
+                ClusterAction::Join,
+                ClusterAction::Leave,
+                ClusterAction::Drain,
+                ClusterAction::Status,
+                ClusterAction::Pull,
+            ]
         {
             for addr in [None, Some("10.0.0.7:7070".to_string())] {
                 let r = WireRequest::Cluster { action, addr: addr.clone() };

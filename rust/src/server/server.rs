@@ -366,15 +366,25 @@ fn read_one_line(
             };
             write_line(writer, &resp, metrics)
         }
-        Ok(WireRequest::Cluster { action, .. }) => {
-            // member-side cluster surface: drain and status only — the
-            // router owns membership, a member can't join itself anywhere
+        Ok(WireRequest::Cluster { action, addr }) => {
+            // member-side cluster surface: drain, status and artifact
+            // pull — the router owns membership, a member can't join
+            // itself anywhere
             let resp = match action {
                 ClusterAction::Drain => {
                     draining.store(true, Ordering::SeqCst);
                     member_status(draining)
                 }
                 ClusterAction::Status => member_status(draining),
+                ClusterAction::Pull => match addr {
+                    // export our hottest store artifacts for a peer
+                    None => member_artifacts(),
+                    // pull FROM the named peer, install into warm tiers
+                    Some(peer) => match pull_from_peer(&peer) {
+                        Ok(n) => ok_doc(json_obj![("role", "member"), ("pulled", n)]),
+                        Err(e) => WireResponse::from_error(&e),
+                    },
+                },
                 ClusterAction::Join | ClusterAction::Leave => {
                     WireResponse::from_error(&MatexpError::Service(
                         "cluster membership ops are handled by the router, not members".into(),
@@ -389,11 +399,9 @@ fn read_one_line(
     }
 }
 
-/// A member's `cluster status` reply: its role and drain state, in the
-/// ok-reply payload slot shared with `metrics` and `trace`.
-fn member_status(draining: &AtomicBool) -> WireResponse {
-    let doc: Json =
-        json_obj![("role", "member"), ("draining", draining.load(Ordering::SeqCst))];
+/// Wrap a JSON document in the ok-reply payload slot shared with
+/// `metrics` and `trace`.
+fn ok_doc(doc: Json) -> WireResponse {
     WireResponse::Ok {
         result: None,
         stats: None,
@@ -402,6 +410,31 @@ fn member_status(draining: &AtomicBool) -> WireResponse {
         id: None,
         frame: None,
     }
+}
+
+/// A member's `cluster status` reply: its role and drain state.
+fn member_status(draining: &AtomicBool) -> WireResponse {
+    ok_doc(json_obj![("role", "member"), ("draining", draining.load(Ordering::SeqCst))])
+}
+
+/// A member's `cluster pull` reply: its hottest store artifacts
+/// (results / autotune table / memoized plans as self-describing base64
+/// payloads), for a joining peer to install into its own warm tiers.
+fn member_artifacts() -> WireResponse {
+    ok_doc(json_obj![
+        ("role", "member"),
+        ("artifacts", crate::store::export_hot(crate::store::HOT_EXPORT_LIMIT)),
+    ])
+}
+
+/// Pull hot artifacts FROM `peer` and install them into this process's
+/// warm tiers (and persistent store, when one is configured). Returns
+/// how many artifacts were installed; corrupt or undecodable artifacts
+/// are skipped, not errors.
+fn pull_from_peer(peer: &str) -> Result<usize> {
+    let mut client = crate::server::client::MatexpClient::connect(peer)?;
+    let doc = client.cluster(ClusterAction::Pull, None)?;
+    Ok(crate::store::install(&doc))
 }
 
 /// Handle one binary frame. Framing damage (bad header, truncation,

@@ -1,0 +1,420 @@
+//! Artifact payload codecs: the byte formats stored under each
+//! [`ArtifactKind`], plus the content addressing that maps cache keys to
+//! [`StoreKey`]s.
+//!
+//! All formats are little-endian, self-describing (the identifying key
+//! is embedded in the payload, so a store entry can be verified against
+//! the key that addressed it and shipped standalone over the cluster
+//! wire), and strict: trailing bytes, short buffers, or non-canonical
+//! tags all decode to the typed [`MatexpError::Store`] — a codec never
+//! guesses.
+
+use std::str::FromStr;
+
+use crate::cache::result::KEY_BYTES;
+use crate::cache::{CachedExpm, PlanKey, ResultKey};
+use crate::coordinator::request::Method;
+use crate::error::{MatexpError, Result};
+use crate::linalg::autotune::TuneRow;
+use crate::linalg::expm::CpuAlgo;
+use crate::linalg::matrix::Matrix;
+use crate::plan::{Plan, PlanKind, Step};
+use crate::store::{checksum, ArtifactKind, StoreKey};
+
+fn bad(what: impl Into<String>) -> MatexpError {
+    MatexpError::Store(format!("undecodable artifact: {}", what.into()))
+}
+
+/// Store address of one result entry: the [`ResultKey`]'s folded 128-bit
+/// digest under [`ArtifactKind::Result`].
+pub fn result_store_key(key: &ResultKey) -> StoreKey {
+    let (hi, lo) = key.store_digest();
+    StoreKey { kind: ArtifactKind::Result, hi, lo }
+}
+
+/// The well-known address of the (single) autotune-table artifact.
+pub fn autotune_store_key() -> StoreKey {
+    let hi = checksum(b"matexp autotune table");
+    StoreKey { kind: ArtifactKind::Autotune, hi, lo: hi.rotate_left(32) }
+}
+
+/// Store address of one memoized plan, folding every [`PlanKey`] field.
+pub fn plan_store_key(key: &PlanKey) -> StoreKey {
+    const PRIME1: u64 = 0x0000_0100_0000_01b3;
+    const PRIME2: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut hi = 0xcbf2_9ce4_8422_2325u64;
+    let mut lo = 0x6c62_272e_07bb_0142u64;
+    let words =
+        [key.n as u64, key.power, u64::from(plan_kind_tag(key.kind)), key.method as u64];
+    for w in words {
+        hi = (hi ^ w).wrapping_mul(PRIME1);
+        lo = (lo ^ w.rotate_left(32)).wrapping_mul(PRIME2);
+    }
+    StoreKey { kind: ArtifactKind::Plan, hi, lo }
+}
+
+// ------------------------------------------------------------- primitives
+
+/// Strict little-endian reader over a payload slice.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Reader<'a> {
+        Reader { bytes, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&end| end <= self.bytes.len())
+            .ok_or_else(|| bad(format!("truncated at byte {} (wanted {n} more)", self.at)))?;
+        let slice = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("sized")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Every byte must be consumed — trailing garbage is corruption.
+    fn finish(self) -> Result<()> {
+        if self.at == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(bad(format!("{} trailing bytes", self.bytes.len() - self.at)))
+        }
+    }
+}
+
+fn plan_kind_tag(kind: PlanKind) -> u8 {
+    match kind {
+        PlanKind::Naive => 0,
+        PlanKind::Binary => 1,
+        PlanKind::BinaryFused => 2,
+        PlanKind::Chained => 3,
+        PlanKind::AdditionChain => 4,
+        PlanKind::Strassen => 5,
+    }
+}
+
+fn plan_kind_from_tag(tag: u8) -> Result<PlanKind> {
+    Ok(match tag {
+        0 => PlanKind::Naive,
+        1 => PlanKind::Binary,
+        2 => PlanKind::BinaryFused,
+        3 => PlanKind::Chained,
+        4 => PlanKind::AdditionChain,
+        5 => PlanKind::Strassen,
+        other => return Err(bad(format!("unknown plan kind tag {other}"))),
+    })
+}
+
+/// `Option<PlanKind>` as one byte; `NO_PLAN_KIND` encodes `None`.
+const NO_PLAN_KIND: u8 = 255;
+
+// ---------------------------------------------------------------- results
+
+/// Result payload: embedded [`ResultKey`] bytes, the producing run's
+/// plan-kind tag, then the matrix as raw f32 bit patterns (bit-exact for
+/// NaN/±Inf/subnormals — no textual detour).
+pub fn encode_result(
+    key: &ResultKey,
+    result: &Matrix,
+    method: Method,
+    plan_kind: Option<PlanKind>,
+) -> Vec<u8> {
+    let data = result.data();
+    let mut out = Vec::with_capacity(KEY_BYTES + 2 + data.len() * 4);
+    out.extend_from_slice(&key.to_bytes());
+    out.push(method as u8);
+    out.push(plan_kind.map_or(NO_PLAN_KIND, plan_kind_tag));
+    for v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_result`]; validates the matrix length against the
+/// embedded key's dimension.
+pub fn decode_result(payload: &[u8]) -> Result<(ResultKey, CachedExpm)> {
+    let mut r = Reader::new(payload);
+    let key = ResultKey::from_bytes(r.take(KEY_BYTES)?)
+        .ok_or_else(|| bad("non-canonical result key"))?;
+    let method_tag = r.u8()?;
+    let method = *Method::all()
+        .get(method_tag as usize)
+        .ok_or_else(|| bad(format!("unknown method tag {method_tag}")))?;
+    let plan_kind = match r.u8()? {
+        NO_PLAN_KIND => None,
+        tag => Some(plan_kind_from_tag(tag)?),
+    };
+    let n = key.n();
+    let want = n
+        .checked_mul(n)
+        .and_then(|c| c.checked_mul(4))
+        .ok_or_else(|| bad(format!("absurd matrix dimension {n}")))?;
+    let raw = r.take(want)?;
+    r.finish()?;
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("sized"))))
+        .collect();
+    let result = Matrix::from_vec(n, data)
+        .map_err(|e| bad(format!("matrix rebuild failed: {e}")))?;
+    Ok((key, CachedExpm { result, method, plan_kind }))
+}
+
+// --------------------------------------------------------------- autotune
+
+/// Autotune-table payload: row count, then per row the probed size, the
+/// winner's canonical name (length-prefixed) and its best-of-probes
+/// seconds as f64 bits. `gflops` is derived state —
+/// [`crate::linalg::autotune::record`] recomputes it on restore.
+pub fn encode_autotune(rows: &[TuneRow]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+    for row in rows {
+        out.extend_from_slice(&(row.n as u64).to_le_bytes());
+        let name = row.winner.name().as_bytes();
+        out.push(name.len() as u8);
+        out.extend_from_slice(name);
+        out.extend_from_slice(&row.secs.to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_autotune`]: `(n, winner, secs)` triples ready for
+/// [`crate::linalg::autotune::record`].
+pub fn decode_autotune(payload: &[u8]) -> Result<Vec<(usize, CpuAlgo, f64)>> {
+    let mut r = Reader::new(payload);
+    let count = r.u64()?;
+    if count > 1 << 20 {
+        return Err(bad(format!("absurd autotune row count {count}")));
+    }
+    let mut rows = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let n = r.u64()? as usize;
+        let name_len = r.u8()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .map_err(|_| bad("non-utf8 algo name"))?;
+        let winner =
+            CpuAlgo::from_str(name).map_err(|_| bad(format!("unknown algo {name:?}")))?;
+        let secs = r.f64()?;
+        if !(secs.is_finite() && secs > 0.0) {
+            return Err(bad(format!("non-positive probe time {secs}")));
+        }
+        rows.push((n, winner, secs));
+    }
+    r.finish()?;
+    Ok(rows)
+}
+
+// ------------------------------------------------------------------ plans
+
+const STEP_COPY: u8 = 0;
+const STEP_MUL: u8 = 1;
+const STEP_SQMUL: u8 = 2;
+const STEP_SQUARE_CHAIN: u8 = 3;
+
+/// Plan payload: the full [`PlanKey`] (n, power, kind, method), the
+/// plan's register-file shape, then every step as a tagged record.
+pub fn encode_plan(key: &PlanKey, plan: &Plan) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + plan.steps.len() * 25);
+    out.extend_from_slice(&(key.n as u64).to_le_bytes());
+    out.extend_from_slice(&key.power.to_le_bytes());
+    out.push(plan_kind_tag(key.kind));
+    out.push(key.method as u8);
+    out.extend_from_slice(&plan.power.to_le_bytes());
+    out.push(plan_kind_tag(plan.kind));
+    out.extend_from_slice(&(plan.n_regs as u64).to_le_bytes());
+    out.extend_from_slice(&(plan.result as u64).to_le_bytes());
+    out.extend_from_slice(&(plan.steps.len() as u64).to_le_bytes());
+    for step in &plan.steps {
+        match *step {
+            Step::Copy { dst, src } => {
+                out.push(STEP_COPY);
+                out.extend_from_slice(&(dst as u64).to_le_bytes());
+                out.extend_from_slice(&(src as u64).to_le_bytes());
+            }
+            Step::Mul { dst, lhs, rhs } => {
+                out.push(STEP_MUL);
+                out.extend_from_slice(&(dst as u64).to_le_bytes());
+                out.extend_from_slice(&(lhs as u64).to_le_bytes());
+                out.extend_from_slice(&(rhs as u64).to_le_bytes());
+            }
+            Step::SqMul { acc, base } => {
+                out.push(STEP_SQMUL);
+                out.extend_from_slice(&(acc as u64).to_le_bytes());
+                out.extend_from_slice(&(base as u64).to_le_bytes());
+            }
+            Step::SquareChain { reg, k } => {
+                out.push(STEP_SQUARE_CHAIN);
+                out.extend_from_slice(&(reg as u64).to_le_bytes());
+                out.extend_from_slice(&u64::from(k).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_plan`].
+pub fn decode_plan(payload: &[u8]) -> Result<(PlanKey, Plan)> {
+    let mut r = Reader::new(payload);
+    let n = r.u64()? as usize;
+    let power = r.u64()?;
+    let kind = plan_kind_from_tag(r.u8()?)?;
+    let method_tag = r.u8()?;
+    let method = *Method::all()
+        .get(method_tag as usize)
+        .ok_or_else(|| bad(format!("unknown method tag {method_tag}")))?;
+    let key = PlanKey { n, power, kind, method };
+    let plan_power = r.u64()?;
+    let plan_kind = plan_kind_from_tag(r.u8()?)?;
+    let n_regs = r.u64()? as usize;
+    let result = r.u64()? as usize;
+    let step_count = r.u64()?;
+    if step_count > 1 << 24 {
+        return Err(bad(format!("absurd step count {step_count}")));
+    }
+    let mut steps = Vec::with_capacity(step_count as usize);
+    for _ in 0..step_count {
+        let step = match r.u8()? {
+            STEP_COPY => {
+                Step::Copy { dst: r.u64()? as usize, src: r.u64()? as usize }
+            }
+            STEP_MUL => Step::Mul {
+                dst: r.u64()? as usize,
+                lhs: r.u64()? as usize,
+                rhs: r.u64()? as usize,
+            },
+            STEP_SQMUL => {
+                Step::SqMul { acc: r.u64()? as usize, base: r.u64()? as usize }
+            }
+            STEP_SQUARE_CHAIN => {
+                let reg = r.u64()? as usize;
+                let k = u32::try_from(r.u64()?)
+                    .map_err(|_| bad("square-chain length overflows u32"))?;
+                Step::SquareChain { reg, k }
+            }
+            other => return Err(bad(format!("unknown step tag {other}"))),
+        };
+        steps.push(step);
+    }
+    r.finish()?;
+    let plan = Plan { power: plan_power, kind: plan_kind, steps, n_regs, result };
+    plan.validate().map_err(|e| bad(format!("restored plan is invalid: {e}")))?;
+    Ok((key, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_payload_roundtrips_bit_exactly_including_non_finite() {
+        let mut m = Matrix::random(6, 3);
+        m.set(0, 0, f32::NAN);
+        m.set(0, 1, f32::INFINITY);
+        m.set(1, 0, f32::NEG_INFINITY);
+        m.set(1, 1, f32::MIN_POSITIVE / 2.0); // subnormal
+        m.set(2, 2, -0.0);
+        let key = ResultKey::for_parts(&m, 64, Method::Ours, Some(1e-4));
+        let payload = encode_result(&key, &m, Method::Ours, Some(PlanKind::Chained));
+        let (got_key, got) = decode_result(&payload).expect("decodes");
+        assert_eq!(got_key, key);
+        assert_eq!(got.method, Method::Ours);
+        assert_eq!(got.plan_kind, Some(PlanKind::Chained));
+        let same = m.data().iter().zip(got.result.data()).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "payload must be bit-identical, NaN and ±Inf included");
+    }
+
+    #[test]
+    fn result_decode_rejects_damage() {
+        let m = Matrix::random(4, 9);
+        let key = ResultKey::for_parts(&m, 8, Method::Ours, None);
+        let payload = encode_result(&key, &m, Method::Ours, None);
+        // every truncation boundary fails
+        for cut in 0..payload.len() {
+            assert!(decode_result(&payload[..cut]).is_err(), "truncation at {cut}");
+        }
+        // trailing garbage fails
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(decode_result(&long).is_err());
+        // a bad plan-kind tag fails (byte after key + method)
+        let mut bad_tag = payload.clone();
+        bad_tag[KEY_BYTES + 1] = 77;
+        assert!(decode_result(&bad_tag).is_err());
+    }
+
+    #[test]
+    fn autotune_rows_roundtrip() {
+        let rows = vec![
+            TuneRow { n: 64, winner: CpuAlgo::Blocked, secs: 1e-4, gflops: 0.0 },
+            TuneRow { n: 256, winner: CpuAlgo::Ikj, secs: 2.5e-3, gflops: 0.0 },
+        ];
+        let payload = encode_autotune(&rows);
+        let got = decode_autotune(&payload).expect("decodes");
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (64, CpuAlgo::Blocked, 1e-4));
+        assert_eq!(got[1], (256, CpuAlgo::Ikj, 2.5e-3));
+        for cut in 0..payload.len() {
+            assert!(decode_autotune(&payload[..cut]).is_err(), "truncation at {cut}");
+        }
+    }
+
+    #[test]
+    fn plans_roundtrip_across_every_planner() {
+        let plans = [
+            (PlanKind::Naive, Plan::naive(7)),
+            (PlanKind::Binary, Plan::binary(100, false)),
+            (PlanKind::BinaryFused, Plan::binary(100, true)),
+            (PlanKind::Chained, Plan::chained(1000, &[4, 2])),
+            (PlanKind::AdditionChain, Plan::addition_chain(511)),
+            (PlanKind::Strassen, Plan::strassen(64)),
+        ];
+        for (kind, plan) in plans {
+            let key = PlanKey { n: 128, power: plan.power, kind, method: Method::Ours };
+            let payload = encode_plan(&key, &plan);
+            let (got_key, got) = decode_plan(&payload).expect("decodes");
+            assert_eq!(got_key, key);
+            assert_eq!(got, plan, "plan {kind:?} must roundtrip exactly");
+        }
+    }
+
+    #[test]
+    fn store_addresses_are_distinct_per_key() {
+        let m = Matrix::random(8, 1);
+        let a = result_store_key(&ResultKey::for_parts(&m, 64, Method::Ours, None));
+        let b = result_store_key(&ResultKey::for_parts(&m, 65, Method::Ours, None));
+        assert_ne!((a.hi, a.lo), (b.hi, b.lo));
+        assert_eq!(a.kind, ArtifactKind::Result);
+        let p1 = plan_store_key(&PlanKey {
+            n: 64,
+            power: 100,
+            kind: PlanKind::Binary,
+            method: Method::Ours,
+        });
+        let p2 = plan_store_key(&PlanKey {
+            n: 64,
+            power: 101,
+            kind: PlanKind::Binary,
+            method: Method::Ours,
+        });
+        assert_ne!((p1.hi, p1.lo), (p2.hi, p2.lo));
+        assert_eq!(autotune_store_key(), autotune_store_key());
+    }
+}

@@ -1,0 +1,355 @@
+//! [`FsSink`] — the durable [`Sink`]: one file per entry with a
+//! checksummed header, atomic temp-file + rename commits, and a
+//! rebuild-on-open index.
+//!
+//! On-disk entry layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic        b"MXST"
+//!      4     2  version      1
+//!      6     1  kind         ArtifactKind tag
+//!      7     1  reserved     0
+//!      8     8  key hi       high half of the content digest
+//!     16     8  key lo       low half of the content digest
+//!     24     8  payload_len  bytes of payload that follow the header
+//!     32     8  checksum     xxh64-style sum of bytes [4..32] + payload
+//!     40     …  payload      codec-specific artifact bytes
+//! ```
+//!
+//! The checksum covers everything identifying after the magic — version,
+//! kind, key, declared length — plus the payload, and the sum itself is
+//! length-seeded, so truncation at *any* byte boundary, a bit flip
+//! anywhere, or a cross-renamed file all fail verification. `get`
+//! re-verifies on every read (bit rot after open is still caught) and
+//! answers the typed [`MatexpError::Store`] for a damaged entry — never
+//! wrong bits, and never affecting any other entry.
+//!
+//! Writes go to a `.tmp` file first and `rename(2)` into place, so a
+//! crash mid-write leaves either the old committed entry or a stray
+//! temp file — [`FsSink::open`] sweeps temp files and verifies every
+//! committed entry, skipping (and removing) torn ones while the healthy
+//! entries keep serving.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{MatexpError, Result};
+use crate::store::{checksum, ArtifactKind, Sink, StoreKey};
+
+/// Entry-file magic: "matexp store".
+pub const MAGIC: [u8; 4] = *b"MXST";
+/// Current entry-format version.
+pub const VERSION: u16 = 1;
+/// Bytes of header before the payload.
+pub const HEADER_LEN: usize = 40;
+/// Extension of committed entry files.
+pub const ENTRY_EXT: &str = "mxst";
+/// Extension of not-yet-committed temp files (swept on open).
+pub const TMP_EXT: &str = "tmp";
+
+/// Serialize the header for (`key`, `payload`), checksum included.
+fn encode_header(key: &StoreKey, payload: &[u8]) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[6] = key.kind.tag();
+    h[7] = 0;
+    h[8..16].copy_from_slice(&key.hi.to_le_bytes());
+    h[16..24].copy_from_slice(&key.lo.to_le_bytes());
+    h[24..32].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    let sum = entry_checksum(&h, payload);
+    h[32..40].copy_from_slice(&sum.to_le_bytes());
+    h
+}
+
+/// The sum stored at header offset 32: bytes `[4..32]` of the header
+/// (everything after the magic, before the sum) followed by the payload.
+fn entry_checksum(header: &[u8; HEADER_LEN], payload: &[u8]) -> u64 {
+    let mut buf = Vec::with_capacity(28 + payload.len());
+    buf.extend_from_slice(&header[4..32]);
+    buf.extend_from_slice(payload);
+    checksum(&buf)
+}
+
+/// Parse and fully verify one entry file's bytes; the verified payload
+/// on success, a typed [`MatexpError::Store`] naming what failed
+/// otherwise.
+fn verify_entry(bytes: &[u8]) -> Result<(StoreKey, Vec<u8>)> {
+    let bad = |what: &str| MatexpError::Store(format!("corrupt store entry: {what}"));
+    if bytes.len() < HEADER_LEN {
+        return Err(bad(&format!("truncated header ({} of {HEADER_LEN} bytes)", bytes.len())));
+    }
+    let header: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().expect("length checked");
+    if header[0..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().expect("sized"));
+    if version != VERSION {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let kind = ArtifactKind::from_tag(header[6])
+        .ok_or_else(|| bad(&format!("unknown artifact kind {}", header[6])))?;
+    let u64_at = |at: usize| u64::from_le_bytes(header[at..at + 8].try_into().expect("sized"));
+    let payload_len = u64_at(24) as usize;
+    if bytes.len() != HEADER_LEN + payload_len {
+        return Err(bad(&format!(
+            "length mismatch (file {} bytes, header declares {})",
+            bytes.len(),
+            HEADER_LEN + payload_len
+        )));
+    }
+    let payload = &bytes[HEADER_LEN..];
+    if entry_checksum(&header, payload) != u64_at(32) {
+        return Err(bad("checksum mismatch"));
+    }
+    let key = StoreKey { kind, hi: u64_at(8), lo: u64_at(16) };
+    Ok((key, payload.to_vec()))
+}
+
+/// Filesystem [`Sink`]: one verified file per entry under a root
+/// directory. See the module docs for format and crash semantics.
+pub struct FsSink {
+    root: PathBuf,
+    /// Key → payload length, rebuilt by scanning-and-verifying on open.
+    index: Mutex<HashMap<StoreKey, u64>>,
+    /// Temp-file name uniqueness across threads.
+    seq: AtomicU64,
+}
+
+impl FsSink {
+    /// Open (creating if needed) a store directory: sweep leftover temp
+    /// files, verify every committed entry, and index the healthy ones.
+    /// Torn or corrupt entries are removed — they are exactly the state
+    /// an interrupted write may leave, and keeping them would turn every
+    /// future read into an error.
+    pub fn open(root: impl AsRef<Path>) -> Result<FsSink> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root).map_err(|e| {
+            MatexpError::Store(format!("cannot create store dir {}: {e}", root.display()))
+        })?;
+        let mut index = HashMap::new();
+        let entries = fs::read_dir(&root).map_err(|e| {
+            MatexpError::Store(format!("cannot read store dir {}: {e}", root.display()))
+        })?;
+        for dirent in entries {
+            let Ok(dirent) = dirent else { continue };
+            let path = dirent.path();
+            let ext = path.extension().and_then(|e| e.to_str());
+            if ext == Some(TMP_EXT) {
+                let _ = fs::remove_file(&path); // interrupted write, never committed
+                continue;
+            }
+            if ext != Some(ENTRY_EXT) {
+                continue; // not ours
+            }
+            match fs::read(&path).map_err(|e| MatexpError::Store(e.to_string())).and_then(
+                |bytes| verify_entry(&bytes),
+            ) {
+                Ok((key, payload)) => {
+                    index.insert(key, payload.len() as u64);
+                }
+                Err(_) => {
+                    let _ = fs::remove_file(&path); // torn entry: skip and clean up
+                }
+            }
+        }
+        Ok(FsSink { root, index: Mutex::new(index), seq: AtomicU64::new(0) })
+    }
+
+    /// The directory this sink stores under.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The committed file path for `key`.
+    pub fn entry_path(&self, key: &StoreKey) -> PathBuf {
+        self.root.join(format!("{}.{ENTRY_EXT}", key.hex()))
+    }
+}
+
+impl Sink for FsSink {
+    fn put(&self, key: StoreKey, payload: &[u8]) -> Result<()> {
+        let tmp = self.root.join(format!(
+            "{}-{}.{TMP_EXT}",
+            key.hex(),
+            self.seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        let header = encode_header(&key, payload);
+        let write = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&header)?;
+            f.write_all(payload)?;
+            f.sync_all()?; // the bytes must be durable before the rename commits them
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = fs::remove_file(&tmp);
+            return Err(MatexpError::Store(format!(
+                "cannot write store entry {}: {e}",
+                tmp.display()
+            )));
+        }
+        fs::rename(&tmp, self.entry_path(&key)).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            MatexpError::Store(format!("cannot commit store entry {}: {e}", key.hex()))
+        })?;
+        self.index.lock().expect("fs index poisoned").insert(key, payload.len() as u64);
+        Ok(())
+    }
+
+    fn get(&self, key: &StoreKey) -> Result<Option<Vec<u8>>> {
+        if !self.contains(key) {
+            return Ok(None);
+        }
+        let path = self.entry_path(key);
+        let bytes = match fs::read(&path) {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // deleted behind our back: a miss, not corruption
+                self.index.lock().expect("fs index poisoned").remove(key);
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(MatexpError::Store(format!(
+                    "cannot read store entry {}: {e}",
+                    path.display()
+                )))
+            }
+        };
+        let (stored_key, payload) = verify_entry(&bytes)?;
+        if stored_key != *key {
+            return Err(MatexpError::Store(format!(
+                "store entry {} holds key {} (cross-renamed file?)",
+                key.hex(),
+                stored_key.hex()
+            )));
+        }
+        Ok(Some(payload))
+    }
+
+    fn delete(&self, key: &StoreKey) -> Result<bool> {
+        let existed = self.index.lock().expect("fs index poisoned").remove(key).is_some();
+        match fs::remove_file(self.entry_path(key)) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(existed),
+            Err(e) => Err(MatexpError::Store(format!("cannot delete {}: {e}", key.hex()))),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.lock().expect("fs index poisoned").len()
+    }
+
+    fn keys(&self) -> Vec<StoreKey> {
+        self.index.lock().expect("fs index poisoned").keys().copied().collect()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.index.lock().expect("fs index poisoned").values().sum()
+    }
+
+    fn contains(&self, key: &StoreKey) -> bool {
+        self.index.lock().expect("fs index poisoned").contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn key(lo: u64) -> StoreKey {
+        StoreKey { kind: ArtifactKind::Result, hi: 0xfeed, lo }
+    }
+
+    #[test]
+    fn roundtrip_survives_reopen() {
+        let dir = TempDir::new().expect("tempdir");
+        let sink = FsSink::open(dir.path()).expect("open");
+        sink.put(key(1), b"hello").unwrap();
+        sink.put(key(2), &[0u8; 300]).unwrap();
+        assert_eq!(sink.get(&key(1)).unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(sink.bytes(), 305);
+        drop(sink);
+        let reopened = FsSink::open(dir.path()).expect("reopen");
+        assert_eq!(reopened.len(), 2, "index rebuilds from disk");
+        assert_eq!(reopened.get(&key(1)).unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(reopened.get(&key(2)).unwrap().as_deref(), Some(&[0u8; 300][..]));
+        assert_eq!(reopened.get(&key(3)).unwrap(), None, "absent is a miss, not an error");
+    }
+
+    #[test]
+    fn bit_flip_is_a_typed_store_error_and_isolated() {
+        let dir = TempDir::new().expect("tempdir");
+        let sink = FsSink::open(dir.path()).expect("open");
+        sink.put(key(1), b"precious bits").unwrap();
+        sink.put(key(2), b"innocent bystander").unwrap();
+        // flip one payload bit on disk
+        let path = sink.entry_path(&key(1));
+        let mut bytes = fs::read(&path).unwrap();
+        let at = HEADER_LEN + 3;
+        bytes[at] ^= 0x10;
+        fs::write(&path, &bytes).unwrap();
+        match sink.get(&key(1)) {
+            Err(MatexpError::Store(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("corrupt entry must be a typed store error: {other:?}"),
+        }
+        // the other entry keeps serving
+        assert_eq!(sink.get(&key(2)).unwrap().as_deref(), Some(&b"innocent bystander"[..]));
+    }
+
+    #[test]
+    fn reopen_sweeps_temp_files_and_torn_entries() {
+        let dir = TempDir::new().expect("tempdir");
+        let sink = FsSink::open(dir.path()).expect("open");
+        sink.put(key(1), b"committed").unwrap();
+        sink.put(key(2), b"will be torn").unwrap();
+        let torn_path = sink.entry_path(&key(2));
+        drop(sink);
+        // simulate a crash: a leftover temp file and a truncated entry
+        fs::write(dir.path().join("deadbeef-0.tmp"), b"partial write").unwrap();
+        let bytes = fs::read(&torn_path).unwrap();
+        fs::write(&torn_path, &bytes[..bytes.len() - 4]).unwrap();
+        let reopened = FsSink::open(dir.path()).expect("reopen");
+        assert_eq!(reopened.len(), 1, "torn entry skipped by the rebuild");
+        assert!(reopened.contains(&key(1)));
+        assert!(!reopened.contains(&key(2)));
+        assert_eq!(reopened.get(&key(1)).unwrap().as_deref(), Some(&b"committed"[..]));
+        // both damaged files were cleaned off disk
+        let leftover: Vec<_> = fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|d| d.ok())
+            .filter(|d| {
+                let name = d.file_name();
+                let name = name.to_string_lossy().into_owned();
+                name.ends_with(".tmp") || name == torn_path.file_name().unwrap().to_string_lossy()
+            })
+            .collect();
+        assert!(leftover.is_empty(), "sweep leaves no damaged files: {leftover:?}");
+    }
+
+    #[test]
+    fn header_rejects_every_tamper_axis() {
+        let payload = b"payload";
+        let k = key(9);
+        let header = encode_header(&k, payload);
+        let mut file = header.to_vec();
+        file.extend_from_slice(payload);
+        assert_eq!(verify_entry(&file).unwrap().0, k, "clean entry verifies");
+        // every single-byte truncation fails
+        for cut in 0..file.len() {
+            assert!(verify_entry(&file[..cut]).is_err(), "truncation at {cut} must fail");
+        }
+        // magic, version, kind, key, length, sum: each tamper is caught
+        for at in [0, 4, 6, 8, 16, 24, 32, HEADER_LEN] {
+            let mut bad = file.clone();
+            bad[at] ^= 0xff;
+            assert!(verify_entry(&bad).is_err(), "tamper at byte {at} must fail");
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! [`MemorySink`] — the in-process [`Sink`]: a mutex-guarded map.
+//!
+//! Exists for tests, for fault-injection wrappers to delegate to, and as
+//! the executable specification of the [`Sink`] contract (the durability
+//! suites run every invariant against both sinks). It never corrupts, so
+//! its `get` never answers the typed store error — corruption semantics
+//! are exercised through [`crate::store::FsSink`] and the injectable
+//! wrappers in the integration tests.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::store::{Sink, StoreKey};
+
+/// In-memory [`Sink`]: payloads in a mutex-guarded map.
+#[derive(Default)]
+pub struct MemorySink {
+    entries: Mutex<HashMap<StoreKey, Vec<u8>>>,
+}
+
+impl MemorySink {
+    /// An empty sink.
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl Sink for MemorySink {
+    fn put(&self, key: StoreKey, payload: &[u8]) -> Result<()> {
+        self.entries.lock().expect("memory sink poisoned").insert(key, payload.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &StoreKey) -> Result<Option<Vec<u8>>> {
+        Ok(self.entries.lock().expect("memory sink poisoned").get(key).cloned())
+    }
+
+    fn delete(&self, key: &StoreKey) -> Result<bool> {
+        Ok(self.entries.lock().expect("memory sink poisoned").remove(key).is_some())
+    }
+
+    fn len(&self) -> usize {
+        self.entries.lock().expect("memory sink poisoned").len()
+    }
+
+    fn keys(&self) -> Vec<StoreKey> {
+        self.entries.lock().expect("memory sink poisoned").keys().copied().collect()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.entries
+            .lock()
+            .expect("memory sink poisoned")
+            .values()
+            .map(|p| p.len() as u64)
+            .sum()
+    }
+
+    fn contains(&self, key: &StoreKey) -> bool {
+        self.entries.lock().expect("memory sink poisoned").contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::ArtifactKind;
+
+    fn key(lo: u64) -> StoreKey {
+        StoreKey { kind: ArtifactKind::Result, hi: 1, lo }
+    }
+
+    #[test]
+    fn sink_contract_roundtrip() {
+        let sink = MemorySink::new();
+        assert!(sink.is_empty());
+        assert_eq!(sink.get(&key(1)).unwrap(), None);
+        sink.put(key(1), b"abc").unwrap();
+        sink.put(key(2), b"defg").unwrap();
+        assert_eq!(sink.get(&key(1)).unwrap().as_deref(), Some(&b"abc"[..]));
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.bytes(), 7);
+        assert!(sink.contains(&key(2)));
+        sink.put(key(1), b"replaced").unwrap();
+        assert_eq!(sink.len(), 2, "replacement does not grow the sink");
+        assert_eq!(sink.get(&key(1)).unwrap().as_deref(), Some(&b"replaced"[..]));
+        assert!(sink.delete(&key(1)).unwrap());
+        assert!(!sink.delete(&key(1)).unwrap());
+        assert_eq!(sink.keys(), vec![key(2)]);
+    }
+}

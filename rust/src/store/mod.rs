@@ -1,0 +1,641 @@
+//! Persistent, tiered result/artifact store — warm state that survives
+//! the process.
+//!
+//! Every warm asset the serving stack accumulates — content-addressed
+//! result entries (tier 0, the in-memory LRU of
+//! [`crate::cache::ResultCache`]), the autotune winner table, memoized
+//! launch plans — used to die with the process. This module adds the
+//! tier below: a [`Sink`] (put/get/delete/len/iter over content-addressed
+//! [`StoreKey`]s reusing the result cache's 128-bit dual-FNV digest) with
+//! two implementations, [`MemorySink`] and the durable [`FsSink`]
+//! (per-entry files with a checksummed header, atomic
+//! temp-file + rename writes, rebuild-on-open index).
+//!
+//! Layering ([`crate::cache`] is the front, this module is the back):
+//!
+//! * **Write-through** — every stored result is also persisted, so a
+//!   restart on the same `--store-dir` serves repeats with zero backend
+//!   launches and bit-identical bytes.
+//! * **Spill, not evict** — when the result cache's byte budget forces
+//!   an entry out of memory, a disk copy is retained (the `spills`
+//!   counter): the budget demotes entries to tier 1 instead of deleting
+//!   work.
+//! * **Lazy load** — a memory miss consults the store
+//!   ([`load_result`]); a checksum-verified entry is promoted back into
+//!   tier 0 (the `loads` counter). A torn or corrupt entry is a typed
+//!   [`MatexpError::Store`] at the sink layer and a counted miss here —
+//!   wrong bits are never served.
+//! * **Artifacts** — the autotune table and plan-cache entries persist
+//!   in the same store ([`persist_autotune`], [`persist_plan`]) and are
+//!   re-injected on [`configure`], so a warm restart skips startup
+//!   probing and planning.
+//! * **Cluster pull** — [`export_hot`] / [`install`] move artifacts over
+//!   the `cluster` wire op so a joining member warms up from the
+//!   router's owner members (see [`crate::cluster`]).
+//!
+//! Enabled per deployment with [`crate::config::StoreSettings`] /
+//! `--store-dir DIR` / `--store-budget-mb M`; disabled (no persistence,
+//! all counters zero) by default.
+
+pub mod codec;
+pub mod fs;
+pub mod memory;
+
+pub use fs::FsSink;
+pub use memory::MemorySink;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::cache::{CachedExpm, PlanKey, ResultKey};
+use crate::config::StoreSettings;
+use crate::coordinator::request::Method;
+use crate::error::{MatexpError, Result};
+use crate::json_obj;
+use crate::linalg::matrix::Matrix;
+use crate::plan::PlanKind;
+use crate::util::json::Json;
+
+/// Artifact namespace of a [`StoreKey`] — which codec its payload speaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// A cached exponentiation result (key + matrix payload).
+    Result,
+    /// The autotune winner table (one well-known entry).
+    Autotune,
+    /// One memoized launch plan.
+    Plan,
+}
+
+impl ArtifactKind {
+    /// Wire/header tag byte.
+    pub fn tag(self) -> u8 {
+        match self {
+            ArtifactKind::Result => 0,
+            ArtifactKind::Autotune => 1,
+            ArtifactKind::Plan => 2,
+        }
+    }
+
+    /// Inverse of [`ArtifactKind::tag`].
+    pub fn from_tag(tag: u8) -> Option<ArtifactKind> {
+        match tag {
+            0 => Some(ArtifactKind::Result),
+            1 => Some(ArtifactKind::Autotune),
+            2 => Some(ArtifactKind::Plan),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (cluster wire vocabulary).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::Result => "result",
+            ArtifactKind::Autotune => "autotune",
+            ArtifactKind::Plan => "plan",
+        }
+    }
+
+    /// Inverse of [`ArtifactKind::as_str`].
+    pub fn from_str_opt(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "result" => Some(ArtifactKind::Result),
+            "autotune" => Some(ArtifactKind::Autotune),
+            "plan" => Some(ArtifactKind::Plan),
+            _ => None,
+        }
+    }
+}
+
+/// Content address of one store entry: an artifact namespace plus the
+/// 128-bit dual-FNV digest the result cache already computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    /// Which codec the payload speaks.
+    pub kind: ArtifactKind,
+    /// High 64 bits of the content digest.
+    pub hi: u64,
+    /// Low 64 bits of the content digest.
+    pub lo: u64,
+}
+
+impl StoreKey {
+    /// Canonical hex form, also the [`FsSink`] file stem:
+    /// `{kind_tag:02x}-{hi:016x}{lo:016x}`.
+    pub fn hex(&self) -> String {
+        format!("{:02x}-{:016x}{:016x}", self.kind.tag(), self.hi, self.lo)
+    }
+}
+
+/// XXH64-style checksum (hand-rolled like the rest of the crate): 8-byte
+/// lane folding with prime multiplies and rotates, finished with an
+/// avalanche mix, seeded by the input length so truncation always
+/// changes the sum.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    const P1: u64 = 0x9E37_79B1_85EB_CA87;
+    const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    const P3: u64 = 0x1656_67B1_9E37_79F9;
+    let mut h = P3 ^ (bytes.len() as u64);
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().expect("chunks_exact(8)"));
+        h = (h ^ w.wrapping_mul(P2)).rotate_left(27).wrapping_mul(P1);
+    }
+    for &b in chunks.remainder() {
+        h = (h ^ u64::from(b).wrapping_mul(P1)).rotate_left(11).wrapping_mul(P2);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(P2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(P3);
+    h ^= h >> 32;
+    h
+}
+
+/// A pluggable persistence backend: a flat map from [`StoreKey`] to an
+/// opaque payload. Implementations must be safe to share across the
+/// serving threads.
+///
+/// The error contract carries the durability semantics: `get` answers
+/// `Ok(None)` for an absent key but `Err(`[`MatexpError::Store`]`)` for
+/// an entry that exists and fails verification (torn write, bit rot) —
+/// a corrupt entry must be distinguishable from a miss and must never
+/// decode to wrong bits. One entry's corruption must not affect any
+/// other entry.
+pub trait Sink: Send + Sync {
+    /// Store `payload` under `key`, replacing any existing entry.
+    /// Durable implementations must commit atomically: a crash mid-put
+    /// leaves either the old entry or the new one, never a torn mix.
+    fn put(&self, key: StoreKey, payload: &[u8]) -> Result<()>;
+
+    /// The payload under `key`: `Ok(None)` when absent, a typed
+    /// [`MatexpError::Store`] when present but corrupt.
+    fn get(&self, key: &StoreKey) -> Result<Option<Vec<u8>>>;
+
+    /// Remove the entry; `Ok(true)` when something was removed.
+    fn delete(&self, key: &StoreKey) -> Result<bool>;
+
+    /// Number of entries currently held.
+    fn len(&self) -> usize;
+
+    /// `true` when the sink holds nothing.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every key currently held (index order, no payload I/O).
+    fn keys(&self) -> Vec<StoreKey>;
+
+    /// Total payload bytes currently held (headers not counted).
+    fn bytes(&self) -> u64;
+
+    /// Index-only membership test (no payload verification).
+    fn contains(&self, key: &StoreKey) -> bool;
+}
+
+// ------------------------------------------------------------- counters
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+static SPILLS: AtomicU64 = AtomicU64::new(0);
+static LOADS: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time totals for the persistence tier (process-wide; zeros
+/// when no store is configured).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Store lookups that found a verified entry.
+    pub hits: u64,
+    /// Store lookups that found nothing — or found a corrupt entry,
+    /// which is served as a miss, never as wrong bits.
+    pub misses: u64,
+    /// Result entries demoted from the in-memory tier by its byte budget
+    /// with a disk copy retained (spill-instead-of-evict).
+    pub spills: u64,
+    /// Entries loaded out of the store back into a warm tier (results
+    /// promoted on miss, artifacts re-injected on warm restart).
+    pub loads: u64,
+    /// Entries currently held by the active sink.
+    pub entries: u64,
+    /// Payload bytes currently held by the active sink.
+    pub bytes: u64,
+}
+
+impl StoreCounters {
+    /// Serialize for the server `metrics` response.
+    pub fn to_json(&self) -> Json {
+        json_obj![
+            ("hits", self.hits),
+            ("misses", self.misses),
+            ("spills", self.spills),
+            ("loads", self.loads),
+            ("entries", self.entries),
+            ("bytes", self.bytes),
+        ]
+    }
+}
+
+/// Snapshot the process-wide store counters.
+pub fn counters() -> StoreCounters {
+    let (entries, bytes) = match active() {
+        Some(store) => (store.sink.len() as u64, store.sink.bytes()),
+        None => (0, 0),
+    };
+    StoreCounters {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+        spills: SPILLS.load(Ordering::Relaxed),
+        loads: LOADS.load(Ordering::Relaxed),
+        entries,
+        bytes,
+    }
+}
+
+// ------------------------------------------------------- the active store
+
+/// The artifact store the process serves from: a [`Sink`] behind a disk
+/// byte budget with FIFO demotion (oldest committed entries deleted
+/// first when a put would exceed the budget).
+pub struct ArtifactStore {
+    sink: Box<dyn Sink>,
+    budget: u64,
+    /// The directory this store serves (None for memory-backed stores) —
+    /// lets [`configure`] recognize an already-active directory.
+    dir: Option<std::path::PathBuf>,
+    /// Commit order for budget-driven deletion (rebuilt in arbitrary
+    /// index order when a sink is reopened).
+    order: Mutex<VecDeque<StoreKey>>,
+}
+
+impl ArtifactStore {
+    /// Wrap `sink` under `budget_bytes` of payload budget.
+    pub fn with_sink(sink: Box<dyn Sink>, budget_bytes: u64) -> ArtifactStore {
+        let order = sink.keys().into();
+        ArtifactStore { sink, budget: budget_bytes, dir: None, order: Mutex::new(order) }
+    }
+
+    /// Open the store `settings` describes: an [`FsSink`] rooted at
+    /// `settings.dir` (which must be set).
+    pub fn open(settings: &StoreSettings) -> Result<ArtifactStore> {
+        let dir = settings.dir.as_ref().ok_or_else(|| {
+            MatexpError::Store("store.dir is not set — nothing to open".into())
+        })?;
+        let sink = FsSink::open(dir)?;
+        let mut store = ArtifactStore::with_sink(Box::new(sink), settings.budget_bytes());
+        store.dir = Some(dir.clone());
+        Ok(store)
+    }
+
+    /// The directory this store serves, when filesystem-backed.
+    pub fn dir(&self) -> Option<&std::path::Path> {
+        self.dir.as_deref()
+    }
+
+    /// The sink behind this store.
+    pub fn sink(&self) -> &dyn Sink {
+        self.sink.as_ref()
+    }
+
+    /// Store `payload` under `key`, deleting oldest entries to respect
+    /// the byte budget. A payload bigger than the whole budget is
+    /// dropped rather than flushing everything else.
+    pub fn put(&self, key: StoreKey, payload: &[u8]) -> Result<()> {
+        let need = payload.len() as u64;
+        if need > self.budget {
+            return Ok(());
+        }
+        let mut order = self.order.lock().expect("store order poisoned");
+        while self.sink.bytes() + need > self.budget {
+            match order.pop_front() {
+                Some(old) if old != key => {
+                    self.sink.delete(&old)?;
+                }
+                Some(_) => {} // replacing this key frees its own bytes
+                None => break,
+            }
+        }
+        let fresh = !self.sink.contains(&key);
+        self.sink.put(key, payload)?;
+        if fresh {
+            order.push_back(key);
+        }
+        Ok(())
+    }
+
+    /// The verified payload under `key`. Counts a hit or a miss; a
+    /// corrupt entry counts as a miss and is deleted so a later
+    /// write-through can replace it — its typed [`MatexpError::Store`]
+    /// stays observable at the [`Sink`] layer.
+    pub fn get(&self, key: &StoreKey) -> Option<Vec<u8>> {
+        match self.sink.get(key) {
+            Ok(Some(payload)) => {
+                HITS.fetch_add(1, Ordering::Relaxed);
+                Some(payload)
+            }
+            Ok(None) => {
+                MISSES.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(_) => {
+                MISSES.fetch_add(1, Ordering::Relaxed);
+                let _ = self.sink.delete(key);
+                self.order.lock().expect("store order poisoned").retain(|k| k != key);
+                None
+            }
+        }
+    }
+
+    /// Index-only membership test.
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.sink.contains(key)
+    }
+}
+
+fn active_slot() -> &'static Mutex<Option<Arc<ArtifactStore>>> {
+    static ACTIVE: OnceLock<Mutex<Option<Arc<ArtifactStore>>>> = OnceLock::new();
+    ACTIVE.get_or_init(|| Mutex::new(None))
+}
+
+/// The process-wide store, when one is configured.
+pub fn active() -> Option<Arc<ArtifactStore>> {
+    active_slot().lock().expect("store slot poisoned").clone()
+}
+
+/// Install `store` as the process-wide instance (tests and embedders;
+/// deployments go through [`configure`]). Replaces any previous one.
+pub fn activate(store: Arc<ArtifactStore>) {
+    *active_slot().lock().expect("store slot poisoned") = Some(store);
+}
+
+/// Drop the process-wide store (persisted entries stay on disk).
+pub fn deactivate() {
+    *active_slot().lock().expect("store slot poisoned") = None;
+}
+
+/// Configure the process-wide store from `settings` and warm-load its
+/// persisted artifacts (autotune rows, plans) into their tiers. With no
+/// `settings.dir` this is a no-op; engine/coordinator construction calls
+/// it so `--store-dir` alone turns the tier on. Returns how many
+/// artifacts were warm-loaded.
+pub fn configure(settings: &StoreSettings) -> Result<usize> {
+    let Some(dir) = settings.dir.as_ref() else { return Ok(0) };
+    if let Some(current) = active() {
+        // already serving this directory: reconfiguring per-worker is a no-op
+        if current.dir() == Some(dir.as_path()) {
+            return Ok(0);
+        }
+    }
+    let store = Arc::new(ArtifactStore::open(settings)?);
+    let loaded = warm_load(&store);
+    activate(store);
+    Ok(loaded)
+}
+
+/// Re-inject persisted artifacts into their warm tiers: autotune rows
+/// into the tuning table, plans into the plan cache. Result entries stay
+/// lazy — they promote on first lookup. Returns the artifact count.
+fn warm_load(store: &ArtifactStore) -> usize {
+    let mut loaded = 0;
+    for key in store.sink.keys() {
+        let payload = match key.kind {
+            ArtifactKind::Result => continue,
+            _ => match store.sink.get(&key) {
+                Ok(Some(p)) => p,
+                _ => continue, // torn/corrupt artifacts are skipped, not fatal
+            },
+        };
+        match key.kind {
+            ArtifactKind::Autotune => {
+                if let Ok(rows) = codec::decode_autotune(&payload) {
+                    for (n, winner, secs) in rows {
+                        crate::linalg::autotune::record(n, &[(winner, secs)]);
+                        loaded += 1;
+                    }
+                    LOADS.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            ArtifactKind::Plan => {
+                if let Ok((plan_key, plan)) = codec::decode_plan(&payload) {
+                    crate::cache::PlanCache::global().fetch(
+                        plan_key,
+                        crate::cache::CacheControl::Use,
+                        || plan,
+                    );
+                    LOADS.fetch_add(1, Ordering::Relaxed);
+                    loaded += 1;
+                }
+            }
+            ArtifactKind::Result => unreachable!("skipped above"),
+        }
+    }
+    loaded
+}
+
+// --------------------------------------------- tier plumbing (results)
+
+/// Write-through persist one result entry (no-op without an active
+/// store, or when the entry is already on disk).
+pub fn persist_result(
+    key: &ResultKey,
+    result: &Matrix,
+    method: Method,
+    plan_kind: Option<PlanKind>,
+) {
+    let Some(store) = active() else { return };
+    let skey = codec::result_store_key(key);
+    if store.contains(&skey) {
+        return;
+    }
+    let payload = codec::encode_result(key, result, method, plan_kind);
+    let _ = store.put(skey, &payload);
+}
+
+/// Record a budget-driven demotion from the memory tier: ensure the
+/// entry has a disk copy and count the spill.
+pub fn spill_result(key: &ResultKey, value: &CachedExpm) {
+    if active().is_none() {
+        return;
+    }
+    persist_result(key, &value.result, value.method, value.plan_kind);
+    SPILLS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Tier-1 lookup on a memory miss: fetch, verify and decode the entry,
+/// promote it back into the in-memory result cache, count the load.
+/// `None` on absence or corruption (wrong bits are never served).
+pub fn load_result(key: &ResultKey) -> Option<CachedExpm> {
+    let store = active()?;
+    let payload = store.get(&codec::result_store_key(key))?;
+    let (stored_key, value) = codec::decode_result(&payload).ok()?;
+    if stored_key != *key {
+        // digest collision or cross-wired entry: never serve it
+        return None;
+    }
+    crate::cache::ResultCache::global().insert(
+        stored_key,
+        &value.result,
+        value.method,
+        value.plan_kind,
+    );
+    LOADS.fetch_add(1, Ordering::Relaxed);
+    Some(value)
+}
+
+// -------------------------------------------- tier plumbing (artifacts)
+
+/// Persist the current autotune winner table as one artifact (no-op
+/// without an active store or with an empty table).
+pub fn persist_autotune() {
+    let Some(store) = active() else { return };
+    let rows = crate::linalg::autotune::snapshot();
+    if rows.is_empty() {
+        return;
+    }
+    let payload = codec::encode_autotune(&rows);
+    let _ = store.put(codec::autotune_store_key(), &payload);
+}
+
+/// Write-through persist one memoized plan (no-op without an active
+/// store, or when already persisted).
+pub fn persist_plan(key: &PlanKey, plan: &crate::plan::Plan) {
+    let Some(store) = active() else { return };
+    let skey = codec::plan_store_key(key);
+    if store.contains(&skey) {
+        return;
+    }
+    let payload = codec::encode_plan(key, plan);
+    let _ = store.put(skey, &payload);
+}
+
+// ------------------------------------------------- cluster artifact pull
+
+/// How many hot result entries [`export_hot`] ships at most (the
+/// recency-ordered head of the memory tier).
+pub const HOT_EXPORT_LIMIT: usize = 32;
+
+/// Export this process's hot artifacts as a wire document: the most
+/// recently used result entries plus the autotune table, each payload
+/// base64-encoded in its store codec. What a cluster member answers to
+/// the `cluster pull` op.
+pub fn export_hot(limit: usize) -> Json {
+    let mut artifacts = Vec::new();
+    for (key, value) in crate::cache::ResultCache::global().export_recent(limit) {
+        let payload = codec::encode_result(&key, &value.result, value.method, value.plan_kind);
+        artifacts.push(json_obj![
+            ("kind", ArtifactKind::Result.as_str()),
+            ("payload", crate::util::base64::encode(&payload)),
+        ]);
+    }
+    let rows = crate::linalg::autotune::snapshot();
+    if !rows.is_empty() {
+        artifacts.push(json_obj![
+            ("kind", ArtifactKind::Autotune.as_str()),
+            ("payload", crate::util::base64::encode(&codec::encode_autotune(&rows))),
+        ]);
+    }
+    Json::Arr(artifacts)
+}
+
+/// Install artifacts from a wire document (the array [`export_hot`]
+/// produces, or an object holding it under `"artifacts"`) into the local
+/// warm tiers and the active store. Undecodable entries are skipped.
+/// Returns how many artifacts were installed.
+pub fn install(doc: &Json) -> usize {
+    let arr = match doc.as_arr() {
+        Some(a) => a,
+        None => match doc.get("artifacts").and_then(Json::as_arr) {
+            Some(a) => a,
+            None => return 0,
+        },
+    };
+    let mut installed = 0;
+    for entry in arr {
+        let kind = entry
+            .get("kind")
+            .and_then(Json::as_str)
+            .and_then(ArtifactKind::from_str_opt);
+        let payload = entry
+            .get("payload")
+            .and_then(Json::as_str)
+            .and_then(crate::util::base64::decode);
+        let (Some(kind), Some(payload)) = (kind, payload) else { continue };
+        match kind {
+            ArtifactKind::Result => {
+                if let Ok((key, value)) = codec::decode_result(&payload) {
+                    crate::cache::ResultCache::global().insert(
+                        key,
+                        &value.result,
+                        value.method,
+                        value.plan_kind,
+                    );
+                    persist_result(&key, &value.result, value.method, value.plan_kind);
+                    installed += 1;
+                }
+            }
+            ArtifactKind::Autotune => {
+                if let Ok(rows) = codec::decode_autotune(&payload) {
+                    for (n, winner, secs) in &rows {
+                        crate::linalg::autotune::record(*n, &[(*winner, *secs)]);
+                    }
+                    persist_autotune();
+                    installed += 1;
+                }
+            }
+            ArtifactKind::Plan => {
+                if let Ok((plan_key, plan)) = codec::decode_plan(&payload) {
+                    let stored = crate::cache::PlanCache::global().fetch(
+                        plan_key,
+                        crate::cache::CacheControl::Use,
+                        || plan,
+                    );
+                    persist_plan(&plan_key, &stored);
+                    installed += 1;
+                }
+            }
+        }
+    }
+    installed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_deterministic_and_sensitive() {
+        let data: Vec<u8> = (0u8..=200).collect();
+        assert_eq!(checksum(&data), checksum(&data));
+        let mut flipped = data.clone();
+        flipped[37] ^= 0x01;
+        assert_ne!(checksum(&data), checksum(&flipped), "single bit flip changes the sum");
+        assert_ne!(checksum(&data), checksum(&data[..data.len() - 1]), "truncation changes it");
+        assert_ne!(checksum(b""), checksum(&[0]), "length is part of the seed");
+    }
+
+    #[test]
+    fn artifact_kind_tags_roundtrip() {
+        for kind in [ArtifactKind::Result, ArtifactKind::Autotune, ArtifactKind::Plan] {
+            assert_eq!(ArtifactKind::from_tag(kind.tag()), Some(kind));
+            assert_eq!(ArtifactKind::from_str_opt(kind.as_str()), Some(kind));
+        }
+        assert_eq!(ArtifactKind::from_tag(99), None);
+        assert_eq!(ArtifactKind::from_str_opt("wat"), None);
+    }
+
+    #[test]
+    fn artifact_store_budget_deletes_oldest_first() {
+        let store = ArtifactStore::with_sink(Box::new(MemorySink::new()), 100);
+        let key = |lo| StoreKey { kind: ArtifactKind::Result, hi: 7, lo };
+        store.put(key(1), &[1u8; 40]).unwrap();
+        store.put(key(2), &[2u8; 40]).unwrap();
+        store.put(key(3), &[3u8; 40]).unwrap(); // 120 > 100: key(1) goes
+        assert!(store.get(&key(1)).is_none());
+        assert_eq!(store.get(&key(2)).unwrap(), vec![2u8; 40]);
+        assert_eq!(store.get(&key(3)).unwrap(), vec![3u8; 40]);
+        // oversized payloads are dropped, not budget-flushing
+        store.put(key(4), &[4u8; 200]).unwrap();
+        assert!(store.get(&key(4)).is_none());
+        assert!(store.get(&key(2)).is_some());
+    }
+}

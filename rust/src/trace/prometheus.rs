@@ -77,9 +77,31 @@ pub fn render(snap: &MetricsSnapshot) -> String {
     counter(&mut out, "cache_result_inserts_total", "Result-cache inserts.", snap.cache.result_inserts);
     counter(&mut out, "cache_result_evictions_total", "Result-cache LRU evictions.", snap.cache.result_evictions);
 
+    counter(&mut out, "store_hits_total", "Artifact-store lookups that found a verified entry.", snap.store.hits);
+    counter(
+        &mut out,
+        "store_misses_total",
+        "Artifact-store lookups that found nothing or a corrupt entry.",
+        snap.store.misses,
+    );
+    counter(
+        &mut out,
+        "store_spills_total",
+        "Result entries demoted to disk by the in-memory byte budget.",
+        snap.store.spills,
+    );
+    counter(
+        &mut out,
+        "store_loads_total",
+        "Entries loaded from the artifact store back into a warm tier.",
+        snap.store.loads,
+    );
+
     gauge(&mut out, "queue_depth", "Requests waiting in the batcher right now.", snap.queue_depth);
     gauge(&mut out, "cache_result_entries", "Entries resident in the result cache.", snap.cache.result_entries);
     gauge(&mut out, "cache_result_bytes", "Bytes resident in the result cache.", snap.cache.result_bytes);
+    gauge(&mut out, "store_entries", "Entries held by the artifact store.", snap.store.entries);
+    gauge(&mut out, "store_bytes", "Payload bytes held by the artifact store.", snap.store.bytes);
 
     if !snap.devices.is_empty() {
         let _ = writeln!(out, "# HELP {PREFIX}device_jobs Requests executed per pool device.");
@@ -271,6 +293,28 @@ mod tests {
         assert!(text.contains("matexp_queue_depth 3"), "{text}");
         assert!(text.contains("matexp_device_jobs{device=\"sim#0\"} 5"), "{text}");
         assert!(text.contains("matexp_cache_plan_hits_total"), "{text}");
+    }
+
+    #[test]
+    fn store_series_render_and_pass_the_lint() {
+        let mut s = sample_snapshot();
+        s.store = crate::store::StoreCounters {
+            hits: 7,
+            misses: 2,
+            spills: 5,
+            loads: 3,
+            entries: 4,
+            bytes: 4096,
+        };
+        let text = render(&s);
+        lint(&text).unwrap();
+        assert!(text.contains("# TYPE matexp_store_loads_total counter"), "{text}");
+        assert!(text.contains("matexp_store_hits_total 7"), "{text}");
+        assert!(text.contains("matexp_store_misses_total 2"), "{text}");
+        assert!(text.contains("matexp_store_spills_total 5"), "{text}");
+        assert!(text.contains("matexp_store_loads_total 3"), "{text}");
+        assert!(text.contains("matexp_store_entries 4"), "{text}");
+        assert!(text.contains("matexp_store_bytes 4096"), "{text}");
     }
 
     #[test]

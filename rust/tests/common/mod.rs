@@ -1,0 +1,81 @@
+//! Shared integration-test harness, included by the suites as
+//! `mod common;`.
+//!
+//! Three things the suites used to each duplicate live here once:
+//!
+//! * [`test_guard`] — a process-global lock. The crate holds global
+//!   state (the flight recorder's ring and enable flag, the cache
+//!   tiers, the artifact store slot and its counters), so any test that
+//!   reconfigures or asserts on that state must serialize against every
+//!   other such test **across suites is impossible** (separate test
+//!   binaries are separate processes) but within a suite this guard is
+//!   the one lock to take. Poisoning is forgiven: an earlier panicked
+//!   test must not cascade.
+//! * [`start_server`] — the standard two-worker service + TCP server
+//!   on an OS-assigned port, returning the handle, the server (shut
+//!   down on drop by the caller holding it) and its address.
+//! * [`scratch_dir`] / [`free_port`] — a tempdir guard with scoped
+//!   cleanup (the directory is removed when the guard drops, even on
+//!   panic) and a port allocator for tests that need an address before
+//!   anything is listening on it.
+
+#![allow(dead_code)] // each suite uses the subset it needs
+
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use matexp::config::MatexpConfig;
+use matexp::coordinator::service::{Service, ServiceHandle};
+use matexp::server::server::{serve_background, Server};
+use matexp::util::tempdir::TempDir;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize this test against every other guard-holding test in the
+/// same binary (shared process-global state: recorder, caches, store).
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A scoped scratch directory: unique, empty, and deleted (recursively)
+/// when the returned guard goes out of scope — panicking tests included,
+/// since cleanup rides `Drop`.
+pub fn scratch_dir() -> TempDir {
+    TempDir::new().expect("create scratch dir")
+}
+
+/// An OS-assigned free TCP port on localhost. The probe listener is
+/// closed before returning, so the port is free at the moment of return
+/// (a later bind can still race other processes — tests that can should
+/// prefer binding to port 0 directly).
+pub fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .expect("probe bind")
+        .local_addr()
+        .expect("probe addr")
+        .port()
+}
+
+/// The standard integration fixture: a two-worker service with a fast
+/// batcher behind a TCP server on an OS-assigned port. Drop the returned
+/// [`Server`] to shut down.
+pub fn start_server() -> (Arc<ServiceHandle>, Server, String) {
+    start_server_with(MatexpConfig::default())
+}
+
+/// [`start_server`] with a caller-shaped config (workers and batcher
+/// wait are still pinned to the fast-test values unless the caller set
+/// them away from the defaults).
+pub fn start_server_with(mut cfg: MatexpConfig) -> (Arc<ServiceHandle>, Server, String) {
+    let defaults = MatexpConfig::default();
+    if cfg.workers == defaults.workers {
+        cfg.workers = 2;
+    }
+    if cfg.batcher.max_wait_ms == defaults.batcher.max_wait_ms {
+        cfg.batcher.max_wait_ms = 1;
+    }
+    let service = Arc::new(Service::start(cfg).expect("service starts"));
+    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8).expect("binds");
+    let addr = server.local_addr().to_string();
+    (service, server, addr)
+}

@@ -14,12 +14,13 @@ use matexp::cache::CacheControl;
 use matexp::cluster::Cluster;
 use matexp::config::{ClusterSettings, MatexpConfig};
 use matexp::coordinator::request::Method;
-use matexp::coordinator::service::Service;
 use matexp::error::MatexpError;
 use matexp::linalg::matrix::Matrix;
-use matexp::server::server::serve_background;
 use matexp::server::{ClusterAction, MatexpClient};
 use matexp::util::json::Json;
+
+mod common;
+use common::{start_server, start_server_with};
 
 /// A deterministic, numerically tame workload matrix (spectral radius
 /// well under 1, so high powers stay finite).
@@ -78,12 +79,8 @@ fn repeated_digests_concentrate_with_affinity_and_match_single_server() {
     assert!(busy <= hot.len(), "2 hot digests spread over {busy} members: {status}");
 
     // bit-identical to a single server computing the same submissions
-    let mut cfg = MatexpConfig::default();
-    cfg.workers = 2;
-    cfg.batcher.max_wait_ms = 1;
-    let service = Arc::new(Service::start(cfg).expect("service starts"));
-    let single = serve_background(service, "127.0.0.1:0", 4).expect("binds");
-    let mut direct = MatexpClient::connect(&single.local_addr().to_string()).expect("connect");
+    let (_service, _single, direct_addr) = start_server();
+    let mut direct = MatexpClient::connect(&direct_addr).expect("connect");
     for (m, via_router) in hot.iter().zip(&routed) {
         let (expect, _) = direct.expm(m, 64, Method::Ours).expect("direct expm");
         let same = expect
@@ -243,12 +240,8 @@ fn runtime_join_and_leave_reshape_the_member_set() {
 
     // a third, standalone member started outside the sim harness
     let mut cfg = MatexpConfig::default();
-    cfg.workers = 2;
-    cfg.batcher.max_wait_ms = 1;
     cfg.cache.results = true;
-    let service = Arc::new(Service::start(cfg).expect("service starts"));
-    let extra = serve_background(service, "127.0.0.1:0", 4).expect("binds");
-    let extra_addr = extra.local_addr().to_string();
+    let (_extra_service, _extra, extra_addr) = start_server_with(cfg);
 
     let doc = control.cluster(ClusterAction::Join, Some(extra_addr.as_str())).expect("join");
     let rows = doc.get("members").and_then(Json::as_arr).expect("members block");

@@ -6,31 +6,20 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::Arc;
 
 use matexp::bench::loadtest;
 use matexp::cache::CacheControl;
-use matexp::config::MatexpConfig;
 use matexp::coordinator::request::Method;
-use matexp::coordinator::service::Service;
 use matexp::error::MatexpError;
 use matexp::linalg::{self, matrix::Matrix, CpuAlgo};
 use matexp::server::client::MatexpClient;
 use matexp::server::frame::{self, Frame};
 use matexp::server::proto::{Payload, WireRequest, WireResponse};
-use matexp::server::server::{serve_background, Server};
 use matexp::util::json::Json;
 use matexp::util::prop::property;
 
-fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, String) {
-    let mut cfg = MatexpConfig::default();
-    cfg.workers = 2;
-    cfg.batcher.max_wait_ms = 1;
-    let service = Arc::new(Service::start(cfg).expect("service starts"));
-    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 8).expect("binds");
-    let addr = server.local_addr().to_string();
-    (service, server, addr)
-}
+mod common;
+use common::start_server;
 
 /// Bit-exact f32 slice comparison (NaN-tolerant, unlike `==`).
 fn assert_bits_eq(a: &[f32], b: &[f32]) {

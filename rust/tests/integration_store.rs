@@ -1,0 +1,236 @@
+//! Integration: the persistence tier's crash-recovery contract.
+//!
+//! * A write killed mid-flight (an injectable [`Sink`] wrapper that
+//!   commits only part of the entry file — the moral equivalent of the
+//!   process dying mid-flush) leaves a torn entry that the
+//!   rebuild-on-open index **skips and quarantines**, while every
+//!   fully-committed entry survives the reopen bit-exactly.
+//! * The warm-restart acceptance bar: a service restarted on the same
+//!   `--store-dir` serves a repeated request **with zero kernel
+//!   launches** and a result **bit-identical** to the pre-restart cold
+//!   run — after every in-memory tier was wiped.
+//!
+//! The store slot, result cache and counters are process-global, so the
+//! restart tests serialize on [`common::test_guard`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use matexp::cache::ResultCache;
+use matexp::config::MatexpConfig;
+use matexp::coordinator::request::Method;
+use matexp::coordinator::service::Service;
+use matexp::error::Result;
+use matexp::exec::{Executor, Submission};
+use matexp::linalg::matrix::Matrix;
+use matexp::store::{ArtifactKind, FsSink, Sink, StoreKey};
+
+mod common;
+use common::{scratch_dir, test_guard};
+
+fn key(lo: u64) -> StoreKey {
+    StoreKey { kind: ArtifactKind::Result, hi: 3, lo }
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix) {
+    assert_eq!(a.n(), b.n());
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+    }
+}
+
+/// Fault-injecting [`Sink`]: delegates to a real [`FsSink`], but when
+/// armed it commits only the first half of the entry file — simulating
+/// a crash mid-write on a filesystem that reordered the flush past the
+/// rename.
+struct TornSink {
+    inner: FsSink,
+    tear_next: AtomicBool,
+}
+
+impl TornSink {
+    fn new(inner: FsSink) -> TornSink {
+        TornSink { inner, tear_next: AtomicBool::new(false) }
+    }
+
+    /// Arm the wrapper: the NEXT put commits only half its bytes.
+    fn tear_next_write(&self) {
+        self.tear_next.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Sink for TornSink {
+    fn put(&self, key: StoreKey, payload: &[u8]) -> Result<()> {
+        self.inner.put(key, payload)?;
+        if self.tear_next.swap(false, Ordering::SeqCst) {
+            let path = self.inner.entry_path(&key);
+            let bytes = std::fs::read(&path).expect("read committed entry");
+            std::fs::write(&path, &bytes[..bytes.len() / 2]).expect("tear entry");
+        }
+        Ok(())
+    }
+
+    fn get(&self, key: &StoreKey) -> Result<Option<Vec<u8>>> {
+        self.inner.get(key)
+    }
+
+    fn delete(&self, key: &StoreKey) -> Result<bool> {
+        self.inner.delete(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn keys(&self) -> Vec<StoreKey> {
+        self.inner.keys()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.inner.bytes()
+    }
+
+    fn contains(&self, key: &StoreKey) -> bool {
+        self.inner.contains(key)
+    }
+}
+
+/// Kill a write mid-flight, reopen the directory: the index rebuild
+/// skips (and quarantines) the torn entry, every committed entry
+/// survives bit-exactly, and stray temp files from interrupted atomic
+/// writes are swept.
+#[test]
+fn reopen_after_torn_write_keeps_committed_entries_and_skips_the_torn_one() {
+    let dir = scratch_dir();
+    let sink = TornSink::new(FsSink::open(dir.path()).expect("open"));
+
+    let warm_a = b"committed before the crash".to_vec();
+    let warm_b: Vec<u8> = (0..=255u8).collect();
+    sink.put(key(1), &warm_a).expect("put a");
+    sink.put(key(2), &warm_b).expect("put b");
+
+    // the mid-flight kill: entry 3's write commits only half its bytes
+    sink.tear_next_write();
+    sink.put(key(3), b"this write dies halfway through the flush").expect("torn put");
+
+    // a stray temp from an interrupted atomic write, pre-rename
+    std::fs::write(dir.path().join("deadbeef-0.tmp"), b"half a header").expect("stray tmp");
+
+    drop(sink); // "process exit"
+
+    let reopened = FsSink::open(dir.path()).expect("reopen after crash");
+    assert_eq!(reopened.len(), 2, "index rebuild must skip the torn entry");
+    assert_eq!(reopened.get(&key(1)).expect("get a").as_deref(), Some(&warm_a[..]));
+    assert_eq!(reopened.get(&key(2)).expect("get b").as_deref(), Some(&warm_b[..]));
+    assert_eq!(reopened.get(&key(3)).expect("torn get"), None, "torn entry must read as absent");
+    assert!(
+        !reopened.entry_path(&key(3)).exists(),
+        "torn entry file must be quarantined at open"
+    );
+    assert!(!dir.path().join("deadbeef-0.tmp").exists(), "temp files must be swept at open");
+
+    // the slot is reusable: a fresh committed write under the torn key
+    let fresh = b"rewritten after recovery".to_vec();
+    reopened.put(key(3), &fresh).expect("rewrite");
+    assert_eq!(reopened.get(&key(3)).expect("get").as_deref(), Some(&fresh[..]));
+}
+
+/// The warm-restart acceptance bar, in-process: cold run against a
+/// store-backed service, wipe every in-memory tier (the "restart"),
+/// start a new service on the same directory — the repeated request is
+/// served with ZERO kernel launches and bit-identical result.
+#[test]
+fn restarted_service_serves_warm_hit_with_zero_launches_bit_identical() {
+    let _guard = test_guard();
+    let dir = scratch_dir();
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    cfg.cache.results = true;
+    cfg.store.dir = Some(dir.path().to_path_buf());
+
+    // pristine tiers: nothing from other tests leaks into this contract
+    ResultCache::global().clear();
+    matexp::store::deactivate();
+
+    let a = Matrix::random_spectral(40, 0.8, 99);
+    let cold = {
+        let mut service = Service::start(cfg.clone()).expect("first service");
+        let resp =
+            service.run(Submission::expm(a.clone(), 128).method(Method::Ours)).expect("cold run");
+        assert!(resp.stats.launches > 0, "cold run must execute");
+        resp
+    };
+
+    // "restart": the first service is gone, every in-memory tier wiped —
+    // only the directory remains
+    ResultCache::global().clear();
+    matexp::store::deactivate();
+
+    let mut service = Service::start(cfg).expect("restarted service");
+    let warm =
+        service.run(Submission::expm(a.clone(), 128).method(Method::Ours)).expect("warm run");
+    assert_eq!(
+        warm.stats.launches, 0,
+        "a restart on the same --store-dir must serve the repeat from the store"
+    );
+    assert_bits_eq(&cold.result, &warm.result);
+    assert_eq!(warm.method, cold.method);
+
+    // the promotion was counted: at least one store load happened
+    assert!(matexp::store::counters().loads >= 1, "{:?}", matexp::store::counters());
+
+    matexp::store::deactivate();
+}
+
+/// Corrupting the persisted result on disk between restarts downgrades
+/// the repeat to a (correct) cold re-run — the checksum rejects the
+/// entry, the service never serves damaged bits.
+#[test]
+fn corrupted_store_entry_is_recomputed_not_served() {
+    let _guard = test_guard();
+    let dir = scratch_dir();
+    let mut cfg = MatexpConfig::default();
+    cfg.workers = 2;
+    cfg.batcher.max_wait_ms = 1;
+    cfg.cache.results = true;
+    cfg.store.dir = Some(dir.path().to_path_buf());
+
+    ResultCache::global().clear();
+    matexp::store::deactivate();
+
+    let a = Matrix::random_spectral(32, 0.8, 123);
+    let cold = {
+        let mut service = Service::start(cfg.clone()).expect("first service");
+        service.run(Submission::expm(a.clone(), 64).method(Method::Ours)).expect("cold run")
+    };
+    assert!(cold.stats.launches > 0);
+
+    // flip one payload bit in every persisted result entry
+    let mut flipped = 0;
+    for entry in std::fs::read_dir(dir.path()).expect("read dir") {
+        let path = entry.expect("entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("mxst") {
+            continue;
+        }
+        let mut bytes = std::fs::read(&path).expect("read");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).expect("corrupt");
+        flipped += 1;
+    }
+    assert!(flipped > 0, "cold run must have persisted at least one artifact");
+
+    ResultCache::global().clear();
+    matexp::store::deactivate();
+
+    let mut service = Service::start(cfg).expect("restarted service");
+    let rerun =
+        service.run(Submission::expm(a.clone(), 64).method(Method::Ours)).expect("re-run");
+    assert!(
+        rerun.stats.launches > 0,
+        "corrupt entries must force a re-execution, not a warm serve"
+    );
+    assert_bits_eq(&cold.result, &rerun.result);
+
+    matexp::store::deactivate();
+}

@@ -1,0 +1,194 @@
+//! Property battery for the persistence tier's durability contract:
+//!
+//! * put/get roundtrips are **bit-exact** for arbitrary payloads, and
+//!   for result artifacts holding every f32 bit pattern — NaNs, ±Inf,
+//!   subnormals, -0.0 — through the result codec and both sinks;
+//! * a committed entry truncated at **every** byte boundary is answered
+//!   with the typed [`MatexpError::Store`] error, never wrong bits;
+//! * a random bit flip anywhere in a committed entry file is likewise a
+//!   typed store error, and the damage is isolated — the store keeps
+//!   serving its other entries bit-identically.
+
+use matexp::cache::ResultKey;
+use matexp::coordinator::request::Method;
+use matexp::error::MatexpError;
+use matexp::linalg::matrix::Matrix;
+use matexp::plan::PlanKind;
+use matexp::store::codec::{decode_result, encode_result, result_store_key};
+use matexp::store::{ArtifactKind, FsSink, MemorySink, Sink, StoreKey};
+use matexp::util::prop::property;
+
+mod common;
+use common::scratch_dir;
+
+/// The f32 bit patterns a textual codec would mangle; every matrix in
+/// this suite gets a few of them on top of random bits.
+const ADVERSARIAL_BITS: [u32; 7] = [
+    0x7FC0_0001,        // quiet NaN with payload
+    0xFFC0_0000,        // negative NaN
+    0x7F80_0000,        // +Inf
+    0xFF80_0000,        // -Inf
+    0x0000_0001,        // smallest positive subnormal
+    0x8000_0000,        // -0.0
+    0x0070_0000,        // larger subnormal
+];
+
+fn key(lo: u64) -> StoreKey {
+    StoreKey { kind: ArtifactKind::Result, hi: 0xA5A5, lo }
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix) {
+    assert_eq!(a.n(), b.n());
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+    }
+}
+
+/// Arbitrary byte payloads roundtrip bit-for-bit through both sinks,
+/// survive an FsSink reopen, and replacement takes the last write.
+#[test]
+fn prop_raw_payloads_roundtrip_through_both_sinks() {
+    let dir = scratch_dir();
+    let fs = FsSink::open(dir.path()).expect("open");
+    let mem = MemorySink::new();
+    property("raw payload roundtrip", 64, |g| {
+        let len = g.usize(0, 512);
+        let payload: Vec<u8> = (0..len).map(|_| g.u64(0, 255) as u8).collect();
+        let k = key(g.u64(0, u64::MAX));
+        for sink in [&fs as &dyn Sink, &mem as &dyn Sink] {
+            sink.put(k, &payload).expect("put");
+            assert_eq!(sink.get(&k).expect("get").as_deref(), Some(&payload[..]));
+        }
+    });
+    // everything the property committed is still there after a reopen
+    let reopened = FsSink::open(dir.path()).expect("reopen");
+    assert_eq!(reopened.len(), fs.len());
+    for k in fs.keys() {
+        assert_eq!(reopened.get(&k).expect("get"), fs.get(&k).expect("get"));
+    }
+}
+
+/// Result artifacts carrying every hostile f32 bit pattern roundtrip
+/// bit-exactly through the codec and the on-disk sink.
+#[test]
+fn prop_result_artifacts_are_bit_exact_for_all_f32_patterns() {
+    let dir = scratch_dir();
+    let fs = FsSink::open(dir.path()).expect("open");
+    property("result artifact roundtrip", 48, |g| {
+        let n = g.usize(1, 8);
+        let mut data: Vec<f32> =
+            (0..n * n).map(|_| f32::from_bits(g.u64(0, u32::MAX as u64) as u32)).collect();
+        // plant adversarial patterns at random positions
+        for &bits in &ADVERSARIAL_BITS {
+            let at = g.usize(0, n * n - 1);
+            data[at] = f32::from_bits(bits);
+        }
+        let matrix = Matrix::from_vec(n, data).expect("square");
+        let rkey = ResultKey::for_parts(&matrix, g.u64(1, 1 << 40), Method::Ours, None);
+        const KINDS: [PlanKind; 6] = [
+            PlanKind::Naive,
+            PlanKind::Binary,
+            PlanKind::BinaryFused,
+            PlanKind::Chained,
+            PlanKind::AdditionChain,
+            PlanKind::Strassen,
+        ];
+        let plan_kind = if g.bool() { Some(*g.choose(&KINDS)) } else { None };
+        let payload = encode_result(&rkey, &matrix, Method::Ours, plan_kind);
+
+        let skey = result_store_key(&rkey);
+        fs.put(skey, &payload).expect("put");
+        let back = fs.get(&skey).expect("get").expect("present");
+        assert_eq!(back, payload, "sink must return the committed bytes");
+
+        let (dkey, cached) = decode_result(&back).expect("decode");
+        assert_eq!(dkey, rkey, "embedded key survives");
+        assert_eq!(cached.plan_kind, plan_kind);
+        assert_bits_eq(&cached.result, &matrix);
+    });
+}
+
+/// A committed entry truncated at EVERY byte boundary — mid-magic,
+/// mid-header, mid-payload, one byte short — answers the typed store
+/// error, and the undamaged sibling entry keeps serving bit-exactly.
+#[test]
+fn every_truncation_boundary_is_a_typed_store_miss() {
+    let dir = scratch_dir();
+    let fs = FsSink::open(dir.path()).expect("open");
+    let victim = key(1);
+    let sibling = key(2);
+    let sibling_payload = b"the sibling entry must keep serving".to_vec();
+    fs.put(victim, b"victim payload: 0123456789abcdef").expect("put victim");
+    fs.put(sibling, &sibling_payload).expect("put sibling");
+
+    let path = fs.entry_path(&victim);
+    let full = std::fs::read(&path).expect("read entry file");
+    for cut in 0..full.len() {
+        std::fs::write(&path, &full[..cut]).expect("truncate");
+        match fs.get(&victim) {
+            Err(MatexpError::Store(_)) => {}
+            other => panic!("truncation at byte {cut}/{} must be a typed store error, got {other:?}", full.len()),
+        }
+        // damage is isolated: the sibling still serves its exact bytes
+        assert_eq!(
+            fs.get(&sibling).expect("sibling get").as_deref(),
+            Some(&sibling_payload[..]),
+            "sibling lost after truncating victim at byte {cut}"
+        );
+        // restore for the next boundary
+        std::fs::write(&path, &full).expect("restore");
+    }
+    // fully restored, the victim serves again — corruption was in the
+    // file, not in any state the sink accumulated
+    assert_eq!(fs.get(&victim).expect("restored get").as_deref(), Some(&full[40..]));
+}
+
+/// Any single bit flip anywhere in a committed entry file (magic,
+/// header fields, checksum, payload) is detected and answered as the
+/// typed store error — never as wrong bits — while other entries keep
+/// serving. A reopen of the damaged directory then quarantines the torn
+/// entry and keeps the healthy ones.
+#[test]
+fn prop_random_bit_flips_are_detected_never_served() {
+    let dir = scratch_dir();
+    let fs = FsSink::open(dir.path()).expect("open");
+    let healthy = key(7777);
+    let healthy_payload = b"healthy entry".to_vec();
+    fs.put(healthy, &healthy_payload).expect("put healthy");
+
+    property("bit flips detected", 64, |g| {
+        let victim = key(g.u64(0, u64::MAX - 1));
+        if victim == healthy {
+            return;
+        }
+        let len = g.usize(1, 256);
+        let payload: Vec<u8> = (0..len).map(|_| g.u64(0, 255) as u8).collect();
+        fs.put(victim, &payload).expect("put");
+
+        let path = fs.entry_path(&victim);
+        let mut file = std::fs::read(&path).expect("read");
+        let byte = g.usize(0, file.len() - 1);
+        let bit = g.usize(0, 7);
+        file[byte] ^= 1 << bit;
+        std::fs::write(&path, &file).expect("flip");
+
+        match fs.get(&victim) {
+            Err(MatexpError::Store(_)) => {}
+            Ok(Some(served)) => panic!(
+                "flip of bit {bit} in byte {byte} was served: {} bytes back",
+                served.len()
+            ),
+            other => panic!("expected typed store error, got {other:?}"),
+        }
+        assert_eq!(
+            fs.get(&healthy).expect("healthy get").as_deref(),
+            Some(&healthy_payload[..]),
+            "healthy entry lost after flipping bit {bit} of byte {byte}"
+        );
+        fs.delete(&victim).expect("delete victim");
+    });
+
+    // the survivor outlives a reopen of the (previously damaged) dir
+    let reopened = FsSink::open(dir.path()).expect("reopen");
+    assert_eq!(reopened.get(&healthy).expect("get").as_deref(), Some(&healthy_payload[..]));
+}

@@ -7,10 +7,9 @@
 //! recorder's overhead.
 //!
 //! The recorder is process-global (one ring, one enable flag), so every
-//! test here serializes on [`LOCK`] — the overhead test flips the global
+//! test here serializes on [`common::test_guard`] — the overhead test flips the global
 //! enable flag and would otherwise race the span-collection test.
 
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use matexp::config::MatexpConfig;
@@ -19,23 +18,10 @@ use matexp::coordinator::service::Service;
 use matexp::exec::{Executor, Submission};
 use matexp::linalg::matrix::Matrix;
 use matexp::server::client::MatexpClient;
-use matexp::server::server::{serve_background, Server};
 use matexp::util::json::Json;
 
-/// Serializes tests against the process-global recorder state.
-static LOCK: Mutex<()> = Mutex::new(());
-
-fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, String) {
-    let mut cfg = MatexpConfig::default();
-    cfg.workers = 2;
-    cfg.batcher.max_wait_ms = 1;
-    // Service::start reconfigures the global recorder from cfg.trace
-    // (enabled, default ring), undoing whatever a prior test left behind
-    let service = Arc::new(Service::start(cfg).expect("service starts"));
-    let server = serve_background(Arc::clone(&service), "127.0.0.1:0", 4).expect("binds");
-    let addr = server.local_addr().to_string();
-    (service, server, addr)
-}
+mod common;
+use common::{start_server, test_guard};
 
 /// Acceptance: one TCP request produces spans covering at least five
 /// distinct stages, the `trace` wire op exports them as a valid Chrome
@@ -43,7 +29,7 @@ fn start_server() -> (Arc<matexp::coordinator::service::ServiceHandle>, Server, 
 /// the end-to-end latency the client actually observed.
 #[test]
 fn tcp_request_leaves_a_multi_stage_trace() {
-    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = test_guard();
     let (_service, _server, addr) = start_server();
     let mut client = MatexpClient::connect(&addr).expect("connect");
 
@@ -108,7 +94,7 @@ fn tcp_request_leaves_a_multi_stage_trace() {
 /// is the one CI's release-test job enforces.
 #[test]
 fn tracing_overhead_is_bounded() {
-    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = test_guard();
 
     fn p50_us(cfg: MatexpConfig, seed_base: u64) -> f64 {
         let mut service = Service::start(cfg).expect("service starts");
